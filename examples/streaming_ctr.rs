@@ -1,0 +1,70 @@
+//! Click-through-rate streaming (the paper's KDD 2012 workload): a
+//! p = 54,686,452-dimensional impression stream with 12 active features
+//! per event and ~4% positives, trained in one pass under a fixed memory
+//! budget; reports AUC (the paper's metric for this skewed set), the
+//! PJRT/native engine split, and the memory ledger.
+//!
+//!     cargo run --release --example streaming_ctr -- [n_train] [cf]
+
+use bear::algo::bear::{Bear, BearConfig};
+use bear::algo::mission::{Mission, MissionConfig};
+use bear::algo::{FeatureSelector, StepSize};
+use bear::coordinator::report::{human_bytes, Table};
+use bear::coordinator::trainer::{evaluate_binary, Trainer};
+use bear::data::synth::{KddSim, KDD_DIM};
+use bear::loss::LossKind;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let n_train: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(60_000);
+    let cf: f64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(1000.0);
+    let seed = 0xC12C;
+
+    let cells = (KDD_DIM as f64 / cf) as usize;
+    println!("CTR stream: p = {KDD_DIM}, {n_train} impressions, CF = {cf} ({cells} sketch cells)");
+
+    let cfg = BearConfig {
+        sketch_cells: cells,
+        sketch_rows: 5,
+        top_k: 200,
+        tau: 5,
+        step: StepSize::Constant(0.1),
+        loss: LossKind::Logistic,
+        seed: 11,
+        ..Default::default()
+    };
+
+    let mut table = Table::new(
+        "streaming CTR: BEAR vs MISSION (paper Fig. 2 KDD panel, one CF)",
+        &["algo", "AUC", "wall", "impressions/s", "sketch mem"],
+    );
+
+    for which in ["bear", "mission"] {
+        let mut train = KddSim::new(n_train, seed);
+        let mut test = KddSim::new(n_train / 5, seed).with_stream_seed(seed ^ 0x7e57);
+        let mut algo: Box<dyn FeatureSelector> = match which {
+            "bear" => match bear::runtime::PjrtEngine::from_dir(None) {
+                Ok(engine) => Box::new(Bear::with_engine(cfg.clone(), Box::new(engine))),
+                Err(_) => Box::new(Bear::new(KDD_DIM, cfg.clone())),
+            },
+            _ => Box::new(Mission::new(MissionConfig::from(&cfg))),
+        };
+        let log = Trainer::single_epoch(64).run(algo.as_mut(), &mut train);
+        let eval = evaluate_binary(algo.as_ref(), &mut test);
+        table.row(&[
+            which.to_uppercase(),
+            format!("{:.3}", eval.auc),
+            format!("{:.2?}", log.wall),
+            format!("{:.0}", n_train as f64 / log.wall.as_secs_f64()),
+            human_bytes(algo.memory_report().model_bytes),
+        ]);
+    }
+    table.print();
+
+    println!(
+        "memory note: a dense f32 model over p = {KDD_DIM} would need {},",
+        human_bytes(KDD_DIM as usize * 4)
+    );
+    println!("the sketch holds {} — the paper's sublinear-memory regime.", human_bytes(cells * 4));
+    Ok(())
+}

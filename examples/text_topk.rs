@@ -1,0 +1,53 @@
+//! RCV1-style top-k feature inspection (paper Fig. 3 + Table 3): train
+//! BEAR and MISSION on the text surrogate at a fixed compression factor,
+//! sweep the number of selected features used at inference, and report
+//! which planted "topic tokens" each algorithm discovered.
+//!
+//!     cargo run --release --example text_topk -- [cf]
+
+use bear::coordinator::experiments::{real_point, AlgoKind, RealData, RealSpec};
+use bear::coordinator::report::{f3, Table};
+
+fn main() {
+    let cf: f64 = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(10.0);
+    let dataset = RealData::Rcv1;
+    let spec = RealSpec::for_dataset(dataset);
+    println!(
+        "RCV1 surrogate: p={}, n_train={}, CF={cf} (paper Fig. 3 uses CF=10)",
+        dataset.dim(),
+        spec.n_train
+    );
+
+    let mut fig3 = Table::new(
+        "Fig 3 (RCV1 panel): accuracy vs number of selected features",
+        &["top-k", "BEAR", "MISSION"],
+    );
+    for k in [10usize, 30, 100, 300] {
+        let b = real_point(&spec, dataset, AlgoKind::Bear, cf, Some(k));
+        let m = real_point(&spec, dataset, AlgoKind::Mission, cf, Some(k));
+        fig3.row(&[k.to_string(), f3(b.metric), f3(m.metric)]);
+    }
+    fig3.print();
+
+    // Table 3 substitute: planted-feature discovery. The paper lists
+    // interpretable tokens ("entrepreneur", "shareholder"); our surrogate
+    // plants token ids, so we report how many of each algorithm's top
+    // selections are ground-truth informative tokens.
+    let planted: std::collections::HashSet<u64> =
+        dataset.planted_ids(spec.seed).into_iter().collect();
+    let mut t3 = Table::new(
+        "Table 3 substitute: planted-token discovery in the top selections",
+        &["algo", "planted tokens", "prec@top-k"],
+    );
+    for algo in [AlgoKind::Bear, AlgoKind::Mission] {
+        let row = real_point(&spec, dataset, algo, cf, None);
+        t3.row(&[
+            algo.label().into(),
+            planted.len().to_string(),
+            f3(row.precision_at_k),
+        ]);
+    }
+    t3.print();
+    println!("expected shape: BEAR's selections hit more planted tokens (paper: MISSION's");
+    println!("terms are 'less frequent and do not discriminate between the subject classes').");
+}

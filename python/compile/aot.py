@@ -1,0 +1,167 @@
+"""AOT compile path: lower the L2 model to HLO *text* artifacts.
+
+Run once by `make artifacts`; python never appears on the training path.
+Each artifact is one jitted function lowered at a fixed shape variant and
+dumped as HLO text (not a serialized HloModuleProto: jax >= 0.5 emits
+64-bit instruction ids that the xla crate's xla_extension 0.5.1 rejects;
+the text parser reassigns ids and round-trips cleanly — see
+/opt/xla-example/README.md).
+
+Artifacts written to --out-dir:
+    grad_{loss}_b{B}_a{A}.hlo.txt     (x[B,A], y[B], beta[A]) -> (g, loss)
+    lbfgs_dir_t{TAU}_a{A}.hlo.txt     (g[A], S[TAU,A], R[TAU,A], rho[TAU]) -> z
+    bear_step_{loss}_b{B}_a{A}_t{TAU}.hlo.txt  fused grad+direction
+    predict_b{B}_a{A}.hlo.txt         (x[B,A], beta[A]) -> logits
+plus `manifest.tsv` describing every artifact (the rust ArtifactRegistry
+reads this instead of hard-coding shapes).
+
+Every grad/predict/gradtile shape ships in two *flavors*:
+  - `pallas`: the L1 BlockSpec-tiled kernels (the TPU-shaped path).
+    Under interpret=True these lower to HLO while-loops with dynamic
+    slices, which XLA *CPU* executes poorly;
+  - `jnp` (names suffixed `j`): the same math straight from ref.py —
+    XLA fuses it into flat GEMV loops, ~50x faster on the CPU PJRT
+    client (EXPERIMENTS.md section Perf).
+The runtime prefers `jnp` on CPU unless BEAR_PREFER_PALLAS=1.
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# (batch, active-block) variants compiled by default. Must line up with
+# rust/src/runtime BlockShape choices: small for the simulations, medium
+# for RCV1/DNA-sized active sets, large for webspam-sized ones.
+GRAD_VARIANTS = [(32, 128), (64, 1024), (64, 4096), (128, 4096)]
+TAU = 5
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def lower_artifacts():
+    """Yield (name, kind, meta, hlo_text) for every artifact."""
+    from .kernels import ref
+
+    for b, a in GRAD_VARIANTS:
+        for loss in ("mse", "logistic"):
+            fn = model.make_grad_fn(loss)
+            lowered = jax.jit(lambda x, y, beta, _fn=fn: _fn(x, y, beta)).lower(
+                f32(b, a), f32(b), f32(a)
+            )
+            yield (
+                f"grad_{loss}_b{b}_a{a}",
+                "grad",
+                {"loss": loss, "b": b, "a": a, "tau": 0, "flavor": "pallas"},
+                to_hlo_text(lowered),
+            )
+            # jnp flavor: identical math from ref.py, fully fusable by
+            # XLA CPU (the runtime's default on this backend)
+            rfn = ref.ref_grad_mse if loss == "mse" else ref.ref_grad_logistic
+            lowered = jax.jit(lambda x, y, beta, _fn=rfn: _fn(x, y, beta)).lower(
+                f32(b, a), f32(b), f32(a)
+            )
+            yield (
+                f"gradj_{loss}_b{b}_a{a}",
+                "grad",
+                {"loss": loss, "b": b, "a": a, "tau": 0, "flavor": "jnp"},
+                to_hlo_text(lowered),
+            )
+        lowered = jax.jit(model.predict).lower(f32(b, a), f32(a))
+        yield (
+            f"predict_b{b}_a{a}",
+            "predict",
+            {"loss": "-", "b": b, "a": a, "tau": 0, "flavor": "pallas"},
+            to_hlo_text(lowered),
+        )
+        lowered = jax.jit(ref.ref_logits).lower(f32(b, a), f32(a))
+        yield (
+            f"predictj_b{b}_a{a}",
+            "predict",
+            {"loss": "-", "b": b, "a": a, "tau": 0, "flavor": "jnp"},
+            to_hlo_text(lowered),
+        )
+        # grad tile for the blocked path: g = X^T resid (resid pre-scaled
+        # by 1/b in rust), used when the active set exceeds every fused
+        # variant and the coordinator chunks the feature axis
+        lowered = jax.jit(model.grad_tile).lower(f32(b, a), f32(b))
+        yield (
+            f"gradtile_b{b}_a{a}",
+            "gradtile",
+            {"loss": "-", "b": b, "a": a, "tau": 0, "flavor": "pallas"},
+            to_hlo_text(lowered),
+        )
+        lowered = jax.jit(lambda x, r: x.T @ r).lower(f32(b, a), f32(b))
+        yield (
+            f"gradtilej_b{b}_a{a}",
+            "gradtile",
+            {"loss": "-", "b": b, "a": a, "tau": 0, "flavor": "jnp"},
+            to_hlo_text(lowered),
+        )
+
+    for _, a in GRAD_VARIANTS:
+        lowered = jax.jit(model.lbfgs_direction).lower(
+            f32(a), f32(TAU, a), f32(TAU, a), f32(TAU)
+        )
+        yield (
+            f"lbfgs_dir_t{TAU}_a{a}",
+            "lbfgs",
+            {"loss": "-", "b": 0, "a": a, "tau": TAU, "flavor": "jnp"},
+            to_hlo_text(lowered),
+        )
+
+    for b, a in GRAD_VARIANTS:
+        for loss in ("mse", "logistic"):
+            lowered = jax.jit(
+                lambda x, y, beta, s, r, rho, _l=loss: model.bear_step(
+                    x, y, beta, s, r, rho, loss=_l
+                )
+            ).lower(f32(b, a), f32(b), f32(a), f32(TAU, a), f32(TAU, a), f32(TAU))
+            yield (
+                f"bear_step_{loss}_b{b}_a{a}_t{TAU}",
+                "bear_step",
+                {"loss": loss, "b": b, "a": a, "tau": TAU, "flavor": "pallas"},
+                to_hlo_text(lowered),
+            )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = []
+    for name, kind, meta, text in lower_artifacts():
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest.append(
+            f"{name}\t{kind}\t{meta['loss']}\t{meta['b']}\t{meta['a']}\t{meta['tau']}"
+            f"\t{meta['flavor']}\t{name}.hlo.txt"
+        )
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.tsv"), "w") as f:
+        f.write("# name\tkind\tloss\tb\ta\ttau\tflavor\tfile\n")
+        f.write("\n".join(manifest) + "\n")
+    print(f"manifest: {len(manifest)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

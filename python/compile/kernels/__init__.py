@@ -1,0 +1,7 @@
+"""L1: Pallas kernels for BEAR's dense active-block compute hot-spot.
+
+`sketched_grad` holds the tiled logits/gradient kernels; `ref` holds the
+pure-jnp oracles every kernel is tested against.
+"""
+
+from . import ref, sketched_grad  # noqa: F401

@@ -1,0 +1,67 @@
+"""Pure-jnp oracles for the Pallas kernels (L1 correctness ground truth).
+
+Every Pallas kernel in this package has a reference implementation here,
+written with nothing but jax.numpy so there is no shared code to hide a
+common bug. pytest (python/tests/) sweeps shapes and dtypes with
+hypothesis and asserts allclose between kernel and oracle; the same
+oracles back the L2 model tests.
+
+Conventions (mirrors rust/src/loss/mod.rs):
+    MSE       loss = 1/(2b) * sum (X beta - y)^2,  g = 1/b * X^T (X beta - y)
+    logistic  loss = 1/b * sum softplus(z) - y*z,  g = 1/b * X^T (sigmoid(z) - y)
+with y in {0,1} for logistic, X of shape [b, A], beta [A].
+"""
+
+import jax.numpy as jnp
+
+
+def ref_logits(x, beta):
+    """Forward margins z = X beta. x: [b, A], beta: [A] -> [b]."""
+    return x @ beta
+
+
+def ref_grad_mse(x, y, beta):
+    """(grad [A], loss []) for the squared loss."""
+    b = x.shape[0]
+    r = x @ beta - y
+    g = x.T @ r / b
+    loss = 0.5 * jnp.sum(r * r) / b
+    return g, loss
+
+
+def ref_grad_logistic(x, y, beta):
+    """(grad [A], loss []) for binary cross-entropy with logits."""
+    b = x.shape[0]
+    z = x @ beta
+    p = jnp.where(z >= 0, 1.0 / (1.0 + jnp.exp(-z)), jnp.exp(z) / (1.0 + jnp.exp(z)))
+    # softplus(z) - y*z via logaddexp for numerical stability
+    loss = jnp.sum(jnp.logaddexp(0.0, z) - y * z) / b
+    g = x.T @ (p - y) / b
+    return g, loss
+
+
+def ref_lbfgs_direction(g, s_hist, r_hist, rho):
+    """Two-loop recursion (paper Alg. 1) over a padded history.
+
+    g: [A]; s_hist, r_hist: [tau, A] with row 0 = newest pair;
+    rho: [tau], rho[i] = 1/(r_i . s_i), 0 marks an empty slot.
+    Mirrors rust SparseLbfgs::direction (optim/lbfgs.rs) step for step.
+    """
+    tau = s_hist.shape[0]
+    q = g
+    alphas = []
+    for i in range(tau):  # newest -> oldest
+        valid = rho[i] > 0
+        a = jnp.where(valid, rho[i] * (s_hist[i] @ q), 0.0)
+        q = q - a * r_hist[i]
+        alphas.append(a)
+    # initial scaling gamma = (r.s)/(r.r) of the newest pair (row 0)
+    rr = r_hist[0] @ r_hist[0]
+    valid0 = (rho[0] > 0) & (rr > 0)
+    gamma = jnp.where(valid0, 1.0 / jnp.where(valid0, rho[0] * rr, 1.0), 1.0)
+    z = gamma * q
+    for i in reversed(range(tau)):  # oldest -> newest
+        valid = rho[i] > 0
+        beta_i = jnp.where(valid, rho[i] * (r_hist[i] @ z), 0.0)
+        z = z + jnp.where(valid, alphas[i] - beta_i, 0.0) * s_hist[i]
+    return z

@@ -1,0 +1,129 @@
+"""L1 Pallas kernels: the per-minibatch dense active-block gradient.
+
+This is BEAR's numeric hot-spot (Alg. 2 steps 4/8 run twice per
+iteration): given the minibatch densified onto its active set
+(X: [b, A]), the queried weights (beta: [A]) and labels (y: [b]),
+compute the residual and the gradient g = X^T resid / b.
+
+TPU mapping (DESIGN.md section Hardware-Adaptation): the paper's C++
+computes this feature-by-feature on a laptop CPU; here the active set is
+tiled along the feature axis with BlockSpec so each (b x BLK) tile of X
+streams HBM -> VMEM once per pass and both contractions (X beta and
+X^T r) hit the MXU. Two grid passes:
+
+  pass 1 (logits_pallas):  z += X[:, k*BLK:(k+1)*BLK] @ beta[k]   (sequential
+          accumulation across the grid -- Pallas guarantees ordered grid
+          execution on TPU, so += into the output ref is the standard
+          reduction idiom)
+  pass 2 (grad_pallas):    g[k] = X[:, tile k]^T @ r               (parallel)
+
+`interpret=True` everywhere: the CPU PJRT client cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO, which is exactly what
+the rust runtime loads. Real-TPU performance is estimated structurally
+in DESIGN.md section Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Feature-axis tile. 128 lanes wide (MXU systolic width); a (128 x 512)
+# f32 X-tile is 256 KiB -- X + beta + g tiles stay well under the ~16 MiB
+# VMEM budget even with double buffering (see DESIGN.md section Perf).
+DEFAULT_BLOCK = 512
+
+
+def _pick_block(a_dim: int, block: int | None) -> int:
+    blk = block or min(a_dim, DEFAULT_BLOCK)
+    if a_dim % blk != 0:
+        # fall back to the largest divisor <= blk (shapes are compile-time
+        # constants chosen by aot.py, so this is a build-time concern only)
+        for cand in range(min(blk, a_dim), 0, -1):
+            if a_dim % cand == 0:
+                blk = cand
+                break
+    return blk
+
+
+def _logits_kernel(x_ref, beta_ref, o_ref):
+    """One grid step: accumulate the tile's contribution to the logits."""
+    k = pl.program_id(0)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # [b, BLK] @ [BLK, 1] -> [b, 1]  (MXU contraction per tile)
+    o_ref[...] += x_ref[...] @ beta_ref[...]
+
+
+def logits_pallas(x, beta, block: int | None = None):
+    """z = X @ beta tiled over the feature axis. x: [b, A], beta: [A]."""
+    b, a_dim = x.shape
+    blk = _pick_block(a_dim, block)
+    grid = (a_dim // blk,)
+    out = pl.pallas_call(
+        _logits_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b, blk), lambda k: (0, k)),
+            pl.BlockSpec((blk, 1), lambda k: (k, 0)),
+        ],
+        out_specs=pl.BlockSpec((b, 1), lambda k: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, 1), x.dtype),
+        interpret=True,
+    )(x, beta.reshape(a_dim, 1))
+    return out[:, 0]
+
+
+def _grad_kernel(x_ref, r_ref, o_ref):
+    """One grid step: g-tile = X-tile^T @ r (tiles are independent)."""
+    o_ref[...] = x_ref[...].T @ r_ref[...]
+
+
+def grad_pallas(x, resid, block: int | None = None):
+    """g = X^T resid / b tiled over the feature axis.
+
+    x: [b, A], resid: [b] (already includes the loss derivative), -> [A].
+    The 1/b normalization is folded in here so the kernel output is the
+    finished gradient.
+    """
+    b, a_dim = x.shape
+    blk = _pick_block(a_dim, block)
+    grid = (a_dim // blk,)
+    out = pl.pallas_call(
+        _grad_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b, blk), lambda k: (0, k)),
+            pl.BlockSpec((b, 1), lambda k: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((blk, 1), lambda k: (k, 0)),
+        out_shape=jax.ShapeDtypeStruct((a_dim, 1), x.dtype),
+        interpret=True,
+    )(x, (resid / b).reshape(b, 1))
+    return out[:, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def fused_grad_mse(x, y, beta, block: int | None = None):
+    """(grad, loss) for MSE, both contractions through the Pallas tiles."""
+    b = x.shape[0]
+    z = logits_pallas(x, beta, block)
+    r = z - y
+    loss = 0.5 * jnp.sum(r * r) / b
+    g = grad_pallas(x, r, block)
+    return g, loss
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def fused_grad_logistic(x, y, beta, block: int | None = None):
+    """(grad, loss) for binary CE with logits, Pallas-tiled contractions."""
+    b = x.shape[0]
+    z = logits_pallas(x, beta, block)
+    p = jnp.where(z >= 0, 1.0 / (1.0 + jnp.exp(-z)), jnp.exp(z) / (1.0 + jnp.exp(z)))
+    loss = jnp.sum(jnp.logaddexp(0.0, z) - y * z) / b
+    g = grad_pallas(x, p - y, block)
+    return g, loss

@@ -1,0 +1,75 @@
+"""L2: the JAX compute graph BEAR executes per minibatch.
+
+Three jittable functions, each AOT-lowered to HLO text by `aot.py` and
+executed from rust via PJRT (rust/src/runtime/):
+
+- `grad_step(x, y, beta)`       -> (grad [A], loss [])   (MSE or logistic;
+  both contractions route through the L1 Pallas kernels)
+- `lbfgs_direction(g, S, R, rho)` -> z [A]               (paper Alg. 1,
+  unrolled tau steps over the padded history blocks rust exports)
+- `predict(x, beta)`            -> logits [b]
+
+Shapes are static per artifact variant: rust densifies the minibatch's
+active set into fixed [b, A] blocks (sparse/ActiveSet::densify_into) and
+pads the LBFGS history to [tau, A] (optim/lbfgs.rs export_blocks), so one
+compiled executable serves every iteration of a run.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref, sketched_grad
+
+
+def make_grad_fn(loss: str):
+    """The (x, y, beta) -> (grad, loss) function for a loss kind."""
+    if loss == "mse":
+        return sketched_grad.fused_grad_mse
+    if loss == "logistic":
+        return sketched_grad.fused_grad_logistic
+    raise ValueError(f"unknown loss {loss!r}")
+
+
+@jax.jit
+def lbfgs_direction(g, s_hist, r_hist, rho):
+    """Two-loop recursion on dense history blocks (row 0 = newest pair).
+
+    Identical math to the rust sparse path (optim/lbfgs.rs); used by the
+    PJRT fast path when the history is aligned to the current active set,
+    and by the runtime parity tests. tau is small (paper: 5) so the loops
+    unroll into straight-line HLO.
+    """
+    return ref.ref_lbfgs_direction(g, s_hist, r_hist, rho)
+
+
+@jax.jit
+def predict(x, beta):
+    """Margins for a densified evaluation block."""
+    return sketched_grad.logits_pallas(x, beta)
+
+
+@jax.jit
+def grad_tile(x, resid_scaled):
+    """One feature-block gradient tile: g = X^T resid.
+
+    `resid_scaled` already carries the loss derivative and the 1/b
+    normalization (computed in rust on the blocked path), so this is a
+    pure contraction — the L1 grad kernel standing alone.
+    """
+    b = x.shape[0]
+    # grad_pallas folds a 1/b in; pre-multiply to cancel it
+    return sketched_grad.grad_pallas(x, resid_scaled * b)
+
+
+@functools.partial(jax.jit, static_argnames=("loss",))
+def bear_step(x, y, beta, s_hist, r_hist, rho, loss: str = "mse"):
+    """Fused Alg. 2 steps 4-5: gradient then two-loop direction.
+
+    Returns (z [A], grad [A], loss []). One PJRT call instead of two on
+    the aligned fast path.
+    """
+    g, loss_val = make_grad_fn(loss)(x, y, beta)
+    z = ref.ref_lbfgs_direction(g, s_hist, r_hist, rho)
+    return z, g, loss_val

@@ -1,0 +1,88 @@
+//! Ablations over BEAR's design choices (DESIGN.md §7):
+//!   1. LBFGS memory τ (paper: "results are consistent across a large
+//!      range of values for τ"; default 5)
+//!   2. Count Sketch query estimator: median (paper) vs mean (the
+//!      convergence proof's affine view)
+//!   3. number of hash rows d (paper: 3 in sims, 5 on real data)
+//!   4. Alg. 2 step-3 restriction: query A_t ∩ top-k vs query all of A_t
+//!
+//!     cargo bench --bench ablations
+
+use bear::algo::bear::{Bear, BearConfig};
+use bear::algo::{FeatureSelector, StepSize};
+use bear::bench_util::quick_mode;
+use bear::coordinator::report::{f3, Table};
+use bear::coordinator::trainer::Trainer;
+use bear::data::synth::GaussianLinear;
+use bear::loss::LossKind;
+use bear::metrics;
+use bear::sketch::QueryMode;
+
+struct Variant {
+    name: &'static str,
+    tau: usize,
+    rows: usize,
+    mode: QueryMode,
+    restrict: bool,
+}
+
+fn run_variant(v: &Variant, trials: usize) -> (f64, f64) {
+    let p = 1000;
+    let k = 8;
+    let mut wins = 0usize;
+    let mut l2 = 0.0;
+    for t in 0..trials {
+        let mut gen = GaussianLinear::new(p, k, 2000 + t as u64);
+        let (mut data, truth) = gen.dataset(900);
+        let mut bear = Bear::new(
+            p as u64,
+            BearConfig {
+                sketch_cells: 450, // the paper's 150×3 budget
+                sketch_rows: v.rows,
+                top_k: k,
+                tau: v.tau,
+                step: StepSize::Constant(0.1),
+                loss: LossKind::Mse,
+                seed: 0xAB1A,
+                ..Default::default()
+            },
+        );
+        bear.state_mut().cs.set_query_mode(v.mode);
+        bear.state_mut().restrict_query_to_topk = v.restrict;
+        Trainer::simulation(30, 1200).run(&mut bear, &mut data);
+        let top = bear.top_features();
+        wins += metrics::exact_support_recovery(&top, &truth) as usize;
+        l2 += metrics::recovery_l2_error(&top, &truth);
+    }
+    (wins as f64 / trials as f64, l2 / trials as f64)
+}
+
+fn main() {
+    let trials = if quick_mode() { 3 } else { 6 };
+    println!("[ablations] p=1000 k=8 n=900 m=450 cells, trials={trials}");
+
+    let variants = [
+        Variant { name: "default (τ=5, d=3, median, A∩top-k)", tau: 5, rows: 3, mode: QueryMode::Median, restrict: true },
+        Variant { name: "τ=1", tau: 1, rows: 3, mode: QueryMode::Median, restrict: true },
+        Variant { name: "τ=2", tau: 2, rows: 3, mode: QueryMode::Median, restrict: true },
+        Variant { name: "τ=10", tau: 10, rows: 3, mode: QueryMode::Median, restrict: true },
+        Variant { name: "τ=0 (⇒ first-order / MISSION-like)", tau: 0, rows: 3, mode: QueryMode::Median, restrict: true },
+        Variant { name: "mean query", tau: 5, rows: 3, mode: QueryMode::Mean, restrict: true },
+        Variant { name: "d=1 row", tau: 5, rows: 1, mode: QueryMode::Median, restrict: true },
+        Variant { name: "d=5 rows", tau: 5, rows: 5, mode: QueryMode::Median, restrict: true },
+        Variant { name: "query all of A_t (no top-k gate)", tau: 5, rows: 3, mode: QueryMode::Median, restrict: false },
+    ];
+
+    let mut t = Table::new(
+        "ablations: BEAR design choices at the paper's 450-cell budget",
+        &["variant", "P(success)", "l2 err"],
+    );
+    for v in &variants {
+        let (ps, l2) = run_variant(v, trials);
+        t.row(&[v.name.into(), f3(ps), f3(l2)]);
+    }
+    t.print();
+    println!("[ablations] expectations: τ∈[2,10] ≈ flat (paper: 'consistent across a large");
+    println!("[ablations] range of τ'); τ=0 collapses toward MISSION; more rows d trade");
+    println!("[ablations] collision robustness against per-row width at fixed m.");
+}

@@ -1,0 +1,51 @@
+//! Fig. 1C: probability of success as a function of the step size at a
+//! fixed Count Sketch of 150×3 (CF = 2.22) — BEAR's second-order update
+//! is far less sensitive to η than MISSION's first-order one.
+//!
+//!     cargo bench --bench fig1c_stepsize
+
+use bear::bench_util::quick_mode;
+use bear::coordinator::experiments::{fig1c_point, AlgoKind, SimulationSpec};
+use bear::coordinator::report::{f3, Table};
+
+fn main() {
+    let trials = if quick_mode() { 3 } else { 6 };
+    let spec = SimulationSpec { trials, max_iters: 1000, ..Default::default() };
+    let cells = 150 * 3; // the paper's 150×3 sketch
+    println!(
+        "[fig1c] p={} k={} n={} trials={} sketch=150×3 (CF={:.2})",
+        spec.p,
+        spec.k,
+        spec.n,
+        spec.trials,
+        spec.p as f64 / cells as f64
+    );
+
+    let etas: &[f64] = if quick_mode() {
+        &[1e-4, 1e-2, 1e-1]
+    } else {
+        &[1e-7, 1e-6, 1e-5, 1e-4, 1e-3, 1e-2, 3e-2, 1e-1, 3e-1]
+    };
+
+    let mut t = Table::new(
+        "Fig 1C: P(success) vs step size (CF = 2.22)",
+        &["eta", "BEAR", "MISSION"],
+    );
+    let mut bear_ok = 0;
+    let mut mission_ok = 0;
+    for &eta in etas {
+        let b = fig1c_point(&spec, AlgoKind::Bear, eta, cells);
+        let m = fig1c_point(&spec, AlgoKind::Mission, eta, cells);
+        bear_ok += (b.p_success >= 0.5) as usize;
+        mission_ok += (m.p_success >= 0.5) as usize;
+        t.row(&[format!("{eta:.0e}"), f3(b.p_success), f3(m.p_success)]);
+    }
+    t.print();
+    println!(
+        "[fig1c] η values with ≥0.5 success: BEAR {bear_ok}/{}, MISSION {mission_ok}/{}",
+        etas.len(),
+        etas.len()
+    );
+    println!("[fig1c] paper shape: MISSION peaks narrowly near its best η and collapses away");
+    println!("[fig1c] from it; BEAR is 'fairly agnostic' across orders of magnitude.");
+}

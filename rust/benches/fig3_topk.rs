@@ -1,0 +1,33 @@
+//! Fig. 3: classification performance vs the number of selected top-k
+//! features at the paper's fixed compression factors (RCV1: 10,
+//! Webspam: 330, DNA: 330, KDD: 1100). SGD/oLBFGS/FH cannot select
+//! features and are excluded, as in the paper.
+//!
+//!     cargo bench --bench fig3_topk
+
+use bear::bench_util::quick_mode;
+use bear::coordinator::experiments::{real_point, AlgoKind, RealData, RealSpec};
+use bear::coordinator::report::{f3, Table};
+
+fn main() {
+    let quick = quick_mode();
+    let ks: &[usize] = if quick { &[30, 300] } else { &[10, 30, 100, 300, 1000] };
+
+    for d in RealData::all() {
+        let spec = if quick { RealSpec::quick(d) } else { RealSpec::for_dataset(d) };
+        let cf = d.fig3_cf();
+        let metric = if d.reports_auc() { "AUC" } else { "accuracy" };
+        let mut t = Table::new(
+            &format!("Fig 3 panel: {} (CF fixed at {cf}, {metric} vs top-k)", d.label()),
+            &["top-k", "BEAR", "MISSION"],
+        );
+        for &k in ks {
+            let b = real_point(&spec, d, AlgoKind::Bear, cf, Some(k));
+            let m = real_point(&spec, d, AlgoKind::Mission, cf, Some(k));
+            t.row(&[k.to_string(), f3(b.metric), f3(m.metric)]);
+        }
+        t.print();
+    }
+    println!("[fig3] paper shape: BEAR's selected features predict better over a wide range");
+    println!("[fig3] of k, with the gap growing for larger k.");
+}

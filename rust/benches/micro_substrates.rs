@@ -1,0 +1,133 @@
+//! Micro-benchmarks of the substrates on the training hot path: Count
+//! Sketch ADD/QUERY, MurmurHash3, top-k heap updates, sparse two-loop,
+//! active-set densification, and the PJRT vs native gradient engines.
+//! These feed the §Perf iteration log in EXPERIMENTS.md.
+//!
+//!     cargo bench --bench micro_substrates
+
+use bear::bench_util::Bench;
+use bear::hash::{murmur3_x64_128, HashFamily};
+use bear::loss::{GradientEngine, LossKind, NativeEngine};
+use bear::optim::SparseLbfgs;
+use bear::sketch::CountSketch;
+use bear::sparse::{ActiveSet, SparseVec};
+use bear::topk::TopK;
+use bear::util::Pcg64;
+
+fn main() {
+    let mut rng = Pcg64::new(1);
+
+    // -- hashing ------------------------------------------------------
+    let mut b = Bench::new("hash");
+    let keys: Vec<u64> = (0..100_000u64).collect();
+    b.iter_throughput("murmur3_x64_128 100k keys", || {
+        let mut acc = 0u64;
+        for &k in &keys {
+            acc ^= murmur3_x64_128(&k.to_le_bytes(), 7).0;
+        }
+        std::hint::black_box(acc);
+        keys.len()
+    });
+    let fam = HashFamily::new(5, 1 << 16, 3);
+    b.iter_throughput("hash family 5 rows × 100k", || {
+        let mut acc = 0usize;
+        for &k in &keys {
+            for j in 0..5 {
+                acc ^= fam.hash(j, k).0;
+            }
+        }
+        std::hint::black_box(acc);
+        keys.len() * 5
+    });
+    b.report();
+
+    // -- count sketch ---------------------------------------------------
+    let mut b = Bench::new("count_sketch");
+    let idx: Vec<u64> = (0..50_000).map(|_| rng.below(1 << 40)).collect();
+    let vals: Vec<f32> = (0..50_000).map(|_| rng.next_f32()).collect();
+    let mut cs = CountSketch::with_total_cells(1 << 18, 5, 9);
+    b.iter_throughput("ADD 50k (d=5)", || {
+        cs.add_batch(&idx, &vals);
+        idx.len()
+    });
+    let mut out = Vec::new();
+    b.iter_throughput("QUERY 50k median (d=5)", || {
+        cs.query_batch_into(&idx, &mut out);
+        idx.len()
+    });
+    b.report();
+
+    // -- top-k heap -------------------------------------------------------
+    let mut b = Bench::new("topk_heap");
+    let offers: Vec<(u64, f32)> =
+        (0..100_000).map(|_| (rng.below(1 << 20), rng.next_f32() * 10.0)).collect();
+    b.iter_throughput("offer 100k into k=1024", || {
+        let mut heap = TopK::new(1024);
+        for &(f, v) in &offers {
+            heap.offer(f, v);
+        }
+        offers.len()
+    });
+    b.report();
+
+    // -- sparse two-loop ---------------------------------------------------
+    let mut b = Bench::new("lbfgs_two_loop");
+    let act = 4096usize;
+    let mut lbfgs = SparseLbfgs::new(5);
+    for _ in 0..5 {
+        let s = SparseVec::from_pairs(
+            (0..act as u64).map(|i| (i, rng.gaussian() as f32 * 0.1)).collect(),
+        );
+        let mut r = s.clone();
+        r.scale(1.3);
+        lbfgs.push(s, r);
+    }
+    let g = SparseVec::from_pairs((0..act as u64).map(|i| (i, rng.gaussian() as f32)).collect());
+    b.iter(&format!("direction |A|={act} τ=5"), || {
+        std::hint::black_box(lbfgs.direction(&g));
+    });
+    b.report();
+
+    // -- gradient engines -----------------------------------------------
+    let mut b = Bench::new("gradient_engine");
+    let rows: Vec<SparseVec> = (0..64)
+        .map(|_| {
+            SparseVec::from_pairs(
+                rng.sample_distinct(1 << 30, 60)
+                    .into_iter()
+                    .map(|f| (f, rng.gaussian() as f32))
+                    .collect(),
+            )
+        })
+        .collect();
+    let refs: Vec<&SparseVec> = rows.iter().collect();
+    let labels: Vec<f32> = (0..64).map(|_| (rng.next_u64() & 1) as f32).collect();
+    let active = ActiveSet::from_rows(rows.iter());
+    let beta: Vec<f32> = (0..active.len()).map(|_| rng.gaussian() as f32 * 0.1).collect();
+    println!("  (batch 64 × 60 nnz, |A| = {})", active.len());
+
+    let mut native = NativeEngine::new();
+    b.iter("native logistic grad", || {
+        std::hint::black_box(native.grad_active(&refs, &labels, &active, &beta, LossKind::Logistic));
+    });
+    match bear::runtime::PjrtEngine::from_dir(None) {
+        Ok(mut pjrt) => {
+            b.iter("pjrt logistic grad (fused)", || {
+                std::hint::black_box(
+                    pjrt.grad_active(&refs, &labels, &active, &beta, LossKind::Logistic),
+                );
+            });
+            println!("  pjrt stats: {:?}", pjrt.stats);
+        }
+        Err(e) => println!("  (pjrt unavailable: {e})"),
+    }
+    b.report();
+
+    // -- densify -------------------------------------------------------
+    let mut b = Bench::new("densify");
+    let mut block = vec![0.0f32; 64 * 4096];
+    b.iter("densify 64×4096 block", || {
+        std::hint::black_box(active.densify_into(&refs, 64, 4096, &mut block));
+    });
+    b.report();
+}

@@ -1,0 +1,56 @@
+//! Table 4: overall run time of BEAR vs MISSION at the paper's fixed
+//! compression factors (RCV1: 95, Webspam: 332, DNA: 22, KDD: 10³).
+//! Absolute minutes differ from the paper's laptop, but the *ratio*
+//! (BEAR ≤ MISSION, thanks to better data efficiency) is the claim under
+//! test; we report per-dataset wall clock and throughput.
+//!
+//!     cargo bench --bench table4_runtime
+
+use bear::bench_util::quick_mode;
+use bear::coordinator::experiments::{real_point, AlgoKind, RealData, RealSpec};
+use bear::coordinator::report::{f3, Table};
+use bear::util::timer::human_duration;
+
+fn table4_cf(d: RealData) -> f64 {
+    match d {
+        RealData::Rcv1 => 95.0,
+        RealData::Webspam => 332.0,
+        RealData::Dna => 22.0,
+        RealData::Kdd => 1000.0,
+    }
+}
+
+fn main() {
+    let quick = quick_mode();
+    let mut t = Table::new(
+        "Table 4: run time, BEAR vs MISSION (paper CFs: 95/332/22/1000)",
+        &["dataset", "CF", "algo", "metric", "wall", "examples/s"],
+    );
+    let mut ratios = Vec::new();
+    for d in RealData::all() {
+        let spec = if quick { RealSpec::quick(d) } else { RealSpec::for_dataset(d) };
+        let cf = table4_cf(d);
+        let mut walls = [0.0f64; 2];
+        for (i, algo) in [AlgoKind::Bear, AlgoKind::Mission].into_iter().enumerate() {
+            let row = real_point(&spec, d, algo, cf, None);
+            walls[i] = row.wall.as_secs_f64();
+            t.row(&[
+                d.label().into(),
+                format!("{cf:.0}"),
+                row.algo.label().into(),
+                f3(row.metric),
+                human_duration(row.wall),
+                format!("{:.0}", spec.n_train as f64 / row.wall.as_secs_f64()),
+            ]);
+        }
+        ratios.push((d.label(), walls[1] / walls[0]));
+    }
+    t.print();
+    for (label, r) in &ratios {
+        println!("[table4] {label}: MISSION/BEAR wall ratio = {r:.2} (paper: 1.3–3.0×)");
+    }
+    println!("[table4] note: BEAR does 2 gradient evaluations per iteration vs MISSION's 1,");
+    println!("[table4] so per-iteration BEAR is heavier; the paper's win comes from needing");
+    println!("[table4] fewer effective passes — at equal single-epoch budgets expect ratios");
+    println!("[table4] near parity here, with BEAR's accuracy advantage carrying the claim.");
+}

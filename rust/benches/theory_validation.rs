@@ -1,0 +1,200 @@
+//! Empirical validation of the paper's theory section:
+//!
+//!   1. **Lemma 4 spectrum**: the non-zero eigenvalues of `SᵀS` for the
+//!      Count Sketch projection concentrate in `(p/m)(1 ± ε)` — measured
+//!      by power iteration on the dense projection at small p.
+//!   2. **Theorem 2 rate**: with the theorem's step size
+//!      `η_t = η₀T₀/(T₀+t)`, the sketched suboptimality decays like
+//!      `O(1/t)` — we fit `log f-gap` vs `log t` and report the slope
+//!      (expected ≈ −1).
+//!   3. **The noise-accumulation premise** (Sec. 3): the energy in the
+//!      sketch's non-top-k coordinates grows faster under first-order
+//!      sketching (MISSION) than under BEAR's second-order sketching.
+//!
+//!     cargo bench --bench theory_validation
+
+use bear::algo::bear::{Bear, BearConfig};
+use bear::algo::mission::{Mission, MissionConfig};
+use bear::algo::{FeatureSelector, StepSize};
+use bear::bench_util::quick_mode;
+use bear::coordinator::report::{f3, Table};
+use bear::data::synth::GaussianLinear;
+use bear::data::DataSource;
+use bear::loss::LossKind;
+use bear::sketch::CountSketch;
+use bear::util::Pcg64;
+
+/// Largest/smallest non-zero eigenvalue of SᵀS via power iteration on
+/// G = S Sᵀ (p×p, same non-zero spectrum).
+fn sts_extreme_eigs(p: usize, m_cells: usize, rows: usize, seed: u64) -> (f64, f64) {
+    let cs = CountSketch::with_total_cells(m_cells, rows, seed);
+    let s = cs.dense_projection(p);
+    let m = m_cells / rows * rows;
+    // y = Sᵀx (len m), then G x = S y
+    let apply = |x: &[f64]| -> Vec<f64> {
+        let mut y = vec![0.0f64; m];
+        for (i, row) in s.iter().enumerate() {
+            for (j, &v) in row.iter().enumerate() {
+                if v != 0.0 {
+                    y[j] += v as f64 * x[i];
+                }
+            }
+        }
+        let mut out = vec![0.0f64; p];
+        for (i, row) in s.iter().enumerate() {
+            let mut acc = 0.0;
+            for (j, &v) in row.iter().enumerate() {
+                if v != 0.0 {
+                    acc += v as f64 * y[j];
+                }
+            }
+            out[i] = acc;
+        }
+        out
+    };
+    let mut rng = Pcg64::new(seed ^ 1);
+    let normalize = |v: &mut Vec<f64>| {
+        let n = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+        for x in v.iter_mut() {
+            *x /= n;
+        }
+        n
+    };
+    // λ_max by power iteration
+    let mut v: Vec<f64> = (0..p).map(|_| rng.gaussian()).collect();
+    normalize(&mut v);
+    let mut lam_max = 0.0;
+    for _ in 0..60 {
+        let mut w = apply(&v);
+        lam_max = normalize(&mut w);
+        v = w;
+    }
+    // λ_min (over the row space) via power iteration on (cI − G)
+    let c = lam_max * 1.05;
+    let mut u: Vec<f64> = (0..p).map(|_| rng.gaussian()).collect();
+    normalize(&mut u);
+    let mut shifted = 0.0;
+    for _ in 0..120 {
+        let g = apply(&u);
+        let mut w: Vec<f64> = u.iter().zip(&g).map(|(&ui, &gi)| c * ui - gi).collect();
+        shifted = normalize(&mut w);
+        u = w;
+    }
+    // λ_min of G restricted to the top of (cI−G)'s spectrum; for m < p
+    // the null space makes this 0-ish — we report the rayleigh quotient of
+    // the final iterate under G for transparency
+    let lam_min = c - shifted;
+    (lam_max, lam_min)
+}
+
+fn main() {
+    let quick = quick_mode();
+
+    // --- 1. Lemma 4 spectrum -------------------------------------------
+    let mut t = Table::new(
+        "Lemma 4: extreme non-zero eigenvalues of SᵀS vs the p/m prediction",
+        &["p", "m", "d", "p/m", "λ_max", "λ_max/(p/m)", "λ_min est"],
+    );
+    let cases: &[(usize, usize, usize)] =
+        if quick { &[(256, 64, 4)] } else { &[(256, 64, 4), (512, 128, 4), (512, 64, 4), (1024, 256, 4)] };
+    for &(p, m, d) in cases {
+        let (hi, lo) = sts_extreme_eigs(p, m, d, 7);
+        let ratio = p as f64 / m as f64;
+        t.row(&[
+            p.to_string(),
+            m.to_string(),
+            d.to_string(),
+            format!("{ratio:.1}"),
+            format!("{hi:.1}"),
+            format!("{:.2}", hi / ratio),
+            format!("{lo:.1}"),
+        ]);
+    }
+    t.print();
+    println!("[theory] Lemma 4 predicts λ(SᵀS) ≈ (p/m)(1±ε): the λ_max/(p/m) column should");
+    println!("[theory] sit within a small constant of 1 (concentration tightens as m grows).\n");
+
+    // --- 2. Theorem 2 rate ---------------------------------------------
+    let p = 400;
+    let k = 6;
+    let mut gen = GaussianLinear::new(p, k, 99);
+    let (mut data, _) = gen.dataset(if quick { 200 } else { 400 });
+    let mut bear = Bear::new(
+        p as u64,
+        BearConfig {
+            sketch_cells: 200,
+            sketch_rows: 3,
+            top_k: k,
+            tau: 5,
+            step: StepSize::Decay { eta0: 0.4, t0: 20.0 }, // Theorem 2 schedule
+            loss: LossKind::Mse,
+            seed: 5,
+            ..Default::default()
+        },
+    );
+    let mut samples: Vec<(f64, f64)> = Vec::new(); // (log t, log loss)
+    let mut t_iter = 0u64;
+    let max_iters = if quick { 1500 } else { 6000 };
+    'outer: loop {
+        data.reset();
+        while let Some(mb) = data.next_minibatch(25) {
+            bear.train_minibatch(&mb);
+            t_iter += 1;
+            if t_iter >= 20 && t_iter % 25 == 0 && bear.last_loss() > 1e-12 {
+                samples.push(((t_iter as f64).ln(), bear.last_loss().ln()));
+            }
+            if t_iter >= max_iters {
+                break 'outer;
+            }
+        }
+    }
+    // least-squares slope of log-loss vs log-t
+    let n = samples.len() as f64;
+    let sx: f64 = samples.iter().map(|s| s.0).sum();
+    let sy: f64 = samples.iter().map(|s| s.1).sum();
+    let sxx: f64 = samples.iter().map(|s| s.0 * s.0).sum();
+    let sxy: f64 = samples.iter().map(|s| s.0 * s.1).sum();
+    let slope = (n * sxy - sx * sy) / (n * sxx - sx * sx);
+    println!("[theory] Theorem 2: log-log slope of MSE suboptimality vs t = {slope:.2}");
+    println!("[theory] (O(1/t) ⇒ slope ≈ −1; measured over {} samples to t={t_iter})\n", samples.len());
+
+    // --- 3. noise accumulation (Sec. 3 premise) --------------------------
+    let mut t = Table::new(
+        "Sec. 3 premise: sketch energy outside the top-k after one epoch",
+        &["algo", "total energy", "top-k energy", "tail fraction"],
+    );
+    for which in ["BEAR", "MISSION"] {
+        let mut gen = GaussianLinear::new(p, k, 123);
+        let (mut data, truth) = gen.dataset(300);
+        let cfg = BearConfig {
+            sketch_cells: 200,
+            sketch_rows: 3,
+            top_k: k,
+            tau: 5,
+            step: StepSize::Constant(0.05),
+            loss: LossKind::Mse,
+            seed: 9,
+            ..Default::default()
+        };
+        let (energy, top_energy) = if which == "BEAR" {
+            let mut a = Bear::new(p as u64, cfg);
+            a.fit_source(&mut data, 25, 3);
+            let e = a.state().cs.energy();
+            let te: f64 = truth.idx.iter().map(|&f| (a.state().cs.query(f) as f64).powi(2)).sum();
+            (e, te)
+        } else {
+            let mut a = Mission::new(MissionConfig::from(&cfg));
+            a.fit_source(&mut data, 25, 3);
+            let e = a.state().cs.energy();
+            let te: f64 = truth.idx.iter().map(|&f| (a.state().cs.query(f) as f64).powi(2)).sum();
+            (e, te)
+        };
+        // each top-k weight is replicated across d rows in the counters
+        let top_in_counters = top_energy * 3.0;
+        let tail = (energy - top_in_counters).max(0.0) / energy.max(1e-12);
+        t.row(&[which.into(), f3(energy), f3(top_energy), f3(tail)]);
+    }
+    t.print();
+    println!("[theory] the paper's mechanism: MISSION's tail fraction (noise parked outside");
+    println!("[theory] the top-k) exceeds BEAR's, which is why its heavy hitters drown first.");
+}

@@ -1,0 +1,332 @@
+//! Distributed BEAR — the paper's Discussion (§8) extension: "the
+//! memory-accuracy advantage of second-order methods ... can be applied to
+//! improve the communication-computation trade-off in distributed learning
+//! in communicating the sketch of the stochastic gradients between nodes."
+//!
+//! Count Sketch is a *linear* projection, so worker sketches merge by
+//! element-wise addition. W workers train on disjoint shards with local
+//! BEAR state over a **shared hash family** (same seed); every
+//! `sync_every` minibatches each worker ships its counter *delta*
+//! (`m` floats — sublinear in p) to the leader, which reduces them and
+//! broadcasts the merged counters back. This is exactly data-parallel
+//! BEAR with an all-reduce over the sketched domain; the communication
+//! per round is `m` floats instead of the `p` floats dense data-parallel
+//! SGD would need.
+//!
+//! Workers run on std threads; each owns its engine (engines are not
+//! `Send` — see loss/mod.rs), so construction happens inside the thread.
+
+use crate::algo::bear::{Bear, BearConfig};
+use crate::algo::sketched::SketchedState;
+use crate::algo::FeatureSelector;
+use crate::data::DataSource;
+use crate::sparse::SparseVec;
+use std::sync::mpsc;
+use std::time::Duration;
+
+/// How worker deltas fold into the merged sketch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MergeRule {
+    /// Σ deltas — gradient-accumulation semantics; effective step grows
+    /// with W (use a smaller η).
+    Sum,
+    /// (1/W)·Σ deltas — local-SGD / model-averaging semantics (default).
+    Average,
+}
+
+/// Distributed run configuration.
+#[derive(Clone, Debug)]
+pub struct DistributedConfig {
+    pub workers: usize,
+    /// Minibatches between sketch all-reduces.
+    pub sync_every: usize,
+    pub batch_size: usize,
+    pub epochs: usize,
+    pub merge: MergeRule,
+    pub bear: BearConfig,
+}
+
+/// Communication + progress accounting for the bench report.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DistStats {
+    pub rounds: u64,
+    pub bytes_up: u64,
+    pub bytes_down: u64,
+    pub total_iterations: u64,
+    pub wall: Duration,
+}
+
+impl DistStats {
+    /// Bytes a dense data-parallel exchange (p floats per round per
+    /// worker, both directions) would have cost.
+    pub fn dense_equivalent_bytes(&self, p: u64, workers: usize) -> u64 {
+        self.rounds * (p * 4) * workers as u64 * 2
+    }
+}
+
+/// Messages from workers to the leader.
+enum Up {
+    /// (worker id, counter delta, heap candidates, iterations this round)
+    Delta(usize, Vec<f32>, Vec<(u64, f32)>, u64),
+    /// worker finished its stream
+    Done(usize),
+}
+
+/// Train W workers over shards produced by `make_shard(worker_id)`;
+/// returns the merged model state plus communication stats.
+///
+/// Determinism: worker w trains its own shard with the shared hash seed;
+/// merge order is fixed by worker id, so runs are reproducible.
+pub fn train_distributed(
+    cfg: &DistributedConfig,
+    make_shard: impl Fn(usize) -> Box<dyn DataSource>,
+) -> (SketchedState, DistStats) {
+    assert!(cfg.workers >= 1);
+    let start = std::time::Instant::now();
+    let m = cfg.bear.sketch_cells / cfg.bear.sketch_rows * cfg.bear.sketch_rows;
+
+    let (up_tx, up_rx) = mpsc::channel::<Up>();
+    let mut down_txs: Vec<mpsc::Sender<Vec<f32>>> = Vec::with_capacity(cfg.workers);
+    let mut handles = Vec::with_capacity(cfg.workers);
+
+    for w in 0..cfg.workers {
+        let (down_tx, down_rx) = mpsc::channel::<Vec<f32>>();
+        down_txs.push(down_tx);
+        let up = up_tx.clone();
+        let shard = make_shard(w);
+        let cfg = cfg.clone();
+        handles.push(
+            std::thread::Builder::new()
+                .name(format!("bear-worker-{w}"))
+                .spawn(move || worker_loop(w, cfg, shard, up, down_rx))
+                .expect("spawn worker"),
+        );
+    }
+    drop(up_tx);
+
+    // leader: reduce deltas, broadcast merged counters
+    let mut merged = vec![0.0f32; m];
+    let mut heap_candidates: Vec<(u64, f32)> = Vec::new();
+    let mut stats = DistStats::default();
+    let mut live = cfg.workers;
+    let mut pending: Vec<(usize, Vec<f32>)> = Vec::new();
+
+    while live > 0 {
+        match up_rx.recv() {
+            Err(_) => break,
+            Ok(Up::Done(_)) => {
+                live -= 1;
+            }
+            Ok(Up::Delta(w, delta, cands, iters)) => {
+                stats.bytes_up += (delta.len() * 4) as u64;
+                stats.total_iterations += iters;
+                heap_candidates.extend(cands);
+                pending.push((w, delta));
+                // a round completes when every live worker has reported
+                if pending.len() == live {
+                    pending.sort_by_key(|&(w, _)| w); // fixed merge order
+                    let scale = match cfg.merge {
+                        MergeRule::Sum => 1.0f32,
+                        MergeRule::Average => 1.0 / pending.len() as f32,
+                    };
+                    for (_, d) in pending.drain(..) {
+                        for (acc, v) in merged.iter_mut().zip(&d) {
+                            *acc += scale * v;
+                        }
+                    }
+                    stats.rounds += 1;
+                    for tx in &down_txs {
+                        if tx.send(merged.clone()).is_ok() {
+                            stats.bytes_down += (merged.len() * 4) as u64;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    stats.wall = start.elapsed();
+
+    // final model: merged counters + heap rebuilt from every candidate the
+    // workers ever promoted, re-scored against the merged sketch
+    let mut state = SketchedState::new(
+        cfg.bear.sketch_cells,
+        cfg.bear.sketch_rows,
+        cfg.bear.top_k,
+        cfg.bear.seed,
+    );
+    state.cs.load_raw(&merged);
+    heap_candidates.sort_by_key(|&(f, _)| f);
+    heap_candidates.dedup_by_key(|&mut (f, _)| f);
+    for (f, _) in heap_candidates {
+        let w = state.cs.query(f);
+        state.heap.offer(f, w);
+    }
+    (state, stats)
+}
+
+fn worker_loop(
+    _id: usize,
+    cfg: DistributedConfig,
+    mut shard: Box<dyn DataSource>,
+    up: mpsc::Sender<Up>,
+    down: mpsc::Receiver<Vec<f32>>,
+) {
+    // engines are built in-thread (not Send); native engine for workers —
+    // the PJRT client is per-process and belongs to single-leader setups
+    let mut bear = Bear::new(shard.dim(), cfg.bear.clone());
+    // baseline counters at the last sync (delta = current − baseline)
+    let mut baseline = bear.state().cs.raw().to_vec();
+    let mut since_sync = 0usize;
+    let mut iters_since = 0u64;
+
+    let mut sync = |bear: &mut Bear, baseline: &mut Vec<f32>, iters: &mut u64| -> bool {
+        let cur = bear.state().cs.raw();
+        let delta: Vec<f32> = cur.iter().zip(baseline.iter()).map(|(c, b)| c - b).collect();
+        let cands = bear.top_features();
+        if up.send(Up::Delta(_id, delta, cands, *iters)).is_err() {
+            return false;
+        }
+        *iters = 0;
+        match down.recv() {
+            Ok(merged) => {
+                bear.state_mut().cs.load_raw(&merged);
+                *baseline = merged;
+                true
+            }
+            Err(_) => false,
+        }
+    };
+
+    for _ in 0..cfg.epochs {
+        shard.reset();
+        while let Some(mb) = shard.next_minibatch(cfg.batch_size) {
+            bear.train_minibatch(&mb);
+            iters_since += 1;
+            since_sync += 1;
+            if since_sync >= cfg.sync_every {
+                since_sync = 0;
+                if !sync(&mut bear, &mut baseline, &mut iters_since) {
+                    let _ = up.send(Up::Done(_id));
+                    return;
+                }
+            }
+        }
+    }
+    // final flush
+    let cur = bear.state().cs.raw();
+    let delta: Vec<f32> = cur.iter().zip(baseline.iter()).map(|(c, b)| c - b).collect();
+    let _ = up.send(Up::Delta(_id, delta, bear.top_features(), iters_since));
+    // the leader may or may not broadcast again before seeing Done
+    let _ = down.try_recv();
+    let _ = up.send(Up::Done(_id));
+}
+
+/// Score with a merged distributed model (mirrors `SketchedState::score`).
+pub fn score(state: &SketchedState, x: &SparseVec) -> f64 {
+    state.score(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::StepSize;
+    use crate::data::synth::WebspamSim;
+    use crate::loss::LossKind;
+    use crate::metrics;
+
+    fn cfg(workers: usize, cells: usize) -> DistributedConfig {
+        DistributedConfig {
+            workers,
+            sync_every: 8,
+            batch_size: 16,
+            epochs: 1,
+            merge: MergeRule::Average,
+            bear: BearConfig {
+                sketch_cells: cells,
+                sketch_rows: 5,
+                top_k: 40,
+                tau: 5,
+                step: StepSize::Constant(0.1),
+                loss: LossKind::Logistic,
+                seed: 0xD157,
+                ..Default::default()
+            },
+        }
+    }
+
+    fn shard_maker(p: u64, n_per: usize) -> impl Fn(usize) -> Box<dyn DataSource> {
+        move |w| {
+            // all shards share the teacher (structure seed) but stream
+            // disjoint data
+            Box::new(
+                WebspamSim::with_params(p, 80, 40, n_per, 99)
+                    .with_stream_seed(1000 + w as u64),
+            )
+        }
+    }
+
+    #[test]
+    fn workers_converge_to_useful_merged_model() {
+        let p = 50_000u64;
+        let (state, stats) = train_distributed(&cfg(4, 4096), shard_maker(p, 800));
+        assert!(stats.rounds >= 2, "no syncs happened: {stats:?}");
+        assert_eq!(stats.total_iterations, 4 * 800 / 16);
+
+        // merged model must classify held-out data above chance
+        let mut test = WebspamSim::with_params(p, 80, 40, 400, 99).with_stream_seed(7777);
+        let mut correct = 0usize;
+        let mut n = 0usize;
+        let mut src: Box<dyn DataSource> = Box::new(
+            WebspamSim::with_params(p, 80, 40, 400, 99).with_stream_seed(7777),
+        );
+        let _ = &mut test;
+        while let Some(e) = src.next_example() {
+            let pred = (score(&state, &e.features) > 0.0) as i32 as f32;
+            correct += (pred == e.label) as usize;
+            n += 1;
+        }
+        let acc = correct as f64 / n as f64;
+        assert!(acc > 0.6, "merged model acc {acc}");
+    }
+
+    #[test]
+    fn communication_is_sublinear_in_p() {
+        let p = 1 << 30; // 1B features
+        let (_, stats) = train_distributed(&cfg(2, 2048), shard_maker(p, 200));
+        let dense = stats.dense_equivalent_bytes(p, 2);
+        let actual = stats.bytes_up + stats.bytes_down;
+        assert!(
+            actual * 1000 < dense,
+            "sketched exchange {actual} not ≪ dense {dense}"
+        );
+    }
+
+    #[test]
+    fn single_worker_matches_local_training_quality() {
+        // W=1 distributed ≈ local BEAR (same hash family, same data)
+        let p = 20_000u64;
+        let (state, _) = train_distributed(&cfg(1, 4096), shard_maker(p, 1000));
+        let mut local = Bear::new(p, cfg(1, 4096).bear);
+        let mut data = WebspamSim::with_params(p, 80, 40, 1000, 99).with_stream_seed(1000);
+        local.fit_source(&mut data, 16, 1);
+        let top_d: std::collections::HashSet<u64> =
+            state.top_features().iter().map(|&(f, _)| f).take(20).collect();
+        let top_l: std::collections::HashSet<u64> =
+            local.top_features().iter().map(|&(f, _)| f).take(20).collect();
+        let overlap = top_d.intersection(&top_l).count();
+        assert!(overlap >= 12, "W=1 distributed diverged from local: overlap {overlap}/20");
+    }
+
+    #[test]
+    fn planted_features_recovered_distributed() {
+        let p = 50_000u64;
+        let gen = WebspamSim::with_params(p, 80, 40, 1, 99);
+        let planted = gen.model.informative_ids().to_vec();
+        let (state, _) = train_distributed(&cfg(4, 8192), shard_maker(p, 800));
+        let prec = metrics::precision_at_k(&state.top_features(), &planted, 40);
+        assert!(prec > 0.3, "distributed selection precision {prec}");
+    }
+}

@@ -1,0 +1,186 @@
+//! Feature Hashing (Weinberger et al. 2009) — the prediction-only
+//! baseline: features are hashed into an m-dimensional dense weight vector
+//! *before* training, so the model fits in sublinear memory but the
+//! original feature identities are unrecoverable ("not a feature selection
+//! algorithm", Sec. 7). Trained with plain SGD on the hashed space.
+
+use crate::algo::{FeatureSelector, MemoryReport, StepSize};
+use crate::data::Minibatch;
+use crate::hash::HashFamily;
+use crate::loss::LossKind;
+use crate::sparse::SparseVec;
+use crate::util::math::{log1p_exp, sigmoid};
+
+#[derive(Clone, Debug)]
+pub struct FhConfig {
+    /// Hashed dimension m (set equal to BEAR's total sketch cells for the
+    /// Fig. 2 comparison).
+    pub dim: usize,
+    pub step: StepSize,
+    pub loss: LossKind,
+    pub seed: u64,
+}
+
+pub struct FeatureHashing {
+    pub cfg: FhConfig,
+    w: Vec<f32>,
+    family: HashFamily,
+    t: u64,
+    last_grad_norm: f64,
+    last_loss: f64,
+}
+
+impl FeatureHashing {
+    pub fn new(cfg: FhConfig) -> Self {
+        let family = HashFamily::new(1, cfg.dim, cfg.seed);
+        Self {
+            w: vec![0.0; cfg.dim],
+            family,
+            cfg,
+            t: 0,
+            last_grad_norm: f64::INFINITY,
+            last_loss: f64::INFINITY,
+        }
+    }
+
+    #[inline]
+    fn hashed(&self, f: u64) -> (usize, f32) {
+        self.family.hash(0, f)
+    }
+
+    pub fn fit_source(&mut self, src: &mut dyn crate::data::DataSource, batch: usize, epochs: usize) {
+        for _ in 0..epochs {
+            src.reset();
+            while let Some(mb) = src.next_minibatch(batch) {
+                self.train_minibatch(&mb);
+            }
+        }
+    }
+
+    fn margin(&self, x: &SparseVec) -> f64 {
+        x.idx
+            .iter()
+            .zip(&x.val)
+            .map(|(&f, &v)| {
+                let (b, s) = self.hashed(f);
+                self.w[b] as f64 * s as f64 * v as f64
+            })
+            .sum()
+    }
+}
+
+impl FeatureSelector for FeatureHashing {
+    fn train_minibatch(&mut self, batch: &Minibatch) {
+        if batch.is_empty() {
+            return;
+        }
+        let b = batch.len() as f64;
+        let eta = self.cfg.step.at(self.t);
+        // accumulate the hashed gradient, then apply (true minibatch SGD)
+        let mut grad: std::collections::HashMap<usize, f64> = std::collections::HashMap::new();
+        let mut loss_acc = 0.0;
+        let mut gnorm2 = 0.0;
+        for e in &batch.examples {
+            let z = self.margin(&e.features);
+            let (resid, l) = match self.cfg.loss {
+                LossKind::Mse => {
+                    let r = z - e.label as f64;
+                    (r, 0.5 * r * r)
+                }
+                LossKind::Logistic => {
+                    (sigmoid(z) - e.label as f64, log1p_exp(z) - e.label as f64 * z)
+                }
+            };
+            loss_acc += l;
+            for (&f, &v) in e.features.idx.iter().zip(&e.features.val) {
+                let (bkt, s) = self.hashed(f);
+                *grad.entry(bkt).or_insert(0.0) += resid * s as f64 * v as f64 / b;
+            }
+        }
+        for (bkt, g) in grad {
+            gnorm2 += g * g;
+            self.w[bkt] -= (eta * g) as f32;
+        }
+        self.last_loss = loss_acc / b;
+        self.last_grad_norm = gnorm2.sqrt();
+        self.t += 1;
+    }
+
+    fn score(&self, x: &SparseVec) -> f64 {
+        self.margin(x)
+    }
+
+    /// FH cannot select features; top-k inference is meaningless and the
+    /// paper accordingly excludes it from Fig. 3.
+    fn top_features(&self) -> Vec<(u64, f32)> {
+        Vec::new()
+    }
+
+    fn memory_report(&self) -> MemoryReport {
+        MemoryReport {
+            model_bytes: self.w.len() * std::mem::size_of::<f32>(),
+            heap_bytes: 0,
+            history_bytes: 0,
+            aux_bytes: 0,
+        }
+    }
+
+    fn last_grad_norm(&self) -> f64 {
+        self.last_grad_norm
+    }
+
+    fn last_loss(&self) -> f64 {
+        self.last_loss
+    }
+
+    fn iterations(&self) -> u64 {
+        self.t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::WebspamSim;
+    use crate::data::DataSource;
+    use crate::metrics;
+
+    #[test]
+    fn learns_to_classify_hashed() {
+        // webspam-style surrogate: informative features fire at 35% per
+        // row, so the teacher signal is strong and FH must pick it up
+        let mut train = WebspamSim::with_params(50_000, 100, 50, 2000, 3);
+        let mut test = WebspamSim::with_params(50_000, 100, 50, 500, 3);
+        let cfg = FhConfig {
+            dim: 4_000,
+            step: StepSize::Constant(0.3),
+            loss: LossKind::Logistic,
+            seed: 1,
+        };
+        let mut fh = FeatureHashing::new(cfg);
+        fh.fit_source(&mut train, 32, 3);
+        let examples = test.collect_all();
+        let correct = examples
+            .iter()
+            .filter(|e| ((fh.score(&e.features) > 0.0) as i32 as f32) == e.label)
+            .count();
+        let acc = correct as f64 / examples.len() as f64;
+        assert!(acc > 0.6, "FH accuracy {acc}");
+        let _ = metrics::auc(
+            &examples.iter().map(|e| fh.score(&e.features)).collect::<Vec<_>>(),
+            &examples.iter().map(|e| e.label).collect::<Vec<_>>(),
+        );
+    }
+
+    #[test]
+    fn no_feature_selection() {
+        let fh = FeatureHashing::new(FhConfig {
+            dim: 100,
+            step: StepSize::default(),
+            loss: LossKind::Logistic,
+            seed: 0,
+        });
+        assert!(fh.top_features().is_empty());
+        assert_eq!(fh.memory_report().model_bytes, 400);
+    }
+}

@@ -1,0 +1,190 @@
+//! MISSION (Aghazadeh et al., ICML 2018) — the first-order baseline: SGD
+//! with the model stored in Count Sketch. Identical data structures to
+//! BEAR (same hash family, same heap — the paper uses "the same hash
+//! table (hash functions and random seeds)" for a controlled comparison);
+//! the only difference is that the *raw stochastic gradient* is sketched
+//! instead of the second-order descent direction, which is precisely the
+//! source of the collision noise BEAR removes.
+
+use crate::algo::sketched::SketchedState;
+use crate::algo::{FeatureSelector, MemoryReport, StepSize};
+use crate::data::Minibatch;
+use crate::loss::{GradientEngine, LossKind, NativeEngine};
+use crate::sparse::SparseVec;
+
+/// MISSION hyper-parameters (a strict subset of BEAR's).
+#[derive(Clone, Debug)]
+pub struct MissionConfig {
+    pub sketch_cells: usize,
+    pub sketch_rows: usize,
+    pub top_k: usize,
+    pub step: StepSize,
+    pub loss: LossKind,
+    pub seed: u64,
+}
+
+impl From<&crate::algo::BearConfig> for MissionConfig {
+    /// Mirror a BEAR config (same sketch geometry / seed / step), so
+    /// head-to-head runs share the hash table exactly as in the paper.
+    fn from(c: &crate::algo::BearConfig) -> Self {
+        Self {
+            sketch_cells: c.sketch_cells,
+            sketch_rows: c.sketch_rows,
+            top_k: c.top_k,
+            step: c.step,
+            loss: c.loss,
+            seed: c.seed,
+        }
+    }
+}
+
+pub struct Mission {
+    pub cfg: MissionConfig,
+    state: SketchedState,
+    engine: Box<dyn GradientEngine>,
+    t: u64,
+    last_grad_norm: f64,
+    last_loss: f64,
+    beta_scratch: Vec<f32>,
+}
+
+impl Mission {
+    pub fn new(cfg: MissionConfig) -> Self {
+        Self::with_engine(cfg, Box::new(NativeEngine::new()))
+    }
+
+    pub fn with_engine(cfg: MissionConfig, engine: Box<dyn GradientEngine>) -> Self {
+        let state = SketchedState::new(cfg.sketch_cells, cfg.sketch_rows, cfg.top_k, cfg.seed);
+        Self {
+            cfg,
+            state,
+            engine,
+            t: 0,
+            last_grad_norm: f64::INFINITY,
+            last_loss: f64::INFINITY,
+            beta_scratch: Vec::new(),
+        }
+    }
+
+    pub fn fit_source(&mut self, src: &mut dyn crate::data::DataSource, batch: usize, epochs: usize) {
+        for _ in 0..epochs {
+            src.reset();
+            while let Some(mb) = src.next_minibatch(batch) {
+                self.train_minibatch(&mb);
+            }
+        }
+    }
+
+    pub fn state(&self) -> &SketchedState {
+        &self.state
+    }
+}
+
+impl FeatureSelector for Mission {
+    fn train_minibatch(&mut self, batch: &Minibatch) {
+        if batch.is_empty() {
+            return;
+        }
+        let rows = batch.rows();
+        let labels = batch.labels();
+        let active = batch.active_set();
+        if active.is_empty() {
+            return;
+        }
+
+        let mut beta = std::mem::take(&mut self.beta_scratch);
+        self.state.query_active(&active, &mut beta);
+
+        let (g, loss) =
+            self.engine.grad_active(&rows, &labels, &active, &beta, self.cfg.loss);
+        self.last_loss = loss;
+        self.last_grad_norm = g.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt();
+
+        // first-order update: sketch the raw gradient
+        let g_sparse = SparseVec { idx: active.features().to_vec(), val: g };
+        let eta = self.cfg.step.at(self.t);
+        self.state.apply_step(&g_sparse, eta);
+
+        self.state.refresh_heap(&active);
+        self.t += 1;
+        self.beta_scratch = beta;
+    }
+
+    fn score(&self, x: &SparseVec) -> f64 {
+        self.state.score(x)
+    }
+
+    fn score_topk(&self, x: &SparseVec, k: usize) -> f64 {
+        self.state.score_topk(x, k)
+    }
+
+    fn top_features(&self) -> Vec<(u64, f32)> {
+        self.state.top_features()
+    }
+
+    fn memory_report(&self) -> MemoryReport {
+        MemoryReport {
+            model_bytes: self.state.sketch_bytes(),
+            heap_bytes: self.state.heap_bytes(),
+            history_bytes: 0,
+            aux_bytes: self.beta_scratch.capacity() * std::mem::size_of::<f32>(),
+        }
+    }
+
+    fn last_grad_norm(&self) -> f64 {
+        self.last_grad_norm
+    }
+
+    fn last_loss(&self) -> f64 {
+        self.last_loss
+    }
+
+    fn iterations(&self) -> u64 {
+        self.t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::BearConfig;
+    use crate::data::synth::GaussianLinear;
+
+    #[test]
+    fn recovers_support_with_generous_sketch() {
+        // at low compression MISSION works fine — the gap appears when m
+        // shrinks (Fig. 1), which the fig1 bench reproduces
+        let mut gen = GaussianLinear::new(100, 4, 21);
+        let (mut data, truth) = gen.dataset(400);
+        let cfg = MissionConfig {
+            sketch_cells: 400, // CF=0.25: no pressure
+            sketch_rows: 5,
+            top_k: 4,
+            step: StepSize::Constant(0.05),
+            loss: LossKind::Mse,
+            seed: 5,
+        };
+        let mut m = Mission::new(cfg);
+        m.fit_source(&mut data, 16, 10);
+        let sel: std::collections::HashSet<u64> =
+            m.top_features().iter().map(|&(f, _)| f).collect();
+        let hits = truth.idx.iter().filter(|f| sel.contains(f)).count();
+        assert!(hits >= 3, "MISSION recovered {hits}/4 at CF=0.25");
+    }
+
+    #[test]
+    fn config_mirrors_bear() {
+        let b = BearConfig { sketch_cells: 123, sketch_rows: 3, top_k: 9, seed: 77, ..Default::default() };
+        let m = MissionConfig::from(&b);
+        assert_eq!(m.sketch_cells, 123);
+        assert_eq!(m.sketch_rows, 3);
+        assert_eq!(m.top_k, 9);
+        assert_eq!(m.seed, 77);
+    }
+
+    #[test]
+    fn no_history_memory() {
+        let m = Mission::new(MissionConfig::from(&BearConfig::default()));
+        assert_eq!(m.memory_report().history_bytes, 0);
+    }
+}

@@ -1,0 +1,154 @@
+//! Feature-selection algorithms: BEAR (Alg. 2) and every baseline the
+//! paper evaluates against (Sec. 6–7): MISSION (first-order sketching),
+//! full-Newton sketching, Feature Hashing, dense SGD and dense oLBFGS.
+//!
+//! All implement [`FeatureSelector`], so the coordinator, benches and
+//! examples drive them uniformly.
+
+pub mod bear;
+pub mod dense;
+pub mod distributed;
+pub mod feature_hashing;
+pub mod mission;
+pub mod multiclass;
+pub mod newton_sketch;
+pub mod sketched;
+
+pub use bear::{Bear, BearConfig};
+pub use dense::{DenseOlbfgs, DenseSgd};
+pub use feature_hashing::FeatureHashing;
+pub use mission::Mission;
+pub use multiclass::MultiClass;
+pub use newton_sketch::NewtonSketch;
+
+use crate::data::Minibatch;
+use crate::sparse::SparseVec;
+
+/// Memory accounting for Table 1 / the EXPERIMENTS.md memory columns.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MemoryReport {
+    /// Count Sketch counters (or the dense weight vector for baselines).
+    pub model_bytes: usize,
+    /// Top-k heap + position map.
+    pub heap_bytes: usize,
+    /// LBFGS (s, r) history.
+    pub history_bytes: usize,
+    /// Scratch the algorithm retains between iterations.
+    pub aux_bytes: usize,
+}
+
+impl MemoryReport {
+    pub fn total(&self) -> usize {
+        self.model_bytes + self.heap_bytes + self.history_bytes + self.aux_bytes
+    }
+}
+
+/// Step-size schedule `η_t`. The simulations use a constant η (with
+/// hyper-parameter search, Sec. 6); the convergence theorem uses
+/// `η_t = η₀·T₀/(T₀+t)`.
+#[derive(Clone, Copy, Debug)]
+pub enum StepSize {
+    Constant(f64),
+    /// η_t = eta0 * t0 / (t0 + t)
+    Decay { eta0: f64, t0: f64 },
+}
+
+impl StepSize {
+    #[inline]
+    pub fn at(&self, t: u64) -> f64 {
+        match *self {
+            StepSize::Constant(e) => e,
+            StepSize::Decay { eta0, t0 } => eta0 * t0 / (t0 + t as f64),
+        }
+    }
+}
+
+impl Default for StepSize {
+    fn default() -> Self {
+        StepSize::Constant(1e-3)
+    }
+}
+
+/// Common interface over all trainers.
+// NOTE: not `Send` for the same reason as `GradientEngine` — selectors own
+// their engine; per-thread construction is the supported pattern.
+pub trait FeatureSelector {
+    /// One optimization step on a minibatch (Alg. 2 body).
+    fn train_minibatch(&mut self, batch: &Minibatch);
+
+    /// Raw score (margin / logit / regression output) for one example
+    /// using the full model state — the paper's Fig. 2 inference mode
+    /// ("all the active features in the test data are used").
+    fn score(&self, x: &SparseVec) -> f64;
+
+    /// Score using only the top-k selected features (Fig. 3 inference
+    /// mode). Default: selectors that cannot select features fall back to
+    /// the full score.
+    fn score_topk(&self, x: &SparseVec, k: usize) -> f64 {
+        let _ = k;
+        self.score(x)
+    }
+
+    /// Selected features sorted by decreasing |weight| (empty for
+    /// non-selecting baselines like FH/SGD-dense).
+    fn top_features(&self) -> Vec<(u64, f32)>;
+
+    fn memory_report(&self) -> MemoryReport;
+
+    /// ℓ₂ norm of the last minibatch gradient (the simulations' stopping
+    /// criterion: converged when < 1e-7).
+    fn last_grad_norm(&self) -> f64;
+
+    /// Training loss of the last minibatch.
+    fn last_loss(&self) -> f64;
+
+    /// Iterations performed.
+    fn iterations(&self) -> u64;
+}
+
+/// Restrict a sparse vector to the features of an active set
+/// (`ẑ_t = z_t^{A_t}`, Alg. 2 step 6).
+pub fn restrict_to_active(z: &SparseVec, active: &crate::sparse::ActiveSet) -> SparseVec {
+    let mut idx = Vec::with_capacity(z.nnz().min(active.len()));
+    let mut val = Vec::with_capacity(idx.capacity());
+    for (&f, &v) in z.idx.iter().zip(&z.val) {
+        if active.slot_of(f).is_some() {
+            idx.push(f);
+            val.push(v);
+        }
+    }
+    SparseVec { idx, val }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::ActiveSet;
+
+    #[test]
+    fn step_size_schedules() {
+        let c = StepSize::Constant(0.5);
+        assert_eq!(c.at(0), 0.5);
+        assert_eq!(c.at(1000), 0.5);
+        let d = StepSize::Decay { eta0: 1.0, t0: 10.0 };
+        assert_eq!(d.at(0), 1.0);
+        assert!((d.at(10) - 0.5).abs() < 1e-12);
+        assert!(d.at(100) < d.at(10));
+    }
+
+    #[test]
+    fn restrict_drops_outside_features() {
+        let z = SparseVec::from_pairs(vec![(1, 1.0), (5, 2.0), (9, 3.0)]);
+        let row = SparseVec::from_pairs(vec![(5, 1.0), (9, 1.0)]);
+        let active = ActiveSet::from_rows([&row]);
+        let r = restrict_to_active(&z, &active);
+        assert_eq!(r.idx, vec![5, 9]);
+        assert_eq!(r.val, vec![2.0, 3.0]);
+    }
+
+    #[test]
+    fn memory_report_total() {
+        let m = MemoryReport { model_bytes: 10, heap_bytes: 20, history_bytes: 30, aux_bytes: 5 };
+        assert_eq!(m.total(), 65);
+    }
+}

@@ -1,0 +1,168 @@
+//! Shared state for the sketched algorithms (BEAR, MISSION, sketched
+//! Newton): a Count Sketch holding the model coordinates plus the top-k
+//! heap tracking the heavy hitters, with the query/update/refresh motions
+//! of Alg. 2 factored out.
+
+use crate::sketch::{CountSketch, SketchMemory};
+use crate::sparse::{ActiveSet, SparseVec};
+use crate::topk::TopK;
+
+/// Count Sketch + top-k heap and the Alg. 2 access patterns.
+#[derive(Clone, Debug)]
+pub struct SketchedState {
+    pub cs: CountSketch,
+    pub heap: TopK,
+    /// Alg. 2 step 3 queries only `A_t ∩ top-k`; setting this false is the
+    /// "query everything" ablation.
+    pub restrict_query_to_topk: bool,
+}
+
+impl SketchedState {
+    pub fn new(sketch_cells: usize, sketch_rows: usize, top_k: usize, seed: u64) -> Self {
+        Self {
+            cs: CountSketch::with_total_cells(sketch_cells, sketch_rows, seed),
+            heap: TopK::new(top_k),
+            restrict_query_to_topk: true,
+        }
+    }
+
+    /// Step 3/7: retrieve `β_t` on the active set — features in
+    /// `A_t ∩ top-k` get their sketch estimate, the rest read 0.
+    pub fn query_active(&self, active: &ActiveSet, out: &mut Vec<f32>) {
+        out.clear();
+        out.reserve(active.len());
+        for &f in active.features() {
+            let v = if !self.restrict_query_to_topk || self.heap.contains(f) {
+                self.cs.query(f)
+            } else {
+                0.0
+            };
+            out.push(v);
+        }
+    }
+
+    /// Step 6: `β^s ← β^s − η·ẑ^s` — sketch the (already active-restricted)
+    /// step and fold it into the Count Sketch. Non-finite components are
+    /// dropped (a diverged direction must not poison the shared counters;
+    /// the step-clip in `Bear::train_minibatch` makes this a last resort).
+    pub fn apply_step(&mut self, step: &SparseVec, eta: f64) {
+        for (&f, &v) in step.idx.iter().zip(&step.val) {
+            let delta = (-eta * v as f64) as f32;
+            if delta.is_finite() {
+                self.cs.add(f, delta);
+            }
+        }
+    }
+
+    /// Step 10: re-score every touched feature against the heap.
+    pub fn refresh_heap(&mut self, active: &ActiveSet) {
+        for &f in active.features() {
+            let w = self.cs.query(f);
+            self.heap.offer(f, w);
+        }
+    }
+
+    /// Fig. 2 inference: margin using the sketch estimate of every active
+    /// feature of `x`.
+    pub fn score(&self, x: &SparseVec) -> f64 {
+        x.idx
+            .iter()
+            .zip(&x.val)
+            .map(|(&f, &v)| self.cs.query(f) as f64 * v as f64)
+            .sum()
+    }
+
+    /// Fig. 3 inference: margin restricted to the k heaviest selected
+    /// features (k ≤ heap capacity).
+    pub fn score_topk(&self, x: &SparseVec, k: usize) -> f64 {
+        if k >= self.heap.len() {
+            // all tracked features count
+            return x
+                .idx
+                .iter()
+                .zip(&x.val)
+                .filter(|(&f, _)| self.heap.contains(f))
+                .map(|(&f, &v)| self.cs.query(f) as f64 * v as f64)
+                .sum();
+        }
+        let top: std::collections::HashSet<u64> =
+            self.heap.items_sorted().into_iter().take(k).map(|(f, _)| f).collect();
+        x.idx
+            .iter()
+            .zip(&x.val)
+            .filter(|(&f, _)| top.contains(&f))
+            .map(|(&f, &v)| self.cs.query(f) as f64 * v as f64)
+            .sum()
+    }
+
+    /// Selected features, heaviest first.
+    pub fn top_features(&self) -> Vec<(u64, f32)> {
+        self.heap.items_sorted()
+    }
+
+    pub fn sketch_bytes(&self) -> usize {
+        self.cs.counter_bytes()
+    }
+
+    pub fn heap_bytes(&self) -> usize {
+        self.heap.memory_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(pairs: &[(u64, f32)]) -> SparseVec {
+        SparseVec::from_pairs(pairs.to_vec())
+    }
+
+    #[test]
+    fn query_active_respects_topk_restriction() {
+        let mut st = SketchedState::new(512, 3, 2, 1);
+        st.cs.add(5, 1.0);
+        st.cs.add(7, 2.0);
+        st.heap.offer(5, 1.0); // only 5 tracked
+        let row = sv(&[(5, 1.0), (7, 1.0)]);
+        let active = ActiveSet::from_rows([&row]);
+        let mut beta = Vec::new();
+        st.query_active(&active, &mut beta);
+        assert!((beta[0] - 1.0).abs() < 1e-6);
+        assert_eq!(beta[1], 0.0); // 7 not in top-k ⇒ reads 0
+        st.restrict_query_to_topk = false;
+        st.query_active(&active, &mut beta);
+        assert!((beta[1] - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn apply_step_is_negative_eta_scaled() {
+        let mut st = SketchedState::new(512, 3, 4, 2);
+        st.apply_step(&sv(&[(3, 2.0)]), 0.5);
+        assert!((st.cs.query(3) - (-1.0)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn refresh_heap_promotes_heavy_features() {
+        let mut st = SketchedState::new(1024, 3, 2, 3);
+        st.apply_step(&sv(&[(1, -5.0), (2, -1.0), (3, -3.0)]), 1.0); // weights 5,1,3
+        let row = sv(&[(1, 1.0), (2, 1.0), (3, 1.0)]);
+        let active = ActiveSet::from_rows([&row]);
+        st.refresh_heap(&active);
+        let top: Vec<u64> = st.top_features().iter().map(|&(f, _)| f).collect();
+        assert_eq!(top, vec![1, 3]);
+    }
+
+    #[test]
+    fn score_and_score_topk() {
+        let mut st = SketchedState::new(2048, 3, 2, 4);
+        st.apply_step(&sv(&[(1, -2.0), (2, -1.0), (3, -4.0)]), 1.0); // w: 2,1,4
+        let row = sv(&[(1, 1.0), (2, 1.0), (3, 1.0)]);
+        st.refresh_heap(&ActiveSet::from_rows([&row]));
+        let x = sv(&[(1, 1.0), (2, 1.0), (3, 1.0)]);
+        assert!((st.score(&x) - 7.0).abs() < 0.1);
+        // top-1 = feature 3 only
+        assert!((st.score_topk(&x, 1) - 4.0).abs() < 0.1);
+        // top-2 = features 3 and 1
+        assert!((st.score_topk(&x, 2) - 6.0).abs() < 0.1);
+    }
+}

@@ -1,0 +1,122 @@
+//! Hand-rolled bench harness (criterion is not in the offline vendor set).
+//!
+//! Usage inside a `harness = false` bench binary:
+//! ```no_run
+//! use bear::bench_util::Bench;
+//! let mut b = Bench::new("sketch_add");
+//! b.iter("add 1k", || { /* workload */ });
+//! b.report();
+//! ```
+//! Each case runs warmup + timed repetitions and reports min/median/mean.
+//! `BEAR_BENCH_QUICK=1` shrinks repetitions for smoke runs.
+
+use crate::util::timer::human_duration;
+use std::time::{Duration, Instant};
+
+/// One measured case.
+#[derive(Clone, Debug)]
+pub struct Case {
+    pub name: String,
+    pub reps: usize,
+    pub min: Duration,
+    pub median: Duration,
+    pub mean: Duration,
+}
+
+/// A group of timed cases.
+pub struct Bench {
+    name: String,
+    cases: Vec<Case>,
+    warmup: usize,
+    reps: usize,
+}
+
+/// True when quick mode is requested (CI/smoke).
+pub fn quick_mode() -> bool {
+    std::env::var("BEAR_BENCH_QUICK").map(|v| v != "0").unwrap_or(false)
+}
+
+impl Bench {
+    pub fn new(name: &str) -> Self {
+        let (warmup, reps) = if quick_mode() { (1, 3) } else { (2, 7) };
+        Self { name: name.to_string(), cases: Vec::new(), warmup, reps }
+    }
+
+    pub fn with_reps(mut self, warmup: usize, reps: usize) -> Self {
+        self.warmup = warmup;
+        self.reps = reps.max(1);
+        self
+    }
+
+    /// Time `f` (called reps times after warmup); records the case.
+    pub fn iter(&mut self, case: &str, mut f: impl FnMut()) -> &Case {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.reps);
+        for _ in 0..self.reps {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed());
+        }
+        samples.sort();
+        let min = samples[0];
+        let median = samples[samples.len() / 2];
+        let mean = samples.iter().sum::<Duration>() / samples.len() as u32;
+        self.cases.push(Case { name: case.to_string(), reps: self.reps, min, median, mean });
+        self.cases.last().unwrap()
+    }
+
+    /// Time a closure that returns how many items it processed; reports
+    /// throughput as well.
+    pub fn iter_throughput(&mut self, case: &str, mut f: impl FnMut() -> usize) {
+        let mut items = 0usize;
+        let case_ref = self.iter(case, || {
+            items = f();
+        });
+        let per_sec = items as f64 / case_ref.median.as_secs_f64();
+        let name = case_ref.name.clone();
+        println!(
+            "  [{}] {name}: {} items/iter → {per_sec:.0} items/s (median)",
+            self.name, items
+        );
+    }
+
+    pub fn report(&self) {
+        println!("\n=== bench group: {} ===", self.name);
+        for c in &self.cases {
+            println!(
+                "  {:<40} min {:>10}  median {:>10}  mean {:>10}  ({} reps)",
+                c.name,
+                human_duration(c.min),
+                human_duration(c.median),
+                human_duration(c.mean),
+                c.reps
+            );
+        }
+    }
+
+    pub fn cases(&self) -> &[Case] {
+        &self.cases
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let mut b = Bench::new("test").with_reps(1, 3);
+        b.iter("spin", || {
+            let mut acc = 0u64;
+            for i in 0..1000 {
+                acc = acc.wrapping_add(std::hint::black_box(i));
+            }
+            std::hint::black_box(acc);
+        });
+        assert_eq!(b.cases().len(), 1);
+        assert!(b.cases()[0].min <= b.cases()[0].median);
+        assert!(b.cases()[0].median <= b.cases()[0].mean * 2);
+    }
+}

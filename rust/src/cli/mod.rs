@@ -1,0 +1,180 @@
+//! Hand-rolled CLI + config parsing (clap/serde are not in the offline
+//! vendor set). Flags are `--key value` or bare `--switch`; a `--config
+//! file` of `key = value` lines supplies defaults that explicit flags
+//! override.
+
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+
+/// Parsed command line: subcommand, options, positionals.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: String,
+    opts: HashMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv[1..]`. The first non-flag token is the subcommand.
+    pub fn parse(argv: impl IntoIterator<Item = String>) -> Result<Self> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(key) = tok.strip_prefix("--") {
+                if key.is_empty() {
+                    bail!("bare '--' not supported");
+                }
+                // --key=value, --key value, or bare switch
+                if let Some((k, v)) = key.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    out.opts.insert(key.to_string(), it.next().unwrap());
+                } else {
+                    out.opts.insert(key.to_string(), "true".to_string());
+                }
+            } else if out.command.is_empty() {
+                out.command = tok;
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        // merge config file (flags win)
+        if let Some(path) = out.opts.get("config").cloned() {
+            let defaults = parse_kv_file(&path)?;
+            for (k, v) in defaults {
+                out.opts.entry(k).or_insert(v);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.opts.contains_key(key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn parse_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--{key} {v:?}: {e}")),
+        }
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Comma-separated f64 list.
+    pub fn f64_list(&self, key: &str, default: &[f64]) -> Result<Vec<f64>> {
+        match self.get(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|s| s.trim().parse::<f64>().with_context(|| format!("--{key}: bad {s:?}")))
+                .collect(),
+        }
+    }
+}
+
+/// Parse a `key = value` config file (# comments, blank lines allowed).
+pub fn parse_kv_file(path: &str) -> Result<HashMap<String, String>> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading config {path}"))?;
+    parse_kv(&text)
+}
+
+/// Parse `key = value` text.
+pub fn parse_kv(text: &str) -> Result<HashMap<String, String>> {
+    let mut out = HashMap::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let (k, v) = line
+            .split_once('=')
+            .with_context(|| format!("line {}: expected key = value, got {line:?}", lineno + 1))?;
+        out.insert(k.trim().to_string(), v.trim().to_string());
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn parses_subcommand_flags_positionals() {
+        // NOTE: a bare switch consumes the next token unless it starts
+        // with "--", so positionals go before switches (documented above)
+        let a = parse("train extra --dataset rcv1 --cf 100 --pjrt");
+        assert_eq!(a.command, "train");
+        assert_eq!(a.get("dataset"), Some("rcv1"));
+        assert_eq!(a.parse_or::<f64>("cf", 1.0).unwrap(), 100.0);
+        assert!(a.flag("pjrt"));
+        assert_eq!(a.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn equals_form_and_defaults() {
+        let a = parse("simulate --trials=9");
+        assert_eq!(a.parse_or::<usize>("trials", 1).unwrap(), 9);
+        assert_eq!(a.parse_or::<usize>("missing", 7).unwrap(), 7);
+        assert!(!a.flag("absent"));
+    }
+
+    #[test]
+    fn bad_value_reports_key() {
+        let a = parse("x --cf abc");
+        let err = a.parse_or::<f64>("cf", 0.0).unwrap_err();
+        assert!(format!("{err}").contains("cf"));
+    }
+
+    #[test]
+    fn f64_list_parsing() {
+        let a = parse("x --etas 0.1,0.3,1.0");
+        assert_eq!(a.f64_list("etas", &[]).unwrap(), vec![0.1, 0.3, 1.0]);
+        assert_eq!(a.f64_list("none", &[2.0]).unwrap(), vec![2.0]);
+    }
+
+    #[test]
+    fn kv_config_text() {
+        let kv = parse_kv("a = 1\n# comment\n b = two words \n\nc=3#trailing").unwrap();
+        assert_eq!(kv["a"], "1");
+        assert_eq!(kv["b"], "two words");
+        assert_eq!(kv["c"], "3");
+        assert!(parse_kv("not a pair").is_err());
+    }
+
+    #[test]
+    fn config_file_merges_with_flag_priority() {
+        let dir = std::env::temp_dir().join(format!("bear-cli-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let cfg = dir.join("c.conf");
+        std::fs::write(&cfg, "cf = 50\ndataset = dna\n").unwrap();
+        let a = Args::parse(
+            ["train", "--config", cfg.to_str().unwrap(), "--cf", "10"]
+                .into_iter()
+                .map(String::from),
+        )
+        .unwrap();
+        assert_eq!(a.parse_or::<f64>("cf", 0.0).unwrap(), 10.0); // flag wins
+        assert_eq!(a.get("dataset"), Some("dna")); // config fills gap
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

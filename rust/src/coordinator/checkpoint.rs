@@ -1,0 +1,255 @@
+//! Checkpointing: serialize the sketched model state (Count Sketch
+//! counters + top-k heap + config fingerprint) to disk and restore it.
+//!
+//! Streaming deployments (the paper's edge-device setting) need to
+//! suspend/resume selection across process restarts; the state is tiny by
+//! construction (that is the whole point), so a flat binary format is
+//! enough. Hand-rolled (no serde offline): little-endian, versioned,
+//! CRC-checked.
+//!
+//! Layout:
+//! ```text
+//! magic "BEARCKPT" | u32 version | u64 config_fingerprint
+//! | u32 rows | u32 cols | f32 × rows·cols   (sketch counters)
+//! | u32 heap_len | (u64 feature, f32 weight) × heap_len
+//! | u32 crc32 of everything above
+//! ```
+
+use crate::algo::sketched::SketchedState;
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"BEARCKPT";
+const VERSION: u32 = 1;
+
+/// CRC-32 (IEEE) — small table-less implementation, good enough for
+/// corruption detection on checkpoint files.
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in data {
+        crc ^= b as u32;
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
+        }
+    }
+    !crc
+}
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+fn put_f32(buf: &mut Vec<u8>, v: f32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+struct Reader<'a> {
+    data: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.data.len() {
+            bail!("checkpoint truncated at offset {}", self.pos);
+        }
+        let s = &self.data[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+}
+
+/// Serialize a sketched state. `fingerprint` should encode whatever must
+/// match on restore (sketch geometry + hash seed + dataset id); use
+/// [`config_fingerprint`].
+pub fn save(state: &SketchedState, fingerprint: u64, path: &Path) -> Result<()> {
+    let mut buf = Vec::with_capacity(64 + state.cs.raw().len() * 4);
+    buf.extend_from_slice(MAGIC);
+    put_u32(&mut buf, VERSION);
+    put_u64(&mut buf, fingerprint);
+    put_u32(&mut buf, state.cs.rows() as u32);
+    put_u32(&mut buf, state.cs.cols() as u32);
+    for &c in state.cs.raw() {
+        put_f32(&mut buf, c);
+    }
+    let items = state.heap.items_sorted();
+    put_u32(&mut buf, items.len() as u32);
+    for (f, w) in items {
+        put_u64(&mut buf, f);
+        put_f32(&mut buf, w);
+    }
+    let crc = crc32(&buf);
+    put_u32(&mut buf, crc);
+    let tmp = path.with_extension("tmp");
+    {
+        let mut file =
+            std::fs::File::create(&tmp).with_context(|| format!("creating {tmp:?}"))?;
+        file.write_all(&buf)?;
+        file.sync_all()?;
+    }
+    std::fs::rename(&tmp, path).with_context(|| format!("committing {path:?}"))?;
+    Ok(())
+}
+
+/// Restore into an existing state (geometry must match; counters and heap
+/// contents are replaced). Returns the stored fingerprint — callers must
+/// verify it against their config.
+pub fn load(state: &mut SketchedState, path: &Path) -> Result<u64> {
+    let mut data = Vec::new();
+    std::fs::File::open(path)
+        .with_context(|| format!("opening checkpoint {path:?}"))?
+        .read_to_end(&mut data)?;
+    if data.len() < MAGIC.len() + 8 + 4 {
+        bail!("checkpoint too short");
+    }
+    let (body, crc_bytes) = data.split_at(data.len() - 4);
+    let want = u32::from_le_bytes(crc_bytes.try_into().unwrap());
+    let got = crc32(body);
+    if want != got {
+        bail!("checkpoint CRC mismatch: file {want:#010x} vs computed {got:#010x}");
+    }
+    let mut r = Reader { data: body, pos: 0 };
+    if r.take(8)? != MAGIC {
+        bail!("not a BEAR checkpoint (bad magic)");
+    }
+    let version = r.u32()?;
+    if version != VERSION {
+        bail!("unsupported checkpoint version {version}");
+    }
+    let fingerprint = r.u64()?;
+    let rows = r.u32()? as usize;
+    let cols = r.u32()? as usize;
+    if rows != state.cs.rows() || cols != state.cs.cols() {
+        bail!(
+            "sketch geometry mismatch: checkpoint {rows}×{cols}, state {}×{}",
+            state.cs.rows(),
+            state.cs.cols()
+        );
+    }
+    let mut counters = Vec::with_capacity(rows * cols);
+    for _ in 0..rows * cols {
+        counters.push(r.f32()?);
+    }
+    state.cs.load_raw(&counters);
+    let heap_len = r.u32()? as usize;
+    // rebuild the heap from scratch
+    let cap = state.heap.capacity();
+    state.heap = crate::topk::TopK::new(cap);
+    for _ in 0..heap_len {
+        let f = r.u64()?;
+        let w = r.f32()?;
+        state.heap.offer(f, w);
+    }
+    Ok(fingerprint)
+}
+
+/// A stable fingerprint over the fields that must match on restore.
+pub fn config_fingerprint(cells: usize, rows: usize, seed: u64, tag: &str) -> u64 {
+    let mut buf = Vec::new();
+    put_u64(&mut buf, cells as u64);
+    put_u64(&mut buf, rows as u64);
+    put_u64(&mut buf, seed);
+    buf.extend_from_slice(tag.as_bytes());
+    let (h1, _) = crate::hash::murmur3_x64_128(&buf, 0xC0FF);
+    h1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::SparseVec;
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("bear-ckpt-{}-{name}", std::process::id()))
+    }
+
+    fn populated_state() -> SketchedState {
+        let mut st = SketchedState::new(512, 4, 8, 42);
+        let step = SparseVec::from_pairs(vec![(5, -1.0), (9, -3.0), (1 << 30, 2.0)]);
+        st.apply_step(&step, 1.0);
+        let row = SparseVec::from_pairs(vec![(5, 1.0), (9, 1.0), (1 << 30, 1.0)]);
+        st.refresh_heap(&crate::sparse::ActiveSet::from_rows([&row]));
+        st
+    }
+
+    #[test]
+    fn roundtrip_preserves_everything() {
+        let st = populated_state();
+        let path = tmpfile("roundtrip");
+        let fp = config_fingerprint(512, 4, 42, "test");
+        save(&st, fp, &path).unwrap();
+        let mut st2 = SketchedState::new(512, 4, 8, 42);
+        let fp2 = load(&mut st2, &path).unwrap();
+        assert_eq!(fp, fp2);
+        assert_eq!(st.cs.raw(), st2.cs.raw());
+        assert_eq!(st.top_features(), st2.top_features());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let st = populated_state();
+        let path = tmpfile("corrupt");
+        save(&st, 1, &path).unwrap();
+        let mut data = std::fs::read(&path).unwrap();
+        let mid = data.len() / 2;
+        data[mid] ^= 0xFF;
+        std::fs::write(&path, &data).unwrap();
+        let mut st2 = SketchedState::new(512, 4, 8, 42);
+        let err = load(&mut st2, &path).unwrap_err();
+        assert!(format!("{err}").contains("CRC"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn geometry_mismatch_rejected() {
+        let st = populated_state();
+        let path = tmpfile("geom");
+        save(&st, 1, &path).unwrap();
+        let mut wrong = SketchedState::new(256, 4, 8, 42);
+        let err = load(&mut wrong, &path).unwrap_err();
+        assert!(format!("{err}").contains("geometry"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn truncation_rejected() {
+        let st = populated_state();
+        let path = tmpfile("trunc");
+        save(&st, 1, &path).unwrap();
+        let data = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &data[..data.len() / 2]).unwrap();
+        let mut st2 = SketchedState::new(512, 4, 8, 42);
+        assert!(load(&mut st2, &path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn fingerprint_sensitive_to_fields() {
+        let a = config_fingerprint(512, 4, 42, "x");
+        assert_ne!(a, config_fingerprint(513, 4, 42, "x"));
+        assert_ne!(a, config_fingerprint(512, 5, 42, "x"));
+        assert_ne!(a, config_fingerprint(512, 4, 43, "x"));
+        assert_ne!(a, config_fingerprint(512, 4, 42, "y"));
+        assert_eq!(a, config_fingerprint(512, 4, 42, "x"));
+    }
+
+    #[test]
+    fn crc32_known_vector() {
+        // IEEE CRC-32 of "123456789" is 0xCBF43926
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+    }
+}

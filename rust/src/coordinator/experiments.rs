@@ -1,0 +1,560 @@
+//! Experiment runners: one parametrized function per paper table/figure.
+//! The bench binaries (`rust/benches/`) and the examples call these; the
+//! DESIGN.md experiment index maps each figure to its runner here.
+
+use crate::algo::bear::{Bear, BearConfig};
+use crate::algo::mission::{Mission, MissionConfig};
+use crate::algo::newton_sketch::{NewtonSketch, NewtonSketchConfig};
+use crate::algo::{FeatureSelector, MultiClass, StepSize};
+use crate::coordinator::trainer::{evaluate_binary, evaluate_binary_topk, Trainer};
+use crate::data::synth::{DnaSim, GaussianLinear, KddSim, Rcv1Sim, WebspamSim};
+use crate::data::DataSource;
+use crate::loss::LossKind;
+use crate::metrics;
+use std::time::Duration;
+
+/// Which trainer an experiment row uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AlgoKind {
+    Bear,
+    Mission,
+    Newton,
+    FeatureHashing,
+    DenseSgd,
+    DenseOlbfgs,
+}
+
+impl AlgoKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            AlgoKind::Bear => "BEAR",
+            AlgoKind::Mission => "MISSION",
+            AlgoKind::Newton => "Newton",
+            AlgoKind::FeatureHashing => "FH",
+            AlgoKind::DenseSgd => "SGD",
+            AlgoKind::DenseOlbfgs => "oLBFGS",
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 1 A/B: sparse-recovery phase transition vs compression factor
+// ---------------------------------------------------------------------------
+
+/// Sec. 6 simulation parameters (paper: p=1000, n=900, k=8, 200 trials).
+#[derive(Clone, Debug)]
+pub struct SimulationSpec {
+    pub p: usize,
+    pub k: usize,
+    pub n: usize,
+    pub trials: usize,
+    pub sketch_rows: usize,
+    pub tau: usize,
+    pub batch: usize,
+    pub max_iters: u64,
+    /// Step sizes tried per algorithm; the best (by success) is reported —
+    /// "hyperparameter search is performed to select the value of the
+    /// step sizes" (Sec. 6).
+    pub eta_grid: Vec<f64>,
+    pub seed: u64,
+}
+
+impl Default for SimulationSpec {
+    fn default() -> Self {
+        Self {
+            p: 1000,
+            k: 8,
+            n: 900,
+            trials: 25,
+            sketch_rows: 3,
+            tau: 5,
+            batch: 30,
+            max_iters: 3000,
+            eta_grid: vec![0.03, 0.1, 0.3],
+            seed: 0x51A7,
+        }
+    }
+}
+
+/// One Fig. 1 data point.
+#[derive(Clone, Debug)]
+pub struct Fig1Row {
+    pub algo: AlgoKind,
+    pub compression: f64,
+    pub eta: f64,
+    pub p_success: f64,
+    pub l2_error: f64,
+    pub mean_iters: f64,
+    pub wall: Duration,
+}
+
+fn make_sim_selector(
+    algo: AlgoKind,
+    p: usize,
+    cells: usize,
+    rows: usize,
+    k: usize,
+    tau: usize,
+    eta: f64,
+    seed: u64,
+) -> Box<dyn FeatureSelector> {
+    let cfg = BearConfig {
+        sketch_cells: cells,
+        sketch_rows: rows,
+        top_k: k,
+        tau,
+        step: StepSize::Constant(eta),
+        loss: LossKind::Mse,
+        seed,
+        ..Default::default()
+    };
+    match algo {
+        AlgoKind::Bear => Box::new(Bear::new(p as u64, cfg)),
+        AlgoKind::Mission => Box::new(Mission::new(MissionConfig::from(&cfg))),
+        AlgoKind::Newton => Box::new(NewtonSketch::new(NewtonSketchConfig::from(&cfg))),
+        other => panic!("{other:?} does not run in the sketched simulations"),
+    }
+}
+
+/// Run one (algorithm, compression-factor) cell of Fig. 1A/B: `trials`
+/// independent ground truths, step size selected from the grid.
+pub fn fig1_point(spec: &SimulationSpec, algo: AlgoKind, compression: f64) -> Fig1Row {
+    let cells = ((spec.p as f64 / compression).round() as usize).max(spec.sketch_rows);
+    let mut best: Option<Fig1Row> = None;
+    for &eta in &spec.eta_grid {
+        let mut successes = 0usize;
+        let mut l2_sum = 0.0f64;
+        let mut iter_sum = 0.0f64;
+        let start = std::time::Instant::now();
+        for trial in 0..spec.trials {
+            // same data seeds across algorithms and etas (paper: same hash
+            // table and step sizes across algorithms)
+            let mut gen = GaussianLinear::new(spec.p, spec.k, spec.seed + trial as u64);
+            let (mut data, truth) = gen.dataset(spec.n);
+            let mut sel = make_sim_selector(
+                algo,
+                spec.p,
+                cells,
+                spec.sketch_rows,
+                spec.k,
+                spec.tau,
+                eta,
+                spec.seed ^ 0xCAFE, // same hash table across algos/trials
+            );
+            let log = Trainer::simulation(spec.batch, spec.max_iters).run(sel.as_mut(), &mut data);
+            let top = sel.top_features();
+            if metrics::exact_support_recovery(&top, &truth) {
+                successes += 1;
+            }
+            l2_sum += metrics::recovery_l2_error(&top, &truth);
+            iter_sum += log.iterations as f64;
+        }
+        let row = Fig1Row {
+            algo,
+            compression,
+            eta,
+            p_success: successes as f64 / spec.trials as f64,
+            l2_error: l2_sum / spec.trials as f64,
+            mean_iters: iter_sum / spec.trials as f64,
+            wall: start.elapsed(),
+        };
+        let better = match &best {
+            None => true,
+            Some(b) => {
+                row.p_success > b.p_success
+                    || (row.p_success == b.p_success && row.l2_error < b.l2_error)
+            }
+        };
+        if better {
+            best = Some(row);
+        }
+    }
+    best.expect("eta grid must be non-empty")
+}
+
+/// Fig. 1C: success vs step size at a fixed sketch (paper: 150×3).
+pub fn fig1c_point(spec: &SimulationSpec, algo: AlgoKind, eta: f64, cells: usize) -> Fig1Row {
+    let mut one = spec.clone();
+    one.eta_grid = vec![eta];
+    let compression = spec.p as f64 / cells as f64;
+    let mut sub = one.clone();
+    sub.trials = spec.trials;
+    let mut row = fig1_point(
+        &SimulationSpec { eta_grid: vec![eta], ..sub },
+        algo,
+        compression,
+    );
+    row.eta = eta;
+    row
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 2 / 3 / Tables 2-4: real-data surrogates
+// ---------------------------------------------------------------------------
+
+/// The four real-world datasets (surrogate parametrizations, DESIGN.md §5).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RealData {
+    Rcv1,
+    Webspam,
+    Dna,
+    Kdd,
+}
+
+impl RealData {
+    pub fn label(&self) -> &'static str {
+        match self {
+            RealData::Rcv1 => "RCV1",
+            RealData::Webspam => "Webspam",
+            RealData::Dna => "DNA",
+            RealData::Kdd => "KDD2012",
+        }
+    }
+
+    pub fn all() -> [RealData; 4] {
+        [RealData::Rcv1, RealData::Webspam, RealData::Dna, RealData::Kdd]
+    }
+
+    /// Full surrogate dimension (matches Table 2 where feasible).
+    pub fn dim(&self) -> u64 {
+        match self {
+            RealData::Rcv1 => crate::data::synth::RCV1_DIM,
+            RealData::Webspam => crate::data::synth::WEBSPAM_DIM,
+            RealData::Dna => crate::data::synth::DNA_DIM,
+            RealData::Kdd => crate::data::synth::KDD_DIM,
+        }
+    }
+
+    pub fn num_classes(&self) -> usize {
+        match self {
+            RealData::Dna => 15,
+            _ => 2,
+        }
+    }
+
+    /// AUC is the paper's metric for the highly skewed KDD set.
+    pub fn reports_auc(&self) -> bool {
+        matches!(self, RealData::Kdd)
+    }
+
+    /// Build (train, test) streams at the given scale. Both splits share
+    /// the structural seed (planted teacher / class genomes); only the
+    /// epoch stream is re-seeded for the test split.
+    pub fn make(&self, n_train: usize, n_test: usize, seed: u64) -> (Box<dyn DataSource>, Box<dyn DataSource>) {
+        let test_stream = seed ^ 0x7e57;
+        match self {
+            RealData::Rcv1 => (
+                Box::new(Rcv1Sim::new(n_train, seed)),
+                Box::new(Rcv1Sim::new(n_test, seed).with_stream_seed(test_stream)),
+            ),
+            RealData::Webspam => (
+                Box::new(WebspamSim::new(n_train, seed)),
+                Box::new(WebspamSim::new(n_test, seed).with_stream_seed(test_stream)),
+            ),
+            RealData::Dna => {
+                let train = DnaSim::new(n_train, seed);
+                let mut test = DnaSim::new(n_test, seed);
+                test.reskew_stream(test_stream);
+                (Box::new(train), Box::new(test))
+            }
+            RealData::Kdd => (
+                Box::new(KddSim::new(n_train, seed)),
+                Box::new(KddSim::new(n_test, seed).with_stream_seed(test_stream)),
+            ),
+        }
+    }
+
+    /// Planted informative feature ids (ground truth for Table 3 and the
+    /// precision@k metric).
+    pub fn planted_ids(&self, seed: u64) -> Vec<u64> {
+        match self {
+            RealData::Rcv1 => Rcv1Sim::new(1, seed).model.informative_ids().to_vec(),
+            RealData::Webspam => WebspamSim::new(1, seed).model.informative_ids().to_vec(),
+            RealData::Dna => {
+                DnaSim::new(1, seed).class_kmers.iter().flatten().copied().collect()
+            }
+            RealData::Kdd => KddSim::new(1, seed).model.informative_ids().to_vec(),
+        }
+    }
+
+    /// Default (laptop-scale) train/test sizes used by the benches; the
+    /// paper's full n for each set is recorded in DESIGN.md §5.
+    pub fn default_scale(&self) -> (usize, usize) {
+        match self {
+            RealData::Rcv1 => (16_000, 4_000),
+            RealData::Webspam => (6_000, 1_500),
+            RealData::Dna => (12_000, 3_000),
+            RealData::Kdd => (40_000, 10_000),
+        }
+    }
+
+    /// Paper Fig. 3 fixed compression factors (10, 330, 330, 1100).
+    pub fn fig3_cf(&self) -> f64 {
+        match self {
+            RealData::Rcv1 => 10.0,
+            RealData::Webspam => 330.0,
+            RealData::Dna => 330.0,
+            RealData::Kdd => 1100.0,
+        }
+    }
+
+    /// Step size + top-k defaults per dataset (single-epoch streaming).
+    pub fn train_defaults(&self) -> (f64, usize, usize) {
+        // (eta, top_k, batch)
+        match self {
+            RealData::Rcv1 => (0.01, 400, 32),
+            RealData::Webspam => (0.05, 400, 32),
+            RealData::Dna => (0.5, 200, 32),
+            RealData::Kdd => (0.1, 200, 64),
+        }
+    }
+}
+
+/// One Fig. 2/3/Table 4 cell.
+#[derive(Clone, Debug)]
+pub struct RealRow {
+    pub dataset: RealData,
+    pub algo: AlgoKind,
+    pub compression: f64,
+    /// accuracy, or AUC when `dataset.reports_auc()`.
+    pub metric: f64,
+    pub top_k: usize,
+    pub wall: Duration,
+    pub model_bytes: usize,
+    /// precision@k of the selection vs the planted features (Table 3).
+    pub precision_at_k: f64,
+}
+
+/// Scale knobs for the real-data experiments.
+#[derive(Clone, Debug)]
+pub struct RealSpec {
+    pub n_train: usize,
+    pub n_test: usize,
+    pub sketch_rows: usize,
+    pub tau: usize,
+    pub seed: u64,
+    /// Override the dataset's default step size / top-k / batch.
+    pub eta: Option<f64>,
+    pub top_k: Option<usize>,
+    pub batch: Option<usize>,
+    pub epochs: usize,
+}
+
+impl RealSpec {
+    pub fn for_dataset(d: RealData) -> Self {
+        let (n_train, n_test) = d.default_scale();
+        Self {
+            n_train,
+            n_test,
+            sketch_rows: 5,
+            tau: 5,
+            seed: 0xDA7A,
+            eta: None,
+            top_k: None,
+            batch: None,
+            epochs: 1,
+        }
+    }
+
+    /// Reduced sizes for integration tests.
+    pub fn quick(d: RealData) -> Self {
+        let mut s = Self::for_dataset(d);
+        s.n_train /= 8;
+        s.n_test /= 8;
+        s
+    }
+}
+
+/// Train+evaluate one (dataset, algorithm, CF) cell. `top_k_eval`
+/// restricts inference to the k heaviest features (Fig. 3); None uses the
+/// full model (Fig. 2).
+pub fn real_point(
+    spec: &RealSpec,
+    dataset: RealData,
+    algo: AlgoKind,
+    compression: f64,
+    top_k_eval: Option<usize>,
+) -> RealRow {
+    let (mut eta, mut top_k, mut batch) = dataset.train_defaults();
+    if let Some(e) = spec.eta {
+        eta = e;
+    }
+    if let Some(k) = spec.top_k {
+        top_k = k;
+    }
+    if let Some(b) = spec.batch {
+        batch = b;
+    }
+    let classes = dataset.num_classes();
+    let p = dataset.dim();
+    // CF counts the total sketch memory across classes (Sec. 7)
+    let total_cells = ((p as f64 / compression).round() as usize).max(classes * 8);
+    // CF counts the *total* sketch memory: binary tasks use one sketch with
+    // the full budget; the 15-class DNA task splits it across classes
+    let per_class_cells = if classes == 2 { total_cells } else { (total_cells / classes).max(8) };
+    let (mut train, mut test) = dataset.make(spec.n_train, spec.n_test, spec.seed);
+    let planted = dataset.planted_ids(spec.seed);
+    let start = std::time::Instant::now();
+
+    let cfg = BearConfig {
+        sketch_cells: per_class_cells,
+        sketch_rows: spec.sketch_rows,
+        top_k,
+        tau: spec.tau,
+        step: StepSize::Constant(eta),
+        loss: LossKind::Logistic,
+        seed: spec.seed ^ 0xC0DE,
+        ..Default::default()
+    };
+
+    let mut trainer = Trainer::single_epoch(batch);
+    trainer.epochs = spec.epochs;
+
+    let (metric, model_bytes, selection): (f64, usize, Vec<(u64, f32)>) = if classes == 2 {
+        let mut sel: Box<dyn FeatureSelector> = match algo {
+            AlgoKind::Bear => Box::new(Bear::new(p, cfg.clone())),
+            AlgoKind::Mission => Box::new(Mission::new(MissionConfig::from(&cfg))),
+            AlgoKind::Newton => Box::new(NewtonSketch::new(NewtonSketchConfig::from(&cfg))),
+            AlgoKind::FeatureHashing => Box::new(crate::algo::feature_hashing::FeatureHashing::new(
+                crate::algo::feature_hashing::FhConfig {
+                    dim: total_cells,
+                    step: StepSize::Constant(eta),
+                    loss: LossKind::Logistic,
+                    seed: cfg.seed,
+                },
+            )),
+            AlgoKind::DenseSgd => Box::new(crate::algo::dense::DenseSgd::new(
+                crate::algo::dense::DenseConfig {
+                    dim: p as usize,
+                    step: StepSize::Constant(eta),
+                    loss: LossKind::Logistic,
+                    tau: 0,
+                },
+            )),
+            AlgoKind::DenseOlbfgs => Box::new(crate::algo::dense::DenseOlbfgs::new(
+                crate::algo::dense::DenseConfig {
+                    dim: p as usize,
+                    step: StepSize::Constant(eta),
+                    loss: LossKind::Logistic,
+                    tau: spec.tau,
+                },
+            )),
+        };
+        trainer.run(sel.as_mut(), train.as_mut());
+        let eval = match top_k_eval {
+            Some(k) => evaluate_binary_topk(sel.as_ref(), test.as_mut(), k),
+            None => evaluate_binary(sel.as_ref(), test.as_mut()),
+        };
+        let metric = if dataset.reports_auc() { eval.auc } else { eval.accuracy };
+        (metric, sel.memory_report().model_bytes, sel.top_features())
+    } else {
+        // multi-class: one sketch per class (only the sketched algorithms
+        // and FH run here — dense baselines don't fit the paper's Fig. 2
+        // DNA panel either)
+        match algo {
+            AlgoKind::Bear => {
+                let mut mc = MultiClass::new(classes, |c| {
+                    let mut cc = cfg.clone();
+                    cc.seed = cfg.seed + c as u64;
+                    Bear::new(p, cc)
+                });
+                mc.fit_source(train.as_mut(), batch, spec.epochs);
+                let acc = crate::coordinator::trainer::evaluate_multiclass(&mc, test.as_mut(), top_k_eval);
+                let sel = mc.top_features_per_class().into_iter().map(|(_, f, w)| (f, w)).collect();
+                (acc, mc.memory_report().model_bytes, sel)
+            }
+            AlgoKind::Mission => {
+                let mut mc = MultiClass::new(classes, |c| {
+                    let mut cc = cfg.clone();
+                    cc.seed = cfg.seed + c as u64;
+                    Mission::new(MissionConfig::from(&cc))
+                });
+                mc.fit_source(train.as_mut(), batch, spec.epochs);
+                let acc = crate::coordinator::trainer::evaluate_multiclass(&mc, test.as_mut(), top_k_eval);
+                let sel = mc.top_features_per_class().into_iter().map(|(_, f, w)| (f, w)).collect();
+                (acc, mc.memory_report().model_bytes, sel)
+            }
+            AlgoKind::FeatureHashing => {
+                let mut mc = MultiClass::new(classes, |c| {
+                    crate::algo::feature_hashing::FeatureHashing::new(
+                        crate::algo::feature_hashing::FhConfig {
+                            dim: per_class_cells,
+                            step: StepSize::Constant(eta),
+                            loss: LossKind::Logistic,
+                            seed: cfg.seed + c as u64,
+                        },
+                    )
+                });
+                mc.fit_source(train.as_mut(), batch, spec.epochs);
+                let acc = crate::coordinator::trainer::evaluate_multiclass(&mc, test.as_mut(), None);
+                (acc, mc.memory_report().model_bytes, Vec::new())
+            }
+            other => panic!("{other:?} not supported on the multi-class panel"),
+        }
+    };
+
+    let mut sorted = selection;
+    sorted.sort_by(|a, b| b.1.abs().partial_cmp(&a.1.abs()).unwrap());
+    let prec = metrics::precision_at_k(&sorted, &planted, top_k.min(sorted.len().max(1)));
+
+    RealRow {
+        dataset,
+        algo,
+        compression,
+        metric,
+        top_k: top_k_eval.unwrap_or(top_k),
+        wall: start.elapsed(),
+        model_bytes,
+        precision_at_k: prec,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig1_point_bear_beats_mission_at_high_compression() {
+        // miniature version of Fig. 1A: p=300, CF=3
+        let spec = SimulationSpec {
+            p: 300,
+            k: 4,
+            n: 300,
+            trials: 6,
+            batch: 25,
+            max_iters: 1200,
+            eta_grid: vec![0.1],
+            ..Default::default()
+        };
+        let bear = fig1_point(&spec, AlgoKind::Bear, 3.0);
+        let mission = fig1_point(&spec, AlgoKind::Mission, 3.0);
+        assert!(
+            bear.p_success >= mission.p_success,
+            "BEAR {} < MISSION {}",
+            bear.p_success,
+            mission.p_success
+        );
+        assert!(bear.p_success > 0.0, "BEAR never succeeds at CF=3");
+    }
+
+    #[test]
+    fn real_point_rcv1_quick_runs() {
+        let spec = RealSpec::quick(RealData::Rcv1);
+        let row = real_point(&spec, RealData::Rcv1, AlgoKind::Bear, 10.0, None);
+        assert!(row.metric > 0.5, "BEAR on rcv1-sim: {}", row.metric);
+        assert!(row.model_bytes > 0);
+    }
+
+    #[test]
+    fn dataset_catalog_consistency() {
+        for d in RealData::all() {
+            assert!(d.dim() > 0);
+            assert!(!d.planted_ids(1).is_empty());
+            let (tr, te) = d.default_scale();
+            assert!(tr > te);
+        }
+        assert!(RealData::Kdd.reports_auc());
+        assert!(!RealData::Rcv1.reports_auc());
+        assert_eq!(RealData::Dna.num_classes(), 15);
+    }
+}

@@ -1,0 +1,9 @@
+//! L3 coordinator: the streaming trainer, evaluation drivers, experiment
+//! runners for every figure/table in the paper, and report formatting.
+
+pub mod checkpoint;
+pub mod experiments;
+pub mod report;
+pub mod trainer;
+
+pub use trainer::{EvalSummary, TrainLog, Trainer};

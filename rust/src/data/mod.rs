@@ -1,0 +1,227 @@
+//! Data layer: examples, minibatches, the Vowpal Wabbit wire format the
+//! paper uses, synthetic surrogate generators for its four real-world
+//! datasets (DESIGN.md §5), and a streaming minibatch loader with
+//! backpressure.
+
+pub mod file_source;
+pub mod stream;
+pub mod synth;
+pub mod vw;
+
+use crate::sparse::{ActiveSet, SparseVec};
+
+/// One labelled data point. `label` is a class index for classification
+/// (0/1 binary; 0..C-1 multi-class) or a real target for the regression
+/// simulations.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Example {
+    pub features: SparseVec,
+    pub label: f32,
+}
+
+impl Example {
+    pub fn new(features: SparseVec, label: f32) -> Self {
+        Self { features, label }
+    }
+}
+
+/// A minibatch `Θ_t` of b examples.
+#[derive(Clone, Debug, Default)]
+pub struct Minibatch {
+    pub examples: Vec<Example>,
+}
+
+impl Minibatch {
+    pub fn len(&self) -> usize {
+        self.examples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.examples.is_empty()
+    }
+
+    /// The active set `A_t` — union of the features present (Alg. 2 step 2).
+    pub fn active_set(&self) -> ActiveSet {
+        ActiveSet::from_rows(self.examples.iter().map(|e| &e.features))
+    }
+
+    pub fn labels(&self) -> Vec<f32> {
+        self.examples.iter().map(|e| e.label).collect()
+    }
+
+    pub fn rows(&self) -> Vec<&SparseVec> {
+        self.examples.iter().map(|e| &e.features).collect()
+    }
+
+    /// Total nonzeros (drives generation/training cost accounting).
+    pub fn nnz(&self) -> usize {
+        self.examples.iter().map(|e| e.features.nnz()).sum()
+    }
+}
+
+/// A resettable stream of examples — every dataset (synthetic or parsed)
+/// implements this; the trainer only ever consumes the stream, matching the
+/// paper's single-epoch streaming setup.
+pub trait DataSource: Send {
+    /// Feature-space dimension p.
+    fn dim(&self) -> u64;
+    /// Number of classes (1 ⇒ regression).
+    fn num_classes(&self) -> usize;
+    /// Examples per epoch.
+    fn len(&self) -> usize;
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    /// Next example, or None at end of epoch.
+    fn next_example(&mut self) -> Option<Example>;
+    /// Rewind to the start of the epoch (re-seeding generators so the same
+    /// stream replays deterministically).
+    fn reset(&mut self);
+
+    /// Draw the next `b` examples as a minibatch (short at epoch end).
+    fn next_minibatch(&mut self, b: usize) -> Option<Minibatch> {
+        let mut examples = Vec::with_capacity(b);
+        for _ in 0..b {
+            match self.next_example() {
+                Some(e) => examples.push(e),
+                None => break,
+            }
+        }
+        if examples.is_empty() {
+            None
+        } else {
+            Some(Minibatch { examples })
+        }
+    }
+
+    /// Materialize the whole epoch (tests / small baselines only).
+    fn collect_all(&mut self) -> Vec<Example> {
+        self.reset();
+        let mut out = Vec::with_capacity(self.len());
+        while let Some(e) = self.next_example() {
+            out.push(e);
+        }
+        out
+    }
+}
+
+/// An in-memory dataset, usable as a `DataSource` and for random access
+/// (dense baselines need multiple passes).
+pub struct InMemory {
+    pub examples: Vec<Example>,
+    pub dim: u64,
+    pub num_classes: usize,
+    cursor: usize,
+}
+
+impl InMemory {
+    pub fn new(examples: Vec<Example>, dim: u64, num_classes: usize) -> Self {
+        Self { examples, dim, num_classes, cursor: 0 }
+    }
+}
+
+impl DataSource for InMemory {
+    fn dim(&self) -> u64 {
+        self.dim
+    }
+    fn num_classes(&self) -> usize {
+        self.num_classes
+    }
+    fn len(&self) -> usize {
+        self.examples.len()
+    }
+    fn next_example(&mut self) -> Option<Example> {
+        let e = self.examples.get(self.cursor).cloned();
+        if e.is_some() {
+            self.cursor += 1;
+        }
+        e
+    }
+    fn reset(&mut self) {
+        self.cursor = 0;
+    }
+}
+
+/// Table 2-style dataset summary, measured from the realized stream.
+#[derive(Clone, Debug, Default)]
+pub struct DatasetStats {
+    pub dim: u64,
+    pub n_train: usize,
+    pub n_test: usize,
+    pub avg_active: f64,
+    pub class_counts: Vec<usize>,
+}
+
+impl DatasetStats {
+    pub fn measure(train: &mut dyn DataSource, test: &mut dyn DataSource) -> Self {
+        let mut stats = DatasetStats {
+            dim: train.dim(),
+            n_train: train.len(),
+            n_test: test.len(),
+            ..Default::default()
+        };
+        stats.class_counts = vec![0; train.num_classes().max(1)];
+        let mut nnz = 0usize;
+        let mut n = 0usize;
+        train.reset();
+        while let Some(e) = train.next_example() {
+            nnz += e.features.nnz();
+            n += 1;
+            let c = e.label as usize;
+            if c < stats.class_counts.len() {
+                stats.class_counts[c] += 1;
+            }
+        }
+        train.reset();
+        stats.avg_active = nnz as f64 / n.max(1) as f64;
+        stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ex(pairs: &[(u64, f32)], label: f32) -> Example {
+        Example::new(SparseVec::from_pairs(pairs.to_vec()), label)
+    }
+
+    #[test]
+    fn minibatch_active_set_and_labels() {
+        let mb = Minibatch {
+            examples: vec![ex(&[(1, 1.0), (5, 2.0)], 0.0), ex(&[(5, 1.0), (9, 1.0)], 1.0)],
+        };
+        assert_eq!(mb.active_set().features(), &[1, 5, 9]);
+        assert_eq!(mb.labels(), vec![0.0, 1.0]);
+        assert_eq!(mb.nnz(), 4);
+    }
+
+    #[test]
+    fn in_memory_source_streams_and_resets() {
+        let mut src = InMemory::new(vec![ex(&[(1, 1.0)], 0.0), ex(&[(2, 1.0)], 1.0)], 10, 2);
+        assert_eq!(src.len(), 2);
+        let b = src.next_minibatch(8).unwrap();
+        assert_eq!(b.len(), 2);
+        assert!(src.next_minibatch(8).is_none());
+        src.reset();
+        assert_eq!(src.next_example().unwrap().label, 0.0);
+    }
+
+    #[test]
+    fn stats_measure() {
+        let mut train = InMemory::new(
+            vec![ex(&[(1, 1.0), (2, 1.0)], 0.0), ex(&[(3, 1.0)], 1.0)],
+            100,
+            2,
+        );
+        let mut test = InMemory::new(vec![ex(&[(1, 1.0)], 0.0)], 100, 2);
+        let s = DatasetStats::measure(&mut train, &mut test);
+        assert_eq!(s.dim, 100);
+        assert_eq!(s.n_train, 2);
+        assert_eq!(s.n_test, 1);
+        assert!((s.avg_active - 1.5).abs() < 1e-9);
+        assert_eq!(s.class_counts, vec![1, 1]);
+        // measure() must leave the stream rewound
+        assert_eq!(train.next_example().unwrap().label, 0.0);
+    }
+}

@@ -1,0 +1,146 @@
+//! Streaming minibatch loader: a producer thread draws minibatches from a
+//! [`DataSource`] into a bounded channel, giving the trainer prefetch
+//! overlap and natural backpressure (the producer blocks when the trainer
+//! falls behind — nothing is ever buffered beyond `capacity` batches).
+//!
+//! This is the std-thread equivalent of the tokio pipeline the session
+//! architecture sketches (tokio is not in the offline vendor set).
+
+use crate::data::{DataSource, Minibatch};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Handle to a background minibatch producer.
+pub struct StreamLoader {
+    rx: Receiver<Minibatch>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl StreamLoader {
+    /// Spawn a producer over `source` emitting `batch_size`-row batches
+    /// for `epochs` passes, with at most `capacity` batches in flight.
+    pub fn spawn(
+        mut source: Box<dyn DataSource>,
+        batch_size: usize,
+        capacity: usize,
+        epochs: usize,
+    ) -> Self {
+        assert!(batch_size > 0 && capacity > 0 && epochs > 0);
+        let (tx, rx): (SyncSender<Minibatch>, Receiver<Minibatch>) = sync_channel(capacity);
+        let handle = std::thread::Builder::new()
+            .name("bear-loader".into())
+            .spawn(move || {
+                for _ in 0..epochs {
+                    source.reset();
+                    while let Some(b) = source.next_minibatch(batch_size) {
+                        // send blocks when the channel is full: backpressure
+                        if tx.send(b).is_err() {
+                            return; // consumer dropped early
+                        }
+                    }
+                }
+            })
+            .expect("spawn loader thread");
+        Self { rx, handle: Some(handle) }
+    }
+
+    /// Next prefetched minibatch (None at end of stream).
+    pub fn next(&mut self) -> Option<Minibatch> {
+        self.rx.recv().ok()
+    }
+
+    /// Non-blocking variant with a timeout; Err(timeout) means the
+    /// producer is alive but slow.
+    pub fn next_timeout(&mut self, d: Duration) -> Result<Option<Minibatch>, ()> {
+        match self.rx.recv_timeout(d) {
+            Ok(b) => Ok(Some(b)),
+            Err(RecvTimeoutError::Disconnected) => Ok(None),
+            Err(RecvTimeoutError::Timeout) => Err(()),
+        }
+    }
+}
+
+impl Iterator for StreamLoader {
+    type Item = Minibatch;
+    fn next(&mut self) -> Option<Minibatch> {
+        StreamLoader::next(self)
+    }
+}
+
+impl Drop for StreamLoader {
+    fn drop(&mut self) {
+        // closing rx unblocks the producer's send; then join
+        // (drain first so a blocked producer sees the disconnect)
+        while self.rx.try_recv().is_ok() {}
+        drop(std::mem::replace(&mut self.rx, {
+            let (_tx, rx) = sync_channel(1);
+            rx
+        }));
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{Example, InMemory};
+    use crate::sparse::SparseVec;
+
+    fn toy_source(n: usize) -> Box<dyn DataSource> {
+        let examples = (0..n)
+            .map(|i| {
+                Example::new(SparseVec::from_pairs(vec![(i as u64, 1.0)]), (i % 2) as f32)
+            })
+            .collect();
+        Box::new(InMemory::new(examples, n as u64, 2))
+    }
+
+    #[test]
+    fn delivers_whole_epoch_in_order() {
+        let mut loader = StreamLoader::spawn(toy_source(10), 3, 2, 1);
+        let mut seen = Vec::new();
+        while let Some(b) = loader.next() {
+            assert!(b.len() <= 3);
+            for e in &b.examples {
+                seen.push(e.features.idx[0]);
+            }
+        }
+        assert_eq!(seen, (0..10u64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn multiple_epochs_replay() {
+        let loader = StreamLoader::spawn(toy_source(4), 2, 2, 3);
+        let batches: Vec<_> = loader.collect();
+        assert_eq!(batches.len(), 6); // 2 batches × 3 epochs
+    }
+
+    #[test]
+    fn backpressure_bounds_inflight() {
+        // capacity 1: producer cannot run ahead more than 1 batch + 1 in
+        // its hand; consuming slowly must still deliver everything.
+        let mut loader = StreamLoader::spawn(toy_source(64), 1, 1, 1);
+        std::thread::sleep(Duration::from_millis(20));
+        let mut n = 0;
+        while let Some(_) = loader.next() {
+            n += 1;
+        }
+        assert_eq!(n, 64);
+    }
+
+    #[test]
+    fn early_drop_shuts_down_producer() {
+        let loader = StreamLoader::spawn(toy_source(100_000), 1, 2, 1);
+        drop(loader); // must not hang
+    }
+
+    #[test]
+    fn timeout_variant_reports_end() {
+        let mut loader = StreamLoader::spawn(toy_source(2), 2, 2, 1);
+        assert!(matches!(loader.next_timeout(Duration::from_secs(5)), Ok(Some(_))));
+        assert!(matches!(loader.next_timeout(Duration::from_secs(5)), Ok(None)));
+    }
+}

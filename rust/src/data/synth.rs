@@ -1,0 +1,610 @@
+//! Synthetic workloads: the controlled Gaussian sparse-recovery simulation
+//! of Sec. 6, and surrogate generators for the paper's four real-world
+//! datasets (Table 2). Every generator streams examples from a seed — the
+//! 54M-dimensional KDD surrogate is never materialized, mirroring the
+//! paper's streaming setting.
+//!
+//! Substitution rationale per dataset is in DESIGN.md §5: the surrogates
+//! match the statistics that drive sketch-collision behaviour — dimension
+//! p, active features per point, number/weight of heavy-hitter features,
+//! and class balance — and plant ground-truth informative features so that
+//! feature-selection quality is *measurable* (our substitute for the
+//! qualitative Table 3).
+
+use crate::data::{DataSource, Example, InMemory};
+use crate::sparse::SparseVec;
+use crate::util::math::sigmoid;
+use crate::util::rng::{Pcg64, Zipf};
+
+// ---------------------------------------------------------------------------
+// Sec. 6 simulations: y = x·β*, x ~ N(0, I), β* k-sparse
+// ---------------------------------------------------------------------------
+
+/// Gaussian linear sparse-recovery simulation (Sec. 6): dense rows
+/// `x ~ N(0,1)^p`, `y = x·β*` with a k-sparse `β*` whose support is uniform
+/// and whose nonzero weights are uniform in [0.8, 1.2].
+pub struct GaussianLinear {
+    pub p: usize,
+    pub k: usize,
+    rng: Pcg64,
+}
+
+impl GaussianLinear {
+    pub fn new(p: usize, k: usize, seed: u64) -> Self {
+        Self { p, k, rng: Pcg64::new(seed) }
+    }
+
+    /// Draw a fresh ground-truth β* (one per trial in Fig. 1).
+    pub fn ground_truth(&mut self) -> SparseVec {
+        let support = self.rng.sample_distinct(self.p as u64, self.k);
+        let pairs = support
+            .into_iter()
+            .map(|i| (i, self.rng.range_f64(0.8, 1.2) as f32))
+            .collect();
+        SparseVec::from_pairs(pairs)
+    }
+
+    /// Generate an n-row dataset for a given β*. Rows are dense (every
+    /// feature active) — exactly the regime where sketching must carry all
+    /// the memory savings.
+    pub fn dataset(&mut self, n: usize) -> (InMemory, SparseVec) {
+        let truth = self.ground_truth();
+        let examples = (0..n).map(|_| self.example(&truth)).collect();
+        (InMemory::new(examples, self.p as u64, 1), truth)
+    }
+
+    pub fn example(&mut self, truth: &SparseVec) -> Example {
+        let x: Vec<f32> = (0..self.p).map(|_| self.rng.gaussian() as f32).collect();
+        let y: f64 = truth.idx.iter().zip(&truth.val).map(|(&i, &w)| w as f64 * x[i as usize] as f64).sum();
+        let pairs = x.into_iter().enumerate().map(|(i, v)| (i as u64, v)).collect();
+        Example::new(SparseVec::from_pairs(pairs), y as f32)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shared machinery for the real-data surrogates
+// ---------------------------------------------------------------------------
+
+/// A planted sparse linear teacher: informative features with fixed signed
+/// weights; labels drawn from the induced logistic model. Ground truth for
+/// precision@k (our measurable Table 3 substitute).
+#[derive(Clone, Debug)]
+pub struct PlantedModel {
+    pub weights: SparseVec,
+    pub bias: f64,
+}
+
+impl PlantedModel {
+    /// `n_informative` features at the given ids with weights alternating
+    /// in sign, |w| ~ U[w_lo, w_hi].
+    pub fn new(ids: Vec<u64>, w_lo: f64, w_hi: f64, bias: f64, rng: &mut Pcg64) -> Self {
+        let pairs = ids
+            .into_iter()
+            .enumerate()
+            .map(|(j, i)| {
+                let mag = rng.range_f64(w_lo, w_hi);
+                let sign = if j % 2 == 0 { 1.0 } else { -1.0 };
+                (i, (sign * mag) as f32)
+            })
+            .collect();
+        Self { weights: SparseVec::from_pairs(pairs), bias }
+    }
+
+    /// Bernoulli label under the logistic teacher.
+    pub fn label(&self, x: &SparseVec, rng: &mut Pcg64) -> f32 {
+        let logit = self.bias + self.weights.dot(x);
+        if rng.next_f64() < sigmoid(logit) {
+            1.0
+        } else {
+            0.0
+        }
+    }
+
+    pub fn informative_ids(&self) -> &[u64] {
+        &self.weights.idx
+    }
+}
+
+/// Epoch bookkeeping shared by the streaming surrogates: deterministic
+/// replay via per-epoch RNG reseeding.
+#[derive(Clone, Debug)]
+struct EpochState {
+    seed: u64,
+    n: usize,
+    emitted: usize,
+    rng: Pcg64,
+}
+
+impl EpochState {
+    fn new(seed: u64, n: usize) -> Self {
+        Self { seed, n, emitted: 0, rng: Pcg64::new(seed) }
+    }
+    fn reset(&mut self) {
+        self.rng = Pcg64::new(self.seed);
+        self.emitted = 0;
+    }
+    fn take(&mut self) -> Option<&mut Pcg64> {
+        if self.emitted >= self.n {
+            None
+        } else {
+            self.emitted += 1;
+            Some(&mut self.rng)
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// RCV1 surrogate: Zipfian bag-of-words, 2 balanced classes
+// ---------------------------------------------------------------------------
+
+/// RCV1-like text surrogate: p = 47,236 token features, ~73 active per
+/// document with Zipf(1.1) frequencies, 2 balanced classes driven by 60
+/// planted informative tokens. A fraction `inf_mix` of each document's
+/// tokens is drawn from the informative pool (topical words recur within
+/// a document's subject), which gives the teacher the high mutual
+/// information real news topics have.
+pub struct Rcv1Sim {
+    pub model: PlantedModel,
+    zipf: Zipf,
+    state: EpochState,
+    p: u64,
+    avg_active: usize,
+    inf_mix: f64,
+}
+
+pub const RCV1_DIM: u64 = 47_236;
+
+impl Rcv1Sim {
+    pub fn new(n: usize, seed: u64) -> Self {
+        Self::with_params(RCV1_DIM, 73, 60, n, seed)
+    }
+
+    /// Re-seed the epoch stream while keeping the planted teacher — used
+    /// to build a test split that shares structure with the training split.
+    pub fn with_stream_seed(mut self, seed: u64) -> Self {
+        self.state = EpochState::new(seed, self.state.n);
+        self
+    }
+
+    pub fn with_params(p: u64, avg_active: usize, n_informative: usize, n: usize, seed: u64) -> Self {
+        let mut rng = Pcg64::new(seed ^ 0x5eed_0001);
+        // Plant informative tokens at Zipf ranks 50..50+10*n_informative
+        // (medium frequency: common enough to be observed, rare enough to
+        // be discriminative — like "shareholder"/"entrepreneur" in RCV1).
+        let ids: Vec<u64> = (0..n_informative as u64).map(|j| 50 + 10 * j).collect();
+        let model = PlantedModel::new(ids, 1.4, 2.2, 0.0, &mut rng);
+        Self {
+            model,
+            zipf: Zipf::new(p as usize, 1.1),
+            state: EpochState::new(seed, n),
+            p,
+            avg_active,
+            inf_mix: 0.15,
+        }
+    }
+}
+
+impl DataSource for Rcv1Sim {
+    fn dim(&self) -> u64 {
+        self.p
+    }
+    fn num_classes(&self) -> usize {
+        2
+    }
+    fn len(&self) -> usize {
+        self.state.n
+    }
+    fn reset(&mut self) {
+        self.state.reset();
+    }
+    fn next_example(&mut self) -> Option<Example> {
+        let zipf = &self.zipf;
+        let avg = self.avg_active;
+        let model = &self.model;
+        let inf_mix = self.inf_mix;
+        let rng = self.state.take()?;
+        // document length ~ avg ± 30%
+        let len = ((avg as f64) * rng.range_f64(0.7, 1.3)).round() as usize;
+        let informative = model.informative_ids();
+        let mut pairs = Vec::with_capacity(len);
+        for _ in 0..len {
+            let tok = if rng.next_f64() < inf_mix {
+                informative[rng.below(informative.len() as u64) as usize]
+            } else {
+                zipf.sample(rng) as u64
+            };
+            pairs.push((tok, 1.0)); // term counts; duplicates merge below
+        }
+        let x = SparseVec::from_pairs(pairs);
+        let y = model.label(&x, rng);
+        Some(Example::new(x, y))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Webspam surrogate: ultra-high-p n-gram rows, 60/40 imbalance
+// ---------------------------------------------------------------------------
+
+/// Webspam-like surrogate: p = 16,609,143 hashed n-gram features spread
+/// ~uniformly (hashing destroys frequency structure), dense-ish rows,
+/// 60/40 class imbalance, 200 planted features.
+pub struct WebspamSim {
+    pub model: PlantedModel,
+    state: EpochState,
+    p: u64,
+    avg_active: usize,
+    /// probability an informative feature appears in a row
+    inf_rate: f64,
+}
+
+pub const WEBSPAM_DIM: u64 = 16_609_143;
+
+impl WebspamSim {
+    pub fn new(n: usize, seed: u64) -> Self {
+        // paper rows carry 3730 active features; we scale with n to keep
+        // nnz laptop-sized (DESIGN.md §5) — callers can override.
+        Self::with_params(WEBSPAM_DIM, 1200, 200, n, seed)
+    }
+
+    /// See [`Rcv1Sim::with_stream_seed`].
+    pub fn with_stream_seed(mut self, seed: u64) -> Self {
+        self.state = EpochState::new(seed, self.state.n);
+        self
+    }
+
+    pub fn with_params(p: u64, avg_active: usize, n_informative: usize, n: usize, seed: u64) -> Self {
+        let mut rng = Pcg64::new(seed ^ 0x5eed_0002);
+        let ids = rng.sample_distinct(p, n_informative);
+        // bias 0.55 ⇒ ~60/40 split under the teacher with informative hits
+        let model = PlantedModel::new(ids, 0.8, 1.6, 0.55, &mut rng);
+        Self { model, state: EpochState::new(seed, n), p, avg_active, inf_rate: 0.35 }
+    }
+}
+
+impl DataSource for WebspamSim {
+    fn dim(&self) -> u64 {
+        self.p
+    }
+    fn num_classes(&self) -> usize {
+        2
+    }
+    fn len(&self) -> usize {
+        self.state.n
+    }
+    fn reset(&mut self) {
+        self.state.reset();
+    }
+    fn next_example(&mut self) -> Option<Example> {
+        let p = self.p;
+        let avg = self.avg_active;
+        let inf_rate = self.inf_rate;
+        let model = &self.model;
+        let rng = self.state.take()?;
+        let len = ((avg as f64) * rng.range_f64(0.8, 1.2)).round() as usize;
+        let mut pairs: Vec<(u64, f32)> = Vec::with_capacity(len + 32);
+        // background n-grams: uniform over p, unit tf
+        for _ in 0..len {
+            pairs.push((rng.below(p), 1.0));
+        }
+        // informative features fire independently per row
+        for &f in model.informative_ids() {
+            if rng.next_f64() < inf_rate {
+                pairs.push((f, 1.0));
+            }
+        }
+        let x = SparseVec::from_pairs(pairs);
+        let y = model.label(&x, rng);
+        Some(Example::new(x, y))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// DNA metagenomics surrogate: 15 classes over a 4^12 k-mer space
+// ---------------------------------------------------------------------------
+
+/// Metagenomics surrogate: reads of ~100 12-mers (p = 4^12 = 16,777,216)
+/// drawn from one of 15 synthetic "genomes". Each genome is a multinomial
+/// over the k-mer space: a shared background plus a class-specific enriched
+/// k-mer set — so class-discriminative k-mers exist and can be selected.
+pub struct DnaSim {
+    state: EpochState,
+    p: u64,
+    classes: usize,
+    read_len: usize,
+    /// class-specific enriched k-mers (the recoverable ground truth)
+    pub class_kmers: Vec<Vec<u64>>,
+    /// shared background k-mer pool (genome overlap)
+    background: Vec<u64>,
+    /// probability a drawn k-mer comes from the class-specific set
+    enrich: f64,
+}
+
+pub const DNA_DIM: u64 = 16_777_216; // 4^12
+
+impl DnaSim {
+    pub fn new(n: usize, seed: u64) -> Self {
+        Self::with_params(DNA_DIM, 15, 100, 300, 4000, n, seed)
+    }
+
+    pub fn with_params(
+        p: u64,
+        classes: usize,
+        read_len: usize,
+        kmers_per_class: usize,
+        background_pool: usize,
+        n: usize,
+        seed: u64,
+    ) -> Self {
+        let mut rng = Pcg64::new(seed ^ 0x5eed_0003);
+        let class_kmers =
+            (0..classes).map(|_| rng.sample_distinct(p, kmers_per_class)).collect();
+        let background = rng.sample_distinct(p, background_pool);
+        Self { state: EpochState::new(seed, n), p, classes, read_len, class_kmers, background, enrich: 0.5 }
+    }
+
+    /// Re-seed the epoch stream while keeping the class genomes — used to
+    /// build a test split that shares structure with the training split.
+    pub fn reskew_stream(&mut self, seed: u64) {
+        self.state = EpochState::new(seed, self.state.n);
+    }
+}
+
+impl DataSource for DnaSim {
+    fn dim(&self) -> u64 {
+        self.p
+    }
+    fn num_classes(&self) -> usize {
+        self.classes
+    }
+    fn len(&self) -> usize {
+        self.state.n
+    }
+    fn reset(&mut self) {
+        self.state.reset();
+    }
+    fn next_example(&mut self) -> Option<Example> {
+        let classes = self.classes as u64;
+        let read_len = self.read_len;
+        let enrich = self.enrich;
+        let rng = self.state.take()?;
+        let class = rng.below(classes) as usize;
+        let own = &self.class_kmers[class];
+        let bg = &self.background;
+        let mut pairs: Vec<(u64, f32)> = Vec::with_capacity(read_len);
+        for _ in 0..read_len {
+            let kmer = if rng.next_f64() < enrich {
+                own[rng.below(own.len() as u64) as usize]
+            } else {
+                bg[rng.below(bg.len() as u64) as usize]
+            };
+            pairs.push((kmer, 1.0)); // k-mer counts merge on duplicates
+        }
+        Some(Example::new(SparseVec::from_pairs(pairs), class as f32))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// KDD 2012 CTR surrogate: 12 categorical fields, 96/4 imbalance
+// ---------------------------------------------------------------------------
+
+/// Click-through-rate surrogate: every impression has exactly 12 active
+/// one-hot features (ad id, advertiser, query token, user id, ...), a
+/// handful of field values carry real signal, and clicks are rare
+/// (~4% positive — paper: 96% from the majority class; AUC is the metric).
+pub struct KddSim {
+    pub model: PlantedModel,
+    state: EpochState,
+    p: u64,
+    fields: Vec<(u64, u64)>, // (offset, cardinality) per field
+    /// per-field Zipf skew (ad/user popularity is heavy-tailed)
+    zipfs: Vec<Zipf>,
+}
+
+pub const KDD_DIM: u64 = 54_686_452;
+
+impl KddSim {
+    pub fn new(n: usize, seed: u64) -> Self {
+        Self::with_params(KDD_DIM, 12, 40, n, seed)
+    }
+
+    /// See [`Rcv1Sim::with_stream_seed`].
+    pub fn with_stream_seed(mut self, seed: u64) -> Self {
+        self.state = EpochState::new(seed, self.state.n);
+        self
+    }
+
+    pub fn with_params(p: u64, n_fields: usize, n_informative: usize, n: usize, seed: u64) -> Self {
+        let mut rng = Pcg64::new(seed ^ 0x5eed_0004);
+        // carve p into fields of exponentially growing cardinality
+        // (campaign ids are few, user ids are many), normalized to sum p.
+        let mut raw: Vec<f64> = (0..n_fields).map(|f| 1.75f64.powi(f as i32)).collect();
+        let total: f64 = raw.iter().sum();
+        for r in raw.iter_mut() {
+            *r /= total;
+        }
+        let mut fields = Vec::with_capacity(n_fields);
+        let mut off = 0u64;
+        for (f, r) in raw.iter().enumerate() {
+            let card = ((p as f64 * r) as u64).max(8);
+            let card = if f == n_fields - 1 { p - off } else { card.min(p - off - 1) };
+            fields.push((off, card));
+            off += card;
+        }
+        // plant informative values at *popular* Zipf ranks spread across
+        // the head fields, so they recur often enough to be learnable
+        // (campaign/ad ids with strong CTR signal are popular ones)
+        let head_fields = (n_fields / 2).max(1);
+        let mut ids = Vec::with_capacity(n_informative);
+        for j in 0..n_informative {
+            let (foff, fcard) = fields[j % head_fields];
+            let rank = (j / head_fields) as u64 * 3; // ranks 0,3,6,...
+            ids.push(foff + rank % fcard.min(64));
+        }
+        ids.sort_unstable();
+        ids.dedup();
+        // bias ≈ -3.3 ⇒ ~4% positives under the teacher
+        let model = PlantedModel::new(ids, 0.9, 1.8, -3.3, &mut rng);
+        // Zipf over min(cardinality, table cap) ranks per field
+        let zipfs = fields
+            .iter()
+            .map(|&(_, card)| Zipf::new(card.min(4096) as usize, 1.05))
+            .collect();
+        Self { model, state: EpochState::new(seed, n), p, fields, zipfs }
+    }
+}
+
+impl DataSource for KddSim {
+    fn dim(&self) -> u64 {
+        self.p
+    }
+    fn num_classes(&self) -> usize {
+        2
+    }
+    fn len(&self) -> usize {
+        self.state.n
+    }
+    fn reset(&mut self) {
+        self.state.reset();
+    }
+    fn next_example(&mut self) -> Option<Example> {
+        let fields = &self.fields;
+        let zipfs = &self.zipfs;
+        let model = &self.model;
+        let rng = self.state.take()?;
+        let mut pairs = Vec::with_capacity(fields.len());
+        for (f, &(off, card)) in fields.iter().enumerate() {
+            // head ranks are Zipf-popular; tail ids spread uniformly
+            let v = if rng.next_f64() < 0.8 {
+                zipfs[f].sample(rng) as u64 % card
+            } else {
+                rng.below(card)
+            };
+            pairs.push((off + v, 1.0));
+        }
+        let x = SparseVec::from_pairs(pairs);
+        let y = model.label(&x, rng);
+        Some(Example::new(x, y))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DatasetStats;
+
+    #[test]
+    fn gaussian_linear_labels_match_teacher() {
+        let mut g = GaussianLinear::new(50, 4, 1);
+        let (mut data, truth) = g.dataset(20);
+        assert_eq!(truth.nnz(), 4);
+        assert!(truth.val.iter().all(|&w| (0.8..=1.2).contains(&w)));
+        for e in data.collect_all() {
+            let pred: f64 = truth.dot(&e.features);
+            assert!((pred - e.label as f64).abs() < 1e-4);
+            assert_eq!(e.features.nnz(), 50); // dense rows
+        }
+    }
+
+    #[test]
+    fn gaussian_trials_differ() {
+        let mut g = GaussianLinear::new(30, 3, 2);
+        let t1 = g.ground_truth();
+        let t2 = g.ground_truth();
+        assert_ne!(t1.idx, t2.idx);
+    }
+
+    #[test]
+    fn rcv1_stats_match_spec() {
+        let mut src = Rcv1Sim::new(400, 3);
+        let mut test = Rcv1Sim::new(10, 4);
+        let s = DatasetStats::measure(&mut src, &mut test);
+        assert_eq!(s.dim, RCV1_DIM);
+        // ~73 distinct active per doc (duplicate tokens merge, so < 73)
+        assert!((40.0..90.0).contains(&s.avg_active), "avg_active={}", s.avg_active);
+        // roughly balanced classes
+        let frac = s.class_counts[1] as f64 / 400.0;
+        assert!((0.3..0.7).contains(&frac), "class balance {frac}");
+    }
+
+    #[test]
+    fn rcv1_replays_deterministically() {
+        let mut a = Rcv1Sim::new(5, 9);
+        let mut b = Rcv1Sim::new(5, 9);
+        let ea: Vec<_> = a.collect_all();
+        let eb: Vec<_> = b.collect_all();
+        assert_eq!(ea, eb);
+        a.reset();
+        let replay: Vec<_> = a.collect_all();
+        assert_eq!(ea, replay);
+    }
+
+    #[test]
+    fn webspam_imbalance_and_dim() {
+        let mut src = WebspamSim::new(500, 5);
+        let mut pos = 0usize;
+        while let Some(e) = src.next_example() {
+            pos += (e.label == 1.0) as usize;
+        }
+        let frac = pos as f64 / 500.0;
+        assert!((0.5..0.75).contains(&frac), "positive frac {frac} (paper: 60%)");
+        assert_eq!(src.dim(), WEBSPAM_DIM);
+    }
+
+    #[test]
+    fn dna_classes_and_read_shape() {
+        let mut src = DnaSim::with_params(1 << 20, 15, 100, 100, 1000, 300, 6);
+        let mut seen = vec![0usize; 15];
+        let mut nnz = 0usize;
+        while let Some(e) = src.next_example() {
+            seen[e.label as usize] += 1;
+            nnz += e.features.nnz();
+        }
+        assert!(seen.iter().all(|&c| c > 5), "class histogram {seen:?}");
+        let avg = nnz as f64 / 300.0;
+        // ~100 draws, duplicates merge → 60..100 distinct
+        assert!((50.0..100.0).contains(&avg), "avg distinct kmers {avg}");
+    }
+
+    #[test]
+    fn kdd_exactly_12_fields_and_rare_clicks() {
+        let mut src = KddSim::new(2000, 7);
+        let mut pos = 0usize;
+        while let Some(e) = src.next_example() {
+            assert_eq!(e.features.nnz(), 12);
+            assert!(e.features.idx.iter().all(|&i| i < KDD_DIM));
+            pos += (e.label == 1.0) as usize;
+        }
+        let frac = pos as f64 / 2000.0;
+        assert!((0.005..0.2).contains(&frac), "click rate {frac} (paper: 4%)");
+    }
+
+    #[test]
+    fn kdd_fields_partition_the_space() {
+        let src = KddSim::new(1, 8);
+        let mut end = 0u64;
+        for &(off, card) in &src.fields {
+            assert_eq!(off, end);
+            end = off + card;
+        }
+        assert_eq!(end, KDD_DIM);
+    }
+
+    #[test]
+    fn planted_models_are_learnable_signal() {
+        // labels must correlate with the teacher logit — sanity of y|x
+        let mut src = Rcv1Sim::new(2000, 11);
+        let model = src.model.clone();
+        let mut agree = 0usize;
+        let mut n = 0usize;
+        while let Some(e) = src.next_example() {
+            let logit = model.bias + model.weights.dot(&e.features);
+            if logit.abs() > 0.5 {
+                n += 1;
+                agree += ((logit > 0.0) == (e.label == 1.0)) as usize;
+            }
+        }
+        assert!(n > 100, "teacher never fires: {n}");
+        let acc = agree as f64 / n as f64;
+        assert!(acc > 0.6, "labels uncorrelated with teacher: {acc}");
+    }
+}

@@ -1,0 +1,181 @@
+//! Vowpal Wabbit text format ("all data is analyzed in the Vowpal Wabbit
+//! format", Sec. 7).
+//!
+//! Supported grammar (the subset the paper's datasets use):
+//!
+//! ```text
+//! <label> [<importance>] ['tag] | <feature>[:<value>] <feature>[:<value>] ...
+//! ```
+//!
+//! Features that parse as integers are used as raw indices; anything else
+//! is hashed with MurmurHash3 into `[0, dim)` — exactly what VW itself and
+//! the paper's FH/MISSION/BEAR implementations do.
+
+use crate::data::Example;
+use crate::hash::murmur3_32;
+use crate::sparse::SparseVec;
+use anyhow::{bail, Context, Result};
+
+/// Parser configuration.
+#[derive(Clone, Debug)]
+pub struct VwParser {
+    /// Feature-space size for hashed (non-numeric) feature names.
+    pub dim: u64,
+    /// Hash seed (VW's `--hash_seed`).
+    pub seed: u32,
+}
+
+impl VwParser {
+    pub fn new(dim: u64) -> Self {
+        Self { dim, seed: 0 }
+    }
+
+    /// Parse one VW line into an [`Example`].
+    pub fn parse_line(&self, line: &str) -> Result<Example> {
+        let line = line.trim();
+        if line.is_empty() {
+            bail!("empty line");
+        }
+        let (head, feats) = line
+            .split_once('|')
+            .with_context(|| format!("no '|' separator in: {line:?}"))?;
+
+        // head: label [importance] ['tag]
+        let mut head_parts = head.split_whitespace();
+        let label: f32 = head_parts
+            .next()
+            .context("missing label")?
+            .parse()
+            .with_context(|| format!("bad label in: {line:?}"))?;
+        // importance / tag ignored (not used by the paper's experiments)
+
+        let mut pairs = Vec::new();
+        for tok in feats.split_whitespace() {
+            // namespace tokens (bare word right after '|') are rare in the
+            // paper's data; treat a token ending in nothing special as a
+            // feature. feature[:value]
+            let (name, value) = match tok.rsplit_once(':') {
+                Some((n, v)) => {
+                    let val: f32 = v.parse().with_context(|| format!("bad value {tok:?}"))?;
+                    (n, val)
+                }
+                None => (tok, 1.0),
+            };
+            if name.is_empty() {
+                bail!("empty feature name in {tok:?}");
+            }
+            let idx = match name.parse::<u64>() {
+                Ok(i) => i % self.dim,
+                Err(_) => (murmur3_32(name.as_bytes(), self.seed) as u64) % self.dim,
+            };
+            pairs.push((idx, value));
+        }
+        Ok(Example::new(SparseVec::from_pairs(pairs), label))
+    }
+
+    /// Parse a whole buffer (one example per line, blank lines skipped).
+    pub fn parse_all(&self, text: &str) -> Result<Vec<Example>> {
+        text.lines()
+            .map(str::trim)
+            .filter(|l| !l.is_empty())
+            .map(|l| self.parse_line(l))
+            .collect()
+    }
+}
+
+/// Serialize an example back to a VW line (numeric feature indices).
+pub fn write_line(e: &Example) -> String {
+    use std::fmt::Write as _;
+    let mut s = String::with_capacity(16 + e.features.nnz() * 12);
+    // labels that are integral print as integers (VW convention)
+    if e.label.fract() == 0.0 {
+        let _ = write!(s, "{}", e.label as i64);
+    } else {
+        let _ = write!(s, "{}", e.label);
+    }
+    s.push_str(" |");
+    for (i, v) in e.features.idx.iter().zip(&e.features.val) {
+        if *v == 1.0 {
+            let _ = write!(s, " {i}");
+        } else {
+            let _ = write!(s, " {i}:{v}");
+        }
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_numeric_features() {
+        let p = VwParser::new(1000);
+        let e = p.parse_line("1 | 5:0.5 7 999:2").unwrap();
+        assert_eq!(e.label, 1.0);
+        assert_eq!(e.features.idx, vec![5, 7, 999]);
+        assert_eq!(e.features.val, vec![0.5, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn hashes_string_features_in_range() {
+        let p = VwParser::new(100);
+        let e = p.parse_line("-1 | shareholder company nigh").unwrap();
+        assert_eq!(e.label, -1.0);
+        assert_eq!(e.features.nnz(), 3);
+        assert!(e.features.idx.iter().all(|&i| i < 100));
+    }
+
+    #[test]
+    fn hashing_is_deterministic() {
+        let p = VwParser::new(1 << 20);
+        let a = p.parse_line("1 | entrepreneur").unwrap();
+        let b = p.parse_line("0 | entrepreneur").unwrap();
+        assert_eq!(a.features.idx, b.features.idx);
+    }
+
+    #[test]
+    fn importance_and_tag_ignored() {
+        let p = VwParser::new(1000);
+        let e = p.parse_line("1 2.0 'example_39 | 4:1.5").unwrap();
+        assert_eq!(e.label, 1.0);
+        assert_eq!(e.features.idx, vec![4]);
+    }
+
+    #[test]
+    fn duplicate_features_sum() {
+        let p = VwParser::new(1000);
+        let e = p.parse_line("0 | 3:1 3:2").unwrap();
+        assert_eq!(e.features.idx, vec![3]);
+        assert_eq!(e.features.val, vec![3.0]);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let p = VwParser::new(1000);
+        assert!(p.parse_line("").is_err());
+        assert!(p.parse_line("no separator here").is_err());
+        assert!(p.parse_line("xyz | 1:2").is_err());
+        assert!(p.parse_line("1 | 5:abc").is_err());
+    }
+
+    #[test]
+    fn roundtrip_write_parse() {
+        let p = VwParser::new(1 << 24);
+        let e = Example::new(
+            SparseVec::from_pairs(vec![(12, 1.0), (77, -0.25), (1 << 20, 3.0)]),
+            4.0,
+        );
+        let line = write_line(&e);
+        let back = p.parse_line(&line).unwrap();
+        assert_eq!(back, e);
+    }
+
+    #[test]
+    fn parse_all_skips_blanks() {
+        let p = VwParser::new(100);
+        let text = "1 | 1:1\n\n0 | 2:1\n";
+        let v = p.parse_all(text).unwrap();
+        assert_eq!(v.len(), 2);
+    }
+}

@@ -1,0 +1,53 @@
+//! # BEAR — Sketching BFGS for ultra-high dimensional feature selection
+//!
+//! A full-system reproduction of *"BEAR: Sketching BFGS Algorithm for
+//! Ultra-High Dimensional Feature Selection in Sublinear Memory"*
+//! (Aghazadeh, Gupta, DeWeese, Koyluoglu, Ramchandran; 2020).
+//!
+//! The library is the L3 (rust) layer of a three-layer rust + JAX + Pallas
+//! stack: the dense per-minibatch numeric hot-spot (fused logistic / MSE
+//! gradient, LBFGS two-loop) is authored in JAX + Pallas at build time,
+//! AOT-lowered to HLO text, and executed from rust via the PJRT C API
+//! ([`runtime`]). Python is never on the training path.
+//!
+//! ## Layout
+//! - substrates: [`hash`] (MurmurHash3), [`sketch`] (Count Sketch /
+//!   Count-Min), [`topk`] (updatable heap), [`sparse`], [`util`] (PRNG,
+//!   timers), [`prop`] (property-testing mini-framework)
+//! - data: [`data`] — Vowpal Wabbit parser, synthetic generators for the
+//!   paper's four real-world datasets, streaming minibatch loader
+//! - math: [`loss`], [`optim`] (two-loop LBFGS, dense Newton)
+//! - algorithms: [`algo`] — BEAR (Alg. 2) + every baseline
+//!   (MISSION, feature hashing, dense SGD / oLBFGS, sketched Newton)
+//! - system: [`runtime`] (PJRT artifact execution), [`coordinator`]
+//!   (streaming trainer, experiment runner, report printers), [`cli`],
+//!   [`metrics`], [`bench_util`]
+//!
+//! ## Quickstart
+//! ```no_run
+//! use bear::algo::bear::{Bear, BearConfig};
+//! use bear::algo::FeatureSelector;
+//! use bear::data::synth::GaussianLinear;
+//! let mut gen = GaussianLinear::new(1000, 8, 7);
+//! let (mut train, truth) = gen.dataset(900);
+//! let cfg = BearConfig { sketch_cells: 450, sketch_rows: 3, top_k: 8, ..Default::default() };
+//! let mut model = Bear::new(1000, cfg);
+//! model.fit(&mut train);
+//! let selected = model.top_features();
+//! ```
+
+pub mod algo;
+pub mod bench_util;
+pub mod cli;
+pub mod coordinator;
+pub mod data;
+pub mod hash;
+pub mod loss;
+pub mod metrics;
+pub mod optim;
+pub mod prop;
+pub mod runtime;
+pub mod sketch;
+pub mod sparse;
+pub mod topk;
+pub mod util;

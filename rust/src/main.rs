@@ -1,0 +1,209 @@
+//! `bear` — the L3 leader binary.
+//!
+//! Subcommands:
+//!   simulate    Fig. 1-style sparse-recovery run (BEAR/MISSION/Newton)
+//!   train       train + evaluate on a real-data surrogate (Fig. 2/3 cell)
+//!   stats       Table 2-style dataset summary
+//!   artifacts   list the compiled PJRT artifacts
+//!   help        this text
+//!
+//! Examples:
+//!   bear simulate --algo bear --cf 2.22 --trials 25
+//!   bear train --dataset rcv1 --algo bear --cf 100 --pjrt
+//!   bear train --dataset dna --algo mission --cf 330 --topk-eval 100
+//!   bear stats --dataset kdd
+//!   bear artifacts
+
+use anyhow::{bail, Result};
+use bear::cli::Args;
+use bear::coordinator::experiments::{
+    fig1_point, real_point, AlgoKind, RealData, RealSpec, SimulationSpec,
+};
+use bear::coordinator::report::{f3, human_bytes, Table};
+use bear::data::DatasetStats;
+use bear::util::timer::human_duration;
+
+fn parse_algo(s: &str) -> Result<AlgoKind> {
+    Ok(match s.to_ascii_lowercase().as_str() {
+        "bear" => AlgoKind::Bear,
+        "mission" => AlgoKind::Mission,
+        "newton" => AlgoKind::Newton,
+        "fh" | "feature-hashing" => AlgoKind::FeatureHashing,
+        "sgd" => AlgoKind::DenseSgd,
+        "olbfgs" => AlgoKind::DenseOlbfgs,
+        other => bail!("unknown --algo {other:?} (bear|mission|newton|fh|sgd|olbfgs)"),
+    })
+}
+
+fn parse_dataset(s: &str) -> Result<RealData> {
+    Ok(match s.to_ascii_lowercase().as_str() {
+        "rcv1" => RealData::Rcv1,
+        "webspam" => RealData::Webspam,
+        "dna" => RealData::Dna,
+        "kdd" | "kdd2012" => RealData::Kdd,
+        other => bail!("unknown --dataset {other:?} (rcv1|webspam|dna|kdd)"),
+    })
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let algo = parse_algo(&args.str_or("algo", "bear"))?;
+    let mut spec = SimulationSpec::default();
+    spec.p = args.parse_or("p", spec.p)?;
+    spec.k = args.parse_or("k", spec.k)?;
+    spec.n = args.parse_or("n", spec.n)?;
+    spec.trials = args.parse_or("trials", spec.trials)?;
+    spec.sketch_rows = args.parse_or("rows", spec.sketch_rows)?;
+    spec.tau = args.parse_or("tau", spec.tau)?;
+    spec.max_iters = args.parse_or("max-iters", spec.max_iters)?;
+    spec.eta_grid = args.f64_list("etas", &spec.eta_grid)?;
+    let cf = args.parse_or("cf", 2.22)?;
+    let row = fig1_point(&spec, algo, cf);
+    let mut t = Table::new(
+        &format!("simulate p={} k={} n={} trials={}", spec.p, spec.k, spec.n, spec.trials),
+        &["algo", "CF", "eta", "P(success)", "l2 err", "mean iters", "wall"],
+    );
+    t.row(&[
+        row.algo.label().into(),
+        format!("{cf:.2}"),
+        format!("{:.0e}", row.eta),
+        f3(row.p_success),
+        f3(row.l2_error),
+        format!("{:.0}", row.mean_iters),
+        human_duration(row.wall),
+    ]);
+    t.print();
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let dataset = parse_dataset(&args.str_or("dataset", "rcv1"))?;
+    let algo = parse_algo(&args.str_or("algo", "bear"))?;
+    let cf = args.parse_or("cf", 100.0)?;
+    let mut spec = RealSpec::for_dataset(dataset);
+    spec.n_train = args.parse_or("n-train", spec.n_train)?;
+    spec.n_test = args.parse_or("n-test", spec.n_test)?;
+    spec.seed = args.parse_or("seed", spec.seed)?;
+    let topk_eval = match args.get("topk-eval") {
+        Some(v) => Some(v.parse::<usize>()?),
+        None => None,
+    };
+    if let Some(e) = args.get("eta") {
+        spec.eta = Some(e.parse()?);
+    }
+    if let Some(k) = args.get("topk") {
+        spec.top_k = Some(k.parse()?);
+    }
+    if let Some(b) = args.get("batch") {
+        spec.batch = Some(b.parse()?);
+    }
+    spec.epochs = args.parse_or("epochs", 1)?;
+    // --pjrt surfaces the artifact registry status up front (the examples
+    // wire PjrtEngine into the trainer; see examples/quickstart.rs)
+    if args.flag("pjrt") {
+        let dir = bear::runtime::resolve_artifact_dir(args.get("artifact-dir"));
+        let reg = bear::runtime::ArtifactRegistry::load(&dir)?;
+        eprintln!("[bear] PJRT registry: {} artifacts from {}", reg.len(), dir.display());
+    }
+    let row = real_point(&spec, dataset, algo, cf, topk_eval);
+    let metric_name = if dataset.reports_auc() { "AUC" } else { "accuracy" };
+    let mut t = Table::new(
+        &format!(
+            "train {} (p={}, n_train={}, n_test={})",
+            dataset.label(),
+            dataset.dim(),
+            spec.n_train,
+            spec.n_test
+        ),
+        &["algo", "CF", metric_name, "prec@k", "model mem", "wall"],
+    );
+    t.row(&[
+        row.algo.label().into(),
+        format!("{cf:.1}"),
+        f3(row.metric),
+        f3(row.precision_at_k),
+        human_bytes(row.model_bytes),
+        human_duration(row.wall),
+    ]);
+    t.print();
+    Ok(())
+}
+
+fn cmd_stats(args: &Args) -> Result<()> {
+    let mut t = Table::new(
+        "dataset summary (Table 2 surrogates)",
+        &["dataset", "dim p", "#train", "#test", "avg act.", "classes"],
+    );
+    let datasets: Vec<RealData> = match args.get("dataset") {
+        Some(d) => vec![parse_dataset(d)?],
+        None => RealData::all().to_vec(),
+    };
+    for d in datasets {
+        let spec = RealSpec::quick(d);
+        let (mut train, mut test) = d.make(spec.n_train, spec.n_test, spec.seed);
+        let s = DatasetStats::measure(train.as_mut(), test.as_mut());
+        t.row(&[
+            d.label().into(),
+            s.dim.to_string(),
+            s.n_train.to_string(),
+            s.n_test.to_string(),
+            format!("{:.1}", s.avg_active),
+            d.num_classes().to_string(),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_artifacts(args: &Args) -> Result<()> {
+    let dir = bear::runtime::resolve_artifact_dir(args.get("artifact-dir"));
+    let reg = bear::runtime::ArtifactRegistry::load(&dir)?;
+    let mut t = Table::new(
+        &format!("PJRT artifacts in {}", dir.display()),
+        &["name", "kind", "loss", "B", "A", "tau", "flavor"],
+    );
+    for name in reg.names() {
+        let m = reg.meta(name).unwrap();
+        t.row(&[
+            m.name.clone(),
+            format!("{:?}", m.kind),
+            m.loss.map(|l| format!("{l:?}")).unwrap_or_else(|| "-".into()),
+            m.b.to_string(),
+            m.a.to_string(),
+            m.tau.to_string(),
+            format!("{:?}", m.flavor),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+const HELP: &str = "bear — sketched second-order feature selection (BEAR reproduction)
+
+commands:
+  simulate    Fig. 1-style sparse-recovery run (BEAR/MISSION/Newton)
+              --algo A --cf X --trials N --p P --k K --n N --etas 0.1,0.3
+  train       train + evaluate on a real-data surrogate (Fig. 2/3 cell)
+              --dataset rcv1|webspam|dna|kdd --algo A --cf X
+              [--topk-eval K] [--n-train N] [--n-test N] [--pjrt]
+  stats       Table 2-style dataset summary [--dataset D]
+  artifacts   list the compiled PJRT artifacts [--artifact-dir DIR]
+  help        this text
+
+any command accepts --config FILE with `key = value` defaults.
+";
+
+fn main() -> Result<()> {
+    bear::util::logger::init_from_env();
+    let args = Args::parse(std::env::args().skip(1))?;
+    match args.command.as_str() {
+        "simulate" => cmd_simulate(&args),
+        "train" => cmd_train(&args),
+        "stats" => cmd_stats(&args),
+        "artifacts" => cmd_artifacts(&args),
+        "" | "help" => {
+            print!("{HELP}");
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}; run `bear help`"),
+    }
+}

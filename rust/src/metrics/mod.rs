@@ -1,0 +1,147 @@
+//! Evaluation metrics: classification accuracy, AUC (for the
+//! class-imbalanced KDD experiments), sparse-recovery success probability
+//! and ℓ₂ error (Fig. 1), and precision@k against planted ground truth
+//! (our measurable substitute for the paper's qualitative Table 3).
+
+use crate::sparse::SparseVec;
+
+/// Fraction of correct binary predictions (score > 0 ⇒ class 1).
+pub fn binary_accuracy(scores: &[f64], labels: &[f32]) -> f64 {
+    assert_eq!(scores.len(), labels.len());
+    assert!(!scores.is_empty());
+    let correct = scores
+        .iter()
+        .zip(labels)
+        .filter(|(&s, &y)| (s > 0.0) == (y > 0.5))
+        .count();
+    correct as f64 / scores.len() as f64
+}
+
+/// Multi-class accuracy from predicted class ids.
+pub fn multiclass_accuracy(pred: &[usize], labels: &[f32]) -> f64 {
+    assert_eq!(pred.len(), labels.len());
+    assert!(!pred.is_empty());
+    let correct = pred.iter().zip(labels).filter(|(&p, &y)| p == y as usize).count();
+    correct as f64 / pred.len() as f64
+}
+
+/// Area under the ROC curve via the rank statistic
+/// (Mann–Whitney U), with the standard tie correction.
+pub fn auc(scores: &[f64], labels: &[f32]) -> f64 {
+    assert_eq!(scores.len(), labels.len());
+    let n_pos = labels.iter().filter(|&&y| y > 0.5).count();
+    let n_neg = labels.len() - n_pos;
+    if n_pos == 0 || n_neg == 0 {
+        return 0.5; // degenerate: no ranking information
+    }
+    // rank the scores (average ranks on ties)
+    let mut order: Vec<usize> = (0..scores.len()).collect();
+    order.sort_by(|&a, &b| scores[a].total_cmp(&scores[b]));
+    let mut ranks = vec![0.0f64; scores.len()];
+    let mut i = 0;
+    while i < order.len() {
+        let mut j = i;
+        while j + 1 < order.len() && scores[order[j + 1]] == scores[order[i]] {
+            j += 1;
+        }
+        let avg_rank = (i + j) as f64 / 2.0 + 1.0;
+        for &k in &order[i..=j] {
+            ranks[k] = avg_rank;
+        }
+        i = j + 1;
+    }
+    let rank_sum_pos: f64 =
+        ranks.iter().zip(labels).filter(|(_, &y)| y > 0.5).map(|(&r, _)| r).sum();
+    let u = rank_sum_pos - (n_pos * (n_pos + 1)) as f64 / 2.0;
+    u / (n_pos as f64 * n_neg as f64)
+}
+
+/// Fig. 1A metric: did the selector recover *all* ground-truth features?
+pub fn exact_support_recovery(selected: &[(u64, f32)], truth: &SparseVec) -> bool {
+    let sel: std::collections::HashSet<u64> = selected.iter().map(|&(f, _)| f).collect();
+    truth.idx.iter().all(|f| sel.contains(f))
+}
+
+/// Fraction of the top-k selections that are planted informative features
+/// (Table 3 substitute).
+pub fn precision_at_k(selected: &[(u64, f32)], truth_ids: &[u64], k: usize) -> f64 {
+    if k == 0 || selected.is_empty() {
+        return 0.0;
+    }
+    let truth: std::collections::HashSet<u64> = truth_ids.iter().copied().collect();
+    let take = selected.len().min(k);
+    let hits = selected[..take].iter().filter(|&&(f, _)| truth.contains(&f)).count();
+    hits as f64 / take as f64
+}
+
+/// Fig. 1B metric: ℓ₂ distance between the recovered weights (top-k of
+/// the selector, queried values) and the ground-truth vector.
+pub fn recovery_l2_error(selected: &[(u64, f32)], truth: &SparseVec) -> f64 {
+    let recovered = SparseVec::from_pairs(selected.to_vec());
+    // ‖recovered − truth‖₂ over the union of supports
+    let diff = recovered.axpy(-1.0, truth);
+    diff.l2_norm()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_basics() {
+        assert_eq!(binary_accuracy(&[1.0, -1.0, 2.0], &[1.0, 0.0, 0.0]), 2.0 / 3.0);
+        assert_eq!(multiclass_accuracy(&[0, 1, 2], &[0.0, 1.0, 1.0]), 2.0 / 3.0);
+    }
+
+    #[test]
+    fn auc_perfect_and_inverted() {
+        let labels = [0.0, 0.0, 1.0, 1.0];
+        assert_eq!(auc(&[0.1, 0.2, 0.8, 0.9], &labels), 1.0);
+        assert_eq!(auc(&[0.9, 0.8, 0.2, 0.1], &labels), 0.0);
+    }
+
+    #[test]
+    fn auc_random_is_half() {
+        let mut rng = crate::util::Pcg64::new(9);
+        let scores: Vec<f64> = (0..2000).map(|_| rng.next_f64()).collect();
+        let labels: Vec<f32> = (0..2000).map(|_| (rng.next_u64() & 1) as f32).collect();
+        let a = auc(&scores, &labels);
+        assert!((a - 0.5).abs() < 0.05, "auc {a}");
+    }
+
+    #[test]
+    fn auc_handles_ties() {
+        // all scores equal ⇒ AUC 0.5 by tie-correction
+        let a = auc(&[1.0, 1.0, 1.0, 1.0], &[0.0, 1.0, 0.0, 1.0]);
+        assert!((a - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn auc_degenerate_classes() {
+        assert_eq!(auc(&[0.5, 0.7], &[1.0, 1.0]), 0.5);
+    }
+
+    #[test]
+    fn support_recovery() {
+        let truth = SparseVec::from_pairs(vec![(3, 1.0), (7, 1.0)]);
+        assert!(exact_support_recovery(&[(7, 0.9), (3, 1.1), (9, 0.1)], &truth));
+        assert!(!exact_support_recovery(&[(7, 0.9), (9, 0.1)], &truth));
+    }
+
+    #[test]
+    fn precision_at_k_counts_hits() {
+        let sel = [(1u64, 1.0f32), (2, 0.9), (3, 0.8), (4, 0.7)];
+        let truth = [2u64, 4, 99];
+        assert_eq!(precision_at_k(&sel, &truth, 2), 0.5); // {1,2} → hit 2
+        assert_eq!(precision_at_k(&sel, &truth, 4), 0.5); // {2,4} hit
+        assert_eq!(precision_at_k(&sel, &truth, 0), 0.0);
+    }
+
+    #[test]
+    fn l2_error_zero_on_exact_recovery() {
+        let truth = SparseVec::from_pairs(vec![(3, 1.0), (7, -2.0)]);
+        assert!(recovery_l2_error(&[(3, 1.0), (7, -2.0)], &truth) < 1e-12);
+        let e = recovery_l2_error(&[(3, 1.0)], &truth);
+        assert!((e - 2.0).abs() < 1e-6);
+    }
+}

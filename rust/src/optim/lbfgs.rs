@@ -1,0 +1,345 @@
+//! Limited-memory BFGS two-loop recursion (paper Alg. 1), in two flavors:
+//!
+//! - [`SparseLbfgs`]: history pairs `(s_i, r_i)` are sparse vectors on the
+//!   active sets of their iterations; all dot products are sorted-index
+//!   merges. This is what BEAR runs — memory `2τ|A_t|` (Table 1).
+//! - [`DenseLbfgs`]: dense `Vec<f64>` history for the vanilla oLBFGS
+//!   baseline (linear memory, the thing BEAR exists to avoid).
+//!
+//! Both follow oLBFGS (Mokhtari & Ribeiro 2015): secant pairs from
+//! gradient differences on the *same* minibatch, curvature guard
+//! `sᵀr > ε` so the implicit Hessian approximation stays positive
+//! definite (Assumption 1 of the convergence theorem).
+
+use crate::sparse::SparseVec;
+use std::collections::VecDeque;
+
+/// Curvature threshold below which a secant pair is rejected.
+pub const CURVATURE_EPS: f64 = 1e-10;
+
+/// oLBFGS regularization (Mokhtari & Ribeiro 2015 — the paper's ref [12]):
+/// secant pairs are stored as (s, r + δ·s), which guarantees
+/// sᵀr̂ ≥ δ‖s‖² > 0 and bounds the implicit H̃ spectrum — essential when
+/// the difference vectors are contaminated by sketch-collision noise.
+pub const OLBFGS_DELTA: f64 = 1e-2;
+
+#[derive(Clone, Debug)]
+struct SparsePair {
+    s: SparseVec,
+    r: SparseVec,
+    rho: f64, // 1 / (rᵀs)
+}
+
+/// Sparse two-loop recursion with a τ-deep history ring.
+#[derive(Clone, Debug)]
+pub struct SparseLbfgs {
+    tau: usize,
+    pairs: VecDeque<SparsePair>,
+}
+
+impl SparseLbfgs {
+    pub fn new(tau: usize) -> Self {
+        Self { tau, pairs: VecDeque::with_capacity(tau) }
+    }
+
+    pub fn tau(&self) -> usize {
+        self.tau
+    }
+
+    pub fn len(&self) -> usize {
+        self.pairs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pairs.is_empty()
+    }
+
+    pub fn clear(&mut self) {
+        self.pairs.clear();
+    }
+
+    /// Offer a secant pair; the stored pair is δ-regularized
+    /// (r̂ = r + δ·s, see [`OLBFGS_DELTA`]). Rejected (returning false) if
+    /// the regularized curvature is still not safely positive or τ = 0.
+    pub fn push(&mut self, s: SparseVec, r: SparseVec) -> bool {
+        if self.tau == 0 {
+            return false;
+        }
+        let r = r.axpy(OLBFGS_DELTA as f32, &s);
+        let sr = s.dot(&r);
+        if !(sr > CURVATURE_EPS) {
+            return false;
+        }
+        if self.pairs.len() == self.tau {
+            self.pairs.pop_front();
+        }
+        self.pairs.push_back(SparsePair { s, r, rho: 1.0 / sr });
+        true
+    }
+
+    /// Alg. 1: descent direction `z = H̃_t · g` from the last τ pairs.
+    /// With an empty history this degenerates to `z = g` (first-order
+    /// step), matching oLBFGS initialization.
+    pub fn direction(&self, g: &SparseVec) -> SparseVec {
+        if self.pairs.is_empty() {
+            return g.clone();
+        }
+        let t = self.pairs.len();
+        let mut alpha = vec![0.0f64; t];
+        let mut q = g.clone();
+        // first loop: newest → oldest
+        for i in (0..t).rev() {
+            let p = &self.pairs[i];
+            let a = p.rho * p.s.dot(&q);
+            alpha[i] = a;
+            q = q.axpy(-a as f32, &p.r);
+        }
+        // initial Hessian scaling: (r_tᵀ s_t)/(r_tᵀ r_t) — the standard
+        // γ_t = sᵀr/rᵀr of Nocedal, using the newest pair
+        let newest = &self.pairs[t - 1];
+        let rr = newest.r.dot(&newest.r);
+        let gamma = if rr > 0.0 { (1.0 / newest.rho) / rr } else { 1.0 };
+        let mut z = q;
+        z.scale(gamma as f32);
+        // second loop: oldest → newest
+        for i in 0..t {
+            let p = &self.pairs[i];
+            let beta = p.rho * p.r.dot(&z);
+            z = z.axpy((alpha[i] - beta) as f32, &p.s);
+        }
+        z
+    }
+
+    /// Bytes held by the history (Table 1: `2τ|A|` entries plus indices).
+    pub fn memory_bytes(&self) -> usize {
+        self.pairs.iter().map(|p| p.s.memory_bytes() + p.r.memory_bytes()).sum()
+    }
+
+    /// Restrict-and-export the history aligned to an active set, for the
+    /// PJRT two-loop artifact (dense `[τ × A]` blocks). Returns
+    /// (S, R, rho) row-major; rows beyond the history are zero with rho 0.
+    pub fn export_blocks(
+        &self,
+        active: &crate::sparse::ActiveSet,
+        tau_pad: usize,
+        a_pad: usize,
+    ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let mut s_blk = vec![0.0f32; tau_pad * a_pad];
+        let mut r_blk = vec![0.0f32; tau_pad * a_pad];
+        let mut rho = vec![0.0f32; tau_pad];
+        for (row, p) in self.pairs.iter().rev().take(tau_pad).enumerate() {
+            // newest pair in row 0 (artifact unrolls newest→oldest first)
+            for (&f, &v) in p.s.idx.iter().zip(&p.s.val) {
+                if let Some(slot) = active.slot_of(f) {
+                    s_blk[row * a_pad + slot] = v;
+                }
+            }
+            for (&f, &v) in p.r.idx.iter().zip(&p.r.val) {
+                if let Some(slot) = active.slot_of(f) {
+                    r_blk[row * a_pad + slot] = v;
+                }
+            }
+            rho[row] = p.rho as f32;
+        }
+        (s_blk, r_blk, rho)
+    }
+}
+
+/// Dense two-loop recursion (vanilla oLBFGS baseline; O(p) memory).
+#[derive(Clone, Debug)]
+pub struct DenseLbfgs {
+    tau: usize,
+    pairs: VecDeque<(Vec<f64>, Vec<f64>, f64)>, // (s, r, rho)
+}
+
+impl DenseLbfgs {
+    pub fn new(tau: usize) -> Self {
+        Self { tau, pairs: VecDeque::with_capacity(tau) }
+    }
+
+    pub fn push(&mut self, s: Vec<f64>, r: Vec<f64>) -> bool {
+        if self.tau == 0 {
+            return false;
+        }
+        let r: Vec<f64> = r.iter().zip(&s).map(|(&ri, &si)| ri + OLBFGS_DELTA * si).collect();
+        let sr = crate::util::math::dot(&s, &r);
+        if !(sr > CURVATURE_EPS) {
+            return false;
+        }
+        if self.pairs.len() == self.tau {
+            self.pairs.pop_front();
+        }
+        self.pairs.push_back((s, r, 1.0 / sr));
+        true
+    }
+
+    pub fn direction(&self, g: &[f64]) -> Vec<f64> {
+        use crate::util::math::{axpy, dot};
+        if self.pairs.is_empty() {
+            return g.to_vec();
+        }
+        let t = self.pairs.len();
+        let mut alpha = vec![0.0f64; t];
+        let mut q = g.to_vec();
+        for i in (0..t).rev() {
+            let (s, r, rho) = &self.pairs[i];
+            let a = rho * dot(s, &q);
+            alpha[i] = a;
+            axpy(-a, r, &mut q);
+        }
+        let (_, r_new, rho_new) = &self.pairs[t - 1];
+        let rr = dot(r_new, r_new);
+        let gamma = if rr > 0.0 { (1.0 / rho_new) / rr } else { 1.0 };
+        let mut z: Vec<f64> = q.iter().map(|&x| x * gamma).collect();
+        for i in 0..t {
+            let (s, r, rho) = &self.pairs[i];
+            let beta = rho * dot(r, &z);
+            axpy(alpha[i] - beta, s, &mut z);
+        }
+        z
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(pairs: &[(u64, f32)]) -> SparseVec {
+        SparseVec::from_pairs(pairs.to_vec())
+    }
+
+    #[test]
+    fn empty_history_returns_gradient() {
+        let l = SparseLbfgs::new(5);
+        let g = sv(&[(1, 2.0), (3, -1.0)]);
+        assert_eq!(l.direction(&g), g);
+    }
+
+    #[test]
+    fn rejects_nonpositive_curvature() {
+        let mut l = SparseLbfgs::new(5);
+        assert!(!l.push(sv(&[(0, 1.0)]), sv(&[(0, -1.0)]))); // sᵀr̂ = δ−1 < 0
+        // orthogonal r: δ-regularization rescues it (sᵀr̂ = δ‖s‖² > 0)
+        assert!(l.push(sv(&[(0, 1.0)]), sv(&[(1, 1.0)])));
+        assert!(l.push(sv(&[(0, 1.0)]), sv(&[(0, 0.5)])));
+        assert_eq!(l.len(), 2);
+    }
+
+    #[test]
+    fn ring_caps_at_tau() {
+        let mut l = SparseLbfgs::new(2);
+        for i in 0..5u64 {
+            assert!(l.push(sv(&[(i, 1.0)]), sv(&[(i, 1.0)])));
+        }
+        assert_eq!(l.len(), 2);
+    }
+
+    #[test]
+    fn tau_zero_is_gradient_descent() {
+        let mut l = SparseLbfgs::new(0);
+        assert!(!l.push(sv(&[(0, 1.0)]), sv(&[(0, 1.0)])));
+        let g = sv(&[(0, 3.0)]);
+        assert_eq!(l.direction(&g), g);
+    }
+
+    #[test]
+    fn quadratic_secant_gives_newton_direction() {
+        // f(β) = ½βᵀDβ with D = diag(2, 10): after pushing exact secant
+        // pairs along both axes, the two-loop must return ~D⁻¹g.
+        let d = [2.0f64, 10.0];
+        let mut l = SparseLbfgs::new(5);
+        for (i, &di) in d.iter().enumerate() {
+            let s = sv(&[(i as u64, 1.0)]);
+            let r = sv(&[(i as u64, di as f32)]); // r = D·s
+            assert!(l.push(s, r));
+        }
+        let g = sv(&[(0, 2.0), (1, 10.0)]); // gradient at β=(1,1)
+        let z = l.direction(&g);
+        // Newton step ≈ (D+δI)⁻¹g = (1, 1) up to the δ regularization
+        assert!((z.get(0) - 1.0).abs() < 0.02, "{z:?}");
+        assert!((z.get(1) - 1.0).abs() < 0.02, "{z:?}");
+    }
+
+    #[test]
+    fn sparse_matches_dense_on_common_support() {
+        // same history expressed sparse and dense must give the same z
+        let mut rng = crate::util::Pcg64::new(42);
+        let p = 12usize;
+        let mut sl = SparseLbfgs::new(4);
+        let mut dl = DenseLbfgs::new(4);
+        for _ in 0..6 {
+            let s_dense: Vec<f64> = (0..p).map(|_| rng.gaussian() * 0.5).collect();
+            // r = s + small positive-definite twist to ensure sᵀr > 0
+            let r_dense: Vec<f64> =
+                s_dense.iter().enumerate().map(|(i, &x)| x * (1.0 + 0.1 * i as f64)).collect();
+            let s_sp = sv(&s_dense
+                .iter()
+                .enumerate()
+                .map(|(i, &v)| (i as u64, v as f32))
+                .collect::<Vec<_>>());
+            let r_sp = sv(&r_dense
+                .iter()
+                .enumerate()
+                .map(|(i, &v)| (i as u64, v as f32))
+                .collect::<Vec<_>>());
+            assert_eq!(sl.push(s_sp, r_sp), dl.push(s_dense.clone(), r_dense.clone()));
+        }
+        let g_dense: Vec<f64> = (0..p).map(|i| (i as f64 - 5.0) / 3.0).collect();
+        let g_sp = sv(&g_dense
+            .iter()
+            .enumerate()
+            .map(|(i, &v)| (i as u64, v as f32))
+            .collect::<Vec<_>>());
+        let zs = sl.direction(&g_sp);
+        let zd = dl.direction(&g_dense);
+        for i in 0..p {
+            assert!(
+                (zs.get(i as u64) as f64 - zd[i]).abs() < 1e-3,
+                "slot {i}: sparse {} dense {}",
+                zs.get(i as u64),
+                zd[i]
+            );
+        }
+    }
+
+    #[test]
+    fn export_blocks_layout() {
+        let mut l = SparseLbfgs::new(3);
+        l.push(sv(&[(10, 1.0)]), sv(&[(10, 2.0)]));
+        l.push(sv(&[(20, 3.0)]), sv(&[(20, 4.0)]));
+        let row = sv(&[(10, 1.0), (20, 1.0)]);
+        let active = crate::sparse::ActiveSet::from_rows([&row]);
+        let (s, r, rho) = l.export_blocks(&active, 3, 4);
+        let d = OLBFGS_DELTA as f32;
+        // newest pair (20) in row 0 at slot 1 (r carries the +δ·s term)
+        assert_eq!(s[1], 3.0);
+        assert!((r[1] - (4.0 + d * 3.0)).abs() < 1e-6);
+        assert!((rho[0] - 1.0 / (3.0 * (4.0 + d * 3.0))).abs() < 1e-6);
+        // older pair (10) in row 1 at slot 0
+        assert_eq!(s[4], 1.0);
+        assert!((r[4] - (2.0 + d)).abs() < 1e-6);
+        // padding row empty
+        assert!(s[8..].iter().all(|&x| x == 0.0));
+        assert_eq!(rho[2], 0.0);
+    }
+
+    #[test]
+    fn direction_is_descent_direction() {
+        // zᵀg > 0 (z is used as β ← β − ηz) for PSD histories
+        let mut rng = crate::util::Pcg64::new(7);
+        let mut l = SparseLbfgs::new(5);
+        for _ in 0..5 {
+            let pairs: Vec<(u64, f32)> =
+                (0..8).map(|i| (i as u64, rng.gaussian() as f32)).collect();
+            let s = sv(&pairs);
+            let mut r = s.clone();
+            r.scale(1.5); // r = 1.5·s ⇒ curvature positive
+            l.push(s, r);
+        }
+        for _ in 0..10 {
+            let g = sv(&(0..8).map(|i| (i as u64, rng.gaussian() as f32)).collect::<Vec<_>>());
+            let z = l.direction(&g);
+            assert!(z.dot(&g) > 0.0, "not a descent direction");
+        }
+    }
+}

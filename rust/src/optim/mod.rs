@@ -1,0 +1,10 @@
+//! Optimizers: the sparse online-LBFGS two-loop recursion (Alg. 1) that
+//! BEAR runs over active-set-restricted difference vectors, its dense
+//! counterpart for the oLBFGS baseline, and a dense Newton solver for the
+//! Fig. 1 exact-Hessian curve.
+
+pub mod lbfgs;
+pub mod newton;
+
+pub use lbfgs::{DenseLbfgs, SparseLbfgs};
+pub use newton::newton_direction;

@@ -1,0 +1,170 @@
+//! Minimal property-based testing framework (no `proptest` in the offline
+//! vendor set — DESIGN.md §3).
+//!
+//! A property is a closure over a [`Gen`] handle; the runner executes it
+//! for `cases` deterministic seeds and, on failure, retries with shrinking
+//! `size` budgets to report the smallest failing size along with the seed
+//! needed to replay it.
+//!
+//! ```
+//! use bear::prop::{run, Gen};
+//! run("sum is commutative", 64, |g: &mut Gen| {
+//!     let a = g.f32_in(-10.0, 10.0);
+//!     let b = g.f32_in(-10.0, 10.0);
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use crate::util::Pcg64;
+
+/// Generation handle: a seeded PRNG plus a size budget that shrinks on
+/// failure. Generators should scale their output with [`Gen::size`].
+pub struct Gen {
+    rng: Pcg64,
+    size: usize,
+}
+
+impl Gen {
+    pub fn new(seed: u64, size: usize) -> Self {
+        Self { rng: Pcg64::new(seed), size }
+    }
+
+    /// The current size budget (collections should have ≤ this many items).
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    pub fn rng(&mut self) -> &mut Pcg64 {
+        &mut self.rng
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    pub fn u64_below(&mut self, n: u64) -> u64 {
+        self.rng.below(n)
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(lo < hi);
+        lo + self.rng.below((hi - lo) as u64) as usize
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.rng.next_f32()
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+
+    pub fn gaussian(&mut self) -> f64 {
+        self.rng.gaussian()
+    }
+
+    /// A vector of up to `size` elements produced by `f`.
+    pub fn vec_of<T>(&mut self, mut f: impl FnMut(&mut Self) -> T) -> Vec<T> {
+        let n = self.usize_in(0, self.size.max(1) + 1);
+        (0..n).map(|_| f(self)).collect()
+    }
+
+    /// Non-empty variant.
+    pub fn vec_of1<T>(&mut self, mut f: impl FnMut(&mut Self) -> T) -> Vec<T> {
+        let n = self.usize_in(1, self.size.max(1) + 1);
+        (0..n).map(|_| f(self)).collect()
+    }
+
+    /// Sparse (index, value) pairs with distinct indices below `p`.
+    pub fn sparse_pairs(&mut self, p: u64) -> Vec<(u64, f32)> {
+        let n = self.usize_in(0, (self.size.min(p as usize)).max(1) + 1);
+        let idx = self.rng.sample_distinct(p, n.min(p as usize));
+        idx.into_iter().map(|i| (i, self.f32_in(-10.0, 10.0))).collect()
+    }
+}
+
+/// Run `prop` for `cases` deterministic cases. Panics (with replay info)
+/// on the first failure after shrinking the size budget.
+pub fn run(name: &str, cases: u64, prop: impl Fn(&mut Gen) + std::panic::RefUnwindSafe) {
+    const BASE_SIZE: usize = 64;
+    for case in 0..cases {
+        let seed = 0xBEA2_0000 ^ case.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let failed = std::panic::catch_unwind(|| {
+            let mut g = Gen::new(seed, BASE_SIZE);
+            prop(&mut g);
+        })
+        .is_err();
+        if failed {
+            // shrink: find the smallest size at which this seed still fails
+            let mut min_fail = BASE_SIZE;
+            let mut sz = BASE_SIZE / 2;
+            while sz >= 1 {
+                let fails = std::panic::catch_unwind(|| {
+                    let mut g = Gen::new(seed, sz);
+                    prop(&mut g);
+                })
+                .is_err();
+                if fails {
+                    min_fail = sz;
+                    sz /= 2;
+                } else {
+                    break;
+                }
+            }
+            panic!(
+                "property '{name}' failed: case {case}, seed {seed:#x}, minimal failing size {min_fail} \
+                 (replay with Gen::new({seed:#x}, {min_fail}))"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        run("tautology", 32, |g| {
+            let v = g.vec_of(|g| g.f32_in(0.0, 1.0));
+            assert!(v.iter().all(|&x| (0.0..1.0).contains(&x)));
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_reports() {
+        run("always fails", 4, |_g| {
+            panic!("boom");
+        });
+    }
+
+    #[test]
+    fn shrinking_finds_small_size() {
+        // fails only when the vector is long; shrink should reduce size
+        let result = std::panic::catch_unwind(|| {
+            run("long vectors fail", 16, |g| {
+                let v = g.vec_of(|g| g.f32_in(0.0, 1.0));
+                assert!(v.len() < 8, "too long");
+            });
+        });
+        let msg = match result {
+            Err(e) => *e.downcast::<String>().unwrap(),
+            Ok(()) => panic!("property should have failed"),
+        };
+        assert!(msg.contains("minimal failing size"), "{msg}");
+    }
+
+    #[test]
+    fn sparse_pairs_distinct_sorted_domain() {
+        run("sparse pairs distinct", 32, |g| {
+            let pairs = g.sparse_pairs(1000);
+            let mut idx: Vec<u64> = pairs.iter().map(|&(i, _)| i).collect();
+            idx.sort_unstable();
+            let n = idx.len();
+            idx.dedup();
+            assert_eq!(idx.len(), n, "duplicate indices");
+            assert!(idx.iter().all(|&i| i < 1000));
+        });
+    }
+}

@@ -1,0 +1,222 @@
+//! Artifact registry: parse `artifacts/manifest.tsv`, load each HLO-text
+//! module, compile it on the PJRT CPU client, and serve executables by
+//! (kind, shape) lookup.
+//!
+//! HLO *text* is the interchange format (not serialized protos): jax ≥0.5
+//! emits 64-bit instruction ids that xla_extension 0.5.1 rejects, while
+//! the text parser reassigns ids (see /opt/xla-example/README.md).
+
+use crate::loss::LossKind;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// What a compiled artifact computes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ArtifactKind {
+    /// (x[B,A], y[B], β[A]) → (g[A], loss[])
+    Grad,
+    /// (x[B,A], β[A]) → logits[B]
+    Predict,
+    /// (x[B,A], resid[B]) → g[A] (blocked-path tile)
+    GradTile,
+    /// (g[A], S[τ,A], R[τ,A], ρ[τ]) → z[A]
+    Lbfgs,
+    /// fused grad + two-loop → (z, g, loss)
+    BearStep,
+}
+
+impl ArtifactKind {
+    fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "grad" => Self::Grad,
+            "predict" => Self::Predict,
+            "gradtile" => Self::GradTile,
+            "lbfgs" => Self::Lbfgs,
+            "bear_step" => Self::BearStep,
+            other => bail!("unknown artifact kind {other:?}"),
+        })
+    }
+}
+
+/// Kernel flavor: Pallas-tiled (TPU-shaped) or plain-jnp (XLA-CPU-fusable).
+/// Same math, verified against each other by the python tests; the CPU
+/// runtime prefers `Jnp` (~50× faster here — EXPERIMENTS.md §Perf) unless
+/// `BEAR_PREFER_PALLAS=1`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Flavor {
+    Pallas,
+    Jnp,
+}
+
+/// One manifest row.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub kind: ArtifactKind,
+    pub loss: Option<LossKind>,
+    pub b: usize,
+    pub a: usize,
+    pub tau: usize,
+    pub flavor: Flavor,
+    pub file: PathBuf,
+}
+
+struct Loaded {
+    meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// Compiled-executable registry over one PJRT client.
+pub struct ArtifactRegistry {
+    client: xla::PjRtClient,
+    by_name: HashMap<String, Loaded>,
+    preferred: Flavor,
+}
+
+impl ArtifactRegistry {
+    /// Which flavor variant-selection prefers (CPU default: Jnp;
+    /// `BEAR_PREFER_PALLAS=1` flips it for kernel-structure testing).
+    fn preferred_flavor() -> Flavor {
+        match std::env::var("BEAR_PREFER_PALLAS") {
+            Ok(v) if v != "0" => Flavor::Pallas,
+            _ => Flavor::Jnp,
+        }
+    }
+
+    /// Load and compile every artifact in `dir` (per `manifest.tsv`).
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&manifest)
+            .with_context(|| format!("reading {manifest:?} — run `make artifacts` first"))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
+        let mut by_name = HashMap::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let cols: Vec<&str> = line.split('\t').collect();
+            if cols.len() != 8 {
+                bail!("malformed manifest row (want 8 cols): {line:?}");
+            }
+            let meta = ArtifactMeta {
+                name: cols[0].to_string(),
+                kind: ArtifactKind::parse(cols[1])?,
+                loss: match cols[2] {
+                    "mse" => Some(LossKind::Mse),
+                    "logistic" => Some(LossKind::Logistic),
+                    _ => None,
+                },
+                b: cols[3].parse().context("bad b column")?,
+                a: cols[4].parse().context("bad a column")?,
+                tau: cols[5].parse().context("bad tau column")?,
+                flavor: match cols[6] {
+                    "pallas" => Flavor::Pallas,
+                    "jnp" => Flavor::Jnp,
+                    other => bail!("unknown flavor {other:?}"),
+                },
+                file: dir.join(cols[7]),
+            };
+            let proto = xla::HloModuleProto::from_text_file(&meta.file)
+                .map_err(|e| anyhow!("parsing {:?}: {e}", meta.file))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {}: {e}", meta.name))?;
+            by_name.insert(meta.name.clone(), Loaded { meta, exe });
+        }
+        if by_name.is_empty() {
+            bail!("manifest {manifest:?} contained no artifacts");
+        }
+        Ok(Self { client, by_name, preferred: Self::preferred_flavor() })
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    pub fn len(&self) -> usize {
+        self.by_name.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.by_name.is_empty()
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.by_name.keys().map(|s| s.as_str()).collect();
+        v.sort_unstable();
+        v
+    }
+
+    pub fn meta(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.by_name.get(name).map(|l| &l.meta)
+    }
+
+    /// Execute an artifact by name on f32 literals; returns the flattened
+    /// tuple elements (lowering uses return_tuple=True, so even single
+    /// results arrive as 1-tuples).
+    pub fn execute(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let loaded = self
+            .by_name
+            .get(name)
+            .ok_or_else(|| anyhow!("no artifact named {name:?}"))?;
+        let result = loaded
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("executing {name}: {e}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result of {name}: {e}"))?;
+        lit.to_tuple().map_err(|e| anyhow!("untupling result of {name}: {e}"))
+    }
+
+    /// Smallest variant of `kind` whose block fits (b, a) — exact-loss
+    /// match when `loss` is given. None if nothing fits.
+    pub fn best_variant(
+        &self,
+        kind: ArtifactKind,
+        loss: Option<LossKind>,
+        b: usize,
+        a: usize,
+    ) -> Option<&ArtifactMeta> {
+        self.by_name
+            .values()
+            .map(|l| &l.meta)
+            .filter(|m| m.kind == kind && m.b >= b && m.a >= a)
+            .filter(|m| loss.is_none() || m.loss == loss)
+            .min_by_key(|m| (m.a, m.b, m.flavor != self.preferred))
+    }
+
+    /// Largest available feature block for a kind (the chunk width of the
+    /// blocked gradient path).
+    pub fn max_block(&self, kind: ArtifactKind, loss: Option<LossKind>) -> Option<&ArtifactMeta> {
+        self.by_name
+            .values()
+            .map(|l| &l.meta)
+            .filter(|m| m.kind == kind && (loss.is_none() || m.loss == loss))
+            .max_by_key(|m| (m.a, m.b, m.flavor == self.preferred))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_parse_roundtrip() {
+        assert_eq!(ArtifactKind::parse("grad").unwrap(), ArtifactKind::Grad);
+        assert_eq!(ArtifactKind::parse("bear_step").unwrap(), ArtifactKind::BearStep);
+        assert!(ArtifactKind::parse("nope").is_err());
+    }
+
+    #[test]
+    fn missing_manifest_errors_with_hint() {
+        let err = match ArtifactRegistry::load(Path::new("/nonexistent")) {
+            Err(e) => e,
+            Ok(_) => panic!("load of /nonexistent must fail"),
+        };
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

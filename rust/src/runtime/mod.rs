@@ -1,0 +1,41 @@
+//! PJRT runtime: load the AOT-compiled HLO artifacts (`make artifacts`)
+//! and execute them from the training hot path. This is the only bridge
+//! between L3 (rust) and L1/L2 (JAX + Pallas, build-time python) — at
+//! runtime the binary is self-contained.
+//!
+//! - [`artifacts`]: manifest parsing + compile-on-load registry
+//! - [`engine`]: a [`crate::loss::GradientEngine`] backed by the compiled
+//!   executables, with a blocked (chunked feature-axis) path for active
+//!   sets larger than any fused variant, and parity helpers used by the
+//!   integration tests.
+
+pub mod artifacts;
+pub mod engine;
+
+pub use artifacts::{ArtifactKind, ArtifactMeta, ArtifactRegistry};
+pub use engine::{EngineStats, PjrtEngine};
+
+/// Default artifact directory, relative to the repo root.
+pub const DEFAULT_ARTIFACT_DIR: &str = "artifacts";
+
+/// Resolve the artifact directory: explicit arg > $BEAR_ARTIFACTS > the
+/// repo-relative default (walking up from cwd so tests work from target/).
+pub fn resolve_artifact_dir(explicit: Option<&str>) -> std::path::PathBuf {
+    if let Some(p) = explicit {
+        return p.into();
+    }
+    if let Ok(p) = std::env::var("BEAR_ARTIFACTS") {
+        return p.into();
+    }
+    // walk up from cwd looking for artifacts/manifest.tsv
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    loop {
+        let cand = dir.join(DEFAULT_ARTIFACT_DIR);
+        if cand.join("manifest.tsv").exists() {
+            return cand;
+        }
+        if !dir.pop() {
+            return DEFAULT_ARTIFACT_DIR.into();
+        }
+    }
+}

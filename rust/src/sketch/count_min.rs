@@ -1,0 +1,120 @@
+//! Count-Min sketch (Cormode–Muthukrishnan) with optional conservative
+//! update. Not used by BEAR itself (its updates are signed, Count-Min
+//! requires non-negative streams); it exists as the streaming-substrate
+//! baseline the ablation bench compares estimator bias against, and to
+//! exercise the hash family on a second consumer.
+
+use crate::hash::HashFamily;
+use crate::sketch::SketchMemory;
+
+#[derive(Clone, Debug)]
+pub struct CountMinSketch {
+    data: Vec<f32>,
+    rows: usize,
+    cols: usize,
+    family: HashFamily,
+    conservative: bool,
+}
+
+impl CountMinSketch {
+    pub fn new(cols: usize, rows: usize, seed: u64) -> Self {
+        assert!(cols > 0 && rows > 0);
+        Self {
+            data: vec![0.0; cols * rows],
+            rows,
+            cols,
+            family: HashFamily::new(rows, cols, seed),
+            conservative: false,
+        }
+    }
+
+    /// Conservative update: only raise the minimal counters. Strictly
+    /// tightens the overestimate for point queries.
+    pub fn conservative(mut self) -> Self {
+        self.conservative = true;
+        self
+    }
+
+    /// Add a non-negative increment.
+    pub fn add(&mut self, i: u64, delta: f32) {
+        debug_assert!(delta >= 0.0, "Count-Min requires non-negative updates");
+        if self.conservative {
+            let est = self.query(i);
+            let target = est + delta;
+            for j in 0..self.rows {
+                let b = self.family.bucket(j, i);
+                let cell = &mut self.data[j * self.cols + b];
+                if *cell < target {
+                    *cell = target;
+                }
+            }
+        } else {
+            for j in 0..self.rows {
+                let b = self.family.bucket(j, i);
+                self.data[j * self.cols + b] += delta;
+            }
+        }
+    }
+
+    /// Point query: min over rows (always an overestimate).
+    pub fn query(&self, i: u64) -> f32 {
+        (0..self.rows)
+            .map(|j| self.data[j * self.cols + self.family.bucket(j, i)])
+            .fold(f32::INFINITY, f32::min)
+    }
+}
+
+impl SketchMemory for CountMinSketch {
+    fn counter_bytes(&self) -> usize {
+        self.data.len() * std::mem::size_of::<f32>()
+    }
+    fn cells(&self) -> usize {
+        self.data.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn overestimates_never_underestimate() {
+        let mut cm = CountMinSketch::new(64, 4, 1);
+        let mut rng = Pcg64::new(2);
+        let mut truth = std::collections::HashMap::new();
+        for _ in 0..500 {
+            let i = rng.below(200);
+            let d = rng.next_f32();
+            *truth.entry(i).or_insert(0.0f32) += d;
+            cm.add(i, d);
+        }
+        for (&i, &t) in &truth {
+            assert!(cm.query(i) >= t - 1e-4, "underestimate at {i}");
+        }
+    }
+
+    #[test]
+    fn conservative_is_tighter() {
+        let mut plain = CountMinSketch::new(32, 3, 7);
+        let mut cons = CountMinSketch::new(32, 3, 7).conservative();
+        let mut rng = Pcg64::new(3);
+        let items: Vec<u64> = (0..300).map(|_| rng.below(500)).collect();
+        for &i in &items {
+            plain.add(i, 1.0);
+            cons.add(i, 1.0);
+        }
+        let err_plain: f32 = (0..500).map(|i| plain.query(i)).sum();
+        let err_cons: f32 = (0..500).map(|i| cons.query(i)).sum();
+        assert!(err_cons <= err_plain, "conservative not tighter: {err_cons} vs {err_plain}");
+    }
+
+    #[test]
+    fn exact_when_no_collisions() {
+        let mut cm = CountMinSketch::new(1024, 4, 9);
+        cm.add(1, 2.0);
+        cm.add(2, 3.0);
+        assert!((cm.query(1) - 2.0).abs() < 1e-6);
+        assert!((cm.query(2) - 3.0).abs() < 1e-6);
+    }
+}

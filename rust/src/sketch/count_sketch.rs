@@ -1,0 +1,282 @@
+//! Count Sketch (Charikar–Chen–Farach-Colton) — the sublinear-memory store
+//! for the model coordinates in BEAR and MISSION.
+//!
+//! A `d × c` matrix of f32 counters. Feature `i` lands in bucket
+//! `h_j(i)` of row `j` with sign `s_j(i)`; QUERY returns the median (the
+//! paper's estimator) or the mean (the estimator the convergence proof's
+//! linear-operator view uses — kept as an ablation, see
+//! `benches/ablations.rs`).
+
+use crate::hash::HashFamily;
+use crate::sketch::SketchMemory;
+use crate::util::math::median_small;
+
+/// Which estimator QUERY uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QueryMode {
+    /// Median of the d signed counters (paper's choice; robust).
+    Median,
+    /// Mean of the d signed counters (unbiased; the proof's affine view).
+    Mean,
+}
+
+/// Count Sketch with `d` rows (hash functions) and `c` buckets per row.
+#[derive(Clone, Debug)]
+pub struct CountSketch {
+    data: Vec<f32>,
+    rows: usize,
+    cols: usize,
+    family: HashFamily,
+    mode: QueryMode,
+}
+
+impl CountSketch {
+    /// Build from total cell budget `m` and row count `d` (paper
+    /// convention: "Count Sketch of size 150×3" means c=150, d=3, m=450).
+    pub fn with_total_cells(total_cells: usize, rows: usize, seed: u64) -> Self {
+        assert!(rows > 0 && total_cells >= rows, "need ≥1 bucket per row");
+        Self::new(total_cells / rows, rows, seed)
+    }
+
+    /// Build from explicit (c buckets per row, d rows).
+    pub fn new(cols: usize, rows: usize, seed: u64) -> Self {
+        assert!(cols > 0 && rows > 0);
+        assert!(rows <= 8, "QUERY median path is specialized for d ≤ 8 (paper uses 3/5)");
+        Self {
+            data: vec![0.0; cols * rows],
+            rows,
+            cols,
+            family: HashFamily::new(rows, cols, seed),
+            mode: QueryMode::Median,
+        }
+    }
+
+    pub fn set_query_mode(&mut self, mode: QueryMode) {
+        self.mode = mode;
+    }
+
+    pub fn query_mode(&self) -> QueryMode {
+        self.mode
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// ADD(item i, increment Δ): `S[j, h_j(i)] += s_j(i)·Δ` for every row.
+    /// One hash evaluation per item (double hashing — see
+    /// `HashFamily::hash_all`; §Perf iteration L3-1).
+    #[inline]
+    pub fn add(&mut self, i: u64, delta: f32) {
+        let mut hs = [(0u32, 0f32); 8];
+        self.family.hash_all(i, &mut hs[..self.rows]);
+        for (j, &(b, s)) in hs[..self.rows].iter().enumerate() {
+            self.data[j * self.cols + b as usize] += s * delta;
+        }
+    }
+
+    /// QUERY(item i): estimate of the i-th coordinate.
+    #[inline]
+    pub fn query(&self, i: u64) -> f32 {
+        let mut hs = [(0u32, 0f32); 8];
+        self.family.hash_all(i, &mut hs[..self.rows]);
+        match self.mode {
+            QueryMode::Median => {
+                let mut buf = [0f32; 8];
+                for (j, &(b, s)) in hs[..self.rows].iter().enumerate() {
+                    buf[j] = s * self.data[j * self.cols + b as usize];
+                }
+                median_small(&mut buf[..self.rows])
+            }
+            QueryMode::Mean => {
+                let mut acc = 0.0f32;
+                for (j, &(b, s)) in hs[..self.rows].iter().enumerate() {
+                    acc += s * self.data[j * self.cols + b as usize];
+                }
+                acc / self.rows as f32
+            }
+        }
+    }
+
+    /// Batched ADD over a sparse update (the Alg. 2 step-6 hot path:
+    /// `β^s ← β^s − η ẑ_t` on the active set).
+    pub fn add_batch(&mut self, indices: &[u64], deltas: &[f32]) {
+        debug_assert_eq!(indices.len(), deltas.len());
+        for (&i, &v) in indices.iter().zip(deltas) {
+            self.add(i, v);
+        }
+    }
+
+    /// Batched QUERY into a caller-provided buffer (avoids allocation in
+    /// the training loop).
+    pub fn query_batch_into(&self, indices: &[u64], out: &mut Vec<f32>) {
+        out.clear();
+        out.extend(indices.iter().map(|&i| self.query(i)));
+    }
+
+    pub fn query_batch(&self, indices: &[u64]) -> Vec<f32> {
+        let mut out = Vec::with_capacity(indices.len());
+        self.query_batch_into(indices, &mut out);
+        out
+    }
+
+    /// Reset all counters (reused across experiment trials).
+    pub fn clear(&mut self) {
+        self.data.iter_mut().for_each(|x| *x = 0.0);
+    }
+
+    /// Squared Frobenius energy of the counters — proxies the sketched
+    /// noise energy `‖z^tail‖²` that Theorem 1's guarantee depends on;
+    /// logged by the noise-accumulation ablation.
+    pub fn energy(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum()
+    }
+
+    /// Dense `p × m` projection matrix `S` of Lemma 3 (test/analysis only;
+    /// p must be small). Row i has ±1 at (j·c + h_j(i)) for each row j.
+    pub fn dense_projection(&self, p: usize) -> Vec<Vec<f32>> {
+        let m = self.cells();
+        let mut s = vec![vec![0.0f32; m]; p];
+        let mut hs = [(0u32, 0f32); 8];
+        for (i, row) in s.iter_mut().enumerate() {
+            self.family.hash_all(i as u64, &mut hs[..self.rows]);
+            for (j, &(b, sign)) in hs[..self.rows].iter().enumerate() {
+                row[j * self.cols + b as usize] = sign;
+            }
+        }
+        s
+    }
+
+    /// Direct readout of the raw counters (tests + checkpointing).
+    pub fn raw(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Replace the raw counters (checkpoint restore). Length must match.
+    pub fn load_raw(&mut self, counters: &[f32]) {
+        assert_eq!(counters.len(), self.data.len(), "counter length mismatch");
+        self.data.copy_from_slice(counters);
+    }
+}
+
+impl SketchMemory for CountSketch {
+    fn counter_bytes(&self) -> usize {
+        self.data.len() * std::mem::size_of::<f32>()
+    }
+    fn cells(&self) -> usize {
+        self.data.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn single_item_roundtrip() {
+        let mut cs = CountSketch::new(64, 3, 1);
+        cs.add(42, 3.5);
+        assert!((cs.query(42) - 3.5).abs() < 1e-6);
+        // untouched coordinates read ~0 (they can only collide)
+        assert_eq!(cs.query(7), 0.0);
+    }
+
+    #[test]
+    fn linearity_of_add() {
+        let mut cs = CountSketch::new(128, 5, 2);
+        cs.add(10, 1.0);
+        cs.add(10, 2.0);
+        cs.add(10, -0.5);
+        assert!((cs.query(10) - 2.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn heavy_hitters_survive_noise() {
+        // 20 heavy features at weight 10 among 2000 noise features at ~0.1:
+        // CS with m=1500 cells must recover the heavy ones within ±1.
+        let mut cs = CountSketch::with_total_cells(1500, 5, 3);
+        let mut rng = Pcg64::new(4);
+        for h in 0..20u64 {
+            cs.add(h, 10.0);
+        }
+        for _ in 0..2000 {
+            let i = 100 + rng.below(1 << 30);
+            cs.add(i, (rng.next_f32() - 0.5) * 0.2);
+        }
+        for h in 0..20u64 {
+            let q = cs.query(h);
+            assert!((q - 10.0).abs() < 1.0, "feature {h}: {q}");
+        }
+    }
+
+    #[test]
+    fn total_cells_constructor() {
+        let cs = CountSketch::with_total_cells(450, 3, 5);
+        assert_eq!(cs.cols(), 150);
+        assert_eq!(cs.rows(), 3);
+        assert_eq!(cs.cells(), 450);
+        assert_eq!(cs.counter_bytes(), 450 * 4);
+    }
+
+    #[test]
+    fn mean_mode_is_unbiased_on_clean_signal() {
+        let mut cs = CountSketch::new(64, 4, 6);
+        cs.set_query_mode(QueryMode::Mean);
+        cs.add(5, 2.0);
+        assert!((cs.query(5) - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn clear_resets() {
+        let mut cs = CountSketch::new(32, 3, 7);
+        cs.add(1, 5.0);
+        assert!(cs.energy() > 0.0);
+        cs.clear();
+        assert_eq!(cs.energy(), 0.0);
+        assert_eq!(cs.query(1), 0.0);
+    }
+
+    #[test]
+    fn dense_projection_matches_add_query() {
+        // sketching via the dense matrix must equal the streaming ADD path
+        let p = 50;
+        let mut cs = CountSketch::new(16, 3, 8);
+        let s = cs.dense_projection(p);
+        let mut rng = Pcg64::new(9);
+        let x: Vec<f32> = (0..p).map(|_| rng.next_f32() - 0.5).collect();
+        // streaming
+        for (i, &v) in x.iter().enumerate() {
+            cs.add(i as u64, v);
+        }
+        // dense: sᵀx
+        let m = cs.cells();
+        let mut sk = vec![0.0f32; m];
+        for i in 0..p {
+            for j in 0..m {
+                sk[j] += s[i][j] * x[i];
+            }
+        }
+        for (j, &v) in sk.iter().enumerate() {
+            assert!((v - cs.raw()[j]).abs() < 1e-5, "cell {j}");
+        }
+    }
+
+    #[test]
+    fn batch_matches_scalar() {
+        let mut a = CountSketch::new(64, 3, 10);
+        let mut b = a.clone();
+        let idx = [3u64, 9, 27, 81];
+        let val = [1.0f32, -2.0, 3.0, -4.0];
+        a.add_batch(&idx, &val);
+        for (&i, &v) in idx.iter().zip(&val) {
+            b.add(i, v);
+        }
+        assert_eq!(a.raw(), b.raw());
+        assert_eq!(a.query_batch(&idx), idx.iter().map(|&i| b.query(i)).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,18 @@
+//! Sketching substrates: Count Sketch (the paper's memory substrate,
+//! Sec. 2), plus Count-Min and a conservative-update variant used as
+//! ablation baselines.
+
+pub mod count_min;
+pub mod count_sketch;
+
+pub use count_min::CountMinSketch;
+pub use count_sketch::{CountSketch, QueryMode};
+
+/// Common reporting interface so Table 1 / EXPERIMENTS.md can account the
+/// memory of every sketch uniformly.
+pub trait SketchMemory {
+    /// Bytes of counter storage (the sublinear `m` of the paper).
+    fn counter_bytes(&self) -> usize;
+    /// Total cells `m = c × d`.
+    fn cells(&self) -> usize;
+}

@@ -1,0 +1,292 @@
+//! Sparse vectors and active-set machinery.
+//!
+//! Everything BEAR touches per iteration is restricted to the minibatch's
+//! active set `A_t` (the features present in the sampled data points), so
+//! the core containers here are a sorted sparse vector and the
+//! [`ActiveSet`] that maps global feature ids (u64, up to the 54M+ of KDD
+//! 2012) to dense local slots for the blocked PJRT gradient path.
+
+use std::collections::HashMap;
+
+/// A sparse vector with strictly increasing indices.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SparseVec {
+    pub idx: Vec<u64>,
+    pub val: Vec<f32>,
+}
+
+impl SparseVec {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Build from unsorted (index, value) pairs; duplicate indices are
+    /// summed (VW semantics for repeated features).
+    pub fn from_pairs(mut pairs: Vec<(u64, f32)>) -> Self {
+        pairs.sort_unstable_by_key(|&(i, _)| i);
+        let mut idx = Vec::with_capacity(pairs.len());
+        let mut val: Vec<f32> = Vec::with_capacity(pairs.len());
+        for (i, v) in pairs {
+            if idx.last() == Some(&i) {
+                *val.last_mut().unwrap() += v;
+            } else {
+                idx.push(i);
+                val.push(v);
+            }
+        }
+        Self { idx, val }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.idx.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.idx.is_empty()
+    }
+
+    /// Sparse·sparse dot product by index merge — the primitive the
+    /// sparse-history LBFGS two-loop is built on.
+    pub fn dot(&self, other: &SparseVec) -> f64 {
+        let (mut a, mut b) = (0usize, 0usize);
+        let mut acc = 0.0f64;
+        while a < self.idx.len() && b < other.idx.len() {
+            match self.idx[a].cmp(&other.idx[b]) {
+                std::cmp::Ordering::Less => a += 1,
+                std::cmp::Ordering::Greater => b += 1,
+                std::cmp::Ordering::Equal => {
+                    acc += self.val[a] as f64 * other.val[b] as f64;
+                    a += 1;
+                    b += 1;
+                }
+            }
+        }
+        acc
+    }
+
+    /// `self ← self + alpha·other` (index union; allocates the merged vec).
+    pub fn axpy(&self, alpha: f32, other: &SparseVec) -> SparseVec {
+        let mut idx = Vec::with_capacity(self.nnz() + other.nnz());
+        let mut val = Vec::with_capacity(self.nnz() + other.nnz());
+        let (mut a, mut b) = (0usize, 0usize);
+        while a < self.idx.len() || b < other.idx.len() {
+            let take_a = b >= other.idx.len()
+                || (a < self.idx.len() && self.idx[a] < other.idx[b]);
+            let take_both =
+                a < self.idx.len() && b < other.idx.len() && self.idx[a] == other.idx[b];
+            if take_both {
+                idx.push(self.idx[a]);
+                val.push(self.val[a] + alpha * other.val[b]);
+                a += 1;
+                b += 1;
+            } else if take_a {
+                idx.push(self.idx[a]);
+                val.push(self.val[a]);
+                a += 1;
+            } else {
+                idx.push(other.idx[b]);
+                val.push(alpha * other.val[b]);
+                b += 1;
+            }
+        }
+        SparseVec { idx, val }
+    }
+
+    /// Scale in place.
+    pub fn scale(&mut self, alpha: f32) {
+        for v in self.val.iter_mut() {
+            *v *= alpha;
+        }
+    }
+
+    pub fn l2_norm(&self) -> f64 {
+        self.val.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt()
+    }
+
+    /// Value at a global index (binary search).
+    pub fn get(&self, i: u64) -> f32 {
+        match self.idx.binary_search(&i) {
+            Ok(k) => self.val[k],
+            Err(_) => 0.0,
+        }
+    }
+
+    /// Heap + payload bytes (Table 1 accounting: `2|A_t|` machine words
+    /// per difference vector).
+    pub fn memory_bytes(&self) -> usize {
+        self.idx.len() * std::mem::size_of::<u64>() + self.val.len() * std::mem::size_of::<f32>()
+    }
+}
+
+/// The active set `A_t`: sorted unique features of a minibatch, with a
+/// global-id → local-slot map for densification.
+#[derive(Clone, Debug, Default)]
+pub struct ActiveSet {
+    features: Vec<u64>,
+    slot: HashMap<u64, u32>,
+}
+
+impl ActiveSet {
+    /// Union of the feature indices of the given rows.
+    pub fn from_rows<'a>(rows: impl IntoIterator<Item = &'a SparseVec>) -> Self {
+        let mut features: Vec<u64> = Vec::new();
+        for r in rows {
+            features.extend_from_slice(&r.idx);
+        }
+        features.sort_unstable();
+        features.dedup();
+        let slot = features.iter().enumerate().map(|(s, &f)| (f, s as u32)).collect();
+        Self { features, slot }
+    }
+
+    pub fn len(&self) -> usize {
+        self.features.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.features.is_empty()
+    }
+
+    pub fn features(&self) -> &[u64] {
+        &self.features
+    }
+
+    #[inline]
+    pub fn slot_of(&self, feature: u64) -> Option<usize> {
+        self.slot.get(&feature).map(|&s| s as usize)
+    }
+
+    #[inline]
+    pub fn feature_at(&self, slot: usize) -> u64 {
+        self.features[slot]
+    }
+
+    /// Intersection with a membership predicate (Alg. 2 step 3 queries
+    /// only `A_t ∩ top-k`); returns local slots.
+    pub fn slots_where(&self, mut pred: impl FnMut(u64) -> bool) -> Vec<usize> {
+        (0..self.features.len()).filter(|&s| pred(self.features[s])).collect()
+    }
+
+    /// Densify `rows` into a row-major `[b_pad × a_pad]` block, gathering
+    /// each row's values into active-set slots. Rows beyond `rows.len()`
+    /// and slots beyond `len()` stay zero (PJRT fixed-shape padding).
+    /// Returns false (and leaves `out` zeroed) if the active set exceeds
+    /// `a_pad` — caller falls back to the multi-block path.
+    pub fn densify_into(&self, rows: &[&SparseVec], b_pad: usize, a_pad: usize, out: &mut [f32]) -> bool {
+        assert_eq!(out.len(), b_pad * a_pad);
+        out.iter_mut().for_each(|x| *x = 0.0);
+        if self.features.len() > a_pad || rows.len() > b_pad {
+            return false;
+        }
+        for (r, row) in rows.iter().enumerate() {
+            let base = r * a_pad;
+            for (k, &f) in row.idx.iter().enumerate() {
+                // slot lookup: rows are subsets of the union, so this hits
+                let s = self.slot[&f] as usize;
+                out[base + s] = row.val[k];
+            }
+        }
+        true
+    }
+}
+
+/// Scatter a dense active-block vector back to (feature, value) pairs,
+/// dropping padding slots.
+pub fn scatter_from_block(active: &ActiveSet, block: &[f32]) -> SparseVec {
+    let n = active.len();
+    SparseVec { idx: active.features().to_vec(), val: block[..n].to_vec() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(pairs: &[(u64, f32)]) -> SparseVec {
+        SparseVec::from_pairs(pairs.to_vec())
+    }
+
+    #[test]
+    fn from_pairs_sorts_and_merges_duplicates() {
+        let v = sv(&[(5, 1.0), (2, 2.0), (5, 3.0)]);
+        assert_eq!(v.idx, vec![2, 5]);
+        assert_eq!(v.val, vec![2.0, 4.0]);
+    }
+
+    #[test]
+    fn dot_merge() {
+        let a = sv(&[(1, 1.0), (3, 2.0), (7, 3.0)]);
+        let b = sv(&[(3, 4.0), (7, 1.0), (9, 5.0)]);
+        assert_eq!(a.dot(&b), 8.0 + 3.0);
+        assert_eq!(a.dot(&SparseVec::new()), 0.0);
+    }
+
+    #[test]
+    fn axpy_union() {
+        let a = sv(&[(1, 1.0), (3, 2.0)]);
+        let b = sv(&[(3, 4.0), (5, 1.0)]);
+        let c = a.axpy(2.0, &b);
+        assert_eq!(c.idx, vec![1, 3, 5]);
+        assert_eq!(c.val, vec![1.0, 10.0, 2.0]);
+    }
+
+    #[test]
+    fn get_and_norm() {
+        let a = sv(&[(10, 3.0), (20, 4.0)]);
+        assert_eq!(a.get(10), 3.0);
+        assert_eq!(a.get(11), 0.0);
+        assert!((a.l2_norm() - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn active_set_union_and_slots() {
+        let r1 = sv(&[(5, 1.0), (100, 1.0)]);
+        let r2 = sv(&[(5, 2.0), (7, 1.0)]);
+        let a = ActiveSet::from_rows([&r1, &r2]);
+        assert_eq!(a.features(), &[5, 7, 100]);
+        assert_eq!(a.slot_of(7), Some(1));
+        assert_eq!(a.slot_of(8), None);
+        assert_eq!(a.feature_at(2), 100);
+    }
+
+    #[test]
+    fn densify_roundtrip() {
+        let r1 = sv(&[(5, 1.5), (100, 2.5)]);
+        let r2 = sv(&[(7, -1.0)]);
+        let a = ActiveSet::from_rows([&r1, &r2]);
+        let (b_pad, a_pad) = (4, 8);
+        let mut block = vec![0.0f32; b_pad * a_pad];
+        assert!(a.densify_into(&[&r1, &r2], b_pad, a_pad, &mut block));
+        assert_eq!(block[0], 1.5); // row0 slot0 (feature 5)
+        assert_eq!(block[2], 2.5); // row0 slot2 (feature 100)
+        assert_eq!(block[a_pad + 1], -1.0); // row1 slot1 (feature 7)
+        // padding untouched
+        assert!(block[3 * a_pad..].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn densify_overflow_returns_false() {
+        let r = sv(&[(1, 1.0), (2, 1.0), (3, 1.0)]);
+        let a = ActiveSet::from_rows([&r]);
+        let mut block = vec![0.0f32; 2 * 2];
+        assert!(!a.densify_into(&[&r], 2, 2, &mut block));
+        assert!(block.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn scatter_inverse_of_densify() {
+        let r = sv(&[(3, 1.0), (9, -2.0), (40, 0.5)]);
+        let a = ActiveSet::from_rows([&r]);
+        let mut block = vec![0.0f32; 1 * 4];
+        assert!(a.densify_into(&[&r], 1, 4, &mut block));
+        let back = scatter_from_block(&a, &block);
+        assert_eq!(back, r);
+    }
+
+    #[test]
+    fn slots_where_filters() {
+        let r = sv(&[(1, 1.0), (2, 1.0), (30, 1.0)]);
+        let a = ActiveSet::from_rows([&r]);
+        let even = a.slots_where(|f| f % 2 == 0);
+        assert_eq!(even, vec![1, 2]);
+    }
+}

@@ -1,0 +1,87 @@
+//! Minimal leveled logger (stderr). No `log`/`env_logger` façade is wired
+//! offline, so the coordinator uses this: `BEAR_LOG=debug` raises verbosity.
+
+use std::io::Write;
+use std::sync::atomic::{AtomicU8, Ordering};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+static MAX_LEVEL: AtomicU8 = AtomicU8::new(2); // Info default
+static INIT: std::sync::Once = std::sync::Once::new();
+
+/// Read `BEAR_LOG` once and set the max level.
+pub fn init_from_env() {
+    INIT.call_once(|| {
+        if let Ok(v) = std::env::var("BEAR_LOG") {
+            let lvl = match v.to_ascii_lowercase().as_str() {
+                "error" => Level::Error,
+                "warn" => Level::Warn,
+                "info" => Level::Info,
+                "debug" => Level::Debug,
+                "trace" => Level::Trace,
+                _ => Level::Info,
+            };
+            MAX_LEVEL.store(lvl as u8, Ordering::Relaxed);
+        }
+    });
+}
+
+pub fn set_level(l: Level) {
+    MAX_LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+#[inline]
+pub fn enabled(l: Level) -> bool {
+    (l as u8) <= MAX_LEVEL.load(Ordering::Relaxed)
+}
+
+pub fn log(l: Level, args: std::fmt::Arguments<'_>) {
+    if enabled(l) {
+        let tag = match l {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        let mut err = std::io::stderr().lock();
+        let _ = writeln!(err, "[bear {tag}] {args}");
+    }
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($t:tt)*) => { $crate::util::logger::log($crate::util::logger::Level::Info, format_args!($($t)*)) };
+}
+#[macro_export]
+macro_rules! warn_ {
+    ($($t:tt)*) => { $crate::util::logger::log($crate::util::logger::Level::Warn, format_args!($($t)*)) };
+}
+#[macro_export]
+macro_rules! debug_ {
+    ($($t:tt)*) => { $crate::util::logger::log($crate::util::logger::Level::Debug, format_args!($($t)*)) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_gating() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Info);
+        assert!(enabled(Level::Info));
+        assert!(!enabled(Level::Debug));
+    }
+}

@@ -1,0 +1,141 @@
+//! Small numeric helpers shared across losses, metrics and optimizers.
+
+/// Numerically-stable sigmoid.
+#[inline]
+pub fn sigmoid(x: f64) -> f64 {
+    if x >= 0.0 {
+        let e = (-x).exp();
+        1.0 / (1.0 + e)
+    } else {
+        let e = x.exp();
+        e / (1.0 + e)
+    }
+}
+
+/// log(1 + exp(x)) without overflow.
+#[inline]
+pub fn log1p_exp(x: f64) -> f64 {
+    if x > 0.0 {
+        x + (-x).exp().ln_1p()
+    } else {
+        x.exp().ln_1p()
+    }
+}
+
+/// Median of a slice (in-place partial sort on a scratch copy).
+/// For even lengths returns the lower-middle mean, matching the Count
+/// Sketch QUERY convention used throughout the paper ("median of d
+/// counters", d usually odd = 3 or 5).
+pub fn median(xs: &[f32]) -> f32 {
+    debug_assert!(!xs.is_empty());
+    let mut buf: Vec<f32> = xs.to_vec();
+    let mid = buf.len() / 2;
+    buf.select_nth_unstable_by(mid, |a, b| a.partial_cmp(b).unwrap());
+    if buf.len() % 2 == 1 {
+        buf[mid]
+    } else {
+        let lo = buf[..mid].iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        0.5 * (lo + buf[mid])
+    }
+}
+
+/// Median for small fixed d without allocation (d ≤ 8). Hot path of
+/// Count Sketch QUERY — see `sketch::CountSketch::query`.
+#[inline]
+pub fn median_small(buf: &mut [f32]) -> f32 {
+    debug_assert!(!buf.is_empty() && buf.len() <= 8);
+    // insertion sort: optimal for d ∈ {3, 5}
+    for i in 1..buf.len() {
+        let mut j = i;
+        while j > 0 && buf[j - 1] > buf[j] {
+            buf.swap(j - 1, j);
+            j -= 1;
+        }
+    }
+    let mid = buf.len() / 2;
+    if buf.len() % 2 == 1 {
+        buf[mid]
+    } else {
+        0.5 * (buf[mid - 1] + buf[mid])
+    }
+}
+
+/// ℓ₂ norm of a dense slice.
+#[inline]
+pub fn l2_norm(xs: &[f64]) -> f64 {
+    xs.iter().map(|x| x * x).sum::<f64>().sqrt()
+}
+
+/// Dot product of two equal-length dense slices.
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+/// `y += alpha * x` over dense slices.
+#[inline]
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sigmoid_stable_extremes() {
+        assert!(sigmoid(1000.0) <= 1.0 && sigmoid(1000.0) > 0.999);
+        assert!(sigmoid(-1000.0) >= 0.0 && sigmoid(-1000.0) < 1e-6);
+        assert!((sigmoid(0.0) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sigmoid_symmetry() {
+        for x in [-5.0, -1.0, 0.3, 2.0, 7.5] {
+            assert!((sigmoid(x) + sigmoid(-x) - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn log1p_exp_matches_naive_in_safe_range() {
+        for x in [-10.0f64, -1.0, 0.0, 1.0, 10.0] {
+            let naive = (1.0f64 + x.exp()).ln();
+            assert!((log1p_exp(x) - naive).abs() < 1e-12);
+        }
+        assert!((log1p_exp(800.0) - 800.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn median_odd_even() {
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median(&[4.0, 1.0, 2.0, 3.0]), 2.5);
+        assert_eq!(median(&[5.0]), 5.0);
+    }
+
+    #[test]
+    fn median_small_matches_median() {
+        let mut r = crate::util::Pcg64::new(17);
+        for len in 1..=8usize {
+            for _ in 0..200 {
+                let xs: Vec<f32> = (0..len).map(|_| r.next_f32() * 10.0 - 5.0).collect();
+                let mut buf = xs.clone();
+                assert_eq!(median_small(&mut buf), median(&xs), "{xs:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn axpy_dot_norm() {
+        let a = vec![1.0, 2.0, 3.0];
+        let b = vec![4.0, 5.0, 6.0];
+        assert_eq!(dot(&a, &b), 32.0);
+        assert!((l2_norm(&a) - 14f64.sqrt()).abs() < 1e-12);
+        let mut y = b.clone();
+        axpy(2.0, &a, &mut y);
+        assert_eq!(y, vec![6.0, 9.0, 12.0]);
+    }
+}

@@ -1,0 +1,12 @@
+//! Small shared utilities: PRNG, timers, logging, numeric helpers.
+//!
+//! The offline build has no `rand`/`log` façade crates wired into binaries,
+//! so these substrates are implemented here from scratch (see DESIGN.md §3).
+
+pub mod logger;
+pub mod math;
+pub mod rng;
+pub mod timer;
+
+pub use rng::Pcg64;
+pub use timer::Timer;

@@ -1,0 +1,113 @@
+//! Wall-clock timing helpers used by the coordinator and the bench harness.
+
+use std::time::{Duration, Instant};
+
+/// A simple accumulating timer: `start`/`stop` pairs accumulate into a
+/// total, so hot-loop phases can be attributed (gradient vs sketch vs heap).
+#[derive(Debug)]
+pub struct Timer {
+    started: Option<Instant>,
+    total: Duration,
+    laps: u64,
+}
+
+impl Default for Timer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Timer {
+    pub fn new() -> Self {
+        Self { started: None, total: Duration::ZERO, laps: 0 }
+    }
+
+    #[inline]
+    pub fn start(&mut self) {
+        debug_assert!(self.started.is_none(), "timer already running");
+        self.started = Some(Instant::now());
+    }
+
+    #[inline]
+    pub fn stop(&mut self) {
+        if let Some(s) = self.started.take() {
+            self.total += s.elapsed();
+            self.laps += 1;
+        }
+    }
+
+    /// Time a closure, attributing its duration to this timer.
+    #[inline]
+    pub fn time<T>(&mut self, f: impl FnOnce() -> T) -> T {
+        self.start();
+        let out = f();
+        self.stop();
+        out
+    }
+
+    pub fn total(&self) -> Duration {
+        self.total
+    }
+
+    pub fn laps(&self) -> u64 {
+        self.laps
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.total.as_secs_f64()
+    }
+
+    /// Mean seconds per lap (0 if never stopped).
+    pub fn mean_secs(&self) -> f64 {
+        if self.laps == 0 {
+            0.0
+        } else {
+            self.secs() / self.laps as f64
+        }
+    }
+}
+
+/// Format a duration like the paper's Table 4 (minutes with one decimal
+/// for long runs, ms/µs for short ones).
+pub fn human_duration(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 60.0 {
+        format!("{:.1} min", s / 60.0)
+    } else if s >= 1.0 {
+        format!("{s:.2} s")
+    } else if s >= 1e-3 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{:.2} µs", s * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_laps() {
+        let mut t = Timer::new();
+        for _ in 0..3 {
+            t.time(|| std::hint::black_box(1 + 1));
+        }
+        assert_eq!(t.laps(), 3);
+        assert!(t.secs() >= 0.0);
+    }
+
+    #[test]
+    fn stop_without_start_is_noop() {
+        let mut t = Timer::new();
+        t.stop();
+        assert_eq!(t.laps(), 0);
+    }
+
+    #[test]
+    fn human_formats() {
+        assert_eq!(human_duration(Duration::from_secs(120)), "2.0 min");
+        assert_eq!(human_duration(Duration::from_millis(1500)), "1.50 s");
+        assert_eq!(human_duration(Duration::from_micros(2500)), "2.50 ms");
+        assert_eq!(human_duration(Duration::from_nanos(2500)), "2.50 µs");
+    }
+}

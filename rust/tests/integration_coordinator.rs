@@ -1,0 +1,130 @@
+//! Coordinator integration: trainer + streaming loader + experiment
+//! runners compose end-to-end, including the PJRT engine when artifacts
+//! are present.
+
+use bear::algo::bear::{Bear, BearConfig};
+use bear::algo::{FeatureSelector, StepSize};
+use bear::coordinator::experiments::{fig1_point, real_point, AlgoKind, RealData, RealSpec, SimulationSpec};
+use bear::coordinator::trainer::{evaluate_binary, Trainer};
+use bear::data::synth::WebspamSim;
+use bear::loss::LossKind;
+
+#[test]
+fn fig1_runner_produces_monotone_ish_curve() {
+    // success should not increase as compression grows (sanity of the
+    // whole Fig. 1 pipeline at miniature scale)
+    let spec = SimulationSpec {
+        p: 240,
+        k: 4,
+        n: 216,
+        trials: 5,
+        batch: 25,
+        max_iters: 2500,
+        eta_grid: vec![0.1],
+        ..Default::default()
+    };
+    let lo = fig1_point(&spec, AlgoKind::Bear, 2.4);
+    let hi = fig1_point(&spec, AlgoKind::Bear, 8.0);
+    assert!(
+        lo.p_success >= hi.p_success,
+        "success rose with compression: {} (CF=2.4) vs {} (CF=8)",
+        lo.p_success,
+        hi.p_success
+    );
+    assert!(lo.p_success >= 0.4, "BEAR weak at CF=2.4: {}", lo.p_success);
+}
+
+#[test]
+fn real_runner_bear_vs_fh_on_webspam_quick() {
+    let spec = RealSpec::quick(RealData::Webspam);
+    let bear = real_point(&spec, RealData::Webspam, AlgoKind::Bear, 100.0, None);
+    let fh = real_point(&spec, RealData::Webspam, AlgoKind::FeatureHashing, 100.0, None);
+    assert!(bear.metric > 0.55, "BEAR webspam acc {}", bear.metric);
+    // FH is a prediction baseline; BEAR should be at least comparable
+    assert!(
+        bear.metric >= fh.metric - 0.1,
+        "BEAR {} far below FH {}",
+        bear.metric,
+        fh.metric
+    );
+    // and BEAR actually selects features; FH cannot
+    assert!(bear.precision_at_k > 0.0);
+    assert_eq!(fh.precision_at_k, 0.0);
+}
+
+#[test]
+fn streaming_trainer_end_to_end_with_eval() {
+    let seed = 31;
+    let mut bear = Bear::new(
+        20_000,
+        BearConfig {
+            sketch_cells: 8192,
+            sketch_rows: 3,
+            top_k: 80,
+            step: StepSize::Constant(0.4),
+            loss: LossKind::Logistic,
+            seed: 7,
+            ..Default::default()
+        },
+    );
+    let train = Box::new(WebspamSim::with_params(20_000, 100, 40, 1200, seed));
+    let log = Trainer::single_epoch(32).run_streaming(&mut bear, train);
+    assert_eq!(log.iterations, 1200u64.div_ceil(32));
+    let mut test = WebspamSim::with_params(20_000, 100, 40, 300, seed);
+    let eval = evaluate_binary(&bear, &mut test);
+    assert!(eval.accuracy > 0.6, "streaming-trained acc {}", eval.accuracy);
+}
+
+#[test]
+fn pjrt_engine_composes_with_trainer_when_artifacts_exist() {
+    let dir = bear::runtime::resolve_artifact_dir(None);
+    let Ok(reg) = bear::runtime::ArtifactRegistry::load(&dir) else {
+        eprintln!("SKIP: no artifacts");
+        return;
+    };
+    let engine = bear::runtime::PjrtEngine::new(std::sync::Arc::new(reg));
+    let mut bear = Bear::with_engine(
+        BearConfig {
+            sketch_cells: 4096,
+            sketch_rows: 3,
+            top_k: 60,
+            step: StepSize::Constant(0.4),
+            loss: LossKind::Logistic,
+            seed: 3,
+            ..Default::default()
+        },
+        Box::new(engine),
+    );
+    let mut train = WebspamSim::with_params(50_000, 90, 40, 600, 17);
+    let log = Trainer::single_epoch(32).run(&mut bear, &mut train);
+    assert!(log.iterations > 0);
+    let mut test = WebspamSim::with_params(50_000, 90, 40, 200, 17);
+    let eval = evaluate_binary(&bear, &mut test);
+    assert!(eval.accuracy > 0.55, "PJRT-trained acc {}", eval.accuracy);
+}
+
+#[test]
+fn table1_memory_shape() {
+    // Table 1: dominant term is the sketch; history ~ 2τ|A|; heap ~ k
+    let mut bear = Bear::new(
+        1 << 30,
+        BearConfig {
+            sketch_cells: 1 << 14,
+            sketch_rows: 4,
+            top_k: 128,
+            tau: 5,
+            step: StepSize::Constant(0.1),
+            loss: LossKind::Logistic,
+            seed: 5,
+            ..Default::default()
+        },
+    );
+    let mut src = WebspamSim::with_params(1 << 30, 100, 30, 200, 23);
+    Trainer::single_epoch(32).run(&mut bear, &mut src);
+    let m = bear.memory_report();
+    assert_eq!(m.model_bytes, (1 << 14) * 4);
+    assert!(m.model_bytes > m.heap_bytes, "sketch must dominate heap");
+    assert!(m.history_bytes > 0, "history must be tracked");
+    // 2τ|A| entries ≈ 5 pairs × (idx+val) × ~3.2k active — well under the sketch
+    assert!(m.history_bytes < 40 * m.model_bytes);
+}

@@ -1,0 +1,209 @@
+//! Runtime integration: the PJRT engine (AOT JAX/Pallas artifacts) must
+//! agree numerically with the native rust reference on every path —
+//! fused, blocked, and the LBFGS two-loop artifact vs the sparse rust
+//! implementation.
+//!
+//! Requires `make artifacts` (skips with a message otherwise — CI runs
+//! `make test` which builds them first).
+
+use bear::loss::{GradientEngine, LossKind, NativeEngine};
+use bear::optim::SparseLbfgs;
+use bear::runtime::{ArtifactRegistry, PjrtEngine};
+use bear::sparse::{ActiveSet, SparseVec};
+use bear::util::Pcg64;
+use std::sync::Arc;
+
+fn registry() -> Option<Arc<ArtifactRegistry>> {
+    let dir = bear::runtime::resolve_artifact_dir(None);
+    match ArtifactRegistry::load(&dir) {
+        Ok(r) => Some(Arc::new(r)),
+        Err(e) => {
+            eprintln!("SKIP runtime integration: {e:#}");
+            None
+        }
+    }
+}
+
+fn random_batch(
+    rng: &mut Pcg64,
+    rows: usize,
+    p: u64,
+    nnz_per_row: usize,
+) -> (Vec<SparseVec>, Vec<f32>) {
+    let data: Vec<SparseVec> = (0..rows)
+        .map(|_| {
+            let pairs = rng
+                .sample_distinct(p, nnz_per_row)
+                .into_iter()
+                .map(|f| (f, rng.gaussian() as f32))
+                .collect();
+            SparseVec::from_pairs(pairs)
+        })
+        .collect();
+    let labels = (0..rows).map(|_| (rng.next_u64() & 1) as f32).collect();
+    (data, labels)
+}
+
+fn check_parity(
+    loss: LossKind,
+    rows_n: usize,
+    p: u64,
+    nnz: usize,
+    seed: u64,
+    reg: &Arc<ArtifactRegistry>,
+) {
+    let mut rng = Pcg64::new(seed);
+    let (rows, labels) = random_batch(&mut rng, rows_n, p, nnz);
+    let refs: Vec<&SparseVec> = rows.iter().collect();
+    let active = ActiveSet::from_rows(rows.iter());
+    let beta: Vec<f32> = (0..active.len()).map(|_| rng.gaussian() as f32 * 0.3).collect();
+
+    let mut native = NativeEngine::new();
+    let (g0, l0) = native.grad_active(&refs, &labels, &active, &beta, loss);
+
+    let mut pjrt = PjrtEngine::new(reg.clone());
+    let (g1, l1) = pjrt.grad_active(&refs, &labels, &active, &beta, loss);
+    assert_eq!(
+        pjrt.stats.native_calls, 0,
+        "PJRT fell back to native (active={} rows={})",
+        active.len(),
+        rows_n
+    );
+
+    assert_eq!(g0.len(), g1.len());
+    for (i, (a, b)) in g0.iter().zip(&g1).enumerate() {
+        assert!(
+            (a - b).abs() < 1e-4 * (1.0 + a.abs()),
+            "grad[{i}] native {a} vs pjrt {b} (loss {loss:?})"
+        );
+    }
+    assert!(
+        (l0 - l1).abs() < 1e-4 * (1.0 + l0.abs()),
+        "loss native {l0} vs pjrt {l1} ({loss:?})"
+    );
+}
+
+#[test]
+fn fused_path_matches_native_small() {
+    let Some(reg) = registry() else { return };
+    for loss in [LossKind::Mse, LossKind::Logistic] {
+        // fits the (32, 128) variant
+        check_parity(loss, 8, 1_000, 12, 42, &reg);
+    }
+}
+
+#[test]
+fn fused_path_matches_native_medium() {
+    let Some(reg) = registry() else { return };
+    // ~600 active features → needs the (64, 1024) variant
+    check_parity(LossKind::Logistic, 32, 1 << 30, 20, 43, &reg);
+}
+
+#[test]
+fn blocked_path_matches_native() {
+    let Some(reg) = registry() else { return };
+    // force the chunked path: ~6000 unique active > largest fused A=4096
+    let mut rng = Pcg64::new(44);
+    let (rows, labels) = random_batch(&mut rng, 64, 1 << 40, 100);
+    let refs: Vec<&SparseVec> = rows.iter().collect();
+    let active = ActiveSet::from_rows(rows.iter());
+    assert!(active.len() > 4096, "test needs a big active set, got {}", active.len());
+    let beta: Vec<f32> = (0..active.len()).map(|_| rng.gaussian() as f32 * 0.1).collect();
+
+    let mut native = NativeEngine::new();
+    let (g0, l0) = native.grad_active(&refs, &labels, &active, &beta, LossKind::Logistic);
+    let mut pjrt = PjrtEngine::new(reg.clone());
+    let (g1, l1) = pjrt.grad_active(&refs, &labels, &active, &beta, LossKind::Logistic);
+    assert!(pjrt.stats.blocked_calls == 1, "expected blocked path: {:?}", pjrt.stats);
+    assert!(pjrt.stats.blocked_tiles >= 2);
+    for (i, (a, b)) in g0.iter().zip(&g1).enumerate() {
+        assert!((a - b).abs() < 1e-4 * (1.0 + a.abs()), "grad[{i}]: {a} vs {b}");
+    }
+    assert!((l0 - l1).abs() < 1e-4 * (1.0 + l0.abs()), "{l0} vs {l1}");
+}
+
+#[test]
+fn lbfgs_artifact_matches_sparse_rust() {
+    let Some(reg) = registry() else { return };
+    let mut rng = Pcg64::new(45);
+    let a = 100usize;
+    let tau = 5usize;
+    // build a sparse history on a dense active set of width a
+    let row = SparseVec::from_pairs((0..a as u64).map(|i| (i, 1.0)).collect());
+    let active = ActiveSet::from_rows([&row]);
+    let mut lbfgs = SparseLbfgs::new(tau);
+    for _ in 0..tau {
+        let s = SparseVec::from_pairs(
+            (0..a as u64).map(|i| (i, rng.gaussian() as f32 * 0.2)).collect(),
+        );
+        let mut r = s.clone();
+        // positive-definite twist
+        for (k, v) in r.val.iter_mut().enumerate() {
+            *v *= 1.0 + 0.07 * (k as f32 % 11.0);
+        }
+        assert!(lbfgs.push(s, r));
+    }
+    let g = SparseVec::from_pairs((0..a as u64).map(|i| (i, rng.gaussian() as f32)).collect());
+    let z_rust = lbfgs.direction(&g);
+
+    let (s_blk, r_blk, rho) = lbfgs.export_blocks(&active, tau, a);
+    let g_dense: Vec<f32> = (0..a).map(|s| g.get(active.feature_at(s))).collect();
+    let mut pjrt = PjrtEngine::new(reg.clone());
+    let z_pjrt = pjrt.lbfgs_direction(&g_dense, &s_blk, &r_blk, &rho, a, tau).unwrap();
+
+    for s in 0..a {
+        let zr = z_rust.get(active.feature_at(s));
+        let zp = z_pjrt[s];
+        assert!(
+            (zr - zp).abs() < 2e-3 * (1.0 + zr.abs()),
+            "z[{s}]: rust {zr} vs pjrt {zp}"
+        );
+    }
+}
+
+#[test]
+fn bear_trains_identically_with_pjrt_engine() {
+    use bear::algo::bear::{Bear, BearConfig};
+    use bear::algo::{FeatureSelector, StepSize};
+    use bear::data::synth::GaussianLinear;
+
+    let Some(reg) = registry() else { return };
+    let cfg = BearConfig {
+        sketch_cells: 200,
+        sketch_rows: 3,
+        top_k: 4,
+        tau: 5,
+        step: StepSize::Constant(0.1),
+        loss: LossKind::Mse,
+        seed: 9,
+        ..Default::default()
+    };
+    let run = |engine: Box<dyn GradientEngine>| {
+        let mut gen = GaussianLinear::new(100, 4, 77);
+        let (mut data, truth) = gen.dataset(200);
+        let mut bear = Bear::with_engine(cfg.clone(), engine);
+        bear.fit_source(&mut data, 20, 3);
+        let sel: Vec<u64> = bear.top_features().iter().map(|&(f, _)| f).collect();
+        (sel, truth)
+    };
+    let (sel_native, truth) = run(Box::new(NativeEngine::new()));
+    let (sel_pjrt, _) = run(Box::new(PjrtEngine::new(reg)));
+    // identical data + hash seeds; engines differ only in float summation
+    // order, so the selected support must agree
+    assert_eq!(sel_native, sel_pjrt, "engines selected different features");
+    let hits = truth.idx.iter().filter(|f| sel_native.contains(f)).count();
+    assert!(hits >= 3, "support recovery degraded: {hits}/4");
+}
+
+#[test]
+fn registry_lists_all_kinds() {
+    let Some(reg) = registry() else { return };
+    use bear::runtime::ArtifactKind::*;
+    for kind in [Grad, Predict, GradTile, Lbfgs, BearStep] {
+        assert!(
+            reg.max_block(kind, None).is_some(),
+            "no artifact of kind {kind:?} in registry"
+        );
+    }
+    assert!(reg.len() >= 18, "expected ≥18 artifacts, got {}", reg.len());
+}
