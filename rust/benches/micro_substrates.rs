@@ -110,6 +110,7 @@ fn main() {
     b.iter("native logistic grad", || {
         std::hint::black_box(native.grad_active(&refs, &labels, &active, &beta, LossKind::Logistic));
     });
+    #[cfg(feature = "xla")]
     match bear::runtime::PjrtEngine::from_dir(None) {
         Ok(mut pjrt) => {
             b.iter("pjrt logistic grad (fused)", || {
@@ -121,6 +122,8 @@ fn main() {
         }
         Err(e) => println!("  (pjrt unavailable: {e})"),
     }
+    #[cfg(not(feature = "xla"))]
+    println!("  (pjrt unavailable: built without the `xla` feature)");
     b.report();
 
     // -- densify -------------------------------------------------------

@@ -1,0 +1,101 @@
+//! Serving-tier benchmark: train a small BEAR model, serve it over HTTP
+//! on an ephemeral port, and drive it with the closed-loop load generator
+//! at several (server workers × client threads) operating points.
+//! Reports sustained QPS, query throughput, and p50/p99/p99.9 latency.
+//!
+//!     cargo bench --bench serving
+//!     BEAR_BENCH_QUICK=1 cargo bench --bench serving   # smoke sizes
+
+use bear::algo::bear::{Bear, BearConfig};
+use bear::algo::StepSize;
+use bear::bench_util::quick_mode;
+use bear::coordinator::experiments::RealData;
+use bear::coordinator::report::{f3, Table};
+use bear::data::synth::Rcv1Sim;
+use bear::loss::LossKind;
+use bear::serve::loadgen::{self, LoadgenConfig};
+use bear::serve::snapshot::ServableModel;
+use bear::serve::{serve, ServerConfig};
+use bear::util::timer::human_duration;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn main() {
+    let quick = quick_mode();
+    let (n_train, requests_per_thread, queries_per_request) =
+        if quick { (300, 30, 8) } else { (1500, 300, 16) };
+
+    eprintln!("[serving bench] training BEAR on the RCV1 surrogate (n={n_train})...");
+    let cfg = BearConfig {
+        sketch_cells: 1 << 15,
+        sketch_rows: 3,
+        top_k: 400,
+        tau: 5,
+        step: StepSize::Constant(0.01),
+        loss: LossKind::Logistic,
+        seed: 0xBEA2,
+        ..Default::default()
+    };
+    let mut model = Bear::new(bear::data::synth::RCV1_DIM, cfg);
+    let mut train = Rcv1Sim::new(n_train, 3);
+    model.fit_source(&mut train, 32, 1);
+    let snapshot = Arc::new(ServableModel::from_sketched(
+        model.state(),
+        LossKind::Logistic,
+        0.0,
+    ));
+    eprintln!(
+        "[serving bench] snapshot: {} features, {} sketch cells, {} bytes",
+        snapshot.n_features(),
+        snapshot.sketch_cells(),
+        snapshot.memory_bytes()
+    );
+
+    let mut t = Table::new(
+        &format!(
+            "bear serve — closed-loop loadgen ({requests_per_thread} reqs/thread × {queries_per_request} queries/req, RCV1 queries)"
+        ),
+        &["workers", "clients", "QPS", "queries/s", "p50", "p99", "p99.9", "err", "wall"],
+    );
+
+    let combos: &[(usize, usize)] =
+        if quick { &[(2, 4)] } else { &[(1, 4), (2, 4), (4, 4), (4, 8)] };
+    for &(workers, clients) in combos {
+        let handle = serve(
+            snapshot.clone(),
+            ServerConfig { workers, ..Default::default() },
+        )
+        .expect("bind ephemeral serve port");
+        let cfg = LoadgenConfig {
+            threads: clients,
+            requests_per_thread,
+            queries_per_request,
+            dataset: RealData::Rcv1,
+            seed: 0x10AD,
+        };
+        let report =
+            loadgen::run(&handle.addr().to_string(), &cfg).expect("loadgen run");
+        let us = |v: f64| human_duration(Duration::from_micros(v as u64));
+        t.row(&[
+            workers.to_string(),
+            clients.to_string(),
+            format!("{:.0}", report.qps()),
+            format!("{:.0}", report.query_throughput()),
+            us(report.latency.p50_micros()),
+            us(report.latency.p99_micros()),
+            us(report.latency.p999_micros()),
+            report.errors.to_string(),
+            human_duration(report.wall),
+        ]);
+        // server-side view: micro-batching effectiveness at this point
+        let s = handle.stats();
+        eprintln!(
+            "  workers={workers} clients={clients}: micro-batches={} (avg {} queries/batch), server p99={}",
+            s.micro_batches,
+            f3(s.micro_batch_queries as f64 / s.micro_batches.max(1) as f64),
+            us(s.latency.p99_micros()),
+        );
+        handle.shutdown();
+    }
+    t.print();
+}

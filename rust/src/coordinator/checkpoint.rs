@@ -7,21 +7,28 @@
 //! enough. Hand-rolled (no serde offline): little-endian, versioned,
 //! CRC-checked.
 //!
-//! Layout:
+//! Format v2 layout (v1 lacked the hash_seed/query_mode/loss header
+//! fields; v1 files are still readable — see [`load_with_meta`]):
 //! ```text
-//! magic "BEARCKPT" | u32 version | u64 config_fingerprint
+//! magic "BEARCKPT" | u32 version (=2) | u64 config_fingerprint
+//! | u64 hash_seed | u32 query_mode (0=median, 1=mean) | u32 loss (0=mse, 1=logistic)
 //! | u32 rows | u32 cols | f32 × rows·cols   (sketch counters)
 //! | u32 heap_len | (u64 feature, f32 weight) × heap_len
 //! | u32 crc32 of everything above
 //! ```
+//!
+//! The serving snapshot format (`serve::snapshot`, magic "BEARSNAP")
+//! extends the same primitives; its writer/reader reuse the helpers here.
 
 use crate::algo::sketched::SketchedState;
+use crate::loss::LossKind;
+use crate::sketch::QueryMode;
 use anyhow::{bail, Context, Result};
 use std::io::{Read, Write};
 use std::path::Path;
 
 const MAGIC: &[u8; 8] = b"BEARCKPT";
-const VERSION: u32 = 1;
+const VERSION: u32 = 2;
 
 /// CRC-32 (IEEE) — small table-less implementation, good enough for
 /// corruption detection on checkpoint files.
@@ -37,23 +44,61 @@ pub fn crc32(data: &[u8]) -> u32 {
     !crc
 }
 
-fn put_u32(buf: &mut Vec<u8>, v: u32) {
+pub(crate) fn put_u32(buf: &mut Vec<u8>, v: u32) {
     buf.extend_from_slice(&v.to_le_bytes());
 }
-fn put_u64(buf: &mut Vec<u8>, v: u64) {
+pub(crate) fn put_u64(buf: &mut Vec<u8>, v: u64) {
     buf.extend_from_slice(&v.to_le_bytes());
 }
-fn put_f32(buf: &mut Vec<u8>, v: f32) {
+pub(crate) fn put_f32(buf: &mut Vec<u8>, v: f32) {
     buf.extend_from_slice(&v.to_le_bytes());
 }
 
-struct Reader<'a> {
+pub(crate) fn encode_query_mode(m: QueryMode) -> u32 {
+    match m {
+        QueryMode::Median => 0,
+        QueryMode::Mean => 1,
+    }
+}
+
+pub(crate) fn decode_query_mode(v: u32) -> Result<QueryMode> {
+    Ok(match v {
+        0 => QueryMode::Median,
+        1 => QueryMode::Mean,
+        other => bail!("unknown query mode tag {other}"),
+    })
+}
+
+pub(crate) fn encode_loss(l: LossKind) -> u32 {
+    match l {
+        LossKind::Mse => 0,
+        LossKind::Logistic => 1,
+    }
+}
+
+pub(crate) fn decode_loss(v: u32) -> Result<LossKind> {
+    Ok(match v {
+        0 => LossKind::Mse,
+        1 => LossKind::Logistic,
+        other => bail!("unknown loss tag {other}"),
+    })
+}
+
+pub(crate) struct Reader<'a> {
     data: &'a [u8],
     pos: usize,
 }
 
 impl<'a> Reader<'a> {
-    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+    pub(crate) fn new(data: &'a [u8]) -> Self {
+        Self { data, pos: 0 }
+    }
+    /// Bytes left to read — validates untrusted length fields before any
+    /// length-driven allocation.
+    pub(crate) fn remaining(&self) -> usize {
+        self.data.len().saturating_sub(self.pos)
+    }
+    pub(crate) fn take(&mut self, n: usize) -> Result<&'a [u8]> {
         if self.pos + n > self.data.len() {
             bail!("checkpoint truncated at offset {}", self.pos);
         }
@@ -61,36 +106,34 @@ impl<'a> Reader<'a> {
         self.pos += n;
         Ok(s)
     }
-    fn u32(&mut self) -> Result<u32> {
+    pub(crate) fn u32(&mut self) -> Result<u32> {
         Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
-    fn u64(&mut self) -> Result<u64> {
+    pub(crate) fn u64(&mut self) -> Result<u64> {
         Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
-    fn f32(&mut self) -> Result<f32> {
+    pub(crate) fn f32(&mut self) -> Result<f32> {
         Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
 }
 
-/// Serialize a sketched state. `fingerprint` should encode whatever must
-/// match on restore (sketch geometry + hash seed + dataset id); use
-/// [`config_fingerprint`].
-pub fn save(state: &SketchedState, fingerprint: u64, path: &Path) -> Result<()> {
-    let mut buf = Vec::with_capacity(64 + state.cs.raw().len() * 4);
-    buf.extend_from_slice(MAGIC);
-    put_u32(&mut buf, VERSION);
-    put_u64(&mut buf, fingerprint);
-    put_u32(&mut buf, state.cs.rows() as u32);
-    put_u32(&mut buf, state.cs.cols() as u32);
-    for &c in state.cs.raw() {
-        put_f32(&mut buf, c);
+/// Verify the trailing CRC and return the covered body. Shared by the
+/// checkpoint and serving-snapshot readers.
+pub(crate) fn checked_body<'a>(data: &'a [u8], min_len: usize) -> Result<&'a [u8]> {
+    if data.len() < min_len + 4 {
+        bail!("checkpoint too short");
     }
-    let items = state.heap.items_sorted();
-    put_u32(&mut buf, items.len() as u32);
-    for (f, w) in items {
-        put_u64(&mut buf, f);
-        put_f32(&mut buf, w);
+    let (body, crc_bytes) = data.split_at(data.len() - 4);
+    let want = u32::from_le_bytes(crc_bytes.try_into().unwrap());
+    let got = crc32(body);
+    if want != got {
+        bail!("checkpoint CRC mismatch: file {want:#010x} vs computed {got:#010x}");
     }
+    Ok(body)
+}
+
+/// Atomically write `buf` + its CRC to `path` (tmp file + rename).
+pub(crate) fn commit_with_crc(mut buf: Vec<u8>, path: &Path) -> Result<()> {
     let crc = crc32(&buf);
     put_u32(&mut buf, crc);
     let tmp = path.with_extension("tmp");
@@ -104,32 +147,105 @@ pub fn save(state: &SketchedState, fingerprint: u64, path: &Path) -> Result<()> 
     Ok(())
 }
 
+/// Self-describing header fields of a (v2) checkpoint.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CheckpointMeta {
+    /// Caller-defined config fingerprint (see [`config_fingerprint`]).
+    pub fingerprint: u64,
+    /// Master seed of the Count Sketch hash family.
+    pub hash_seed: u64,
+    /// Estimator the sketch was trained with.
+    pub query_mode: QueryMode,
+    /// Loss the model was trained on.
+    pub loss: LossKind,
+}
+
+/// Serialize a sketched state (format v2). `fingerprint` should encode
+/// whatever must match on restore beyond the self-describing header (e.g.
+/// a dataset id); use [`config_fingerprint`]. Hash seed and query mode are
+/// taken from the state itself; the loss defaults to logistic (the
+/// real-data setting) — use [`save_with_meta`] to record it explicitly.
+pub fn save(state: &SketchedState, fingerprint: u64, path: &Path) -> Result<()> {
+    let meta = CheckpointMeta {
+        fingerprint,
+        hash_seed: state.cs.seed(),
+        query_mode: state.cs.query_mode(),
+        loss: LossKind::Logistic,
+    };
+    save_with_meta(state, &meta, path)
+}
+
+/// Serialize a sketched state with an explicit header (format v2).
+pub fn save_with_meta(state: &SketchedState, meta: &CheckpointMeta, path: &Path) -> Result<()> {
+    let mut buf = Vec::with_capacity(80 + state.cs.raw().len() * 4);
+    buf.extend_from_slice(MAGIC);
+    put_u32(&mut buf, VERSION);
+    put_u64(&mut buf, meta.fingerprint);
+    put_u64(&mut buf, meta.hash_seed);
+    put_u32(&mut buf, encode_query_mode(meta.query_mode));
+    put_u32(&mut buf, encode_loss(meta.loss));
+    put_u32(&mut buf, state.cs.rows() as u32);
+    put_u32(&mut buf, state.cs.cols() as u32);
+    for &c in state.cs.raw() {
+        put_f32(&mut buf, c);
+    }
+    let items = state.heap.items_sorted();
+    put_u32(&mut buf, items.len() as u32);
+    for (f, w) in items {
+        put_u64(&mut buf, f);
+        put_f32(&mut buf, w);
+    }
+    commit_with_crc(buf, path)
+}
+
 /// Restore into an existing state (geometry must match; counters and heap
 /// contents are replaced). Returns the stored fingerprint — callers must
 /// verify it against their config.
 pub fn load(state: &mut SketchedState, path: &Path) -> Result<u64> {
+    Ok(load_with_meta(state, path)?.fingerprint)
+}
+
+/// Restore into an existing state, returning the full header. Reads both
+/// format v2 and legacy v1 files; for v1 (which carried no hash seed /
+/// query mode / loss) the returned meta echoes the state's own seed and
+/// mode and defaults the loss to logistic. For v2, the stored hash seed
+/// must match the state's (different seeds ⇒ different hash functions ⇒
+/// the counters would be reinterpreted as garbage) and the stored query
+/// mode is applied to the restored sketch.
+pub fn load_with_meta(state: &mut SketchedState, path: &Path) -> Result<CheckpointMeta> {
     let mut data = Vec::new();
     std::fs::File::open(path)
         .with_context(|| format!("opening checkpoint {path:?}"))?
         .read_to_end(&mut data)?;
-    if data.len() < MAGIC.len() + 8 + 4 {
-        bail!("checkpoint too short");
-    }
-    let (body, crc_bytes) = data.split_at(data.len() - 4);
-    let want = u32::from_le_bytes(crc_bytes.try_into().unwrap());
-    let got = crc32(body);
-    if want != got {
-        bail!("checkpoint CRC mismatch: file {want:#010x} vs computed {got:#010x}");
-    }
-    let mut r = Reader { data: body, pos: 0 };
+    let body = checked_body(&data, MAGIC.len() + 8)?;
+    let mut r = Reader::new(body);
     if r.take(8)? != MAGIC {
         bail!("not a BEAR checkpoint (bad magic)");
     }
     let version = r.u32()?;
-    if version != VERSION {
+    if version != 1 && version != VERSION {
         bail!("unsupported checkpoint version {version}");
     }
     let fingerprint = r.u64()?;
+    let meta = if version >= 2 {
+        let hash_seed = r.u64()?;
+        let query_mode = decode_query_mode(r.u32()?)?;
+        let loss = decode_loss(r.u32()?)?;
+        if hash_seed != state.cs.seed() {
+            bail!(
+                "hash seed mismatch: checkpoint {hash_seed:#x}, state {:#x}",
+                state.cs.seed()
+            );
+        }
+        CheckpointMeta { fingerprint, hash_seed, query_mode, loss }
+    } else {
+        CheckpointMeta {
+            fingerprint,
+            hash_seed: state.cs.seed(),
+            query_mode: state.cs.query_mode(),
+            loss: LossKind::Logistic,
+        }
+    };
     let rows = r.u32()? as usize;
     let cols = r.u32()? as usize;
     if rows != state.cs.rows() || cols != state.cs.cols() {
@@ -144,6 +260,9 @@ pub fn load(state: &mut SketchedState, path: &Path) -> Result<u64> {
         counters.push(r.f32()?);
     }
     state.cs.load_raw(&counters);
+    if version >= 2 {
+        state.cs.set_query_mode(meta.query_mode);
+    }
     let heap_len = r.u32()? as usize;
     // rebuild the heap from scratch
     let cap = state.heap.capacity();
@@ -153,7 +272,7 @@ pub fn load(state: &mut SketchedState, path: &Path) -> Result<u64> {
         let w = r.f32()?;
         state.heap.offer(f, w);
     }
-    Ok(fingerprint)
+    Ok(meta)
 }
 
 /// A stable fingerprint over the fields that must match on restore.
@@ -185,6 +304,29 @@ mod tests {
         st
     }
 
+    /// Hand-write the legacy v1 layout (no hash seed / mode / loss header)
+    /// so the compatibility path stays covered after the v2 bump.
+    fn write_v1(state: &SketchedState, fingerprint: u64, path: &std::path::Path) {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(MAGIC);
+        put_u32(&mut buf, 1);
+        put_u64(&mut buf, fingerprint);
+        put_u32(&mut buf, state.cs.rows() as u32);
+        put_u32(&mut buf, state.cs.cols() as u32);
+        for &c in state.cs.raw() {
+            put_f32(&mut buf, c);
+        }
+        let items = state.heap.items_sorted();
+        put_u32(&mut buf, items.len() as u32);
+        for (f, w) in items {
+            put_u64(&mut buf, f);
+            put_f32(&mut buf, w);
+        }
+        let crc = crc32(&buf);
+        put_u32(&mut buf, crc);
+        std::fs::write(path, &buf).unwrap();
+    }
+
     #[test]
     fn roundtrip_preserves_everything() {
         let st = populated_state();
@@ -196,6 +338,56 @@ mod tests {
         assert_eq!(fp, fp2);
         assert_eq!(st.cs.raw(), st2.cs.raw());
         assert_eq!(st.top_features(), st2.top_features());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn v2_header_roundtrips_meta() {
+        let mut st = populated_state();
+        st.cs.set_query_mode(crate::sketch::QueryMode::Mean);
+        let path = tmpfile("meta");
+        let meta = CheckpointMeta {
+            fingerprint: 77,
+            hash_seed: st.cs.seed(),
+            query_mode: crate::sketch::QueryMode::Mean,
+            loss: LossKind::Mse,
+        };
+        save_with_meta(&st, &meta, &path).unwrap();
+        // restore into a median-mode state: the stored mode must win
+        let mut st2 = SketchedState::new(512, 4, 8, 42);
+        assert_eq!(st2.cs.query_mode(), crate::sketch::QueryMode::Median);
+        let got = load_with_meta(&mut st2, &path).unwrap();
+        assert_eq!(got, meta);
+        assert_eq!(st2.cs.query_mode(), crate::sketch::QueryMode::Mean);
+        assert_eq!(st.cs.raw(), st2.cs.raw());
+        assert_eq!(st.top_features(), st2.top_features());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn v1_files_still_load() {
+        let st = populated_state();
+        let path = tmpfile("v1compat");
+        write_v1(&st, 123, &path);
+        let mut st2 = SketchedState::new(512, 4, 8, 42);
+        let meta = load_with_meta(&mut st2, &path).unwrap();
+        assert_eq!(meta.fingerprint, 123);
+        // v1 carries no header fields: meta echoes the state's own config
+        assert_eq!(meta.hash_seed, 42);
+        assert_eq!(meta.query_mode, crate::sketch::QueryMode::Median);
+        assert_eq!(st.cs.raw(), st2.cs.raw());
+        assert_eq!(st.top_features(), st2.top_features());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn v2_rejects_hash_seed_mismatch() {
+        let st = populated_state(); // seed 42
+        let path = tmpfile("seedmismatch");
+        save(&st, 1, &path).unwrap();
+        let mut other = SketchedState::new(512, 4, 8, 43); // different seed
+        let err = load(&mut other, &path).unwrap_err();
+        assert!(format!("{err}").contains("hash seed"), "{err}");
         std::fs::remove_file(&path).ok();
     }
 

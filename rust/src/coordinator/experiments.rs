@@ -365,16 +365,25 @@ impl RealSpec {
     }
 }
 
-/// Train+evaluate one (dataset, algorithm, CF) cell. `top_k_eval`
-/// restricts inference to the k heaviest features (Fig. 3); None uses the
-/// full model (Fig. 2).
-pub fn real_point(
-    spec: &RealSpec,
-    dataset: RealData,
-    algo: AlgoKind,
-    compression: f64,
-    top_k_eval: Option<usize>,
-) -> RealRow {
+/// Per-run training configuration derived from (dataset, spec, CF) —
+/// shared by [`real_point`] and the serving export path
+/// (`serve::train_servable`), so `bear export` trains exactly the model
+/// `bear train` measures.
+#[derive(Clone, Debug)]
+pub struct TrainSetup {
+    pub cfg: BearConfig,
+    pub eta: f64,
+    pub top_k: usize,
+    pub batch: usize,
+    /// Total sketch-cell budget across classes (the CF accounting, Sec. 7).
+    pub total_cells: usize,
+    /// Budget per class (== `total_cells` for binary tasks).
+    pub per_class_cells: usize,
+}
+
+/// Derive the per-run config: dataset defaults, spec overrides, and the
+/// CF → cell-budget conversion.
+pub fn train_setup(dataset: RealData, spec: &RealSpec, compression: f64) -> TrainSetup {
     let (mut eta, mut top_k, mut batch) = dataset.train_defaults();
     if let Some(e) = spec.eta {
         eta = e;
@@ -387,15 +396,11 @@ pub fn real_point(
     }
     let classes = dataset.num_classes();
     let p = dataset.dim();
-    // CF counts the total sketch memory across classes (Sec. 7)
+    // CF counts the *total* sketch memory across classes (Sec. 7): binary
+    // tasks use one sketch with the full budget; the 15-class DNA task
+    // splits it across classes
     let total_cells = ((p as f64 / compression).round() as usize).max(classes * 8);
-    // CF counts the *total* sketch memory: binary tasks use one sketch with
-    // the full budget; the 15-class DNA task splits it across classes
     let per_class_cells = if classes == 2 { total_cells } else { (total_cells / classes).max(8) };
-    let (mut train, mut test) = dataset.make(spec.n_train, spec.n_test, spec.seed);
-    let planted = dataset.planted_ids(spec.seed);
-    let start = std::time::Instant::now();
-
     let cfg = BearConfig {
         sketch_cells: per_class_cells,
         sketch_rows: spec.sketch_rows,
@@ -406,6 +411,26 @@ pub fn real_point(
         seed: spec.seed ^ 0xC0DE,
         ..Default::default()
     };
+    TrainSetup { cfg, eta, top_k, batch, total_cells, per_class_cells }
+}
+
+/// Train+evaluate one (dataset, algorithm, CF) cell. `top_k_eval`
+/// restricts inference to the k heaviest features (Fig. 3); None uses the
+/// full model (Fig. 2).
+pub fn real_point(
+    spec: &RealSpec,
+    dataset: RealData,
+    algo: AlgoKind,
+    compression: f64,
+    top_k_eval: Option<usize>,
+) -> RealRow {
+    let TrainSetup { cfg, eta, top_k, batch, total_cells, per_class_cells } =
+        train_setup(dataset, spec, compression);
+    let classes = dataset.num_classes();
+    let p = dataset.dim();
+    let (mut train, mut test) = dataset.make(spec.n_train, spec.n_test, spec.seed);
+    let planted = dataset.planted_ids(spec.seed);
+    let start = std::time::Instant::now();
 
     let mut trainer = Trainer::single_epoch(batch);
     trainer.epochs = spec.epochs;

@@ -7,14 +7,17 @@
 //! architecture sketches (tokio is not in the offline vendor set).
 
 use crate::data::{DataSource, Minibatch};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Duration;
 
 /// Handle to a background minibatch producer.
 pub struct StreamLoader {
-    rx: Receiver<Minibatch>,
+    rx: Option<Receiver<Minibatch>>,
     handle: Option<JoinHandle<()>>,
+    producer_done: Arc<AtomicBool>,
 }
 
 impl StreamLoader {
@@ -28,36 +31,61 @@ impl StreamLoader {
     ) -> Self {
         assert!(batch_size > 0 && capacity > 0 && epochs > 0);
         let (tx, rx): (SyncSender<Minibatch>, Receiver<Minibatch>) = sync_channel(capacity);
+        let producer_done = Arc::new(AtomicBool::new(false));
+        let done = producer_done.clone();
         let handle = std::thread::Builder::new()
             .name("bear-loader".into())
             .spawn(move || {
-                for _ in 0..epochs {
+                'epochs: for _ in 0..epochs {
                     source.reset();
                     while let Some(b) = source.next_minibatch(batch_size) {
                         // send blocks when the channel is full: backpressure
                         if tx.send(b).is_err() {
-                            return; // consumer dropped early
+                            break 'epochs; // consumer dropped early
                         }
                     }
                 }
+                done.store(true, Ordering::Release);
             })
             .expect("spawn loader thread");
-        Self { rx, handle: Some(handle) }
+        Self { rx: Some(rx), handle: Some(handle), producer_done }
     }
 
     /// Next prefetched minibatch (None at end of stream).
     pub fn next(&mut self) -> Option<Minibatch> {
-        self.rx.recv().ok()
+        self.rx.as_ref().and_then(|rx| rx.recv().ok())
     }
 
     /// Non-blocking variant with a timeout; Err(timeout) means the
     /// producer is alive but slow.
     pub fn next_timeout(&mut self, d: Duration) -> Result<Option<Minibatch>, ()> {
-        match self.rx.recv_timeout(d) {
+        let Some(rx) = self.rx.as_ref() else { return Ok(None) };
+        match rx.recv_timeout(d) {
             Ok(b) => Ok(Some(b)),
             Err(RecvTimeoutError::Disconnected) => Ok(None),
             Err(RecvTimeoutError::Timeout) => Err(()),
         }
+    }
+
+    /// Tear down the producer: disconnect the channel (a producer blocked
+    /// in `send` on a full channel sees the disconnect and exits) and join
+    /// the thread. Idempotent; `Drop` calls this, so an early-exiting
+    /// consumer (e.g. `grad_tol` firing mid-epoch) can never leak a
+    /// blocked `bear-loader` thread.
+    pub fn shutdown(&mut self) {
+        // dropping the receiver disconnects the channel whatever its fill
+        // level, unblocking a producer stuck in send()
+        drop(self.rx.take());
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+
+    /// Whether the producer thread has run to completion (test hook for
+    /// the shutdown path).
+    #[doc(hidden)]
+    pub fn producer_done(&self) -> bool {
+        self.producer_done.load(Ordering::Acquire)
     }
 }
 
@@ -70,16 +98,7 @@ impl Iterator for StreamLoader {
 
 impl Drop for StreamLoader {
     fn drop(&mut self) {
-        // closing rx unblocks the producer's send; then join
-        // (drain first so a blocked producer sees the disconnect)
-        while self.rx.try_recv().is_ok() {}
-        drop(std::mem::replace(&mut self.rx, {
-            let (_tx, rx) = sync_channel(1);
-            rx
-        }));
-        if let Some(h) = self.handle.take() {
-            let _ = h.join();
-        }
+        self.shutdown();
     }
 }
 
@@ -135,6 +154,35 @@ mod tests {
     fn early_drop_shuts_down_producer() {
         let loader = StreamLoader::spawn(toy_source(100_000), 1, 2, 1);
         drop(loader); // must not hang
+    }
+
+    #[test]
+    fn drop_with_batches_in_flight_joins_producer() {
+        // capacity 2, huge epoch: after consuming a couple of batches the
+        // producer is parked in send() on a full channel. Dropping the
+        // loader mid-stream must disconnect, unblock it, and join — the
+        // done flag proves the thread ran to completion, not just that we
+        // stopped waiting for it.
+        let mut loader = StreamLoader::spawn(toy_source(100_000), 1, 2, 1);
+        assert!(loader.next().is_some());
+        assert!(loader.next().is_some());
+        // give the producer time to refill the channel and block in send
+        std::thread::sleep(Duration::from_millis(10));
+        let done = loader.producer_done.clone();
+        assert!(!done.load(std::sync::atomic::Ordering::Acquire));
+        drop(loader);
+        assert!(done.load(std::sync::atomic::Ordering::Acquire), "producer leaked");
+    }
+
+    #[test]
+    fn explicit_shutdown_is_idempotent() {
+        let mut loader = StreamLoader::spawn(toy_source(50), 5, 2, 1);
+        assert!(loader.next().is_some());
+        loader.shutdown();
+        loader.shutdown();
+        assert!(loader.next().is_none());
+        assert!(loader.producer_done());
+        drop(loader); // Drop after shutdown stays a no-op
     }
 
     #[test]

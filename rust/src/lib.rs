@@ -19,9 +19,14 @@
 //! - math: [`loss`], [`optim`] (two-loop LBFGS, dense Newton)
 //! - algorithms: [`algo`] — BEAR (Alg. 2) + every baseline
 //!   (MISSION, feature hashing, dense SGD / oLBFGS, sketched Newton)
-//! - system: [`runtime`] (PJRT artifact execution), [`coordinator`]
-//!   (streaming trainer, experiment runner, report printers), [`cli`],
-//!   [`metrics`], [`bench_util`]
+//! - system: [`runtime`] (PJRT artifact execution, behind the `xla`
+//!   feature), [`coordinator`] (streaming trainer, experiment runner,
+//!   checkpoint v2, report printers), [`cli`], [`metrics`], [`bench_util`]
+//! - serving: [`serve`] — the read path: immutable
+//!   [`serve::ServableModel`] snapshots ("BEARSNAP" wire format), a
+//!   threaded HTTP/1.1 server with micro-batched `/predict`, lock-free
+//!   latency histograms, and a closed-loop load generator
+//!   (`bear export` / `bear serve` / `bear loadgen`)
 //!
 //! ## Quickstart
 //! ```no_run
@@ -47,6 +52,7 @@ pub mod metrics;
 pub mod optim;
 pub mod prop;
 pub mod runtime;
+pub mod serve;
 pub mod sketch;
 pub mod sparse;
 pub mod topk;

@@ -5,6 +5,9 @@
 //!   train       train + evaluate on a real-data surrogate (Fig. 2/3 cell)
 //!   stats       Table 2-style dataset summary
 //!   artifacts   list the compiled PJRT artifacts
+//!   export      train + write a serving snapshot (BEARSNAP)
+//!   serve       serve a snapshot over HTTP (predict/topk/healthz/statz)
+//!   loadgen     closed-loop load test against a running server
 //!   help        this text
 //!
 //! Examples:
@@ -13,6 +16,9 @@
 //!   bear train --dataset dna --algo mission --cf 330 --topk-eval 100
 //!   bear stats --dataset kdd
 //!   bear artifacts
+//!   bear export --dataset rcv1 --algo bear --cf 100 --out rcv1.bearsnap
+//!   bear serve --model rcv1.bearsnap --addr 127.0.0.1:8370 --workers 8
+//!   bear loadgen --addr 127.0.0.1:8370 --dataset rcv1 --threads 4
 
 use anyhow::{bail, Result};
 use bear::cli::Args;
@@ -75,18 +81,14 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_train(args: &Args) -> Result<()> {
-    let dataset = parse_dataset(&args.str_or("dataset", "rcv1"))?;
-    let algo = parse_algo(&args.str_or("algo", "bear"))?;
-    let cf = args.parse_or("cf", 100.0)?;
-    let mut spec = RealSpec::for_dataset(dataset);
+/// Apply the shared training flags (`--n-train --n-test --seed --epochs
+/// --eta --topk --batch`) onto a dataset's default spec — one parser for
+/// `train` and `export`, so both commands accept the same knobs.
+fn apply_spec_flags(args: &Args, spec: &mut RealSpec) -> Result<()> {
     spec.n_train = args.parse_or("n-train", spec.n_train)?;
     spec.n_test = args.parse_or("n-test", spec.n_test)?;
     spec.seed = args.parse_or("seed", spec.seed)?;
-    let topk_eval = match args.get("topk-eval") {
-        Some(v) => Some(v.parse::<usize>()?),
-        None => None,
-    };
+    spec.epochs = args.parse_or("epochs", 1)?;
     if let Some(e) = args.get("eta") {
         spec.eta = Some(e.parse()?);
     }
@@ -96,7 +98,19 @@ fn cmd_train(args: &Args) -> Result<()> {
     if let Some(b) = args.get("batch") {
         spec.batch = Some(b.parse()?);
     }
-    spec.epochs = args.parse_or("epochs", 1)?;
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let dataset = parse_dataset(&args.str_or("dataset", "rcv1"))?;
+    let algo = parse_algo(&args.str_or("algo", "bear"))?;
+    let cf = args.parse_or("cf", 100.0)?;
+    let mut spec = RealSpec::for_dataset(dataset);
+    apply_spec_flags(args, &mut spec)?;
+    let topk_eval = match args.get("topk-eval") {
+        Some(v) => Some(v.parse::<usize>()?),
+        None => None,
+    };
     // --pjrt surfaces the artifact registry status up front (the examples
     // wire PjrtEngine into the trainer; see examples/quickstart.rs)
     if args.flag("pjrt") {
@@ -177,6 +191,90 @@ fn cmd_artifacts(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_export(args: &Args) -> Result<()> {
+    let dataset = parse_dataset(&args.str_or("dataset", "rcv1"))?;
+    let algo = parse_algo(&args.str_or("algo", "bear"))?;
+    let cf = args.parse_or("cf", 100.0)?;
+    let out = std::path::PathBuf::from(args.str_or("out", "model.bearsnap"));
+    let mut spec = RealSpec::for_dataset(dataset);
+    apply_spec_flags(args, &mut spec)?;
+    let t0 = std::time::Instant::now();
+    let model = bear::serve::train_servable(dataset, algo, cf, &spec)?;
+    model.save(&out)?;
+    let mut t = Table::new(
+        &format!("export {} ({} CF={cf:.1})", dataset.label(), algo.label()),
+        &["snapshot", "features", "sketch cells", "bytes", "wall"],
+    );
+    t.row(&[
+        out.display().to_string(),
+        model.n_features().to_string(),
+        model.sketch_cells().to_string(),
+        human_bytes(model.memory_bytes()),
+        human_duration(t0.elapsed()),
+    ]);
+    t.print();
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let path = std::path::PathBuf::from(
+        args.get("model").ok_or_else(|| anyhow::anyhow!("--model SNAPSHOT required"))?,
+    );
+    let model = std::sync::Arc::new(bear::serve::ServableModel::load(&path)?);
+    let mut cfg = bear::serve::ServerConfig::default();
+    cfg.addr = args.str_or("addr", "127.0.0.1:8370");
+    cfg.workers = args.parse_or("workers", cfg.workers)?;
+    cfg.queue_depth = args.parse_or("queue-depth", cfg.queue_depth)?;
+    cfg.max_batch = args.parse_or("max-batch", cfg.max_batch)?;
+    cfg.batch_wait =
+        std::time::Duration::from_micros(args.parse_or("batch-wait-us", 0u64)?);
+    let workers = cfg.workers;
+    let handle = bear::serve::serve(model.clone(), cfg)?;
+    eprintln!(
+        "[bear] serving {} ({} features, {} sketch cells, {}) on http://{} with {} workers",
+        path.display(),
+        model.n_features(),
+        model.sketch_cells(),
+        human_bytes(model.memory_bytes()),
+        handle.addr(),
+        workers,
+    );
+    eprintln!("[bear] endpoints: POST /predict · GET /topk?k=N · GET /healthz · GET /statz");
+    handle.join_forever();
+    Ok(())
+}
+
+fn cmd_loadgen(args: &Args) -> Result<()> {
+    let addr = args.str_or("addr", "127.0.0.1:8370");
+    let mut cfg = bear::serve::LoadgenConfig::default();
+    cfg.dataset = parse_dataset(&args.str_or("dataset", "rcv1"))?;
+    cfg.threads = args.parse_or("threads", cfg.threads)?;
+    cfg.requests_per_thread = args.parse_or("requests", cfg.requests_per_thread)?;
+    cfg.queries_per_request = args.parse_or("queries", cfg.queries_per_request)?;
+    cfg.seed = args.parse_or("seed", cfg.seed)?;
+    let report = bear::serve::loadgen::run(&addr, &cfg)?;
+    let mut t = Table::new(
+        &format!(
+            "loadgen {} ({} threads × {} reqs × {} queries, closed loop)",
+            addr, report.threads, cfg.requests_per_thread, cfg.queries_per_request
+        ),
+        &["QPS", "queries/s", "p50", "p99", "p99.9", "mean", "errors", "wall"],
+    );
+    let us = |v: f64| human_duration(std::time::Duration::from_micros(v as u64));
+    t.row(&[
+        format!("{:.0}", report.qps()),
+        format!("{:.0}", report.query_throughput()),
+        us(report.latency.p50_micros()),
+        us(report.latency.p99_micros()),
+        us(report.latency.p999_micros()),
+        us(report.latency.mean_micros()),
+        report.errors.to_string(),
+        human_duration(report.wall),
+    ]);
+    t.print();
+    Ok(())
+}
+
 const HELP: &str = "bear — sketched second-order feature selection (BEAR reproduction)
 
 commands:
@@ -187,6 +285,15 @@ commands:
               [--topk-eval K] [--n-train N] [--n-test N] [--pjrt]
   stats       Table 2-style dataset summary [--dataset D]
   artifacts   list the compiled PJRT artifacts [--artifact-dir DIR]
+  export      train + write a serving snapshot
+              --dataset D --algo bear|mission --cf X --out FILE
+              [--n-train N] [--topk K] [--eta E] [--batch B] [--epochs N]
+  serve       serve a snapshot over HTTP
+              --model FILE [--addr H:P] [--workers N] [--queue-depth N]
+              [--max-batch Q] [--batch-wait-us U]
+  loadgen     closed-loop load test against a running server
+              --addr H:P [--dataset D] [--threads N] [--requests N]
+              [--queries Q]
   help        this text
 
 any command accepts --config FILE with `key = value` defaults.
@@ -200,6 +307,9 @@ fn main() -> Result<()> {
         "train" => cmd_train(&args),
         "stats" => cmd_stats(&args),
         "artifacts" => cmd_artifacts(&args),
+        "export" => cmd_export(&args),
+        "serve" => cmd_serve(&args),
+        "loadgen" => cmd_loadgen(&args),
         "" | "help" => {
             print!("{HELP}");
             Ok(())

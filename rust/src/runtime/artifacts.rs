@@ -64,11 +64,16 @@ pub struct ArtifactMeta {
 
 struct Loaded {
     meta: ArtifactMeta,
+    #[cfg(feature = "xla")]
     exe: xla::PjRtLoadedExecutable,
 }
 
-/// Compiled-executable registry over one PJRT client.
+/// Compiled-executable registry over one PJRT client. Without the `xla`
+/// feature this degrades to a metadata-only registry: the manifest is
+/// parsed and served (so `bear artifacts` and shape queries work), but
+/// [`ArtifactRegistry::execute`] is unavailable.
 pub struct ArtifactRegistry {
+    #[cfg(feature = "xla")]
     client: xla::PjRtClient,
     by_name: HashMap<String, Loaded>,
     preferred: Flavor,
@@ -89,6 +94,7 @@ impl ArtifactRegistry {
         let manifest = dir.join("manifest.tsv");
         let text = std::fs::read_to_string(&manifest)
             .with_context(|| format!("reading {manifest:?} — run `make artifacts` first"))?;
+        #[cfg(feature = "xla")]
         let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
         let mut by_name = HashMap::new();
         for line in text.lines() {
@@ -118,20 +124,31 @@ impl ArtifactRegistry {
                 },
                 file: dir.join(cols[7]),
             };
-            let proto = xla::HloModuleProto::from_text_file(&meta.file)
-                .map_err(|e| anyhow!("parsing {:?}: {e}", meta.file))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client
-                .compile(&comp)
-                .map_err(|e| anyhow!("compiling {}: {e}", meta.name))?;
-            by_name.insert(meta.name.clone(), Loaded { meta, exe });
+            #[cfg(feature = "xla")]
+            {
+                let proto = xla::HloModuleProto::from_text_file(&meta.file)
+                    .map_err(|e| anyhow!("parsing {:?}: {e}", meta.file))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = client
+                    .compile(&comp)
+                    .map_err(|e| anyhow!("compiling {}: {e}", meta.name))?;
+                by_name.insert(meta.name.clone(), Loaded { meta, exe });
+            }
+            #[cfg(not(feature = "xla"))]
+            by_name.insert(meta.name.clone(), Loaded { meta });
         }
         if by_name.is_empty() {
             bail!("manifest {manifest:?} contained no artifacts");
         }
-        Ok(Self { client, by_name, preferred: Self::preferred_flavor() })
+        Ok(Self {
+            #[cfg(feature = "xla")]
+            client,
+            by_name,
+            preferred: Self::preferred_flavor(),
+        })
     }
 
+    #[cfg(feature = "xla")]
     pub fn client(&self) -> &xla::PjRtClient {
         &self.client
     }
@@ -157,6 +174,7 @@ impl ArtifactRegistry {
     /// Execute an artifact by name on f32 literals; returns the flattened
     /// tuple elements (lowering uses return_tuple=True, so even single
     /// results arrive as 1-tuples).
+    #[cfg(feature = "xla")]
     pub fn execute(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
         let loaded = self
             .by_name

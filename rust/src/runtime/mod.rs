@@ -4,15 +4,22 @@
 //! runtime the binary is self-contained.
 //!
 //! - [`artifacts`]: manifest parsing + compile-on-load registry
-//! - [`engine`]: a [`crate::loss::GradientEngine`] backed by the compiled
+//! - `engine`: a [`crate::loss::GradientEngine`] backed by the compiled
 //!   executables, with a blocked (chunked feature-axis) path for active
 //!   sets larger than any fused variant, and parity helpers used by the
 //!   integration tests.
+//!
+//! The PJRT bridge needs the `xla` crate + a local xla_extension install,
+//! so `engine` (and the compile/execute half of `artifacts`) only exists
+//! under the off-by-default `xla` cargo feature; the default build is
+//! fully offline and self-contained on `NativeEngine`.
 
 pub mod artifacts;
+#[cfg(feature = "xla")]
 pub mod engine;
 
 pub use artifacts::{ArtifactKind, ArtifactMeta, ArtifactRegistry};
+#[cfg(feature = "xla")]
 pub use engine::{EngineStats, PjrtEngine};
 
 /// Default artifact directory, relative to the repo root.

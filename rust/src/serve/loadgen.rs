@@ -1,0 +1,235 @@
+//! Closed-loop load generator for `bear serve`: N client threads, each
+//! with one keep-alive connection, each sending the next request only
+//! after the previous response arrives (closed loop ⇒ measured latency is
+//! true request latency, not queueing-delay-inflated open-loop latency).
+//!
+//! Queries are replayed from the synthetic real-data surrogates
+//! (`data/synth.rs`), pre-materialized into request bodies before the
+//! clock starts so generation cost never pollutes the measurement. Each
+//! thread records into its own [`LatencyHistogram`]; the report merges
+//! them with overall wall-clock throughput.
+
+use crate::coordinator::experiments::RealData;
+use crate::data::DataSource;
+use crate::serve::metrics::{HistogramSnapshot, LatencyHistogram};
+use crate::sparse::SparseVec;
+use anyhow::{bail, Context, Result};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+/// A minimal blocking HTTP/1.1 client over one keep-alive connection.
+/// Shared by the load generator, the integration tests, and `bear
+/// loadgen`'s smoke check.
+pub struct HttpClient {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl HttpClient {
+    pub fn connect(addr: &str) -> Result<Self> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+        stream.set_nodelay(true).ok();
+        stream.set_read_timeout(Some(Duration::from_secs(30))).ok();
+        let writer = stream.try_clone().context("cloning client stream")?;
+        Ok(Self { reader: BufReader::new(stream), writer })
+    }
+
+    /// Send a request and read the full response. Returns (status, body).
+    fn roundtrip(&mut self, method: &str, path: &str, body: Option<&str>) -> Result<(u16, String)> {
+        let body = body.unwrap_or("");
+        let req = format!(
+            "{method} {path} HTTP/1.1\r\nHost: bear\r\nContent-Length: {}\r\nConnection: keep-alive\r\n\r\n{body}",
+            body.len()
+        );
+        self.writer.write_all(req.as_bytes()).context("writing request")?;
+        self.writer.flush().ok();
+        // status line
+        let mut line = String::new();
+        if self.reader.read_line(&mut line)? == 0 {
+            bail!("server closed the connection");
+        }
+        let status: u16 = line
+            .split_whitespace()
+            .nth(1)
+            .with_context(|| format!("malformed status line {line:?}"))?
+            .parse()
+            .context("non-numeric status")?;
+        // headers
+        let mut content_len = 0usize;
+        loop {
+            let mut h = String::new();
+            if self.reader.read_line(&mut h)? == 0 {
+                bail!("connection closed mid-headers");
+            }
+            let h = h.trim_end();
+            if h.is_empty() {
+                break;
+            }
+            if let Some((k, v)) = h.split_once(':') {
+                if k.trim().eq_ignore_ascii_case("content-length") {
+                    content_len = v.trim().parse().context("bad content-length")?;
+                }
+            }
+        }
+        let mut buf = vec![0u8; content_len];
+        self.reader.read_exact(&mut buf).context("reading response body")?;
+        Ok((status, String::from_utf8(buf).context("non-UTF8 response body")?))
+    }
+
+    pub fn get(&mut self, path: &str) -> Result<(u16, String)> {
+        self.roundtrip("GET", path, None)
+    }
+
+    pub fn post(&mut self, path: &str, body: &str) -> Result<(u16, String)> {
+        self.roundtrip("POST", path, Some(body))
+    }
+}
+
+/// Render one sparse query as a `/predict` body line.
+pub fn format_query(x: &SparseVec) -> String {
+    let mut line = String::with_capacity(x.nnz() * 12);
+    for (i, (&f, &v)) in x.idx.iter().zip(&x.val).enumerate() {
+        if i > 0 {
+            line.push(' ');
+        }
+        line.push_str(&format!("{f}:{v}"));
+    }
+    line
+}
+
+/// Load-generation knobs.
+#[derive(Clone, Debug)]
+pub struct LoadgenConfig {
+    /// Concurrent closed-loop client threads.
+    pub threads: usize,
+    /// Requests each thread sends.
+    pub requests_per_thread: usize,
+    /// Queries bundled per request body.
+    pub queries_per_request: usize,
+    /// Which surrogate's query distribution to replay.
+    pub dataset: RealData,
+    pub seed: u64,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> Self {
+        Self {
+            threads: 4,
+            requests_per_thread: 250,
+            queries_per_request: 16,
+            dataset: RealData::Rcv1,
+            seed: 0x10AD,
+        }
+    }
+}
+
+/// Aggregated load-test result.
+#[derive(Clone, Debug)]
+pub struct LoadReport {
+    pub threads: usize,
+    pub requests: u64,
+    pub queries: u64,
+    pub errors: u64,
+    pub wall: Duration,
+    pub latency: HistogramSnapshot,
+}
+
+impl LoadReport {
+    /// Successful requests per second of wall-clock.
+    pub fn qps(&self) -> f64 {
+        self.requests as f64 / self.wall.as_secs_f64().max(1e-9)
+    }
+
+    /// Scored queries per second of wall-clock.
+    pub fn query_throughput(&self) -> f64 {
+        self.queries as f64 / self.wall.as_secs_f64().max(1e-9)
+    }
+}
+
+/// Pre-materialize `n` request bodies from the dataset's test-split query
+/// distribution.
+fn build_bodies(cfg: &LoadgenConfig, thread_id: usize) -> Vec<String> {
+    let per_request = cfg.queries_per_request.max(1);
+    let need = cfg.requests_per_thread * per_request;
+    // per-thread stream seed so threads don't replay identical traffic
+    let (_, mut src) =
+        cfg.dataset.make(1, need.max(1), cfg.seed ^ (thread_id as u64).wrapping_mul(0x9E37));
+    let mut bodies = Vec::with_capacity(cfg.requests_per_thread);
+    let mut current = String::new();
+    let mut in_current = 0usize;
+    while bodies.len() < cfg.requests_per_thread {
+        let q = match src.next_example() {
+            Some(e) => format_query(&e.features),
+            None => {
+                src.reset();
+                continue;
+            }
+        };
+        current.push_str(&q);
+        current.push('\n');
+        in_current += 1;
+        if in_current == per_request {
+            bodies.push(std::mem::take(&mut current));
+            in_current = 0;
+        }
+    }
+    bodies
+}
+
+/// Run a closed-loop load test against `addr` (e.g. `"127.0.0.1:8370"`).
+pub fn run(addr: &str, cfg: &LoadgenConfig) -> Result<LoadReport> {
+    let threads = cfg.threads.max(1);
+    // materialize all traffic before the clock starts
+    let all_bodies: Vec<Vec<String>> = (0..threads).map(|t| build_bodies(cfg, t)).collect();
+
+    let t0 = Instant::now();
+    let per_thread: Vec<Result<(HistogramSnapshot, u64, u64, u64)>> =
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = all_bodies
+                .iter()
+                .map(|bodies| {
+                    scope.spawn(move || -> Result<(HistogramSnapshot, u64, u64, u64)> {
+                        let hist = LatencyHistogram::new();
+                        let mut client = HttpClient::connect(addr)?;
+                        let (mut requests, mut queries, mut errors) = (0u64, 0u64, 0u64);
+                        for body in bodies {
+                            let nq = body.lines().count() as u64;
+                            let t = Instant::now();
+                            match client.post("/predict", body) {
+                                Ok((200, _)) => {
+                                    hist.record(t.elapsed());
+                                    requests += 1;
+                                    queries += nq;
+                                }
+                                Ok((_, _)) => errors += 1,
+                                Err(_) => {
+                                    // connection shed (503 close / timeout):
+                                    // count and reconnect
+                                    errors += 1;
+                                    client = HttpClient::connect(addr)?;
+                                }
+                            }
+                        }
+                        Ok((hist.snapshot(), requests, queries, errors))
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().unwrap_or_else(|_| Err(anyhow::anyhow!("loadgen thread panicked"))))
+                .collect()
+        });
+    let wall = t0.elapsed();
+
+    let mut latency = HistogramSnapshot::empty();
+    let (mut requests, mut queries, mut errors) = (0u64, 0u64, 0u64);
+    for r in per_thread {
+        let (h, rq, q, e) = r?;
+        latency.merge(&h);
+        requests += rq;
+        queries += q;
+        errors += e;
+    }
+    Ok(LoadReport { threads, requests, queries, errors, wall, latency })
+}

@@ -1,0 +1,71 @@
+//! The read path: serve a trained sketched model over HTTP.
+//!
+//! Training (the write path) produces a model that is sublinear in p by
+//! construction — a Count Sketch plus a top-k heap — so the serving
+//! artifact is tiny and the serving tier is embarrassingly parallel
+//! reads. This module is that tier:
+//!
+//! - [`snapshot`] — [`snapshot::ServableModel`]: an immutable snapshot
+//!   exported from any trained selector (dense top-k weight table +
+//!   optional full Count Sketch fallback), serialized in the "BEARSNAP"
+//!   format (a self-describing sibling of checkpoint v2).
+//! - [`server`] — a multi-threaded HTTP/1.1 server on std TCP: worker
+//!   pool, bounded accept queue (503 backpressure), micro-batched
+//!   `POST /predict`, plus `/topk`, `/healthz`, `/statz`.
+//! - [`metrics`] — lock-free per-worker latency histograms (p50/p99/p999)
+//!   merged on scrape.
+//! - [`loadgen`] — a closed-loop multi-threaded load generator replaying
+//!   synthetic RCV1/DNA-style queries, reporting QPS + percentiles.
+//!
+//! CLI: `bear export` → `bear serve` → `bear loadgen`.
+//! End-to-end: `tests/integration_serve.rs` asserts served predictions
+//! are bit-identical to in-process `FeatureSelector::score`.
+
+pub mod loadgen;
+pub mod metrics;
+pub mod server;
+pub mod snapshot;
+
+pub use loadgen::{HttpClient, LoadReport, LoadgenConfig};
+pub use metrics::{HistogramSnapshot, LatencyHistogram};
+pub use server::{serve, ServerConfig, ServerHandle, StatsSnapshot};
+pub use snapshot::{Prediction, ServableModel};
+
+use crate::algo::bear::Bear;
+use crate::algo::mission::{Mission, MissionConfig};
+use crate::coordinator::experiments::{train_setup, AlgoKind, RealData, RealSpec, TrainSetup};
+use crate::loss::LossKind;
+use anyhow::{bail, Result};
+
+/// Train a selector on a real-data surrogate and export it as a
+/// [`ServableModel`] (the `bear export` path). Uses the same
+/// [`train_setup`] derivation as `real_point`, so an exported snapshot is
+/// the model `bear train` measures. Only the sketched,
+/// binary-classification selectors can be exported with a sketch
+/// fallback; the 15-class DNA task would need one snapshot per class.
+pub fn train_servable(
+    dataset: RealData,
+    algo: AlgoKind,
+    compression: f64,
+    spec: &RealSpec,
+) -> Result<ServableModel> {
+    if dataset.num_classes() != 2 {
+        bail!("{} is multi-class; export serves binary models only", dataset.label());
+    }
+    let TrainSetup { cfg, batch, .. } = train_setup(dataset, spec, compression);
+    let p = dataset.dim();
+    let (mut train, _) = dataset.make(spec.n_train, 1, spec.seed);
+    match algo {
+        AlgoKind::Bear => {
+            let mut sel = Bear::new(p, cfg);
+            sel.fit_source(train.as_mut(), batch, spec.epochs.max(1));
+            Ok(ServableModel::from_sketched(sel.state(), LossKind::Logistic, 0.0))
+        }
+        AlgoKind::Mission => {
+            let mut sel = Mission::new(MissionConfig::from(&cfg));
+            sel.fit_source(train.as_mut(), batch, spec.epochs.max(1));
+            Ok(ServableModel::from_sketched(sel.state(), LossKind::Logistic, 0.0))
+        }
+        other => bail!("{other:?} cannot be exported with a sketch fallback (use bear|mission)"),
+    }
+}

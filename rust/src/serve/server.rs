@@ -1,0 +1,686 @@
+//! A multi-threaded HTTP/1.1 model server on `std::net::TcpListener` —
+//! the std-thread sibling of `data/stream.rs`'s producer pipeline (tokio
+//! is not in the offline vendor set), with a hand-rolled request parser
+//! in the spirit of `cli/mod.rs`.
+//!
+//! Architecture (all bounded, all joinable):
+//! ```text
+//! acceptor ──try_send──▶ [conn queue ≤ queue_depth] ──▶ worker pool (N threads)
+//!    │ full ⇒ 503                                         │  parse + respond,
+//!    ▼                                                    │  per-worker latency
+//!  clients                            predict jobs ──▶ batcher (micro-batching)
+//! ```
+//! - **Backpressure**: the accept queue is a `sync_channel`; when all
+//!   workers are busy and the queue is full, new connections get an
+//!   immediate `503` instead of unbounded buffering.
+//! - **Micro-batching**: `/predict` bodies are parsed by the worker and
+//!   queued to a single batcher thread that coalesces everything queued
+//!   at scoring time (up to `max_batch` queries; an optional `batch_wait`
+//!   linger gathers more), amortizing dispatch across concurrent
+//!   requests; replies flow back per-request over channels.
+//! - **Metrics**: each worker records into its own lock-free
+//!   [`LatencyHistogram`]; `/statz` merges them on scrape.
+//!
+//! Endpoints:
+//! - `POST /predict` — body: one query per line, each a space-separated
+//!   list of `idx:val` pairs. Response: one line per query, `margin` for
+//!   MSE models or `margin probability` for logistic ones, formatted with
+//!   Rust's shortest-round-trip f64 `Display` (parsing the text back
+//!   yields the bit-identical f64).
+//! - `GET /topk?k=N` — the N heaviest features, `id weight` per line.
+//! - `GET /healthz` — liveness.
+//! - `GET /statz` — counters + merged latency percentiles, `key value`
+//!   per line.
+
+use crate::serve::metrics::{merged_snapshot, HistogramSnapshot, LatencyHistogram};
+use crate::serve::snapshot::{Prediction, ServableModel};
+use crate::sparse::SparseVec;
+use anyhow::{bail, Context, Result};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, sync_channel, Receiver, RecvTimeoutError, Sender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Server tunables. `addr` with port 0 binds an ephemeral port (the bound
+/// address is on the returned handle).
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    pub addr: String,
+    /// Worker threads handling connections.
+    pub workers: usize,
+    /// Bounded accept queue: connections beyond `workers` in flight +
+    /// this many queued are rejected with 503.
+    pub queue_depth: usize,
+    /// Micro-batch cap in queries.
+    pub max_batch: usize,
+    /// Optional micro-batch linger: how long the batcher waits for MORE
+    /// predict requests beyond those already queued. Zero (the default)
+    /// still coalesces everything queued at scoring time — with
+    /// closed-loop clients that is exactly the in-flight concurrency —
+    /// but never trades latency for batch size.
+    pub batch_wait: Duration,
+    /// Per-connection read timeout (idle keep-alive connections are shed
+    /// after this long).
+    pub read_timeout: Duration,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self {
+            addr: "127.0.0.1:0".to_string(),
+            workers: 4,
+            queue_depth: 128,
+            max_batch: 128,
+            batch_wait: Duration::ZERO,
+            read_timeout: Duration::from_secs(5),
+        }
+    }
+}
+
+/// Monotonic counters, updated with relaxed atomics from every thread.
+#[derive(Debug)]
+struct Counters {
+    connections: AtomicU64,
+    requests_total: AtomicU64,
+    predict_requests: AtomicU64,
+    predict_queries: AtomicU64,
+    micro_batches: AtomicU64,
+    micro_batch_queries: AtomicU64,
+    topk_requests: AtomicU64,
+    health_requests: AtomicU64,
+    statz_requests: AtomicU64,
+    not_found: AtomicU64,
+    bad_requests: AtomicU64,
+    rejected: AtomicU64,
+}
+
+impl Counters {
+    fn new() -> Self {
+        Self {
+            connections: AtomicU64::new(0),
+            requests_total: AtomicU64::new(0),
+            predict_requests: AtomicU64::new(0),
+            predict_queries: AtomicU64::new(0),
+            micro_batches: AtomicU64::new(0),
+            micro_batch_queries: AtomicU64::new(0),
+            topk_requests: AtomicU64::new(0),
+            health_requests: AtomicU64::new(0),
+            statz_requests: AtomicU64::new(0),
+            not_found: AtomicU64::new(0),
+            bad_requests: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+        }
+    }
+}
+
+/// One scrape of the server's counters + merged worker latencies.
+#[derive(Clone, Debug)]
+pub struct StatsSnapshot {
+    pub uptime: Duration,
+    pub connections: u64,
+    pub requests_total: u64,
+    pub predict_requests: u64,
+    pub predict_queries: u64,
+    pub micro_batches: u64,
+    pub micro_batch_queries: u64,
+    pub topk_requests: u64,
+    pub health_requests: u64,
+    pub statz_requests: u64,
+    pub not_found: u64,
+    pub bad_requests: u64,
+    pub rejected: u64,
+    pub latency: HistogramSnapshot,
+}
+
+/// Observability state shared by workers and the handle. Deliberately
+/// does NOT hold a predict-job sender: the batcher exits when the last
+/// worker drops its sender, so only workers may own one.
+#[derive(Clone)]
+struct Monitor {
+    model: Arc<ServableModel>,
+    counters: Arc<Counters>,
+    started: Instant,
+    worker_hists: Arc<Vec<Arc<LatencyHistogram>>>,
+}
+
+/// Everything a worker needs, cloned per thread.
+#[derive(Clone)]
+struct Ctx {
+    mon: Monitor,
+    job_tx: Sender<PredictJob>,
+}
+
+/// A parsed predict request queued to the batcher.
+struct PredictJob {
+    queries: Vec<SparseVec>,
+    reply: Sender<Vec<Prediction>>,
+}
+
+// ---------------------------------------------------------------------------
+// request parsing
+// ---------------------------------------------------------------------------
+
+struct Request {
+    method: String,
+    path: String,
+    query: Option<String>,
+    body: Vec<u8>,
+    keep_alive: bool,
+}
+
+const MAX_BODY: usize = 16 * 1024 * 1024;
+const MAX_HEADERS: usize = 128;
+const MAX_LINE: usize = 8 * 1024;
+
+/// `read_line` with a hard cap: a newline-free byte stream must not grow
+/// the buffer unboundedly (it would bypass MAX_BODY and OOM the server).
+/// Returns bytes consumed (0 ⇒ EOF); errors when the cap is exceeded.
+fn read_line_bounded(r: &mut BufReader<TcpStream>, out: &mut String, max: usize) -> Result<usize> {
+    let mut total = 0usize;
+    loop {
+        let (done, used) = {
+            let available = r.fill_buf()?;
+            if available.is_empty() {
+                return Ok(total); // EOF
+            }
+            match available.iter().position(|&b| b == b'\n') {
+                Some(i) => {
+                    out.push_str(&String::from_utf8_lossy(&available[..=i]));
+                    (true, i + 1)
+                }
+                None => {
+                    out.push_str(&String::from_utf8_lossy(available));
+                    (false, available.len())
+                }
+            }
+        };
+        r.consume(used);
+        total += used;
+        if total > max {
+            bail!("line exceeds {max} bytes");
+        }
+        if done {
+            return Ok(total);
+        }
+    }
+}
+
+/// Read one HTTP/1.x request. `Ok(None)` means clean EOF before a request
+/// line (the client closed a keep-alive connection).
+fn read_request(r: &mut BufReader<TcpStream>) -> Result<Option<Request>> {
+    let mut line = String::new();
+    if read_line_bounded(r, &mut line, MAX_LINE)? == 0 {
+        return Ok(None);
+    }
+    let trimmed = line.trim_end();
+    let mut parts = trimmed.split_whitespace();
+    let method = parts.next().filter(|m| !m.is_empty()).context("empty request line")?.to_string();
+    let target = parts.next().context("request line missing target")?.to_string();
+    let version = parts.next().unwrap_or("HTTP/1.0");
+    let mut keep_alive = version == "HTTP/1.1";
+    let mut content_len = 0usize;
+    let mut n_headers = 0usize;
+    loop {
+        let mut h = String::new();
+        if read_line_bounded(r, &mut h, MAX_LINE)? == 0 {
+            bail!("connection closed mid-headers");
+        }
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        n_headers += 1;
+        if n_headers > MAX_HEADERS {
+            bail!("too many headers");
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            let k = k.trim().to_ascii_lowercase();
+            let v = v.trim();
+            if k == "content-length" {
+                content_len = v.parse().context("bad content-length")?;
+            } else if k == "connection" {
+                let v = v.to_ascii_lowercase();
+                if v.contains("close") {
+                    keep_alive = false;
+                } else if v.contains("keep-alive") {
+                    keep_alive = true;
+                }
+            }
+        }
+    }
+    if content_len > MAX_BODY {
+        bail!("body too large ({content_len} bytes)");
+    }
+    let mut body = vec![0u8; content_len];
+    r.read_exact(&mut body).context("reading body")?;
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p.to_string(), Some(q.to_string())),
+        None => (target, None),
+    };
+    Ok(Some(Request { method, path, query, body, keep_alive }))
+}
+
+fn query_param<'a>(query: Option<&'a str>, key: &str) -> Option<&'a str> {
+    query?.split('&').find_map(|kv| {
+        let (k, v) = kv.split_once('=')?;
+        (k == key).then_some(v)
+    })
+}
+
+/// Parse a predict body: one query per non-empty line, `idx:val` pairs
+/// separated by whitespace.
+fn parse_queries(body: &[u8]) -> Result<Vec<SparseVec>> {
+    let text = std::str::from_utf8(body).context("predict body is not UTF-8")?;
+    let mut out = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut pairs = Vec::new();
+        for tok in line.split_whitespace() {
+            let (i, v) = tok
+                .split_once(':')
+                .with_context(|| format!("line {}: token {tok:?} is not idx:val", lineno + 1))?;
+            let i: u64 = i
+                .parse()
+                .with_context(|| format!("line {}: bad index {i:?}", lineno + 1))?;
+            let v: f32 = v
+                .parse()
+                .with_context(|| format!("line {}: bad value {v:?}", lineno + 1))?;
+            pairs.push((i, v));
+        }
+        out.push(SparseVec::from_pairs(pairs));
+    }
+    Ok(out)
+}
+
+fn format_predictions(preds: &[Prediction]) -> String {
+    let mut out = String::with_capacity(preds.len() * 24);
+    for p in preds {
+        match p.probability {
+            Some(prob) => {
+                out.push_str(&format!("{} {}\n", p.margin, prob));
+            }
+            None => {
+                out.push_str(&format!("{}\n", p.margin));
+            }
+        }
+    }
+    out
+}
+
+fn write_response(
+    w: &mut TcpStream,
+    status: u16,
+    reason: &str,
+    body: &[u8],
+    keep: bool,
+) -> std::io::Result<()> {
+    let head = format!(
+        "HTTP/1.1 {status} {reason}\r\nContent-Length: {}\r\nContent-Type: text/plain; charset=utf-8\r\nConnection: {}\r\n\r\n",
+        body.len(),
+        if keep { "keep-alive" } else { "close" }
+    );
+    w.write_all(head.as_bytes())?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+// ---------------------------------------------------------------------------
+// threads
+// ---------------------------------------------------------------------------
+
+fn batcher_loop(
+    model: Arc<ServableModel>,
+    rx: Receiver<PredictJob>,
+    counters: Arc<Counters>,
+    max_batch: usize,
+    wait: Duration,
+) {
+    while let Ok(first) = rx.recv() {
+        let mut jobs = vec![first];
+        let mut total: usize = jobs[0].queries.len();
+        if !wait.is_zero() {
+            let deadline = Instant::now() + wait;
+            while total < max_batch {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                match rx.recv_timeout(deadline - now) {
+                    Ok(j) => {
+                        total += j.queries.len();
+                        jobs.push(j);
+                    }
+                    Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => break,
+                }
+            }
+        } else {
+            // no linger: still coalesce whatever is already queued
+            while total < max_batch {
+                match rx.try_recv() {
+                    Ok(j) => {
+                        total += j.queries.len();
+                        jobs.push(j);
+                    }
+                    Err(_) => break,
+                }
+            }
+        }
+        counters.micro_batches.fetch_add(1, Ordering::Relaxed);
+        counters.micro_batch_queries.fetch_add(total as u64, Ordering::Relaxed);
+        for job in jobs {
+            let preds: Vec<Prediction> = job.queries.iter().map(|q| model.predict(q)).collect();
+            // a worker that gave up on the reply is not an error
+            let _ = job.reply.send(preds);
+        }
+    }
+}
+
+/// Handle one request; returns (status, reason, body, keep_alive).
+fn dispatch(ctx: &Ctx, req: &Request) -> (u16, &'static str, String, bool) {
+    let counters = &ctx.mon.counters;
+    counters.requests_total.fetch_add(1, Ordering::Relaxed);
+    match (req.method.as_str(), req.path.as_str()) {
+        ("POST", "/predict") => {
+            let queries = match parse_queries(&req.body) {
+                Ok(q) => q,
+                Err(e) => {
+                    counters.bad_requests.fetch_add(1, Ordering::Relaxed);
+                    return (400, "Bad Request", format!("{e:#}\n"), req.keep_alive);
+                }
+            };
+            counters.predict_requests.fetch_add(1, Ordering::Relaxed);
+            counters.predict_queries.fetch_add(queries.len() as u64, Ordering::Relaxed);
+            let (reply_tx, reply_rx) = channel();
+            if ctx.job_tx.send(PredictJob { queries, reply: reply_tx }).is_err() {
+                return (500, "Internal Server Error", "batcher gone\n".into(), false);
+            }
+            match reply_rx.recv() {
+                Ok(preds) => (200, "OK", format_predictions(&preds), req.keep_alive),
+                Err(_) => (500, "Internal Server Error", "batcher gone\n".into(), false),
+            }
+        }
+        ("GET", "/topk") => {
+            counters.topk_requests.fetch_add(1, Ordering::Relaxed);
+            let k = query_param(req.query.as_deref(), "k")
+                .and_then(|v| v.parse::<usize>().ok())
+                .unwrap_or(10);
+            let mut body = String::new();
+            for (f, w) in ctx.mon.model.topk(k) {
+                body.push_str(&format!("{f} {w}\n"));
+            }
+            (200, "OK", body, req.keep_alive)
+        }
+        ("GET", "/healthz") => {
+            counters.health_requests.fetch_add(1, Ordering::Relaxed);
+            (200, "OK", "ok\n".into(), req.keep_alive)
+        }
+        ("GET", "/statz") => {
+            counters.statz_requests.fetch_add(1, Ordering::Relaxed);
+            let snap = scrape(&ctx.mon);
+            let body = render_statz(&snap, &ctx.mon.model, ctx.mon.worker_hists.len());
+            (200, "OK", body, req.keep_alive)
+        }
+        _ => {
+            counters.not_found.fetch_add(1, Ordering::Relaxed);
+            (404, "Not Found", format!("no route {} {}\n", req.method, req.path), req.keep_alive)
+        }
+    }
+}
+
+fn scrape(mon: &Monitor) -> StatsSnapshot {
+    let c = &mon.counters;
+    StatsSnapshot {
+        uptime: mon.started.elapsed(),
+        connections: c.connections.load(Ordering::Relaxed),
+        requests_total: c.requests_total.load(Ordering::Relaxed),
+        predict_requests: c.predict_requests.load(Ordering::Relaxed),
+        predict_queries: c.predict_queries.load(Ordering::Relaxed),
+        micro_batches: c.micro_batches.load(Ordering::Relaxed),
+        micro_batch_queries: c.micro_batch_queries.load(Ordering::Relaxed),
+        topk_requests: c.topk_requests.load(Ordering::Relaxed),
+        health_requests: c.health_requests.load(Ordering::Relaxed),
+        statz_requests: c.statz_requests.load(Ordering::Relaxed),
+        not_found: c.not_found.load(Ordering::Relaxed),
+        bad_requests: c.bad_requests.load(Ordering::Relaxed),
+        rejected: c.rejected.load(Ordering::Relaxed),
+        latency: merged_snapshot(mon.worker_hists.iter().map(|h| h.as_ref())),
+    }
+}
+
+fn render_statz(s: &StatsSnapshot, model: &ServableModel, workers: usize) -> String {
+    let uptime = s.uptime.as_secs_f64().max(1e-9);
+    let mut out = String::with_capacity(512);
+    out.push_str(&format!("uptime_s {uptime:.3}\n"));
+    out.push_str(&format!("qps {:.1}\n", s.requests_total as f64 / uptime));
+    out.push_str(&format!("connections {}\n", s.connections));
+    out.push_str(&format!("requests_total {}\n", s.requests_total));
+    out.push_str(&format!("predict_requests {}\n", s.predict_requests));
+    out.push_str(&format!("predict_queries {}\n", s.predict_queries));
+    out.push_str(&format!("micro_batches {}\n", s.micro_batches));
+    out.push_str(&format!("micro_batch_queries {}\n", s.micro_batch_queries));
+    out.push_str(&format!("topk_requests {}\n", s.topk_requests));
+    out.push_str(&format!("health_requests {}\n", s.health_requests));
+    out.push_str(&format!("statz_requests {}\n", s.statz_requests));
+    out.push_str(&format!("not_found {}\n", s.not_found));
+    out.push_str(&format!("bad_requests {}\n", s.bad_requests));
+    out.push_str(&format!("rejected_503 {}\n", s.rejected));
+    out.push_str(&format!("latency_p50_us {:.0}\n", s.latency.p50_micros()));
+    out.push_str(&format!("latency_p99_us {:.0}\n", s.latency.p99_micros()));
+    out.push_str(&format!("latency_p999_us {:.0}\n", s.latency.p999_micros()));
+    out.push_str(&format!("latency_mean_us {:.1}\n", s.latency.mean_micros()));
+    out.push_str(&format!("workers {workers}\n"));
+    out.push_str(&format!("model_features {}\n", model.n_features()));
+    out.push_str(&format!("model_sketch_cells {}\n", model.sketch_cells()));
+    out.push_str(&format!("model_bytes {}\n", model.memory_bytes()));
+    out
+}
+
+fn handle_conn(stream: TcpStream, ctx: &Ctx, hist: &LatencyHistogram, read_timeout: Duration) {
+    ctx.mon.counters.connections.fetch_add(1, Ordering::Relaxed);
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(read_timeout)).ok();
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let mut reader = BufReader::new(stream);
+    loop {
+        match read_request(&mut reader) {
+            Ok(Some(req)) => {
+                let t0 = Instant::now();
+                let (status, reason, body, keep) = dispatch(ctx, &req);
+                // record before the response bytes go out: whoever has the
+                // response is guaranteed to find it in the histogram
+                hist.record(t0.elapsed());
+                let ok = write_response(&mut writer, status, reason, body.as_bytes(), keep).is_ok();
+                if !keep || !ok {
+                    break;
+                }
+            }
+            Ok(None) => break, // client closed
+            Err(e) => {
+                // parse failure on a live connection → 400 and close;
+                // read timeouts / resets just close
+                let msg = format!("{e:#}\n");
+                if !msg.contains("os error") {
+                    ctx.mon.counters.bad_requests.fetch_add(1, Ordering::Relaxed);
+                    let _ = write_response(&mut writer, 400, "Bad Request", msg.as_bytes(), false);
+                }
+                break;
+            }
+        }
+    }
+}
+
+fn worker_loop(
+    ctx: Ctx,
+    conn_rx: Arc<Mutex<Receiver<TcpStream>>>,
+    hist: Arc<LatencyHistogram>,
+    read_timeout: Duration,
+) {
+    loop {
+        // hold the lock only to dequeue; block in recv while holding it is
+        // fine — exactly one idle worker waits, the rest park on the mutex
+        let conn = match conn_rx.lock() {
+            Ok(rx) => rx.recv(),
+            Err(_) => break,
+        };
+        match conn {
+            Ok(stream) => handle_conn(stream, &ctx, &hist, read_timeout),
+            Err(_) => break, // acceptor gone
+        }
+    }
+}
+
+const RESP_503: &[u8] = b"HTTP/1.1 503 Service Unavailable\r\nContent-Length: 9\r\nContent-Type: text/plain; charset=utf-8\r\nConnection: close\r\n\r\noverload\n";
+
+// ---------------------------------------------------------------------------
+// server lifecycle
+// ---------------------------------------------------------------------------
+
+/// A running server. Threads are joined by [`ServerHandle::shutdown`] (or
+/// best-effort on drop).
+pub struct ServerHandle {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    acceptor: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+    batcher: Option<JoinHandle<()>>,
+    mon: Monitor,
+}
+
+impl ServerHandle {
+    /// The bound address (resolves port 0 to the ephemeral port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Scrape counters + merged latency histograms.
+    pub fn stats(&self) -> StatsSnapshot {
+        scrape(&self.mon)
+    }
+
+    fn shutdown_inner(&mut self) {
+        self.shutdown.store(true, Ordering::Release);
+        // wake a blocked accept() with a throwaway connection
+        let _ = TcpStream::connect(self.addr);
+        if let Some(a) = self.acceptor.take() {
+            let _ = a.join();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        if let Some(b) = self.batcher.take() {
+            let _ = b.join();
+        }
+    }
+
+    /// Stop accepting, drain workers, join every thread.
+    pub fn shutdown(mut self) {
+        self.shutdown_inner();
+    }
+
+    /// Block until the acceptor exits (i.e. forever, for `bear serve`).
+    pub fn join_forever(mut self) {
+        if let Some(a) = self.acceptor.take() {
+            let _ = a.join();
+        }
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        self.shutdown_inner();
+    }
+}
+
+/// Bind and start serving `model` with `cfg`.
+pub fn serve(model: Arc<ServableModel>, cfg: ServerConfig) -> Result<ServerHandle> {
+    let workers_n = cfg.workers.max(1);
+    let listener =
+        TcpListener::bind(&cfg.addr).with_context(|| format!("binding {}", cfg.addr))?;
+    let addr = listener.local_addr()?;
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let counters = Arc::new(Counters::new());
+    let worker_hists: Arc<Vec<Arc<LatencyHistogram>>> =
+        Arc::new((0..workers_n).map(|_| Arc::new(LatencyHistogram::new())).collect());
+
+    let (job_tx, job_rx) = channel::<PredictJob>();
+    let mon = Monitor {
+        model: model.clone(),
+        counters: counters.clone(),
+        started: Instant::now(),
+        worker_hists: worker_hists.clone(),
+    };
+    let ctx = Ctx { mon: mon.clone(), job_tx };
+
+    let batcher = {
+        let model = model.clone();
+        let counters = counters.clone();
+        let (max_batch, wait) = (cfg.max_batch.max(1), cfg.batch_wait);
+        std::thread::Builder::new()
+            .name("bear-serve-batcher".into())
+            .spawn(move || batcher_loop(model, job_rx, counters, max_batch, wait))
+            .expect("spawn batcher thread")
+    };
+
+    let (conn_tx, conn_rx) = sync_channel::<TcpStream>(cfg.queue_depth.max(1));
+    let conn_rx = Arc::new(Mutex::new(conn_rx));
+    let mut workers = Vec::with_capacity(workers_n);
+    for i in 0..workers_n {
+        let ctx = ctx.clone();
+        let conn_rx = conn_rx.clone();
+        let hist = worker_hists[i].clone();
+        let read_timeout = cfg.read_timeout;
+        workers.push(
+            std::thread::Builder::new()
+                .name(format!("bear-serve-worker-{i}"))
+                .spawn(move || worker_loop(ctx, conn_rx, hist, read_timeout))
+                .expect("spawn worker thread"),
+        );
+    }
+
+    let acceptor = {
+        let shutdown = shutdown.clone();
+        let counters = counters.clone();
+        std::thread::Builder::new()
+            .name("bear-serve-acceptor".into())
+            .spawn(move || {
+                for conn in listener.incoming() {
+                    if shutdown.load(Ordering::Acquire) {
+                        break;
+                    }
+                    match conn {
+                        Ok(stream) => match conn_tx.try_send(stream) {
+                            Ok(()) => {}
+                            Err(TrySendError::Full(mut stream)) => {
+                                counters.rejected.fetch_add(1, Ordering::Relaxed);
+                                let _ = stream.write_all(RESP_503);
+                            }
+                            Err(TrySendError::Disconnected(_)) => break,
+                        },
+                        Err(_) => {
+                            if shutdown.load(Ordering::Acquire) {
+                                break;
+                            }
+                        }
+                    }
+                }
+                // conn_tx drops here → workers drain and exit; their job_tx
+                // clones drop with them → the batcher exits
+            })
+            .expect("spawn acceptor thread")
+    };
+
+    // `ctx` (and with it the last non-worker job_tx clone) dies right
+    // here: once the workers exit, the batcher's channel disconnects and
+    // it exits too — shutdown can join every thread without a poison pill.
+    drop(ctx);
+    Ok(ServerHandle { addr, shutdown, acceptor: Some(acceptor), workers, batcher: Some(batcher), mon })
+}

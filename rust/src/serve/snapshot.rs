@@ -1,0 +1,475 @@
+//! Immutable serving snapshots: export a trained selector as a
+//! [`ServableModel`] — a dense top-k weight table plus an optional full
+//! Count Sketch fallback for out-of-support queries — and (de)serialize
+//! it with the checkpoint machinery.
+//!
+//! The whole point of the paper is that the trained artifact is sublinear
+//! in p, so a snapshot is a few hundred KB even for the 54M-dimensional
+//! KDD surrogate: `k` (id, weight) pairs + `m` sketch cells.
+//!
+//! **Prediction parity.** The top-k table is rebuilt *from the sketch* at
+//! export time (`weight = cs.query(id)`), so a table hit returns exactly
+//! the f32 the sketch would, and a snapshot with the sketch fallback
+//! reproduces `SketchedState::score` **bit-for-bit**: same f32 weights,
+//! same index-ordered f64 accumulation. The integration test asserts
+//! this across the HTTP wire (f64 `Display` is shortest-round-trip).
+//!
+//! Wire format "BEARSNAP" v1 — a sibling of checkpoint v2 (same
+//! primitives: little-endian, CRC-32 trailer, self-describing header):
+//! ```text
+//! magic "BEARSNAP" | u32 version (=1)
+//! | u64 hash_seed | u32 query_mode | u32 loss (0=mse, 1=logistic) | f32 bias
+//! | u32 k_len | (u64 id, f32 weight) × k_len     (ids strictly increasing)
+//! | u32 has_sketch (0/1)
+//! | if 1: u32 rows | u32 cols | f32 × rows·cols  (sketch counters)
+//! | u32 crc32 of everything above
+//! ```
+
+use crate::algo::sketched::SketchedState;
+use crate::algo::FeatureSelector;
+use crate::coordinator::checkpoint::{
+    checked_body, commit_with_crc, decode_loss, decode_query_mode, encode_loss,
+    encode_query_mode, put_f32, put_u32, put_u64, Reader,
+};
+use crate::loss::LossKind;
+use crate::sketch::{CountSketch, QueryMode, SketchMemory};
+use crate::sparse::SparseVec;
+use crate::util::math::sigmoid;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"BEARSNAP";
+const VERSION: u32 = 1;
+
+/// One scored query.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Prediction {
+    /// Raw margin (logit for logistic, regression output for MSE).
+    pub margin: f64,
+    /// σ(margin) for logistic models; `None` for MSE.
+    pub probability: Option<f64>,
+}
+
+/// An immutable, self-describing inference model.
+#[derive(Clone, Debug)]
+pub struct ServableModel {
+    /// Selected feature ids, strictly increasing (binary-search lookup).
+    ids: Vec<u64>,
+    /// Weight of `ids[i]`.
+    weights: Vec<f32>,
+    /// Table slots ordered by decreasing |weight| (serves `/topk` without
+    /// re-sorting per request).
+    by_weight: Vec<u32>,
+    /// Full Count Sketch fallback for features outside the table.
+    sketch: Option<CountSketch>,
+    /// Loss the model was trained on (decides probability output).
+    pub loss: LossKind,
+    /// Additive bias applied to every margin.
+    pub bias: f32,
+    /// Hash-family master seed (0 when no sketch is attached).
+    pub hash_seed: u64,
+}
+
+fn build_by_weight(ids: &[u64], weights: &[f32]) -> Vec<u32> {
+    let mut order: Vec<u32> = (0..ids.len() as u32).collect();
+    order.sort_by(|&a, &b| {
+        weights[b as usize]
+            .abs()
+            .partial_cmp(&weights[a as usize].abs())
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(ids[a as usize].cmp(&ids[b as usize]))
+    });
+    order
+}
+
+impl ServableModel {
+    /// Build from sorted-by-id (id, weight) pairs and an optional sketch.
+    fn assemble(
+        mut pairs: Vec<(u64, f32)>,
+        sketch: Option<CountSketch>,
+        loss: LossKind,
+        bias: f32,
+    ) -> Self {
+        pairs.sort_unstable_by_key(|&(i, _)| i);
+        pairs.dedup_by_key(|&mut (i, _)| i);
+        let ids: Vec<u64> = pairs.iter().map(|&(i, _)| i).collect();
+        let weights: Vec<f32> = pairs.iter().map(|&(_, w)| w).collect();
+        let by_weight = build_by_weight(&ids, &weights);
+        let hash_seed = sketch.as_ref().map(|cs| cs.seed()).unwrap_or(0);
+        Self { ids, weights, by_weight, sketch, loss, bias, hash_seed }
+    }
+
+    /// Export from any selector: dense top-k table only (no out-of-support
+    /// fallback — features outside the selection score 0).
+    pub fn from_selector(sel: &dyn FeatureSelector, loss: LossKind, bias: f32) -> Self {
+        Self::assemble(sel.top_features(), None, loss, bias)
+    }
+
+    /// Export from a sketched state (BEAR / MISSION / sketched Newton):
+    /// the top-k table is re-queried from the sketch so table hits equal
+    /// sketch queries bit-for-bit, and the full sketch rides along as the
+    /// fallback for out-of-support features.
+    pub fn from_sketched(state: &SketchedState, loss: LossKind, bias: f32) -> Self {
+        let pairs: Vec<(u64, f32)> =
+            state.heap.iter().map(|(f, _)| (f, state.cs.query(f))).collect();
+        Self::assemble(pairs, Some(state.cs.clone()), loss, bias)
+    }
+
+    /// Number of features in the dense table.
+    pub fn n_features(&self) -> usize {
+        self.ids.len()
+    }
+
+    pub fn has_sketch(&self) -> bool {
+        self.sketch.is_some()
+    }
+
+    /// Sketch cells carried by the fallback (0 without one).
+    pub fn sketch_cells(&self) -> usize {
+        self.sketch.as_ref().map(|cs| cs.cells()).unwrap_or(0)
+    }
+
+    /// Serialized + resident footprint estimate in bytes.
+    pub fn memory_bytes(&self) -> usize {
+        self.ids.len() * (std::mem::size_of::<u64>() + std::mem::size_of::<f32>())
+            + self.sketch.as_ref().map(|cs| cs.counter_bytes()).unwrap_or(0)
+    }
+
+    /// Weight of a feature: table hit, else sketch fallback, else 0.
+    #[inline]
+    pub fn weight(&self, f: u64) -> f32 {
+        match self.ids.binary_search(&f) {
+            Ok(i) => self.weights[i],
+            Err(_) => match &self.sketch {
+                Some(cs) => cs.query(f),
+                None => 0.0,
+            },
+        }
+    }
+
+    /// Margin of a sparse query: `bias + Σ w(f)·x_f`, accumulated in f64
+    /// in index order (bit-compatible with `SketchedState::score` when
+    /// `bias == 0` and the sketch fallback is attached).
+    pub fn margin(&self, x: &SparseVec) -> f64 {
+        let mut acc = self.bias as f64;
+        for (&f, &v) in x.idx.iter().zip(&x.val) {
+            acc += self.weight(f) as f64 * v as f64;
+        }
+        acc
+    }
+
+    /// Margin restricted to the k heaviest table features (the paper's
+    /// Fig. 3 inference mode).
+    pub fn margin_topk(&self, x: &SparseVec, k: usize) -> f64 {
+        if k >= self.ids.len() {
+            let mut acc = self.bias as f64;
+            for (&f, &v) in x.idx.iter().zip(&x.val) {
+                if self.ids.binary_search(&f).is_ok() {
+                    acc += self.weight(f) as f64 * v as f64;
+                }
+            }
+            return acc;
+        }
+        let top: std::collections::HashSet<u64> =
+            self.by_weight[..k].iter().map(|&s| self.ids[s as usize]).collect();
+        let mut acc = self.bias as f64;
+        for (&f, &v) in x.idx.iter().zip(&x.val) {
+            if top.contains(&f) {
+                acc += self.weight(f) as f64 * v as f64;
+            }
+        }
+        acc
+    }
+
+    /// Score one query.
+    pub fn predict(&self, x: &SparseVec) -> Prediction {
+        let margin = self.margin(x);
+        let probability = match self.loss {
+            LossKind::Logistic => Some(sigmoid(margin)),
+            LossKind::Mse => None,
+        };
+        Prediction { margin, probability }
+    }
+
+    /// The k heaviest (id, weight) pairs, |weight|-descending.
+    pub fn topk(&self, k: usize) -> Vec<(u64, f32)> {
+        self.by_weight
+            .iter()
+            .take(k)
+            .map(|&s| (self.ids[s as usize], self.weights[s as usize]))
+            .collect()
+    }
+
+    /// Serialize (BEARSNAP v1, CRC-checked, atomic rename).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut buf = Vec::with_capacity(
+            48 + self.ids.len() * 12
+                + self.sketch.as_ref().map(|cs| cs.raw().len() * 4).unwrap_or(0),
+        );
+        buf.extend_from_slice(MAGIC);
+        put_u32(&mut buf, VERSION);
+        put_u64(&mut buf, self.hash_seed);
+        let mode = self.sketch.as_ref().map(|cs| cs.query_mode()).unwrap_or(QueryMode::Median);
+        put_u32(&mut buf, encode_query_mode(mode));
+        put_u32(&mut buf, encode_loss(self.loss));
+        put_f32(&mut buf, self.bias);
+        put_u32(&mut buf, self.ids.len() as u32);
+        for (&f, &w) in self.ids.iter().zip(&self.weights) {
+            put_u64(&mut buf, f);
+            put_f32(&mut buf, w);
+        }
+        match &self.sketch {
+            Some(cs) => {
+                put_u32(&mut buf, 1);
+                put_u32(&mut buf, cs.rows() as u32);
+                put_u32(&mut buf, cs.cols() as u32);
+                for &c in cs.raw() {
+                    put_f32(&mut buf, c);
+                }
+            }
+            None => put_u32(&mut buf, 0),
+        }
+        commit_with_crc(buf, path)
+    }
+
+    /// Load a snapshot. Fully self-describing: the sketch (when present)
+    /// is rebuilt from the stored geometry + hash seed + query mode.
+    pub fn load(path: &Path) -> Result<Self> {
+        let data = std::fs::read(path).with_context(|| format!("opening snapshot {path:?}"))?;
+        let body = checked_body(&data, MAGIC.len() + 4)?;
+        let mut r = Reader::new(body);
+        if r.take(8)? != MAGIC {
+            bail!("not a BEAR snapshot (bad magic)");
+        }
+        let version = r.u32()?;
+        if version != VERSION {
+            bail!("unsupported snapshot version {version}");
+        }
+        let hash_seed = r.u64()?;
+        let query_mode = decode_query_mode(r.u32()?)?;
+        let loss = decode_loss(r.u32()?)?;
+        let bias = r.f32()?;
+        let k_len = r.u32()? as usize;
+        // validate untrusted lengths against the bytes actually present
+        // before any length-driven allocation (a crafted header with a
+        // valid CRC must fail with an error, not an OOM abort)
+        if k_len.saturating_mul(12) > r.remaining() {
+            bail!("snapshot table length {k_len} exceeds file size");
+        }
+        let mut pairs = Vec::with_capacity(k_len);
+        for _ in 0..k_len {
+            let f = r.u64()?;
+            let w = r.f32()?;
+            pairs.push((f, w));
+        }
+        let sketch = if r.u32()? == 1 {
+            let rows = r.u32()? as usize;
+            let cols = r.u32()? as usize;
+            if rows == 0 || cols == 0 || rows > 8 {
+                bail!("implausible sketch geometry {rows}×{cols}");
+            }
+            let cells = rows.checked_mul(cols).context("sketch geometry overflow")?;
+            if cells.saturating_mul(4) > r.remaining() {
+                bail!("snapshot sketch {rows}×{cols} exceeds file size");
+            }
+            let mut counters = Vec::with_capacity(cells);
+            for _ in 0..cells {
+                counters.push(r.f32()?);
+            }
+            let mut cs = CountSketch::new(cols, rows, hash_seed);
+            cs.set_query_mode(query_mode);
+            cs.load_raw(&counters);
+            Some(cs)
+        } else {
+            None
+        };
+        let mut model = Self::assemble(pairs, sketch, loss, bias);
+        model.hash_seed = hash_seed; // preserve even for sketch-free files
+        Ok(model)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::ActiveSet;
+
+    fn sv(pairs: &[(u64, f32)]) -> SparseVec {
+        SparseVec::from_pairs(pairs.to_vec())
+    }
+
+    fn trained_state() -> SketchedState {
+        let mut st = SketchedState::new(2048, 3, 4, 11);
+        st.apply_step(&sv(&[(3, -2.0), (9, -5.0), (70, 1.0), (1 << 40, -3.0)]), 1.0);
+        let row = sv(&[(3, 1.0), (9, 1.0), (70, 1.0), (1 << 40, 1.0)]);
+        st.refresh_heap(&ActiveSet::from_rows([&row]));
+        st
+    }
+
+    #[test]
+    fn sketched_export_matches_state_score_bitwise() {
+        let st = trained_state();
+        let m = ServableModel::from_sketched(&st, LossKind::Logistic, 0.0);
+        let queries = [
+            sv(&[(3, 1.5), (9, -0.5)]),
+            sv(&[(70, 2.0), (12345, 1.0)]),  // 12345 out of support → sketch
+            sv(&[(1 << 40, 1.0), (5, 3.0)]),
+            sv(&[]),
+        ];
+        for q in &queries {
+            assert_eq!(m.margin(q).to_bits(), st.score(q).to_bits(), "{q:?}");
+        }
+    }
+
+    #[test]
+    fn table_only_export_zeroes_out_of_support() {
+        let st = trained_state();
+        let m_full = ServableModel::from_sketched(&st, LossKind::Logistic, 0.0);
+        let m_table = ServableModel {
+            sketch: None,
+            ..m_full.clone()
+        };
+        assert_eq!(m_table.weight(999_999), 0.0);
+        // in-table features still resolve
+        assert_eq!(m_table.weight(9), m_full.weight(9));
+    }
+
+    #[test]
+    fn topk_is_weight_descending() {
+        let st = trained_state();
+        let m = ServableModel::from_sketched(&st, LossKind::Logistic, 0.0);
+        let top = m.topk(4);
+        assert_eq!(top.len(), 4);
+        for w in top.windows(2) {
+            assert!(w[0].1.abs() >= w[1].1.abs(), "{top:?}");
+        }
+        // heaviest is feature 9 (weight 5)
+        assert_eq!(top[0].0, 9);
+        assert_eq!(m.topk(100).len(), 4);
+    }
+
+    #[test]
+    fn margin_topk_restricts_features() {
+        let st = trained_state();
+        let m = ServableModel::from_sketched(&st, LossKind::Logistic, 0.0);
+        let q = sv(&[(3, 1.0), (9, 1.0), (70, 1.0)]);
+        // top-1 is feature 9 (|w|=5)
+        let w9 = m.weight(9) as f64;
+        assert!((m.margin_topk(&q, 1) - w9).abs() < 1e-9);
+        // k ≥ table size ≡ all table features
+        let all = m.margin_topk(&q, 100);
+        assert!((all - m.margin(&q)).abs() < 1e-9); // q has no out-of-support features
+    }
+
+    #[test]
+    fn predict_probability_follows_loss() {
+        let st = trained_state();
+        let logistic = ServableModel::from_sketched(&st, LossKind::Logistic, 0.0);
+        let mse = ServableModel::from_sketched(&st, LossKind::Mse, 0.0);
+        let q = sv(&[(9, 1.0)]);
+        let p = logistic.predict(&q);
+        assert!(p.probability.is_some());
+        assert!((p.probability.unwrap() - sigmoid(p.margin)).abs() < 1e-15);
+        assert!(mse.predict(&q).probability.is_none());
+    }
+
+    #[test]
+    fn save_load_roundtrip_preserves_margins() {
+        let st = trained_state();
+        let m = ServableModel::from_sketched(&st, LossKind::Logistic, 0.25);
+        let path = std::env::temp_dir()
+            .join(format!("bear-snap-roundtrip-{}", std::process::id()));
+        m.save(&path).unwrap();
+        let m2 = ServableModel::load(&path).unwrap();
+        assert_eq!(m2.n_features(), m.n_features());
+        assert_eq!(m2.loss, m.loss);
+        assert_eq!(m2.bias, m.bias);
+        assert_eq!(m2.hash_seed, m.hash_seed);
+        assert!(m2.has_sketch());
+        for q in [sv(&[(3, 1.0), (9, 2.0)]), sv(&[(777, 1.0)]), sv(&[(1 << 40, -1.5)])] {
+            assert_eq!(m.margin(&q).to_bits(), m2.margin(&q).to_bits(), "{q:?}");
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn sketch_free_snapshot_roundtrips() {
+        let st = trained_state();
+        let m = ServableModel::from_selector(
+            &DummySelector(st.top_features()),
+            LossKind::Mse,
+            0.0,
+        );
+        assert!(!m.has_sketch());
+        let path = std::env::temp_dir()
+            .join(format!("bear-snap-tableonly-{}", std::process::id()));
+        m.save(&path).unwrap();
+        let m2 = ServableModel::load(&path).unwrap();
+        assert!(!m2.has_sketch());
+        assert_eq!(m2.n_features(), m.n_features());
+        let q = sv(&[(9, 1.0), (424242, 1.0)]);
+        assert_eq!(m.margin(&q).to_bits(), m2.margin(&q).to_bits());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn oversized_table_length_rejected_without_allocation() {
+        let st = trained_state();
+        let m = ServableModel::from_sketched(&st, LossKind::Logistic, 0.0);
+        let path = std::env::temp_dir()
+            .join(format!("bear-snap-hugelen-{}", std::process::id()));
+        m.save(&path).unwrap();
+        let mut data = std::fs::read(&path).unwrap();
+        // k_len sits after magic(8) + version(4) + seed(8) + mode(4) +
+        // loss(4) + bias(4) = offset 32; forge it huge and re-sign the CRC
+        data[32..36].copy_from_slice(&u32::MAX.to_le_bytes());
+        let n = data.len();
+        let crc = crate::coordinator::checkpoint::crc32(&data[..n - 4]);
+        data[n - 4..].copy_from_slice(&crc.to_le_bytes());
+        std::fs::write(&path, &data).unwrap();
+        let err = ServableModel::load(&path).unwrap_err();
+        assert!(format!("{err}").contains("exceeds file size"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn corrupted_snapshot_rejected() {
+        let st = trained_state();
+        let m = ServableModel::from_sketched(&st, LossKind::Logistic, 0.0);
+        let path = std::env::temp_dir()
+            .join(format!("bear-snap-corrupt-{}", std::process::id()));
+        m.save(&path).unwrap();
+        let mut data = std::fs::read(&path).unwrap();
+        let mid = data.len() / 3;
+        data[mid] ^= 0x55;
+        std::fs::write(&path, &data).unwrap();
+        let err = ServableModel::load(&path).unwrap_err();
+        assert!(format!("{err}").contains("CRC"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    /// Minimal FeatureSelector for table-only export tests.
+    struct DummySelector(Vec<(u64, f32)>);
+
+    impl FeatureSelector for DummySelector {
+        fn train_minibatch(&mut self, _batch: &crate::data::Minibatch) {}
+        fn score(&self, _x: &SparseVec) -> f64 {
+            0.0
+        }
+        fn top_features(&self) -> Vec<(u64, f32)> {
+            self.0.clone()
+        }
+        fn memory_report(&self) -> crate::algo::MemoryReport {
+            crate::algo::MemoryReport::default()
+        }
+        fn last_grad_norm(&self) -> f64 {
+            0.0
+        }
+        fn last_loss(&self) -> f64 {
+            0.0
+        }
+        fn iterations(&self) -> u64 {
+            0
+        }
+    }
+}

@@ -28,6 +28,9 @@ pub struct CountSketch {
     cols: usize,
     family: HashFamily,
     mode: QueryMode,
+    /// Master seed the hash family was derived from — kept so checkpoints
+    /// and serving snapshots are self-describing (format v2 / BEARSNAP).
+    seed: u64,
 }
 
 impl CountSketch {
@@ -48,7 +51,14 @@ impl CountSketch {
             cols,
             family: HashFamily::new(rows, cols, seed),
             mode: QueryMode::Median,
+            seed,
         }
+    }
+
+    /// Master seed of the hash family (identical seeds ⇒ identical
+    /// bucket/sign functions, which restore/serving correctness relies on).
+    pub fn seed(&self) -> u64 {
+        self.seed
     }
 
     pub fn set_query_mode(&mut self, mode: QueryMode) {

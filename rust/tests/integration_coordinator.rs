@@ -75,6 +75,7 @@ fn streaming_trainer_end_to_end_with_eval() {
     assert!(eval.accuracy > 0.6, "streaming-trained acc {}", eval.accuracy);
 }
 
+#[cfg(feature = "xla")]
 #[test]
 fn pjrt_engine_composes_with_trainer_when_artifacts_exist() {
     let dir = bear::runtime::resolve_artifact_dir(None);

@@ -4,7 +4,9 @@
 //! implementation.
 //!
 //! Requires `make artifacts` (skips with a message otherwise — CI runs
-//! `make test` which builds them first).
+//! `make test` which builds them first) and the `xla` cargo feature; the
+//! whole file compiles away in the default offline build.
+#![cfg(feature = "xla")]
 
 use bear::loss::{GradientEngine, LossKind, NativeEngine};
 use bear::optim::SparseLbfgs;

@@ -1,0 +1,271 @@
+//! End-to-end serving integration: train → export → serve on an ephemeral
+//! port → drive with concurrent clients → assert the served predictions
+//! are **bit-identical** to the in-process `FeatureSelector` scores.
+//!
+//! Bit-identity holds because (a) the snapshot's top-k table is rebuilt
+//! from the sketch at export time, (b) `ServableModel::margin` replays
+//! `SketchedState::score`'s index-ordered f64 accumulation, and (c) f64
+//! `Display` is shortest-round-trip, so text over the wire parses back to
+//! the same bits.
+
+use bear::algo::bear::{Bear, BearConfig};
+use bear::algo::{FeatureSelector, StepSize};
+use bear::coordinator::experiments::{AlgoKind, RealData, RealSpec};
+use bear::data::synth::Rcv1Sim;
+use bear::data::DataSource;
+use bear::loss::LossKind;
+use bear::serve::loadgen::{self, format_query, HttpClient, LoadgenConfig};
+use bear::serve::{serve, ServableModel, ServerConfig};
+use bear::sparse::SparseVec;
+use bear::util::math::sigmoid;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn train_small_bear(n_train: usize, seed: u64) -> Bear {
+    let cfg = BearConfig {
+        sketch_cells: 16_384,
+        sketch_rows: 3,
+        top_k: 200,
+        tau: 5,
+        step: StepSize::Constant(0.01),
+        loss: LossKind::Logistic,
+        seed,
+        ..Default::default()
+    };
+    let mut model = Bear::new(bear::data::synth::RCV1_DIM, cfg);
+    let mut train = Rcv1Sim::new(n_train, seed);
+    model.fit_source(&mut train, 32, 1);
+    model
+}
+
+fn test_queries(n: usize, seed: u64) -> Vec<SparseVec> {
+    let mut src = Rcv1Sim::new(n, seed).with_stream_seed(seed ^ 0x7e57);
+    let mut out = Vec::with_capacity(n);
+    while let Some(e) = src.next_example() {
+        out.push(e.features);
+    }
+    assert_eq!(out.len(), n);
+    out
+}
+
+#[test]
+fn export_serve_loadgen_roundtrip_bit_identical() {
+    const N_QUERIES: usize = 1000;
+    const THREADS: usize = 4;
+    const PER_REQUEST: usize = 25;
+
+    let trained = train_small_bear(1200, 0x5eed);
+    assert!(trained.iterations() > 0);
+
+    // export → snapshot file → reload (the full wire format on the path)
+    let snap_path = std::env::temp_dir()
+        .join(format!("bear-serve-e2e-{}.bearsnap", std::process::id()));
+    let exported = ServableModel::from_sketched(trained.state(), LossKind::Logistic, 0.0);
+    exported.save(&snap_path).unwrap();
+    let served_model = Arc::new(ServableModel::load(&snap_path).unwrap());
+    std::fs::remove_file(&snap_path).ok();
+
+    // in-process ground truth BEFORE starting the server
+    let queries = test_queries(N_QUERIES, 0x5eed);
+    let expected: Vec<f64> = queries.iter().map(|q| trained.score(q)).collect();
+    // the snapshot must already agree in-process (sanity for the wire test)
+    for (q, &e) in queries.iter().zip(&expected) {
+        assert_eq!(served_model.margin(q).to_bits(), e.to_bits());
+    }
+
+    let handle = serve(
+        served_model,
+        ServerConfig { workers: 4, ..Default::default() },
+    )
+    .unwrap();
+    let addr = handle.addr().to_string();
+
+    // 4 closed-loop client threads, 250 queries each, 25 per request
+    let per_thread = N_QUERIES / THREADS;
+    std::thread::scope(|scope| {
+        for t in 0..THREADS {
+            let addr = addr.clone();
+            let queries = &queries;
+            let expected = &expected;
+            scope.spawn(move || {
+                let mut client = HttpClient::connect(&addr).unwrap();
+                let lo = t * per_thread;
+                for chunk_start in (lo..lo + per_thread).step_by(PER_REQUEST) {
+                    let idxs: Vec<usize> = (chunk_start..chunk_start + PER_REQUEST).collect();
+                    let body: String = idxs
+                        .iter()
+                        .map(|&i| format_query(&queries[i]) + "\n")
+                        .collect();
+                    let (status, resp) = client.post("/predict", &body).unwrap();
+                    assert_eq!(status, 200, "{resp}");
+                    let lines: Vec<&str> = resp.lines().collect();
+                    assert_eq!(lines.len(), idxs.len());
+                    for (&i, line) in idxs.iter().zip(&lines) {
+                        let mut cols = line.split_whitespace();
+                        let margin: f64 = cols.next().unwrap().parse().unwrap();
+                        let prob: f64 = cols.next().unwrap().parse().unwrap();
+                        assert_eq!(
+                            margin.to_bits(),
+                            expected[i].to_bits(),
+                            "query {i}: served {margin} vs in-process {}",
+                            expected[i]
+                        );
+                        assert_eq!(prob.to_bits(), sigmoid(expected[i]).to_bits());
+                    }
+                }
+            });
+        }
+    });
+
+    let stats = handle.stats();
+    assert_eq!(stats.predict_queries, N_QUERIES as u64);
+    assert_eq!(stats.predict_requests, (N_QUERIES / PER_REQUEST) as u64);
+    assert_eq!(stats.bad_requests, 0);
+    assert!(stats.latency.count() >= stats.predict_requests);
+    handle.shutdown();
+}
+
+#[test]
+fn loadgen_reports_throughput_and_latency() {
+    let trained = train_small_bear(400, 7);
+    let model = Arc::new(ServableModel::from_sketched(
+        trained.state(),
+        LossKind::Logistic,
+        0.0,
+    ));
+    let handle = serve(model, ServerConfig { workers: 4, ..Default::default() }).unwrap();
+    let cfg = LoadgenConfig {
+        threads: 4,
+        requests_per_thread: 20,
+        queries_per_request: 8,
+        dataset: RealData::Rcv1,
+        seed: 99,
+    };
+    let report = loadgen::run(&handle.addr().to_string(), &cfg).unwrap();
+    assert_eq!(report.errors, 0);
+    assert_eq!(report.requests, 80);
+    assert_eq!(report.queries, 640);
+    assert!(report.qps() > 0.0);
+    assert!(report.latency.count() == 80);
+    assert!(report.latency.p50_micros() > 0.0);
+    assert!(report.latency.p99_micros() >= report.latency.p50_micros());
+    let stats = handle.stats();
+    assert_eq!(stats.predict_queries, 640);
+    handle.shutdown();
+}
+
+#[test]
+fn http_endpoints_topk_healthz_statz_and_errors() {
+    let trained = train_small_bear(300, 21);
+    let model = Arc::new(ServableModel::from_sketched(
+        trained.state(),
+        LossKind::Logistic,
+        0.0,
+    ));
+    let expected_topk = model.topk(3);
+    let handle = serve(model, ServerConfig { workers: 2, ..Default::default() }).unwrap();
+    let mut client = HttpClient::connect(&handle.addr().to_string()).unwrap();
+
+    let (status, body) = client.get("/healthz").unwrap();
+    assert_eq!((status, body.as_str()), (200, "ok\n"));
+
+    let (status, body) = client.get("/topk?k=3").unwrap();
+    assert_eq!(status, 200);
+    let got: Vec<(u64, f32)> = body
+        .lines()
+        .map(|l| {
+            let (f, w) = l.split_once(' ').unwrap();
+            (f.parse().unwrap(), w.parse().unwrap())
+        })
+        .collect();
+    assert_eq!(got, expected_topk);
+
+    let (status, body) = client.get("/statz").unwrap();
+    assert_eq!(status, 200);
+    assert!(body.contains("requests_total "), "{body}");
+    assert!(body.contains("latency_p99_us "), "{body}");
+    assert!(body.contains("model_features "), "{body}");
+
+    let (status, _) = client.get("/nope").unwrap();
+    assert_eq!(status, 404);
+
+    let (status, body) = client.post("/predict", "not-a-query\n").unwrap();
+    assert_eq!(status, 400, "{body}");
+
+    // a well-formed predict still works on the same connection after a 400
+    let (status, body) = client.post("/predict", "5:1.0 9:2.0\n").unwrap();
+    assert_eq!(status, 200);
+    assert_eq!(body.lines().count(), 1);
+
+    let stats = handle.stats();
+    assert_eq!(stats.health_requests, 1);
+    assert_eq!(stats.topk_requests, 1);
+    assert_eq!(stats.not_found, 1);
+    assert_eq!(stats.bad_requests, 1);
+    // close the keep-alive connection first so shutdown's worker drain
+    // doesn't sit in read() until the idle timeout
+    drop(client);
+    handle.shutdown();
+}
+
+#[test]
+fn bounded_accept_queue_sheds_load_with_503() {
+    let trained = train_small_bear(300, 33);
+    let model = Arc::new(ServableModel::from_sketched(
+        trained.state(),
+        LossKind::Logistic,
+        0.0,
+    ));
+    let handle = serve(
+        model,
+        ServerConfig {
+            workers: 1,
+            queue_depth: 1,
+            // short idle timeout so shutdown (which must drain the two
+            // parked idle connections) stays fast
+            read_timeout: Duration::from_millis(500),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let addr = handle.addr();
+
+    // conn1 occupies the single worker (idle, no request sent yet);
+    // conn2 fills the queue; conn3 must be shed with an immediate 503.
+    let conn1 = std::net::TcpStream::connect(addr).unwrap();
+    std::thread::sleep(Duration::from_millis(100));
+    let conn2 = std::net::TcpStream::connect(addr).unwrap();
+    std::thread::sleep(Duration::from_millis(100));
+    let conn3 = std::net::TcpStream::connect(addr).unwrap();
+    conn3.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    let mut line = String::new();
+    {
+        use std::io::BufRead;
+        let mut r = std::io::BufReader::new(&conn3);
+        r.read_line(&mut line).unwrap();
+    }
+    assert!(line.starts_with("HTTP/1.1 503"), "{line:?}");
+    assert!(handle.stats().rejected >= 1);
+    // close the parked connections before shutdown so the worker drain
+    // sees EOF instead of waiting out the idle timeout on each
+    drop(conn3);
+    drop(conn1);
+    drop(conn2);
+    handle.shutdown();
+}
+
+#[test]
+fn train_servable_export_path() {
+    let mut spec = RealSpec::quick(RealData::Rcv1);
+    spec.n_train = 400;
+    let model = bear::serve::train_servable(RealData::Rcv1, AlgoKind::Bear, 50.0, &spec).unwrap();
+    assert!(model.n_features() > 0);
+    assert!(model.has_sketch());
+    assert!(model.sketch_cells() > 0);
+    let q = SparseVec::from_pairs(vec![(50, 1.0), (60, 1.0)]);
+    assert!(model.margin(&q).is_finite());
+    assert!(model.predict(&q).probability.is_some());
+    // DNA is multi-class → export must refuse
+    let err = bear::serve::train_servable(RealData::Dna, AlgoKind::Bear, 330.0, &spec);
+    assert!(err.is_err());
+}

@@ -1,0 +1,136 @@
+//! Property tests (via the `prop` mini-framework) for the estimator
+//! substrates the serving/training stack leans on:
+//!
+//! - `util::math::median_small` must agree with a sort-based reference
+//!   for every d ≤ 8 (the Count Sketch QUERY hot path is specialized to
+//!   small fixed d);
+//! - `CountSketch` QUERY must be exact on a lone item in both modes, and
+//!   the mean estimator must be *unbiased* under random updates: averaged
+//!   over many independent hash families, the estimate converges to the
+//!   true coordinate.
+
+use bear::prop::{run, Gen};
+use bear::sketch::{CountSketch, QueryMode};
+use bear::util::math::{median, median_small};
+
+/// Sort-based reference median, replicating the documented convention
+/// (odd: middle element; even: mean of the two middles).
+fn median_reference(xs: &[f32]) -> f32 {
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mid = v.len() / 2;
+    if v.len() % 2 == 1 {
+        v[mid]
+    } else {
+        0.5 * (v[mid - 1] + v[mid])
+    }
+}
+
+#[test]
+fn median_small_matches_sort_reference_for_all_d() {
+    run("median_small == sorted reference, d ≤ 8", 128, |g: &mut Gen| {
+        let d = g.usize_in(1, 9);
+        let xs: Vec<f32> = (0..d).map(|_| g.f32_in(-100.0, 100.0)).collect();
+        let mut buf = xs.clone();
+        let got = median_small(&mut buf);
+        let want = median_reference(&xs);
+        assert_eq!(got, want, "d={d} xs={xs:?}");
+        // and the general-purpose median agrees too
+        assert_eq!(median(&xs), want, "median() disagrees at d={d}");
+    });
+}
+
+#[test]
+fn median_small_handles_duplicates_and_order() {
+    run("median_small invariant to input order", 64, |g: &mut Gen| {
+        let d = g.usize_in(1, 9);
+        // heavy duplication: values drawn from a tiny set
+        let xs: Vec<f32> = (0..d).map(|_| (g.u64_below(3) as f32) - 1.0).collect();
+        let mut a = xs.clone();
+        let mut b = xs.clone();
+        b.reverse();
+        assert_eq!(median_small(&mut a), median_small(&mut b), "{xs:?}");
+    });
+}
+
+#[test]
+fn lone_item_query_is_exact_in_both_modes() {
+    run("CS query exact on a lone item", 64, |g: &mut Gen| {
+        let rows = g.usize_in(1, 9);
+        let cols = g.usize_in(8, 128);
+        let seed = g.u64_below(1 << 40);
+        let item = g.u64_below(1 << 50);
+        let value = g.f32_in(-50.0, 50.0);
+        for mode in [QueryMode::Median, QueryMode::Mean] {
+            let mut cs = CountSketch::new(cols, rows, seed);
+            cs.set_query_mode(mode);
+            cs.add(item, value);
+            // no collisions possible with a single item: every row holds
+            // s_j²·v = v, so both estimators return it exactly
+            let q = cs.query(item);
+            assert!(
+                (q - value).abs() < 1e-5,
+                "mode {mode:?} rows={rows} cols={cols}: {q} vs {value}"
+            );
+        }
+    });
+}
+
+#[test]
+fn mean_estimator_is_unbiased_on_random_updates() {
+    // E_seed[query(target)] = true value: average the mean-mode estimate
+    // of one coordinate over K independent hash families under a fixed
+    // random update stream, and check the average lands within a few
+    // standard errors of the truth. Deterministic seeds ⇒ deterministic
+    // outcome; the tolerance is ~6σ so the property is robustly true.
+    run("CS mean query unbiased", 12, |g: &mut Gen| {
+        let rows = g.usize_in(1, 6);
+        let cols = g.usize_in(16, 64);
+        let n_noise = g.usize_in(10, 60);
+        let target = 1u64;
+        let target_val = g.f32_in(-10.0, 10.0);
+        let updates: Vec<(u64, f32)> = (0..n_noise)
+            .map(|j| (100 + j as u64 * 17, g.f32_in(-5.0, 5.0)))
+            .collect();
+        let k = 96usize; // independent hash families averaged
+        let mut acc = 0.0f64;
+        for s in 0..k {
+            let mut cs = CountSketch::new(cols, rows, 0xABCD_0000 + s as u64);
+            cs.set_query_mode(QueryMode::Mean);
+            cs.add(target, target_val);
+            for &(f, v) in &updates {
+                cs.add(f, v);
+            }
+            acc += cs.query(target) as f64;
+        }
+        let avg = acc / k as f64;
+        // Var[mean query] ≤ Σ v_noise² / c (the fully-row-correlated bound
+        // — double hashing derives rows from one evaluation, so we don't
+        // assume the extra 1/d); averaging K families divides by K.
+        let noise_energy: f64 = updates.iter().map(|&(_, v)| (v as f64) * (v as f64)).sum();
+        let sigma = (noise_energy / (cols * k) as f64).sqrt();
+        let tol = 6.0 * sigma + 1e-3;
+        assert!(
+            (avg - target_val as f64).abs() < tol,
+            "avg {avg} vs true {target_val} (tol {tol}, rows={rows} cols={cols} noise={n_noise})"
+        );
+    });
+}
+
+#[test]
+fn median_estimator_tracks_heavy_hitter_better_than_noise_floor() {
+    // The paper's estimator: with d rows the median suppresses collision
+    // outliers — a heavy item among light noise is recovered within the
+    // noise scale.
+    run("CS median recovers heavy hitter", 16, |g: &mut Gen| {
+        let cols = g.usize_in(64, 256);
+        let seed = g.u64_below(1 << 40);
+        let mut cs = CountSketch::new(cols, 5, seed);
+        cs.add(7, 100.0);
+        for j in 0..50u64 {
+            cs.add(1000 + j * 13, g.f32_in(-1.0, 1.0));
+        }
+        let q = cs.query(7);
+        assert!((q - 100.0).abs() < 5.0, "cols={cols} seed={seed:#x}: {q}");
+    });
+}
