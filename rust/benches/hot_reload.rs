@@ -1,0 +1,144 @@
+//! Hot-reload benchmark: serve a BEAR snapshot under closed-loop load
+//! while a publisher thread swaps in new generations as fast as it can,
+//! and measure what a swap costs the request path.
+//!
+//! Reports sustained QPS + latency percentiles with reloads off vs. with
+//! continuous reloads, the number of generations swapped during the
+//! measurement window, and the publish→swap pipeline rate. The punchline
+//! the architecture is designed for: the two latency columns should be
+//! indistinguishable (readers revalidate with one atomic load; swaps
+//! never block the request path), and errors must be 0 in both modes.
+//!
+//!     cargo bench --bench hot_reload
+//!     BEAR_BENCH_QUICK=1 cargo bench --bench hot_reload   # smoke sizes
+
+use bear::algo::bear::{Bear, BearConfig};
+use bear::algo::StepSize;
+use bear::bench_util::quick_mode;
+use bear::coordinator::experiments::RealData;
+use bear::coordinator::report::Table;
+use bear::data::synth::Rcv1Sim;
+use bear::loss::LossKind;
+use bear::online::Publisher;
+use bear::serve::loadgen::{self, LoadgenConfig};
+use bear::serve::snapshot::ServableModel;
+use bear::serve::{serve, ServerConfig};
+use bear::util::timer::human_duration;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn trained(n_train: usize) -> Bear {
+    let cfg = BearConfig {
+        sketch_cells: 1 << 15,
+        sketch_rows: 3,
+        top_k: 400,
+        tau: 5,
+        step: StepSize::Constant(0.01),
+        loss: LossKind::Logistic,
+        seed: 0xBEA2,
+        ..Default::default()
+    };
+    let mut model = Bear::new(bear::data::synth::RCV1_DIM, cfg);
+    let mut train = Rcv1Sim::new(n_train, 3);
+    model.fit_source(&mut train, 32, 1);
+    model
+}
+
+fn main() {
+    let quick = quick_mode();
+    let (n_train, requests_per_thread, queries_per_request) =
+        if quick { (300, 40, 8) } else { (1500, 400, 16) };
+
+    eprintln!("[hot-reload bench] training BEAR on the RCV1 surrogate (n={n_train})...");
+    let trainer = trained(n_train);
+    let snapshot =
+        ServableModel::from_sketched(trainer.state(), LossKind::Logistic, 0.0);
+    drop(trainer);
+
+    let dir = std::env::temp_dir()
+        .join(format!("bear-hot-reload-bench-{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+
+    let mut t = Table::new(
+        &format!(
+            "bear serve hot reload — closed-loop loadgen ({requests_per_thread} reqs/thread × {queries_per_request} queries/req)"
+        ),
+        &["mode", "QPS", "queries/s", "p50", "p99", "p99.9", "err", "reloads", "wall"],
+    );
+    let us = |v: f64| human_duration(Duration::from_micros(v as u64));
+
+    for reloading in [false, true] {
+        let mut publisher = Publisher::new(&dir, 4).expect("publication dir");
+        let pub1 = publisher.publish(&snapshot).expect("publish gen 1");
+        let served = Arc::new(ServableModel::load(&pub1.path).expect("load gen 1"));
+        let handle = serve(
+            served,
+            ServerConfig {
+                workers: 4,
+                watch_manifest: reloading.then(|| publisher.manifest_path()),
+                poll_interval: Duration::from_millis(5),
+                ..Default::default()
+            },
+        )
+        .expect("bind ephemeral serve port");
+
+        // publisher thread: keep training + publishing until loadgen ends
+        let stop = Arc::new(AtomicBool::new(false));
+        let pub_thread = if reloading {
+            let stop = stop.clone();
+            let mut train = Rcv1Sim::new(256, 3);
+            let mut bear_model = trained(if quick { 100 } else { 400 });
+            Some(std::thread::spawn(move || {
+                let mut published = 0u64;
+                while !stop.load(Ordering::Acquire) {
+                    bear_model.fit_source(&mut train, 32, 1);
+                    let m = ServableModel::from_sketched(
+                        bear_model.state(),
+                        LossKind::Logistic,
+                        0.0,
+                    );
+                    publisher.publish(&m).expect("publish");
+                    published += 1;
+                }
+                published
+            }))
+        } else {
+            None
+        };
+
+        let cfg = LoadgenConfig {
+            threads: 4,
+            requests_per_thread,
+            queries_per_request,
+            dataset: RealData::Rcv1,
+            seed: 0x10AD,
+        };
+        let report = loadgen::run(&handle.addr().to_string(), &cfg).expect("loadgen run");
+        stop.store(true, Ordering::Release);
+        let published = pub_thread.map(|h| h.join().expect("publisher thread")).unwrap_or(0);
+
+        let stats = handle.stats();
+        t.row(&[
+            if reloading { "reloading".to_string() } else { "static".to_string() },
+            format!("{:.0}", report.qps()),
+            format!("{:.0}", report.query_throughput()),
+            us(report.latency.p50_micros()),
+            us(report.latency.p99_micros()),
+            us(report.latency.p999_micros()),
+            report.errors.to_string(),
+            format!("{} ({} published)", stats.reloads, published),
+            human_duration(report.wall),
+        ]);
+        eprintln!(
+            "  mode={}: served generation {} at shutdown, {} reloads, {} reload failures",
+            if reloading { "reloading" } else { "static" },
+            stats.generation,
+            stats.reloads,
+            stats.reload_failures,
+        );
+        handle.shutdown();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+    t.print();
+}

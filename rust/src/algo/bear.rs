@@ -125,6 +125,12 @@ impl Bear {
     }
 }
 
+impl crate::algo::SketchedSelector for Bear {
+    fn sketched_state(&self) -> &SketchedState {
+        &self.state
+    }
+}
+
 impl FeatureSelector for Bear {
     fn train_minibatch(&mut self, batch: &Minibatch) {
         if batch.is_empty() {

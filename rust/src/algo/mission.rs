@@ -80,6 +80,12 @@ impl Mission {
     }
 }
 
+impl crate::algo::SketchedSelector for Mission {
+    fn sketched_state(&self) -> &SketchedState {
+        &self.state
+    }
+}
+
 impl FeatureSelector for Mission {
     fn train_minibatch(&mut self, batch: &Minibatch) {
         if batch.is_empty() {

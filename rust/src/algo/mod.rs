@@ -106,6 +106,17 @@ pub trait FeatureSelector {
     fn iterations(&self) -> u64;
 }
 
+/// Selectors backed by a shared [`sketched::SketchedState`] (BEAR,
+/// MISSION, sketched Newton) — the algorithms whose trained state can be
+/// exported as a serving snapshot with a full Count Sketch fallback. The
+/// export (`serve::train_servable`) and continuous-training (`online`)
+/// paths drive selectors through this trait so they stay
+/// algorithm-agnostic.
+pub trait SketchedSelector: FeatureSelector {
+    /// The Count Sketch + top-k heap the selector trains.
+    fn sketched_state(&self) -> &sketched::SketchedState;
+}
+
 /// Restrict a sparse vector to the features of an active set
 /// (`ẑ_t = z_t^{A_t}`, Alg. 2 step 6).
 pub fn restrict_to_active(z: &SparseVec, active: &crate::sparse::ActiveSet) -> SparseVec {

@@ -67,6 +67,16 @@ impl NewtonSketch {
             }
         }
     }
+
+    pub fn state(&self) -> &SketchedState {
+        &self.state
+    }
+}
+
+impl crate::algo::SketchedSelector for NewtonSketch {
+    fn sketched_state(&self) -> &SketchedState {
+        &self.state
+    }
 }
 
 impl FeatureSelector for NewtonSketch {

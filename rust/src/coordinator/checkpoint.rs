@@ -119,7 +119,7 @@ impl<'a> Reader<'a> {
 
 /// Verify the trailing CRC and return the covered body. Shared by the
 /// checkpoint and serving-snapshot readers.
-pub(crate) fn checked_body<'a>(data: &'a [u8], min_len: usize) -> Result<&'a [u8]> {
+pub(crate) fn checked_body(data: &[u8], min_len: usize) -> Result<&[u8]> {
     if data.len() < min_len + 4 {
         bail!("checkpoint too short");
     }
@@ -132,19 +132,38 @@ pub(crate) fn checked_body<'a>(data: &'a [u8], min_len: usize) -> Result<&'a [u8
     Ok(body)
 }
 
-/// Atomically write `buf` + its CRC to `path` (tmp file + rename).
-pub(crate) fn commit_with_crc(mut buf: Vec<u8>, path: &Path) -> Result<()> {
-    let crc = crc32(&buf);
-    put_u32(&mut buf, crc);
+/// Atomically publish `bytes` at `path`: write a sibling tmp file, fsync,
+/// rename, fsync the directory. A reader never observes a torn file — it
+/// sees either the old contents or the new — and once this returns, the
+/// rename itself is durable, so a later write (e.g. the MANIFEST pointing
+/// at a just-published snapshot) can never survive a crash that the file
+/// it names did not. The `bear online` publication protocol (and every
+/// checkpoint/snapshot write) relies on both properties.
+pub(crate) fn write_atomic(bytes: &[u8], path: &Path) -> Result<()> {
     let tmp = path.with_extension("tmp");
     {
         let mut file =
             std::fs::File::create(&tmp).with_context(|| format!("creating {tmp:?}"))?;
-        file.write_all(&buf)?;
+        file.write_all(bytes)?;
         file.sync_all()?;
     }
     std::fs::rename(&tmp, path).with_context(|| format!("committing {path:?}"))?;
+    // best-effort directory fsync (opening a directory read-only works on
+    // POSIX; on platforms where it doesn't, atomicity still holds and only
+    // crash-durability of the rename is weakened)
+    if let Some(dir) = path.parent().filter(|d| !d.as_os_str().is_empty()) {
+        if let Ok(d) = std::fs::File::open(dir) {
+            let _ = d.sync_all();
+        }
+    }
     Ok(())
+}
+
+/// Atomically write `buf` + its CRC to `path` (tmp file + rename).
+pub(crate) fn commit_with_crc(mut buf: Vec<u8>, path: &Path) -> Result<()> {
+    let crc = crc32(&buf);
+    put_u32(&mut buf, crc);
+    write_atomic(&buf, path)
 }
 
 /// Self-describing header fields of a (v2) checkpoint.

@@ -5,7 +5,7 @@
 use crate::algo::bear::{Bear, BearConfig};
 use crate::algo::mission::{Mission, MissionConfig};
 use crate::algo::newton_sketch::{NewtonSketch, NewtonSketchConfig};
-use crate::algo::{FeatureSelector, MultiClass, StepSize};
+use crate::algo::{FeatureSelector, MultiClass, SketchedSelector, StepSize};
 use crate::coordinator::trainer::{evaluate_binary, evaluate_binary_topk, Trainer};
 use crate::data::synth::{DnaSim, GaussianLinear, KddSim, Rcv1Sim, WebspamSim};
 use crate::data::DataSource;
@@ -89,27 +89,23 @@ pub struct Fig1Row {
 }
 
 fn make_sim_selector(
+    spec: &SimulationSpec,
     algo: AlgoKind,
-    p: usize,
     cells: usize,
-    rows: usize,
-    k: usize,
-    tau: usize,
     eta: f64,
-    seed: u64,
 ) -> Box<dyn FeatureSelector> {
     let cfg = BearConfig {
         sketch_cells: cells,
-        sketch_rows: rows,
-        top_k: k,
-        tau,
+        sketch_rows: spec.sketch_rows,
+        top_k: spec.k,
+        tau: spec.tau,
         step: StepSize::Constant(eta),
         loss: LossKind::Mse,
-        seed,
+        seed: spec.seed ^ 0xCAFE, // same hash table across algos/trials
         ..Default::default()
     };
     match algo {
-        AlgoKind::Bear => Box::new(Bear::new(p as u64, cfg)),
+        AlgoKind::Bear => Box::new(Bear::new(spec.p as u64, cfg)),
         AlgoKind::Mission => Box::new(Mission::new(MissionConfig::from(&cfg))),
         AlgoKind::Newton => Box::new(NewtonSketch::new(NewtonSketchConfig::from(&cfg))),
         other => panic!("{other:?} does not run in the sketched simulations"),
@@ -131,16 +127,7 @@ pub fn fig1_point(spec: &SimulationSpec, algo: AlgoKind, compression: f64) -> Fi
             // table and step sizes across algorithms)
             let mut gen = GaussianLinear::new(spec.p, spec.k, spec.seed + trial as u64);
             let (mut data, truth) = gen.dataset(spec.n);
-            let mut sel = make_sim_selector(
-                algo,
-                spec.p,
-                cells,
-                spec.sketch_rows,
-                spec.k,
-                spec.tau,
-                eta,
-                spec.seed ^ 0xCAFE, // same hash table across algos/trials
-            );
+            let mut sel = make_sim_selector(spec, algo, cells, eta);
             let log = Trainer::simulation(spec.batch, spec.max_iters).run(sel.as_mut(), &mut data);
             let top = sel.top_features();
             if metrics::exact_support_recovery(&top, &truth) {
@@ -412,6 +399,23 @@ pub fn train_setup(dataset: RealData, spec: &RealSpec, compression: f64) -> Trai
         ..Default::default()
     };
     TrainSetup { cfg, eta, top_k, batch, total_cells, per_class_cells }
+}
+
+/// Construct one of the exportable sketch-backed selectors from a derived
+/// per-run config (see [`train_setup`]). Shared by `serve::train_servable`
+/// and the `online` continuous trainer so both train exactly the model
+/// `bear train` measures.
+pub fn make_sketched_selector(
+    algo: AlgoKind,
+    p: u64,
+    cfg: &BearConfig,
+) -> anyhow::Result<Box<dyn SketchedSelector>> {
+    Ok(match algo {
+        AlgoKind::Bear => Box::new(Bear::new(p, cfg.clone())),
+        AlgoKind::Mission => Box::new(Mission::new(MissionConfig::from(cfg))),
+        AlgoKind::Newton => Box::new(NewtonSketch::new(NewtonSketchConfig::from(cfg))),
+        other => anyhow::bail!("{other:?} is not sketch-backed (use bear|mission|newton)"),
+    })
 }
 
 /// Train+evaluate one (dataset, algorithm, CF) cell. `top_k_eval`

@@ -24,25 +24,56 @@ impl StreamLoader {
     /// Spawn a producer over `source` emitting `batch_size`-row batches
     /// for `epochs` passes, with at most `capacity` batches in flight.
     pub fn spawn(
-        mut source: Box<dyn DataSource>,
+        source: Box<dyn DataSource>,
         batch_size: usize,
         capacity: usize,
         epochs: usize,
     ) -> Self {
-        assert!(batch_size > 0 && capacity > 0 && epochs > 0);
+        assert!(epochs > 0);
+        Self::spawn_inner(source, batch_size, capacity, Some(epochs))
+    }
+
+    /// Spawn a producer that cycles `source` forever — the `bear online`
+    /// continuous-training stream. The producer re-reads the source epoch
+    /// after epoch until the consumer drops (or the source goes empty),
+    /// with the same bounded-channel backpressure as [`Self::spawn`].
+    pub fn spawn_cycle(source: Box<dyn DataSource>, batch_size: usize, capacity: usize) -> Self {
+        Self::spawn_inner(source, batch_size, capacity, None)
+    }
+
+    fn spawn_inner(
+        mut source: Box<dyn DataSource>,
+        batch_size: usize,
+        capacity: usize,
+        epochs: Option<usize>,
+    ) -> Self {
+        assert!(batch_size > 0 && capacity > 0);
         let (tx, rx): (SyncSender<Minibatch>, Receiver<Minibatch>) = sync_channel(capacity);
         let producer_done = Arc::new(AtomicBool::new(false));
         let done = producer_done.clone();
         let handle = std::thread::Builder::new()
             .name("bear-loader".into())
             .spawn(move || {
-                'epochs: for _ in 0..epochs {
+                let mut remaining = epochs;
+                'epochs: loop {
+                    if let Some(r) = remaining.as_mut() {
+                        if *r == 0 {
+                            break;
+                        }
+                        *r -= 1;
+                    }
                     source.reset();
+                    let mut progressed = false;
                     while let Some(b) = source.next_minibatch(batch_size) {
+                        progressed = true;
                         // send blocks when the channel is full: backpressure
                         if tx.send(b).is_err() {
                             break 'epochs; // consumer dropped early
                         }
+                    }
+                    // an empty source must not spin the cycle loop hot
+                    if !progressed {
+                        break;
                     }
                 }
                 done.store(true, Ordering::Release);
@@ -144,10 +175,34 @@ mod tests {
         let mut loader = StreamLoader::spawn(toy_source(64), 1, 1, 1);
         std::thread::sleep(Duration::from_millis(20));
         let mut n = 0;
-        while let Some(_) = loader.next() {
+        while loader.next().is_some() {
             n += 1;
         }
         assert_eq!(n, 64);
+    }
+
+    #[test]
+    fn cycle_loader_replays_past_epoch_boundaries() {
+        // 4 examples, batch 2 ⇒ 2 batches per epoch; draw 9 batches (4½
+        // epochs) from the endless stream, then drop mid-stream.
+        let mut loader = StreamLoader::spawn_cycle(toy_source(4), 2, 2);
+        let mut first_ids = Vec::new();
+        for i in 0..9 {
+            let b = loader.next().expect("endless stream ended");
+            if i % 2 == 0 {
+                first_ids.push(b.examples[0].features.idx[0]);
+            }
+        }
+        // every epoch restarts at example 0
+        assert!(first_ids.iter().all(|&f| f == 0), "{first_ids:?}");
+        drop(loader); // must disconnect + join, not hang
+    }
+
+    #[test]
+    fn cycle_loader_stops_on_empty_source() {
+        let mut loader = StreamLoader::spawn_cycle(toy_source(0), 2, 2);
+        assert!(loader.next().is_none());
+        assert!(loader.producer_done());
     }
 
     #[test]

@@ -23,10 +23,17 @@
 //!   feature), [`coordinator`] (streaming trainer, experiment runner,
 //!   checkpoint v2, report printers), [`cli`], [`metrics`], [`bench_util`]
 //! - serving: [`serve`] — the read path: immutable
-//!   [`serve::ServableModel`] snapshots ("BEARSNAP" wire format), a
-//!   threaded HTTP/1.1 server with micro-batched `/predict`, lock-free
+//!   [`serve::ServableModel`] snapshots ("BEARSNAP" wire format, per-class
+//!   top-k tables for multi-class models), a threaded HTTP/1.1 server with
+//!   micro-batched `/predict` and zero-drop snapshot hot-reload, lock-free
 //!   latency histograms, and a closed-loop load generator
 //!   (`bear export` / `bear serve` / `bear loadgen`)
+//! - continuous training: [`online`] — the write→read loop: a
+//!   generation-numbered atomic snapshot [`online::Publisher`]
+//!   (MANIFEST + tmp-then-rename), the serving-side
+//!   [`online::Reloader`]/[`online::ModelHolder`] epoch swap, and the
+//!   per-publication drift monitor (`bear online` / `bear serve
+//!   --watch-manifest`)
 //!
 //! ## Quickstart
 //! ```no_run
@@ -49,6 +56,7 @@ pub mod data;
 pub mod hash;
 pub mod loss;
 pub mod metrics;
+pub mod online;
 pub mod optim;
 pub mod prop;
 pub mod runtime;

@@ -6,7 +6,9 @@
 //!   stats       Table 2-style dataset summary
 //!   artifacts   list the compiled PJRT artifacts
 //!   export      train + write a serving snapshot (BEARSNAP)
-//!   serve       serve a snapshot over HTTP (predict/topk/healthz/statz)
+//!   online      continuous train + publish generation-numbered snapshots
+//!   serve       serve a snapshot over HTTP (predict/topk/healthz/statz),
+//!               hot-reloading publications with --watch-manifest
 //!   loadgen     closed-loop load test against a running server
 //!   help        this text
 //!
@@ -17,8 +19,12 @@
 //!   bear stats --dataset kdd
 //!   bear artifacts
 //!   bear export --dataset rcv1 --algo bear --cf 100 --out rcv1.bearsnap
-//!   bear serve --model rcv1.bearsnap --addr 127.0.0.1:8370 --workers 8
-//!   bear loadgen --addr 127.0.0.1:8370 --dataset rcv1 --threads 4
+//!   bear export --dataset dna --algo bear --cf 330 --out dna.bearsnap
+//!   bear online --dataset rcv1 --dir online-rcv1 --publish-every 256
+//!   bear serve --model rcv1.bearsnap --addr 127.0.0.1:8370 --workers 8 \
+//!       --watch-manifest online-rcv1/MANIFEST
+//!   bear loadgen --addr 127.0.0.1:8370 --dataset rcv1 --threads 4 \
+//!       --max-error-rate 0
 
 use anyhow::{bail, Result};
 use bear::cli::Args;
@@ -216,42 +222,102 @@ fn cmd_export(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_online(args: &Args) -> Result<()> {
+    let dataset = parse_dataset(&args.str_or("dataset", "rcv1"))?;
+    let algo = parse_algo(&args.str_or("algo", "bear"))?;
+    let cf = args.parse_or("cf", 100.0)?;
+    let mut spec = RealSpec::for_dataset(dataset);
+    apply_spec_flags(args, &mut spec)?;
+    let defaults = bear::online::OnlineConfig::default();
+    let cfg = bear::online::OnlineConfig {
+        dir: std::path::PathBuf::from(args.str_or("dir", "bear-online")),
+        publish_every: args.parse_or("publish-every", defaults.publish_every)?,
+        max_batches: args.parse_or("max-batches", defaults.max_batches)?,
+        keep: args.parse_or("keep", defaults.keep)?,
+        channel_capacity: args.parse_or("channel-capacity", defaults.channel_capacity)?,
+    };
+    // the exact snapshot name depends on the resumed generation counter —
+    // point the operator at the MANIFEST, which always names the latest
+    eprintln!(
+        "[bear] online training {} ({} CF={cf:.1}); once the first generation lands, serve with:\n\
+         [bear]   bear serve --model {}/$(sed -n 's/^file = //p' {m}) --watch-manifest {m}",
+        dataset.label(),
+        algo.label(),
+        cfg.dir.display(),
+        m = cfg.dir.join(bear::online::MANIFEST_FILE).display(),
+    );
+    let report = bear::online::run_online(dataset, algo, cf, &spec, &cfg)?;
+    let mut t = Table::new(
+        &format!("online {} ({} CF={cf:.1})", dataset.label(), algo.label()),
+        &["generations", "batches", "topk jaccard", "norm delta", "manifest", "wall"],
+    );
+    t.row(&[
+        report.generations.to_string(),
+        report.batches.to_string(),
+        report.last_drift.map(|d| f3(d.topk_jaccard)).unwrap_or_else(|| "-".into()),
+        report.last_drift.map(|d| f3(d.coord_norm_delta)).unwrap_or_else(|| "-".into()),
+        report.manifest.display().to_string(),
+        human_duration(report.wall),
+    ]);
+    t.print();
+    Ok(())
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     let path = std::path::PathBuf::from(
         args.get("model").ok_or_else(|| anyhow::anyhow!("--model SNAPSHOT required"))?,
     );
     let model = std::sync::Arc::new(bear::serve::ServableModel::load(&path)?);
-    let mut cfg = bear::serve::ServerConfig::default();
-    cfg.addr = args.str_or("addr", "127.0.0.1:8370");
-    cfg.workers = args.parse_or("workers", cfg.workers)?;
-    cfg.queue_depth = args.parse_or("queue-depth", cfg.queue_depth)?;
-    cfg.max_batch = args.parse_or("max-batch", cfg.max_batch)?;
-    cfg.batch_wait =
-        std::time::Duration::from_micros(args.parse_or("batch-wait-us", 0u64)?);
+    let defaults = bear::serve::ServerConfig::default();
+    let cfg = bear::serve::ServerConfig {
+        addr: args.str_or("addr", "127.0.0.1:8370"),
+        workers: args.parse_or("workers", defaults.workers)?,
+        queue_depth: args.parse_or("queue-depth", defaults.queue_depth)?,
+        max_batch: args.parse_or("max-batch", defaults.max_batch)?,
+        batch_wait: std::time::Duration::from_micros(args.parse_or("batch-wait-us", 0u64)?),
+        watch_manifest: args.get("watch-manifest").map(std::path::PathBuf::from),
+        poll_interval: std::time::Duration::from_millis(args.parse_or("poll-ms", 250u64)?),
+        ..defaults
+    };
     let workers = cfg.workers;
+    let watching = cfg.watch_manifest.clone();
     let handle = bear::serve::serve(model.clone(), cfg)?;
     eprintln!(
-        "[bear] serving {} ({} features, {} sketch cells, {}) on http://{} with {} workers",
+        "[bear] serving {} (generation {}, {} classes, {} features, {} sketch cells, {}) on http://{} with {} workers",
         path.display(),
+        model.generation,
+        model.num_classes(),
         model.n_features(),
         model.sketch_cells(),
         human_bytes(model.memory_bytes()),
         handle.addr(),
         workers,
     );
-    eprintln!("[bear] endpoints: POST /predict · GET /topk?k=N · GET /healthz · GET /statz");
+    match watching {
+        Some(m) => eprintln!(
+            "[bear] hot-reload armed: watching {} (POST /admin/reload forces a check)",
+            m.display()
+        ),
+        None => eprintln!("[bear] hot-reload off (pass --watch-manifest DIR/MANIFEST to enable)"),
+    }
+    eprintln!(
+        "[bear] endpoints: POST /predict · GET /topk?k=N[&class=C] · GET /healthz · GET /statz · POST /admin/reload"
+    );
     handle.join_forever();
     Ok(())
 }
 
 fn cmd_loadgen(args: &Args) -> Result<()> {
     let addr = args.str_or("addr", "127.0.0.1:8370");
-    let mut cfg = bear::serve::LoadgenConfig::default();
-    cfg.dataset = parse_dataset(&args.str_or("dataset", "rcv1"))?;
-    cfg.threads = args.parse_or("threads", cfg.threads)?;
-    cfg.requests_per_thread = args.parse_or("requests", cfg.requests_per_thread)?;
-    cfg.queries_per_request = args.parse_or("queries", cfg.queries_per_request)?;
-    cfg.seed = args.parse_or("seed", cfg.seed)?;
+    let defaults = bear::serve::LoadgenConfig::default();
+    let cfg = bear::serve::LoadgenConfig {
+        dataset: parse_dataset(&args.str_or("dataset", "rcv1"))?,
+        threads: args.parse_or("threads", defaults.threads)?,
+        requests_per_thread: args.parse_or("requests", defaults.requests_per_thread)?,
+        queries_per_request: args.parse_or("queries", defaults.queries_per_request)?,
+        seed: args.parse_or("seed", defaults.seed)?,
+    };
+    let max_error_rate: f64 = args.parse_or("max-error-rate", 0.0)?;
     let report = bear::serve::loadgen::run(&addr, &cfg)?;
     let mut t = Table::new(
         &format!(
@@ -272,6 +338,17 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         human_duration(report.wall),
     ]);
     t.print();
+    // CI contract: a hot-reloading server must drop zero requests, so any
+    // error rate above the threshold (default 0) fails the process
+    if report.error_rate() > max_error_rate {
+        bail!(
+            "error rate {:.6} ({} of {} requests) exceeds --max-error-rate {}",
+            report.error_rate(),
+            report.errors,
+            report.requests + report.errors,
+            max_error_rate
+        );
+    }
     Ok(())
 }
 
@@ -285,15 +362,20 @@ commands:
               [--topk-eval K] [--n-train N] [--n-test N] [--pjrt]
   stats       Table 2-style dataset summary [--dataset D]
   artifacts   list the compiled PJRT artifacts [--artifact-dir DIR]
-  export      train + write a serving snapshot
+  export      train + write a serving snapshot (DNA → one table per class)
               --dataset D --algo bear|mission --cf X --out FILE
               [--n-train N] [--topk K] [--eta E] [--batch B] [--epochs N]
+  online      continuous train + publish generation-numbered snapshots
+              --dataset D --algo bear|mission --cf X --dir DIR
+              [--publish-every N] [--max-batches N] [--keep G]
+              [--n-train N] [--topk K] [--eta E] [--batch B]
   serve       serve a snapshot over HTTP
               --model FILE [--addr H:P] [--workers N] [--queue-depth N]
               [--max-batch Q] [--batch-wait-us U]
+              [--watch-manifest DIR/MANIFEST] [--poll-ms MS]
   loadgen     closed-loop load test against a running server
               --addr H:P [--dataset D] [--threads N] [--requests N]
-              [--queries Q]
+              [--queries Q] [--max-error-rate R]   (exits non-zero above R)
   help        this text
 
 any command accepts --config FILE with `key = value` defaults.
@@ -308,6 +390,7 @@ fn main() -> Result<()> {
         "stats" => cmd_stats(&args),
         "artifacts" => cmd_artifacts(&args),
         "export" => cmd_export(&args),
+        "online" => cmd_online(&args),
         "serve" => cmd_serve(&args),
         "loadgen" => cmd_loadgen(&args),
         "" | "help" => {

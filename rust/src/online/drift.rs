@@ -1,0 +1,108 @@
+//! Drift monitor: quantify how much the model moved between two
+//! publications.
+//!
+//! Two cheap, sublinear signals (both computable from the snapshots
+//! alone, no training data needed):
+//!
+//! - **top-k churn** — the Jaccard similarity of the selected feature
+//!   supports. BEAR's deliverable *is* the support set (the paper's
+//!   feature-selection contract), so support churn is the headline drift
+//!   signal: 1.0 means the selection is unchanged, 0.0 means it was
+//!   completely replaced.
+//! - **coordinate-norm delta** — |‖β_new‖₂ − ‖β_old‖₂| over the sketch
+//!   counters (or the table weights for sketch-free snapshots). A proxy
+//!   for how much mass the optimizer moved; spikes flag regime changes
+//!   in the input stream.
+//!
+//! The trainer (`bear online`) logs these per publication and the serving
+//! tier exposes the latest values on `/statz`
+//! (`drift_topk_jaccard`, `drift_coord_norm_delta`).
+
+use crate::serve::ServableModel;
+use std::collections::HashSet;
+
+/// Drift between two consecutive publications.
+#[derive(Clone, Copy, Debug)]
+pub struct DriftStats {
+    /// Jaccard similarity of the selected-feature supports ∈ [0, 1]
+    /// (1.0 = selection unchanged).
+    pub topk_jaccard: f64,
+    /// |‖β_new‖₂ − ‖β_old‖₂| over the model coordinates.
+    pub coord_norm_delta: f64,
+}
+
+impl DriftStats {
+    /// The "nothing moved" baseline (a fresh server before any reload).
+    pub fn unchanged() -> Self {
+        Self { topk_jaccard: 1.0, coord_norm_delta: 0.0 }
+    }
+}
+
+/// Jaccard similarity |A∩B| / |A∪B| of two id sets. Two empty sets are
+/// identical (1.0).
+pub fn topk_jaccard(a: &[u64], b: &[u64]) -> f64 {
+    if a.is_empty() && b.is_empty() {
+        return 1.0;
+    }
+    let sa: HashSet<u64> = a.iter().copied().collect();
+    let sb: HashSet<u64> = b.iter().copied().collect();
+    let inter = sa.intersection(&sb).count();
+    let union = sa.len() + sb.len() - inter;
+    inter as f64 / union as f64
+}
+
+/// Compute the drift signals between two snapshots (old → new).
+pub fn drift_between(prev: &ServableModel, next: &ServableModel) -> DriftStats {
+    DriftStats {
+        topk_jaccard: topk_jaccard(&prev.selected_ids(), &next.selected_ids()),
+        coord_norm_delta: (next.coord_norm() - prev.coord_norm()).abs(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::sketched::SketchedState;
+    use crate::loss::LossKind;
+    use crate::sparse::{ActiveSet, SparseVec};
+
+    fn sv(pairs: &[(u64, f32)]) -> SparseVec {
+        SparseVec::from_pairs(pairs.to_vec())
+    }
+
+    fn model_from_steps(steps: &[(u64, f32)]) -> ServableModel {
+        let mut st = SketchedState::new(2048, 3, 8, 5);
+        st.apply_step(&sv(steps), 1.0);
+        let row = sv(&steps.iter().map(|&(f, _)| (f, 1.0)).collect::<Vec<_>>());
+        st.refresh_heap(&ActiveSet::from_rows([&row]));
+        ServableModel::from_sketched(&st, LossKind::Logistic, 0.0)
+    }
+
+    #[test]
+    fn jaccard_extremes_and_overlap() {
+        assert_eq!(topk_jaccard(&[], &[]), 1.0);
+        assert_eq!(topk_jaccard(&[1, 2, 3], &[1, 2, 3]), 1.0);
+        assert_eq!(topk_jaccard(&[1, 2], &[3, 4]), 0.0);
+        // {1,2,3} vs {2,3,4}: 2 common of 4 total
+        assert!((topk_jaccard(&[1, 2, 3], &[2, 3, 4]) - 0.5).abs() < 1e-12);
+        assert_eq!(topk_jaccard(&[1], &[]), 0.0);
+    }
+
+    #[test]
+    fn identical_models_report_no_drift() {
+        let m = model_from_steps(&[(3, -1.0), (9, -2.0)]);
+        let d = drift_between(&m, &m.clone());
+        assert_eq!(d.topk_jaccard, 1.0);
+        assert_eq!(d.coord_norm_delta, 0.0);
+    }
+
+    #[test]
+    fn support_change_lowers_jaccard_and_moves_norm() {
+        let a = model_from_steps(&[(3, -1.0), (9, -2.0)]);
+        let b = model_from_steps(&[(3, -1.0), (70, -5.0)]);
+        let d = drift_between(&a, &b);
+        assert!(d.topk_jaccard < 1.0, "{d:?}");
+        assert!(d.topk_jaccard > 0.0, "{d:?}"); // feature 3 is shared
+        assert!(d.coord_norm_delta > 0.0, "{d:?}");
+    }
+}

@@ -1,0 +1,235 @@
+//! The continuous-training tier: close the write→read loop.
+//!
+//! BEAR is an *online* sketched second-order algorithm (paper Alg. 2
+//! consumes a minibatch stream), so the trained artifact is never "done"
+//! — this module keeps training against a live stream and periodically
+//! publishes the current state for the serving tier to pick up without a
+//! restart:
+//!
+//! ```text
+//!  stream ─▶ StreamLoader ─▶ BEAR steps ─▶ Publisher (every N batches)
+//!                                             │  gen-K.bearsnap + MANIFEST
+//!                                             ▼  (tmp+rename, CRC'd)
+//!  bear serve --watch-manifest ◀─ poller ─ Reloader ─▶ ModelHolder swap
+//!                                             (zero dropped requests)
+//! ```
+//!
+//! - [`publisher`] — generation-numbered atomic snapshot publication:
+//!   write-temp-then-rename for both the snapshot and the `MANIFEST`
+//!   pointer, whole-file CRC recorded so readers verify the pair.
+//! - [`reload`] — the serving-side swap: an epoch-versioned
+//!   `Arc<ServableModel>` holder (readers revalidate with one atomic
+//!   load; in-flight requests finish on their snapshot), the manifest
+//!   poller, and the `POST /admin/reload` entry point.
+//! - [`drift`] — per-publication drift signals (top-k support Jaccard,
+//!   coordinate-norm delta) logged by the trainer and exported on
+//!   `/statz`.
+//!
+//! CLI: `bear online --dataset … --dir DIR --publish-every N` on the
+//! write side, `bear serve --model … --watch-manifest DIR/MANIFEST` on
+//! the read side. `tests/integration_online.rs` drives the full loop and
+//! asserts hot reloads drop zero requests.
+
+pub mod drift;
+pub mod publisher;
+pub mod reload;
+
+pub use drift::{drift_between, topk_jaccard, DriftStats};
+pub use publisher::{Manifest, Publication, Publisher, MANIFEST_FILE};
+pub use reload::{CachedModel, ModelHolder, ReloadOutcome, ReloadStats, Reloader};
+
+use crate::coordinator::experiments::{
+    make_sketched_selector, train_setup, AlgoKind, RealData, RealSpec,
+};
+use crate::data::stream::StreamLoader;
+use crate::loss::LossKind;
+use crate::serve::ServableModel;
+use crate::util::logger::{log, Level};
+use anyhow::{bail, Result};
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+/// `bear online` knobs.
+#[derive(Clone, Debug)]
+pub struct OnlineConfig {
+    /// Publication directory (snapshots + MANIFEST).
+    pub dir: PathBuf,
+    /// Minibatches between publications.
+    pub publish_every: usize,
+    /// Stop after this many minibatches (0 = run until the stream ends —
+    /// forever for the cycling loader).
+    pub max_batches: u64,
+    /// Snapshot generations retained on disk.
+    pub keep: usize,
+    /// Prefetch-channel capacity (backpressure bound).
+    pub channel_capacity: usize,
+}
+
+impl Default for OnlineConfig {
+    fn default() -> Self {
+        Self {
+            dir: PathBuf::from("bear-online"),
+            publish_every: 256,
+            max_batches: 0,
+            keep: 4,
+            channel_capacity: 4,
+        }
+    }
+}
+
+/// Summary of a (bounded) `bear online` run.
+#[derive(Clone, Debug)]
+pub struct OnlineReport {
+    pub generations: u64,
+    pub batches: u64,
+    pub wall: Duration,
+    /// Drift of the final publication vs. its predecessor (None before
+    /// the second publication).
+    pub last_drift: Option<DriftStats>,
+    /// The manifest readers should watch.
+    pub manifest: PathBuf,
+}
+
+/// Continuous train-and-publish loop: consume the dataset's stream (which
+/// cycles endlessly), run BEAR/MISSION steps, and publish a
+/// generation-numbered snapshot every `publish_every` minibatches.
+pub fn run_online(
+    dataset: RealData,
+    algo: AlgoKind,
+    compression: f64,
+    spec: &RealSpec,
+    cfg: &OnlineConfig,
+) -> Result<OnlineReport> {
+    if dataset.num_classes() != 2 {
+        bail!(
+            "{} is multi-class; `bear online` publishes binary sketched models only",
+            dataset.label()
+        );
+    }
+    let setup = train_setup(dataset, spec, compression);
+    let mut sel = make_sketched_selector(algo, dataset.dim(), &setup.cfg)?;
+    let (train, _) = dataset.make(spec.n_train, 1, spec.seed);
+    let mut loader =
+        StreamLoader::spawn_cycle(train, setup.batch, cfg.channel_capacity.max(1));
+    let mut publisher = Publisher::new(&cfg.dir, cfg.keep)?;
+    log(
+        Level::Info,
+        format_args!(
+            "online {} {} CF={compression:.1}: publishing every {} batches to {:?} (next generation {})",
+            dataset.label(),
+            algo.label(),
+            cfg.publish_every.max(1),
+            cfg.dir,
+            publisher.next_generation(),
+        ),
+    );
+
+    let publish_every = cfg.publish_every.max(1) as u64;
+    let mut prev: Option<ServableModel> = None;
+    let mut batches = 0u64;
+    let mut last_published_batch = 0u64;
+    let mut generations = 0u64;
+    let mut last_drift = None;
+    let t0 = Instant::now();
+    while let Some(mb) = loader.next() {
+        sel.train_minibatch(&mb);
+        batches += 1;
+        if batches % publish_every == 0 {
+            last_drift = publish_generation(&mut publisher, sel.as_ref(), &mut prev, batches)?;
+            last_published_batch = batches;
+            generations += 1;
+        }
+        if cfg.max_batches > 0 && batches >= cfg.max_batches {
+            break;
+        }
+    }
+    // publish the trailing partial window: a bounded run (or an exhausted
+    // stream) must not discard trained batches, and a run shorter than
+    // publish_every must still leave a generation for the serve tier
+    if batches > last_published_batch {
+        last_drift = publish_generation(&mut publisher, sel.as_ref(), &mut prev, batches)?;
+        generations += 1;
+    }
+    loader.shutdown();
+    Ok(OnlineReport {
+        generations,
+        batches,
+        wall: t0.elapsed(),
+        last_drift,
+        manifest: publisher.manifest_path(),
+    })
+}
+
+/// Export the selector's current state and publish it as the next
+/// generation, logging the publication + drift vs. the previous one.
+fn publish_generation(
+    publisher: &mut Publisher,
+    sel: &dyn crate::algo::SketchedSelector,
+    prev: &mut Option<ServableModel>,
+    batches: u64,
+) -> Result<Option<DriftStats>> {
+    let model = ServableModel::from_sketched(sel.sketched_state(), LossKind::Logistic, 0.0);
+    let drift = prev.as_ref().map(|p| drift_between(p, &model));
+    let publication = publisher.publish(&model)?;
+    if let Some(d) = drift {
+        log(
+            Level::Info,
+            format_args!(
+                "published generation {} ({} bytes, batch {batches}, loss {:.4}): topk_jaccard {:.3}, coord_norm_delta {:.4}",
+                publication.generation,
+                publication.bytes,
+                sel.last_loss(),
+                d.topk_jaccard,
+                d.coord_norm_delta,
+            ),
+        );
+    } else {
+        log(
+            Level::Info,
+            format_args!(
+                "published generation {} ({} bytes, batch {batches}, loss {:.4})",
+                publication.generation,
+                publication.bytes,
+                sel.last_loss(),
+            ),
+        );
+    }
+    *prev = Some(model);
+    Ok(drift)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_online_publishes_bounded_stream() {
+        let dir = std::env::temp_dir()
+            .join(format!("bear-online-mod-{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let mut spec = RealSpec::quick(RealData::Rcv1);
+        spec.n_train = 256;
+        let cfg = OnlineConfig {
+            dir: dir.clone(),
+            publish_every: 4,
+            // 14 batches = 3 full publication windows + a trailing partial
+            // window of 2, which must still be published on exit
+            max_batches: 14,
+            keep: 2,
+            ..Default::default()
+        };
+        let report = run_online(RealData::Rcv1, AlgoKind::Bear, 100.0, &spec, &cfg).unwrap();
+        assert_eq!(report.batches, 14);
+        assert_eq!(report.generations, 4);
+        let drift = report.last_drift.expect("≥2 publications ⇒ drift");
+        assert!((0.0..=1.0).contains(&drift.topk_jaccard));
+        let man = Manifest::read(&report.manifest).unwrap();
+        assert_eq!(man.generation, 4);
+        let m = ServableModel::load(&man.snapshot_path(&report.manifest)).unwrap();
+        assert_eq!(m.generation, 4);
+        assert!(m.has_sketch());
+        // multi-class datasets are refused
+        assert!(run_online(RealData::Dna, AlgoKind::Bear, 330.0, &spec, &cfg).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,256 @@
+//! Snapshot publication: the write side of the hot-reload protocol.
+//!
+//! A publication directory holds generation-numbered BEARSNAP files plus
+//! one `MANIFEST` pointer:
+//! ```text
+//! online-dir/
+//!   gen-00000001.bearsnap
+//!   gen-00000002.bearsnap
+//!   MANIFEST          # generation = 2 · file = gen-00000002.bearsnap · crc32 = …
+//! ```
+//!
+//! **Atomicity.** Both the snapshot and the `MANIFEST` are written
+//! tmp-then-rename (same-directory rename is atomic on POSIX), and the
+//! snapshot is fully durable *before* the manifest points at it. A reader
+//! polling `MANIFEST` therefore always sees a complete publication:
+//! either the previous generation or the new one, never a torn file. The
+//! manifest additionally records the whole-file CRC-32 of the snapshot it
+//! names, so a reader can detect a mismatched pair (e.g. a manifest from
+//! publisher A next to a snapshot from publisher B) before the snapshot's
+//! own internal CRC even runs.
+//!
+//! The manifest body is the repo's `key = value` config dialect
+//! ([`crate::cli::parse_kv`]), so `cat MANIFEST` is debuggable and the
+//! parser is already tested.
+
+use crate::cli::parse_kv;
+use crate::coordinator::checkpoint::{crc32, write_atomic};
+use crate::serve::ServableModel;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Manifest file name inside a publication directory.
+pub const MANIFEST_FILE: &str = "MANIFEST";
+
+/// The parsed `MANIFEST` pointer.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Manifest {
+    /// Latest published generation (monotonically increasing from 1).
+    pub generation: u64,
+    /// Snapshot file name, relative to the manifest's directory.
+    pub file: String,
+    /// CRC-32 of the complete snapshot file the manifest names.
+    pub crc32: u32,
+}
+
+impl Manifest {
+    /// Parse a manifest file.
+    pub fn read(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading manifest {path:?}"))?;
+        let kv = parse_kv(&text)?;
+        let get = |k: &str| kv.get(k).with_context(|| format!("manifest missing `{k}`"));
+        let generation: u64 = get("generation")?.parse().context("manifest generation")?;
+        let file = get("file")?.clone();
+        if file.contains('/') || file.contains("..") {
+            bail!("manifest file name {file:?} must be a plain sibling file");
+        }
+        let crc: u32 = get("crc32")?.parse().context("manifest crc32")?;
+        Ok(Self { generation, file, crc32: crc })
+    }
+
+    /// Atomically write this manifest at `path` (tmp + rename).
+    pub fn write(&self, path: &Path) -> Result<()> {
+        let body = format!(
+            "# bear online publication pointer — do not edit by hand\ngeneration = {}\nfile = {}\ncrc32 = {}\n",
+            self.generation, self.file, self.crc32
+        );
+        write_atomic(body.as_bytes(), path)
+    }
+
+    /// Absolute path of the snapshot this manifest points at.
+    pub fn snapshot_path(&self, manifest_path: &Path) -> PathBuf {
+        match manifest_path.parent() {
+            Some(dir) => dir.join(&self.file),
+            None => PathBuf::from(&self.file),
+        }
+    }
+}
+
+/// One completed publication.
+#[derive(Clone, Debug)]
+pub struct Publication {
+    pub generation: u64,
+    /// Absolute path of the published snapshot.
+    pub path: PathBuf,
+    /// Whole-file CRC-32 recorded in the manifest.
+    pub crc32: u32,
+    /// Snapshot size on disk.
+    pub bytes: usize,
+}
+
+/// Generation-numbered snapshot publisher. Owns the directory's
+/// generation counter; resumes numbering from an existing `MANIFEST` so a
+/// restarted trainer keeps the stream monotone.
+pub struct Publisher {
+    dir: PathBuf,
+    /// Generations retained on disk (≥ 1; older snapshots are pruned).
+    keep: usize,
+    next_generation: u64,
+}
+
+fn generation_file(generation: u64) -> String {
+    format!("gen-{generation:08}.bearsnap")
+}
+
+impl Publisher {
+    /// Open (or create) a publication directory. If a `MANIFEST` already
+    /// exists, numbering continues after its generation.
+    pub fn new(dir: impl Into<PathBuf>, keep: usize) -> Result<Self> {
+        let dir = dir.into();
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating publication dir {dir:?}"))?;
+        let manifest = dir.join(MANIFEST_FILE);
+        let next_generation = if manifest.exists() {
+            Manifest::read(&manifest)?.generation + 1
+        } else {
+            1
+        };
+        Ok(Self { dir, keep: keep.max(1), next_generation })
+    }
+
+    /// The directory's manifest path (what `bear serve --watch-manifest`
+    /// points at).
+    pub fn manifest_path(&self) -> PathBuf {
+        self.dir.join(MANIFEST_FILE)
+    }
+
+    /// Generation the next publication will be stamped with.
+    pub fn next_generation(&self) -> u64 {
+        self.next_generation
+    }
+
+    /// Publish `model` as the next generation: write the snapshot
+    /// (tmp+rename) with the generation stamped into its header, then
+    /// swing the manifest at it (tmp+rename), then prune snapshots older
+    /// than the `keep` window.
+    pub fn publish(&mut self, model: &ServableModel) -> Result<Publication> {
+        let generation = self.next_generation;
+        let file = generation_file(generation);
+        let path = self.dir.join(&file);
+        let bytes = model.encode_with_generation(generation);
+        let crc = crc32(&bytes);
+        write_atomic(&bytes, &path)?;
+        Manifest { generation, file, crc32: crc }.write(&self.manifest_path())?;
+        self.next_generation += 1;
+        self.prune();
+        Ok(Publication { generation, path, crc32: crc, bytes: bytes.len() })
+    }
+
+    /// Remove generation files outside the retention window. Best-effort:
+    /// a reader mid-load of the newest generations is never affected
+    /// because only generations ≤ current − keep are removed.
+    fn prune(&self) {
+        let newest = self.next_generation - 1;
+        let floor = newest.saturating_sub(self.keep as u64 - 1);
+        let mut g = floor;
+        // walk downward from the oldest retained generation; stop at the
+        // first gap (previous prunes already cleared everything below)
+        while g > 0 {
+            g -= 1;
+            if g == 0 {
+                break;
+            }
+            let p = self.dir.join(generation_file(g));
+            if std::fs::remove_file(&p).is_err() {
+                break;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::sketched::SketchedState;
+    use crate::loss::LossKind;
+    use crate::sparse::{ActiveSet, SparseVec};
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("bear-pub-{}-{name}", std::process::id()));
+        std::fs::remove_dir_all(&d).ok();
+        d
+    }
+
+    fn toy_model(weight: f32) -> ServableModel {
+        let mut st = SketchedState::new(512, 3, 4, 9);
+        st.apply_step(&SparseVec::from_pairs(vec![(7, -weight)]), 1.0);
+        let row = SparseVec::from_pairs(vec![(7, 1.0)]);
+        st.refresh_heap(&ActiveSet::from_rows([&row]));
+        ServableModel::from_sketched(&st, LossKind::Logistic, 0.0)
+    }
+
+    #[test]
+    fn publish_stamps_generation_and_manifest_points_at_it() {
+        let dir = tmpdir("basic");
+        let mut p = Publisher::new(&dir, 4).unwrap();
+        let pub1 = p.publish(&toy_model(1.0)).unwrap();
+        assert_eq!(pub1.generation, 1);
+        let man = Manifest::read(&p.manifest_path()).unwrap();
+        assert_eq!(man.generation, 1);
+        let snap = man.snapshot_path(&p.manifest_path());
+        assert_eq!(snap, pub1.path);
+        let data = std::fs::read(&snap).unwrap();
+        assert_eq!(crc32(&data), man.crc32);
+        let m = ServableModel::load(&snap).unwrap();
+        assert_eq!(m.generation, 1);
+        let pub2 = p.publish(&toy_model(2.0)).unwrap();
+        assert_eq!(pub2.generation, 2);
+        assert_eq!(Manifest::read(&p.manifest_path()).unwrap().generation, 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn restart_resumes_generation_numbering() {
+        let dir = tmpdir("resume");
+        {
+            let mut p = Publisher::new(&dir, 4).unwrap();
+            p.publish(&toy_model(1.0)).unwrap();
+            p.publish(&toy_model(2.0)).unwrap();
+        }
+        let mut p2 = Publisher::new(&dir, 4).unwrap();
+        assert_eq!(p2.next_generation(), 3);
+        assert_eq!(p2.publish(&toy_model(3.0)).unwrap().generation, 3);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn prune_keeps_retention_window() {
+        let dir = tmpdir("prune");
+        let mut p = Publisher::new(&dir, 2).unwrap();
+        for i in 0..5 {
+            p.publish(&toy_model(i as f32 + 1.0)).unwrap();
+        }
+        // generations 4 and 5 retained, 1–3 pruned
+        assert!(dir.join(generation_file(5)).exists());
+        assert!(dir.join(generation_file(4)).exists());
+        assert!(!dir.join(generation_file(3)).exists());
+        assert!(!dir.join(generation_file(1)).exists());
+        // the manifest still resolves
+        let man = Manifest::read(&p.manifest_path()).unwrap();
+        assert!(man.snapshot_path(&p.manifest_path()).exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn manifest_rejects_traversal_and_missing_keys() {
+        let dir = tmpdir("badman");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(MANIFEST_FILE);
+        std::fs::write(&path, "generation = 1\nfile = ../evil\ncrc32 = 0\n").unwrap();
+        assert!(Manifest::read(&path).is_err());
+        std::fs::write(&path, "generation = 1\n").unwrap();
+        assert!(Manifest::read(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

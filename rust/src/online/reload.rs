@@ -1,0 +1,313 @@
+//! Hot reload: the read side of the publication protocol.
+//!
+//! [`ModelHolder`] is an epoch-swap holder for the serving snapshot: the
+//! current `Arc<ServableModel>` lives behind a mutex, but readers don't
+//! take it per request — each server thread keeps a [`CachedModel`] and
+//! revalidates it with **one relaxed atomic load** (the holder's version
+//! counter). Only when a swap actually happened does a reader touch the
+//! mutex to re-clone the Arc, i.e. once per generation per thread. The
+//! request hot path therefore never blocks on a reload; in-flight
+//! requests finish on the snapshot Arc they grabbed at dispatch, and the
+//! old model is freed when its last in-flight reader drops it — the
+//! classic RCU shape with `Arc` as the reclamation scheme.
+//!
+//! [`Reloader`] drives the swap: it reads the `MANIFEST`, verifies the
+//! whole-file CRC recorded there, decodes the snapshot (second, internal
+//! CRC), computes drift vs. the serving model, and only then swaps. A
+//! failed reload leaves the serving model untouched and counts a failure
+//! — a half-written or corrupt publication can never take down the tier.
+
+use crate::coordinator::checkpoint::crc32;
+use crate::online::drift::{drift_between, DriftStats};
+use crate::online::publisher::Manifest;
+use crate::serve::metrics::AtomicF64;
+use crate::serve::ServableModel;
+use anyhow::{bail, Context, Result};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Epoch-swap holder for the serving snapshot.
+pub struct ModelHolder {
+    current: Mutex<Arc<ServableModel>>,
+    /// Bumped on every swap; readers revalidate their cache against it
+    /// with a single atomic load.
+    version: AtomicU64,
+}
+
+impl ModelHolder {
+    pub fn new(model: Arc<ServableModel>) -> Self {
+        Self { current: Mutex::new(model), version: AtomicU64::new(1) }
+    }
+
+    /// Current swap epoch (monotone; starts at 1).
+    #[inline]
+    pub fn version(&self) -> u64 {
+        self.version.load(Ordering::Acquire)
+    }
+
+    /// Clone the current snapshot Arc (cold path: reloads and cache
+    /// refreshes only).
+    pub fn load(&self) -> Arc<ServableModel> {
+        self.current.lock().expect("model holder poisoned").clone()
+    }
+
+    /// Install a new snapshot; returns the one it replaced. In-flight
+    /// readers keep their old Arc and finish on it.
+    pub fn swap(&self, model: Arc<ServableModel>) -> Arc<ServableModel> {
+        let mut cur = self.current.lock().expect("model holder poisoned");
+        let old = std::mem::replace(&mut *cur, model);
+        self.version.fetch_add(1, Ordering::Release);
+        old
+    }
+}
+
+/// A server thread's cached view of the holder: one relaxed atomic load
+/// per request in the steady state, one mutex touch per generation.
+pub struct CachedModel {
+    version: u64,
+    model: Arc<ServableModel>,
+}
+
+impl CachedModel {
+    pub fn new(holder: &ModelHolder) -> Self {
+        Self { version: holder.version(), model: holder.load() }
+    }
+
+    /// The current snapshot, revalidated against the holder.
+    #[inline]
+    pub fn get(&mut self, holder: &ModelHolder) -> &Arc<ServableModel> {
+        let v = holder.version();
+        if v != self.version {
+            self.model = holder.load();
+            self.version = v;
+        }
+        &self.model
+    }
+}
+
+/// Live reload counters + drift gauges, shared between the reloader, the
+/// manifest poller thread, and `/statz`.
+#[derive(Debug)]
+pub struct ReloadStats {
+    /// Generation currently being served.
+    pub generation: AtomicU64,
+    /// Successful swaps since startup.
+    pub reloads: AtomicU64,
+    /// Failed reload attempts (bad manifest, CRC mismatch, decode error).
+    pub failures: AtomicU64,
+    /// Drift of the latest swap (see [`crate::online::drift`]).
+    pub topk_jaccard: AtomicF64,
+    pub coord_norm_delta: AtomicF64,
+}
+
+impl ReloadStats {
+    pub fn new(initial_generation: u64) -> Self {
+        let d = DriftStats::unchanged();
+        Self {
+            generation: AtomicU64::new(initial_generation),
+            reloads: AtomicU64::new(0),
+            failures: AtomicU64::new(0),
+            topk_jaccard: AtomicF64::new(d.topk_jaccard),
+            coord_norm_delta: AtomicF64::new(d.coord_norm_delta),
+        }
+    }
+}
+
+/// What one reload attempt did.
+#[derive(Clone, Copy, Debug)]
+pub enum ReloadOutcome {
+    /// Manifest absent or not ahead of the serving generation.
+    UpToDate { generation: u64 },
+    /// A newer generation was verified and swapped in.
+    Swapped { generation: u64, drift: DriftStats },
+}
+
+/// Watches a publication `MANIFEST` and swaps verified snapshots into a
+/// [`ModelHolder`]. Used by both the poller thread and `POST
+/// /admin/reload`; attempts are serialized by an internal gate.
+pub struct Reloader {
+    holder: Arc<ModelHolder>,
+    manifest_path: PathBuf,
+    stats: Arc<ReloadStats>,
+    gate: Mutex<()>,
+}
+
+impl Reloader {
+    pub fn new(
+        holder: Arc<ModelHolder>,
+        manifest_path: PathBuf,
+        stats: Arc<ReloadStats>,
+    ) -> Self {
+        Self { holder, manifest_path, stats, gate: Mutex::new(()) }
+    }
+
+    pub fn stats(&self) -> &Arc<ReloadStats> {
+        &self.stats
+    }
+
+    /// One reload attempt. Errors (unreadable manifest, CRC mismatch,
+    /// decode failure) are counted in `stats.failures` and leave the
+    /// serving model untouched.
+    pub fn try_reload(&self) -> Result<ReloadOutcome> {
+        let res = self.reload_inner();
+        if res.is_err() {
+            self.stats.failures.fetch_add(1, Ordering::Relaxed);
+        }
+        res
+    }
+
+    fn reload_inner(&self) -> Result<ReloadOutcome> {
+        let _gate = self.gate.lock().expect("reloader gate poisoned");
+        let serving = self.stats.generation.load(Ordering::Acquire);
+        if !self.manifest_path.exists() {
+            // nothing published yet: not an error, keep serving
+            return Ok(ReloadOutcome::UpToDate { generation: serving });
+        }
+        let manifest = Manifest::read(&self.manifest_path)?;
+        if manifest.generation <= serving {
+            return Ok(ReloadOutcome::UpToDate { generation: serving });
+        }
+        let snap_path = manifest.snapshot_path(&self.manifest_path);
+        let bytes = std::fs::read(&snap_path)
+            .with_context(|| format!("reading published snapshot {snap_path:?}"))?;
+        let got = crc32(&bytes);
+        if got != manifest.crc32 {
+            bail!(
+                "snapshot {snap_path:?} CRC {got:#010x} does not match manifest {:#010x}",
+                manifest.crc32
+            );
+        }
+        let model = ServableModel::decode(&bytes)
+            .with_context(|| format!("decoding published snapshot {snap_path:?}"))?;
+        if model.generation != manifest.generation {
+            bail!(
+                "snapshot header generation {} disagrees with manifest {}",
+                model.generation,
+                manifest.generation
+            );
+        }
+        let next = Arc::new(model);
+        let drift = drift_between(&self.holder.load(), &next);
+        self.holder.swap(next);
+        self.stats.generation.store(manifest.generation, Ordering::Release);
+        self.stats.reloads.fetch_add(1, Ordering::Relaxed);
+        self.stats.topk_jaccard.set(drift.topk_jaccard);
+        self.stats.coord_norm_delta.set(drift.coord_norm_delta);
+        Ok(ReloadOutcome::Swapped { generation: manifest.generation, drift })
+    }
+
+    /// Poller-thread entry point: attempt a reload, log the outcome, never
+    /// propagate errors (the next poll retries).
+    pub fn poll(&self) {
+        match self.try_reload() {
+            Ok(ReloadOutcome::Swapped { generation, drift }) => {
+                crate::util::logger::log(
+                    crate::util::logger::Level::Info,
+                    format_args!(
+                        "hot-reloaded generation {generation} (topk_jaccard {:.3}, coord_norm_delta {:.4})",
+                        drift.topk_jaccard, drift.coord_norm_delta
+                    ),
+                );
+            }
+            Ok(ReloadOutcome::UpToDate { .. }) => {}
+            Err(e) => {
+                crate::util::logger::log(
+                    crate::util::logger::Level::Warn,
+                    format_args!("reload failed (still serving generation {}): {e:#}",
+                        self.stats.generation.load(Ordering::Relaxed)),
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::sketched::SketchedState;
+    use crate::loss::LossKind;
+    use crate::online::publisher::Publisher;
+    use crate::sparse::{ActiveSet, SparseVec};
+
+    fn toy_model(feature: u64, weight: f32) -> ServableModel {
+        let mut st = SketchedState::new(512, 3, 4, 9);
+        st.apply_step(&SparseVec::from_pairs(vec![(feature, -weight)]), 1.0);
+        let row = SparseVec::from_pairs(vec![(feature, 1.0)]);
+        st.refresh_heap(&ActiveSet::from_rows([&row]));
+        ServableModel::from_sketched(&st, LossKind::Logistic, 0.0)
+    }
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("bear-reload-{}-{name}", std::process::id()));
+        std::fs::remove_dir_all(&d).ok();
+        d
+    }
+
+    #[test]
+    fn holder_swap_bumps_version_and_cache_follows() {
+        let holder = ModelHolder::new(Arc::new(toy_model(7, 1.0)));
+        let mut cache = CachedModel::new(&holder);
+        let v0 = holder.version();
+        let w_before = cache.get(&holder).weight(7);
+        let old = holder.swap(Arc::new(toy_model(7, 2.0)));
+        assert_eq!(old.weight(7), w_before); // swap hands back the old model
+        assert_eq!(holder.version(), v0 + 1);
+        let w_after = cache.get(&holder).weight(7);
+        assert!((w_after - 2.0).abs() < 0.1, "{w_after}");
+        // a second get with no swap is a pure fast path
+        let again = cache.get(&holder).weight(7);
+        assert_eq!(again, w_after);
+    }
+
+    #[test]
+    fn reloader_swaps_published_generations_and_survives_corruption() {
+        let dir = tmpdir("swap");
+        let mut publisher = Publisher::new(&dir, 4).unwrap();
+        let p1 = publisher.publish(&toy_model(7, 1.0)).unwrap();
+        let holder = Arc::new(ModelHolder::new(Arc::new(
+            ServableModel::load(&p1.path).unwrap(),
+        )));
+        let stats = Arc::new(ReloadStats::new(p1.generation));
+        let reloader = Reloader::new(holder.clone(), publisher.manifest_path(), stats.clone());
+
+        // up to date: nothing to do
+        assert!(matches!(
+            reloader.try_reload().unwrap(),
+            ReloadOutcome::UpToDate { generation: 1 }
+        ));
+
+        // publish generation 2 → swap, drift recorded
+        publisher.publish(&toy_model(9, 3.0)).unwrap();
+        match reloader.try_reload().unwrap() {
+            ReloadOutcome::Swapped { generation, drift } => {
+                assert_eq!(generation, 2);
+                assert!(drift.topk_jaccard < 1.0); // support moved 7 → 9
+            }
+            other => panic!("expected swap, got {other:?}"),
+        }
+        assert_eq!(stats.generation.load(Ordering::Relaxed), 2);
+        assert_eq!(stats.reloads.load(Ordering::Relaxed), 1);
+        assert!((holder.load().weight(9) - 3.0).abs() < 0.1);
+
+        // corrupt the next publication's snapshot after manifest write:
+        // reload must fail, count it, and keep serving generation 2
+        let p3 = publisher.publish(&toy_model(11, 5.0)).unwrap();
+        let mut data = std::fs::read(&p3.path).unwrap();
+        let mid = data.len() / 2;
+        data[mid] ^= 0xFF;
+        std::fs::write(&p3.path, &data).unwrap();
+        assert!(reloader.try_reload().is_err());
+        assert_eq!(stats.failures.load(Ordering::Relaxed), 1);
+        assert_eq!(stats.generation.load(Ordering::Relaxed), 2);
+        assert!((holder.load().weight(9) - 3.0).abs() < 0.1);
+
+        // missing manifest is quietly up-to-date
+        std::fs::remove_file(publisher.manifest_path()).unwrap();
+        assert!(matches!(
+            reloader.try_reload().unwrap(),
+            ReloadOutcome::UpToDate { .. }
+        ));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

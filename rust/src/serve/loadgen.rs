@@ -145,6 +145,18 @@ impl LoadReport {
     pub fn query_throughput(&self) -> f64 {
         self.queries as f64 / self.wall.as_secs_f64().max(1e-9)
     }
+
+    /// Failed fraction of attempted requests ∈ [0, 1]. `bear loadgen
+    /// --max-error-rate` exits non-zero above this — CI's zero-drop
+    /// hot-reload assertion (the default threshold is 0).
+    pub fn error_rate(&self) -> f64 {
+        let attempted = self.requests + self.errors;
+        if attempted == 0 {
+            0.0
+        } else {
+            self.errors as f64 / attempted as f64
+        }
+    }
 }
 
 /// Pre-materialize `n` request bodies from the dataset's test-split query

@@ -173,6 +173,32 @@ impl HistogramSnapshot {
     }
 }
 
+/// An f64 gauge shared across threads (bit-cast in an `AtomicU64`) — the
+/// serving tier's drift gauges (`/statz` top-k churn, sketch-norm delta)
+/// are set by the reloader thread and read by request workers.
+#[derive(Debug)]
+pub struct AtomicF64(AtomicU64);
+
+impl AtomicF64 {
+    pub fn new(v: f64) -> Self {
+        Self(AtomicU64::new(v.to_bits()))
+    }
+
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+impl Default for AtomicF64 {
+    fn default() -> Self {
+        Self::new(0.0)
+    }
+}
+
 /// Merge a set of live histograms into one snapshot (the /statz scrape).
 pub fn merged_snapshot<'a>(hists: impl IntoIterator<Item = &'a LatencyHistogram>) -> HistogramSnapshot {
     let mut out = HistogramSnapshot::empty();
@@ -246,6 +272,15 @@ mod tests {
         assert!(merged.p99_micros() > 4000.0);
         let via_helper = merged_snapshot([&a, &b]);
         assert_eq!(via_helper.count(), 1000);
+    }
+
+    #[test]
+    fn atomic_f64_gauge_roundtrips() {
+        let g = AtomicF64::new(0.5);
+        assert_eq!(g.get(), 0.5);
+        g.set(-3.25);
+        assert_eq!(g.get(), -3.25);
+        assert_eq!(AtomicF64::default().get(), 0.0);
     }
 
     #[test]

@@ -6,20 +6,28 @@
 //! reads. This module is that tier:
 //!
 //! - [`snapshot`] — [`snapshot::ServableModel`]: an immutable snapshot
-//!   exported from any trained selector (dense top-k weight table +
-//!   optional full Count Sketch fallback), serialized in the "BEARSNAP"
-//!   format (a self-describing sibling of checkpoint v2).
+//!   exported from any trained selector (dense top-k weight tables — one
+//!   per class for multi-class models — + optional full Count Sketch
+//!   fallback), serialized in the "BEARSNAP" v2 format (a self-describing
+//!   sibling of checkpoint v2, with a publication `generation` header).
 //! - [`server`] — a multi-threaded HTTP/1.1 server on std TCP: worker
 //!   pool, bounded accept queue (503 backpressure), micro-batched
-//!   `POST /predict`, plus `/topk`, `/healthz`, `/statz`.
+//!   `POST /predict`, plus `/topk`, `/healthz`, `/statz`, and — when a
+//!   publication MANIFEST is watched — zero-drop snapshot hot-reload with
+//!   `POST /admin/reload`.
 //! - [`metrics`] — lock-free per-worker latency histograms (p50/p99/p999)
-//!   merged on scrape.
+//!   merged on scrape, plus atomic f64 gauges for the drift monitor.
 //! - [`loadgen`] — a closed-loop multi-threaded load generator replaying
-//!   synthetic RCV1/DNA-style queries, reporting QPS + percentiles.
+//!   synthetic RCV1/DNA-style queries, reporting QPS + percentiles; its
+//!   CLI exits non-zero above `--max-error-rate` so CI can assert
+//!   zero-drop reloads end to end.
 //!
-//! CLI: `bear export` → `bear serve` → `bear loadgen`.
+//! CLI: `bear export` → `bear serve` → `bear loadgen`, with
+//! `bear online` (see [`crate::online`]) feeding `bear serve
+//! --watch-manifest` continuously.
 //! End-to-end: `tests/integration_serve.rs` asserts served predictions
-//! are bit-identical to in-process `FeatureSelector::score`.
+//! are bit-identical to in-process `FeatureSelector::score`;
+//! `tests/integration_online.rs` asserts hot reloads drop zero requests.
 
 pub mod loadgen;
 pub mod metrics;
@@ -27,45 +35,79 @@ pub mod server;
 pub mod snapshot;
 
 pub use loadgen::{HttpClient, LoadReport, LoadgenConfig};
-pub use metrics::{HistogramSnapshot, LatencyHistogram};
+pub use metrics::{AtomicF64, HistogramSnapshot, LatencyHistogram};
 pub use server::{serve, ServerConfig, ServerHandle, StatsSnapshot};
 pub use snapshot::{Prediction, ServableModel};
 
-use crate::algo::bear::Bear;
 use crate::algo::mission::{Mission, MissionConfig};
-use crate::coordinator::experiments::{train_setup, AlgoKind, RealData, RealSpec, TrainSetup};
+use crate::algo::{Bear, MultiClass, SketchedSelector};
+use crate::coordinator::experiments::{
+    make_sketched_selector, train_setup, AlgoKind, RealData, RealSpec, TrainSetup,
+};
 use crate::loss::LossKind;
 use anyhow::{bail, Result};
 
 /// Train a selector on a real-data surrogate and export it as a
 /// [`ServableModel`] (the `bear export` path). Uses the same
 /// [`train_setup`] derivation as `real_point`, so an exported snapshot is
-/// the model `bear train` measures. Only the sketched,
-/// binary-classification selectors can be exported with a sketch
-/// fallback; the 15-class DNA task would need one snapshot per class.
+/// the model `bear train` measures. Binary datasets export one table plus
+/// the full sketch fallback; the 15-class DNA task exports one top-k
+/// table per class (Sec. 7 one-vs-rest, no shared fallback).
 pub fn train_servable(
     dataset: RealData,
     algo: AlgoKind,
     compression: f64,
     spec: &RealSpec,
 ) -> Result<ServableModel> {
-    if dataset.num_classes() != 2 {
-        bail!("{} is multi-class; export serves binary models only", dataset.label());
-    }
     let TrainSetup { cfg, batch, .. } = train_setup(dataset, spec, compression);
     let p = dataset.dim();
+    let classes = dataset.num_classes();
     let (mut train, _) = dataset.make(spec.n_train, 1, spec.seed);
+    let epochs = spec.epochs.max(1);
+    if classes == 2 {
+        let mut sel = make_sketched_selector(algo, p, &cfg)?;
+        for _ in 0..epochs {
+            train.reset();
+            while let Some(mb) = train.next_minibatch(batch) {
+                sel.train_minibatch(&mb);
+            }
+        }
+        return Ok(ServableModel::from_sketched(
+            sel.sketched_state(),
+            LossKind::Logistic,
+            0.0,
+        ));
+    }
+    // multi-class: one sketch per class (one-vs-rest), one exported table
+    // per class — only BEAR and MISSION run the Sec. 7 extension. The
+    // per-class seed derivation (cfg.seed + c) matches `real_point`, so
+    // the exported snapshot is the model `bear train` measures.
+    let per_class = |c: usize| {
+        let mut cc = cfg.clone();
+        cc.seed = cfg.seed + c as u64;
+        cc
+    };
     match algo {
         AlgoKind::Bear => {
-            let mut sel = Bear::new(p, cfg);
-            sel.fit_source(train.as_mut(), batch, spec.epochs.max(1));
-            Ok(ServableModel::from_sketched(sel.state(), LossKind::Logistic, 0.0))
+            let mc = MultiClass::new(classes, |c| Bear::new(p, per_class(c)));
+            Ok(export_multiclass(mc, train.as_mut(), batch, epochs))
         }
         AlgoKind::Mission => {
-            let mut sel = Mission::new(MissionConfig::from(&cfg));
-            sel.fit_source(train.as_mut(), batch, spec.epochs.max(1));
-            Ok(ServableModel::from_sketched(sel.state(), LossKind::Logistic, 0.0))
+            let mc = MultiClass::new(classes, |c| Mission::new(MissionConfig::from(&per_class(c))));
+            Ok(export_multiclass(mc, train.as_mut(), batch, epochs))
         }
-        other => bail!("{other:?} cannot be exported with a sketch fallback (use bear|mission)"),
+        other => bail!("{other:?} does not run the multi-class extension (use bear|mission)"),
     }
+}
+
+/// Fit a one-vs-rest ensemble and export one top-k table per class.
+fn export_multiclass<S: SketchedSelector>(
+    mut mc: MultiClass<S>,
+    train: &mut dyn crate::data::DataSource,
+    batch: usize,
+    epochs: usize,
+) -> ServableModel {
+    mc.fit_source(train, batch, epochs);
+    let states: Vec<_> = (0..mc.num_classes()).map(|c| mc.class(c).sketched_state()).collect();
+    ServableModel::from_multiclass(&states, LossKind::Logistic, 0.0)
 }

@@ -24,20 +24,34 @@
 //! Endpoints:
 //! - `POST /predict` — body: one query per line, each a space-separated
 //!   list of `idx:val` pairs. Response: one line per query, `margin` for
-//!   MSE models or `margin probability` for logistic ones, formatted with
-//!   Rust's shortest-round-trip f64 `Display` (parsing the text back
-//!   yields the bit-identical f64).
-//! - `GET /topk?k=N` — the N heaviest features, `id weight` per line.
+//!   MSE models, `margin probability` for logistic ones, or
+//!   `class margin` for multi-class snapshots, formatted with Rust's
+//!   shortest-round-trip f64 `Display` (parsing the text back yields the
+//!   bit-identical f64).
+//! - `GET /topk?k=N[&class=C]` — the N heaviest features of class C
+//!   (default 0), `id weight` per line.
 //! - `GET /healthz` — liveness.
-//! - `GET /statz` — counters + merged latency percentiles, `key value`
-//!   per line.
+//! - `GET /statz` — counters + merged latency percentiles + the live
+//!   snapshot generation and drift gauges, `key value` per line.
+//! - `POST /admin/reload` — with `--watch-manifest`: check the manifest
+//!   and swap in a newer generation synchronously (the poller thread does
+//!   the same on a timer).
+//!
+//! **Hot reload** is zero-drop by construction: every thread resolves the
+//! serving snapshot through a [`CachedModel`] (one relaxed atomic load per
+//! request against the [`ModelHolder`] epoch), so requests in flight at
+//! swap time finish on the snapshot they started with while new requests
+//! see the new generation. No request is dropped, blocked, or errored by
+//! a swap.
 
+use crate::online::reload::{CachedModel, ModelHolder, ReloadOutcome, ReloadStats, Reloader};
 use crate::serve::metrics::{merged_snapshot, HistogramSnapshot, LatencyHistogram};
 use crate::serve::snapshot::{Prediction, ServableModel};
 use crate::sparse::SparseVec;
 use anyhow::{bail, Context, Result};
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, sync_channel, Receiver, RecvTimeoutError, Sender, TrySendError};
 use std::sync::{Arc, Mutex};
@@ -65,6 +79,12 @@ pub struct ServerConfig {
     /// Per-connection read timeout (idle keep-alive connections are shed
     /// after this long).
     pub read_timeout: Duration,
+    /// Publication MANIFEST to watch for new snapshot generations
+    /// (`bear online`'s output). Enables the poller thread and
+    /// `POST /admin/reload`.
+    pub watch_manifest: Option<PathBuf>,
+    /// How often the poller checks the manifest.
+    pub poll_interval: Duration,
 }
 
 impl Default for ServerConfig {
@@ -76,6 +96,8 @@ impl Default for ServerConfig {
             max_batch: 128,
             batch_wait: Duration::ZERO,
             read_timeout: Duration::from_secs(5),
+            watch_manifest: None,
+            poll_interval: Duration::from_millis(250),
         }
     }
 }
@@ -95,6 +117,7 @@ struct Counters {
     not_found: AtomicU64,
     bad_requests: AtomicU64,
     rejected: AtomicU64,
+    admin_reload_requests: AtomicU64,
 }
 
 impl Counters {
@@ -112,6 +135,7 @@ impl Counters {
             not_found: AtomicU64::new(0),
             bad_requests: AtomicU64::new(0),
             rejected: AtomicU64::new(0),
+            admin_reload_requests: AtomicU64::new(0),
         }
     }
 }
@@ -132,6 +156,16 @@ pub struct StatsSnapshot {
     pub not_found: u64,
     pub bad_requests: u64,
     pub rejected: u64,
+    pub admin_reload_requests: u64,
+    /// Snapshot generation currently being served.
+    pub generation: u64,
+    /// Successful hot reloads since startup.
+    pub reloads: u64,
+    /// Failed reload attempts (serving model untouched).
+    pub reload_failures: u64,
+    /// Drift gauges of the latest swap (1.0 / 0.0 before any).
+    pub drift_topk_jaccard: f64,
+    pub drift_coord_norm_delta: f64,
     pub latency: HistogramSnapshot,
 }
 
@@ -140,7 +174,9 @@ pub struct StatsSnapshot {
 /// worker drops its sender, so only workers may own one.
 #[derive(Clone)]
 struct Monitor {
-    model: Arc<ServableModel>,
+    holder: Arc<ModelHolder>,
+    reload_stats: Arc<ReloadStats>,
+    reloader: Option<Arc<Reloader>>,
     counters: Arc<Counters>,
     started: Instant,
     worker_hists: Arc<Vec<Arc<LatencyHistogram>>>,
@@ -301,13 +337,10 @@ fn parse_queries(body: &[u8]) -> Result<Vec<SparseVec>> {
 fn format_predictions(preds: &[Prediction]) -> String {
     let mut out = String::with_capacity(preds.len() * 24);
     for p in preds {
-        match p.probability {
-            Some(prob) => {
-                out.push_str(&format!("{} {}\n", p.margin, prob));
-            }
-            None => {
-                out.push_str(&format!("{}\n", p.margin));
-            }
+        match (p.class, p.probability) {
+            (Some(class), _) => out.push_str(&format!("{class} {}\n", p.margin)),
+            (None, Some(prob)) => out.push_str(&format!("{} {}\n", p.margin, prob)),
+            (None, None) => out.push_str(&format!("{}\n", p.margin)),
         }
     }
     out
@@ -335,12 +368,13 @@ fn write_response(
 // ---------------------------------------------------------------------------
 
 fn batcher_loop(
-    model: Arc<ServableModel>,
+    holder: Arc<ModelHolder>,
     rx: Receiver<PredictJob>,
     counters: Arc<Counters>,
     max_batch: usize,
     wait: Duration,
 ) {
+    let mut cache = CachedModel::new(&holder);
     while let Ok(first) = rx.recv() {
         let mut jobs = vec![first];
         let mut total: usize = jobs[0].queries.len();
@@ -373,6 +407,10 @@ fn batcher_loop(
         }
         counters.micro_batches.fetch_add(1, Ordering::Relaxed);
         counters.micro_batch_queries.fetch_add(total as u64, Ordering::Relaxed);
+        // resolve the snapshot once per micro-batch: every query in the
+        // batch scores on one generation, and a hot swap mid-batch cannot
+        // tear a response
+        let model = cache.get(&holder).clone();
         for job in jobs {
             let preds: Vec<Prediction> = job.queries.iter().map(|q| model.predict(q)).collect();
             // a worker that gave up on the reply is not an error
@@ -382,7 +420,14 @@ fn batcher_loop(
 }
 
 /// Handle one request; returns (status, reason, body, keep_alive).
-fn dispatch(ctx: &Ctx, req: &Request) -> (u16, &'static str, String, bool) {
+/// `cache` is the calling thread's snapshot cache: the request resolves
+/// the serving model once, up front, and uses it throughout — a hot swap
+/// mid-request cannot change what this request sees.
+fn dispatch(
+    ctx: &Ctx,
+    req: &Request,
+    cache: &mut CachedModel,
+) -> (u16, &'static str, String, bool) {
     let counters = &ctx.mon.counters;
     counters.requests_total.fetch_add(1, Ordering::Relaxed);
     match (req.method.as_str(), req.path.as_str()) {
@@ -407,11 +452,24 @@ fn dispatch(ctx: &Ctx, req: &Request) -> (u16, &'static str, String, bool) {
         }
         ("GET", "/topk") => {
             counters.topk_requests.fetch_add(1, Ordering::Relaxed);
+            let model = cache.get(&ctx.mon.holder);
             let k = query_param(req.query.as_deref(), "k")
                 .and_then(|v| v.parse::<usize>().ok())
                 .unwrap_or(10);
+            let class = query_param(req.query.as_deref(), "class")
+                .and_then(|v| v.parse::<usize>().ok())
+                .unwrap_or(0);
+            if class >= model.num_classes() {
+                counters.bad_requests.fetch_add(1, Ordering::Relaxed);
+                return (
+                    400,
+                    "Bad Request",
+                    format!("class {class} out of range (model has {})\n", model.num_classes()),
+                    req.keep_alive,
+                );
+            }
             let mut body = String::new();
-            for (f, w) in ctx.mon.model.topk(k) {
+            for (f, w) in model.topk_class(class, k) {
                 body.push_str(&format!("{f} {w}\n"));
             }
             (200, "OK", body, req.keep_alive)
@@ -423,8 +481,40 @@ fn dispatch(ctx: &Ctx, req: &Request) -> (u16, &'static str, String, bool) {
         ("GET", "/statz") => {
             counters.statz_requests.fetch_add(1, Ordering::Relaxed);
             let snap = scrape(&ctx.mon);
-            let body = render_statz(&snap, &ctx.mon.model, ctx.mon.worker_hists.len());
+            let model = cache.get(&ctx.mon.holder).clone();
+            let body = render_statz(&snap, &model, ctx.mon.worker_hists.len());
             (200, "OK", body, req.keep_alive)
+        }
+        ("POST", "/admin/reload") => {
+            counters.admin_reload_requests.fetch_add(1, Ordering::Relaxed);
+            match &ctx.mon.reloader {
+                None => (
+                    400,
+                    "Bad Request",
+                    "reload not configured (start bear serve with --watch-manifest)\n".into(),
+                    req.keep_alive,
+                ),
+                Some(r) => match r.try_reload() {
+                    Ok(ReloadOutcome::Swapped { generation, drift }) => (
+                        200,
+                        "OK",
+                        format!(
+                            "reloaded generation {generation}\ntopk_jaccard {}\ncoord_norm_delta {}\n",
+                            drift.topk_jaccard, drift.coord_norm_delta
+                        ),
+                        req.keep_alive,
+                    ),
+                    Ok(ReloadOutcome::UpToDate { generation }) => (
+                        200,
+                        "OK",
+                        format!("already at generation {generation}\n"),
+                        req.keep_alive,
+                    ),
+                    Err(e) => {
+                        (500, "Internal Server Error", format!("{e:#}\n"), req.keep_alive)
+                    }
+                },
+            }
         }
         _ => {
             counters.not_found.fetch_add(1, Ordering::Relaxed);
@@ -435,6 +525,7 @@ fn dispatch(ctx: &Ctx, req: &Request) -> (u16, &'static str, String, bool) {
 
 fn scrape(mon: &Monitor) -> StatsSnapshot {
     let c = &mon.counters;
+    let r = &mon.reload_stats;
     StatsSnapshot {
         uptime: mon.started.elapsed(),
         connections: c.connections.load(Ordering::Relaxed),
@@ -449,13 +540,19 @@ fn scrape(mon: &Monitor) -> StatsSnapshot {
         not_found: c.not_found.load(Ordering::Relaxed),
         bad_requests: c.bad_requests.load(Ordering::Relaxed),
         rejected: c.rejected.load(Ordering::Relaxed),
+        admin_reload_requests: c.admin_reload_requests.load(Ordering::Relaxed),
+        generation: r.generation.load(Ordering::Acquire),
+        reloads: r.reloads.load(Ordering::Relaxed),
+        reload_failures: r.failures.load(Ordering::Relaxed),
+        drift_topk_jaccard: r.topk_jaccard.get(),
+        drift_coord_norm_delta: r.coord_norm_delta.get(),
         latency: merged_snapshot(mon.worker_hists.iter().map(|h| h.as_ref())),
     }
 }
 
 fn render_statz(s: &StatsSnapshot, model: &ServableModel, workers: usize) -> String {
     let uptime = s.uptime.as_secs_f64().max(1e-9);
-    let mut out = String::with_capacity(512);
+    let mut out = String::with_capacity(768);
     out.push_str(&format!("uptime_s {uptime:.3}\n"));
     out.push_str(&format!("qps {:.1}\n", s.requests_total as f64 / uptime));
     out.push_str(&format!("connections {}\n", s.connections));
@@ -470,18 +567,31 @@ fn render_statz(s: &StatsSnapshot, model: &ServableModel, workers: usize) -> Str
     out.push_str(&format!("not_found {}\n", s.not_found));
     out.push_str(&format!("bad_requests {}\n", s.bad_requests));
     out.push_str(&format!("rejected_503 {}\n", s.rejected));
+    out.push_str(&format!("admin_reload_requests {}\n", s.admin_reload_requests));
+    out.push_str(&format!("generation {}\n", s.generation));
+    out.push_str(&format!("reloads_total {}\n", s.reloads));
+    out.push_str(&format!("reload_failures {}\n", s.reload_failures));
+    out.push_str(&format!("drift_topk_jaccard {:.6}\n", s.drift_topk_jaccard));
+    out.push_str(&format!("drift_coord_norm_delta {:.6}\n", s.drift_coord_norm_delta));
     out.push_str(&format!("latency_p50_us {:.0}\n", s.latency.p50_micros()));
     out.push_str(&format!("latency_p99_us {:.0}\n", s.latency.p99_micros()));
     out.push_str(&format!("latency_p999_us {:.0}\n", s.latency.p999_micros()));
     out.push_str(&format!("latency_mean_us {:.1}\n", s.latency.mean_micros()));
     out.push_str(&format!("workers {workers}\n"));
     out.push_str(&format!("model_features {}\n", model.n_features()));
+    out.push_str(&format!("model_classes {}\n", model.num_classes()));
     out.push_str(&format!("model_sketch_cells {}\n", model.sketch_cells()));
     out.push_str(&format!("model_bytes {}\n", model.memory_bytes()));
     out
 }
 
-fn handle_conn(stream: TcpStream, ctx: &Ctx, hist: &LatencyHistogram, read_timeout: Duration) {
+fn handle_conn(
+    stream: TcpStream,
+    ctx: &Ctx,
+    hist: &LatencyHistogram,
+    read_timeout: Duration,
+    cache: &mut CachedModel,
+) {
     ctx.mon.counters.connections.fetch_add(1, Ordering::Relaxed);
     stream.set_nodelay(true).ok();
     stream.set_read_timeout(Some(read_timeout)).ok();
@@ -494,7 +604,7 @@ fn handle_conn(stream: TcpStream, ctx: &Ctx, hist: &LatencyHistogram, read_timeo
         match read_request(&mut reader) {
             Ok(Some(req)) => {
                 let t0 = Instant::now();
-                let (status, reason, body, keep) = dispatch(ctx, &req);
+                let (status, reason, body, keep) = dispatch(ctx, &req, cache);
                 // record before the response bytes go out: whoever has the
                 // response is guaranteed to find it in the histogram
                 hist.record(t0.elapsed());
@@ -524,6 +634,8 @@ fn worker_loop(
     hist: Arc<LatencyHistogram>,
     read_timeout: Duration,
 ) {
+    // per-worker snapshot cache: one relaxed atomic load per request
+    let mut cache = CachedModel::new(&ctx.mon.holder);
     loop {
         // hold the lock only to dequeue; block in recv while holding it is
         // fine — exactly one idle worker waits, the rest park on the mutex
@@ -532,7 +644,7 @@ fn worker_loop(
             Err(_) => break,
         };
         match conn {
-            Ok(stream) => handle_conn(stream, &ctx, &hist, read_timeout),
+            Ok(stream) => handle_conn(stream, &ctx, &hist, read_timeout, &mut cache),
             Err(_) => break, // acceptor gone
         }
     }
@@ -552,6 +664,7 @@ pub struct ServerHandle {
     acceptor: Option<JoinHandle<()>>,
     workers: Vec<JoinHandle<()>>,
     batcher: Option<JoinHandle<()>>,
+    poller: Option<JoinHandle<()>>,
     mon: Monitor,
 }
 
@@ -566,6 +679,17 @@ impl ServerHandle {
         scrape(&self.mon)
     }
 
+    /// The currently served snapshot (readers hold it across swaps).
+    pub fn model(&self) -> Arc<ServableModel> {
+        self.mon.holder.load()
+    }
+
+    /// Force a manifest check right now (what `POST /admin/reload` does).
+    /// `None` when the server was started without `watch_manifest`.
+    pub fn reload_now(&self) -> Option<Result<ReloadOutcome>> {
+        self.mon.reloader.as_ref().map(|r| r.try_reload())
+    }
+
     fn shutdown_inner(&mut self) {
         self.shutdown.store(true, Ordering::Release);
         // wake a blocked accept() with a throwaway connection
@@ -578,6 +702,9 @@ impl ServerHandle {
         }
         if let Some(b) = self.batcher.take() {
             let _ = b.join();
+        }
+        if let Some(p) = self.poller.take() {
+            let _ = p.join();
         }
     }
 
@@ -600,7 +727,10 @@ impl Drop for ServerHandle {
     }
 }
 
-/// Bind and start serving `model` with `cfg`.
+/// Bind and start serving `model` with `cfg`. When `cfg.watch_manifest`
+/// is set, a poller thread watches the publication MANIFEST and
+/// hot-swaps newer generations in (zero-drop: in-flight requests finish
+/// on their snapshot).
 pub fn serve(model: Arc<ServableModel>, cfg: ServerConfig) -> Result<ServerHandle> {
     let workers_n = cfg.workers.max(1);
     let listener =
@@ -611,9 +741,17 @@ pub fn serve(model: Arc<ServableModel>, cfg: ServerConfig) -> Result<ServerHandl
     let worker_hists: Arc<Vec<Arc<LatencyHistogram>>> =
         Arc::new((0..workers_n).map(|_| Arc::new(LatencyHistogram::new())).collect());
 
+    let holder = Arc::new(ModelHolder::new(model.clone()));
+    let reload_stats = Arc::new(ReloadStats::new(model.generation));
+    let reloader = cfg.watch_manifest.as_ref().map(|manifest| {
+        Arc::new(Reloader::new(holder.clone(), manifest.clone(), reload_stats.clone()))
+    });
+
     let (job_tx, job_rx) = channel::<PredictJob>();
     let mon = Monitor {
-        model: model.clone(),
+        holder: holder.clone(),
+        reload_stats,
+        reloader: reloader.clone(),
         counters: counters.clone(),
         started: Instant::now(),
         worker_hists: worker_hists.clone(),
@@ -621,14 +759,35 @@ pub fn serve(model: Arc<ServableModel>, cfg: ServerConfig) -> Result<ServerHandl
     let ctx = Ctx { mon: mon.clone(), job_tx };
 
     let batcher = {
-        let model = model.clone();
+        let holder = holder.clone();
         let counters = counters.clone();
         let (max_batch, wait) = (cfg.max_batch.max(1), cfg.batch_wait);
         std::thread::Builder::new()
             .name("bear-serve-batcher".into())
-            .spawn(move || batcher_loop(model, job_rx, counters, max_batch, wait))
+            .spawn(move || batcher_loop(holder, job_rx, counters, max_batch, wait))
             .expect("spawn batcher thread")
     };
+
+    let poller = reloader.map(|r| {
+        let shutdown = shutdown.clone();
+        let interval = cfg.poll_interval.max(Duration::from_millis(10));
+        std::thread::Builder::new()
+            .name("bear-serve-reloader".into())
+            .spawn(move || {
+                // sleep in short slices so shutdown joins promptly even
+                // with long poll intervals
+                let slice = interval.min(Duration::from_millis(25));
+                let mut next_poll = Instant::now() + interval;
+                while !shutdown.load(Ordering::Acquire) {
+                    std::thread::sleep(slice);
+                    if Instant::now() >= next_poll {
+                        r.poll();
+                        next_poll = Instant::now() + interval;
+                    }
+                }
+            })
+            .expect("spawn reloader thread")
+    });
 
     let (conn_tx, conn_rx) = sync_channel::<TcpStream>(cfg.queue_depth.max(1));
     let conn_rx = Arc::new(Mutex::new(conn_rx));
@@ -682,5 +841,13 @@ pub fn serve(model: Arc<ServableModel>, cfg: ServerConfig) -> Result<ServerHandl
     // here: once the workers exit, the batcher's channel disconnects and
     // it exits too — shutdown can join every thread without a poison pill.
     drop(ctx);
-    Ok(ServerHandle { addr, shutdown, acceptor: Some(acceptor), workers, batcher: Some(batcher), mon })
+    Ok(ServerHandle {
+        addr,
+        shutdown,
+        acceptor: Some(acceptor),
+        workers,
+        batcher: Some(batcher),
+        poller,
+        mon,
+    })
 }

@@ -1,7 +1,7 @@
 //! Immutable serving snapshots: export a trained selector as a
-//! [`ServableModel`] — a dense top-k weight table plus an optional full
-//! Count Sketch fallback for out-of-support queries — and (de)serialize
-//! it with the checkpoint machinery.
+//! [`ServableModel`] — one dense top-k weight table per class plus an
+//! optional full Count Sketch fallback for out-of-support queries — and
+//! (de)serialize it with the checkpoint machinery.
 //!
 //! The whole point of the paper is that the trained artifact is sublinear
 //! in p, so a snapshot is a few hundred KB even for the 54M-dimensional
@@ -14,13 +14,25 @@
 //! same index-ordered f64 accumulation. The integration test asserts
 //! this across the HTTP wire (f64 `Display` is shortest-round-trip).
 //!
-//! Wire format "BEARSNAP" v1 — a sibling of checkpoint v2 (same
-//! primitives: little-endian, CRC-32 trailer, self-describing header):
+//! **Multi-class.** The paper's Sec. 7 extension trains one sketch per
+//! class (one-vs-rest); [`ServableModel::from_multiclass`] exports one
+//! top-k table per class (no sketch fallback — the per-class hash
+//! families differ) and `predict` returns the argmax class.
+//!
+//! **Generations.** `bear online` publishes a numbered stream of
+//! snapshots; the `generation` header field identifies which publication
+//! a serving process is on (`/statz` reports it live).
+//!
+//! Wire format "BEARSNAP" v2 — a sibling of checkpoint v2 (same
+//! primitives: little-endian, CRC-32 trailer, self-describing header).
+//! v1 files (no generation, single implicit class) remain readable:
 //! ```text
-//! magic "BEARSNAP" | u32 version (=1)
+//! magic "BEARSNAP" | u32 version (=2)
+//! | u64 generation
 //! | u64 hash_seed | u32 query_mode | u32 loss (0=mse, 1=logistic) | f32 bias
-//! | u32 k_len | (u64 id, f32 weight) × k_len     (ids strictly increasing)
-//! | u32 has_sketch (0/1)
+//! | u32 n_classes
+//! | n_classes × ( u32 k_len | (u64 id, f32 weight) × k_len )   (ids strictly increasing)
+//! | u32 has_sketch (0/1; 1 requires n_classes == 1)
 //! | if 1: u32 rows | u32 cols | f32 × rows·cols  (sketch counters)
 //! | u32 crc32 of everything above
 //! ```
@@ -28,8 +40,8 @@
 use crate::algo::sketched::SketchedState;
 use crate::algo::FeatureSelector;
 use crate::coordinator::checkpoint::{
-    checked_body, commit_with_crc, decode_loss, decode_query_mode, encode_loss,
-    encode_query_mode, put_f32, put_u32, put_u64, Reader,
+    checked_body, crc32, decode_loss, decode_query_mode, encode_loss, encode_query_mode,
+    put_f32, put_u32, put_u64, write_atomic, Reader,
 };
 use crate::loss::LossKind;
 use crate::sketch::{CountSketch, QueryMode, SketchMemory};
@@ -39,28 +51,65 @@ use anyhow::{bail, Context, Result};
 use std::path::Path;
 
 const MAGIC: &[u8; 8] = b"BEARSNAP";
-const VERSION: u32 = 1;
+const VERSION: u32 = 2;
+/// Sanity cap on the class count of an untrusted header (DNA is 15).
+const MAX_CLASSES: usize = 4096;
 
 /// One scored query.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Prediction {
-    /// Raw margin (logit for logistic, regression output for MSE).
+    /// Raw margin (logit for logistic, regression output for MSE). For
+    /// multi-class models this is the winning class's one-vs-rest margin.
     pub margin: f64,
-    /// σ(margin) for logistic models; `None` for MSE.
+    /// σ(margin) for binary logistic models; `None` for MSE and
+    /// multi-class models.
     pub probability: Option<f64>,
+    /// Argmax class for multi-class models; `None` for binary/regression.
+    pub class: Option<usize>,
+}
+
+/// One class's dense top-k table: selected ids (strictly increasing for
+/// binary-search lookup), their weights, and a |weight|-descending order.
+#[derive(Clone, Debug)]
+struct ClassTable {
+    ids: Vec<u64>,
+    weights: Vec<f32>,
+    /// Table slots ordered by decreasing |weight| (serves `/topk` without
+    /// re-sorting per request).
+    by_weight: Vec<u32>,
+}
+
+impl ClassTable {
+    fn from_pairs(mut pairs: Vec<(u64, f32)>) -> Self {
+        pairs.sort_unstable_by_key(|&(i, _)| i);
+        pairs.dedup_by_key(|&mut (i, _)| i);
+        let ids: Vec<u64> = pairs.iter().map(|&(i, _)| i).collect();
+        let weights: Vec<f32> = pairs.iter().map(|&(_, w)| w).collect();
+        let by_weight = build_by_weight(&ids, &weights);
+        Self { ids, weights, by_weight }
+    }
+
+    fn lookup(&self, f: u64) -> Option<f32> {
+        self.ids.binary_search(&f).ok().map(|i| self.weights[i])
+    }
+
+    fn topk(&self, k: usize) -> Vec<(u64, f32)> {
+        self.by_weight
+            .iter()
+            .take(k)
+            .map(|&s| (self.ids[s as usize], self.weights[s as usize]))
+            .collect()
+    }
 }
 
 /// An immutable, self-describing inference model.
 #[derive(Clone, Debug)]
 pub struct ServableModel {
-    /// Selected feature ids, strictly increasing (binary-search lookup).
-    ids: Vec<u64>,
-    /// Weight of `ids[i]`.
-    weights: Vec<f32>,
-    /// Table slots ordered by decreasing |weight| (serves `/topk` without
-    /// re-sorting per request).
-    by_weight: Vec<u32>,
-    /// Full Count Sketch fallback for features outside the table.
+    /// One top-k table per class; binary/regression models have exactly
+    /// one (class 0).
+    tables: Vec<ClassTable>,
+    /// Full Count Sketch fallback for features outside the table
+    /// (single-class models only — per-class hash families differ).
     sketch: Option<CountSketch>,
     /// Loss the model was trained on (decides probability output).
     pub loss: LossKind,
@@ -68,6 +117,8 @@ pub struct ServableModel {
     pub bias: f32,
     /// Hash-family master seed (0 when no sketch is attached).
     pub hash_seed: u64,
+    /// Publication generation (`bear online`); 0 for one-shot exports.
+    pub generation: u64,
 }
 
 fn build_by_weight(ids: &[u64], weights: &[f32]) -> Vec<u32> {
@@ -83,26 +134,25 @@ fn build_by_weight(ids: &[u64], weights: &[f32]) -> Vec<u32> {
 }
 
 impl ServableModel {
-    /// Build from sorted-by-id (id, weight) pairs and an optional sketch.
+    /// Build from per-class sorted-by-id (id, weight) pair lists and an
+    /// optional (single-class) sketch.
     fn assemble(
-        mut pairs: Vec<(u64, f32)>,
+        class_pairs: Vec<Vec<(u64, f32)>>,
         sketch: Option<CountSketch>,
         loss: LossKind,
         bias: f32,
     ) -> Self {
-        pairs.sort_unstable_by_key(|&(i, _)| i);
-        pairs.dedup_by_key(|&mut (i, _)| i);
-        let ids: Vec<u64> = pairs.iter().map(|&(i, _)| i).collect();
-        let weights: Vec<f32> = pairs.iter().map(|&(_, w)| w).collect();
-        let by_weight = build_by_weight(&ids, &weights);
+        debug_assert!(!class_pairs.is_empty());
+        debug_assert!(sketch.is_none() || class_pairs.len() == 1);
+        let tables: Vec<ClassTable> = class_pairs.into_iter().map(ClassTable::from_pairs).collect();
         let hash_seed = sketch.as_ref().map(|cs| cs.seed()).unwrap_or(0);
-        Self { ids, weights, by_weight, sketch, loss, bias, hash_seed }
+        Self { tables, sketch, loss, bias, hash_seed, generation: 0 }
     }
 
     /// Export from any selector: dense top-k table only (no out-of-support
     /// fallback — features outside the selection score 0).
     pub fn from_selector(sel: &dyn FeatureSelector, loss: LossKind, bias: f32) -> Self {
-        Self::assemble(sel.top_features(), None, loss, bias)
+        Self::assemble(vec![sel.top_features()], None, loss, bias)
     }
 
     /// Export from a sketched state (BEAR / MISSION / sketched Newton):
@@ -112,12 +162,36 @@ impl ServableModel {
     pub fn from_sketched(state: &SketchedState, loss: LossKind, bias: f32) -> Self {
         let pairs: Vec<(u64, f32)> =
             state.heap.iter().map(|(f, _)| (f, state.cs.query(f))).collect();
-        Self::assemble(pairs, Some(state.cs.clone()), loss, bias)
+        Self::assemble(vec![pairs], Some(state.cs.clone()), loss, bias)
     }
 
-    /// Number of features in the dense table.
+    /// Export a one-vs-rest ensemble (the DNA multi-class task): one
+    /// top-k table per class, each re-queried from that class's sketch.
+    /// No sketch fallback rides along — the per-class hash families use
+    /// different seeds, so out-of-table features score 0.
+    pub fn from_multiclass(states: &[&SketchedState], loss: LossKind, bias: f32) -> Self {
+        assert!(states.len() >= 2, "use from_sketched for single-class models");
+        let class_pairs = states
+            .iter()
+            .map(|st| st.heap.iter().map(|(f, _)| (f, st.cs.query(f))).collect())
+            .collect();
+        Self::assemble(class_pairs, None, loss, bias)
+    }
+
+    /// Stamp a publication generation (builder style, for `bear online`).
+    pub fn with_generation(mut self, generation: u64) -> Self {
+        self.generation = generation;
+        self
+    }
+
+    /// Number of one-vs-rest classes (1 for binary/regression models).
+    pub fn num_classes(&self) -> usize {
+        self.tables.len()
+    }
+
+    /// Total features across all class tables.
     pub fn n_features(&self) -> usize {
-        self.ids.len()
+        self.tables.iter().map(|t| t.ids.len()).sum()
     }
 
     pub fn has_sketch(&self) -> bool {
@@ -131,47 +205,95 @@ impl ServableModel {
 
     /// Serialized + resident footprint estimate in bytes.
     pub fn memory_bytes(&self) -> usize {
-        self.ids.len() * (std::mem::size_of::<u64>() + std::mem::size_of::<f32>())
+        self.n_features() * (std::mem::size_of::<u64>() + std::mem::size_of::<f32>())
             + self.sketch.as_ref().map(|cs| cs.counter_bytes()).unwrap_or(0)
     }
 
-    /// Weight of a feature: table hit, else sketch fallback, else 0.
-    #[inline]
-    pub fn weight(&self, f: u64) -> f32 {
-        match self.ids.binary_search(&f) {
-            Ok(i) => self.weights[i],
-            Err(_) => match &self.sketch {
-                Some(cs) => cs.query(f),
-                None => 0.0,
-            },
+    /// Union of all selected feature ids across classes, sorted
+    /// (drift-monitor input: the model's "top-k" support set).
+    pub fn selected_ids(&self) -> Vec<u64> {
+        let mut ids: Vec<u64> = self.tables.iter().flat_map(|t| t.ids.iter().copied()).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        ids
+    }
+
+    /// ℓ2 norm of the model coordinates: over the sketch counters when the
+    /// fallback is attached (the trained state proper), else over the
+    /// table weights. Drift-monitor input.
+    pub fn coord_norm(&self) -> f64 {
+        match &self.sketch {
+            Some(cs) => cs.energy().sqrt(),
+            None => self
+                .tables
+                .iter()
+                .flat_map(|t| t.weights.iter())
+                .map(|&w| w as f64 * w as f64)
+                .sum::<f64>()
+                .sqrt(),
         }
     }
 
-    /// Margin of a sparse query: `bias + Σ w(f)·x_f`, accumulated in f64
-    /// in index order (bit-compatible with `SketchedState::score` when
-    /// `bias == 0` and the sketch fallback is attached).
-    pub fn margin(&self, x: &SparseVec) -> f64 {
+    /// Weight of a feature in class `c`: table hit, else sketch fallback
+    /// (single-class models), else 0.
+    #[inline]
+    pub fn weight_class(&self, c: usize, f: u64) -> f32 {
+        self.tables[c].lookup(f).unwrap_or_else(|| match &self.sketch {
+            Some(cs) => cs.query(f),
+            None => 0.0,
+        })
+    }
+
+    /// Weight of a feature (class 0 — the binary/regression table).
+    #[inline]
+    pub fn weight(&self, f: u64) -> f32 {
+        self.weight_class(0, f)
+    }
+
+    /// Margin of a sparse query against class `c`: `bias + Σ w(f)·x_f`,
+    /// accumulated in f64 in index order (bit-compatible with
+    /// `SketchedState::score` when `bias == 0` and the sketch fallback is
+    /// attached).
+    pub fn margin_class(&self, c: usize, x: &SparseVec) -> f64 {
         let mut acc = self.bias as f64;
         for (&f, &v) in x.idx.iter().zip(&x.val) {
-            acc += self.weight(f) as f64 * v as f64;
+            acc += self.weight_class(c, f) as f64 * v as f64;
         }
         acc
     }
 
-    /// Margin restricted to the k heaviest table features (the paper's
-    /// Fig. 3 inference mode).
+    /// Margin of a sparse query (class 0).
+    pub fn margin(&self, x: &SparseVec) -> f64 {
+        self.margin_class(0, x)
+    }
+
+    /// Argmax one-vs-rest class and its margin.
+    pub fn predict_class(&self, x: &SparseVec) -> (usize, f64) {
+        let mut best = (0usize, f64::NEG_INFINITY);
+        for c in 0..self.tables.len() {
+            let m = self.margin_class(c, x);
+            if m > best.1 {
+                best = (c, m);
+            }
+        }
+        best
+    }
+
+    /// Margin restricted to the k heaviest class-0 table features (the
+    /// paper's Fig. 3 inference mode).
     pub fn margin_topk(&self, x: &SparseVec, k: usize) -> f64 {
-        if k >= self.ids.len() {
+        let table = &self.tables[0];
+        if k >= table.ids.len() {
             let mut acc = self.bias as f64;
             for (&f, &v) in x.idx.iter().zip(&x.val) {
-                if self.ids.binary_search(&f).is_ok() {
-                    acc += self.weight(f) as f64 * v as f64;
+                if let Some(w) = table.lookup(f) {
+                    acc += w as f64 * v as f64;
                 }
             }
             return acc;
         }
         let top: std::collections::HashSet<u64> =
-            self.by_weight[..k].iter().map(|&s| self.ids[s as usize]).collect();
+            table.by_weight[..k].iter().map(|&s| table.ids[s as usize]).collect();
         let mut acc = self.bias as f64;
         for (&f, &v) in x.idx.iter().zip(&x.val) {
             if top.contains(&f) {
@@ -181,42 +303,61 @@ impl ServableModel {
         acc
     }
 
-    /// Score one query.
+    /// Score one query: binary/regression models report margin (+
+    /// probability for logistic); multi-class models report the argmax
+    /// class and its margin.
     pub fn predict(&self, x: &SparseVec) -> Prediction {
+        if self.tables.len() > 1 {
+            let (class, margin) = self.predict_class(x);
+            return Prediction { margin, probability: None, class: Some(class) };
+        }
         let margin = self.margin(x);
         let probability = match self.loss {
             LossKind::Logistic => Some(sigmoid(margin)),
             LossKind::Mse => None,
         };
-        Prediction { margin, probability }
+        Prediction { margin, probability, class: None }
     }
 
-    /// The k heaviest (id, weight) pairs, |weight|-descending.
+    /// The k heaviest (id, weight) pairs of class `c`, |weight|-descending.
+    pub fn topk_class(&self, c: usize, k: usize) -> Vec<(u64, f32)> {
+        self.tables[c].topk(k)
+    }
+
+    /// The k heaviest (id, weight) pairs (class 0), |weight|-descending.
     pub fn topk(&self, k: usize) -> Vec<(u64, f32)> {
-        self.by_weight
-            .iter()
-            .take(k)
-            .map(|&s| (self.ids[s as usize], self.weights[s as usize]))
-            .collect()
+        self.topk_class(0, k)
     }
 
-    /// Serialize (BEARSNAP v1, CRC-checked, atomic rename).
-    pub fn save(&self, path: &Path) -> Result<()> {
+    /// Serialize to the full BEARSNAP v2 byte image (CRC trailer
+    /// included) — exactly the bytes [`Self::save`] writes to disk.
+    pub fn encode(&self) -> Vec<u8> {
+        self.encode_with_generation(self.generation)
+    }
+
+    /// [`Self::encode`] with the generation header overridden — the
+    /// publication path stamps the next generation without cloning the
+    /// whole model (sketch counters included) just to set a number.
+    pub fn encode_with_generation(&self, generation: u64) -> Vec<u8> {
         let mut buf = Vec::with_capacity(
-            48 + self.ids.len() * 12
+            64 + self.n_features() * 12
                 + self.sketch.as_ref().map(|cs| cs.raw().len() * 4).unwrap_or(0),
         );
         buf.extend_from_slice(MAGIC);
         put_u32(&mut buf, VERSION);
+        put_u64(&mut buf, generation);
         put_u64(&mut buf, self.hash_seed);
         let mode = self.sketch.as_ref().map(|cs| cs.query_mode()).unwrap_or(QueryMode::Median);
         put_u32(&mut buf, encode_query_mode(mode));
         put_u32(&mut buf, encode_loss(self.loss));
         put_f32(&mut buf, self.bias);
-        put_u32(&mut buf, self.ids.len() as u32);
-        for (&f, &w) in self.ids.iter().zip(&self.weights) {
-            put_u64(&mut buf, f);
-            put_f32(&mut buf, w);
+        put_u32(&mut buf, self.tables.len() as u32);
+        for t in &self.tables {
+            put_u32(&mut buf, t.ids.len() as u32);
+            for (&f, &w) in t.ids.iter().zip(&t.weights) {
+                put_u64(&mut buf, f);
+                put_f32(&mut buf, w);
+            }
         }
         match &self.sketch {
             Some(cs) => {
@@ -229,40 +370,59 @@ impl ServableModel {
             }
             None => put_u32(&mut buf, 0),
         }
-        commit_with_crc(buf, path)
+        let crc = crc32(&buf);
+        put_u32(&mut buf, crc);
+        buf
     }
 
-    /// Load a snapshot. Fully self-describing: the sketch (when present)
-    /// is rebuilt from the stored geometry + hash seed + query mode.
-    pub fn load(path: &Path) -> Result<Self> {
-        let data = std::fs::read(path).with_context(|| format!("opening snapshot {path:?}"))?;
-        let body = checked_body(&data, MAGIC.len() + 4)?;
+    /// Serialize (BEARSNAP v2, CRC-checked, atomic tmp+rename).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        write_atomic(&self.encode(), path)
+    }
+
+    /// Decode a snapshot byte image (v2, or legacy v1). Fully
+    /// self-describing: the sketch (when present) is rebuilt from the
+    /// stored geometry + hash seed + query mode.
+    pub fn decode(data: &[u8]) -> Result<Self> {
+        let body = checked_body(data, MAGIC.len() + 4)?;
         let mut r = Reader::new(body);
         if r.take(8)? != MAGIC {
             bail!("not a BEAR snapshot (bad magic)");
         }
         let version = r.u32()?;
-        if version != VERSION {
+        if version != 1 && version != VERSION {
             bail!("unsupported snapshot version {version}");
         }
+        let generation = if version >= 2 { r.u64()? } else { 0 };
         let hash_seed = r.u64()?;
         let query_mode = decode_query_mode(r.u32()?)?;
         let loss = decode_loss(r.u32()?)?;
         let bias = r.f32()?;
-        let k_len = r.u32()? as usize;
-        // validate untrusted lengths against the bytes actually present
-        // before any length-driven allocation (a crafted header with a
-        // valid CRC must fail with an error, not an OOM abort)
-        if k_len.saturating_mul(12) > r.remaining() {
-            bail!("snapshot table length {k_len} exceeds file size");
+        let n_classes = if version >= 2 { r.u32()? as usize } else { 1 };
+        if n_classes == 0 || n_classes > MAX_CLASSES {
+            bail!("implausible snapshot class count {n_classes}");
         }
-        let mut pairs = Vec::with_capacity(k_len);
-        for _ in 0..k_len {
-            let f = r.u64()?;
-            let w = r.f32()?;
-            pairs.push((f, w));
+        let mut class_pairs = Vec::with_capacity(n_classes);
+        for _ in 0..n_classes {
+            let k_len = r.u32()? as usize;
+            // validate untrusted lengths against the bytes actually present
+            // before any length-driven allocation (a crafted header with a
+            // valid CRC must fail with an error, not an OOM abort)
+            if k_len.saturating_mul(12) > r.remaining() {
+                bail!("snapshot table length {k_len} exceeds file size");
+            }
+            let mut pairs = Vec::with_capacity(k_len);
+            for _ in 0..k_len {
+                let f = r.u64()?;
+                let w = r.f32()?;
+                pairs.push((f, w));
+            }
+            class_pairs.push(pairs);
         }
         let sketch = if r.u32()? == 1 {
+            if n_classes != 1 {
+                bail!("sketch fallback is only valid on single-class snapshots");
+            }
             let rows = r.u32()? as usize;
             let cols = r.u32()? as usize;
             if rows == 0 || cols == 0 || rows > 8 {
@@ -283,9 +443,16 @@ impl ServableModel {
         } else {
             None
         };
-        let mut model = Self::assemble(pairs, sketch, loss, bias);
+        let mut model = Self::assemble(class_pairs, sketch, loss, bias);
         model.hash_seed = hash_seed; // preserve even for sketch-free files
+        model.generation = generation;
         Ok(model)
+    }
+
+    /// Load a snapshot file (v2 or legacy v1).
+    pub fn load(path: &Path) -> Result<Self> {
+        let data = std::fs::read(path).with_context(|| format!("opening snapshot {path:?}"))?;
+        Self::decode(&data).with_context(|| format!("decoding snapshot {path:?}"))
     }
 }
 
@@ -369,6 +536,7 @@ mod tests {
         let q = sv(&[(9, 1.0)]);
         let p = logistic.predict(&q);
         assert!(p.probability.is_some());
+        assert!(p.class.is_none());
         assert!((p.probability.unwrap() - sigmoid(p.margin)).abs() < 1e-15);
         assert!(mse.predict(&q).probability.is_none());
     }
@@ -376,7 +544,8 @@ mod tests {
     #[test]
     fn save_load_roundtrip_preserves_margins() {
         let st = trained_state();
-        let m = ServableModel::from_sketched(&st, LossKind::Logistic, 0.25);
+        let m = ServableModel::from_sketched(&st, LossKind::Logistic, 0.25)
+            .with_generation(7);
         let path = std::env::temp_dir()
             .join(format!("bear-snap-roundtrip-{}", std::process::id()));
         m.save(&path).unwrap();
@@ -385,6 +554,7 @@ mod tests {
         assert_eq!(m2.loss, m.loss);
         assert_eq!(m2.bias, m.bias);
         assert_eq!(m2.hash_seed, m.hash_seed);
+        assert_eq!(m2.generation, 7);
         assert!(m2.has_sketch());
         for q in [sv(&[(3, 1.0), (9, 2.0)]), sv(&[(777, 1.0)]), sv(&[(1 << 40, -1.5)])] {
             assert_eq!(m.margin(&q).to_bits(), m2.margin(&q).to_bits(), "{q:?}");
@@ -412,40 +582,125 @@ mod tests {
         std::fs::remove_file(&path).ok();
     }
 
+    fn multiclass_states(n: usize) -> Vec<SketchedState> {
+        (0..n)
+            .map(|c| {
+                let mut st = SketchedState::new(1024, 3, 3, 100 + c as u64);
+                st.apply_step(
+                    &sv(&[(c as u64 * 10 + 1, -2.0), (c as u64 * 10 + 2, -4.0)]),
+                    1.0,
+                );
+                let row = sv(&[(c as u64 * 10 + 1, 1.0), (c as u64 * 10 + 2, 1.0)]);
+                st.refresh_heap(&ActiveSet::from_rows([&row]));
+                st
+            })
+            .collect()
+    }
+
+    #[test]
+    fn multiclass_export_predicts_argmax_and_roundtrips() {
+        let states = multiclass_states(3);
+        let refs: Vec<&SketchedState> = states.iter().collect();
+        let m = ServableModel::from_multiclass(&refs, LossKind::Logistic, 0.0);
+        assert_eq!(m.num_classes(), 3);
+        assert!(!m.has_sketch());
+        // class 1's planted features dominate a class-1 query
+        let q = sv(&[(11, 1.0), (12, 1.0)]);
+        let (c, margin) = m.predict_class(&q);
+        assert_eq!(c, 1);
+        assert!(margin > 0.0);
+        let p = m.predict(&q);
+        assert_eq!(p.class, Some(1));
+        assert!(p.probability.is_none());
+        // per-class topk tables are independent
+        assert_eq!(m.topk_class(0, 1)[0].0, 2);
+        assert_eq!(m.topk_class(2, 1)[0].0, 22);
+        // wire roundtrip preserves every class table
+        let m2 = ServableModel::decode(&m.encode()).unwrap();
+        assert_eq!(m2.num_classes(), 3);
+        for c in 0..3 {
+            assert_eq!(m2.topk_class(c, 3), m.topk_class(c, 3));
+            assert_eq!(
+                m2.margin_class(c, &q).to_bits(),
+                m.margin_class(c, &q).to_bits()
+            );
+        }
+    }
+
+    /// Hand-write the legacy v1 layout (no generation, single implicit
+    /// class) so the compatibility path stays covered after the v2 bump.
+    #[test]
+    fn v1_files_still_load() {
+        let st = trained_state();
+        let m = ServableModel::from_sketched(&st, LossKind::Logistic, 0.5);
+        let mut buf = Vec::new();
+        buf.extend_from_slice(MAGIC);
+        put_u32(&mut buf, 1); // version 1
+        put_u64(&mut buf, m.hash_seed);
+        put_u32(&mut buf, encode_query_mode(QueryMode::Median));
+        put_u32(&mut buf, encode_loss(m.loss));
+        put_f32(&mut buf, m.bias);
+        let t = &m.tables[0];
+        put_u32(&mut buf, t.ids.len() as u32);
+        for (&f, &w) in t.ids.iter().zip(&t.weights) {
+            put_u64(&mut buf, f);
+            put_f32(&mut buf, w);
+        }
+        let cs = m.sketch.as_ref().unwrap();
+        put_u32(&mut buf, 1);
+        put_u32(&mut buf, cs.rows() as u32);
+        put_u32(&mut buf, cs.cols() as u32);
+        for &c in cs.raw() {
+            put_f32(&mut buf, c);
+        }
+        let crc = crc32(&buf);
+        put_u32(&mut buf, crc);
+        let m2 = ServableModel::decode(&buf).unwrap();
+        assert_eq!(m2.generation, 0);
+        assert_eq!(m2.num_classes(), 1);
+        assert_eq!(m2.n_features(), m.n_features());
+        assert!(m2.has_sketch());
+        let q = sv(&[(3, 1.0), (9, 2.0), (54321, 1.0)]);
+        assert_eq!(m2.margin(&q).to_bits(), m.margin(&q).to_bits());
+    }
+
     #[test]
     fn oversized_table_length_rejected_without_allocation() {
         let st = trained_state();
         let m = ServableModel::from_sketched(&st, LossKind::Logistic, 0.0);
-        let path = std::env::temp_dir()
-            .join(format!("bear-snap-hugelen-{}", std::process::id()));
-        m.save(&path).unwrap();
-        let mut data = std::fs::read(&path).unwrap();
-        // k_len sits after magic(8) + version(4) + seed(8) + mode(4) +
-        // loss(4) + bias(4) = offset 32; forge it huge and re-sign the CRC
-        data[32..36].copy_from_slice(&u32::MAX.to_le_bytes());
+        let mut data = m.encode();
+        // the class-0 k_len sits after magic(8) + version(4) + generation(8)
+        // + seed(8) + mode(4) + loss(4) + bias(4) + n_classes(4) = offset 44;
+        // forge it huge and re-sign the CRC
+        data[44..48].copy_from_slice(&u32::MAX.to_le_bytes());
         let n = data.len();
-        let crc = crate::coordinator::checkpoint::crc32(&data[..n - 4]);
+        let crc = crc32(&data[..n - 4]);
         data[n - 4..].copy_from_slice(&crc.to_le_bytes());
-        std::fs::write(&path, &data).unwrap();
-        let err = ServableModel::load(&path).unwrap_err();
+        let err = ServableModel::decode(&data).unwrap_err();
         assert!(format!("{err}").contains("exceeds file size"), "{err}");
-        std::fs::remove_file(&path).ok();
     }
 
     #[test]
     fn corrupted_snapshot_rejected() {
         let st = trained_state();
         let m = ServableModel::from_sketched(&st, LossKind::Logistic, 0.0);
-        let path = std::env::temp_dir()
-            .join(format!("bear-snap-corrupt-{}", std::process::id()));
-        m.save(&path).unwrap();
-        let mut data = std::fs::read(&path).unwrap();
+        let mut data = m.encode();
         let mid = data.len() / 3;
         data[mid] ^= 0x55;
-        std::fs::write(&path, &data).unwrap();
-        let err = ServableModel::load(&path).unwrap_err();
+        let err = ServableModel::decode(&data).unwrap_err();
         assert!(format!("{err}").contains("CRC"), "{err}");
-        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn coord_norm_and_selected_ids() {
+        let st = trained_state();
+        let with_sketch = ServableModel::from_sketched(&st, LossKind::Logistic, 0.0);
+        assert!(with_sketch.coord_norm() > 0.0);
+        let table_only = ServableModel { sketch: None, ..with_sketch.clone() };
+        assert!(table_only.coord_norm() > 0.0);
+        let ids = with_sketch.selected_ids();
+        assert_eq!(ids.len(), with_sketch.n_features());
+        assert!(ids.windows(2).all(|w| w[0] < w[1]));
     }
 
     /// Minimal FeatureSelector for table-only export tests.

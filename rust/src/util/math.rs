@@ -88,8 +88,12 @@ mod tests {
 
     #[test]
     fn sigmoid_stable_extremes() {
-        assert!(sigmoid(1000.0) <= 1.0 && sigmoid(1000.0) > 0.999);
-        assert!(sigmoid(-1000.0) >= 0.0 && sigmoid(-1000.0) < 1e-6);
+        let hi = sigmoid(1000.0);
+        assert!(hi <= 1.0);
+        assert!(hi > 0.999);
+        let lo = sigmoid(-1000.0);
+        assert!(lo >= 0.0);
+        assert!(lo < 1e-6);
         assert!((sigmoid(0.0) - 0.5).abs() < 1e-12);
     }
 

@@ -1,0 +1,260 @@
+//! End-to-end continuous-training loop: train gen-1 → serve with a
+//! watched MANIFEST → publish newer generations *while a closed-loop load
+//! generator hammers the server* → assert **zero** request errors across
+//! the swaps, that served predictions are bit-identical to the newly
+//! published snapshot after each swap, and that `/statz` reports the live
+//! generation + drift gauges.
+//!
+//! This is the acceptance test for the hot-reload protocol: a swap must
+//! never drop, block, or corrupt a request.
+
+use bear::algo::bear::{Bear, BearConfig};
+use bear::algo::StepSize;
+use bear::coordinator::experiments::RealData;
+use bear::data::synth::Rcv1Sim;
+use bear::data::DataSource;
+use bear::loss::LossKind;
+use bear::online::{Manifest, Publisher, ReloadOutcome};
+use bear::serve::loadgen::{self, format_query, HttpClient, LoadgenConfig};
+use bear::serve::{serve, ServableModel, ServerConfig};
+use bear::sparse::SparseVec;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn fresh_dir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("bear-online-e2e-{}-{name}", std::process::id()));
+    std::fs::remove_dir_all(&d).ok();
+    d
+}
+
+fn new_trainer(seed: u64) -> Bear {
+    let cfg = BearConfig {
+        sketch_cells: 8192,
+        sketch_rows: 3,
+        top_k: 100,
+        tau: 5,
+        step: StepSize::Constant(0.01),
+        loss: LossKind::Logistic,
+        seed,
+        ..Default::default()
+    };
+    Bear::new(bear::data::synth::RCV1_DIM, cfg)
+}
+
+fn train_some(bear: &mut Bear, n: usize, stream_seed: u64) {
+    let mut src = Rcv1Sim::new(n, 0x5eed).with_stream_seed(stream_seed);
+    bear.fit_source(&mut src, 32, 1);
+}
+
+fn snapshot(bear: &Bear) -> ServableModel {
+    ServableModel::from_sketched(bear.state(), LossKind::Logistic, 0.0)
+}
+
+fn test_queries(n: usize) -> Vec<SparseVec> {
+    let mut src = Rcv1Sim::new(n, 0x5eed).with_stream_seed(0xF00D);
+    let mut out = Vec::with_capacity(n);
+    while let Some(e) = src.next_example() {
+        out.push(e.features);
+    }
+    out
+}
+
+fn statz_value(body: &str, key: &str) -> f64 {
+    for line in body.lines() {
+        if let Some((k, v)) = line.split_once(' ') {
+            if k == key {
+                return v.parse().unwrap();
+            }
+        }
+    }
+    panic!("statz missing {key}:\n{body}");
+}
+
+/// Served margins must equal the given snapshot's margins bit-for-bit
+/// (one request per query, so each line is a fresh server roundtrip).
+fn assert_serves_model(client: &mut HttpClient, model: &ServableModel, queries: &[SparseVec]) {
+    let body: String = queries.iter().map(|q| format_query(q) + "\n").collect();
+    let (status, resp) = client.post("/predict", &body).unwrap();
+    assert_eq!(status, 200, "{resp}");
+    let lines: Vec<&str> = resp.lines().collect();
+    assert_eq!(lines.len(), queries.len());
+    for (q, line) in queries.iter().zip(&lines) {
+        let margin: f64 = line.split_whitespace().next().unwrap().parse().unwrap();
+        assert_eq!(
+            margin.to_bits(),
+            model.margin(q).to_bits(),
+            "served {margin} vs snapshot {}",
+            model.margin(q)
+        );
+    }
+}
+
+#[test]
+fn hot_reload_is_zero_drop_across_generations() {
+    let dir = fresh_dir("zerodrop");
+    let mut publisher = Publisher::new(&dir, 8).unwrap();
+    let mut trainer = new_trainer(0x0A11);
+    train_some(&mut trainer, 600, 1);
+    let pub1 = publisher.publish(&snapshot(&trainer)).unwrap();
+    assert_eq!(pub1.generation, 1);
+    let m1 = ServableModel::load(&pub1.path).unwrap();
+
+    let handle = serve(
+        Arc::new(m1.clone()),
+        ServerConfig {
+            // 4 closed-loop loadgen connections + the foreground client
+            // all hold a worker; size the pool so none starves
+            workers: 8,
+            watch_manifest: Some(publisher.manifest_path()),
+            poll_interval: Duration::from_millis(25),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let addr = handle.addr().to_string();
+    let queries = test_queries(20);
+    let mut client = HttpClient::connect(&addr).unwrap();
+
+    // generation 1 is live and serves m1 bit-for-bit
+    let (status, body) = client.get("/statz").unwrap();
+    assert_eq!(status, 200);
+    assert_eq!(statz_value(&body, "generation") as u64, 1);
+    assert_serves_model(&mut client, &m1, &queries);
+
+    // closed-loop load across the swaps: 4 threads × 400 requests
+    let lg_cfg = LoadgenConfig {
+        threads: 4,
+        requests_per_thread: 400,
+        queries_per_request: 8,
+        dataset: RealData::Rcv1,
+        seed: 77,
+    };
+    let lg_addr = addr.clone();
+    let lg = std::thread::spawn(move || loadgen::run(&lg_addr, &lg_cfg).unwrap());
+
+    // two deterministic generation swaps while the load generator runs;
+    // interleaved foreground requests straddle every swap, so zero-drop
+    // holds even if the background load finishes early
+    std::thread::sleep(Duration::from_millis(30));
+    for (stream_seed, expect_gen) in [(2u64, 2u64), (3, 3)] {
+        train_some(&mut trainer, 400, stream_seed);
+        let model = snapshot(&trainer);
+        publisher.publish(&model).unwrap();
+        match handle.reload_now().expect("watch-manifest configured").unwrap() {
+            ReloadOutcome::Swapped { generation, drift } => {
+                assert_eq!(generation, expect_gen);
+                assert!((0.0..=1.0).contains(&drift.topk_jaccard));
+            }
+            // the 25ms poller may win the race to the new manifest — the
+            // swap still happened, just not on this call
+            ReloadOutcome::UpToDate { generation } => assert_eq!(generation, expect_gen),
+        }
+        // new requests see the new snapshot, bit-for-bit
+        assert_serves_model(&mut client, &model, &queries);
+        std::thread::sleep(Duration::from_millis(30));
+    }
+
+    // the concurrent load generator saw ZERO failed requests across both
+    // swaps — the hot-reload acceptance criterion
+    let report = lg.join().unwrap();
+    assert_eq!(report.errors, 0, "requests dropped during hot reload");
+    assert_eq!(report.requests, 1600);
+    assert_eq!(report.error_rate(), 0.0);
+
+    // the foreground connection may have idled past the keep-alive
+    // timeout while the load ran — use a fresh one for the checks below
+    drop(client);
+    let mut client = HttpClient::connect(&addr).unwrap();
+
+    // /statz reports the live generation, reload counters, drift gauges
+    let (status, body) = client.get("/statz").unwrap();
+    assert_eq!(status, 200);
+    assert_eq!(statz_value(&body, "generation") as u64, 3);
+    assert_eq!(statz_value(&body, "reloads_total") as u64, 2);
+    assert_eq!(statz_value(&body, "reload_failures") as u64, 0);
+    let jaccard = statz_value(&body, "drift_topk_jaccard");
+    assert!((0.0..=1.0).contains(&jaccard), "{jaccard}");
+    assert!(statz_value(&body, "drift_coord_norm_delta") >= 0.0);
+
+    // the poller picks up generation 4 without an admin nudge
+    train_some(&mut trainer, 200, 4);
+    publisher.publish(&snapshot(&trainer)).unwrap();
+    assert_eq!(Manifest::read(&publisher.manifest_path()).unwrap().generation, 4);
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let (_, body) = client.get("/statz").unwrap();
+        if statz_value(&body, "generation") as u64 == 4 {
+            break;
+        }
+        assert!(Instant::now() < deadline, "poller never reloaded:\n{body}");
+        std::thread::sleep(Duration::from_millis(25));
+    }
+
+    drop(client);
+    handle.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn admin_reload_endpoint_reports_status() {
+    let dir = fresh_dir("admin");
+    let mut publisher = Publisher::new(&dir, 4).unwrap();
+    let mut trainer = new_trainer(0xADA1);
+    train_some(&mut trainer, 300, 1);
+    let pub1 = publisher.publish(&snapshot(&trainer)).unwrap();
+    let m1 = ServableModel::load(&pub1.path).unwrap();
+
+    let handle = serve(
+        Arc::new(m1),
+        ServerConfig {
+            workers: 2,
+            watch_manifest: Some(publisher.manifest_path()),
+            // effectively disable the poller so the admin endpoint does
+            // the swap in this test
+            poll_interval: Duration::from_secs(3600),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let mut client = HttpClient::connect(&handle.addr().to_string()).unwrap();
+
+    let (status, body) = client.post("/admin/reload", "").unwrap();
+    assert_eq!(status, 200, "{body}");
+    assert!(body.contains("already at generation 1"), "{body}");
+
+    train_some(&mut trainer, 200, 2);
+    publisher.publish(&snapshot(&trainer)).unwrap();
+    let (status, body) = client.post("/admin/reload", "").unwrap();
+    assert_eq!(status, 200, "{body}");
+    assert!(body.contains("reloaded generation 2"), "{body}");
+    assert!(body.contains("topk_jaccard"), "{body}");
+
+    let (_, statz) = client.get("/statz").unwrap();
+    assert_eq!(statz_value(&statz, "generation") as u64, 2);
+    assert_eq!(statz_value(&statz, "admin_reload_requests") as u64, 2);
+
+    drop(client);
+    handle.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn admin_reload_without_manifest_is_rejected() {
+    let mut trainer = new_trainer(0x0FF);
+    train_some(&mut trainer, 200, 1);
+    let handle = serve(
+        Arc::new(snapshot(&trainer)),
+        ServerConfig { workers: 1, ..Default::default() },
+    )
+    .unwrap();
+    let mut client = HttpClient::connect(&handle.addr().to_string()).unwrap();
+    let (status, body) = client.post("/admin/reload", "").unwrap();
+    assert_eq!(status, 400, "{body}");
+    assert!(body.contains("watch-manifest"), "{body}");
+    // generation 0: a one-shot export was never published
+    let (_, statz) = client.get("/statz").unwrap();
+    assert_eq!(statz_value(&statz, "generation") as u64, 0);
+    drop(client);
+    handle.shutdown();
+}

@@ -265,7 +265,24 @@ fn train_servable_export_path() {
     let q = SparseVec::from_pairs(vec![(50, 1.0), (60, 1.0)]);
     assert!(model.margin(&q).is_finite());
     assert!(model.predict(&q).probability.is_some());
-    // DNA is multi-class → export must refuse
-    let err = bear::serve::train_servable(RealData::Dna, AlgoKind::Bear, 330.0, &spec);
-    assert!(err.is_err());
+    // DNA is multi-class → one top-k table per class, no shared fallback
+    let mut dspec = RealSpec::quick(RealData::Dna);
+    dspec.n_train = 300;
+    let dna = bear::serve::train_servable(RealData::Dna, AlgoKind::Bear, 330.0, &dspec).unwrap();
+    assert_eq!(dna.num_classes(), 15);
+    assert!(!dna.has_sketch());
+    assert!(dna.n_features() > 0);
+    let p = dna.predict(&q);
+    assert!(p.class.is_some());
+    assert!(p.margin.is_finite());
+    // per-class snapshots survive the wire format
+    let snap = std::env::temp_dir()
+        .join(format!("bear-serve-dna-{}.bearsnap", std::process::id()));
+    dna.save(&snap).unwrap();
+    let dna2 = bear::serve::ServableModel::load(&snap).unwrap();
+    std::fs::remove_file(&snap).ok();
+    assert_eq!(dna2.num_classes(), 15);
+    for c in 0..15 {
+        assert_eq!(dna2.topk_class(c, 5), dna.topk_class(c, 5));
+    }
 }
