@@ -1,0 +1,696 @@
+//! The fleet's front tier: an HTTP/1.1 balancer that spreads `/predict`
+//! and `/topk` across the worker backends and aggregates `/statz`.
+//!
+//! ```text
+//! clients ──▶ acceptor ─▶ [conn queue] ─▶ balancer workers
+//!                                             │ pick: power-of-two-choices
+//!                                             │   on in-flight counts,
+//!                                             │   healthy backends only
+//!                                             ▼
+//!                              pooled keep-alive conns ─▶ bear serve × N
+//! ```
+//!
+//! **Picker.** Each request samples two distinct healthy backends and
+//! forwards to the one with fewer requests in flight (the classic
+//! power-of-two-choices load balancer — near-optimal load spread from two
+//! random probes). One healthy backend ⇒ routed directly; zero ⇒ `503`
+//! after a bounded retry window, never a hang.
+//!
+//! **Zero-drop retry.** `/predict` and `/topk` are pure reads, so a
+//! forward that fails (connect refused while a worker restarts, reset
+//! mid-response on a SIGKILL) is safely retried on another backend. The
+//! failing backend is ejected immediately and excluded for the rest of
+//! the request; the client sees only the successful attempt. When every
+//! backend is excluded or ejected the balancer clears the per-request
+//! exclusions, backs off briefly, and retries — so a full rolling restart
+//! shorter than the retry budget is invisible to clients.
+//!
+//! **Pooling.** Forwards reuse per-backend keep-alive connections. A
+//! pooled connection that fails is presumed stale (workers shed idle
+//! connections after their read timeout) and the forward is re-tried once
+//! on a fresh connection before the backend is declared down. The pool is
+//! deliberately small: an idle keep-alive connection pins one of the
+//! worker's threads until it is reused or shed, so `pool_per_backend`
+//! should stay below the worker's `--workers` count to keep threads free
+//! for health probes and fresh connections.
+
+use crate::fleet::health::BackendState;
+use crate::serve::http::{self, read_request, reason_for, write_response, ReadError, Request};
+use crate::util::Pcg64;
+use anyhow::{Context, Result};
+use std::io::{BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Balancer tunables.
+#[derive(Clone, Debug)]
+pub struct BalancerConfig {
+    /// Bind address (port 0 ⇒ ephemeral; see [`BalancerHandle::addr`]).
+    pub addr: String,
+    /// Client-facing worker threads.
+    pub workers: usize,
+    /// Bounded accept queue (overflow ⇒ 503, like the model server).
+    pub queue_depth: usize,
+    /// Client connection read timeout (idle keep-alive shedding).
+    pub read_timeout: Duration,
+    /// Backend connect deadline per attempt.
+    pub connect_timeout: Duration,
+    /// Backend read/write deadline per forward.
+    pub forward_timeout: Duration,
+    /// Forward attempts per request before giving up with 503.
+    pub max_attempts: usize,
+    /// Pause before a retry round when no backend is currently pickable.
+    pub retry_backoff: Duration,
+    /// Idle keep-alive connections kept per backend.
+    pub pool_per_backend: usize,
+}
+
+impl Default for BalancerConfig {
+    fn default() -> Self {
+        Self {
+            addr: "127.0.0.1:0".to_string(),
+            workers: 8,
+            queue_depth: 128,
+            read_timeout: Duration::from_secs(5),
+            connect_timeout: Duration::from_millis(500),
+            forward_timeout: Duration::from_secs(10),
+            max_attempts: 8,
+            retry_backoff: Duration::from_millis(50),
+            pool_per_backend: 4,
+        }
+    }
+}
+
+/// Balancer-level monotonic counters.
+#[derive(Debug, Default)]
+pub struct BalancerCounters {
+    pub connections: AtomicU64,
+    pub requests_total: AtomicU64,
+    pub proxied_requests: AtomicU64,
+    pub proxy_retries: AtomicU64,
+    pub rejected_503: AtomicU64,
+    pub bad_requests: AtomicU64,
+    pub not_found: AtomicU64,
+    pub statz_requests: AtomicU64,
+    pub health_requests: AtomicU64,
+}
+
+/// Power-of-two-choices backend picker over the shared health states.
+pub struct Picker {
+    backends: Arc<Vec<Arc<BackendState>>>,
+}
+
+impl Picker {
+    pub fn new(backends: Arc<Vec<Arc<BackendState>>>) -> Self {
+        Self { backends }
+    }
+
+    /// Pick a healthy, non-excluded backend: sample two distinct
+    /// candidates, keep the one with fewer requests in flight. `None`
+    /// when no backend is currently pickable (all ejected/excluded).
+    pub fn pick(&self, rng: &mut Pcg64, excluded: &[bool]) -> Option<usize> {
+        let mut candidates: Vec<usize> = Vec::with_capacity(self.backends.len());
+        for (i, b) in self.backends.iter().enumerate() {
+            if b.healthy() && !excluded.get(i).copied().unwrap_or(false) {
+                candidates.push(i);
+            }
+        }
+        match candidates.len() {
+            0 => None,
+            1 => Some(candidates[0]),
+            n => {
+                let first = rng.below(n as u64) as usize;
+                let mut second = rng.below((n - 1) as u64) as usize;
+                if second >= first {
+                    second += 1;
+                }
+                let (a, b) = (candidates[first], candidates[second]);
+                let load_a = self.backends[a].in_flight.load(Ordering::Relaxed);
+                let load_b = self.backends[b].in_flight.load(Ordering::Relaxed);
+                Some(if load_a <= load_b { a } else { b })
+            }
+        }
+    }
+}
+
+/// Decrements a backend's in-flight gauge on scope exit.
+struct InFlightGuard<'a>(&'a BackendState);
+
+impl<'a> InFlightGuard<'a> {
+    fn new(b: &'a BackendState) -> Self {
+        b.in_flight.fetch_add(1, Ordering::Relaxed);
+        Self(b)
+    }
+}
+
+impl Drop for InFlightGuard<'_> {
+    fn drop(&mut self) {
+        self.0.in_flight.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+/// One pooled keep-alive connection to a backend.
+struct BackendConn {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+fn connect_backend(
+    addr: &SocketAddr,
+    connect_timeout: Duration,
+    io_timeout: Duration,
+) -> std::io::Result<BackendConn> {
+    let stream = TcpStream::connect_timeout(addr, connect_timeout)?;
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(io_timeout)).ok();
+    stream.set_write_timeout(Some(io_timeout)).ok();
+    let writer = stream.try_clone()?;
+    Ok(BackendConn { reader: BufReader::new(stream), writer })
+}
+
+/// One request/response exchange on an open backend connection.
+fn forward_once(conn: &mut BackendConn, req: &Request) -> std::io::Result<http::Response> {
+    http::write_request(&mut conn.writer, &req.method, &req.target(), &req.body, true)?;
+    match http::read_response(&mut conn.reader) {
+        Ok(Some(resp)) => Ok(resp),
+        Ok(None) => Err(std::io::Error::new(
+            std::io::ErrorKind::UnexpectedEof,
+            "backend closed before status line",
+        )),
+        Err(ReadError::Io(e)) => Err(e),
+        Err(e) => Err(std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string())),
+    }
+}
+
+/// The balancer proper: shared by its worker threads and the handle.
+pub struct Balancer {
+    cfg: BalancerConfig,
+    backends: Arc<Vec<Arc<BackendState>>>,
+    picker: Picker,
+    pools: Vec<Mutex<Vec<BackendConn>>>,
+    pub counters: BalancerCounters,
+    /// Latest manifest generation the supervisor is rolling toward
+    /// (0 without `--watch-manifest`). Reported on `/statz`.
+    target_generation: Arc<AtomicU64>,
+    started: Instant,
+}
+
+impl Balancer {
+    pub fn new(
+        cfg: BalancerConfig,
+        backends: Arc<Vec<Arc<BackendState>>>,
+        target_generation: Arc<AtomicU64>,
+    ) -> Self {
+        let pools = (0..backends.len()).map(|_| Mutex::new(Vec::new())).collect();
+        Self {
+            picker: Picker::new(backends.clone()),
+            backends,
+            cfg,
+            pools,
+            counters: BalancerCounters::default(),
+            target_generation,
+            started: Instant::now(),
+        }
+    }
+
+    fn pool_pop(&self, i: usize) -> Option<BackendConn> {
+        self.pools[i].lock().ok()?.pop()
+    }
+
+    fn pool_push(&self, i: usize, conn: BackendConn) {
+        if let Ok(mut pool) = self.pools[i].lock() {
+            if pool.len() < self.cfg.pool_per_backend.max(1) {
+                pool.push(conn);
+            }
+        }
+    }
+
+    /// Forward to backend `i`: pooled connection first (one stale-retry on
+    /// a fresh connection), surviving keep-alive connections return to the
+    /// pool.
+    fn forward_to(&self, i: usize, req: &Request) -> std::io::Result<http::Response> {
+        if let Some(mut conn) = self.pool_pop(i) {
+            if let Ok(resp) = forward_once(&mut conn, req) {
+                if resp.keep_alive {
+                    self.pool_push(i, conn);
+                }
+                return Ok(resp);
+            }
+            // pooled connection was stale (worker sheds idle keep-alives);
+            // fall through to a fresh connect, which is authoritative
+        }
+        let mut conn = connect_backend(
+            &self.backends[i].addr,
+            self.cfg.connect_timeout,
+            self.cfg.forward_timeout,
+        )?;
+        let resp = forward_once(&mut conn, req)?;
+        if resp.keep_alive {
+            self.pool_push(i, conn);
+        }
+        Ok(resp)
+    }
+
+    /// Route one read request across the fleet with bounded retries.
+    /// Returns the backend's (status, body), or 503 when no backend could
+    /// answer within the attempt budget.
+    fn proxy(&self, rng: &mut Pcg64, req: &Request) -> (u16, Vec<u8>) {
+        self.counters.proxied_requests.fetch_add(1, Ordering::Relaxed);
+        let n = self.backends.len();
+        let mut excluded = vec![false; n];
+        for attempt in 0..self.cfg.max_attempts.max(1) {
+            if attempt > 0 {
+                self.counters.proxy_retries.fetch_add(1, Ordering::Relaxed);
+            }
+            let i = match self.picker.pick(rng, &excluded) {
+                Some(i) => i,
+                None => {
+                    // nothing pickable: forget this request's failures,
+                    // give restarting workers a beat, then try again
+                    // (bounded by max_attempts — never a hang)
+                    excluded.iter_mut().for_each(|e| *e = false);
+                    std::thread::sleep(self.cfg.retry_backoff);
+                    continue;
+                }
+            };
+            let b = &self.backends[i];
+            let _guard = InFlightGuard::new(b);
+            match self.forward_to(i, req) {
+                // a worker shedding load (accept-queue overflow 503) is
+                // alive but saturated: don't eject, just try another
+                // backend — these are idempotent reads, and a transient
+                // per-worker burst must not surface to the client
+                Ok(resp) if resp.status == 503 => {
+                    excluded[i] = true;
+                }
+                Ok(resp) => {
+                    b.forwarded.fetch_add(1, Ordering::Relaxed);
+                    return (resp.status, resp.body);
+                }
+                // the worker answered, but with bytes we cannot relay
+                // (oversized/malformed response): it is healthy, and the
+                // same request would fail identically on every backend —
+                // answer 502 without ejecting anyone
+                Err(e) if e.kind() == std::io::ErrorKind::InvalidData => {
+                    b.forward_errors.fetch_add(1, Ordering::Relaxed);
+                    return (502, b"unrelayable backend response\n".to_vec());
+                }
+                Err(_) => {
+                    // direct evidence the worker is gone: out of rotation
+                    // now, probes re-admit it after restart
+                    b.forward_errors.fetch_add(1, Ordering::Relaxed);
+                    b.eject_now();
+                    excluded[i] = true;
+                }
+            }
+        }
+        self.counters.rejected_503.fetch_add(1, Ordering::Relaxed);
+        (503, b"no healthy backend\n".to_vec())
+    }
+
+    /// Aggregate `/statz`: balancer counters, fleet-level sums, and one
+    /// `backend.<i>.*` block per worker. Per-backend generation/request
+    /// gauges are the prober's cached scrape — rendering never does a
+    /// backend roundtrip, so `/statz` stays cheap even mid-outage.
+    fn render_statz(&self) -> String {
+        let c = &self.counters;
+        let uptime = self.started.elapsed().as_secs_f64().max(1e-9);
+        let healthy = self.backends.iter().filter(|b| b.healthy()).count();
+        let (mut ejects, mut readmits, mut restarts) = (0u64, 0u64, 0u64);
+        for b in self.backends.iter() {
+            ejects += b.ejects.load(Ordering::Relaxed);
+            readmits += b.readmits.load(Ordering::Relaxed);
+            restarts += b.restarts.load(Ordering::Relaxed);
+        }
+        let mut out = String::with_capacity(1024);
+        let kv = |out: &mut String, k: &str, v: u64| out.push_str(&format!("{k} {v}\n"));
+        out.push_str(&format!("uptime_s {uptime:.3}\n"));
+        kv(&mut out, "fleet_backends", self.backends.len() as u64);
+        kv(&mut out, "fleet_backends_healthy", healthy as u64);
+        kv(&mut out, "fleet_generation", self.target_generation.load(Ordering::Relaxed));
+        kv(&mut out, "connections", c.connections.load(Ordering::Relaxed));
+        kv(&mut out, "requests_total", c.requests_total.load(Ordering::Relaxed));
+        kv(&mut out, "proxied_requests", c.proxied_requests.load(Ordering::Relaxed));
+        kv(&mut out, "proxy_retries", c.proxy_retries.load(Ordering::Relaxed));
+        kv(&mut out, "rejected_503", c.rejected_503.load(Ordering::Relaxed));
+        kv(&mut out, "bad_requests", c.bad_requests.load(Ordering::Relaxed));
+        kv(&mut out, "not_found", c.not_found.load(Ordering::Relaxed));
+        kv(&mut out, "statz_requests", c.statz_requests.load(Ordering::Relaxed));
+        kv(&mut out, "health_requests", c.health_requests.load(Ordering::Relaxed));
+        kv(&mut out, "fleet_ejects", ejects);
+        kv(&mut out, "fleet_readmits", readmits);
+        kv(&mut out, "fleet_restarts", restarts);
+        for b in self.backends.iter() {
+            let i = b.index;
+            out.push_str(&format!("backend.{i}.addr {}\n", b.addr));
+            kv(&mut out, &format!("backend.{i}.healthy"), u64::from(b.healthy()));
+            kv(&mut out, &format!("backend.{i}.in_flight"), b.in_flight.load(Ordering::Relaxed));
+            kv(&mut out, &format!("backend.{i}.forwarded"), b.forwarded.load(Ordering::Relaxed));
+            let errs = b.forward_errors.load(Ordering::Relaxed);
+            kv(&mut out, &format!("backend.{i}.forward_errors"), errs);
+            kv(&mut out, &format!("backend.{i}.ejects"), b.ejects.load(Ordering::Relaxed));
+            kv(&mut out, &format!("backend.{i}.readmits"), b.readmits.load(Ordering::Relaxed));
+            kv(&mut out, &format!("backend.{i}.restarts"), b.restarts.load(Ordering::Relaxed));
+            // per-backend generation/request gauges come from the prober's
+            // last scrape (never a blocking backend roundtrip on the
+            // data-plane thread serving this request)
+            let up = u64::from(b.last_probe_ok.load(Ordering::Relaxed));
+            kv(&mut out, &format!("backend.{i}.up"), up);
+            let generation = b.scraped_generation.load(Ordering::Relaxed);
+            kv(&mut out, &format!("backend.{i}.generation"), generation);
+            let reqs = b.scraped_requests_total.load(Ordering::Relaxed);
+            kv(&mut out, &format!("backend.{i}.requests_total"), reqs);
+        }
+        out
+    }
+
+    /// Handle one parsed request; returns (status, body, keep_alive).
+    fn dispatch(&self, rng: &mut Pcg64, req: &Request) -> (u16, Vec<u8>, bool) {
+        self.counters.requests_total.fetch_add(1, Ordering::Relaxed);
+        match (req.method.as_str(), req.path.as_str()) {
+            ("POST", "/predict") | ("GET", "/topk") => {
+                let (status, body) = self.proxy(rng, req);
+                (status, body, req.keep_alive)
+            }
+            ("GET", "/healthz") => {
+                self.counters.health_requests.fetch_add(1, Ordering::Relaxed);
+                if self.backends.iter().any(|b| b.healthy()) {
+                    (200, b"ok\n".to_vec(), req.keep_alive)
+                } else {
+                    (503, b"no healthy backend\n".to_vec(), req.keep_alive)
+                }
+            }
+            ("GET", "/statz") => {
+                self.counters.statz_requests.fetch_add(1, Ordering::Relaxed);
+                (200, self.render_statz().into_bytes(), req.keep_alive)
+            }
+            _ => {
+                self.counters.not_found.fetch_add(1, Ordering::Relaxed);
+                let body = format!("no route {} {}\n", req.method, req.path).into_bytes();
+                (404, body, req.keep_alive)
+            }
+        }
+    }
+
+    fn handle_conn(&self, stream: TcpStream, rng: &mut Pcg64) {
+        self.counters.connections.fetch_add(1, Ordering::Relaxed);
+        stream.set_nodelay(true).ok();
+        stream.set_read_timeout(Some(self.cfg.read_timeout)).ok();
+        let mut writer = match stream.try_clone() {
+            Ok(w) => w,
+            Err(_) => return,
+        };
+        let mut reader = BufReader::new(stream);
+        loop {
+            match read_request(&mut reader) {
+                Ok(Some(req)) => {
+                    let (status, body, keep) = self.dispatch(rng, &req);
+                    let ok =
+                        write_response(&mut writer, status, reason_for(status), &body, keep)
+                            .is_ok();
+                    if !keep || !ok {
+                        break;
+                    }
+                }
+                Ok(None) => break,
+                Err(ReadError::Io(_)) => break,
+                Err(ReadError::Bad { status, msg }) => {
+                    self.counters.bad_requests.fetch_add(1, Ordering::Relaxed);
+                    let body = format!("{msg}\n");
+                    let _ = write_response(
+                        &mut writer,
+                        status,
+                        reason_for(status),
+                        body.as_bytes(),
+                        false,
+                    );
+                    break;
+                }
+            }
+        }
+    }
+}
+
+fn worker_loop(
+    balancer: Arc<Balancer>,
+    conn_rx: Arc<Mutex<Receiver<TcpStream>>>,
+    seed: u64,
+) {
+    let mut rng = Pcg64::new(seed);
+    loop {
+        let conn = match conn_rx.lock() {
+            Ok(rx) => rx.recv(),
+            Err(_) => break,
+        };
+        match conn {
+            Ok(stream) => balancer.handle_conn(stream, &mut rng),
+            Err(_) => break, // acceptor gone
+        }
+    }
+}
+
+const RESP_503: &[u8] = b"HTTP/1.1 503 Service Unavailable\r\nContent-Length: 9\r\nContent-Type: text/plain; charset=utf-8\r\nConnection: close\r\n\r\noverload\n";
+
+/// A running balancer; threads joined on [`BalancerHandle::shutdown`] (or
+/// best-effort on drop).
+pub struct BalancerHandle {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    acceptor: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+    balancer: Arc<Balancer>,
+}
+
+impl BalancerHandle {
+    /// Bound address (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The shared balancer state (counters, aggregation).
+    pub fn balancer(&self) -> &Arc<Balancer> {
+        &self.balancer
+    }
+
+    fn shutdown_inner(&mut self) {
+        self.shutdown.store(true, Ordering::Release);
+        let _ = TcpStream::connect(self.addr); // wake a blocked accept()
+        if let Some(a) = self.acceptor.take() {
+            let _ = a.join();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+
+    /// Stop accepting and join every thread.
+    pub fn shutdown(mut self) {
+        self.shutdown_inner();
+    }
+
+    /// Block until the acceptor exits (i.e. forever, for `bear fleet`).
+    pub fn join_forever(mut self) {
+        if let Some(a) = self.acceptor.take() {
+            let _ = a.join();
+        }
+    }
+}
+
+impl Drop for BalancerHandle {
+    fn drop(&mut self) {
+        self.shutdown_inner();
+    }
+}
+
+/// Bind and start the balancer's acceptor + worker threads.
+pub fn start_balancer(
+    balancer: Arc<Balancer>,
+    shutdown: Arc<AtomicBool>,
+) -> Result<BalancerHandle> {
+    let listener = TcpListener::bind(&balancer.cfg.addr)
+        .with_context(|| format!("binding balancer {}", balancer.cfg.addr))?;
+    let addr = listener.local_addr()?;
+    let workers_n = balancer.cfg.workers.max(1);
+    let (conn_tx, conn_rx) = sync_channel::<TcpStream>(balancer.cfg.queue_depth.max(1));
+    let conn_rx = Arc::new(Mutex::new(conn_rx));
+    let mut workers = Vec::with_capacity(workers_n);
+    for i in 0..workers_n {
+        let balancer = balancer.clone();
+        let conn_rx = conn_rx.clone();
+        workers.push(
+            std::thread::Builder::new()
+                .name(format!("bear-fleet-balancer-{i}"))
+                .spawn(move || worker_loop(balancer, conn_rx, 0xBA1A_0000 + i as u64))
+                .expect("spawn balancer worker thread"),
+        );
+    }
+    let acceptor = {
+        let shutdown = shutdown.clone();
+        let balancer = balancer.clone();
+        std::thread::Builder::new()
+            .name("bear-fleet-acceptor".into())
+            .spawn(move || {
+                for conn in listener.incoming() {
+                    if shutdown.load(Ordering::Acquire) {
+                        break;
+                    }
+                    match conn {
+                        Ok(stream) => match conn_tx.try_send(stream) {
+                            Ok(()) => {}
+                            Err(TrySendError::Full(mut stream)) => {
+                                balancer
+                                    .counters
+                                    .rejected_503
+                                    .fetch_add(1, Ordering::Relaxed);
+                                let _ = stream.write_all(RESP_503);
+                            }
+                            Err(TrySendError::Disconnected(_)) => break,
+                        },
+                        Err(_) => {
+                            if shutdown.load(Ordering::Acquire) {
+                                break;
+                            }
+                        }
+                    }
+                }
+                // conn_tx drops here → workers drain and exit
+            })
+            .expect("spawn balancer acceptor thread")
+    };
+    Ok(BalancerHandle { addr, shutdown, acceptor: Some(acceptor), workers, balancer })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk_backends(n: usize) -> Arc<Vec<Arc<BackendState>>> {
+        Arc::new(
+            (0..n)
+                .map(|i| {
+                    // reserve-and-release: nothing listens on these ports
+                    let addr = {
+                        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+                        l.local_addr().unwrap()
+                    };
+                    Arc::new(BackendState::new(i, addr))
+                })
+                .collect(),
+        )
+    }
+
+    fn admit(b: &BackendState) {
+        b.note_probe(true, 1, 1);
+    }
+
+    #[test]
+    fn p2c_never_selects_ejected_backends() {
+        let backends = mk_backends(4);
+        for b in backends.iter() {
+            admit(b);
+        }
+        backends[2].eject_now();
+        let picker = Picker::new(backends.clone());
+        let mut rng = Pcg64::new(42);
+        let excluded = vec![false; 4];
+        let mut seen = [false; 4];
+        for _ in 0..2000 {
+            let i = picker.pick(&mut rng, &excluded).expect("healthy backends exist");
+            assert_ne!(i, 2, "picked an ejected backend");
+            seen[i] = true;
+        }
+        assert!(seen[0] && seen[1] && seen[3], "all healthy backends should be sampled");
+    }
+
+    #[test]
+    fn p2c_prefers_lower_in_flight() {
+        let backends = mk_backends(2);
+        for b in backends.iter() {
+            admit(b);
+        }
+        backends[0].in_flight.store(100, Ordering::Relaxed);
+        let picker = Picker::new(backends.clone());
+        let mut rng = Pcg64::new(7);
+        // with exactly two healthy candidates, both are always sampled, so
+        // the less-loaded one always wins
+        for _ in 0..200 {
+            assert_eq!(picker.pick(&mut rng, &[false, false]), Some(1));
+        }
+    }
+
+    #[test]
+    fn p2c_drains_to_the_survivor_when_all_others_are_down() {
+        let backends = mk_backends(4);
+        for b in backends.iter() {
+            admit(b);
+        }
+        for i in [0usize, 1, 3] {
+            backends[i].eject_now();
+        }
+        let picker = Picker::new(backends.clone());
+        let mut rng = Pcg64::new(9);
+        for _ in 0..200 {
+            assert_eq!(picker.pick(&mut rng, &[false; 4]), Some(2));
+        }
+    }
+
+    #[test]
+    fn p2c_respects_per_request_exclusions() {
+        let backends = mk_backends(2);
+        for b in backends.iter() {
+            admit(b);
+        }
+        let picker = Picker::new(backends.clone());
+        let mut rng = Pcg64::new(11);
+        for _ in 0..100 {
+            assert_eq!(picker.pick(&mut rng, &[true, false]), Some(1));
+        }
+        assert_eq!(picker.pick(&mut rng, &[true, true]), None);
+    }
+
+    #[test]
+    fn pick_returns_none_when_every_backend_is_down() {
+        let backends = mk_backends(3);
+        // never admitted: all unhealthy
+        let picker = Picker::new(backends.clone());
+        let mut rng = Pcg64::new(3);
+        assert_eq!(picker.pick(&mut rng, &[false; 3]), None);
+    }
+
+    #[test]
+    fn proxy_answers_503_quickly_when_all_backends_are_down() {
+        let backends = mk_backends(2);
+        // admitted but pointing at closed ports: picks succeed, forwards
+        // fail, ejection kicks in, and the bounded budget ends in 503
+        for b in backends.iter() {
+            admit(b);
+        }
+        let cfg = BalancerConfig {
+            max_attempts: 4,
+            retry_backoff: Duration::from_millis(5),
+            connect_timeout: Duration::from_millis(100),
+            ..Default::default()
+        };
+        let balancer =
+            Balancer::new(cfg, backends.clone(), Arc::new(AtomicU64::new(0)));
+        let req = Request {
+            method: "POST".into(),
+            path: "/predict".into(),
+            query: None,
+            body: b"1:1\n".to_vec(),
+            keep_alive: true,
+        };
+        let mut rng = Pcg64::new(5);
+        let t0 = Instant::now();
+        let (status, _body) = balancer.proxy(&mut rng, &req);
+        assert_eq!(status, 503);
+        assert!(t0.elapsed() < Duration::from_secs(5), "503 must be prompt, not a hang");
+        assert!(balancer.counters.rejected_503.load(Ordering::Relaxed) >= 1);
+        // the dead backends were ejected by the failed forwards
+        assert!(backends.iter().all(|b| !b.healthy()));
+    }
+}

@@ -1,0 +1,303 @@
+//! Per-backend health state + the prober thread.
+//!
+//! Every backend worker carries a [`BackendState`]: the balancer's
+//! routing signal (healthy flag + in-flight count), the eject/re-admit
+//! hysteresis counters, and the observability counters `/statz`
+//! aggregates. Health changes come from two sources:
+//!
+//! - **probes** — a prober thread `GET /statz`es every backend on an
+//!   interval (a statz answer doubles as the liveness signal, and its
+//!   `generation`/`requests_total` fields are cached on the
+//!   [`BackendState`] so the balancer's aggregated `/statz` never blocks
+//!   a data-plane thread on a backend scrape); `eject_after` consecutive
+//!   failures eject, `admit_after` consecutive successes (re-)admit.
+//!   Admission is *probe-only*: a restarting worker is routed to again
+//!   only after it demonstrably answers.
+//! - **forward failures** — a refused/reset connection observed by the
+//!   balancer is direct evidence; [`BackendState::eject_now`] takes the
+//!   backend out of rotation immediately instead of waiting for the next
+//!   probe tick.
+//!
+//! State flips are guarded by `swap`, so each healthy→down transition
+//! counts exactly one eject no matter how many threads observe it.
+
+use crate::serve::http;
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Shared per-backend state: routing signal + counters.
+#[derive(Debug)]
+pub struct BackendState {
+    /// Position in the fleet (worker index, `/statz` key).
+    pub index: usize,
+    /// The worker's listen address.
+    pub addr: SocketAddr,
+    /// In rotation? Starts `false`; the first successful probes admit.
+    healthy: AtomicBool,
+    /// Has this backend ever been admitted? (first admission is not a
+    /// "re-admit")
+    ever_admitted: AtomicBool,
+    consec_ok: AtomicU32,
+    consec_fail: AtomicU32,
+    /// healthy→down transitions.
+    pub ejects: AtomicU64,
+    /// down→healthy transitions after the first admission.
+    pub readmits: AtomicU64,
+    /// Requests currently being forwarded to this backend (the
+    /// power-of-two-choices load signal).
+    pub in_flight: AtomicU64,
+    /// Requests successfully forwarded.
+    pub forwarded: AtomicU64,
+    /// Forward attempts that failed (connect refused, reset mid-response).
+    pub forward_errors: AtomicU64,
+    /// Times the supervisor respawned this worker's process.
+    pub restarts: AtomicU64,
+    /// Did the most recent probe answer? (raw signal, no hysteresis —
+    /// `backend.<i>.up` on the aggregated statz)
+    pub last_probe_ok: AtomicBool,
+    /// Serving generation cached from the last successful probe scrape.
+    pub scraped_generation: AtomicU64,
+    /// `requests_total` cached from the last successful probe scrape.
+    pub scraped_requests_total: AtomicU64,
+    /// Highest publication generation this worker has acknowledged via
+    /// `/admin/reload` (supervisor-maintained; 0 = never rolled).
+    pub acked_generation: AtomicU64,
+}
+
+impl BackendState {
+    pub fn new(index: usize, addr: SocketAddr) -> Self {
+        Self {
+            index,
+            addr,
+            healthy: AtomicBool::new(false),
+            ever_admitted: AtomicBool::new(false),
+            consec_ok: AtomicU32::new(0),
+            consec_fail: AtomicU32::new(0),
+            ejects: AtomicU64::new(0),
+            readmits: AtomicU64::new(0),
+            in_flight: AtomicU64::new(0),
+            forwarded: AtomicU64::new(0),
+            forward_errors: AtomicU64::new(0),
+            restarts: AtomicU64::new(0),
+            last_probe_ok: AtomicBool::new(false),
+            scraped_generation: AtomicU64::new(0),
+            scraped_requests_total: AtomicU64::new(0),
+            acked_generation: AtomicU64::new(0),
+        }
+    }
+
+    /// In rotation right now?
+    #[inline]
+    pub fn healthy(&self) -> bool {
+        self.healthy.load(Ordering::Relaxed)
+    }
+
+    /// Record one probe outcome and apply the hysteresis thresholds.
+    pub fn note_probe(&self, ok: bool, admit_after: u32, eject_after: u32) {
+        if ok {
+            self.consec_fail.store(0, Ordering::Relaxed);
+            let n = self.consec_ok.fetch_add(1, Ordering::Relaxed) + 1;
+            // the thread that flips healthy also settles ever_admitted, so
+            // the first admission is never miscounted as a re-admit
+            if n >= admit_after.max(1)
+                && !self.healthy.swap(true, Ordering::Relaxed)
+                && self.ever_admitted.swap(true, Ordering::Relaxed)
+            {
+                self.readmits.fetch_add(1, Ordering::Relaxed);
+            }
+        } else {
+            self.consec_ok.store(0, Ordering::Relaxed);
+            let n = self.consec_fail.fetch_add(1, Ordering::Relaxed) + 1;
+            if n >= eject_after.max(1) && self.healthy.swap(false, Ordering::Relaxed) {
+                self.ejects.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Direct down evidence (forward failure, observed process exit):
+    /// eject immediately; probes will re-admit.
+    pub fn eject_now(&self) {
+        self.consec_ok.store(0, Ordering::Relaxed);
+        if self.healthy.swap(false, Ordering::Relaxed) {
+            self.ejects.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+/// One short-deadline HTTP exchange on a fresh connection (probes, admin
+/// reloads, `/statz` scrapes — the fleet's control plane, not its data
+/// plane: proxied traffic uses the balancer's pooled connections).
+pub fn roundtrip(
+    addr: &SocketAddr,
+    timeout: Duration,
+    method: &str,
+    path: &str,
+) -> std::io::Result<http::Response> {
+    let stream = TcpStream::connect_timeout(addr, timeout)?;
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(timeout)).ok();
+    stream.set_write_timeout(Some(timeout)).ok();
+    let mut writer = stream.try_clone()?;
+    http::write_request(&mut writer, method, path, b"", false)?;
+    let mut reader = BufReader::new(stream);
+    match http::read_response(&mut reader) {
+        Ok(Some(resp)) => Ok(resp),
+        Ok(None) => Err(std::io::Error::new(
+            std::io::ErrorKind::UnexpectedEof,
+            "closed before status line",
+        )),
+        Err(http::ReadError::Io(e)) => Err(e),
+        Err(e) => Err(std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string())),
+    }
+}
+
+/// First `key value` line of a statz body parsed as u64 (0 when absent).
+pub fn statz_u64(body: &str, key: &str) -> u64 {
+    for line in body.lines() {
+        if let Some((k, v)) = line.split_once(' ') {
+            if k == key {
+                return v.parse().unwrap_or(0);
+            }
+        }
+    }
+    0
+}
+
+/// Probe the worker via `GET /statz`: a 200 doubles as liveness, and the
+/// body yields the cached observability fields. `None` ⇒ down.
+pub fn probe_scrape(addr: &SocketAddr, timeout: Duration) -> Option<(u64, u64)> {
+    match roundtrip(addr, timeout, "GET", "/statz") {
+        Ok(resp) if resp.status == 200 => {
+            let body = String::from_utf8_lossy(&resp.body);
+            Some((statz_u64(&body, "generation"), statz_u64(&body, "requests_total")))
+        }
+        _ => None,
+    }
+}
+
+/// Prober thread knobs.
+#[derive(Clone, Debug)]
+pub struct ProbeConfig {
+    /// Sweep interval (every backend is probed once per sweep).
+    pub interval: Duration,
+    /// Per-probe connect/read deadline.
+    pub timeout: Duration,
+    /// Consecutive failures before eject.
+    pub eject_after: u32,
+    /// Consecutive successes before (re-)admission.
+    pub admit_after: u32,
+}
+
+impl Default for ProbeConfig {
+    fn default() -> Self {
+        Self {
+            interval: Duration::from_millis(100),
+            timeout: Duration::from_millis(500),
+            eject_after: 2,
+            admit_after: 2,
+        }
+    }
+}
+
+/// Prober loop body: sweep every backend, sleep, repeat until `shutdown`.
+pub fn prober_loop(
+    backends: Arc<Vec<Arc<BackendState>>>,
+    cfg: ProbeConfig,
+    shutdown: Arc<AtomicBool>,
+) {
+    let slice = cfg.interval.min(Duration::from_millis(25)).max(Duration::from_millis(1));
+    loop {
+        for b in backends.iter() {
+            if shutdown.load(Ordering::Acquire) {
+                return;
+            }
+            let scraped = probe_scrape(&b.addr, cfg.timeout);
+            if let Some((generation, requests_total)) = scraped {
+                b.scraped_generation.store(generation, Ordering::Relaxed);
+                b.scraped_requests_total.store(requests_total, Ordering::Relaxed);
+            }
+            b.last_probe_ok.store(scraped.is_some(), Ordering::Relaxed);
+            b.note_probe(scraped.is_some(), cfg.admit_after, cfg.eject_after);
+        }
+        let mut slept = Duration::ZERO;
+        while slept < cfg.interval {
+            if shutdown.load(Ordering::Acquire) {
+                return;
+            }
+            std::thread::sleep(slice);
+            slept += slice;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn state() -> BackendState {
+        BackendState::new(0, "127.0.0.1:1".parse().unwrap())
+    }
+
+    #[test]
+    fn admission_needs_consecutive_successes() {
+        let b = state();
+        assert!(!b.healthy());
+        b.note_probe(true, 2, 2);
+        assert!(!b.healthy(), "one success must not admit with admit_after=2");
+        b.note_probe(true, 2, 2);
+        assert!(b.healthy());
+        // first admission is not a re-admit
+        assert_eq!(b.readmits.load(Ordering::Relaxed), 0);
+        assert_eq!(b.ejects.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn eject_and_readmit_count_transitions_once() {
+        let b = state();
+        b.note_probe(true, 1, 2);
+        assert!(b.healthy());
+        // a single failure is not enough with eject_after=2
+        b.note_probe(false, 1, 2);
+        assert!(b.healthy());
+        b.note_probe(false, 1, 2);
+        assert!(!b.healthy());
+        assert_eq!(b.ejects.load(Ordering::Relaxed), 1);
+        // further failures do not recount the eject
+        b.note_probe(false, 1, 2);
+        assert_eq!(b.ejects.load(Ordering::Relaxed), 1);
+        // recovery counts exactly one readmit
+        b.note_probe(true, 1, 2);
+        assert!(b.healthy());
+        assert_eq!(b.readmits.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn eject_now_is_immediate_and_idempotent() {
+        let b = state();
+        b.note_probe(true, 1, 1);
+        assert!(b.healthy());
+        b.eject_now();
+        b.eject_now();
+        assert!(!b.healthy());
+        assert_eq!(b.ejects.load(Ordering::Relaxed), 1);
+        // re-admission goes through the probe hysteresis again
+        b.note_probe(true, 2, 1);
+        assert!(!b.healthy());
+        b.note_probe(true, 2, 1);
+        assert!(b.healthy());
+        assert_eq!(b.readmits.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn probe_scrape_against_closed_port_fails_fast() {
+        // reserve a port, then close it: nothing listens there
+        let addr = {
+            let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap()
+        };
+        assert_eq!(probe_scrape(&addr, Duration::from_millis(200)), None);
+    }
+}

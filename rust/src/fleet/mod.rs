@@ -1,0 +1,353 @@
+//! The horizontal-scaling tier: a shared-nothing multi-process fleet
+//! behind a balancer.
+//!
+//! The single-process server ([`crate::serve::server`]) caps throughput
+//! and memory at one address space; BEAR's serving artifact is tiny and
+//! the read path is embarrassingly parallel, so the natural next step is
+//! N independent `bear serve` **processes** — no shared memory, no shared
+//! locks, each with its own snapshot and reload loop — behind one front
+//! tier:
+//!
+//! ```text
+//!                         ┌──────────── bear fleet ────────────┐
+//!                         │ balancer        supervisor         │
+//! clients ──/predict────▶ │  P2C picker      spawn/respawn     │
+//!          ──/topk──────▶ │  retry+eject     rolling reload ───┼──▶ MANIFEST
+//!          ──/statz─────▶ │  aggregate       health prober     │    (bear online)
+//!                         └───────┬──────────────┬─────────────┘
+//!                                 ▼              ▼ /statz /admin/reload
+//!                         bear serve :p+0 · bear serve :p+1 · … · :p+N−1
+//! ```
+//!
+//! - [`balancer`] — power-of-two-choices on in-flight counts, healthy
+//!   backends only, bounded retry-on-failure (a restarting worker never
+//!   surfaces an error to clients), aggregated `/statz`.
+//! - [`supervisor`] — spawns the worker processes, respawns any that die
+//!   (on the latest published snapshot), and rolls new generations across
+//!   the fleet one worker at a time via each worker's `/admin/reload`.
+//! - [`health`] — per-backend state (the routing signal) + the prober
+//!   (probe-scrapes each worker's `/statz`) with eject/re-admit
+//!   hysteresis.
+//!
+//! CLI: `bear fleet --backends N --watch-manifest DIR/MANIFEST`.
+//! `tests/integration_fleet.rs` is the acceptance harness: a closed-loop
+//! load run sees **zero** errors while one backend is SIGKILLed and
+//! respawned and while a rolling reload crosses multiple generations.
+
+pub mod balancer;
+pub mod health;
+pub mod supervisor;
+
+pub use balancer::{Balancer, BalancerConfig, BalancerHandle, Picker};
+pub use health::{BackendState, ProbeConfig};
+pub use supervisor::{spawn_parent_watchdog, Supervisor, WorkerSpec};
+
+use crate::util::logger::{log, Level};
+use anyhow::{bail, Context, Result};
+use std::net::{SocketAddr, TcpListener};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// `bear fleet` knobs.
+#[derive(Clone, Debug)]
+pub struct FleetConfig {
+    /// Balancer bind address (port 0 ⇒ ephemeral).
+    pub addr: String,
+    /// Worker processes to run.
+    pub backends: usize,
+    /// First worker port; workers listen on `base_port..base_port+N`.
+    /// 0 ⇒ pick free ports automatically.
+    pub base_port: u16,
+    /// Snapshot for workers when no manifest publication exists yet.
+    pub model: Option<PathBuf>,
+    /// Publication MANIFEST to watch: enables rolling reload + restart
+    /// catch-up.
+    pub watch_manifest: Option<PathBuf>,
+    /// Worker binary (defaults to the current executable).
+    pub worker_bin: Option<PathBuf>,
+    /// `--workers` threads inside each backend process. `start_fleet`
+    /// raises this to a floor of `balancer.workers +
+    /// balancer.pool_per_backend + 4`: every worker thread can be pinned
+    /// by a balancer connection (idle keep-alives included), and health
+    /// probes must always find a free one — a too-small pool would let
+    /// load eject a perfectly live backend.
+    pub serve_workers: usize,
+    /// Worker log directory (default: `bear-fleet-logs` under the
+    /// system temp dir).
+    pub log_dir: Option<PathBuf>,
+    /// Health probing (interval, timeout, hysteresis).
+    pub probe: ProbeConfig,
+    /// How often the supervisor checks the manifest / reaps dead workers.
+    pub monitor_interval: Duration,
+    /// Balancer tunables (its `addr` is overridden by `addr` above).
+    pub balancer: BalancerConfig,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        Self {
+            addr: "127.0.0.1:8360".to_string(),
+            backends: 3,
+            base_port: 0,
+            model: None,
+            watch_manifest: None,
+            worker_bin: None,
+            // comfortably above the balancer's idle-conn pool + control
+            // plane, so pooled keep-alives never starve probe connections
+            serve_workers: 8,
+            log_dir: None,
+            probe: ProbeConfig::default(),
+            monitor_interval: Duration::from_millis(100),
+            balancer: BalancerConfig::default(),
+        }
+    }
+}
+
+/// Reserve `n` distinct free loopback ports by binding and immediately
+/// releasing them (all listeners are held open until every port is
+/// chosen, so the set is distinct). There is a small window between
+/// release and the workers' rebind; a lost race surfaces as a worker
+/// that exits at bind and is retried by the supervisor with backoff
+/// until the squatter goes away.
+fn pick_free_ports(n: usize) -> Result<Vec<u16>> {
+    let mut listeners = Vec::with_capacity(n);
+    for _ in 0..n {
+        let l = TcpListener::bind("127.0.0.1:0").context("reserving a worker port")?;
+        listeners.push(l);
+    }
+    listeners.iter().map(|l| Ok(l.local_addr()?.port())).collect()
+}
+
+/// A running fleet: balancer + supervisor + prober + monitor.
+pub struct FleetHandle {
+    addr: SocketAddr,
+    balancer: Option<BalancerHandle>,
+    supervisor: Arc<Supervisor>,
+    backends: Arc<Vec<Arc<BackendState>>>,
+    shutdown: Arc<AtomicBool>,
+    prober: Option<JoinHandle<()>>,
+    monitor: Option<JoinHandle<()>>,
+    roller: Option<JoinHandle<()>>,
+    log_dir: PathBuf,
+}
+
+impl FleetHandle {
+    /// The balancer's bound address (what clients talk to).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The worker listen addresses, in backend order.
+    pub fn backend_addrs(&self) -> Vec<SocketAddr> {
+        self.backends.iter().map(|b| b.addr).collect()
+    }
+
+    /// Shared per-backend states (health, counters).
+    pub fn backends(&self) -> &Arc<Vec<Arc<BackendState>>> {
+        &self.backends
+    }
+
+    /// Where the worker logs land.
+    pub fn log_dir(&self) -> &PathBuf {
+        &self.log_dir
+    }
+
+    /// Live pid of backend `i` (None mid-respawn).
+    pub fn backend_pid(&self, index: usize) -> Option<u32> {
+        self.supervisor.pid(index)
+    }
+
+    /// SIGKILL backend `i`'s process; the supervisor respawns it. Fault
+    /// injection for the chaos tests.
+    pub fn kill_backend(&self, index: usize) -> Result<()> {
+        self.supervisor.kill_backend(index)
+    }
+
+    /// Block until every backend is healthy (readiness gate). Returns
+    /// false on timeout.
+    pub fn wait_all_healthy(&self, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        while Instant::now() < deadline {
+            if self.backends.iter().all(|b| b.healthy()) {
+                return true;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        false
+    }
+
+    fn shutdown_inner(&mut self) {
+        self.shutdown.store(true, Ordering::Release);
+        // stop the front door first, then the control threads, then the
+        // worker processes
+        if let Some(b) = self.balancer.take() {
+            b.shutdown();
+        }
+        if let Some(p) = self.prober.take() {
+            let _ = p.join();
+        }
+        if let Some(m) = self.monitor.take() {
+            let _ = m.join();
+        }
+        if let Some(r) = self.roller.take() {
+            let _ = r.join();
+        }
+        self.supervisor.shutdown_children();
+    }
+
+    /// Stop the balancer, join the control threads, kill the workers.
+    pub fn shutdown(mut self) {
+        self.shutdown_inner();
+    }
+
+    /// Block on the balancer's acceptor (i.e. forever, for `bear fleet`).
+    pub fn join_forever(mut self) {
+        if let Some(b) = self.balancer.take() {
+            b.join_forever();
+        }
+    }
+}
+
+impl Drop for FleetHandle {
+    fn drop(&mut self) {
+        self.shutdown_inner();
+    }
+}
+
+/// Spawn the workers, start probing, start the balancer, and return the
+/// running fleet.
+pub fn start_fleet(cfg: FleetConfig) -> Result<FleetHandle> {
+    let n = cfg.backends.max(1);
+    let ports: Vec<u16> = if cfg.base_port == 0 {
+        pick_free_ports(n)?
+    } else {
+        // successive ports must all fit in the u16 port space
+        if cfg.base_port as u32 + n as u32 > u16::MAX as u32 + 1 {
+            bail!(
+                "--base-port {} + {} backends exceeds port {}",
+                cfg.base_port,
+                n,
+                u16::MAX
+            );
+        }
+        (0..n as u16).map(|i| cfg.base_port + i).collect()
+    };
+    let backends: Arc<Vec<Arc<BackendState>>> = Arc::new(
+        ports
+            .iter()
+            .enumerate()
+            .map(|(i, &p)| {
+                let addr: SocketAddr = format!("127.0.0.1:{p}").parse().expect("loopback addr");
+                Arc::new(BackendState::new(i, addr))
+            })
+            .collect(),
+    );
+    let log_dir = cfg
+        .log_dir
+        .clone()
+        .unwrap_or_else(|| std::env::temp_dir().join("bear-fleet-logs"));
+    let worker_bin = match &cfg.worker_bin {
+        Some(b) => b.clone(),
+        None => std::env::current_exe().context("resolving current executable for workers")?,
+    };
+    let target_generation = Arc::new(AtomicU64::new(0));
+    let shutdown = Arc::new(AtomicBool::new(false));
+
+    // enforce the probe-starvation floor documented on `serve_workers`
+    let serve_workers =
+        cfg.serve_workers.max(cfg.balancer.workers + cfg.balancer.pool_per_backend + 4);
+    let supervisor = Arc::new(Supervisor::new(
+        WorkerSpec {
+            bin: worker_bin,
+            model: cfg.model.clone(),
+            watch_manifest: cfg.watch_manifest.clone(),
+            serve_workers,
+            log_dir: log_dir.clone(),
+            admin_timeout: Duration::from_secs(5),
+        },
+        backends.clone(),
+        target_generation.clone(),
+    )?);
+    if let Err(e) = supervisor.spawn_all() {
+        // don't leak half a fleet of orphan processes on a failed start
+        supervisor.shutdown_children();
+        return Err(e);
+    }
+
+    let prober = {
+        let backends = backends.clone();
+        let probe_cfg = cfg.probe.clone();
+        let shutdown = shutdown.clone();
+        std::thread::Builder::new()
+            .name("bear-fleet-prober".into())
+            .spawn(move || health::prober_loop(backends, probe_cfg, shutdown))
+            .expect("spawn fleet prober thread")
+    };
+
+    // two control loops on separate threads: reaping/respawning dead
+    // workers must never wait behind a slow (bounded-by-admin-timeout)
+    // rolling-reload roundtrip
+    let interval = cfg.monitor_interval.max(Duration::from_millis(10));
+    let control_loop = |name: &str, supervisor: Arc<Supervisor>, f: fn(&Supervisor)| {
+        let shutdown = shutdown.clone();
+        std::thread::Builder::new()
+            .name(name.to_string())
+            .spawn(move || {
+                let slice = interval.min(Duration::from_millis(25));
+                while !shutdown.load(Ordering::Acquire) {
+                    f(&supervisor);
+                    let mut slept = Duration::ZERO;
+                    while slept < interval && !shutdown.load(Ordering::Acquire) {
+                        std::thread::sleep(slice);
+                        slept += slice;
+                    }
+                }
+            })
+            .expect("spawn fleet control thread")
+    };
+    let monitor =
+        control_loop("bear-fleet-monitor", supervisor.clone(), Supervisor::respawn_dead);
+    let roller =
+        control_loop("bear-fleet-roller", supervisor.clone(), Supervisor::roll_generations);
+
+    let mut bal_cfg = cfg.balancer.clone();
+    bal_cfg.addr = cfg.addr.clone();
+    let balancer = Arc::new(Balancer::new(bal_cfg, backends.clone(), target_generation));
+    let handle = match balancer::start_balancer(balancer, shutdown.clone()) {
+        Ok(h) => h,
+        Err(e) => {
+            // a failed bind must not orphan the already-running fleet:
+            // stop the control threads and kill the workers before erroring
+            shutdown.store(true, Ordering::Release);
+            let _ = prober.join();
+            let _ = monitor.join();
+            let _ = roller.join();
+            supervisor.shutdown_children();
+            return Err(e);
+        }
+    };
+    log(
+        Level::Info,
+        format_args!(
+            "fleet up: balancer on http://{} over {} backends (ports {:?}), logs in {:?}",
+            handle.addr(),
+            n,
+            ports,
+            log_dir
+        ),
+    );
+    Ok(FleetHandle {
+        addr: handle.addr(),
+        balancer: Some(handle),
+        supervisor,
+        backends,
+        shutdown,
+        prober: Some(prober),
+        monitor: Some(monitor),
+        roller: Some(roller),
+        log_dir,
+    })
+}

@@ -1,0 +1,499 @@
+//! Process supervision: spawn, watch, restart, and roll the worker fleet.
+//!
+//! Each backend is a full `bear serve` **process** (shared-nothing: its
+//! own address space, snapshot, worker pool, and reload state), spawned
+//! from the same binary with `--addr 127.0.0.1:<port_i>`. The supervisor:
+//!
+//! - **respawns** any worker whose process exits (crash, OOM kill,
+//!   SIGKILL): the exit is detected by `try_wait`, the backend is ejected
+//!   from routing immediately, and a replacement is spawned on the same
+//!   port with the *latest* published snapshot (the manifest is
+//!   re-resolved at spawn time, so a restart is also a catch-up). A
+//!   worker that keeps dying right after spawn is paced with exponential
+//!   backoff instead of hot-loop forking;
+//! - **rolls** publications across the fleet one worker at a time: when
+//!   the watched `MANIFEST` advances, the supervisor POSTs
+//!   `/admin/reload` to each healthy backend **sequentially**, reusing
+//!   [`crate::online::Reloader`] semantics inside each worker (the worker
+//!   verifies CRCs and swaps zero-drop; an up-to-date worker answers
+//!   "already at generation N" and the call is a no-op). Workers are
+//!   spawned with their own manifest poller parked
+//!   (`--poll-ms` ≈ 1 h), so generations only ever roll through this
+//!   sequential path — at most one worker is mid-swap at any instant and
+//!   the fleet never loses serving capacity.
+//!
+//! Worker stdout/stderr land in `log_dir/worker-<i>.log` (appended across
+//! restarts) — the fault-injection CI job uploads these on failure.
+
+use crate::fleet::health::{self, BackendState};
+use crate::online::publisher::{Manifest, MANIFEST_FILE};
+use crate::util::logger::{log, Level};
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// How each worker process is launched.
+#[derive(Clone, Debug)]
+pub struct WorkerSpec {
+    /// The `bear` binary to exec (`current_exe` for `bear fleet`; the
+    /// test harness points it at `CARGO_BIN_EXE_bear`).
+    pub bin: PathBuf,
+    /// Snapshot to serve when no manifest (or no publication yet).
+    pub model: Option<PathBuf>,
+    /// Publication MANIFEST; enables rolling reload and restart catch-up.
+    pub watch_manifest: Option<PathBuf>,
+    /// `--workers` per backend process.
+    pub serve_workers: usize,
+    /// Directory for per-worker log files.
+    pub log_dir: PathBuf,
+    /// Deadline for control-plane calls (`/admin/reload`).
+    pub admin_timeout: Duration,
+}
+
+/// One backend's process slot: the live child plus the crash-loop
+/// bookkeeping that paces respawns.
+struct WorkerSlot {
+    child: Option<Child>,
+    /// When the current/last child was spawned.
+    spawned_at: Instant,
+    /// Consecutive exits within [`CRASH_WINDOW`] of their spawn.
+    crash_streak: u32,
+    /// Earliest instant the next respawn may happen (exponential backoff
+    /// while crash-looping, immediate after a long-lived child dies).
+    next_spawn_at: Instant,
+    /// Consecutive failed `/admin/reload` calls for the current roll.
+    reload_fail_streak: u32,
+    /// Earliest instant the next reload attempt may happen.
+    reload_retry_at: Instant,
+}
+
+/// A child that dies sooner than this after spawn counts as a crash
+/// loop (bad snapshot, port conflict) rather than a one-off failure.
+const CRASH_WINDOW: Duration = Duration::from_secs(1);
+const BACKOFF_BASE: Duration = Duration::from_millis(200);
+const BACKOFF_MAX: Duration = Duration::from_secs(5);
+
+fn crash_backoff(streak: u32) -> Duration {
+    if streak == 0 {
+        return Duration::ZERO;
+    }
+    BACKOFF_BASE.saturating_mul(1u32 << streak.min(5).saturating_sub(1)).min(BACKOFF_MAX)
+}
+
+/// Owns the worker processes. Shared between the monitor thread and the
+/// fleet handle (kill/pid accessors for fault-injection tests).
+pub struct Supervisor {
+    spec: WorkerSpec,
+    backends: Arc<Vec<Arc<BackendState>>>,
+    children: Mutex<Vec<WorkerSlot>>,
+    /// Latest manifest generation the fleet is rolling toward.
+    target_generation: Arc<AtomicU64>,
+}
+
+/// Resolve the snapshot a (re)spawned worker should load: the manifest's
+/// current publication when available, else the configured model.
+fn resolve_model(spec: &WorkerSpec) -> Result<PathBuf> {
+    if let Some(manifest_path) = &spec.watch_manifest {
+        if manifest_path.exists() {
+            let manifest = Manifest::read(manifest_path)?;
+            let snap = manifest.snapshot_path(manifest_path);
+            if snap.exists() {
+                return Ok(snap);
+            }
+        }
+    }
+    match &spec.model {
+        Some(m) => Ok(m.clone()),
+        None => bail!(
+            "no snapshot to serve: pass --model, or --watch-manifest pointing at a {} with \
+             at least one publication",
+            MANIFEST_FILE
+        ),
+    }
+}
+
+fn log_file(dir: &Path, index: usize) -> Result<std::fs::File> {
+    std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(dir.join(format!("worker-{index}.log")))
+        .with_context(|| format!("opening worker log in {dir:?}"))
+}
+
+/// The `starttime` field of `/proc/<pid>/stat` — identifies a process
+/// beyond its reusable pid. `None` when the process is gone (or no
+/// procfs). The comm field may contain spaces/parens, so fields are
+/// counted after the *last* `)`.
+fn proc_start_time(pid: u32) -> Option<u64> {
+    let stat = std::fs::read_to_string(format!("/proc/{pid}/stat")).ok()?;
+    let after_comm = &stat[stat.rfind(')')? + 1..];
+    // after the comm field, `starttime` is overall field 22 ⇒ index 19
+    after_comm.split_whitespace().nth(19)?.parse().ok()
+}
+
+/// Worker-side orphan guard: exit when the supervising process is gone.
+///
+/// A SIGKILL/SIGTERM to `bear fleet` cannot run its shutdown path, so
+/// workers would be reparented and keep serving (and keep their ports
+/// bound) forever. Each worker is spawned with `--parent-pid <fleet
+/// pid>`; this watchdog polls `/proc/<pid>` (std-only, Linux) and exits
+/// the worker once the supervisor disappears. The parent's procfs
+/// `starttime` is recorded at arm time and re-checked per poll, so a
+/// recycled pid cannot masquerade as a live supervisor. On systems
+/// without `/proc` the watchdog disarms instead of false-triggering.
+pub fn spawn_parent_watchdog(parent_pid: u32) {
+    std::thread::Builder::new()
+        .name("bear-parent-watchdog".into())
+        .spawn(move || {
+            if !Path::new("/proc/self").exists() {
+                log(
+                    Level::Warn,
+                    format_args!("no /proc: parent watchdog (pid {parent_pid}) disarmed"),
+                );
+                return;
+            }
+            // the supervisor is alive right now (it just spawned us), so
+            // a missing stat here means an unsupported procfs — disarm
+            let armed_start = match proc_start_time(parent_pid) {
+                Some(t) => t,
+                None => {
+                    log(
+                        Level::Warn,
+                        format_args!(
+                            "cannot read /proc/{parent_pid}/stat; parent watchdog disarmed"
+                        ),
+                    );
+                    return;
+                }
+            };
+            loop {
+                std::thread::sleep(Duration::from_millis(500));
+                if proc_start_time(parent_pid) != Some(armed_start) {
+                    log(
+                        Level::Warn,
+                        format_args!("supervisor pid {parent_pid} is gone; worker exiting"),
+                    );
+                    std::process::exit(0);
+                }
+            }
+        })
+        .expect("spawn parent watchdog thread");
+}
+
+impl Supervisor {
+    pub fn new(
+        spec: WorkerSpec,
+        backends: Arc<Vec<Arc<BackendState>>>,
+        target_generation: Arc<AtomicU64>,
+    ) -> Result<Self> {
+        std::fs::create_dir_all(&spec.log_dir)
+            .with_context(|| format!("creating fleet log dir {:?}", spec.log_dir))?;
+        let now = Instant::now();
+        let children: Vec<WorkerSlot> = (0..backends.len())
+            .map(|_| WorkerSlot {
+                child: None,
+                spawned_at: now,
+                crash_streak: 0,
+                next_spawn_at: now,
+                reload_fail_streak: 0,
+                reload_retry_at: now,
+            })
+            .collect();
+        Ok(Self { spec, backends, children: Mutex::new(children), target_generation })
+    }
+
+    /// Spawn one worker process on its backend's port.
+    fn spawn_worker(&self, index: usize) -> Result<Child> {
+        let model = resolve_model(&self.spec)?;
+        let addr = self.backends[index].addr;
+        let out = log_file(&self.spec.log_dir, index)?;
+        let err = out.try_clone().context("cloning worker log handle")?;
+        let mut cmd = Command::new(&self.spec.bin);
+        cmd.arg("serve")
+            .arg("--model")
+            .arg(&model)
+            .arg("--addr")
+            .arg(addr.to_string())
+            .arg("--workers")
+            .arg(self.spec.serve_workers.max(1).to_string())
+            // orphan guard: the worker exits if this supervisor dies
+            // without running its shutdown path (SIGKILL, SIGTERM)
+            .arg("--parent-pid")
+            .arg(std::process::id().to_string());
+        if let Some(m) = &self.spec.watch_manifest {
+            // reload machinery on, own poller parked: the supervisor
+            // sequences generation rolls via POST /admin/reload
+            cmd.arg("--watch-manifest").arg(m).arg("--poll-ms").arg("3600000");
+        }
+        cmd.stdin(Stdio::null()).stdout(Stdio::from(out)).stderr(Stdio::from(err));
+        let child = cmd
+            .spawn()
+            .with_context(|| format!("spawning worker {index} ({:?} serve)", self.spec.bin))?;
+        log(
+            Level::Info,
+            format_args!(
+                "fleet worker {index} up: pid {} on {addr} serving {model:?}",
+                child.id()
+            ),
+        );
+        Ok(child)
+    }
+
+    /// Launch the initial fleet.
+    pub fn spawn_all(&self) -> Result<()> {
+        let mut children = self.children.lock().expect("supervisor children poisoned");
+        for i in 0..self.backends.len() {
+            let child = self.spawn_worker(i)?;
+            children[i].spawned_at = Instant::now();
+            children[i].child = Some(child);
+        }
+        Ok(())
+    }
+
+    /// The live process id of backend `i` (None while it is being
+    /// respawned).
+    pub fn pid(&self, index: usize) -> Option<u32> {
+        let children = self.children.lock().ok()?;
+        children.get(index)?.child.as_ref().map(|c| c.id())
+    }
+
+    /// SIGKILL backend `i`'s process (fault injection / shutdown path).
+    /// The monitor tick reaps and respawns it.
+    pub fn kill_backend(&self, index: usize) -> Result<()> {
+        let mut children = self.children.lock().expect("supervisor children poisoned");
+        match children.get_mut(index).and_then(|s| s.child.as_mut()) {
+            Some(child) => {
+                child.kill().with_context(|| format!("killing worker {index}"))?;
+                Ok(())
+            }
+            None => bail!("backend {index} has no live process"),
+        }
+    }
+
+    /// One supervision pass: reap dead workers and respawn them, pacing a
+    /// crash-looping worker (one that keeps dying within [`CRASH_WINDOW`]
+    /// of its spawn — corrupt snapshot, port conflict) with exponential
+    /// backoff up to [`BACKOFF_MAX`] instead of hot-looping forks every
+    /// monitor tick. A worker that died after running normally respawns
+    /// immediately.
+    pub fn respawn_dead(&self) {
+        let mut children = self.children.lock().expect("supervisor children poisoned");
+        for i in 0..self.backends.len() {
+            let slot = &mut children[i];
+            let exited = match &mut slot.child {
+                Some(child) => match child.try_wait() {
+                    Ok(Some(status)) => {
+                        log(
+                            Level::Warn,
+                            format_args!(
+                                "fleet worker {i} (pid {}) exited ({status}); restarting",
+                                child.id()
+                            ),
+                        );
+                        true
+                    }
+                    Ok(None) => false,
+                    Err(_) => true,
+                },
+                None => false,
+            };
+            if exited {
+                // out of rotation immediately; probes re-admit the
+                // replacement
+                self.backends[i].eject_now();
+                // the replacement resolves the manifest at spawn, but we
+                // don't know which generation it lands on — clear the ack
+                // so the next rolling pass re-confirms it (idempotent)
+                self.backends[i].acked_generation.store(0, Ordering::Relaxed);
+                slot.child = None;
+                if slot.spawned_at.elapsed() < CRASH_WINDOW {
+                    slot.crash_streak += 1;
+                } else {
+                    slot.crash_streak = 0;
+                }
+                let backoff = crash_backoff(slot.crash_streak);
+                slot.next_spawn_at = Instant::now() + backoff;
+                if !backoff.is_zero() {
+                    log(
+                        Level::Warn,
+                        format_args!(
+                            "fleet worker {i} is crash-looping (streak {}); next respawn in {backoff:?}",
+                            slot.crash_streak
+                        ),
+                    );
+                }
+            }
+            if slot.child.is_some() || Instant::now() < slot.next_spawn_at {
+                continue;
+            }
+            match self.spawn_worker(i) {
+                Ok(child) => {
+                    self.backends[i].restarts.fetch_add(1, Ordering::Relaxed);
+                    slot.spawned_at = Instant::now();
+                    slot.child = Some(child);
+                }
+                Err(e) => {
+                    // spawn failures (unreadable manifest mid-publish,
+                    // fork limits) also back off
+                    slot.crash_streak += 1;
+                    slot.next_spawn_at = Instant::now() + crash_backoff(slot.crash_streak);
+                    log(
+                        Level::Error,
+                        format_args!("fleet worker {i} respawn failed (will retry): {e:#}"),
+                    );
+                }
+            }
+        }
+    }
+
+    /// One rolling-reload pass: if the manifest advanced, walk the
+    /// backends **in order** and ask each healthy, lagging one to reload.
+    /// The worker's own `Reloader` gates the swap (`already at generation
+    /// N` when current), so a reload call is idempotent; each backend's
+    /// `acked_generation` records the last confirmed roll, making the
+    /// steady-state pass free (no control-plane traffic until the
+    /// manifest moves again). A backend that was down during a roll still
+    /// lags its ack, so it catches up on the first pass after re-admission
+    /// — or at respawn, which re-resolves the manifest.
+    pub fn roll_generations(&self) {
+        let manifest_path = match &self.spec.watch_manifest {
+            Some(p) => p,
+            None => return,
+        };
+        let generation = match crate::online::peek_generation(manifest_path) {
+            Some(g) => g,
+            // nothing published yet (or mid-write); the next pass retries
+            None => return,
+        };
+        let previous = self.target_generation.swap(generation, Ordering::Relaxed);
+        if generation > previous {
+            log(
+                Level::Info,
+                format_args!(
+                    "fleet rolling from generation {previous} to {generation} (one worker at a time)"
+                ),
+            );
+        }
+        for (i, b) in self.backends.iter().enumerate() {
+            if !b.healthy() || b.acked_generation.load(Ordering::Relaxed) >= generation {
+                continue;
+            }
+            // retry pacing: a worker whose reload keeps failing (e.g. its
+            // copy of the snapshot is corrupt → 500) is re-asked with
+            // backoff, not hammered every pass. Lock held only around the
+            // bookkeeping, never across the HTTP call.
+            {
+                let children = self.children.lock().expect("supervisor children poisoned");
+                if Instant::now() < children[i].reload_retry_at {
+                    continue;
+                }
+            }
+            let outcome =
+                health::roundtrip(&b.addr, self.spec.admin_timeout, "POST", "/admin/reload");
+            let mut children = self.children.lock().expect("supervisor children poisoned");
+            match outcome {
+                Ok(resp) if resp.status == 200 => {
+                    let body = String::from_utf8_lossy(&resp.body);
+                    if body.contains("reloaded generation") {
+                        let line = body.lines().next().unwrap_or("");
+                        log(Level::Info, format_args!("fleet worker {} {line}", b.index));
+                    }
+                    b.acked_generation.store(generation, Ordering::Relaxed);
+                    children[i].reload_fail_streak = 0;
+                }
+                // non-200 (worker-side reload error) or transport failure:
+                // leave the ack lagging, back off, and make the FIRST
+                // failure of a streak loud so a stuck roll is visible
+                other => {
+                    children[i].reload_fail_streak += 1;
+                    let streak = children[i].reload_fail_streak;
+                    children[i].reload_retry_at = Instant::now() + crash_backoff(streak);
+                    let level = if streak == 1 { Level::Warn } else { Level::Debug };
+                    match other {
+                        Ok(resp) => log(
+                            level,
+                            format_args!(
+                                "fleet worker {} refused reload to generation {generation} (HTTP {}): {}",
+                                b.index,
+                                resp.status,
+                                String::from_utf8_lossy(&resp.body).trim_end(),
+                            ),
+                        ),
+                        Err(e) => log(
+                            level,
+                            format_args!("fleet worker {} reload call failed: {e}", b.index),
+                        ),
+                    }
+                }
+            }
+        }
+    }
+
+    /// Kill and reap every worker (fleet shutdown).
+    pub fn shutdown_children(&self) {
+        let mut children = self.children.lock().expect("supervisor children poisoned");
+        for slot in children.iter_mut() {
+            if let Some(mut child) = slot.child.take() {
+                let _ = child.kill();
+                let _ = child.wait();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crash_backoff_is_zero_then_doubles_then_saturates() {
+        assert_eq!(crash_backoff(0), Duration::ZERO);
+        assert_eq!(crash_backoff(1), Duration::from_millis(200));
+        assert_eq!(crash_backoff(2), Duration::from_millis(400));
+        assert_eq!(crash_backoff(3), Duration::from_millis(800));
+        // the streak contribution saturates; the cap bounds it
+        assert_eq!(crash_backoff(100), crash_backoff(5));
+        assert!(crash_backoff(100) <= BACKOFF_MAX);
+    }
+
+    #[test]
+    fn resolve_model_prefers_manifest_then_falls_back() {
+        let dir = std::env::temp_dir().join(format!("bear-fleet-resolve-{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        let manifest_path = dir.join(MANIFEST_FILE);
+        let fallback = dir.join("fallback.bearsnap");
+        let spec = |manifest: Option<PathBuf>, model: Option<PathBuf>| WorkerSpec {
+            bin: PathBuf::from("bear"),
+            model,
+            watch_manifest: manifest,
+            serve_workers: 1,
+            log_dir: dir.clone(),
+            admin_timeout: Duration::from_millis(100),
+        };
+
+        // no manifest on disk → fallback model
+        let s = spec(Some(manifest_path.clone()), Some(fallback.clone()));
+        assert_eq!(resolve_model(&s).unwrap(), fallback);
+
+        // manifest pointing at an existing snapshot wins
+        let snap = dir.join("gen-00000007.bearsnap");
+        std::fs::write(&snap, b"x").unwrap();
+        Manifest { generation: 7, file: "gen-00000007.bearsnap".into(), crc32: 0 }
+            .write(&manifest_path)
+            .unwrap();
+        assert_eq!(resolve_model(&s).unwrap(), snap);
+
+        // manifest naming a pruned/missing snapshot → fallback again
+        std::fs::remove_file(&snap).unwrap();
+        assert_eq!(resolve_model(&s).unwrap(), fallback);
+
+        // neither → error
+        let s = spec(None, None);
+        assert!(resolve_model(&s).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

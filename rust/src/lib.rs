@@ -34,6 +34,11 @@
 //!   [`online::Reloader`]/[`online::ModelHolder`] epoch swap, and the
 //!   per-publication drift monitor (`bear online` / `bear serve
 //!   --watch-manifest`)
+//! - horizontal scale: [`fleet`] — a shared-nothing multi-process
+//!   serving tier: a supervisor spawning N `bear serve` worker processes
+//!   (respawn on crash, rolling reload one worker at a time) behind a
+//!   power-of-two-choices balancer with health-probe eject/re-admit and
+//!   bounded zero-drop retries (`bear fleet`)
 //!
 //! ## Quickstart
 //! ```no_run
@@ -53,6 +58,7 @@ pub mod bench_util;
 pub mod cli;
 pub mod coordinator;
 pub mod data;
+pub mod fleet;
 pub mod hash;
 pub mod loss;
 pub mod metrics;

@@ -9,6 +9,8 @@
 //!   online      continuous train + publish generation-numbered snapshots
 //!   serve       serve a snapshot over HTTP (predict/topk/healthz/statz),
 //!               hot-reloading publications with --watch-manifest
+//!   fleet       N shared-nothing serve processes behind a balancer
+//!               (power-of-two-choices, health probes, rolling reload)
 //!   loadgen     closed-loop load test against a running server
 //!   help        this text
 //!
@@ -22,6 +24,8 @@
 //!   bear export --dataset dna --algo bear --cf 330 --out dna.bearsnap
 //!   bear online --dataset rcv1 --dir online-rcv1 --publish-every 256
 //!   bear serve --model rcv1.bearsnap --addr 127.0.0.1:8370 --workers 8 \
+//!       --watch-manifest online-rcv1/MANIFEST
+//!   bear fleet --backends 3 --addr 127.0.0.1:8360 \
 //!       --watch-manifest online-rcv1/MANIFEST
 //!   bear loadgen --addr 127.0.0.1:8370 --dataset rcv1 --threads 4 \
 //!       --max-error-rate 0
@@ -279,6 +283,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
         poll_interval: std::time::Duration::from_millis(args.parse_or("poll-ms", 250u64)?),
         ..defaults
     };
+    // fleet workers are spawned with --parent-pid: exit if the
+    // supervising `bear fleet` process disappears without cleanup
+    if let Some(pid) = args.get("parent-pid") {
+        bear::fleet::spawn_parent_watchdog(pid.parse()?);
+    }
     let workers = cfg.workers;
     let watching = cfg.watch_manifest.clone();
     let handle = bear::serve::serve(model.clone(), cfg)?;
@@ -302,6 +311,58 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     eprintln!(
         "[bear] endpoints: POST /predict · GET /topk?k=N[&class=C] · GET /healthz · GET /statz · POST /admin/reload"
+    );
+    handle.join_forever();
+    Ok(())
+}
+
+fn cmd_fleet(args: &Args) -> Result<()> {
+    let defaults = bear::fleet::FleetConfig::default();
+    let mut probe = defaults.probe.clone();
+    let probe_ms: u64 = args.parse_or("probe-ms", probe.interval.as_millis() as u64)?;
+    probe.interval = std::time::Duration::from_millis(probe_ms);
+    let mut balancer = defaults.balancer.clone();
+    balancer.workers = args.parse_or("balancer-workers", balancer.workers)?;
+    balancer.max_attempts = args.parse_or("max-attempts", balancer.max_attempts)?;
+    let cfg = bear::fleet::FleetConfig {
+        addr: args.str_or("addr", &defaults.addr),
+        backends: args.parse_or("backends", defaults.backends)?,
+        base_port: args.parse_or("base-port", defaults.base_port)?,
+        model: args.get("model").map(std::path::PathBuf::from),
+        watch_manifest: args.get("watch-manifest").map(std::path::PathBuf::from),
+        worker_bin: None, // workers run this same binary
+        serve_workers: args.parse_or("serve-workers", defaults.serve_workers)?,
+        log_dir: args.get("log-dir").map(std::path::PathBuf::from),
+        probe,
+        monitor_interval: std::time::Duration::from_millis(args.parse_or("monitor-ms", 100u64)?),
+        balancer,
+    };
+    if cfg.model.is_none() && cfg.watch_manifest.is_none() {
+        bail!("bear fleet needs --model SNAPSHOT and/or --watch-manifest DIR/MANIFEST");
+    }
+    let backends = cfg.backends;
+    let watching = cfg.watch_manifest.clone();
+    let handle = bear::fleet::start_fleet(cfg)?;
+    eprintln!(
+        "[bear] fleet: balancer on http://{} over {backends} shared-nothing workers (ports {}), logs in {}",
+        handle.addr(),
+        handle
+            .backend_addrs()
+            .iter()
+            .map(|a| a.port().to_string())
+            .collect::<Vec<_>>()
+            .join(","),
+        handle.log_dir().display(),
+    );
+    match watching {
+        Some(m) => eprintln!(
+            "[bear] rolling reload armed: watching {} (one worker at a time)",
+            m.display()
+        ),
+        None => eprintln!("[bear] rolling reload off (pass --watch-manifest DIR/MANIFEST)"),
+    }
+    eprintln!(
+        "[bear] endpoints: POST /predict · GET /topk?k=N[&class=C] · GET /healthz · GET /statz (aggregated)"
     );
     handle.join_forever();
     Ok(())
@@ -373,6 +434,13 @@ commands:
               --model FILE [--addr H:P] [--workers N] [--queue-depth N]
               [--max-batch Q] [--batch-wait-us U]
               [--watch-manifest DIR/MANIFEST] [--poll-ms MS]
+              [--parent-pid P]   (exit when process P dies; set by fleet)
+  fleet       shared-nothing multi-process serving tier behind a balancer
+              --model FILE | --watch-manifest DIR/MANIFEST
+              [--backends N] [--addr H:P] [--base-port P]
+              [--serve-workers N] [--balancer-workers N]
+              [--max-attempts N] [--probe-ms MS] [--monitor-ms MS]
+              [--log-dir DIR]
   loadgen     closed-loop load test against a running server
               --addr H:P [--dataset D] [--threads N] [--requests N]
               [--queries Q] [--max-error-rate R]   (exits non-zero above R)
@@ -392,6 +460,7 @@ fn main() -> Result<()> {
         "export" => cmd_export(&args),
         "online" => cmd_online(&args),
         "serve" => cmd_serve(&args),
+        "fleet" => cmd_fleet(&args),
         "loadgen" => cmd_loadgen(&args),
         "" | "help" => {
             print!("{HELP}");

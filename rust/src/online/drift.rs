@@ -39,7 +39,9 @@ impl DriftStats {
 }
 
 /// Jaccard similarity |A∩B| / |A∪B| of two id sets. Two empty sets are
-/// identical (1.0).
+/// identical (1.0); the result is always defined (never NaN) and clamped
+/// to [0, 1] — alert rules and `/statz` consumers may divide by it or
+/// threshold it without guarding.
 pub fn topk_jaccard(a: &[u64], b: &[u64]) -> f64 {
     if a.is_empty() && b.is_empty() {
         return 1.0;
@@ -48,14 +50,24 @@ pub fn topk_jaccard(a: &[u64], b: &[u64]) -> f64 {
     let sb: HashSet<u64> = b.iter().copied().collect();
     let inter = sa.intersection(&sb).count();
     let union = sa.len() + sb.len() - inter;
-    inter as f64 / union as f64
+    if union == 0 {
+        // unreachable given the emptiness guard above, but keep 0/0 from
+        // ever minting a NaN if the guard moves
+        return 1.0;
+    }
+    (inter as f64 / union as f64).clamp(0.0, 1.0)
 }
 
-/// Compute the drift signals between two snapshots (old → new).
+/// Compute the drift signals between two snapshots (old → new). The
+/// Jaccard is always in [0, 1]; the norm delta is always ≥ 0, never NaN.
+/// A non-finite difference (a numerically exploded publication) clamps
+/// to `f64::MAX` — maximal drift, so alerts thresholding the gauge fire
+/// instead of being silenced at exactly the wrong moment.
 pub fn drift_between(prev: &ServableModel, next: &ServableModel) -> DriftStats {
+    let delta = (next.coord_norm() - prev.coord_norm()).abs();
     DriftStats {
         topk_jaccard: topk_jaccard(&prev.selected_ids(), &next.selected_ids()),
-        coord_norm_delta: (next.coord_norm() - prev.coord_norm()).abs(),
+        coord_norm_delta: if delta.is_finite() { delta } else { f64::MAX },
     }
 }
 
@@ -104,5 +116,87 @@ mod tests {
         assert!(d.topk_jaccard < 1.0, "{d:?}");
         assert!(d.topk_jaccard > 0.0, "{d:?}"); // feature 3 is shared
         assert!(d.coord_norm_delta > 0.0, "{d:?}");
+    }
+
+    /// A snapshot whose top-k table is empty (a fresh selector that never
+    /// refreshed its heap — e.g. generation 1 published before any
+    /// minibatch landed).
+    fn empty_topk_model() -> ServableModel {
+        let st = SketchedState::new(2048, 3, 8, 5);
+        ServableModel::from_sketched(&st, LossKind::Logistic, 0.0)
+    }
+
+    fn assert_defined(d: &DriftStats) {
+        assert!(!d.topk_jaccard.is_nan(), "{d:?}");
+        assert!((0.0..=1.0).contains(&d.topk_jaccard), "{d:?}");
+        assert!(!d.coord_norm_delta.is_nan(), "{d:?}");
+        assert!(d.coord_norm_delta >= 0.0, "{d:?}");
+    }
+
+    #[test]
+    fn empty_topk_snapshots_yield_defined_drift() {
+        let empty = empty_topk_model();
+        assert!(empty.selected_ids().is_empty());
+        // empty vs empty: identical supports, zero mass moved
+        let d = drift_between(&empty, &empty.clone());
+        assert_defined(&d);
+        assert_eq!(d.topk_jaccard, 1.0);
+        assert_eq!(d.coord_norm_delta, 0.0);
+        // empty vs populated (both directions): fully-churned support,
+        // still no NaN, still in range
+        let full = model_from_steps(&[(3, -1.0), (9, -2.0)]);
+        let d = drift_between(&empty, &full);
+        assert_defined(&d);
+        assert_eq!(d.topk_jaccard, 0.0);
+        assert!(d.coord_norm_delta > 0.0, "{d:?}");
+        let d = drift_between(&full, &empty);
+        assert_defined(&d);
+        assert_eq!(d.topk_jaccard, 0.0);
+    }
+
+    #[test]
+    fn fully_disjoint_topk_is_zero_not_nan() {
+        let a = model_from_steps(&[(1, -1.0), (2, -2.0), (3, -3.0)]);
+        let b = model_from_steps(&[(70, -1.0), (80, -2.0), (90, -3.0)]);
+        let d = drift_between(&a, &b);
+        assert_defined(&d);
+        assert_eq!(d.topk_jaccard, 0.0);
+    }
+
+    #[test]
+    fn single_class_snapshots_drift_is_defined_and_clamped() {
+        // binary (single-table) snapshots are the common publication; the
+        // gauges they feed must stay in range whatever the weights do
+        let a = model_from_steps(&[(5, -1.5)]);
+        let b = model_from_steps(&[(5, -1.5)]);
+        assert_eq!(a.num_classes(), 1);
+        let d = drift_between(&a, &b);
+        assert_defined(&d);
+        assert_eq!(d.topk_jaccard, 1.0);
+        assert!(d.coord_norm_delta < 1e-9, "{d:?}");
+        // and against an empty single-class snapshot
+        let d = drift_between(&a, &empty_topk_model());
+        assert_defined(&d);
+    }
+
+    #[test]
+    fn non_finite_norms_clamp_to_max_drift_not_nan() {
+        // a numerically exploded publication must read as MAXIMAL drift
+        // (alerts fire), never as NaN or silent zero
+        let a = model_from_steps(&[(3, -1.0)]);
+        let b = model_from_steps(&[(3, f32::INFINITY)]);
+        let d = drift_between(&a, &b);
+        assert!(!d.coord_norm_delta.is_nan(), "{d:?}");
+        assert_eq!(d.coord_norm_delta, f64::MAX);
+        assert!((0.0..=1.0).contains(&d.topk_jaccard), "{d:?}");
+    }
+
+    #[test]
+    fn jaccard_is_clamped_against_duplicate_ids() {
+        // duplicate ids collapse into the sets — the ratio still lands in
+        // [0, 1] and stays defined
+        let d = topk_jaccard(&[1, 1, 1, 2], &[2, 2, 1]);
+        assert!((0.0..=1.0).contains(&d));
+        assert_eq!(d, 1.0); // both collapse to {1, 2}
     }
 }

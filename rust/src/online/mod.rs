@@ -36,7 +36,7 @@ pub mod reload;
 
 pub use drift::{drift_between, topk_jaccard, DriftStats};
 pub use publisher::{Manifest, Publication, Publisher, MANIFEST_FILE};
-pub use reload::{CachedModel, ModelHolder, ReloadOutcome, ReloadStats, Reloader};
+pub use reload::{peek_generation, CachedModel, ModelHolder, ReloadOutcome, ReloadStats, Reloader};
 
 use crate::coordinator::experiments::{
     make_sketched_selector, train_setup, AlgoKind, RealData, RealSpec,

@@ -16,6 +16,13 @@
 //! CRC), computes drift vs. the serving model, and only then swaps. A
 //! failed reload leaves the serving model untouched and counts a failure
 //! — a half-written or corrupt publication can never take down the tier.
+//!
+//! The swap is driven three ways, all funneling through the same gate:
+//! the in-process poller thread (`bear serve --watch-manifest`), a manual
+//! `POST /admin/reload`, and the fleet supervisor
+//! ([`crate::fleet::supervisor`]), which parks each worker's poller and
+//! calls the admin endpoint worker-by-worker so a publication rolls
+//! across the fleet without ever dropping capacity.
 
 use crate::coordinator::checkpoint::crc32;
 use crate::online::drift::{drift_between, DriftStats};
@@ -23,9 +30,17 @@ use crate::online::publisher::Manifest;
 use crate::serve::metrics::AtomicF64;
 use crate::serve::ServableModel;
 use anyhow::{bail, Context, Result};
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
+
+/// The generation a manifest currently points at, or `None` when nothing
+/// readable is published. The cheap "is there anything newer?" check used
+/// by pollers that don't want a full verify-and-decode (e.g. the fleet
+/// supervisor deciding whether to start a rolling reload).
+pub fn peek_generation(manifest_path: &Path) -> Option<u64> {
+    Manifest::read(manifest_path).ok().map(|m| m.generation)
+}
 
 /// Epoch-swap holder for the serving snapshot.
 pub struct ModelHolder {

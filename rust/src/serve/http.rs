@@ -1,0 +1,292 @@
+//! Shared HTTP/1.1 wire primitives: the request parser and response
+//! reader/writer used by the model server ([`crate::serve::server`]), the
+//! load-generator client ([`crate::serve::loadgen`]), and the fleet
+//! balancer ([`crate::fleet::balancer`]). One hand-rolled parser, three
+//! consumers — the balancer speaks byte-identical HTTP to the workers
+//! because it literally shares their code.
+//!
+//! Everything is generic over [`BufRead`]/[`Write`], so the same parser
+//! runs against live `TcpStream`s and in-memory byte buffers
+//! (`tests/prop_http.rs` feeds it adversarial bytes through a `Cursor`).
+//!
+//! Hard limits — a malformed or malicious peer can never balloon memory:
+//! - [`MAX_LINE`] bytes per request/status/header line (a newline-free
+//!   stream errors instead of growing a buffer unboundedly),
+//! - [`MAX_HEADERS`] header lines,
+//! - [`MAX_BODY`] bytes of declared `Content-Length` (larger ⇒ `413`).
+//!
+//! Parse failures are typed ([`ReadError`]): transport errors close the
+//! connection silently; protocol errors carry the status (`400` or `413`)
+//! the server should answer before closing. The parser reads **exactly**
+//! `Content-Length` body bytes — pipelined bytes after the body are left
+//! untouched for the next [`read_request`] call.
+
+use std::io::{BufRead, Read, Write};
+
+/// Declared `Content-Length` cap; larger requests are answered `413`.
+pub const MAX_BODY: usize = 16 * 1024 * 1024;
+/// Header-line count cap.
+pub const MAX_HEADERS: usize = 128;
+/// Single-line byte cap (request line, status line, each header).
+pub const MAX_LINE: usize = 8 * 1024;
+
+/// One parsed HTTP/1.x request.
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    /// Raw query string (the part after `?`), if any.
+    pub query: Option<String>,
+    pub body: Vec<u8>,
+    pub keep_alive: bool,
+}
+
+impl Request {
+    /// `path?query` as it appeared on the request line (what a proxy
+    /// forwards).
+    pub fn target(&self) -> String {
+        match &self.query {
+            Some(q) => format!("{}?{q}", self.path),
+            None => self.path.clone(),
+        }
+    }
+}
+
+/// One parsed HTTP/1.x response (client side).
+pub struct Response {
+    pub status: u16,
+    pub body: Vec<u8>,
+    /// Whether the sender will keep the connection open.
+    pub keep_alive: bool,
+}
+
+/// Why a read failed.
+#[derive(Debug)]
+pub enum ReadError {
+    /// Transport-level failure (timeout, reset, EOF mid-message): close
+    /// the connection without attempting a response.
+    Io(std::io::Error),
+    /// Protocol violation: answer `status` (400 or 413), then close.
+    Bad { status: u16, msg: String },
+}
+
+impl ReadError {
+    fn bad(msg: impl Into<String>) -> Self {
+        ReadError::Bad { status: 400, msg: msg.into() }
+    }
+
+    fn too_large(msg: impl Into<String>) -> Self {
+        ReadError::Bad { status: 413, msg: msg.into() }
+    }
+
+    fn eof(what: &str) -> Self {
+        ReadError::Io(std::io::Error::new(std::io::ErrorKind::UnexpectedEof, what.to_string()))
+    }
+}
+
+impl std::fmt::Display for ReadError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ReadError::Io(e) => write!(f, "http io: {e}"),
+            ReadError::Bad { status, msg } => write!(f, "http {status}: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ReadError {}
+
+impl From<std::io::Error> for ReadError {
+    fn from(e: std::io::Error) -> Self {
+        ReadError::Io(e)
+    }
+}
+
+/// Canonical reason phrase for the status codes this codebase emits.
+pub fn reason_for(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        413 => "Payload Too Large",
+        500 => "Internal Server Error",
+        502 => "Bad Gateway",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+/// `read_line` with a hard cap: a newline-free byte stream must not grow
+/// the buffer unboundedly (it would bypass [`MAX_BODY`] and OOM the
+/// server). Returns bytes consumed (0 ⇒ EOF); errors when the cap is
+/// exceeded.
+fn read_line_bounded<R: BufRead>(
+    r: &mut R,
+    out: &mut String,
+    max: usize,
+) -> Result<usize, ReadError> {
+    let mut total = 0usize;
+    loop {
+        let (done, used) = {
+            let available = r.fill_buf()?;
+            if available.is_empty() {
+                return Ok(total); // EOF
+            }
+            match available.iter().position(|&b| b == b'\n') {
+                Some(i) => {
+                    out.push_str(&String::from_utf8_lossy(&available[..=i]));
+                    (true, i + 1)
+                }
+                None => {
+                    out.push_str(&String::from_utf8_lossy(available));
+                    (false, available.len())
+                }
+            }
+        };
+        r.consume(used);
+        total += used;
+        if total > max {
+            return Err(ReadError::bad(format!("line exceeds {max} bytes")));
+        }
+        if done {
+            return Ok(total);
+        }
+    }
+}
+
+/// Read headers: `Content-Length` and `Connection` are interpreted, the
+/// rest are skipped. `keep_alive` is updated in place.
+fn read_headers<R: BufRead>(r: &mut R, keep_alive: &mut bool) -> Result<usize, ReadError> {
+    let mut content_len = 0usize;
+    let mut n_headers = 0usize;
+    loop {
+        let mut h = String::new();
+        if read_line_bounded(r, &mut h, MAX_LINE)? == 0 {
+            return Err(ReadError::eof("connection closed mid-headers"));
+        }
+        let h = h.trim_end();
+        if h.is_empty() {
+            return Ok(content_len);
+        }
+        n_headers += 1;
+        if n_headers > MAX_HEADERS {
+            return Err(ReadError::bad(format!("more than {MAX_HEADERS} headers")));
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            let k = k.trim().to_ascii_lowercase();
+            let v = v.trim();
+            if k == "content-length" {
+                content_len = v
+                    .parse()
+                    .map_err(|_| ReadError::bad(format!("bad content-length {v:?}")))?;
+            } else if k == "connection" {
+                let v = v.to_ascii_lowercase();
+                if v.contains("close") {
+                    *keep_alive = false;
+                } else if v.contains("keep-alive") {
+                    *keep_alive = true;
+                }
+            }
+        }
+    }
+}
+
+/// Read one HTTP/1.x request. `Ok(None)` means clean EOF before a request
+/// line (the client closed a keep-alive connection). Reads exactly
+/// `Content-Length` body bytes — never past them.
+pub fn read_request<R: BufRead>(r: &mut R) -> Result<Option<Request>, ReadError> {
+    let mut line = String::new();
+    if read_line_bounded(r, &mut line, MAX_LINE)? == 0 {
+        return Ok(None);
+    }
+    let trimmed = line.trim_end();
+    let mut parts = trimmed.split_whitespace();
+    let method = parts
+        .next()
+        .filter(|m| !m.is_empty())
+        .ok_or_else(|| ReadError::bad("empty request line"))?
+        .to_string();
+    let target = parts
+        .next()
+        .ok_or_else(|| ReadError::bad("request line missing target"))?
+        .to_string();
+    let version = parts.next().unwrap_or("HTTP/1.0");
+    let mut keep_alive = version == "HTTP/1.1";
+    let content_len = read_headers(r, &mut keep_alive)?;
+    if content_len > MAX_BODY {
+        return Err(ReadError::too_large(format!("body too large ({content_len} bytes)")));
+    }
+    let mut body = vec![0u8; content_len];
+    r.read_exact(&mut body)?;
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p.to_string(), Some(q.to_string())),
+        None => (target, None),
+    };
+    Ok(Some(Request { method, path, query, body, keep_alive }))
+}
+
+/// Read one HTTP/1.x response. `Ok(None)` means clean EOF before a status
+/// line (a keep-alive peer closed between exchanges — for a pooled proxy
+/// connection that is "stale, reconnect", not an error).
+pub fn read_response<R: BufRead>(r: &mut R) -> Result<Option<Response>, ReadError> {
+    let mut line = String::new();
+    if read_line_bounded(r, &mut line, MAX_LINE)? == 0 {
+        return Ok(None);
+    }
+    let mut parts = line.split_whitespace();
+    let version = parts.next().unwrap_or("HTTP/1.0");
+    let mut keep_alive = version == "HTTP/1.1";
+    let status: u16 = parts
+        .next()
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| ReadError::bad(format!("malformed status line {line:?}")))?;
+    let content_len = read_headers(r, &mut keep_alive)?;
+    if content_len > MAX_BODY {
+        return Err(ReadError::too_large(format!("response body too large ({content_len} bytes)")));
+    }
+    let mut body = vec![0u8; content_len];
+    r.read_exact(&mut body)?;
+    Ok(Some(Response { status, body, keep_alive }))
+}
+
+/// Write a complete `text/plain` response.
+pub fn write_response<W: Write>(
+    w: &mut W,
+    status: u16,
+    reason: &str,
+    body: &[u8],
+    keep: bool,
+) -> std::io::Result<()> {
+    let head = format!(
+        "HTTP/1.1 {status} {reason}\r\nContent-Length: {}\r\nContent-Type: text/plain; charset=utf-8\r\nConnection: {}\r\n\r\n",
+        body.len(),
+        if keep { "keep-alive" } else { "close" }
+    );
+    w.write_all(head.as_bytes())?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+/// Write a complete request with an optional body.
+pub fn write_request<W: Write>(
+    w: &mut W,
+    method: &str,
+    target: &str,
+    body: &[u8],
+    keep: bool,
+) -> std::io::Result<()> {
+    let head = format!(
+        "{method} {target} HTTP/1.1\r\nHost: bear\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
+        body.len(),
+        if keep { "keep-alive" } else { "close" }
+    );
+    w.write_all(head.as_bytes())?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+/// First value of `key` in a raw query string.
+pub fn query_param<'a>(query: Option<&'a str>, key: &str) -> Option<&'a str> {
+    query?.split('&').find_map(|kv| {
+        let (k, v) = kv.split_once('=')?;
+        (k == key).then_some(v)
+    })
+}

@@ -11,10 +11,11 @@
 
 use crate::coordinator::experiments::RealData;
 use crate::data::DataSource;
+use crate::serve::http;
 use crate::serve::metrics::{HistogramSnapshot, LatencyHistogram};
 use crate::sparse::SparseVec;
 use anyhow::{bail, Context, Result};
-use std::io::{BufRead, BufReader, Read, Write};
+use std::io::BufReader;
 use std::net::TcpStream;
 use std::time::{Duration, Instant};
 
@@ -38,43 +39,15 @@ impl HttpClient {
     /// Send a request and read the full response. Returns (status, body).
     fn roundtrip(&mut self, method: &str, path: &str, body: Option<&str>) -> Result<(u16, String)> {
         let body = body.unwrap_or("");
-        let req = format!(
-            "{method} {path} HTTP/1.1\r\nHost: bear\r\nContent-Length: {}\r\nConnection: keep-alive\r\n\r\n{body}",
-            body.len()
-        );
-        self.writer.write_all(req.as_bytes()).context("writing request")?;
-        self.writer.flush().ok();
-        // status line
-        let mut line = String::new();
-        if self.reader.read_line(&mut line)? == 0 {
-            bail!("server closed the connection");
+        http::write_request(&mut self.writer, method, path, body.as_bytes(), true)
+            .context("writing request")?;
+        match http::read_response(&mut self.reader) {
+            Ok(Some(resp)) => {
+                Ok((resp.status, String::from_utf8(resp.body).context("non-UTF8 response body")?))
+            }
+            Ok(None) => bail!("server closed the connection"),
+            Err(e) => Err(e).context("reading response"),
         }
-        let status: u16 = line
-            .split_whitespace()
-            .nth(1)
-            .with_context(|| format!("malformed status line {line:?}"))?
-            .parse()
-            .context("non-numeric status")?;
-        // headers
-        let mut content_len = 0usize;
-        loop {
-            let mut h = String::new();
-            if self.reader.read_line(&mut h)? == 0 {
-                bail!("connection closed mid-headers");
-            }
-            let h = h.trim_end();
-            if h.is_empty() {
-                break;
-            }
-            if let Some((k, v)) = h.split_once(':') {
-                if k.trim().eq_ignore_ascii_case("content-length") {
-                    content_len = v.trim().parse().context("bad content-length")?;
-                }
-            }
-        }
-        let mut buf = vec![0u8; content_len];
-        self.reader.read_exact(&mut buf).context("reading response body")?;
-        Ok((status, String::from_utf8(buf).context("non-UTF8 response body")?))
     }
 
     pub fn get(&mut self, path: &str) -> Result<(u16, String)> {

@@ -10,6 +10,10 @@
 //!   per class for multi-class models — + optional full Count Sketch
 //!   fallback), serialized in the "BEARSNAP" v2 format (a self-describing
 //!   sibling of checkpoint v2, with a publication `generation` header).
+//! - [`http`] — the shared HTTP/1.1 wire primitives (bounded request
+//!   parser with typed 400/413 errors, response reader/writer) used by
+//!   the server, the loadgen client, and the fleet balancer
+//!   ([`crate::fleet`]).
 //! - [`server`] — a multi-threaded HTTP/1.1 server on std TCP: worker
 //!   pool, bounded accept queue (503 backpressure), micro-batched
 //!   `POST /predict`, plus `/topk`, `/healthz`, `/statz`, and — when a
@@ -29,6 +33,7 @@
 //! are bit-identical to in-process `FeatureSelector::score`;
 //! `tests/integration_online.rs` asserts hot reloads drop zero requests.
 
+pub mod http;
 pub mod loadgen;
 pub mod metrics;
 pub mod server;

@@ -1,7 +1,8 @@
 //! A multi-threaded HTTP/1.1 model server on `std::net::TcpListener` —
 //! the std-thread sibling of `data/stream.rs`'s producer pipeline (tokio
-//! is not in the offline vendor set), with a hand-rolled request parser
-//! in the spirit of `cli/mod.rs`.
+//! is not in the offline vendor set). The wire format lives in
+//! [`crate::serve::http`], shared with the loadgen client and the fleet
+//! balancer.
 //!
 //! Architecture (all bounded, all joinable):
 //! ```text
@@ -45,11 +46,14 @@
 //! a swap.
 
 use crate::online::reload::{CachedModel, ModelHolder, ReloadOutcome, ReloadStats, Reloader};
+use crate::serve::http::{
+    query_param, read_request, reason_for, write_response, ReadError, Request,
+};
 use crate::serve::metrics::{merged_snapshot, HistogramSnapshot, LatencyHistogram};
 use crate::serve::snapshot::{Prediction, ServableModel};
 use crate::sparse::SparseVec;
-use anyhow::{bail, Context, Result};
-use std::io::{BufRead, BufReader, Read, Write};
+use anyhow::{Context, Result};
+use std::io::{BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -199,113 +203,6 @@ struct PredictJob {
 // request parsing
 // ---------------------------------------------------------------------------
 
-struct Request {
-    method: String,
-    path: String,
-    query: Option<String>,
-    body: Vec<u8>,
-    keep_alive: bool,
-}
-
-const MAX_BODY: usize = 16 * 1024 * 1024;
-const MAX_HEADERS: usize = 128;
-const MAX_LINE: usize = 8 * 1024;
-
-/// `read_line` with a hard cap: a newline-free byte stream must not grow
-/// the buffer unboundedly (it would bypass MAX_BODY and OOM the server).
-/// Returns bytes consumed (0 ⇒ EOF); errors when the cap is exceeded.
-fn read_line_bounded(r: &mut BufReader<TcpStream>, out: &mut String, max: usize) -> Result<usize> {
-    let mut total = 0usize;
-    loop {
-        let (done, used) = {
-            let available = r.fill_buf()?;
-            if available.is_empty() {
-                return Ok(total); // EOF
-            }
-            match available.iter().position(|&b| b == b'\n') {
-                Some(i) => {
-                    out.push_str(&String::from_utf8_lossy(&available[..=i]));
-                    (true, i + 1)
-                }
-                None => {
-                    out.push_str(&String::from_utf8_lossy(available));
-                    (false, available.len())
-                }
-            }
-        };
-        r.consume(used);
-        total += used;
-        if total > max {
-            bail!("line exceeds {max} bytes");
-        }
-        if done {
-            return Ok(total);
-        }
-    }
-}
-
-/// Read one HTTP/1.x request. `Ok(None)` means clean EOF before a request
-/// line (the client closed a keep-alive connection).
-fn read_request(r: &mut BufReader<TcpStream>) -> Result<Option<Request>> {
-    let mut line = String::new();
-    if read_line_bounded(r, &mut line, MAX_LINE)? == 0 {
-        return Ok(None);
-    }
-    let trimmed = line.trim_end();
-    let mut parts = trimmed.split_whitespace();
-    let method = parts.next().filter(|m| !m.is_empty()).context("empty request line")?.to_string();
-    let target = parts.next().context("request line missing target")?.to_string();
-    let version = parts.next().unwrap_or("HTTP/1.0");
-    let mut keep_alive = version == "HTTP/1.1";
-    let mut content_len = 0usize;
-    let mut n_headers = 0usize;
-    loop {
-        let mut h = String::new();
-        if read_line_bounded(r, &mut h, MAX_LINE)? == 0 {
-            bail!("connection closed mid-headers");
-        }
-        let h = h.trim_end();
-        if h.is_empty() {
-            break;
-        }
-        n_headers += 1;
-        if n_headers > MAX_HEADERS {
-            bail!("too many headers");
-        }
-        if let Some((k, v)) = h.split_once(':') {
-            let k = k.trim().to_ascii_lowercase();
-            let v = v.trim();
-            if k == "content-length" {
-                content_len = v.parse().context("bad content-length")?;
-            } else if k == "connection" {
-                let v = v.to_ascii_lowercase();
-                if v.contains("close") {
-                    keep_alive = false;
-                } else if v.contains("keep-alive") {
-                    keep_alive = true;
-                }
-            }
-        }
-    }
-    if content_len > MAX_BODY {
-        bail!("body too large ({content_len} bytes)");
-    }
-    let mut body = vec![0u8; content_len];
-    r.read_exact(&mut body).context("reading body")?;
-    let (path, query) = match target.split_once('?') {
-        Some((p, q)) => (p.to_string(), Some(q.to_string())),
-        None => (target, None),
-    };
-    Ok(Some(Request { method, path, query, body, keep_alive }))
-}
-
-fn query_param<'a>(query: Option<&'a str>, key: &str) -> Option<&'a str> {
-    query?.split('&').find_map(|kv| {
-        let (k, v) = kv.split_once('=')?;
-        (k == key).then_some(v)
-    })
-}
-
 /// Parse a predict body: one query per non-empty line, `idx:val` pairs
 /// separated by whitespace.
 fn parse_queries(body: &[u8]) -> Result<Vec<SparseVec>> {
@@ -344,23 +241,6 @@ fn format_predictions(preds: &[Prediction]) -> String {
         }
     }
     out
-}
-
-fn write_response(
-    w: &mut TcpStream,
-    status: u16,
-    reason: &str,
-    body: &[u8],
-    keep: bool,
-) -> std::io::Result<()> {
-    let head = format!(
-        "HTTP/1.1 {status} {reason}\r\nContent-Length: {}\r\nContent-Type: text/plain; charset=utf-8\r\nConnection: {}\r\n\r\n",
-        body.len(),
-        if keep { "keep-alive" } else { "close" }
-    );
-    w.write_all(head.as_bytes())?;
-    w.write_all(body)?;
-    w.flush()
 }
 
 // ---------------------------------------------------------------------------
@@ -614,14 +494,19 @@ fn handle_conn(
                 }
             }
             Ok(None) => break, // client closed
-            Err(e) => {
-                // parse failure on a live connection → 400 and close;
-                // read timeouts / resets just close
-                let msg = format!("{e:#}\n");
-                if !msg.contains("os error") {
-                    ctx.mon.counters.bad_requests.fetch_add(1, Ordering::Relaxed);
-                    let _ = write_response(&mut writer, 400, "Bad Request", msg.as_bytes(), false);
-                }
+            // read timeouts / resets / truncation just close
+            Err(ReadError::Io(_)) => break,
+            // protocol violation on a live connection → 400/413 and close
+            Err(ReadError::Bad { status, msg }) => {
+                ctx.mon.counters.bad_requests.fetch_add(1, Ordering::Relaxed);
+                let body = format!("{msg}\n");
+                let _ = write_response(
+                    &mut writer,
+                    status,
+                    reason_for(status),
+                    body.as_bytes(),
+                    false,
+                );
                 break;
             }
         }

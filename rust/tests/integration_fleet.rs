@@ -1,0 +1,326 @@
+//! Fault-injection acceptance test for `bear fleet`: a closed-loop load
+//! generator must see **zero** errors while
+//!
+//! 1. one backend worker process is SIGKILLed mid-run and the supervisor
+//!    respawns it (the balancer ejects it, retries its in-flight
+//!    forwards on the survivors, and the prober re-admits the
+//!    replacement), and
+//! 2. a rolling hot-reload crosses ≥ 2 published generations (the
+//!    supervisor walks the backends one at a time via `/admin/reload`).
+//!
+//! The aggregated `/statz` must show the eject + re-admit + restart and
+//! the per-backend generations converging on the latest publication.
+//!
+//! Worker logs land under `CARGO_TARGET_TMPDIR` so CI can upload them
+//! when this test fails.
+//!
+//! NAMING CONVENTION: every test fn in this file starts with `fleet_` —
+//! CI runs this binary in a dedicated hard-timeout step and excludes the
+//! same tests from the plain `cargo test` step via `--skip fleet_`.
+
+use bear::algo::bear::{Bear, BearConfig};
+use bear::algo::StepSize;
+use bear::coordinator::experiments::RealData;
+use bear::data::synth::Rcv1Sim;
+use bear::data::DataSource;
+use bear::fleet::{start_fleet, FleetConfig, ProbeConfig};
+use bear::loss::LossKind;
+use bear::online::Publisher;
+use bear::serve::loadgen::{self, format_query, HttpClient, LoadgenConfig};
+use bear::serve::ServableModel;
+use bear::sparse::SparseVec;
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+/// Serializes the fleets: the free-port reservation in `start_fleet`
+/// releases its listeners before the workers rebind them, so two fleets
+/// starting concurrently in this binary could race for the same ports.
+static FLEET_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+fn fleet_lock() -> std::sync::MutexGuard<'static, ()> {
+    FLEET_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn tmp_root(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_TARGET_TMPDIR"))
+        .join(format!("fleet-{name}-{}", std::process::id()))
+}
+
+fn new_trainer(seed: u64) -> Bear {
+    let cfg = BearConfig {
+        sketch_cells: 8192,
+        sketch_rows: 3,
+        top_k: 100,
+        tau: 5,
+        step: StepSize::Constant(0.01),
+        loss: LossKind::Logistic,
+        seed,
+        ..Default::default()
+    };
+    Bear::new(bear::data::synth::RCV1_DIM, cfg)
+}
+
+fn train_some(bear: &mut Bear, n: usize, stream_seed: u64) {
+    let mut src = Rcv1Sim::new(n, 0x5eed).with_stream_seed(stream_seed);
+    bear.fit_source(&mut src, 32, 1);
+}
+
+fn snapshot(bear: &Bear) -> ServableModel {
+    ServableModel::from_sketched(bear.state(), LossKind::Logistic, 0.0)
+}
+
+fn test_queries(n: usize) -> Vec<SparseVec> {
+    let mut src = Rcv1Sim::new(n, 0x5eed).with_stream_seed(0xF1EE);
+    let mut out = Vec::with_capacity(n);
+    while let Some(e) = src.next_example() {
+        out.push(e.features);
+    }
+    out
+}
+
+fn statz_value(body: &str, key: &str) -> f64 {
+    for line in body.lines() {
+        if let Some((k, v)) = line.split_once(' ') {
+            if k == key {
+                return v.parse().unwrap();
+            }
+        }
+    }
+    panic!("statz missing {key}:\n{body}");
+}
+
+/// One aggregated-`/statz` scrape on a fresh connection (the balancer
+/// sheds idle keep-alives after its read timeout, so a long-lived client
+/// would flake whenever a phase outlasts it).
+fn get_statz(addr: &str) -> String {
+    let mut client = HttpClient::connect(addr).expect("connect for /statz");
+    let (status, body) = client.get("/statz").expect("balancer /statz");
+    assert_eq!(status, 200, "{body}");
+    body
+}
+
+/// Poll the balancer's aggregated `/statz` until `pred` holds (panics
+/// with the last body on timeout).
+fn wait_statz(
+    addr: &str,
+    what: &str,
+    timeout: Duration,
+    mut pred: impl FnMut(&str) -> bool,
+) -> String {
+    let deadline = Instant::now() + timeout;
+    loop {
+        let body = get_statz(addr);
+        if pred(&body) {
+            return body;
+        }
+        assert!(Instant::now() < deadline, "timed out waiting for {what}; last statz:\n{body}");
+        std::thread::sleep(Duration::from_millis(100));
+    }
+}
+
+fn spawn_loadgen(
+    addr: String,
+    requests_per_thread: usize,
+) -> std::thread::JoinHandle<loadgen::LoadReport> {
+    std::thread::spawn(move || {
+        let cfg = LoadgenConfig {
+            threads: 4,
+            requests_per_thread,
+            queries_per_request: 4,
+            dataset: RealData::Rcv1,
+            seed: 0xF1EE7,
+        };
+        loadgen::run(&addr, &cfg).expect("loadgen run")
+    })
+}
+
+#[test]
+fn fleet_is_zero_drop_through_kill_restart_and_rolling_reload() {
+    let _serial = fleet_lock();
+    let pub_dir = tmp_root("pub");
+    let log_dir = tmp_root("logs");
+    std::fs::remove_dir_all(&pub_dir).ok();
+    std::fs::remove_dir_all(&log_dir).ok();
+
+    // generation 1 published before the fleet comes up
+    let mut publisher = Publisher::new(&pub_dir, 8).unwrap();
+    let mut trainer = new_trainer(0xF1EE);
+    train_some(&mut trainer, 600, 1);
+    let pub1 = publisher.publish(&snapshot(&trainer)).unwrap();
+    let m1 = ServableModel::load(&pub1.path).unwrap();
+
+    let cfg = FleetConfig {
+        addr: "127.0.0.1:0".to_string(),
+        backends: 3,
+        base_port: 0,
+        model: None,
+        watch_manifest: Some(publisher.manifest_path()),
+        worker_bin: Some(PathBuf::from(env!("CARGO_BIN_EXE_bear"))),
+        // generous per-worker thread pool: pooled balancer keep-alives +
+        // probes + statz scrapes must never contend under fault injection
+        serve_workers: 12,
+        log_dir: Some(log_dir.clone()),
+        probe: ProbeConfig {
+            interval: Duration::from_millis(50),
+            timeout: Duration::from_millis(500),
+            eject_after: 2,
+            admit_after: 2,
+        },
+        monitor_interval: Duration::from_millis(100),
+        ..Default::default()
+    };
+    let handle = start_fleet(cfg).unwrap();
+    assert!(
+        handle.wait_all_healthy(Duration::from_secs(60)),
+        "fleet never became healthy; see logs in {:?}",
+        log_dir
+    );
+    let addr = handle.addr().to_string();
+
+    // the balancer serves generation-1 predictions bit-identically to the
+    // published snapshot, whichever backend answers
+    let queries = test_queries(12);
+    let body: String = queries.iter().map(|q| format_query(q) + "\n").collect();
+    let mut client = HttpClient::connect(&addr).unwrap();
+    for _ in 0..6 {
+        let (status, resp) = client.post("/predict", &body).unwrap();
+        assert_eq!(status, 200, "{resp}");
+        let lines: Vec<&str> = resp.lines().collect();
+        assert_eq!(lines.len(), queries.len());
+        for (q, line) in queries.iter().zip(&lines) {
+            let margin: f64 = line.split_whitespace().next().unwrap().parse().unwrap();
+            assert_eq!(margin.to_bits(), m1.margin(q).to_bits());
+        }
+    }
+    drop(client);
+    let statz = wait_statz(&addr, "3 healthy backends", Duration::from_secs(10), |b| {
+        statz_value(b, "fleet_backends_healthy") as u64 == 3
+    });
+    assert_eq!(statz_value(&statz, "fleet_backends") as u64, 3);
+    assert_eq!(statz_value(&statz, "fleet_generation") as u64, 1);
+
+    // ── fault injection 1: SIGKILL backend 1 under load ────────────────
+    let lg = spawn_loadgen(addr.clone(), 700);
+    std::thread::sleep(Duration::from_millis(150));
+    let old_pid = handle.backend_pid(1).expect("backend 1 pid");
+    handle.kill_backend(1).unwrap();
+
+    // the kill is visible: eject counted, then the respawned worker is
+    // probed back into rotation
+    wait_statz(&addr, "backend 1 eject", Duration::from_secs(20), |b| {
+        statz_value(b, "backend.1.ejects") as u64 >= 1
+    });
+    wait_statz(&addr, "backend 1 re-admit after restart", Duration::from_secs(60), |b| {
+        statz_value(b, "backend.1.healthy") as u64 == 1
+            && statz_value(b, "backend.1.restarts") as u64 >= 1
+    });
+    let new_pid = handle.backend_pid(1).expect("respawned backend 1 pid");
+    assert_ne!(new_pid, old_pid, "supervisor must have respawned a new process");
+
+    // ZERO client-visible errors across the kill + restart
+    let report = lg.join().unwrap();
+    assert_eq!(report.errors, 0, "requests dropped during backend kill/restart");
+    assert_eq!(report.requests, 4 * 700);
+    assert_eq!(report.error_rate(), 0.0);
+
+    // ── fault injection 2: rolling reload across two generations ──────
+    let lg = spawn_loadgen(addr.clone(), 700);
+    std::thread::sleep(Duration::from_millis(100));
+    for (stream_seed, generation) in [(2u64, 2u64), (3, 3)] {
+        train_some(&mut trainer, 300, stream_seed);
+        publisher.publish(&snapshot(&trainer)).unwrap();
+        // the supervisor rolls the publication across every backend, one
+        // at a time; statz converges on the new generation fleet-wide
+        wait_statz(
+            &addr,
+            "per-backend generations to converge",
+            Duration::from_secs(30),
+            |b| {
+                (0..3).all(|i| {
+                    statz_value(b, &format!("backend.{i}.generation")) as u64 == generation
+                })
+            },
+        );
+    }
+    let report = lg.join().unwrap();
+    assert_eq!(report.errors, 0, "requests dropped during rolling reload");
+    assert_eq!(report.requests, 4 * 700);
+
+    // new generation is actually being served: margins now match the
+    // latest snapshot bit-for-bit
+    let m3 = snapshot(&trainer).with_generation(3);
+    let mut client = HttpClient::connect(&addr).unwrap();
+    let (status, resp) = client.post("/predict", &body).unwrap();
+    assert_eq!(status, 200, "{resp}");
+    for (q, line) in queries.iter().zip(resp.lines()) {
+        let margin: f64 = line.split_whitespace().next().unwrap().parse().unwrap();
+        assert_eq!(margin.to_bits(), m3.margin(q).to_bits());
+    }
+    drop(client);
+
+    // final aggregated statz: the whole story is visible
+    let statz = wait_statz(&addr, "final healthy fleet", Duration::from_secs(10), |b| {
+        statz_value(b, "fleet_backends_healthy") as u64 == 3
+    });
+    assert!(statz_value(&statz, "fleet_ejects") as u64 >= 1, "{statz}");
+    assert!(statz_value(&statz, "fleet_readmits") as u64 >= 1, "{statz}");
+    assert!(statz_value(&statz, "fleet_restarts") as u64 >= 1, "{statz}");
+    assert_eq!(statz_value(&statz, "fleet_generation") as u64, 3, "{statz}");
+    assert_eq!(statz_value(&statz, "rejected_503") as u64, 0, "{statz}");
+    for i in 0..3 {
+        assert_eq!(statz_value(&statz, &format!("backend.{i}.up")) as u64, 1, "{statz}");
+    }
+
+    handle.shutdown();
+    std::fs::remove_dir_all(&pub_dir).ok();
+    // keep log_dir: CI uploads it on failure, reruns truncate per-pid dirs
+}
+
+#[test]
+fn fleet_serves_healthz_and_routes_topk() {
+    let _serial = fleet_lock();
+    let pub_dir = tmp_root("topk-pub");
+    let log_dir = tmp_root("topk-logs");
+    std::fs::remove_dir_all(&pub_dir).ok();
+
+    let mut publisher = Publisher::new(&pub_dir, 4).unwrap();
+    let mut trainer = new_trainer(0x70FF);
+    train_some(&mut trainer, 400, 1);
+    publisher.publish(&snapshot(&trainer)).unwrap();
+
+    let cfg = FleetConfig {
+        addr: "127.0.0.1:0".to_string(),
+        backends: 2,
+        watch_manifest: Some(publisher.manifest_path()),
+        worker_bin: Some(PathBuf::from(env!("CARGO_BIN_EXE_bear"))),
+        serve_workers: 8,
+        log_dir: Some(log_dir),
+        probe: ProbeConfig { interval: Duration::from_millis(50), ..Default::default() },
+        ..Default::default()
+    };
+    let handle = start_fleet(cfg).unwrap();
+    assert!(handle.wait_all_healthy(Duration::from_secs(60)));
+    let mut client = HttpClient::connect(&handle.addr().to_string()).unwrap();
+
+    let (status, body) = client.get("/healthz").unwrap();
+    assert_eq!(status, 200, "{body}");
+
+    // /topk proxies to a worker and returns the model's heavy hitters
+    let expect = snapshot(&trainer).with_generation(1);
+    let (status, body) = client.get("/topk?k=5").unwrap();
+    assert_eq!(status, 200, "{body}");
+    let got: Vec<u64> = body
+        .lines()
+        .map(|l| l.split_whitespace().next().unwrap().parse().unwrap())
+        .collect();
+    let want: Vec<u64> = expect.topk(5).into_iter().map(|(f, _)| f).collect();
+    assert_eq!(got, want);
+
+    // unknown routes 404 at the balancer without touching a worker
+    let (status, _) = client.get("/admin/reload").unwrap();
+    assert_eq!(status, 404);
+
+    drop(client);
+    handle.shutdown();
+    std::fs::remove_dir_all(&pub_dir).ok();
+}

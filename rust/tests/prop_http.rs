@@ -1,0 +1,232 @@
+//! Property tests for the shared HTTP request parser
+//! (`serve/http.rs`): arbitrary malformed, truncated, and oversized
+//! request bytes must never panic the parser, must surface as a typed
+//! 400/413 (or a transport error that just closes the connection), and
+//! must never read one byte past the declared `Content-Length` — the
+//! next pipelined request on the connection stays intact.
+//!
+//! The last test drives the same bytes at a **live server** socket and
+//! asserts the process answers 400/413/404 or closes — and keeps serving
+//! `/healthz` afterwards.
+
+use bear::prop::{run, Gen};
+use bear::serve::http::{read_request, ReadError, MAX_BODY, MAX_LINE};
+use std::io::{Cursor, Read};
+
+fn random_bytes(g: &mut Gen, max_len: usize) -> Vec<u8> {
+    let n = g.usize_in(0, max_len + 1);
+    (0..n).map(|_| g.u64_below(256) as u8).collect()
+}
+
+/// A syntactically valid request with a random method/path/body.
+fn valid_request(g: &mut Gen) -> (Vec<u8>, String, String, Vec<u8>) {
+    let method = ["GET", "POST", "PUT", "HEAD"][g.usize_in(0, 4)].to_string();
+    let path = format!("/p{}", g.u64_below(1_000_000));
+    let body = random_bytes(g, 256);
+    let mut req = format!(
+        "{method} {path} HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n",
+        body.len()
+    )
+    .into_bytes();
+    // a few benign extra headers
+    for i in 0..g.usize_in(0, 4) {
+        req.extend_from_slice(format!("X-Extra-{i}: {}\r\n", g.u64_below(100)).as_bytes());
+    }
+    req.extend_from_slice(b"\r\n");
+    req.extend_from_slice(&body);
+    (req, method, path, body)
+}
+
+#[test]
+fn arbitrary_bytes_never_panic_the_parser() {
+    run("read_request survives arbitrary bytes", 256, |g: &mut Gen| {
+        let bytes = random_bytes(g, 4096);
+        let mut cur = Cursor::new(bytes);
+        // any Result is acceptable; what matters is: no panic, no hang,
+        // no unbounded buffering
+        let _ = read_request(&mut cur);
+    });
+}
+
+#[test]
+fn valid_requests_parse_and_never_read_past_content_length() {
+    run("parser stops exactly at Content-Length", 128, |g: &mut Gen| {
+        let (mut bytes, method, path, body) = valid_request(g);
+        let trailing = random_bytes(g, 128);
+        bytes.extend_from_slice(&trailing);
+        let mut cur = Cursor::new(bytes);
+        let req = read_request(&mut cur).expect("valid request").expect("not EOF");
+        assert_eq!(req.method, method);
+        assert_eq!(req.path, path);
+        assert_eq!(req.body, body);
+        // everything after the body is untouched for the next request
+        let mut rest = Vec::new();
+        cur.read_to_end(&mut rest).unwrap();
+        assert_eq!(rest, trailing, "parser consumed bytes past Content-Length");
+    });
+}
+
+#[test]
+fn pipelined_requests_parse_back_to_back() {
+    run("two pipelined requests both parse", 64, |g: &mut Gen| {
+        let (a_bytes, _, a_path, a_body) = valid_request(g);
+        let (b_bytes, _, b_path, b_body) = valid_request(g);
+        let mut bytes = a_bytes;
+        bytes.extend_from_slice(&b_bytes);
+        let mut cur = Cursor::new(bytes);
+        let a = read_request(&mut cur).unwrap().unwrap();
+        assert_eq!((a.path, a.body), (a_path, a_body));
+        let b = read_request(&mut cur).unwrap().unwrap();
+        assert_eq!((b.path, b.body), (b_path, b_body));
+        // and a clean EOF after the second
+        assert!(matches!(read_request(&mut cur), Ok(None)));
+    });
+}
+
+#[test]
+fn oversized_content_length_is_rejected_with_413() {
+    run("Content-Length > MAX_BODY ⇒ 413", 64, |g: &mut Gen| {
+        let extra = g.u64_below(1 << 40) as usize;
+        let req = format!(
+            "POST /predict HTTP/1.1\r\nContent-Length: {}\r\n\r\n",
+            MAX_BODY + 1 + extra
+        );
+        let mut cur = Cursor::new(req.into_bytes());
+        match read_request(&mut cur) {
+            Err(ReadError::Bad { status, .. }) => assert_eq!(status, 413),
+            other => {
+                let got = other.map(|_| "request").map_err(|e| e.to_string());
+                panic!("expected 413, got {got:?}");
+            }
+        }
+    });
+}
+
+#[test]
+fn truncated_requests_fail_cleanly_not_partially() {
+    run("truncation ⇒ EOF-ish error, never a partial request", 128, |g: &mut Gen| {
+        let (bytes, _, _, _) = valid_request(g);
+        // strictly shorter than the full request
+        let cut = g.usize_in(0, bytes.len());
+        let mut cur = Cursor::new(bytes[..cut].to_vec());
+        match read_request(&mut cur) {
+            Ok(None) => {}    // cut before any byte
+            Err(_) => {}      // mid-line / mid-headers / mid-body
+            Ok(Some(req)) => panic!(
+                "truncated at {cut}/{} still yielded a request ({} body bytes)",
+                cur.get_ref().len(),
+                req.body.len()
+            ),
+        }
+    });
+}
+
+#[test]
+fn newline_free_streams_are_bounded_not_buffered() {
+    run("no newline ⇒ bounded 400, not OOM", 32, |g: &mut Gen| {
+        // much longer than MAX_LINE, no newline anywhere
+        let n = MAX_LINE + 1 + g.usize_in(0, 4096);
+        let bytes: Vec<u8> = (0..n).map(|_| b'A' + (g.u64_below(26) as u8)).collect();
+        let mut cur = Cursor::new(bytes);
+        match read_request(&mut cur) {
+            Err(ReadError::Bad { status, .. }) => assert_eq!(status, 400),
+            other => panic!(
+                "expected bounded 400, got {:?}",
+                other.map(|_| "request").map_err(|e| e.to_string())
+            ),
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// the same adversarial bytes against a live server socket
+// ---------------------------------------------------------------------------
+
+mod live {
+    use super::*;
+    use bear::algo::sketched::SketchedState;
+    use bear::loss::LossKind;
+    use bear::serve::{serve, ServableModel, ServerConfig};
+    use bear::sparse::{ActiveSet, SparseVec};
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::TcpStream;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    fn toy_model() -> ServableModel {
+        let mut st = SketchedState::new(512, 3, 4, 9);
+        st.apply_step(&SparseVec::from_pairs(vec![(7, -1.0)]), 1.0);
+        let row = SparseVec::from_pairs(vec![(7, 1.0)]);
+        st.refresh_heap(&ActiveSet::from_rows([&row]));
+        ServableModel::from_sketched(&st, LossKind::Logistic, 0.0)
+    }
+
+    /// Write `bytes`, then read whatever the server answers. Returns the
+    /// status code, or None when the server just closed.
+    fn poke(addr: &str, bytes: &[u8]) -> Option<u16> {
+        let stream = TcpStream::connect(addr).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(2))).ok();
+        let mut writer = stream.try_clone().unwrap();
+        if writer.write_all(bytes).is_err() {
+            return None; // server already closed on us
+        }
+        let _ = writer.flush();
+        let mut reader = BufReader::new(stream);
+        let mut line = String::new();
+        match reader.read_line(&mut line) {
+            Ok(0) | Err(_) => None,
+            Ok(_) => line.split_whitespace().nth(1).and_then(|s| s.parse().ok()),
+        }
+    }
+
+    #[test]
+    fn live_server_answers_or_closes_and_never_dies() {
+        let handle = serve(
+            Arc::new(toy_model()),
+            ServerConfig {
+                workers: 2,
+                // shed incomplete adversarial requests quickly so the
+                // property loop stays fast
+                read_timeout: Duration::from_millis(150),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let addr = handle.addr().to_string();
+
+        run("live server survives adversarial bytes", 48, |g: &mut Gen| {
+            let bytes = match g.usize_in(0, 3) {
+                // pure garbage
+                0 => super::random_bytes(g, 2048),
+                // truncated valid request
+                1 => {
+                    let (b, _, _, _) = super::valid_request(g);
+                    let cut = g.usize_in(0, b.len());
+                    b[..cut].to_vec()
+                }
+                // oversized declared body
+                _ => format!(
+                    "POST /predict HTTP/1.1\r\nContent-Length: {}\r\n\r\n",
+                    MAX_BODY + 1 + g.usize_in(0, 1 << 20)
+                )
+                .into_bytes(),
+            };
+            match poke(&addr, &bytes) {
+                // a response must be an error status, never a success
+                // fabricated from garbage
+                Some(status) => {
+                    assert!(
+                        matches!(status, 400 | 404 | 405 | 413 | 500 | 503),
+                        "garbage yielded status {status}"
+                    );
+                }
+                None => {} // closing without a response is fine
+            }
+        });
+
+        // after everything above, the server still serves
+        let status = poke(&addr, b"GET /healthz HTTP/1.1\r\nContent-Length: 0\r\n\r\n");
+        assert_eq!(status, Some(200), "server died under adversarial input");
+        handle.shutdown();
+    }
+}
