@@ -33,11 +33,35 @@
 //! worker's threads until it is reused or shed, so `pool_per_backend`
 //! should stay below the worker's `--workers` count to keep threads free
 //! for health probes and fresh connections.
+//!
+//! **Scatter-gather (`--shards K`).** With a feature-range-sharded fleet
+//! no single worker holds the whole model, so `/predict` becomes a
+//! scatter-gather: the balancer fans the query body out to one replica of
+//! **every** shard (`POST /shard/weights`, in parallel — predict latency
+//! is the slowest shard, not the sum), gathers the exact f32 weight bits
+//! each shard owns, and re-runs the canonical margin accumulation locally
+//! ([`crate::serve::shard`]), producing responses bit-identical to an
+//! unsharded server. Every fan-out is **pinned to one generation** (the
+//! oldest among the chosen replicas' scraped generations; workers answer
+//! from their current or retained-previous snapshot, else `409`), so a
+//! rolling reload can never blend two generations into one margin.
+//! `/topk` is the same dance with a K-way merge. Shard fan-outs retry
+//! under a wall-clock budget (`scatter_deadline`) instead of an attempt
+//! count: a shard with a single replica being respawned needs the
+//! balancer to wait for re-admission, not to fail fast sideways.
 
 use crate::fleet::health::BackendState;
-use crate::serve::http::{self, read_request, reason_for, write_response, ReadError, Request};
+use crate::loss::LossKind;
+use crate::serve::http::{
+    self, query_param, read_request, reason_for, write_response, ReadError, Request,
+};
+use crate::serve::server::{format_predictions, parse_query_line};
+use crate::serve::shard::{merge_topk, parse_weight_token, predict_with};
+use crate::serve::snapshot::Prediction;
+use crate::sparse::SparseVec;
 use crate::util::Pcg64;
 use anyhow::{Context, Result};
+use std::collections::HashMap;
 use std::io::{BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -67,6 +91,11 @@ pub struct BalancerConfig {
     pub retry_backoff: Duration,
     /// Idle keep-alive connections kept per backend.
     pub pool_per_backend: usize,
+    /// Wall-clock budget for one sharded scatter-gather request: a shard
+    /// whose only replica is mid-respawn stalls the request (there is no
+    /// sideways retry — no other backend owns that feature range), so the
+    /// budget must comfortably cover a kill → respawn → re-admit cycle.
+    pub scatter_deadline: Duration,
 }
 
 impl Default for BalancerConfig {
@@ -81,6 +110,7 @@ impl Default for BalancerConfig {
             max_attempts: 8,
             retry_backoff: Duration::from_millis(50),
             pool_per_backend: 4,
+            scatter_deadline: Duration::from_secs(15),
         }
     }
 }
@@ -97,6 +127,9 @@ pub struct BalancerCounters {
     pub not_found: AtomicU64,
     pub statz_requests: AtomicU64,
     pub health_requests: AtomicU64,
+    /// Generation-pinned fan-outs a worker answered `409` (re-pinned and
+    /// retried; nonzero during rolling reloads, harmless).
+    pub scatter_conflicts: AtomicU64,
 }
 
 /// Power-of-two-choices backend picker over the shared health states.
@@ -113,9 +146,21 @@ impl Picker {
     /// candidates, keep the one with fewer requests in flight. `None`
     /// when no backend is currently pickable (all ejected/excluded).
     pub fn pick(&self, rng: &mut Pcg64, excluded: &[bool]) -> Option<usize> {
+        self.pick_where(rng, excluded, |_| true)
+    }
+
+    /// [`Picker::pick`] restricted to backends matching `pred` — the
+    /// sharded fleet picks one replica per shard with
+    /// `|b| b.shard == s`.
+    pub fn pick_where(
+        &self,
+        rng: &mut Pcg64,
+        excluded: &[bool],
+        pred: impl Fn(&BackendState) -> bool,
+    ) -> Option<usize> {
         let mut candidates: Vec<usize> = Vec::with_capacity(self.backends.len());
         for (i, b) in self.backends.iter().enumerate() {
-            if b.healthy() && !excluded.get(i).copied().unwrap_or(false) {
+            if b.healthy() && !excluded.get(i).copied().unwrap_or(false) && pred(b) {
                 candidates.push(i);
             }
         }
@@ -186,6 +231,57 @@ fn forward_once(conn: &mut BackendConn, req: &Request) -> std::io::Result<http::
     }
 }
 
+/// Outcome of one scatter-gather fan-out round.
+enum Round {
+    /// Every shard answered 200 on the pinned generation.
+    Done(Vec<String>),
+    /// Transient (409 / 503 / transport failure): re-pick, re-pin, retry
+    /// within the wall-clock budget.
+    Retry,
+    /// Final client answer (a relayed deterministic 400, or 502 on
+    /// unrelayable bytes).
+    Fatal(u16, Vec<u8>),
+}
+
+/// What a scatter `gather` closure made of a complete round.
+enum Gathered {
+    /// Final client answer.
+    Respond(u16, Vec<u8>),
+    /// A response was not actually on the pinned generation: re-pin and
+    /// retry within the budget.
+    Conflict,
+}
+
+/// The `/shard/weights` response header: the served generation plus the
+/// model meta the merger needs, pinned together so a merged prediction
+/// can never pair one generation's weights with another's bias/loss.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+struct WeightsHeader {
+    generation: u64,
+    classes: u64,
+    bias_bits: u32,
+    loss: u32,
+}
+
+/// Parse `generation G classes C bias_bits B loss L`. Out-of-range
+/// values fail the parse (⇒ 502) instead of silently truncating into a
+/// plausible-looking bias.
+fn parse_weights_header(line: &str) -> Option<WeightsHeader> {
+    let mut it = line.split_whitespace();
+    let mut field = |name: &str| -> Option<u64> {
+        if it.next()? != name {
+            return None;
+        }
+        it.next()?.parse().ok()
+    };
+    Some(WeightsHeader {
+        generation: field("generation")?,
+        classes: field("classes")?,
+        bias_bits: u32::try_from(field("bias_bits")?).ok()?,
+        loss: u32::try_from(field("loss")?).ok()?,
+    })
+}
+
 /// The balancer proper: shared by its worker threads and the handle.
 pub struct Balancer {
     cfg: BalancerConfig,
@@ -196,6 +292,10 @@ pub struct Balancer {
     /// Latest manifest generation the supervisor is rolling toward
     /// (0 without `--watch-manifest`). Reported on `/statz`.
     target_generation: Arc<AtomicU64>,
+    /// Feature-range shard count (1 ⇒ plain replica proxying; >1 ⇒
+    /// `/predict` and `/topk` scatter-gather across one replica of every
+    /// shard).
+    shards: usize,
     started: Instant,
 }
 
@@ -204,6 +304,7 @@ impl Balancer {
         cfg: BalancerConfig,
         backends: Arc<Vec<Arc<BackendState>>>,
         target_generation: Arc<AtomicU64>,
+        shards: usize,
     ) -> Self {
         let pools = (0..backends.len()).map(|_| Mutex::new(Vec::new())).collect();
         Self {
@@ -213,6 +314,7 @@ impl Balancer {
             pools,
             counters: BalancerCounters::default(),
             target_generation,
+            shards: shards.max(1),
             started: Instant::now(),
         }
     }
@@ -312,6 +414,349 @@ impl Balancer {
         (503, b"no healthy backend\n".to_vec())
     }
 
+    /// One replica of every shard plus the generation the fan-out is
+    /// pinned to: the oldest among the chosen replicas' scraped
+    /// generations (mid-roll, workers already swapped still hold it as
+    /// their retained previous snapshot — one-at-a-time rolling makes the
+    /// oldest generation the one everyone can serve). `None` when some
+    /// shard has no pickable replica right now.
+    fn pick_shard_set(&self, rng: &mut Pcg64, excluded: &[bool]) -> Option<(Vec<usize>, u64)> {
+        let mut chosen = Vec::with_capacity(self.shards);
+        for s in 0..self.shards {
+            let i = self.picker.pick_where(rng, excluded, |b| b.shard == s)?;
+            chosen.push(i);
+        }
+        let gen = chosen
+            .iter()
+            .map(|&i| self.backends[i].scraped_generation.load(Ordering::Relaxed))
+            .min()
+            .unwrap_or(0);
+        Some((chosen, gen))
+    }
+
+    /// Fan one request out to each chosen backend in parallel (one scoped
+    /// thread per shard — predict latency is the slowest shard, not the
+    /// sum of all of them). Spawning K short-lived threads per request is
+    /// a deliberate simplicity/latency tradeoff at small K over loopback;
+    /// persistent per-backend forwarder threads (and hedged sends to slow
+    /// shards) are the upgrade path if spawn overhead ever shows up in
+    /// the scatter p99.
+    fn fan_out(&self, targets: Vec<(usize, Request)>) -> Vec<std::io::Result<http::Response>> {
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = targets
+                .into_iter()
+                .map(|(i, req)| {
+                    scope.spawn(move || {
+                        let _guard = InFlightGuard::new(&self.backends[i]);
+                        self.forward_to(i, &req)
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| {
+                    h.join().unwrap_or_else(|_| {
+                        // treated like any transport failure: eject + retry
+                        Err(std::io::Error::new(
+                            std::io::ErrorKind::BrokenPipe,
+                            "forward thread panicked",
+                        ))
+                    })
+                })
+                .collect()
+        })
+    }
+
+    /// Run one scatter round against `chosen` (one backend per shard) and
+    /// classify the outcome. Transient failures mark the offending
+    /// backend in `excluded` so the next round re-picks around it.
+    fn scatter_round(
+        &self,
+        chosen: &[usize],
+        make: impl Fn(usize) -> Request,
+        excluded: &mut [bool],
+    ) -> Round {
+        let targets: Vec<(usize, Request)> =
+            chosen.iter().enumerate().map(|(s, &i)| (i, make(s))).collect();
+        let results = self.fan_out(targets);
+        let mut bodies = Vec::with_capacity(chosen.len());
+        let mut retry = false;
+        for (slot, r) in results.into_iter().enumerate() {
+            let i = chosen[slot];
+            let b = &self.backends[i];
+            match r {
+                Ok(resp) if resp.status == 200 => {
+                    b.forwarded.fetch_add(1, Ordering::Relaxed);
+                    bodies.push(String::from_utf8_lossy(&resp.body).into_owned());
+                }
+                Ok(resp) if resp.status == 409 => {
+                    // the worker cannot serve the pinned generation (it
+                    // rolled past it, or just restarted onto a newer one):
+                    // re-pin against fresher scrapes next round
+                    self.counters.scatter_conflicts.fetch_add(1, Ordering::Relaxed);
+                    excluded[i] = true;
+                    retry = true;
+                }
+                Ok(resp) if resp.status == 503 => {
+                    // alive but shedding load: prefer another replica
+                    excluded[i] = true;
+                    retry = true;
+                }
+                Ok(resp) if resp.status == 400 => {
+                    // every shard sees the same body, so a 400 is
+                    // deterministic — relay it, don't burn the budget
+                    return Round::Fatal(400, resp.body);
+                }
+                Ok(_) => {
+                    b.forward_errors.fetch_add(1, Ordering::Relaxed);
+                    excluded[i] = true;
+                    retry = true;
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::InvalidData => {
+                    b.forward_errors.fetch_add(1, Ordering::Relaxed);
+                    return Round::Fatal(502, b"unrelayable backend response\n".to_vec());
+                }
+                Err(_) => {
+                    // direct down evidence: eject now, probes re-admit
+                    b.forward_errors.fetch_add(1, Ordering::Relaxed);
+                    b.eject_now();
+                    excluded[i] = true;
+                    retry = true;
+                }
+            }
+        }
+        if retry {
+            Round::Retry
+        } else {
+            Round::Done(bodies)
+        }
+    }
+
+    /// The shared scatter retry driver: within the wall-clock budget,
+    /// pick one replica per shard, pin a generation, fan the request
+    /// built by `make(shard, gen)` out, and hand complete rounds to
+    /// `gather`. A `Gathered::Conflict` (a response not actually on the
+    /// pinned generation) re-pins and retries like a transport failure.
+    fn scatter(
+        &self,
+        rng: &mut Pcg64,
+        make: impl Fn(usize, u64) -> Request,
+        mut gather: impl FnMut(u64, Vec<String>) -> Gathered,
+    ) -> (u16, Vec<u8>) {
+        let deadline = Instant::now() + self.cfg.scatter_deadline;
+        let mut excluded = vec![false; self.backends.len()];
+        let mut first = true;
+        loop {
+            if Instant::now() >= deadline {
+                self.counters.rejected_503.fetch_add(1, Ordering::Relaxed);
+                return (503, b"no generation-consistent shard set\n".to_vec());
+            }
+            if !first {
+                self.counters.proxy_retries.fetch_add(1, Ordering::Relaxed);
+            }
+            first = false;
+            let (chosen, gen) = match self.pick_shard_set(rng, &excluded) {
+                Some(cg) => cg,
+                None => {
+                    excluded.iter_mut().for_each(|e| *e = false);
+                    std::thread::sleep(self.cfg.retry_backoff);
+                    continue;
+                }
+            };
+            match self.scatter_round(&chosen, |s| make(s, gen), &mut excluded) {
+                Round::Done(bodies) => match gather(gen, bodies) {
+                    Gathered::Respond(status, body) => return (status, body),
+                    Gathered::Conflict => {
+                        self.counters.scatter_conflicts.fetch_add(1, Ordering::Relaxed);
+                        std::thread::sleep(self.cfg.retry_backoff);
+                    }
+                },
+                Round::Retry => std::thread::sleep(self.cfg.retry_backoff),
+                Round::Fatal(status, body) => return (status, body),
+            }
+        }
+    }
+
+    /// Sharded `/predict`: gather the exact per-feature weight bits from
+    /// one replica of every shard (all pinned to one generation), then
+    /// re-run the canonical margin accumulation and format the result
+    /// with the model server's own code — bit-identical to an unsharded
+    /// server by construction.
+    fn scatter_predict(&self, rng: &mut Pcg64, req: &Request) -> (u16, Vec<u8>) {
+        self.counters.proxied_requests.fetch_add(1, Ordering::Relaxed);
+        let text = match std::str::from_utf8(&req.body) {
+            Ok(t) => t,
+            Err(_) => {
+                self.counters.bad_requests.fetch_add(1, Ordering::Relaxed);
+                return (400, b"predict body is not UTF-8\n".to_vec());
+            }
+        };
+        // tokenize up front with the model server's own parser: malformed
+        // bodies fail here exactly as they would on a single server
+        let mut queries: Vec<(usize, SparseVec)> = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            match parse_query_line(line, lineno) {
+                Ok(Some(q)) => queries.push((lineno, q)),
+                Ok(None) => {}
+                Err(e) => {
+                    self.counters.bad_requests.fetch_add(1, Ordering::Relaxed);
+                    return (400, format!("{e:#}\n").into_bytes());
+                }
+            }
+        }
+        if queries.is_empty() {
+            return (200, Vec::new());
+        }
+        let n_lines = text.lines().count();
+        self.scatter(
+            rng,
+            |_s, gen| Request {
+                method: "POST".into(),
+                path: "/shard/weights".into(),
+                query: Some(format!("gen={gen}")),
+                body: req.body.clone(),
+                keep_alive: true,
+            },
+            |gen, bodies| {
+                // gather: per line, feature → per-class weight bits,
+                // merged across the disjoint shard ranges; the meta
+                // (classes/bias/loss) comes from the response headers, so
+                // it is pinned to the same generation as the weights
+                let mut line_maps: Vec<HashMap<u64, Vec<f32>>> =
+                    (0..n_lines).map(|_| HashMap::new()).collect();
+                let mut meta: Option<WeightsHeader> = None;
+                for body in &bodies {
+                    let mut lines = body.lines();
+                    let header = match lines.next().and_then(parse_weights_header) {
+                        Some(h) => h,
+                        None => {
+                            return Gathered::Respond(
+                                502,
+                                b"malformed shard weights response\n".to_vec(),
+                            )
+                        }
+                    };
+                    if header.generation != gen {
+                        return Gathered::Conflict;
+                    }
+                    match &meta {
+                        None => meta = Some(header),
+                        // shards of one generation were published
+                        // together; disagreeing meta means a corrupt set
+                        Some(m) if *m != header => {
+                            return Gathered::Respond(
+                                502,
+                                b"shard set disagrees on model meta\n".to_vec(),
+                            )
+                        }
+                        Some(_) => {}
+                    }
+                    let mut n = 0usize;
+                    for (li, wline) in lines.enumerate() {
+                        if li >= n_lines {
+                            return Gathered::Respond(
+                                502,
+                                b"malformed shard weights response\n".to_vec(),
+                            );
+                        }
+                        n += 1;
+                        for tok in wline.split_whitespace() {
+                            match parse_weight_token(tok) {
+                                Some((f, ws)) => {
+                                    line_maps[li].insert(f, ws);
+                                }
+                                None => {
+                                    return Gathered::Respond(
+                                        502,
+                                        b"malformed shard weights response\n".to_vec(),
+                                    )
+                                }
+                            }
+                        }
+                    }
+                    if n != n_lines {
+                        return Gathered::Respond(
+                            502,
+                            b"malformed shard weights response\n".to_vec(),
+                        );
+                    }
+                }
+                let meta = match meta {
+                    Some(m) => m,
+                    None => {
+                        return Gathered::Respond(502, b"no shard responses\n".to_vec());
+                    }
+                };
+                let classes = (meta.classes as usize).max(1);
+                let bias = f32::from_bits(meta.bias_bits);
+                let loss = match meta.loss {
+                    1 => LossKind::Logistic,
+                    _ => LossKind::Mse,
+                };
+                let preds: Vec<Prediction> = queries
+                    .iter()
+                    .map(|(lineno, q)| {
+                        predict_with(classes, loss, bias, q, |c, f| {
+                            line_maps[*lineno]
+                                .get(&f)
+                                .and_then(|ws| ws.get(c))
+                                .copied()
+                                .unwrap_or(0.0)
+                        })
+                    })
+                    .collect();
+                Gathered::Respond(200, format_predictions(&preds).into_bytes())
+            },
+        )
+    }
+
+    /// Sharded `/topk`: K-way merge of the per-shard tables, pinned to
+    /// one generation like `/predict` (the worker 409s any request for a
+    /// generation it cannot serve, so complete rounds are consistent).
+    fn scatter_topk(&self, rng: &mut Pcg64, req: &Request) -> (u16, Vec<u8>) {
+        self.counters.proxied_requests.fetch_add(1, Ordering::Relaxed);
+        let k: usize = query_param(req.query.as_deref(), "k")
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(10);
+        let class: usize = query_param(req.query.as_deref(), "class")
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(0);
+        self.scatter(
+            rng,
+            |_s, gen| Request {
+                method: "GET".into(),
+                path: "/topk".into(),
+                query: Some(format!("k={k}&class={class}&gen={gen}")),
+                body: Vec::new(),
+                keep_alive: true,
+            },
+            |_gen, bodies| {
+                let mut entries: Vec<(u64, f32)> = Vec::new();
+                for body in &bodies {
+                    for line in body.lines() {
+                        let mut it = line.split_whitespace();
+                        let f = it.next().and_then(|t| t.parse::<u64>().ok());
+                        let w = it.next().and_then(|t| t.parse::<f32>().ok());
+                        match (f, w) {
+                            (Some(f), Some(w)) => entries.push((f, w)),
+                            _ => {
+                                return Gathered::Respond(
+                                    502,
+                                    b"malformed shard topk response\n".to_vec(),
+                                )
+                            }
+                        }
+                    }
+                }
+                let mut out = String::with_capacity(entries.len().min(k) * 16);
+                for (f, w) in merge_topk(entries, k) {
+                    out.push_str(&format!("{f} {w}\n"));
+                }
+                Gathered::Respond(200, out.into_bytes())
+            },
+        )
+    }
+
     /// Aggregate `/statz`: balancer counters, fleet-level sums, and one
     /// `backend.<i>.*` block per worker. Per-backend generation/request
     /// gauges are the prober's cached scrape — rendering never does a
@@ -331,7 +776,20 @@ impl Balancer {
         out.push_str(&format!("uptime_s {uptime:.3}\n"));
         kv(&mut out, "fleet_backends", self.backends.len() as u64);
         kv(&mut out, "fleet_backends_healthy", healthy as u64);
+        kv(&mut out, "fleet_shards", self.shards as u64);
         kv(&mut out, "fleet_generation", self.target_generation.load(Ordering::Relaxed));
+        // the oldest generation any in-rotation backend is serving — the
+        // generation scatter-gather requests pin to; equal to
+        // fleet_generation once a roll has fully converged
+        let consistent = self
+            .backends
+            .iter()
+            .filter(|b| b.healthy())
+            .map(|b| b.scraped_generation.load(Ordering::Relaxed))
+            .min()
+            .unwrap_or(0);
+        kv(&mut out, "fleet_consistent_generation", consistent);
+        kv(&mut out, "scatter_conflicts", c.scatter_conflicts.load(Ordering::Relaxed));
         kv(&mut out, "connections", c.connections.load(Ordering::Relaxed));
         kv(&mut out, "requests_total", c.requests_total.load(Ordering::Relaxed));
         kv(&mut out, "proxied_requests", c.proxied_requests.load(Ordering::Relaxed));
@@ -347,6 +805,7 @@ impl Balancer {
         for b in self.backends.iter() {
             let i = b.index;
             out.push_str(&format!("backend.{i}.addr {}\n", b.addr));
+            kv(&mut out, &format!("backend.{i}.shard"), b.shard as u64);
             kv(&mut out, &format!("backend.{i}.healthy"), u64::from(b.healthy()));
             kv(&mut out, &format!("backend.{i}.in_flight"), b.in_flight.load(Ordering::Relaxed));
             kv(&mut out, &format!("backend.{i}.forwarded"), b.forwarded.load(Ordering::Relaxed));
@@ -372,13 +831,26 @@ impl Balancer {
     fn dispatch(&self, rng: &mut Pcg64, req: &Request) -> (u16, Vec<u8>, bool) {
         self.counters.requests_total.fetch_add(1, Ordering::Relaxed);
         match (req.method.as_str(), req.path.as_str()) {
+            ("POST", "/predict") if self.shards > 1 => {
+                let (status, body) = self.scatter_predict(rng, req);
+                (status, body, req.keep_alive)
+            }
+            ("GET", "/topk") if self.shards > 1 => {
+                let (status, body) = self.scatter_topk(rng, req);
+                (status, body, req.keep_alive)
+            }
             ("POST", "/predict") | ("GET", "/topk") => {
                 let (status, body) = self.proxy(rng, req);
                 (status, body, req.keep_alive)
             }
             ("GET", "/healthz") => {
                 self.counters.health_requests.fetch_add(1, Ordering::Relaxed);
-                if self.backends.iter().any(|b| b.healthy()) {
+                // a sharded fleet is serviceable only when EVERY feature
+                // range has a healthy replica — one covered shard cannot
+                // answer for the others
+                let ok = (0..self.shards)
+                    .all(|s| self.backends.iter().any(|b| b.shard == s && b.healthy()));
+                if ok {
                     (200, b"ok\n".to_vec(), req.keep_alive)
                 } else {
                     (503, b"no healthy backend\n".to_vec(), req.keep_alive)
@@ -653,6 +1125,40 @@ mod tests {
     }
 
     #[test]
+    fn pick_where_restricts_to_one_shard() {
+        // 2 shards × 2 replicas: backends 0,2 are shard 0; 1,3 are shard 1
+        let backends: Arc<Vec<Arc<BackendState>>> = Arc::new(
+            (0..4)
+                .map(|i| {
+                    let addr = {
+                        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+                        l.local_addr().unwrap()
+                    };
+                    Arc::new(BackendState::new_shard(i, addr, i % 2))
+                })
+                .collect(),
+        );
+        for b in backends.iter() {
+            admit(b);
+        }
+        let picker = Picker::new(backends.clone());
+        let mut rng = Pcg64::new(21);
+        for _ in 0..200 {
+            let i = picker.pick_where(&mut rng, &[false; 4], |b| b.shard == 1).unwrap();
+            assert_eq!(i % 2, 1, "picked a shard-0 backend for shard 1");
+        }
+        // both shard-1 replicas excluded ⇒ nothing pickable for shard 1
+        assert_eq!(
+            picker.pick_where(&mut rng, &[false, true, false, true], |b| b.shard == 1),
+            None
+        );
+        // ...but shard 0 is unaffected
+        assert!(picker
+            .pick_where(&mut rng, &[false, true, false, true], |b| b.shard == 0)
+            .is_some());
+    }
+
+    #[test]
     fn pick_returns_none_when_every_backend_is_down() {
         let backends = mk_backends(3);
         // never admitted: all unhealthy
@@ -676,7 +1182,7 @@ mod tests {
             ..Default::default()
         };
         let balancer =
-            Balancer::new(cfg, backends.clone(), Arc::new(AtomicU64::new(0)));
+            Balancer::new(cfg, backends.clone(), Arc::new(AtomicU64::new(0)), 1);
         let req = Request {
             method: "POST".into(),
             path: "/predict".into(),

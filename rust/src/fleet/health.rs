@@ -33,6 +33,9 @@ use std::time::Duration;
 pub struct BackendState {
     /// Position in the fleet (worker index, `/statz` key).
     pub index: usize,
+    /// Which feature-range shard this backend serves (0 when the fleet
+    /// is unsharded). Replicas of one shard share this value.
+    pub shard: usize,
     /// The worker's listen address.
     pub addr: SocketAddr,
     /// In rotation? Starts `false`; the first successful probes admit.
@@ -58,7 +61,9 @@ pub struct BackendState {
     /// Did the most recent probe answer? (raw signal, no hysteresis —
     /// `backend.<i>.up` on the aggregated statz)
     pub last_probe_ok: AtomicBool,
-    /// Serving generation cached from the last successful probe scrape.
+    /// Serving generation cached from the last successful probe scrape
+    /// (the scatter-gather generation pin; exact model meta travels
+    /// pinned inside each `/shard/weights` response instead).
     pub scraped_generation: AtomicU64,
     /// `requests_total` cached from the last successful probe scrape.
     pub scraped_requests_total: AtomicU64,
@@ -69,8 +74,13 @@ pub struct BackendState {
 
 impl BackendState {
     pub fn new(index: usize, addr: SocketAddr) -> Self {
+        Self::new_shard(index, addr, 0)
+    }
+
+    pub fn new_shard(index: usize, addr: SocketAddr, shard: usize) -> Self {
         Self {
             index,
+            shard,
             addr,
             healthy: AtomicBool::new(false),
             ever_admitted: AtomicBool::new(false),
@@ -166,13 +176,29 @@ pub fn statz_u64(body: &str, key: &str) -> u64 {
     0
 }
 
+/// Everything one `/statz` probe scrape caches on the [`BackendState`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ProbeScrape {
+    pub generation: u64,
+    pub requests_total: u64,
+    /// Shard identity the worker reports (0/0 on pre-shard workers whose
+    /// statz lacks the keys — tolerated only by unsharded fleets).
+    pub shard_index: u64,
+    pub shard_count: u64,
+}
+
 /// Probe the worker via `GET /statz`: a 200 doubles as liveness, and the
 /// body yields the cached observability fields. `None` ⇒ down.
-pub fn probe_scrape(addr: &SocketAddr, timeout: Duration) -> Option<(u64, u64)> {
+pub fn probe_scrape(addr: &SocketAddr, timeout: Duration) -> Option<ProbeScrape> {
     match roundtrip(addr, timeout, "GET", "/statz") {
         Ok(resp) if resp.status == 200 => {
             let body = String::from_utf8_lossy(&resp.body);
-            Some((statz_u64(&body, "generation"), statz_u64(&body, "requests_total")))
+            Some(ProbeScrape {
+                generation: statz_u64(&body, "generation"),
+                requests_total: statz_u64(&body, "requests_total"),
+                shard_index: statz_u64(&body, "shard_index"),
+                shard_count: statz_u64(&body, "shard_count"),
+            })
         }
         _ => None,
     }
@@ -203,9 +229,15 @@ impl Default for ProbeConfig {
 }
 
 /// Prober loop body: sweep every backend, sleep, repeat until `shutdown`.
+/// `expected_shards` is the fleet's shard count: a worker whose statz
+/// reports the wrong shard identity (mis-resolved snapshot, stale binary)
+/// is treated as DOWN — routing a scatter-gather request to a wrong-shard
+/// worker would silently zero part of the margin, so placement is a
+/// health condition, not just a gauge.
 pub fn prober_loop(
     backends: Arc<Vec<Arc<BackendState>>>,
     cfg: ProbeConfig,
+    expected_shards: usize,
     shutdown: Arc<AtomicBool>,
 ) {
     let slice = cfg.interval.min(Duration::from_millis(25)).max(Duration::from_millis(1));
@@ -215,12 +247,34 @@ pub fn prober_loop(
                 return;
             }
             let scraped = probe_scrape(&b.addr, cfg.timeout);
-            if let Some((generation, requests_total)) = scraped {
-                b.scraped_generation.store(generation, Ordering::Relaxed);
-                b.scraped_requests_total.store(requests_total, Ordering::Relaxed);
+            let mut ok = false;
+            if let Some(s) = scraped {
+                // an unsharded fleet tolerates legacy workers whose statz
+                // predates the shard keys (scraped as 0/0); a SHARDED
+                // fleet must not — a worker that cannot state its shard
+                // identity (stale binary, wrong snapshot) would zero part
+                // of every merged margin, so it stays out of rotation
+                let placed = if expected_shards.max(1) == 1 {
+                    s.shard_count <= 1 && s.shard_index == 0
+                } else {
+                    s.shard_count == expected_shards as u64 && s.shard_index == b.shard as u64
+                };
+                if placed {
+                    ok = true;
+                    b.scraped_generation.store(s.generation, Ordering::Relaxed);
+                    b.scraped_requests_total.store(s.requests_total, Ordering::Relaxed);
+                } else {
+                    crate::util::logger::log(
+                        crate::util::logger::Level::Warn,
+                        format_args!(
+                            "backend {} answers as shard {}/{} but is slotted as shard {}/{}; keeping it out of rotation",
+                            b.index, s.shard_index, s.shard_count, b.shard, expected_shards
+                        ),
+                    );
+                }
             }
-            b.last_probe_ok.store(scraped.is_some(), Ordering::Relaxed);
-            b.note_probe(scraped.is_some(), cfg.admit_after, cfg.eject_after);
+            b.last_probe_ok.store(ok, Ordering::Relaxed);
+            b.note_probe(ok, cfg.admit_after, cfg.eject_after);
         }
         let mut slept = Duration::ZERO;
         while slept < cfg.interval {
@@ -298,6 +352,6 @@ mod tests {
             let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
             l.local_addr().unwrap()
         };
-        assert_eq!(probe_scrape(&addr, Duration::from_millis(200)), None);
+        assert!(probe_scrape(&addr, Duration::from_millis(200)).is_none());
     }
 }

@@ -21,15 +21,25 @@
 //!
 //! - [`balancer`] — power-of-two-choices on in-flight counts, healthy
 //!   backends only, bounded retry-on-failure (a restarting worker never
-//!   surfaces an error to clients), aggregated `/statz`.
-//! - [`supervisor`] — spawns the worker processes, respawns any that die
-//!   (on the latest published snapshot), and rolls new generations across
-//!   the fleet one worker at a time via each worker's `/admin/reload`.
+//!   surfaces an error to clients), aggregated `/statz`; with
+//!   `--shards K`, the generation-pinned scatter-gather path
+//!   (`/predict` gathers per-shard weight bits and re-runs the canonical
+//!   margin accumulation, `/topk` K-way-merges the per-shard tables).
+//! - [`supervisor`] — spawns the worker processes (one feature-range
+//!   shard snapshot each when sharded), respawns any that die (on the
+//!   latest published snapshot), and rolls new generations across the
+//!   fleet one worker at a time via each worker's `/admin/reload`.
 //! - [`health`] — per-backend state (the routing signal) + the prober
-//!   (probe-scrapes each worker's `/statz`) with eject/re-admit
-//!   hysteresis.
+//!   (probe-scrapes each worker's `/statz`, verifying shard placement)
+//!   with eject/re-admit hysteresis.
 //!
-//! CLI: `bear fleet --backends N --watch-manifest DIR/MANIFEST`.
+//! CLI: `bear fleet --backends N [--shards K] --watch-manifest
+//! DIR/MANIFEST`. With `--shards K` each worker holds only its range's
+//! slice of the top-k tables — fleet memory scales horizontally instead
+//! of being replicated N times — and `tests/integration_shard.rs` proves
+//! the scatter-gather path serves predictions **bit-identical** to an
+//! unsharded server, with zero dropped requests through a shard-worker
+//! SIGKILL and a rolling reload, never blending two generations.
 //! `tests/integration_fleet.rs` is the acceptance harness: a closed-loop
 //! load run sees **zero** errors while one backend is SIGKILLed and
 //! respawned and while a rolling reload crosses multiple generations.
@@ -56,8 +66,14 @@ use std::time::{Duration, Instant};
 pub struct FleetConfig {
     /// Balancer bind address (port 0 ⇒ ephemeral).
     pub addr: String,
-    /// Worker processes to run.
+    /// Worker processes to run (total across shards; must be a multiple
+    /// of `shards` — backend `i` serves shard `i % shards`, so each shard
+    /// gets `backends / shards` replicas).
     pub backends: usize,
+    /// Feature-range shards (1 = every worker holds the whole model;
+    /// K > 1 = scatter-gather serving over per-shard snapshots, the
+    /// per-node-sublinear-memory mode).
+    pub shards: usize,
     /// First worker port; workers listen on `base_port..base_port+N`.
     /// 0 ⇒ pick free ports automatically.
     pub base_port: u16,
@@ -91,6 +107,7 @@ impl Default for FleetConfig {
         Self {
             addr: "127.0.0.1:8360".to_string(),
             backends: 3,
+            shards: 1,
             base_port: 0,
             model: None,
             watch_manifest: None,
@@ -221,6 +238,13 @@ impl Drop for FleetHandle {
 /// running fleet.
 pub fn start_fleet(cfg: FleetConfig) -> Result<FleetHandle> {
     let n = cfg.backends.max(1);
+    let shards = cfg.shards.max(1);
+    if shards > n {
+        bail!("--shards {shards} needs at least one backend per shard (got {n})");
+    }
+    if n % shards != 0 {
+        bail!("--backends {n} must be a multiple of --shards {shards} (equal replicas per shard)");
+    }
     let ports: Vec<u16> = if cfg.base_port == 0 {
         pick_free_ports(n)?
     } else {
@@ -241,7 +265,7 @@ pub fn start_fleet(cfg: FleetConfig) -> Result<FleetHandle> {
             .enumerate()
             .map(|(i, &p)| {
                 let addr: SocketAddr = format!("127.0.0.1:{p}").parse().expect("loopback addr");
-                Arc::new(BackendState::new(i, addr))
+                Arc::new(BackendState::new_shard(i, addr, i % shards))
             })
             .collect(),
     );
@@ -264,6 +288,7 @@ pub fn start_fleet(cfg: FleetConfig) -> Result<FleetHandle> {
             bin: worker_bin,
             model: cfg.model.clone(),
             watch_manifest: cfg.watch_manifest.clone(),
+            shards,
             serve_workers,
             log_dir: log_dir.clone(),
             admin_timeout: Duration::from_secs(5),
@@ -283,7 +308,7 @@ pub fn start_fleet(cfg: FleetConfig) -> Result<FleetHandle> {
         let shutdown = shutdown.clone();
         std::thread::Builder::new()
             .name("bear-fleet-prober".into())
-            .spawn(move || health::prober_loop(backends, probe_cfg, shutdown))
+            .spawn(move || health::prober_loop(backends, probe_cfg, shards, shutdown))
             .expect("spawn fleet prober thread")
     };
 
@@ -315,7 +340,8 @@ pub fn start_fleet(cfg: FleetConfig) -> Result<FleetHandle> {
 
     let mut bal_cfg = cfg.balancer.clone();
     bal_cfg.addr = cfg.addr.clone();
-    let balancer = Arc::new(Balancer::new(bal_cfg, backends.clone(), target_generation));
+    let balancer =
+        Arc::new(Balancer::new(bal_cfg, backends.clone(), target_generation, shards));
     let handle = match balancer::start_balancer(balancer, shutdown.clone()) {
         Ok(h) => h,
         Err(e) => {
@@ -332,9 +358,10 @@ pub fn start_fleet(cfg: FleetConfig) -> Result<FleetHandle> {
     log(
         Level::Info,
         format_args!(
-            "fleet up: balancer on http://{} over {} backends (ports {:?}), logs in {:?}",
+            "fleet up: balancer on http://{} over {} backends / {} shard(s) (ports {:?}), logs in {:?}",
             handle.addr(),
             n,
+            shards,
             ports,
             log_dir
         ),

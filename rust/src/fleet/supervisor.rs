@@ -27,6 +27,7 @@
 
 use crate::fleet::health::{self, BackendState};
 use crate::online::publisher::{Manifest, MANIFEST_FILE};
+use crate::serve::shard::shard_sibling_path;
 use crate::util::logger::{log, Level};
 use anyhow::{bail, Context, Result};
 use std::path::{Path, PathBuf};
@@ -41,10 +42,17 @@ pub struct WorkerSpec {
     /// The `bear` binary to exec (`current_exe` for `bear fleet`; the
     /// test harness points it at `CARGO_BIN_EXE_bear`).
     pub bin: PathBuf,
-    /// Snapshot to serve when no manifest (or no publication yet).
+    /// Snapshot to serve when no manifest (or no publication yet). For a
+    /// sharded fleet this is the *base* path: backend `i` serving shard
+    /// `s` loads the `-s{s}of{K}` sibling (`bear export --shards K`
+    /// writes exactly that layout).
     pub model: Option<PathBuf>,
     /// Publication MANIFEST; enables rolling reload and restart catch-up.
     pub watch_manifest: Option<PathBuf>,
+    /// Feature-range shard count (1 = unsharded). Must match the
+    /// manifest's `shards` key; a mismatched publication fails the spawn
+    /// loudly instead of serving the wrong slice of the model.
+    pub shards: usize,
     /// `--workers` per backend process.
     pub serve_workers: usize,
     /// Directory for per-worker log files.
@@ -93,20 +101,28 @@ pub struct Supervisor {
     target_generation: Arc<AtomicU64>,
 }
 
-/// Resolve the snapshot a (re)spawned worker should load: the manifest's
-/// current publication when available, else the configured model.
-fn resolve_model(spec: &WorkerSpec) -> Result<PathBuf> {
+/// Resolve the snapshot a (re)spawned worker for `shard` should load:
+/// the manifest's current publication when available, else the
+/// configured model (its shard sibling for a sharded fleet).
+fn resolve_model(spec: &WorkerSpec, shard: usize) -> Result<PathBuf> {
+    let shards = spec.shards.max(1);
     if let Some(manifest_path) = &spec.watch_manifest {
         if manifest_path.exists() {
             let manifest = Manifest::read(manifest_path)?;
-            let snap = manifest.snapshot_path(manifest_path);
+            if manifest.shards != shards {
+                bail!(
+                    "manifest {manifest_path:?} publishes {} shard(s) but the fleet runs {shards}",
+                    manifest.shards
+                );
+            }
+            let snap = manifest.shard_snapshot_path(manifest_path, shard)?;
             if snap.exists() {
                 return Ok(snap);
             }
         }
     }
     match &spec.model {
-        Some(m) => Ok(m.clone()),
+        Some(m) => Ok(if shards > 1 { shard_sibling_path(m, shard, shards) } else { m.clone() }),
         None => bail!(
             "no snapshot to serve: pass --model, or --watch-manifest pointing at a {} with \
              at least one publication",
@@ -205,9 +221,10 @@ impl Supervisor {
         Ok(Self { spec, backends, children: Mutex::new(children), target_generation })
     }
 
-    /// Spawn one worker process on its backend's port.
+    /// Spawn one worker process on its backend's port, serving its
+    /// backend's shard.
     fn spawn_worker(&self, index: usize) -> Result<Child> {
-        let model = resolve_model(&self.spec)?;
+        let model = resolve_model(&self.spec, self.backends[index].shard)?;
         let addr = self.backends[index].addr;
         let out = log_file(&self.spec.log_dir, index)?;
         let err = out.try_clone().context("cloning worker log handle")?;
@@ -232,10 +249,15 @@ impl Supervisor {
         let child = cmd
             .spawn()
             .with_context(|| format!("spawning worker {index} ({:?} serve)", self.spec.bin))?;
+        let shard_note = if self.spec.shards > 1 {
+            format!(" (shard {}/{})", self.backends[index].shard, self.spec.shards)
+        } else {
+            String::new()
+        };
         log(
             Level::Info,
             format_args!(
-                "fleet worker {index} up: pid {} on {addr} serving {model:?}",
+                "fleet worker {index} up: pid {} on {addr} serving {model:?}{shard_note}",
                 child.id()
             ),
         );
@@ -466,34 +488,79 @@ mod tests {
         std::fs::create_dir_all(&dir).unwrap();
         let manifest_path = dir.join(MANIFEST_FILE);
         let fallback = dir.join("fallback.bearsnap");
-        let spec = |manifest: Option<PathBuf>, model: Option<PathBuf>| WorkerSpec {
+        let spec = |manifest: Option<PathBuf>, model: Option<PathBuf>, shards: usize| WorkerSpec {
             bin: PathBuf::from("bear"),
             model,
             watch_manifest: manifest,
+            shards,
             serve_workers: 1,
             log_dir: dir.clone(),
             admin_timeout: Duration::from_millis(100),
         };
 
         // no manifest on disk → fallback model
-        let s = spec(Some(manifest_path.clone()), Some(fallback.clone()));
-        assert_eq!(resolve_model(&s).unwrap(), fallback);
+        let s = spec(Some(manifest_path.clone()), Some(fallback.clone()), 1);
+        assert_eq!(resolve_model(&s, 0).unwrap(), fallback);
 
         // manifest pointing at an existing snapshot wins
         let snap = dir.join("gen-00000007.bearsnap");
         std::fs::write(&snap, b"x").unwrap();
-        Manifest { generation: 7, file: "gen-00000007.bearsnap".into(), crc32: 0 }
-            .write(&manifest_path)
-            .unwrap();
-        assert_eq!(resolve_model(&s).unwrap(), snap);
+        Manifest {
+            generation: 7,
+            file: "gen-00000007.bearsnap".into(),
+            crc32: 0,
+            shards: 1,
+            shard_crcs: vec![0],
+        }
+        .write(&manifest_path)
+        .unwrap();
+        assert_eq!(resolve_model(&s, 0).unwrap(), snap);
+
+        // a sharded fleet refuses an unsharded manifest
+        let sharded = spec(Some(manifest_path.clone()), Some(fallback.clone()), 3);
+        assert!(resolve_model(&sharded, 1).is_err());
 
         // manifest naming a pruned/missing snapshot → fallback again
         std::fs::remove_file(&snap).unwrap();
-        assert_eq!(resolve_model(&s).unwrap(), fallback);
+        assert_eq!(resolve_model(&s, 0).unwrap(), fallback);
 
         // neither → error
-        let s = spec(None, None);
-        assert!(resolve_model(&s).is_err());
+        let s = spec(None, None, 1);
+        assert!(resolve_model(&s, 0).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn resolve_model_maps_shards_to_their_files() {
+        let dir =
+            std::env::temp_dir().join(format!("bear-fleet-resolve-shard-{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        let manifest_path = dir.join(MANIFEST_FILE);
+        Manifest {
+            generation: 3,
+            file: "gen-00000003.bearsnap".into(),
+            crc32: 1,
+            shards: 2,
+            shard_crcs: vec![1, 2],
+        }
+        .write(&manifest_path)
+        .unwrap();
+        let shard1 = dir.join("gen-00000003-s1of2.bearsnap");
+        std::fs::write(&shard1, b"x").unwrap();
+        let spec = WorkerSpec {
+            bin: PathBuf::from("bear"),
+            model: Some(dir.join("base.bearsnap")),
+            watch_manifest: Some(manifest_path),
+            shards: 2,
+            serve_workers: 1,
+            log_dir: dir.clone(),
+            admin_timeout: Duration::from_millis(100),
+        };
+        // shard 1's publication exists → resolved from the manifest
+        assert_eq!(resolve_model(&spec, 1).unwrap(), shard1);
+        // shard 0's is missing → the base model's shard sibling
+        assert_eq!(resolve_model(&spec, 0).unwrap(), dir.join("base-s0of2.bearsnap"));
         std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -206,22 +206,57 @@ fn cmd_export(args: &Args) -> Result<()> {
     let algo = parse_algo(&args.str_or("algo", "bear"))?;
     let cf = args.parse_or("cf", 100.0)?;
     let out = std::path::PathBuf::from(args.str_or("out", "model.bearsnap"));
+    let shards: usize = args.parse_or("shards", 1usize)?;
     let mut spec = RealSpec::for_dataset(dataset);
     apply_spec_flags(args, &mut spec)?;
     let t0 = std::time::Instant::now();
-    let model = bear::serve::train_servable(dataset, algo, cf, &spec)?;
-    model.save(&out)?;
+    let mut model = bear::serve::train_servable(dataset, algo, cf, &spec)?;
+    if args.flag("no-sketch") {
+        // top-k-table-only snapshot: out-of-table features score 0, and a
+        // sharded export is a true 1/K memory slice per shard
+        model = model.without_sketch();
+    }
     let mut t = Table::new(
         &format!("export {} ({} CF={cf:.1})", dataset.label(), algo.label()),
-        &["snapshot", "features", "sketch cells", "bytes", "wall"],
+        &["snapshot", "range", "features", "sketch cells", "bytes", "wall"],
     );
-    t.row(&[
-        out.display().to_string(),
-        model.n_features().to_string(),
-        model.sketch_cells().to_string(),
-        human_bytes(model.memory_bytes()),
-        human_duration(t0.elapsed()),
-    ]);
+    if shards <= 1 {
+        model.save(&out)?;
+        t.row(&[
+            out.display().to_string(),
+            "full".into(),
+            model.n_features().to_string(),
+            model.sketch_cells().to_string(),
+            human_bytes(model.memory_bytes()),
+            human_duration(t0.elapsed()),
+        ]);
+    } else {
+        // one BEARSNAP-v3 shard file per contiguous feature range, built
+        // and written one at a time (peak memory: one shard replica); the
+        // -s{i}of{K} layout is exactly what `bear fleet --shards K
+        // --model OUT` resolves
+        let starts = model.shard_starts_for(shards)?;
+        for i in 0..shards {
+            let sm = model.shard_at(&starts, i);
+            let path = bear::serve::shard::shard_sibling_path(&out, i, shards);
+            sm.save(&path)?;
+            let (lo, hi) = sm.shard_range();
+            t.row(&[
+                path.display().to_string(),
+                format!("[{lo}, {hi}]"),
+                sm.n_features().to_string(),
+                sm.sketch_cells().to_string(),
+                human_bytes(sm.memory_bytes()),
+                human_duration(t0.elapsed()),
+            ]);
+        }
+        if model.has_sketch() {
+            eprintln!(
+                "[bear] note: the Count Sketch fallback cannot be range-sliced and was \
+                 replicated into every shard; pass --no-sketch for 1/{shards} memory per shard"
+            );
+        }
+    }
     t.print();
     Ok(())
 }
@@ -239,6 +274,8 @@ fn cmd_online(args: &Args) -> Result<()> {
         max_batches: args.parse_or("max-batches", defaults.max_batches)?,
         keep: args.parse_or("keep", defaults.keep)?,
         channel_capacity: args.parse_or("channel-capacity", defaults.channel_capacity)?,
+        shards: args.parse_or("shards", defaults.shards)?,
+        strip_sketch: args.flag("no-sketch"),
     };
     // the exact snapshot name depends on the resumed generation counter —
     // point the operator at the MANIFEST, which always names the latest
@@ -291,6 +328,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let workers = cfg.workers;
     let watching = cfg.watch_manifest.clone();
     let handle = bear::serve::serve(model.clone(), cfg)?;
+    if model.shard_count() > 1 {
+        let (lo, hi) = model.shard_range();
+        eprintln!(
+            "[bear] shard {}/{}: serving feature range [{lo}, {hi}] (partial margins; front with bear fleet --shards {})",
+            model.shard_index(),
+            model.shard_count(),
+            model.shard_count(),
+        );
+    }
     eprintln!(
         "[bear] serving {} (generation {}, {} classes, {} features, {} sketch cells, {}) on http://{} with {} workers",
         path.display(),
@@ -324,9 +370,13 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     let mut balancer = defaults.balancer.clone();
     balancer.workers = args.parse_or("balancer-workers", balancer.workers)?;
     balancer.max_attempts = args.parse_or("max-attempts", balancer.max_attempts)?;
+    let shards: usize = args.parse_or("shards", defaults.shards)?;
+    // --shards K without --backends runs one worker per shard
+    let default_backends = if shards > 1 { shards } else { defaults.backends };
     let cfg = bear::fleet::FleetConfig {
         addr: args.str_or("addr", &defaults.addr),
-        backends: args.parse_or("backends", defaults.backends)?,
+        backends: args.parse_or("backends", default_backends)?,
+        shards,
         base_port: args.parse_or("base-port", defaults.base_port)?,
         model: args.get("model").map(std::path::PathBuf::from),
         watch_manifest: args.get("watch-manifest").map(std::path::PathBuf::from),
@@ -344,7 +394,7 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     let watching = cfg.watch_manifest.clone();
     let handle = bear::fleet::start_fleet(cfg)?;
     eprintln!(
-        "[bear] fleet: balancer on http://{} over {backends} shared-nothing workers (ports {}), logs in {}",
+        "[bear] fleet: balancer on http://{} over {backends} shared-nothing workers / {shards} feature-range shard(s) (ports {}), logs in {}",
         handle.addr(),
         handle
             .backend_addrs()
@@ -425,10 +475,13 @@ commands:
   artifacts   list the compiled PJRT artifacts [--artifact-dir DIR]
   export      train + write a serving snapshot (DNA → one table per class)
               --dataset D --algo bear|mission --cf X --out FILE
+              [--shards K]    (K feature-range shard files OUT-s{i}ofK)
+              [--no-sketch]   (top-k table only; true 1/K memory per shard)
               [--n-train N] [--topk K] [--eta E] [--batch B] [--epochs N]
   online      continuous train + publish generation-numbered snapshots
               --dataset D --algo bear|mission --cf X --dir DIR
               [--publish-every N] [--max-batches N] [--keep G]
+              [--shards K] [--no-sketch]   (per-shard files, one MANIFEST)
               [--n-train N] [--topk K] [--eta E] [--batch B]
   serve       serve a snapshot over HTTP
               --model FILE [--addr H:P] [--workers N] [--queue-depth N]
@@ -437,6 +490,9 @@ commands:
               [--parent-pid P]   (exit when process P dies; set by fleet)
   fleet       shared-nothing multi-process serving tier behind a balancer
               --model FILE | --watch-manifest DIR/MANIFEST
+              [--shards K]    (feature-range scatter-gather; workers hold
+                               1/K of the tables; predictions stay
+                               bit-identical to an unsharded server)
               [--backends N] [--addr H:P] [--base-port P]
               [--serve-workers N] [--balancer-workers N]
               [--max-attempts N] [--probe-ms MS] [--monitor-ms MS]

@@ -35,7 +35,7 @@ pub mod publisher;
 pub mod reload;
 
 pub use drift::{drift_between, topk_jaccard, DriftStats};
-pub use publisher::{Manifest, Publication, Publisher, MANIFEST_FILE};
+pub use publisher::{Manifest, Publication, Publisher, ShardedPublication, MANIFEST_FILE};
 pub use reload::{peek_generation, CachedModel, ModelHolder, ReloadOutcome, ReloadStats, Reloader};
 
 use crate::coordinator::experiments::{
@@ -63,6 +63,14 @@ pub struct OnlineConfig {
     pub keep: usize,
     /// Prefetch-channel capacity (backpressure bound).
     pub channel_capacity: usize,
+    /// Publish each generation as this many feature-range shard files
+    /// under one MANIFEST (1 = unsharded; `bear fleet --shards K`
+    /// consumes the sharded stream).
+    pub shards: usize,
+    /// Drop the Count Sketch fallback before publishing (top-k-table-only
+    /// snapshots — with `shards > 1` this makes per-shard memory a true
+    /// 1/K slice instead of replicating the sketch into every shard).
+    pub strip_sketch: bool,
 }
 
 impl Default for OnlineConfig {
@@ -73,6 +81,8 @@ impl Default for OnlineConfig {
             max_batches: 0,
             keep: 4,
             channel_capacity: 4,
+            shards: 1,
+            strip_sketch: false,
         }
     }
 }
@@ -135,7 +145,7 @@ pub fn run_online(
         sel.train_minibatch(&mb);
         batches += 1;
         if batches % publish_every == 0 {
-            last_drift = publish_generation(&mut publisher, sel.as_ref(), &mut prev, batches)?;
+            last_drift = publish_generation(&mut publisher, sel.as_ref(), &mut prev, batches, cfg)?;
             last_published_batch = batches;
             generations += 1;
         }
@@ -147,7 +157,7 @@ pub fn run_online(
     // stream) must not discard trained batches, and a run shorter than
     // publish_every must still leave a generation for the serve tier
     if batches > last_published_batch {
-        last_drift = publish_generation(&mut publisher, sel.as_ref(), &mut prev, batches)?;
+        last_drift = publish_generation(&mut publisher, sel.as_ref(), &mut prev, batches, cfg)?;
         generations += 1;
     }
     loader.shutdown();
@@ -167,15 +177,21 @@ fn publish_generation(
     sel: &dyn crate::algo::SketchedSelector,
     prev: &mut Option<ServableModel>,
     batches: u64,
+    cfg: &OnlineConfig,
 ) -> Result<Option<DriftStats>> {
-    let model = ServableModel::from_sketched(sel.sketched_state(), LossKind::Logistic, 0.0);
+    let mut model = ServableModel::from_sketched(sel.sketched_state(), LossKind::Logistic, 0.0);
+    if cfg.strip_sketch {
+        model = model.without_sketch();
+    }
     let drift = prev.as_ref().map(|p| drift_between(p, &model));
-    let publication = publisher.publish(&model)?;
+    let publication = publisher.publish_sharded(&model, cfg.shards.max(1))?;
+    let shard_note =
+        if cfg.shards > 1 { format!(", {} shards", cfg.shards) } else { String::new() };
     if let Some(d) = drift {
         log(
             Level::Info,
             format_args!(
-                "published generation {} ({} bytes, batch {batches}, loss {:.4}): topk_jaccard {:.3}, coord_norm_delta {:.4}",
+                "published generation {} ({} bytes{shard_note}, batch {batches}, loss {:.4}): topk_jaccard {:.3}, coord_norm_delta {:.4}",
                 publication.generation,
                 publication.bytes,
                 sel.last_loss(),
@@ -187,7 +203,7 @@ fn publish_generation(
         log(
             Level::Info,
             format_args!(
-                "published generation {} ({} bytes, batch {batches}, loss {:.4})",
+                "published generation {} ({} bytes{shard_note}, batch {batches}, loss {:.4})",
                 publication.generation,
                 publication.bytes,
                 sel.last_loss(),

@@ -25,6 +25,7 @@
 
 use crate::cli::parse_kv;
 use crate::coordinator::checkpoint::{crc32, write_atomic};
+use crate::serve::shard::{shard_file_name, MAX_SHARDS};
 use crate::serve::ServableModel;
 use anyhow::{bail, Context, Result};
 use std::path::{Path, PathBuf};
@@ -32,15 +33,26 @@ use std::path::{Path, PathBuf};
 /// Manifest file name inside a publication directory.
 pub const MANIFEST_FILE: &str = "MANIFEST";
 
-/// The parsed `MANIFEST` pointer.
+/// The parsed `MANIFEST` pointer. A sharded publication keeps ONE
+/// manifest for the whole shard set (`shards = K`, one CRC per shard):
+/// readers see every shard of a generation appear atomically, because all
+/// shard files are durable before the manifest swings.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Manifest {
     /// Latest published generation (monotonically increasing from 1).
     pub generation: u64,
-    /// Snapshot file name, relative to the manifest's directory.
+    /// Base snapshot file name, relative to the manifest's directory.
+    /// Shard `i` of a sharded publication lives at
+    /// [`shard_file_name`]`(file, i, shards)`.
     pub file: String,
-    /// CRC-32 of the complete snapshot file the manifest names.
+    /// CRC-32 of shard 0 (the whole snapshot when unsharded) — the
+    /// legacy key, kept first so old readers still verify something.
     pub crc32: u32,
+    /// Shard count of this publication (1 = unsharded; absent key reads
+    /// as 1 for manifests written before sharding existed).
+    pub shards: usize,
+    /// Per-shard whole-file CRCs (`len == shards`; `[crc32]` when 1).
+    pub shard_crcs: Vec<u32>,
 }
 
 impl Manifest {
@@ -56,24 +68,68 @@ impl Manifest {
             bail!("manifest file name {file:?} must be a plain sibling file");
         }
         let crc: u32 = get("crc32")?.parse().context("manifest crc32")?;
-        Ok(Self { generation, file, crc32: crc })
+        let shards: usize = match kv.get("shards") {
+            Some(s) => s.parse().context("manifest shards")?,
+            None => 1,
+        };
+        if shards == 0 || shards > MAX_SHARDS {
+            bail!("manifest shard count {shards} out of range 1..={MAX_SHARDS}");
+        }
+        let mut shard_crcs = vec![crc];
+        for i in 1..shards {
+            let key = format!("crc32_{i}");
+            shard_crcs.push(get(&key)?.parse().with_context(|| format!("manifest {key}"))?);
+        }
+        Ok(Self { generation, file, crc32: crc, shards, shard_crcs })
     }
 
     /// Atomically write this manifest at `path` (tmp + rename).
     pub fn write(&self, path: &Path) -> Result<()> {
-        let body = format!(
+        let mut body = format!(
             "# bear online publication pointer — do not edit by hand\ngeneration = {}\nfile = {}\ncrc32 = {}\n",
             self.generation, self.file, self.crc32
         );
+        if self.shards > 1 {
+            body.push_str(&format!("shards = {}\n", self.shards));
+            for (i, crc) in self.shard_crcs.iter().enumerate().skip(1) {
+                body.push_str(&format!("crc32_{i} = {crc}\n"));
+            }
+        }
         write_atomic(body.as_bytes(), path)
     }
 
-    /// Absolute path of the snapshot this manifest points at.
+    /// Absolute path of the snapshot this manifest points at (shard 0 /
+    /// the whole file when unsharded).
     pub fn snapshot_path(&self, manifest_path: &Path) -> PathBuf {
         match manifest_path.parent() {
             Some(dir) => dir.join(&self.file),
             None => PathBuf::from(&self.file),
         }
+    }
+
+    /// File name of shard `index` of this publication.
+    pub fn shard_file(&self, index: usize) -> Result<String> {
+        if index >= self.shards {
+            bail!("shard {index} out of range (manifest has {} shard(s))", self.shards);
+        }
+        Ok(shard_file_name(&self.file, index, self.shards))
+    }
+
+    /// Absolute path of shard `index`'s snapshot file.
+    pub fn shard_snapshot_path(&self, manifest_path: &Path, index: usize) -> Result<PathBuf> {
+        let name = self.shard_file(index)?;
+        Ok(match manifest_path.parent() {
+            Some(dir) => dir.join(name),
+            None => PathBuf::from(name),
+        })
+    }
+
+    /// Whole-file CRC-32 of shard `index`.
+    pub fn shard_crc(&self, index: usize) -> Result<u32> {
+        self.shard_crcs
+            .get(index)
+            .copied()
+            .with_context(|| format!("shard {index} out of range ({} shard(s))", self.shards))
     }
 }
 
@@ -86,6 +142,18 @@ pub struct Publication {
     /// Whole-file CRC-32 recorded in the manifest.
     pub crc32: u32,
     /// Snapshot size on disk.
+    pub bytes: usize,
+}
+
+/// One completed sharded publication (K shard files, one manifest).
+#[derive(Clone, Debug)]
+pub struct ShardedPublication {
+    pub generation: u64,
+    /// Absolute paths of the shard snapshots, in shard order.
+    pub files: Vec<PathBuf>,
+    /// Per-shard whole-file CRCs recorded in the manifest.
+    pub crcs: Vec<u32>,
+    /// Total bytes across every shard file.
     pub bytes: usize,
 }
 
@@ -141,32 +209,99 @@ impl Publisher {
         let bytes = model.encode_with_generation(generation);
         let crc = crc32(&bytes);
         write_atomic(&bytes, &path)?;
-        Manifest { generation, file, crc32: crc }.write(&self.manifest_path())?;
+        Manifest { generation, file, crc32: crc, shards: 1, shard_crcs: vec![crc] }
+            .write(&self.manifest_path())?;
         self.next_generation += 1;
         self.prune();
         Ok(Publication { generation, path, crc32: crc, bytes: bytes.len() })
     }
 
-    /// Remove generation files outside the retention window. Best-effort:
-    /// a reader mid-load of the newest generations is never affected
-    /// because only generations ≤ current − keep are removed.
+    /// Publish `model` split into `shards` feature-range shard files
+    /// (see [`ServableModel::into_shards`]) under one manifest: every
+    /// shard file is durable (tmp+rename each) *before* the manifest
+    /// swings, so a polling reader always sees a complete shard set of
+    /// one generation — never a mix of two.
+    pub fn publish_sharded(
+        &mut self,
+        model: &ServableModel,
+        shards: usize,
+    ) -> Result<ShardedPublication> {
+        if shards <= 1 {
+            let p = self.publish(model)?;
+            return Ok(ShardedPublication {
+                generation: p.generation,
+                files: vec![p.path],
+                crcs: vec![p.crc32],
+                bytes: p.bytes,
+            });
+        }
+        let generation = self.next_generation;
+        let base = generation_file(generation);
+        // build-encode-drop one shard at a time: peak memory stays at one
+        // shard replica, not K (the sketch fallback, when kept, is cloned
+        // into each shard)
+        let starts = model.shard_starts_for(shards)?;
+        let mut files = Vec::with_capacity(shards);
+        let mut crcs = Vec::with_capacity(shards);
+        let mut total = 0usize;
+        for i in 0..shards {
+            let sm = model.shard_at(&starts, i);
+            let path = self.dir.join(shard_file_name(&base, i, shards));
+            let bytes = sm.encode_with_generation(generation);
+            let crc = crc32(&bytes);
+            write_atomic(&bytes, &path)?;
+            total += bytes.len();
+            files.push(path);
+            crcs.push(crc);
+        }
+        Manifest {
+            generation,
+            file: base,
+            crc32: crcs[0],
+            shards,
+            shard_crcs: crcs.clone(),
+        }
+        .write(&self.manifest_path())?;
+        self.next_generation += 1;
+        self.prune();
+        Ok(ShardedPublication { generation, files, crcs, bytes: total })
+    }
+
+    /// Remove generation files outside the retention window (shard
+    /// siblings included). Best-effort: a reader mid-load of the newest
+    /// generations is never affected because only generations ≤
+    /// current − keep are removed.
     fn prune(&self) {
         let newest = self.next_generation - 1;
         let floor = newest.saturating_sub(self.keep as u64 - 1);
-        let mut g = floor;
-        // walk downward from the oldest retained generation; stop at the
-        // first gap (previous prunes already cleared everything below)
-        while g > 0 {
-            g -= 1;
-            if g == 0 {
-                break;
-            }
-            let p = self.dir.join(generation_file(g));
-            if std::fs::remove_file(&p).is_err() {
-                break;
+        let entries = match std::fs::read_dir(&self.dir) {
+            Ok(e) => e,
+            Err(_) => return,
+        };
+        for entry in entries.flatten() {
+            let name = entry.file_name();
+            let name = name.to_string_lossy();
+            if let Some(g) = parse_generation_file(&name) {
+                if g < floor {
+                    let _ = std::fs::remove_file(entry.path());
+                }
             }
         }
     }
+}
+
+/// The generation number of a `gen-XXXXXXXX*.bearsnap` file name
+/// (unsharded or shard sibling); `None` for anything else.
+fn parse_generation_file(name: &str) -> Option<u64> {
+    let rest = name.strip_prefix("gen-")?;
+    if !name.ends_with(".bearsnap") {
+        return None;
+    }
+    let digits: String = rest.chars().take_while(|c| c.is_ascii_digit()).collect();
+    if digits.is_empty() {
+        return None;
+    }
+    digits.parse().ok()
 }
 
 #[cfg(test)]
@@ -239,6 +374,41 @@ mod tests {
         // the manifest still resolves
         let man = Manifest::read(&p.manifest_path()).unwrap();
         assert!(man.snapshot_path(&p.manifest_path()).exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn sharded_publication_writes_every_shard_before_the_manifest() {
+        let dir = tmpdir("sharded");
+        let mut p = Publisher::new(&dir, 2).unwrap();
+        let pb = p.publish_sharded(&toy_model(1.0), 3).unwrap();
+        assert_eq!(pb.generation, 1);
+        assert_eq!(pb.files.len(), 3);
+        let man = Manifest::read(&p.manifest_path()).unwrap();
+        assert_eq!(man.shards, 3);
+        assert_eq!(man.shard_crcs.len(), 3);
+        assert_eq!(man.crc32, man.shard_crcs[0]);
+        for i in 0..3 {
+            let path = man.shard_snapshot_path(&p.manifest_path(), i).unwrap();
+            assert_eq!(path, pb.files[i]);
+            let data = std::fs::read(&path).unwrap();
+            assert_eq!(crc32(&data), man.shard_crc(i).unwrap());
+            let m = ServableModel::load(&path).unwrap();
+            assert_eq!(m.generation, 1);
+            assert_eq!(m.shard_index(), i as u32);
+            assert_eq!(m.shard_count(), 3);
+        }
+        assert!(man.shard_snapshot_path(&p.manifest_path(), 3).is_err());
+        // roundtrip through write/read preserves the shard fields
+        let copy = dir.join("MANIFEST-copy");
+        man.write(&copy).unwrap();
+        assert_eq!(Manifest::read(&copy).unwrap(), man);
+        // pruning removes whole shard sets outside the window
+        p.publish_sharded(&toy_model(2.0), 3).unwrap();
+        p.publish_sharded(&toy_model(3.0), 3).unwrap();
+        for f in &pb.files {
+            assert!(!f.exists(), "{f:?} should have been pruned");
+        }
         std::fs::remove_dir_all(&dir).ok();
     }
 

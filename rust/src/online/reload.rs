@@ -42,17 +42,37 @@ pub fn peek_generation(manifest_path: &Path) -> Option<u64> {
     Manifest::read(manifest_path).ok().map(|m| m.generation)
 }
 
-/// Epoch-swap holder for the serving snapshot.
+/// Epoch-swap holder for the serving snapshot. For **shard** servers it
+/// additionally retains the snapshot the last swap replaced: during a
+/// rolling reload a sharded fleet's balancer pins every scatter-gather
+/// request to one generation, and a worker that has already swapped must
+/// still be able to answer for the generation its peers are on — one
+/// retained generation is exactly the window a one-at-a-time roll needs.
+/// Unsharded servers are never generation-pinned, so they don't retain
+/// (retention would silently double steady-state model memory).
 pub struct ModelHolder {
-    current: Mutex<Arc<ServableModel>>,
+    slots: Mutex<HolderSlots>,
+    /// Keep the replaced snapshot on swap? Derived from the initial
+    /// model's shard identity (fixed per server process).
+    retain_previous: bool,
     /// Bumped on every swap; readers revalidate their cache against it
     /// with a single atomic load.
     version: AtomicU64,
 }
 
+struct HolderSlots {
+    current: Arc<ServableModel>,
+    previous: Option<Arc<ServableModel>>,
+}
+
 impl ModelHolder {
     pub fn new(model: Arc<ServableModel>) -> Self {
-        Self { current: Mutex::new(model), version: AtomicU64::new(1) }
+        let retain_previous = model.shard_count() > 1;
+        Self {
+            slots: Mutex::new(HolderSlots { current: model, previous: None }),
+            retain_previous,
+            version: AtomicU64::new(1),
+        }
     }
 
     /// Current swap epoch (monotone; starts at 1).
@@ -64,14 +84,25 @@ impl ModelHolder {
     /// Clone the current snapshot Arc (cold path: reloads and cache
     /// refreshes only).
     pub fn load(&self) -> Arc<ServableModel> {
-        self.current.lock().expect("model holder poisoned").clone()
+        self.slots.lock().expect("model holder poisoned").current.clone()
     }
 
-    /// Install a new snapshot; returns the one it replaced. In-flight
-    /// readers keep their old Arc and finish on it.
+    /// The snapshot the last swap replaced (`None` before the first
+    /// swap, and always `None` on unsharded servers). Serves
+    /// generation-pinned shard requests mid-roll.
+    pub fn load_previous(&self) -> Option<Arc<ServableModel>> {
+        self.slots.lock().expect("model holder poisoned").previous.clone()
+    }
+
+    /// Install a new snapshot; returns the one it replaced (also retained
+    /// as the previous generation on shard servers). In-flight readers
+    /// keep their old Arc and finish on it.
     pub fn swap(&self, model: Arc<ServableModel>) -> Arc<ServableModel> {
-        let mut cur = self.current.lock().expect("model holder poisoned");
-        let old = std::mem::replace(&mut *cur, model);
+        let mut slots = self.slots.lock().expect("model holder poisoned");
+        let old = std::mem::replace(&mut slots.current, model);
+        if self.retain_previous {
+            slots.previous = Some(old.clone());
+        }
         self.version.fetch_add(1, Ordering::Release);
         old
     }
@@ -145,6 +176,10 @@ pub struct Reloader {
     holder: Arc<ModelHolder>,
     manifest_path: PathBuf,
     stats: Arc<ReloadStats>,
+    /// Shard identity (index, count) of the model this server serves,
+    /// fixed at startup: reloads resolve and verify the matching shard
+    /// file of each publication.
+    shard: (u32, u32),
     gate: Mutex<()>,
 }
 
@@ -154,7 +189,9 @@ impl Reloader {
         manifest_path: PathBuf,
         stats: Arc<ReloadStats>,
     ) -> Self {
-        Self { holder, manifest_path, stats, gate: Mutex::new(()) }
+        let initial = holder.load();
+        let shard = (initial.shard_index(), initial.shard_count());
+        Self { holder, manifest_path, stats, shard, gate: Mutex::new(()) }
     }
 
     pub fn stats(&self) -> &Arc<ReloadStats> {
@@ -183,14 +220,23 @@ impl Reloader {
         if manifest.generation <= serving {
             return Ok(ReloadOutcome::UpToDate { generation: serving });
         }
-        let snap_path = manifest.snapshot_path(&self.manifest_path);
+        let (shard_index, shard_count) = self.shard;
+        if manifest.shards != shard_count as usize {
+            bail!(
+                "manifest publishes {} shard(s) but this server serves shard {}/{}",
+                manifest.shards,
+                shard_index,
+                shard_count
+            );
+        }
+        let snap_path = manifest.shard_snapshot_path(&self.manifest_path, shard_index as usize)?;
+        let want_crc = manifest.shard_crc(shard_index as usize)?;
         let bytes = std::fs::read(&snap_path)
             .with_context(|| format!("reading published snapshot {snap_path:?}"))?;
         let got = crc32(&bytes);
-        if got != manifest.crc32 {
+        if got != want_crc {
             bail!(
-                "snapshot {snap_path:?} CRC {got:#010x} does not match manifest {:#010x}",
-                manifest.crc32
+                "snapshot {snap_path:?} CRC {got:#010x} does not match manifest {want_crc:#010x}"
             );
         }
         let model = ServableModel::decode(&bytes)
@@ -200,6 +246,15 @@ impl Reloader {
                 "snapshot header generation {} disagrees with manifest {}",
                 model.generation,
                 manifest.generation
+            );
+        }
+        if model.shard_index() != shard_index || model.shard_count() != shard_count {
+            bail!(
+                "snapshot {snap_path:?} is shard {}/{} but this server serves shard {}/{}",
+                model.shard_index(),
+                model.shard_count(),
+                shard_index,
+                shard_count
             );
         }
         let next = Arc::new(model);

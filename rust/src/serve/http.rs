@@ -106,6 +106,7 @@ pub fn reason_for(status: u16) -> &'static str {
         200 => "OK",
         400 => "Bad Request",
         404 => "Not Found",
+        409 => "Conflict",
         413 => "Payload Too Large",
         500 => "Internal Server Error",
         502 => "Bad Gateway",

@@ -8,8 +8,13 @@
 //! - [`snapshot`] — [`snapshot::ServableModel`]: an immutable snapshot
 //!   exported from any trained selector (dense top-k weight tables — one
 //!   per class for multi-class models — + optional full Count Sketch
-//!   fallback), serialized in the "BEARSNAP" v2 format (a self-describing
-//!   sibling of checkpoint v2, with a publication `generation` header).
+//!   fallback), serialized in the "BEARSNAP" v3 format (a self-describing
+//!   sibling of checkpoint v2, with publication `generation` and shard
+//!   headers; v1/v2 files read as unsharded).
+//! - [`shard`] — feature-range sharding: quantile range cuts, the
+//!   canonical margin accumulation shared by local and scatter-gather
+//!   serving (the bit-identity contract), the K-way top-k merge, and the
+//!   shard-weights wire tokens used by `POST /shard/weights`.
 //! - [`http`] — the shared HTTP/1.1 wire primitives (bounded request
 //!   parser with typed 400/413 errors, response reader/writer) used by
 //!   the server, the loadgen client, and the fleet balancer
@@ -37,6 +42,7 @@ pub mod http;
 pub mod loadgen;
 pub mod metrics;
 pub mod server;
+pub mod shard;
 pub mod snapshot;
 
 pub use loadgen::{HttpClient, LoadReport, LoadgenConfig};

@@ -29,8 +29,13 @@
 //!   `class margin` for multi-class snapshots, formatted with Rust's
 //!   shortest-round-trip f64 `Display` (parsing the text back yields the
 //!   bit-identical f64).
-//! - `GET /topk?k=N[&class=C]` — the N heaviest features of class C
-//!   (default 0), `id weight` per line.
+//! - `GET /topk?k=N[&class=C][&gen=G]` — the N heaviest features of
+//!   class C (default 0), `id weight` per line; `gen` pins a generation
+//!   (`409` when unavailable — fleet scatter-gather consistency).
+//! - `POST /shard/weights[?gen=G]` — the scatter-gather data plane: for
+//!   each query line, the exact f32 weight bits of the features this
+//!   server's shard range owns (the balancer re-runs the canonical margin
+//!   accumulation over the gathered weights; see [`crate::serve::shard`]).
 //! - `GET /healthz` — liveness.
 //! - `GET /statz` — counters + merged latency percentiles + the live
 //!   snapshot generation and drift gauges, `key value` per line.
@@ -45,6 +50,7 @@
 //! see the new generation. No request is dropped, blocked, or errored by
 //! a swap.
 
+use crate::coordinator::checkpoint::encode_loss;
 use crate::online::reload::{CachedModel, ModelHolder, ReloadOutcome, ReloadStats, Reloader};
 use crate::serve::http::{
     query_param, read_request, reason_for, write_response, ReadError, Request,
@@ -53,6 +59,7 @@ use crate::serve::metrics::{merged_snapshot, HistogramSnapshot, LatencyHistogram
 use crate::serve::snapshot::{Prediction, ServableModel};
 use crate::sparse::SparseVec;
 use anyhow::{Context, Result};
+use std::borrow::Cow;
 use std::io::{BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::PathBuf;
@@ -122,6 +129,10 @@ struct Counters {
     bad_requests: AtomicU64,
     rejected: AtomicU64,
     admin_reload_requests: AtomicU64,
+    shard_weight_requests: AtomicU64,
+    /// Generation-pinned requests refused with 409 (the pinned
+    /// generation is neither current nor the retained previous).
+    gen_conflicts: AtomicU64,
 }
 
 impl Counters {
@@ -140,6 +151,8 @@ impl Counters {
             bad_requests: AtomicU64::new(0),
             rejected: AtomicU64::new(0),
             admin_reload_requests: AtomicU64::new(0),
+            shard_weight_requests: AtomicU64::new(0),
+            gen_conflicts: AtomicU64::new(0),
         }
     }
 }
@@ -161,6 +174,8 @@ pub struct StatsSnapshot {
     pub bad_requests: u64,
     pub rejected: u64,
     pub admin_reload_requests: u64,
+    pub shard_weight_requests: u64,
+    pub gen_conflicts: u64,
     /// Snapshot generation currently being served.
     pub generation: u64,
     /// Successful hot reloads since startup.
@@ -203,35 +218,46 @@ struct PredictJob {
 // request parsing
 // ---------------------------------------------------------------------------
 
-/// Parse a predict body: one query per non-empty line, `idx:val` pairs
-/// separated by whitespace.
+/// Parse one predict-body line (`idx:val` pairs separated by
+/// whitespace); `Ok(None)` for blank lines. `pub(crate)` because the
+/// fleet balancer's scatter-gather path must tokenize queries
+/// byte-identically to the model server.
+pub(crate) fn parse_query_line(line: &str, lineno: usize) -> Result<Option<SparseVec>> {
+    let line = line.trim();
+    if line.is_empty() {
+        return Ok(None);
+    }
+    let mut pairs = Vec::new();
+    for tok in line.split_whitespace() {
+        let (i, v) = tok
+            .split_once(':')
+            .with_context(|| format!("line {}: token {tok:?} is not idx:val", lineno + 1))?;
+        let i: u64 = i
+            .parse()
+            .with_context(|| format!("line {}: bad index {i:?}", lineno + 1))?;
+        let v: f32 = v
+            .parse()
+            .with_context(|| format!("line {}: bad value {v:?}", lineno + 1))?;
+        pairs.push((i, v));
+    }
+    Ok(Some(SparseVec::from_pairs(pairs)))
+}
+
+/// Parse a predict body: one query per non-empty line.
 fn parse_queries(body: &[u8]) -> Result<Vec<SparseVec>> {
     let text = std::str::from_utf8(body).context("predict body is not UTF-8")?;
     let mut out = Vec::new();
     for (lineno, line) in text.lines().enumerate() {
-        let line = line.trim();
-        if line.is_empty() {
-            continue;
+        if let Some(q) = parse_query_line(line, lineno)? {
+            out.push(q);
         }
-        let mut pairs = Vec::new();
-        for tok in line.split_whitespace() {
-            let (i, v) = tok
-                .split_once(':')
-                .with_context(|| format!("line {}: token {tok:?} is not idx:val", lineno + 1))?;
-            let i: u64 = i
-                .parse()
-                .with_context(|| format!("line {}: bad index {i:?}", lineno + 1))?;
-            let v: f32 = v
-                .parse()
-                .with_context(|| format!("line {}: bad value {v:?}", lineno + 1))?;
-            pairs.push((i, v));
-        }
-        out.push(SparseVec::from_pairs(pairs));
     }
     Ok(out)
 }
 
-fn format_predictions(preds: &[Prediction]) -> String {
+/// `pub(crate)` so the balancer's merged predictions are formatted by the
+/// exact same code path as a single server's.
+pub(crate) fn format_predictions(preds: &[Prediction]) -> String {
     let mut out = String::with_capacity(preds.len() * 24);
     for p in preds {
         match (p.class, p.probability) {
@@ -241,6 +267,92 @@ fn format_predictions(preds: &[Prediction]) -> String {
         }
     }
     out
+}
+
+/// Resolve the snapshot a request should score on. Without a `gen` query
+/// parameter this is the cached current model (the fast path — a borrow
+/// from the per-thread cache, no shared refcount traffic). With one —
+/// the fleet balancer pinning a scatter-gather request to one generation
+/// so no merged margin ever blends two — it is the current model if the
+/// generation matches, else the holder's retained previous generation,
+/// else a `409` telling the balancer to re-pin.
+fn resolve_pinned<'a>(
+    cache: &'a mut CachedModel,
+    holder: &ModelHolder,
+    query: Option<&str>,
+) -> Result<Cow<'a, Arc<ServableModel>>, (u16, String)> {
+    let pinned = match query_param(query, "gen") {
+        None => None,
+        Some(v) => match v.parse::<u64>() {
+            Ok(g) => Some(g),
+            Err(_) => return Err((400, format!("bad gen parameter {v:?}\n"))),
+        },
+    };
+    let current = cache.get(holder);
+    match pinned {
+        None => Ok(Cow::Borrowed(current)),
+        Some(g) if current.generation == g => Ok(Cow::Borrowed(current)),
+        Some(g) => {
+            if let Some(prev) = holder.load_previous() {
+                if prev.generation == g {
+                    return Ok(Cow::Owned(prev));
+                }
+            }
+            Err((
+                409,
+                format!("generation {g} unavailable (serving {})\n", current.generation),
+            ))
+        }
+    }
+}
+
+/// Render the `/shard/weights` response: a header line carrying the
+/// served generation AND the model meta the merger needs (class count,
+/// bias bits, loss) — pinned with the weights, so a merged prediction can
+/// never mix one generation's weights with another's bias/loss — then one
+/// line per input line (empty lines preserved so the balancer's line
+/// indices stay aligned), each a list of
+/// [`crate::serve::shard::weight_token`]s for the query features this
+/// model's shard range owns. Features outside every class table are
+/// omitted unless the sketch fallback is attached (omitted ⇒ weight 0,
+/// exactly the unsharded model's table-miss semantics).
+fn render_shard_weights(model: &ServableModel, body: &[u8]) -> Result<String> {
+    let text = std::str::from_utf8(body).context("shard weights body is not UTF-8")?;
+    let mut out = String::with_capacity(64 + body.len());
+    out.push_str(&format!(
+        "generation {} classes {} bias_bits {} loss {}\n",
+        model.generation,
+        model.num_classes(),
+        model.bias.to_bits(),
+        encode_loss(model.loss),
+    ));
+    for (lineno, line) in text.lines().enumerate() {
+        // the model server's own tokenizer (parse_query_line) keeps the
+        // validation and duplicate-feature merging identical on every
+        // path that reads this wire format
+        if let Some(q) = parse_query_line(line, lineno)? {
+            let mut first = true;
+            for &f in &q.idx {
+                if !model.owns(f) {
+                    continue;
+                }
+                // one pass over the class tables: weight_class semantics
+                // per class, None ⇒ the feature contributes 0 and is
+                // omitted from the response
+                let weights = match model.class_weights(f) {
+                    Some(w) => w,
+                    None => continue,
+                };
+                if !first {
+                    out.push(' ');
+                }
+                first = false;
+                out.push_str(&crate::serve::shard::weight_token(f, &weights));
+            }
+        }
+        out.push('\n');
+    }
+    Ok(out)
 }
 
 // ---------------------------------------------------------------------------
@@ -330,9 +442,40 @@ fn dispatch(
                 Err(_) => (500, "Internal Server Error", "batcher gone\n".into(), false),
             }
         }
+        ("POST", "/shard/weights") => {
+            counters.shard_weight_requests.fetch_add(1, Ordering::Relaxed);
+            let model = match resolve_pinned(cache, &ctx.mon.holder, req.query.as_deref()) {
+                Ok(m) => m,
+                Err((status, msg)) => {
+                    if status == 409 {
+                        counters.gen_conflicts.fetch_add(1, Ordering::Relaxed);
+                    } else {
+                        counters.bad_requests.fetch_add(1, Ordering::Relaxed);
+                    }
+                    return (status, reason_for(status), msg, req.keep_alive);
+                }
+            };
+            match render_shard_weights(&model, &req.body) {
+                Ok(body) => (200, "OK", body, req.keep_alive),
+                Err(e) => {
+                    counters.bad_requests.fetch_add(1, Ordering::Relaxed);
+                    (400, "Bad Request", format!("{e:#}\n"), req.keep_alive)
+                }
+            }
+        }
         ("GET", "/topk") => {
             counters.topk_requests.fetch_add(1, Ordering::Relaxed);
-            let model = cache.get(&ctx.mon.holder);
+            let model = match resolve_pinned(cache, &ctx.mon.holder, req.query.as_deref()) {
+                Ok(m) => m,
+                Err((status, msg)) => {
+                    if status == 409 {
+                        counters.gen_conflicts.fetch_add(1, Ordering::Relaxed);
+                    } else {
+                        counters.bad_requests.fetch_add(1, Ordering::Relaxed);
+                    }
+                    return (status, reason_for(status), msg, req.keep_alive);
+                }
+            };
             let k = query_param(req.query.as_deref(), "k")
                 .and_then(|v| v.parse::<usize>().ok())
                 .unwrap_or(10);
@@ -421,6 +564,8 @@ fn scrape(mon: &Monitor) -> StatsSnapshot {
         bad_requests: c.bad_requests.load(Ordering::Relaxed),
         rejected: c.rejected.load(Ordering::Relaxed),
         admin_reload_requests: c.admin_reload_requests.load(Ordering::Relaxed),
+        shard_weight_requests: c.shard_weight_requests.load(Ordering::Relaxed),
+        gen_conflicts: c.gen_conflicts.load(Ordering::Relaxed),
         generation: r.generation.load(Ordering::Acquire),
         reloads: r.reloads.load(Ordering::Relaxed),
         reload_failures: r.failures.load(Ordering::Relaxed),
@@ -462,6 +607,18 @@ fn render_statz(s: &StatsSnapshot, model: &ServableModel, workers: usize) -> Str
     out.push_str(&format!("model_classes {}\n", model.num_classes()));
     out.push_str(&format!("model_sketch_cells {}\n", model.sketch_cells()));
     out.push_str(&format!("model_bytes {}\n", model.memory_bytes()));
+    // shard identity + exact model meta: the fleet prober caches these so
+    // the balancer can verify shard placement and format merged
+    // predictions (bias/loss) without holding any model state itself
+    let (range_start, range_end) = model.shard_range();
+    out.push_str(&format!("shard_index {}\n", model.shard_index()));
+    out.push_str(&format!("shard_count {}\n", model.shard_count()));
+    out.push_str(&format!("shard_range_start {range_start}\n"));
+    out.push_str(&format!("shard_range_end {range_end}\n"));
+    out.push_str(&format!("model_bias_bits {}\n", model.bias.to_bits()));
+    out.push_str(&format!("model_loss {}\n", encode_loss(model.loss)));
+    out.push_str(&format!("shard_weight_requests {}\n", s.shard_weight_requests));
+    out.push_str(&format!("gen_conflicts {}\n", s.gen_conflicts));
     out
 }
 

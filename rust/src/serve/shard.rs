@@ -1,0 +1,236 @@
+//! Feature-range sharding: the pure math and merge logic behind
+//! `bear export --shards K` / `bear fleet --shards K`.
+//!
+//! A sharded publication splits one [`ServableModel`] into `K` shard
+//! models, each owning one **contiguous feature-id range**. The ranges
+//! are cut at quantiles of the model's selected-id distribution (so each
+//! shard holds ~`k/K` table entries, not an even slice of the mostly-empty
+//! u64 id space), tile `[0, u64::MAX]` exactly, and are stamped into each
+//! shard's BEARSNAP-v3 header — a shard file is fully self-describing.
+//!
+//! **Bit-identical merging.** The serving margin is defined as one f64
+//! accumulation in feature-index order ([`merge_margin`] — the single
+//! canonical implementation used by [`ServableModel`] itself, the
+//! scatter-gather balancer, and the property tests). f64 addition is not
+//! associative, so per-shard *partial sums* could never reproduce the
+//! unsharded margin bit-for-bit; instead the shards act as a distributed
+//! **weight table**: each shard reports the exact f32 weights of the
+//! query features it owns, and the merger re-runs the canonical
+//! accumulation locally over the gathered weights. Every weight is the
+//! same f32 the unsharded model would use (table slices are exact, the
+//! sketch fallback — when kept — is an exact replica), so the merged
+//! margin is bit-identical to the unsharded one by construction.
+//! `tests/prop_shard.rs` asserts this for random models and any K.
+//!
+//! **Memory.** The top-k tables shard perfectly (each shard holds its
+//! range's slice). A single-class Count Sketch fallback cannot be sliced
+//! by feature range (its hash family spreads every feature across the
+//! whole row), so when present it is **replicated** into every shard —
+//! pass `--no-sketch` at export/online time for fully 1/K-per-node
+//! memory, at the cost of out-of-table features scoring 0 (the paper's
+//! Fig. 3 top-k inference mode).
+
+use crate::loss::LossKind;
+use crate::serve::snapshot::{Prediction, ServableModel};
+use crate::sparse::SparseVec;
+use crate::util::math::sigmoid;
+use std::path::{Path, PathBuf};
+
+/// Sanity cap on the shard count of an untrusted header.
+pub const MAX_SHARDS: usize = 4096;
+
+/// Shard range starts from the sorted union of selected feature ids:
+/// shard `i` begins at the `i/count` quantile of the id distribution
+/// (shard 0 always begins at 0). Starts are forced strictly increasing so
+/// every range is non-empty; shard `i` covers `[starts[i], starts[i+1])`
+/// and the last shard runs to `u64::MAX` inclusive.
+pub fn shard_starts(ids: &[u64], count: usize) -> Vec<u64> {
+    let mut starts = Vec::with_capacity(count);
+    starts.push(0u64);
+    for i in 1..count {
+        let candidate = if ids.is_empty() { i as u64 } else { ids[i * ids.len() / count] };
+        let floor = starts[i - 1].saturating_add(1);
+        starts.push(candidate.max(floor));
+    }
+    starts
+}
+
+/// The canonical margin accumulation: `bias + Σ w(f)·x_f`, f64, in
+/// feature-index order. [`ServableModel::margin_class`], the sharded
+/// scatter-gather merge, and the property tests all call THIS function,
+/// so "bit-identical" is structural, not coincidental.
+#[inline]
+pub fn merge_margin(bias: f32, x: &SparseVec, mut weight_of: impl FnMut(u64) -> f32) -> f64 {
+    let mut acc = bias as f64;
+    for (&f, &v) in x.idx.iter().zip(&x.val) {
+        acc += weight_of(f) as f64 * v as f64;
+    }
+    acc
+}
+
+/// Score one query from a weight function — the shape of
+/// [`ServableModel::predict`], reused by the scatter-gather balancer so
+/// a merged prediction goes through byte-identical float ops.
+pub fn predict_with(
+    classes: usize,
+    loss: LossKind,
+    bias: f32,
+    x: &SparseVec,
+    weight_of: impl Fn(usize, u64) -> f32,
+) -> Prediction {
+    if classes > 1 {
+        let mut best = (0usize, f64::NEG_INFINITY);
+        for c in 0..classes {
+            let m = merge_margin(bias, x, |f| weight_of(c, f));
+            if m > best.1 {
+                best = (c, m);
+            }
+        }
+        return Prediction { margin: best.1, probability: None, class: Some(best.0) };
+    }
+    let margin = merge_margin(bias, x, |f| weight_of(0, f));
+    let probability = match loss {
+        LossKind::Logistic => Some(sigmoid(margin)),
+        LossKind::Mse => None,
+    };
+    Prediction { margin, probability, class: None }
+}
+
+/// Weight of feature `f` in class `c` across a shard set: answered by the
+/// (unique) shard whose range owns `f`.
+pub fn sharded_weight(shards: &[ServableModel], c: usize, f: u64) -> f32 {
+    for s in shards {
+        if s.owns(f) {
+            return s.weight_class(c, f);
+        }
+    }
+    0.0
+}
+
+/// In-process scatter-gather reference: predict from a shard set. The
+/// property tests assert this is bit-identical to the unsharded
+/// [`ServableModel::predict`].
+pub fn sharded_predict(shards: &[ServableModel], x: &SparseVec) -> Prediction {
+    let m0 = &shards[0];
+    predict_with(m0.num_classes(), m0.loss, m0.bias, x, |c, f| sharded_weight(shards, c, f))
+}
+
+/// K-way top-k merge: the globally heaviest `k` of the per-shard top-k
+/// lists, ordered exactly like [`ServableModel::topk`] (|weight|
+/// descending, ties by ascending id).
+pub fn merge_topk(mut entries: Vec<(u64, f32)>, k: usize) -> Vec<(u64, f32)> {
+    entries.sort_by(|a, b| {
+        b.1.abs()
+            .partial_cmp(&a.1.abs())
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.0.cmp(&b.0))
+    });
+    entries.truncate(k);
+    entries
+}
+
+/// Shard sibling file name: `gen-00000007.bearsnap` →
+/// `gen-00000007-s0of3.bearsnap`. Used by `bear export --shards`, the
+/// publisher's MANIFEST, and the supervisor's resolver, so all three
+/// always agree on the on-disk layout.
+pub fn shard_file_name(base: &str, index: usize, count: usize) -> String {
+    if count <= 1 {
+        return base.to_string();
+    }
+    match base.strip_suffix(".bearsnap") {
+        Some(stem) => format!("{stem}-s{index}of{count}.bearsnap"),
+        None => format!("{base}-s{index}of{count}"),
+    }
+}
+
+/// [`shard_file_name`] applied to a full path (same directory).
+pub fn shard_sibling_path(base: &Path, index: usize, count: usize) -> PathBuf {
+    let name = base
+        .file_name()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_default();
+    base.with_file_name(shard_file_name(&name, index, count))
+}
+
+/// One `f:hexbits[,hexbits…]` token of the shard-weights wire format: the
+/// feature id and its per-class f32 weights as exact bit patterns (text
+/// floats would round-trip fine with Rust's shortest form, but bits make
+/// the exactness contract impossible to miss).
+pub fn weight_token(f: u64, weights: &[f32]) -> String {
+    let mut s = format!("{f}:");
+    for (i, w) in weights.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str(&format!("{:08x}", w.to_bits()));
+    }
+    s
+}
+
+/// Parse one [`weight_token`]. `None` on malformed input.
+pub fn parse_weight_token(tok: &str) -> Option<(u64, Vec<f32>)> {
+    let (f, rest) = tok.split_once(':')?;
+    let f: u64 = f.parse().ok()?;
+    let mut weights = Vec::new();
+    for h in rest.split(',') {
+        weights.push(f32::from_bits(u32::from_str_radix(h, 16).ok()?));
+    }
+    Some((f, weights))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_starts_are_strictly_increasing_and_begin_at_zero() {
+        let ids: Vec<u64> = vec![5, 5, 6, 7, 100, 2000, 2001];
+        for k in 1..=9usize {
+            let starts = shard_starts(&ids, k);
+            assert_eq!(starts.len(), k);
+            assert_eq!(starts[0], 0);
+            for w in starts.windows(2) {
+                assert!(w[0] < w[1], "{starts:?}");
+            }
+        }
+        // no ids at all still yields valid strictly-increasing starts
+        let starts = shard_starts(&[], 4);
+        assert_eq!(starts, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn weight_token_roundtrips_exact_bits() {
+        let ws = [1.5f32, -0.0, f32::MIN_POSITIVE, 3.4e38];
+        let tok = weight_token(42, &ws);
+        let (f, back) = parse_weight_token(&tok).unwrap();
+        assert_eq!(f, 42);
+        assert_eq!(back.len(), ws.len());
+        for (a, b) in ws.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert!(parse_weight_token("notatoken").is_none());
+        assert!(parse_weight_token("9:xyz").is_none());
+    }
+
+    #[test]
+    fn merge_topk_orders_like_by_weight() {
+        let merged = merge_topk(
+            vec![(10, 1.0), (3, -2.0), (7, 2.0), (1, 0.5)],
+            3,
+        );
+        // |w| descending, tie (|2.0| twice) broken by ascending id
+        assert_eq!(merged, vec![(3, -2.0), (7, 2.0), (10, 1.0)]);
+    }
+
+    #[test]
+    fn shard_file_names_are_stable() {
+        assert_eq!(shard_file_name("gen-00000007.bearsnap", 0, 1), "gen-00000007.bearsnap");
+        assert_eq!(
+            shard_file_name("gen-00000007.bearsnap", 2, 3),
+            "gen-00000007-s2of3.bearsnap"
+        );
+        assert_eq!(shard_file_name("model", 1, 2), "model-s1of2");
+        let p = shard_sibling_path(Path::new("/tmp/x/rcv1.bearsnap"), 1, 4);
+        assert_eq!(p, PathBuf::from("/tmp/x/rcv1-s1of4.bearsnap"));
+    }
+}

@@ -23,12 +23,23 @@
 //! snapshots; the `generation` header field identifies which publication
 //! a serving process is on (`/statz` reports it live).
 //!
-//! Wire format "BEARSNAP" v2 — a sibling of checkpoint v2 (same
+//! **Sharding.** `bear export --shards K` / `Publisher::publish_sharded`
+//! split one model into K shard snapshots, each owning a contiguous
+//! feature-id range ([`ServableModel::into_shards`]; the range math and
+//! the bit-identical merge contract live in [`crate::serve::shard`]). The
+//! shard identity is part of the v3 header, so a shard file is fully
+//! self-describing; v1/v2 files read as shard `0` of `1` over the full
+//! id space.
+//!
+//! Wire format "BEARSNAP" v3 — a sibling of checkpoint v2 (same
 //! primitives: little-endian, CRC-32 trailer, self-describing header).
-//! v1 files (no generation, single implicit class) remain readable:
+//! v1 (no generation, single implicit class) and v2 (no shard header)
+//! files remain readable:
 //! ```text
-//! magic "BEARSNAP" | u32 version (=2)
+//! magic "BEARSNAP" | u32 version (=3)
 //! | u64 generation
+//! | u32 shard_index | u32 shard_count            (v3+; v1/v2 ⇒ 0 of 1)
+//! | u64 range_start | u64 range_end              (inclusive feature range)
 //! | u64 hash_seed | u32 query_mode | u32 loss (0=mse, 1=logistic) | f32 bias
 //! | u32 n_classes
 //! | n_classes × ( u32 k_len | (u64 id, f32 weight) × k_len )   (ids strictly increasing)
@@ -44,14 +55,14 @@ use crate::coordinator::checkpoint::{
     put_f32, put_u32, put_u64, write_atomic, Reader,
 };
 use crate::loss::LossKind;
+use crate::serve::shard::{shard_starts, MAX_SHARDS};
 use crate::sketch::{CountSketch, QueryMode, SketchMemory};
 use crate::sparse::SparseVec;
-use crate::util::math::sigmoid;
 use anyhow::{bail, Context, Result};
 use std::path::Path;
 
 const MAGIC: &[u8; 8] = b"BEARSNAP";
-const VERSION: u32 = 2;
+const VERSION: u32 = 3;
 /// Sanity cap on the class count of an untrusted header (DNA is 15).
 const MAX_CLASSES: usize = 4096;
 
@@ -80,6 +91,18 @@ struct ClassTable {
 }
 
 impl ClassTable {
+    /// The (id, weight) pairs with id in `[lo, hi]` (ids are sorted, so
+    /// this is two binary searches + a copy — the sharding primitive).
+    fn slice_range(&self, lo: u64, hi: u64) -> Vec<(u64, f32)> {
+        let a = self.ids.partition_point(|&id| id < lo);
+        let b = self.ids.partition_point(|&id| id <= hi);
+        self.ids[a..b]
+            .iter()
+            .zip(&self.weights[a..b])
+            .map(|(&f, &w)| (f, w))
+            .collect()
+    }
+
     fn from_pairs(mut pairs: Vec<(u64, f32)>) -> Self {
         pairs.sort_unstable_by_key(|&(i, _)| i);
         pairs.dedup_by_key(|&mut (i, _)| i);
@@ -119,6 +142,14 @@ pub struct ServableModel {
     pub hash_seed: u64,
     /// Publication generation (`bear online`); 0 for one-shot exports.
     pub generation: u64,
+    /// Shard identity: this model owns features in
+    /// `[range_start, range_end]` as shard `shard_index` of
+    /// `shard_count`. Unsharded models are `0` of `1` over the full id
+    /// space.
+    shard_index: u32,
+    shard_count: u32,
+    range_start: u64,
+    range_end: u64,
 }
 
 fn build_by_weight(ids: &[u64], weights: &[f32]) -> Vec<u32> {
@@ -146,7 +177,18 @@ impl ServableModel {
         debug_assert!(sketch.is_none() || class_pairs.len() == 1);
         let tables: Vec<ClassTable> = class_pairs.into_iter().map(ClassTable::from_pairs).collect();
         let hash_seed = sketch.as_ref().map(|cs| cs.seed()).unwrap_or(0);
-        Self { tables, sketch, loss, bias, hash_seed, generation: 0 }
+        Self {
+            tables,
+            sketch,
+            loss,
+            bias,
+            hash_seed,
+            generation: 0,
+            shard_index: 0,
+            shard_count: 1,
+            range_start: 0,
+            range_end: u64::MAX,
+        }
     }
 
     /// Export from any selector: dense top-k table only (no out-of-support
@@ -187,6 +229,118 @@ impl ServableModel {
     /// Number of one-vs-rest classes (1 for binary/regression models).
     pub fn num_classes(&self) -> usize {
         self.tables.len()
+    }
+
+    /// Shard position (`0` for unsharded models).
+    pub fn shard_index(&self) -> u32 {
+        self.shard_index
+    }
+
+    /// Total shards in this model's publication (`1` = unsharded).
+    pub fn shard_count(&self) -> u32 {
+        self.shard_count
+    }
+
+    /// Inclusive feature-id range this model owns
+    /// (`[0, u64::MAX]` for unsharded models).
+    pub fn shard_range(&self) -> (u64, u64) {
+        (self.range_start, self.range_end)
+    }
+
+    /// Does this model's shard range own feature `f`?
+    #[inline]
+    pub fn owns(&self, f: u64) -> bool {
+        self.range_start <= f && f <= self.range_end
+    }
+
+    /// Is `f` present in any class's top-k table?
+    pub fn in_tables(&self, f: u64) -> bool {
+        self.tables.iter().any(|t| t.lookup(f).is_some())
+    }
+
+    /// All per-class weights of `f` in one pass over the class tables —
+    /// exactly [`Self::weight_class`] per class — or `None` when the
+    /// feature contributes nothing (no table hit anywhere and no sketch
+    /// fallback). The `/shard/weights` data plane uses this to avoid
+    /// probing every table twice per feature.
+    pub fn class_weights(&self, f: u64) -> Option<Vec<f32>> {
+        let mut any = self.sketch.is_some();
+        let mut out = Vec::with_capacity(self.tables.len());
+        for t in &self.tables {
+            match t.lookup(f) {
+                Some(w) => {
+                    any = true;
+                    out.push(w);
+                }
+                None => out.push(match &self.sketch {
+                    Some(cs) => cs.query(f),
+                    None => 0.0,
+                }),
+            }
+        }
+        if any {
+            Some(out)
+        } else {
+            None
+        }
+    }
+
+    /// Drop the Count Sketch fallback (out-of-table features score 0 —
+    /// the paper's Fig. 3 top-k inference mode). `bear export/online
+    /// --no-sketch` use this before sharding so per-shard memory is a
+    /// true 1/K slice instead of replicating the sketch.
+    pub fn without_sketch(mut self) -> Self {
+        self.sketch = None;
+        self
+    }
+
+    /// Range cut points for splitting this model into `count` shards:
+    /// quantiles of the selected-id distribution, so each shard holds
+    /// ~`k/count` table entries. Validates the split is possible.
+    pub fn shard_starts_for(&self, count: usize) -> Result<Vec<u64>> {
+        if count == 0 || count > MAX_SHARDS {
+            bail!("shard count {count} out of range 1..={MAX_SHARDS}");
+        }
+        if self.shard_count != 1 {
+            bail!(
+                "cannot re-shard: this model is already shard {}/{}",
+                self.shard_index,
+                self.shard_count
+            );
+        }
+        Ok(shard_starts(&self.selected_ids(), count))
+    }
+
+    /// Build shard `index` for cut points from [`Self::shard_starts_for`].
+    /// The table slice is exact; a sketch fallback, when present, is
+    /// replicated (it cannot be range-sliced), so the shard's per-feature
+    /// weight function is bit-identical to this model's on its range —
+    /// the merge contract `tests/prop_shard.rs` proves. Callers that
+    /// write shards to disk should build-encode-drop one at a time to
+    /// keep peak memory at one replica.
+    pub fn shard_at(&self, starts: &[u64], index: usize) -> ServableModel {
+        let count = starts.len();
+        assert!(index < count, "shard {index} out of range (count {count})");
+        let lo = starts[index];
+        let hi = if index + 1 < count { starts[index + 1] - 1 } else { u64::MAX };
+        let class_pairs: Vec<Vec<(u64, f32)>> =
+            self.tables.iter().map(|t| t.slice_range(lo, hi)).collect();
+        let mut m = Self::assemble(class_pairs, self.sketch.clone(), self.loss, self.bias);
+        m.hash_seed = self.hash_seed;
+        m.generation = self.generation;
+        m.shard_index = index as u32;
+        m.shard_count = count as u32;
+        m.range_start = lo;
+        m.range_end = hi;
+        m
+    }
+
+    /// Split into `count` shard models over contiguous feature ranges
+    /// (all materialized at once — fine for tests and in-process use;
+    /// disk writers should loop [`Self::shard_at`] instead).
+    pub fn into_shards(&self, count: usize) -> Result<Vec<ServableModel>> {
+        let starts = self.shard_starts_for(count)?;
+        Ok((0..count).map(|i| self.shard_at(&starts, i)).collect())
     }
 
     /// Total features across all class tables.
@@ -253,13 +407,12 @@ impl ServableModel {
     /// Margin of a sparse query against class `c`: `bias + Σ w(f)·x_f`,
     /// accumulated in f64 in index order (bit-compatible with
     /// `SketchedState::score` when `bias == 0` and the sketch fallback is
-    /// attached).
+    /// attached). Delegates to the single canonical accumulation
+    /// ([`crate::serve::shard::merge_margin`]) shared with the
+    /// scatter-gather merge, so sharded serving is bit-identical by
+    /// construction.
     pub fn margin_class(&self, c: usize, x: &SparseVec) -> f64 {
-        let mut acc = self.bias as f64;
-        for (&f, &v) in x.idx.iter().zip(&x.val) {
-            acc += self.weight_class(c, f) as f64 * v as f64;
-        }
-        acc
+        crate::serve::shard::merge_margin(self.bias, x, |f| self.weight_class(c, f))
     }
 
     /// Margin of a sparse query (class 0).
@@ -305,18 +458,12 @@ impl ServableModel {
 
     /// Score one query: binary/regression models report margin (+
     /// probability for logistic); multi-class models report the argmax
-    /// class and its margin.
+    /// class and its margin. Shares its float-op sequence with the
+    /// scatter-gather merge via [`crate::serve::shard::predict_with`].
     pub fn predict(&self, x: &SparseVec) -> Prediction {
-        if self.tables.len() > 1 {
-            let (class, margin) = self.predict_class(x);
-            return Prediction { margin, probability: None, class: Some(class) };
-        }
-        let margin = self.margin(x);
-        let probability = match self.loss {
-            LossKind::Logistic => Some(sigmoid(margin)),
-            LossKind::Mse => None,
-        };
-        Prediction { margin, probability, class: None }
+        crate::serve::shard::predict_with(self.num_classes(), self.loss, self.bias, x, |c, f| {
+            self.weight_class(c, f)
+        })
     }
 
     /// The k heaviest (id, weight) pairs of class `c`, |weight|-descending.
@@ -346,6 +493,10 @@ impl ServableModel {
         buf.extend_from_slice(MAGIC);
         put_u32(&mut buf, VERSION);
         put_u64(&mut buf, generation);
+        put_u32(&mut buf, self.shard_index);
+        put_u32(&mut buf, self.shard_count);
+        put_u64(&mut buf, self.range_start);
+        put_u64(&mut buf, self.range_end);
         put_u64(&mut buf, self.hash_seed);
         let mode = self.sketch.as_ref().map(|cs| cs.query_mode()).unwrap_or(QueryMode::Median);
         put_u32(&mut buf, encode_query_mode(mode));
@@ -390,10 +541,29 @@ impl ServableModel {
             bail!("not a BEAR snapshot (bad magic)");
         }
         let version = r.u32()?;
-        if version != 1 && version != VERSION {
+        if version == 0 || version > VERSION {
             bail!("unsupported snapshot version {version}");
         }
         let generation = if version >= 2 { r.u64()? } else { 0 };
+        // v1/v2 predate sharding: they read as shard 0 of 1 over the full
+        // feature space
+        let (shard_index, shard_count, range_start, range_end) = if version >= 3 {
+            (r.u32()?, r.u32()?, r.u64()?, r.u64()?)
+        } else {
+            (0, 1, 0, u64::MAX)
+        };
+        if shard_count == 0 || shard_count as usize > MAX_SHARDS {
+            bail!("implausible snapshot shard count {shard_count}");
+        }
+        if shard_index >= shard_count {
+            bail!("snapshot shard index {shard_index} out of range (count {shard_count})");
+        }
+        if range_start > range_end {
+            bail!("snapshot shard range {range_start}..{range_end} is inverted");
+        }
+        if shard_count == 1 && (range_start != 0 || range_end != u64::MAX) {
+            bail!("unsharded snapshot must own the full feature range");
+        }
         let hash_seed = r.u64()?;
         let query_mode = decode_query_mode(r.u32()?)?;
         let loss = decode_loss(r.u32()?)?;
@@ -446,6 +616,17 @@ impl ServableModel {
         let mut model = Self::assemble(class_pairs, sketch, loss, bias);
         model.hash_seed = hash_seed; // preserve even for sketch-free files
         model.generation = generation;
+        model.shard_index = shard_index;
+        model.shard_count = shard_count;
+        model.range_start = range_start;
+        model.range_end = range_end;
+        // a shard's table may only hold features it owns
+        if model.tables.iter().any(|t| {
+            t.ids.first().is_some_and(|&f| f < range_start)
+                || t.ids.last().is_some_and(|&f| f > range_end)
+        }) {
+            bail!("snapshot table contains features outside its shard range");
+        }
         Ok(model)
     }
 
@@ -460,6 +641,7 @@ impl ServableModel {
 mod tests {
     use super::*;
     use crate::sparse::ActiveSet;
+    use crate::util::math::sigmoid;
 
     fn sv(pairs: &[(u64, f32)]) -> SparseVec {
         SparseVec::from_pairs(pairs.to_vec())
@@ -664,15 +846,56 @@ mod tests {
         assert_eq!(m2.margin(&q).to_bits(), m.margin(&q).to_bits());
     }
 
+    /// Hand-write the v2 layout (generation but no shard header) with a
+    /// sketch fallback attached: pre-sharding publications must read as
+    /// shard 0 of 1 with the fallback intact.
+    #[test]
+    fn v2_files_with_sketch_still_load() {
+        let st = trained_state();
+        let m = ServableModel::from_sketched(&st, LossKind::Logistic, 0.25).with_generation(9);
+        let mut buf = Vec::new();
+        buf.extend_from_slice(MAGIC);
+        put_u32(&mut buf, 2); // version 2
+        put_u64(&mut buf, m.generation);
+        put_u64(&mut buf, m.hash_seed);
+        put_u32(&mut buf, encode_query_mode(QueryMode::Median));
+        put_u32(&mut buf, encode_loss(m.loss));
+        put_f32(&mut buf, m.bias);
+        put_u32(&mut buf, 1); // n_classes
+        let t = &m.tables[0];
+        put_u32(&mut buf, t.ids.len() as u32);
+        for (&f, &w) in t.ids.iter().zip(&t.weights) {
+            put_u64(&mut buf, f);
+            put_f32(&mut buf, w);
+        }
+        let cs = m.sketch.as_ref().unwrap();
+        put_u32(&mut buf, 1);
+        put_u32(&mut buf, cs.rows() as u32);
+        put_u32(&mut buf, cs.cols() as u32);
+        for &c in cs.raw() {
+            put_f32(&mut buf, c);
+        }
+        let crc = crc32(&buf);
+        put_u32(&mut buf, crc);
+        let m2 = ServableModel::decode(&buf).unwrap();
+        assert_eq!(m2.generation, 9);
+        assert_eq!(m2.shard_index(), 0);
+        assert_eq!(m2.shard_count(), 1);
+        assert_eq!(m2.shard_range(), (0, u64::MAX));
+        assert!(m2.has_sketch());
+        let q = sv(&[(3, 1.0), (9, 2.0), (54321, 1.0)]);
+        assert_eq!(m2.margin(&q).to_bits(), m.margin(&q).to_bits());
+    }
+
     #[test]
     fn oversized_table_length_rejected_without_allocation() {
         let st = trained_state();
         let m = ServableModel::from_sketched(&st, LossKind::Logistic, 0.0);
         let mut data = m.encode();
         // the class-0 k_len sits after magic(8) + version(4) + generation(8)
-        // + seed(8) + mode(4) + loss(4) + bias(4) + n_classes(4) = offset 44;
-        // forge it huge and re-sign the CRC
-        data[44..48].copy_from_slice(&u32::MAX.to_le_bytes());
+        // + shard header(24) + seed(8) + mode(4) + loss(4) + bias(4)
+        // + n_classes(4) = offset 68; forge it huge and re-sign the CRC
+        data[68..72].copy_from_slice(&u32::MAX.to_le_bytes());
         let n = data.len();
         let crc = crc32(&data[..n - 4]);
         data[n - 4..].copy_from_slice(&crc.to_le_bytes());
@@ -689,6 +912,40 @@ mod tests {
         data[mid] ^= 0x55;
         let err = ServableModel::decode(&data).unwrap_err();
         assert!(format!("{err}").contains("CRC"), "{err}");
+    }
+
+    #[test]
+    fn into_shards_partitions_tables_and_roundtrips() {
+        let st = trained_state();
+        let m = ServableModel::from_sketched(&st, LossKind::Logistic, 0.0).with_generation(4);
+        let shards = m.into_shards(3).unwrap();
+        assert_eq!(shards.len(), 3);
+        // ranges tile [0, u64::MAX] contiguously
+        assert_eq!(shards[0].shard_range().0, 0);
+        assert_eq!(shards[2].shard_range().1, u64::MAX);
+        for w in shards.windows(2) {
+            assert_eq!(w[0].shard_range().1 + 1, w[1].shard_range().0);
+        }
+        // every selected feature lands in exactly one shard's table
+        let total: usize = shards.iter().map(|s| s.n_features()).sum();
+        assert_eq!(total, m.n_features());
+        for f in m.selected_ids() {
+            let owners = shards.iter().filter(|s| s.owns(f)).count();
+            assert_eq!(owners, 1, "feature {f}");
+            let holder = shards.iter().find(|s| s.owns(f)).unwrap();
+            assert!(holder.in_tables(f));
+        }
+        // shard headers survive the wire
+        let s1 = ServableModel::decode(&shards[1].encode()).unwrap();
+        assert_eq!(s1.shard_index(), 1);
+        assert_eq!(s1.shard_count(), 3);
+        assert_eq!(s1.shard_range(), shards[1].shard_range());
+        assert_eq!(s1.generation, 4);
+        // a shard cannot be re-sharded
+        assert!(shards[0].into_shards(2).is_err());
+        // table-only sharding drops the fallback everywhere
+        let lean = m.clone().without_sketch().into_shards(2).unwrap();
+        assert!(lean.iter().all(|s| !s.has_sketch()));
     }
 
     #[test]

@@ -1,0 +1,378 @@
+//! Fault-injection acceptance test for `bear fleet --shards K`: the
+//! feature-range scatter-gather tier must
+//!
+//! 1. serve `/predict` responses **byte-identical** to an unsharded
+//!    `bear serve` on the same checkpoint (margins, probabilities,
+//!    formatting — the whole body),
+//! 2. K-way-merge `/topk` into exactly the global top-k,
+//! 3. drop **zero** requests while one shard's only worker is SIGKILLed
+//!    and respawned (the balancer must wait out the respawn — there is no
+//!    sideways retry for a feature range), and
+//! 4. drop zero requests across a rolling reload over multiple
+//!    generations, while **never blending two generations** into one
+//!    response: every response must equal one published generation's
+//!    output in its entirety.
+//!
+//! NAMING CONVENTION: every test fn here starts with `fleet_` — CI runs
+//! this binary in a dedicated hard-timeout step and excludes it from the
+//! plain `cargo test` step via `--skip fleet_` (worker logs land under
+//! `CARGO_TARGET_TMPDIR/fleet-*` for the failure-artifact upload).
+
+use bear::algo::bear::{Bear, BearConfig};
+use bear::algo::StepSize;
+use bear::data::synth::Rcv1Sim;
+use bear::data::DataSource;
+use bear::fleet::{start_fleet, FleetConfig, ProbeConfig};
+use bear::loss::LossKind;
+use bear::online::Publisher;
+use bear::serve::loadgen::{format_query, HttpClient};
+use bear::serve::ServableModel;
+use bear::sparse::SparseVec;
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+/// Serializes fleets within this binary (the free-port reservation in
+/// `start_fleet` releases listeners before workers rebind them).
+static FLEET_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+fn fleet_lock() -> std::sync::MutexGuard<'static, ()> {
+    FLEET_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn tmp_root(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_TARGET_TMPDIR"))
+        .join(format!("fleet-shard-{name}-{}", std::process::id()))
+}
+
+fn new_trainer(seed: u64) -> Bear {
+    let cfg = BearConfig {
+        sketch_cells: 8192,
+        sketch_rows: 3,
+        top_k: 100,
+        tau: 5,
+        step: StepSize::Constant(0.01),
+        loss: LossKind::Logistic,
+        seed,
+        ..Default::default()
+    };
+    Bear::new(bear::data::synth::RCV1_DIM, cfg)
+}
+
+fn train_some(bear: &mut Bear, n: usize, stream_seed: u64) {
+    let mut src = Rcv1Sim::new(n, 0x5eed).with_stream_seed(stream_seed);
+    bear.fit_source(&mut src, 32, 1);
+}
+
+fn snapshot(bear: &Bear) -> ServableModel {
+    ServableModel::from_sketched(bear.state(), LossKind::Logistic, 0.0)
+}
+
+fn test_queries(n: usize) -> Vec<SparseVec> {
+    let mut src = Rcv1Sim::new(n, 0x5eed).with_stream_seed(0x5AAD);
+    let mut out = Vec::with_capacity(n);
+    while let Some(e) = src.next_example() {
+        out.push(e.features);
+    }
+    out
+}
+
+/// The exact `/predict` body a server would send for `queries` against
+/// `model` (mirrors the server's response formatting for binary logistic
+/// models: `margin probability` per line, shortest-round-trip f64).
+fn expected_predict_body(model: &ServableModel, queries: &[SparseVec]) -> String {
+    let mut out = String::new();
+    for q in queries {
+        let p = model.predict(q);
+        match (p.class, p.probability) {
+            (Some(class), _) => out.push_str(&format!("{class} {}\n", p.margin)),
+            (None, Some(prob)) => out.push_str(&format!("{} {}\n", p.margin, prob)),
+            (None, None) => out.push_str(&format!("{}\n", p.margin)),
+        }
+    }
+    out
+}
+
+fn statz_value(body: &str, key: &str) -> f64 {
+    for line in body.lines() {
+        if let Some((k, v)) = line.split_once(' ') {
+            if k == key {
+                return v.parse().unwrap();
+            }
+        }
+    }
+    panic!("statz missing {key}:\n{body}");
+}
+
+fn get_statz(addr: &str) -> String {
+    let mut client = HttpClient::connect(addr).expect("connect for /statz");
+    let (status, body) = client.get("/statz").expect("balancer /statz");
+    assert_eq!(status, 200, "{body}");
+    body
+}
+
+fn wait_statz(
+    addr: &str,
+    what: &str,
+    timeout: Duration,
+    mut pred: impl FnMut(&str) -> bool,
+) -> String {
+    let deadline = Instant::now() + timeout;
+    loop {
+        let body = get_statz(addr);
+        if pred(&body) {
+            return body;
+        }
+        assert!(Instant::now() < deadline, "timed out waiting for {what}; last statz:\n{body}");
+        std::thread::sleep(Duration::from_millis(100));
+    }
+}
+
+/// Closed-loop posting of a fixed body; returns (responses, errors).
+/// Every successful response body is collected verbatim so the caller
+/// can assert generation atomicity.
+fn post_loop(addr: String, body: String, n: usize) -> std::thread::JoinHandle<(Vec<String>, u64)> {
+    std::thread::spawn(move || {
+        let mut responses = Vec::with_capacity(n);
+        let mut errors = 0u64;
+        let mut client = HttpClient::connect(&addr).expect("post_loop connect");
+        for _ in 0..n {
+            match client.post("/predict", &body) {
+                Ok((200, resp)) => responses.push(resp),
+                Ok((_, _)) => errors += 1,
+                Err(_) => {
+                    errors += 1;
+                    client = HttpClient::connect(&addr).expect("post_loop reconnect");
+                }
+            }
+        }
+        (responses, errors)
+    })
+}
+
+#[test]
+fn fleet_sharded_scatter_gather_is_bit_identical_and_zero_drop() {
+    let _serial = fleet_lock();
+    let pub_dir = tmp_root("pub");
+    let log_dir = tmp_root("logs");
+    std::fs::remove_dir_all(&pub_dir).ok();
+    std::fs::remove_dir_all(&log_dir).ok();
+
+    const SHARDS: usize = 3;
+
+    // generation 1, published as 3 feature-range shard files
+    let mut publisher = Publisher::new(&pub_dir, 8).unwrap();
+    let mut trainer = new_trainer(0x5AAD);
+    train_some(&mut trainer, 600, 1);
+    let model1 = snapshot(&trainer);
+    publisher.publish_sharded(&model1, SHARDS).unwrap();
+
+    let cfg = FleetConfig {
+        addr: "127.0.0.1:0".to_string(),
+        backends: SHARDS,
+        shards: SHARDS,
+        base_port: 0,
+        model: None,
+        watch_manifest: Some(publisher.manifest_path()),
+        worker_bin: Some(PathBuf::from(env!("CARGO_BIN_EXE_bear"))),
+        serve_workers: 12,
+        log_dir: Some(log_dir.clone()),
+        probe: ProbeConfig {
+            interval: Duration::from_millis(50),
+            timeout: Duration::from_millis(500),
+            eject_after: 2,
+            admit_after: 2,
+        },
+        monitor_interval: Duration::from_millis(100),
+        ..Default::default()
+    };
+    let handle = start_fleet(cfg).unwrap();
+    assert!(
+        handle.wait_all_healthy(Duration::from_secs(60)),
+        "sharded fleet never became healthy; see logs in {log_dir:?}"
+    );
+    let addr = handle.addr().to_string();
+
+    let queries = test_queries(12);
+    let body: String = queries.iter().map(|q| format_query(q) + "\n").collect();
+    let expect1 = expected_predict_body(&model1, &queries);
+
+    // ── acceptance: bit-identical to an unsharded `bear serve` ─────────
+    // run a real unsharded server on the same checkpoint and compare the
+    // raw response bodies byte for byte
+    let unsharded = bear::serve::serve(
+        std::sync::Arc::new(model1.clone()),
+        bear::serve::ServerConfig { addr: "127.0.0.1:0".into(), workers: 2, ..Default::default() },
+    )
+    .unwrap();
+    let mut uclient = HttpClient::connect(&unsharded.addr().to_string()).unwrap();
+    let (ustatus, ubody) = uclient.post("/predict", &body).unwrap();
+    assert_eq!(ustatus, 200, "{ubody}");
+    assert_eq!(ubody, expect1, "unsharded server disagrees with in-process predict");
+    drop(uclient);
+
+    let mut client = HttpClient::connect(&addr).unwrap();
+    for _ in 0..6 {
+        let (status, resp) = client.post("/predict", &body).unwrap();
+        assert_eq!(status, 200, "{resp}");
+        assert_eq!(
+            resp, ubody,
+            "scatter-gather response is not byte-identical to the unsharded server"
+        );
+    }
+
+    // ── /topk is a K-way merge equal to the global top-k ───────────────
+    let (status, topk_body) = client.get("/topk?k=8").unwrap();
+    assert_eq!(status, 200, "{topk_body}");
+    let mut expect_topk = String::new();
+    for (f, w) in model1.topk(8) {
+        expect_topk.push_str(&format!("{f} {w}\n"));
+    }
+    assert_eq!(topk_body, expect_topk);
+    drop(client);
+
+    // shard topology is visible on the aggregated statz
+    let statz = wait_statz(&addr, "3 healthy shard workers", Duration::from_secs(10), |b| {
+        statz_value(b, "fleet_backends_healthy") as u64 == 3
+    });
+    assert_eq!(statz_value(&statz, "fleet_shards") as u64, SHARDS as u64);
+    for i in 0..SHARDS {
+        assert_eq!(statz_value(&statz, &format!("backend.{i}.shard")) as u64, i as u64);
+    }
+    assert_eq!(statz_value(&statz, "fleet_consistent_generation") as u64, 1);
+
+    // ── chaos 1: SIGKILL the only worker of shard 1 under load ─────────
+    // the balancer must wait out the respawn (no other backend owns that
+    // feature range) without surfacing a single error
+    let lg = post_loop(addr.clone(), body.clone(), 600);
+    std::thread::sleep(Duration::from_millis(150));
+    let old_pid = handle.backend_pid(1).expect("shard-1 worker pid");
+    handle.kill_backend(1).unwrap();
+    wait_statz(&addr, "shard-1 worker eject", Duration::from_secs(20), |b| {
+        statz_value(b, "backend.1.ejects") as u64 >= 1
+    });
+    wait_statz(&addr, "shard-1 worker re-admit", Duration::from_secs(60), |b| {
+        statz_value(b, "backend.1.healthy") as u64 == 1
+            && statz_value(b, "backend.1.restarts") as u64 >= 1
+    });
+    assert_ne!(handle.backend_pid(1).expect("respawned pid"), old_pid);
+    let (responses, errors) = lg.join().unwrap();
+    assert_eq!(errors, 0, "requests dropped during shard worker kill/restart");
+    assert_eq!(responses.len(), 600);
+    for r in &responses {
+        assert_eq!(r, &expect1, "margin diverged during kill/restart");
+    }
+
+    // ── chaos 2: rolling reload across two generations ─────────────────
+    // every in-flight response must equal exactly one generation's output
+    // — a margin blending shard weights from two generations would match
+    // none of them
+    train_some(&mut trainer, 300, 2);
+    let model2 = snapshot(&trainer);
+    let expect2 = expected_predict_body(&model2, &queries);
+    train_some(&mut trainer, 300, 3);
+    let model3 = snapshot(&trainer);
+    let expect3 = expected_predict_body(&model3, &queries);
+
+    let lg = post_loop(addr.clone(), body.clone(), 600);
+    std::thread::sleep(Duration::from_millis(100));
+    for (model, generation) in [(&model2, 2u64), (&model3, 3)] {
+        publisher.publish_sharded(model, SHARDS).unwrap();
+        wait_statz(
+            &addr,
+            "per-shard generations to converge",
+            Duration::from_secs(30),
+            |b| {
+                (0..SHARDS).all(|i| {
+                    statz_value(b, &format!("backend.{i}.generation")) as u64 == generation
+                })
+            },
+        );
+    }
+    let (responses, errors) = lg.join().unwrap();
+    assert_eq!(errors, 0, "requests dropped during sharded rolling reload");
+    assert_eq!(responses.len(), 600);
+    let mut seen = [0usize; 3];
+    for r in &responses {
+        if r == &expect1 {
+            seen[0] += 1;
+        } else if r == &expect2 {
+            seen[1] += 1;
+        } else if r == &expect3 {
+            seen[2] += 1;
+        } else {
+            panic!(
+                "response blends generations (matches none of gen 1/2/3):\n{r}\nexpected one of:\n{expect1}---\n{expect2}---\n{expect3}"
+            );
+        }
+    }
+    assert!(seen[0] > 0, "roll started after the load finished? {seen:?}");
+
+    // the fleet settles on generation 3 and serves it bit-identically
+    let statz = wait_statz(&addr, "consistent generation 3", Duration::from_secs(20), |b| {
+        statz_value(b, "fleet_consistent_generation") as u64 == 3
+            && statz_value(b, "fleet_backends_healthy") as u64 == 3
+    });
+    assert_eq!(statz_value(&statz, "rejected_503") as u64, 0, "{statz}");
+    let mut client = HttpClient::connect(&addr).unwrap();
+    let (status, resp) = client.post("/predict", &body).unwrap();
+    assert_eq!(status, 200, "{resp}");
+    assert_eq!(resp, expect3, "fleet did not settle on generation 3's margins");
+    drop(client);
+
+    unsharded.shutdown();
+    handle.shutdown();
+    std::fs::remove_dir_all(&pub_dir).ok();
+    // keep log_dir: CI uploads it on failure
+}
+
+#[test]
+fn fleet_sharded_export_files_drive_a_manifestless_fleet() {
+    let _serial = fleet_lock();
+    let dir = tmp_root("export");
+    let log_dir = tmp_root("export-logs");
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+
+    // write the -s{i}ofK layout `bear export --shards K` produces (table
+    // only: the 1/K-memory mode) and point a manifestless fleet at it
+    let mut trainer = new_trainer(0x0EF1);
+    train_some(&mut trainer, 400, 1);
+    let model = snapshot(&trainer).without_sketch();
+    let base = dir.join("model.bearsnap");
+    for (i, sm) in model.into_shards(2).unwrap().iter().enumerate() {
+        sm.save(&bear::serve::shard::shard_sibling_path(&base, i, 2)).unwrap();
+    }
+
+    let cfg = FleetConfig {
+        addr: "127.0.0.1:0".to_string(),
+        backends: 2,
+        shards: 2,
+        model: Some(base),
+        watch_manifest: None,
+        worker_bin: Some(PathBuf::from(env!("CARGO_BIN_EXE_bear"))),
+        serve_workers: 8,
+        log_dir: Some(log_dir),
+        probe: ProbeConfig { interval: Duration::from_millis(50), ..Default::default() },
+        ..Default::default()
+    };
+    let handle = start_fleet(cfg).unwrap();
+    assert!(handle.wait_all_healthy(Duration::from_secs(60)));
+
+    let queries = test_queries(8);
+    let body: String = queries.iter().map(|q| format_query(q) + "\n").collect();
+    let expect = expected_predict_body(&model, &queries);
+    let mut client = HttpClient::connect(&handle.addr().to_string()).unwrap();
+    let (status, resp) = client.post("/predict", &body).unwrap();
+    assert_eq!(status, 200, "{resp}");
+    assert_eq!(resp, expect, "table-only sharded serving must match the unsharded model");
+
+    // healthz reflects the shard set; unknown routes still 404
+    let (status, _) = client.get("/healthz").unwrap();
+    assert_eq!(status, 200);
+    let (status, _) = client.get("/admin/reload").unwrap();
+    assert_eq!(status, 404);
+
+    drop(client);
+    handle.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}

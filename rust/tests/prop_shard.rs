@@ -1,0 +1,206 @@
+//! Property tests for feature-range sharding: for random models and any
+//! shard count K,
+//!
+//! - the shard ranges tile `[0, u64::MAX]` exactly (every feature owned
+//!   by one and only one shard),
+//! - scatter-gather predictions merged from the shard set are
+//!   **bit-identical** to the unsharded model's (margins, argmax class,
+//!   probabilities — the whole `Prediction`),
+//! - the K-way merged per-shard top-k equals the global top-k, and
+//! - shard headers survive the wire and a forged shard header (CRC
+//!   re-signed) is rejected.
+
+use bear::algo::sketched::SketchedState;
+use bear::loss::LossKind;
+use bear::prop::{run, Gen};
+use bear::serve::shard::{merge_topk, sharded_predict, sharded_weight};
+use bear::serve::ServableModel;
+use bear::sparse::{ActiveSet, SparseVec};
+
+/// A random trained sketch state over `p` features (mirrors
+/// `prop_snapshot.rs`).
+fn random_state(g: &mut Gen, p: u64) -> SketchedState {
+    let cells = g.usize_in(64, 1024);
+    let rows = g.usize_in(1, 6);
+    let k = g.usize_in(1, 16);
+    let seed = g.u64_below(1 << 40);
+    let mut st = SketchedState::new(cells, rows, k, seed);
+    for _ in 0..g.usize_in(1, 5) {
+        let step = SparseVec::from_pairs(g.sparse_pairs(p));
+        let touched: Vec<(u64, f32)> = step.idx.iter().map(|&f| (f, 1.0)).collect();
+        st.apply_step(&step, g.f64_in(0.1, 2.0));
+        let row = SparseVec::from_pairs(touched);
+        st.refresh_heap(&ActiveSet::from_rows([&row]));
+    }
+    st
+}
+
+fn random_model(g: &mut Gen) -> ServableModel {
+    let p = 1 << 20;
+    let loss = if g.bool() { LossKind::Logistic } else { LossKind::Mse };
+    let bias = g.f32_in(-2.0, 2.0);
+    let model = if g.usize_in(0, 4) == 0 {
+        let states: Vec<SketchedState> =
+            (0..g.usize_in(2, 7)).map(|_| random_state(g, p)).collect();
+        let refs: Vec<&SketchedState> = states.iter().collect();
+        ServableModel::from_multiclass(&refs, loss, bias)
+    } else {
+        let m = ServableModel::from_sketched(&random_state(g, p), loss, bias);
+        // exercise both fallback configurations: sketch replicated into
+        // every shard, and table-only (1/K memory) sharding
+        if g.bool() {
+            m.without_sketch()
+        } else {
+            m
+        }
+    };
+    model.with_generation(g.u64_below(1 << 30))
+}
+
+/// Queries mixing in-support ids (likely table hits), near misses, and
+/// ids far outside the trained range (sketch fallback / zero).
+fn random_queries(g: &mut Gen, model: &ServableModel, n: usize) -> Vec<SparseVec> {
+    let support = model.selected_ids();
+    (0..n)
+        .map(|_| {
+            let mut pairs = g.sparse_pairs(1 << 21);
+            if !support.is_empty() {
+                for _ in 0..g.usize_in(0, 4) {
+                    let f = support[g.usize_in(0, support.len())];
+                    pairs.push((f, g.f32_in(-3.0, 3.0)));
+                }
+            }
+            SparseVec::from_pairs(pairs)
+        })
+        .collect()
+}
+
+#[test]
+fn shard_ranges_tile_the_id_space_exactly() {
+    run("every feature is owned by exactly one shard", 32, |g: &mut Gen| {
+        let m = random_model(g);
+        let k = g.usize_in(1, 9);
+        let shards = m.into_shards(k).unwrap();
+        assert_eq!(shards.len(), k);
+        assert_eq!(shards[0].shard_range().0, 0);
+        assert_eq!(shards[k - 1].shard_range().1, u64::MAX);
+        for w in shards.windows(2) {
+            assert_eq!(
+                w[0].shard_range().1.wrapping_add(1),
+                w[1].shard_range().0,
+                "ranges must be contiguous"
+            );
+        }
+        // spot-check ownership of random ids + every selected id
+        for _ in 0..32 {
+            let f = g.u64_below(u64::MAX);
+            assert_eq!(shards.iter().filter(|s| s.owns(f)).count(), 1, "feature {f}");
+        }
+        let mut total = 0usize;
+        for s in &shards {
+            total += s.n_features();
+        }
+        assert_eq!(total, m.n_features(), "table entries must partition");
+    });
+}
+
+#[test]
+fn sharded_predictions_are_bit_identical_to_unsharded() {
+    run("scatter-gather == unsharded, bit for bit", 32, |g: &mut Gen| {
+        let m = random_model(g);
+        let k = g.usize_in(1, 8);
+        let shards = m.into_shards(k).unwrap();
+        for q in random_queries(g, &m, 4) {
+            // per-class margins via the distributed weight table
+            for c in 0..m.num_classes() {
+                let direct = m.margin_class(c, &q);
+                let merged = bear::serve::shard::merge_margin(m.bias, &q, |f| {
+                    sharded_weight(&shards, c, f)
+                });
+                assert_eq!(
+                    merged.to_bits(),
+                    direct.to_bits(),
+                    "class {c} margin diverged (K={k})"
+                );
+            }
+            // the full prediction: margin, argmax class, probability
+            let want = m.predict(&q);
+            let got = sharded_predict(&shards, &q);
+            assert_eq!(got.margin.to_bits(), want.margin.to_bits(), "K={k}");
+            assert_eq!(got.class, want.class, "K={k}");
+            assert_eq!(
+                got.probability.map(f64::to_bits),
+                want.probability.map(f64::to_bits),
+                "K={k}"
+            );
+        }
+    });
+}
+
+#[test]
+fn merged_topk_equals_global_topk() {
+    run("K-way top-k merge == global top-k", 32, |g: &mut Gen| {
+        let m = random_model(g);
+        let k_shards = g.usize_in(1, 8);
+        let shards = m.into_shards(k_shards).unwrap();
+        let k = g.usize_in(1, 24);
+        for c in 0..m.num_classes() {
+            let mut entries: Vec<(u64, f32)> = Vec::new();
+            for s in &shards {
+                entries.extend(s.topk_class(c, k));
+            }
+            let merged = merge_topk(entries, k);
+            let global = m.topk_class(c, k);
+            assert_eq!(merged.len(), global.len(), "class {c}");
+            for (a, b) in merged.iter().zip(&global) {
+                assert_eq!(a.0, b.0, "class {c} id order");
+                assert_eq!(a.1.to_bits(), b.1.to_bits(), "class {c} weight");
+            }
+        }
+    });
+}
+
+#[test]
+fn shard_headers_roundtrip_and_forgeries_are_rejected() {
+    run("shard header integrity", 24, |g: &mut Gen| {
+        let m = random_model(g);
+        let k = g.usize_in(2, 6);
+        let shards = m.into_shards(k).unwrap();
+        let i = g.usize_in(0, k);
+        let bytes = shards[i].encode();
+        let back = ServableModel::decode(&bytes).expect("shard roundtrip");
+        assert_eq!(back.shard_index(), i as u32);
+        assert_eq!(back.shard_count(), k as u32);
+        assert_eq!(back.shard_range(), shards[i].shard_range());
+        assert_eq!(back.generation, m.generation);
+
+        // forge the shard header (index ≥ count) and re-sign the CRC: the
+        // structural validation must reject what the checksum now accepts.
+        // offset 20 = magic(8) + version(4) + generation(8) → shard_index
+        let mut forged = bytes.clone();
+        forged[20..24].copy_from_slice(&(k as u32 + 7).to_le_bytes());
+        let n = forged.len();
+        let crc = bear::coordinator::checkpoint::crc32(&forged[..n - 4]);
+        forged[n - 4..].copy_from_slice(&crc.to_le_bytes());
+        let err = ServableModel::decode(&forged).unwrap_err();
+        assert!(format!("{err:#}").contains("shard"), "{err:#}");
+
+        // shrink the range below the table's ids (re-signed): rejected
+        // unless the table slice is empty anyway
+        if shards[i].n_features() > 0 && shards[i].shard_range().0 == 0 {
+            let mut shrunk = bytes.clone();
+            // range_end at offset 36..44; clamp to 0 so every table id
+            // falls outside
+            shrunk[36..44].copy_from_slice(&0u64.to_le_bytes());
+            let n = shrunk.len();
+            let crc = bear::coordinator::checkpoint::crc32(&shrunk[..n - 4]);
+            shrunk[n - 4..].copy_from_slice(&crc.to_le_bytes());
+            let decoded = ServableModel::decode(&shrunk);
+            let tbl_min = shards[i].selected_ids()[0];
+            if tbl_min > 0 {
+                let err = decoded.unwrap_err();
+                assert!(format!("{err:#}").contains("shard"), "{err:#}");
+            }
+        }
+    });
+}

@@ -3,12 +3,17 @@
 //! generations/bias/loss) must
 //!
 //! - round-trip encode → decode with identical predictions and header
-//!   fields, and
+//!   fields,
 //! - be **rejected** when any single byte of the image is flipped — the
-//!   CRC-32 trailer covers the entire file, so a corrupt publication can
-//!   never be swapped into a serving process.
+//!   CRC-32 trailer covers the entire file (v3's shard header included),
+//!   so a corrupt publication can never be swapped into a serving
+//!   process, and
+//! - stay readable across format history: a hand-written **v2** image
+//!   (no shard header) must load as shard 0 of 1 over the full feature
+//!   range with bit-identical predictions.
 
 use bear::algo::sketched::SketchedState;
+use bear::coordinator::checkpoint::crc32;
 use bear::loss::LossKind;
 use bear::prop::{run, Gen};
 use bear::serve::ServableModel;
@@ -100,6 +105,76 @@ fn any_flipped_byte_is_rejected() {
         // every flip is caught by the whole-file CRC check (the flip is
         // either in the covered body or in the stored CRC itself)
         assert!(format!("{err:#}").contains("CRC"), "byte {pos}: {err:#}");
+    });
+}
+
+/// Hand-rolled BEARSNAP **v2** image (the pre-sharding layout: no shard
+/// header) of a sketch-free model, built from public accessors only —
+/// the little-endian writers mirror the checkpoint primitives.
+fn encode_v2_table_only(m: &ServableModel) -> Vec<u8> {
+    assert!(!m.has_sketch());
+    let u32le = |buf: &mut Vec<u8>, v: u32| buf.extend_from_slice(&v.to_le_bytes());
+    let u64le = |buf: &mut Vec<u8>, v: u64| buf.extend_from_slice(&v.to_le_bytes());
+    let f32le = |buf: &mut Vec<u8>, v: f32| buf.extend_from_slice(&v.to_bits().to_le_bytes());
+    let mut buf = Vec::new();
+    buf.extend_from_slice(b"BEARSNAP");
+    u32le(&mut buf, 2); // version 2: generation, no shard header
+    u64le(&mut buf, m.generation);
+    u64le(&mut buf, m.hash_seed);
+    u32le(&mut buf, 0); // query mode: median
+    u32le(&mut buf, match m.loss {
+        LossKind::Mse => 0,
+        LossKind::Logistic => 1,
+    });
+    f32le(&mut buf, m.bias);
+    u32le(&mut buf, m.num_classes() as u32);
+    for c in 0..m.num_classes() {
+        let mut pairs = m.topk_class(c, usize::MAX);
+        pairs.sort_unstable_by_key(|&(f, _)| f);
+        u32le(&mut buf, pairs.len() as u32);
+        for (f, w) in pairs {
+            u64le(&mut buf, f);
+            f32le(&mut buf, w);
+        }
+    }
+    u32le(&mut buf, 0); // no sketch fallback
+    let crc = crc32(&buf);
+    u32le(&mut buf, crc);
+    buf
+}
+
+#[test]
+fn v2_images_load_as_single_shard_v3_models() {
+    run("v2 reads as shard 0/1 with identical predictions", 32, |g: &mut Gen| {
+        let m = match random_model(g) {
+            m if m.has_sketch() => m.without_sketch(),
+            m => m,
+        };
+        let v2 = encode_v2_table_only(&m);
+        let decoded = ServableModel::decode(&v2).expect("v2 image must stay readable");
+        // pre-shard files are the unsharded identity
+        assert_eq!(decoded.shard_index(), 0);
+        assert_eq!(decoded.shard_count(), 1);
+        assert_eq!(decoded.shard_range(), (0, u64::MAX));
+        assert_eq!(decoded.generation, m.generation);
+        assert_eq!(decoded.num_classes(), m.num_classes());
+        assert_eq!(decoded.n_features(), m.n_features());
+        for q in random_queries(g, 4) {
+            for c in 0..m.num_classes() {
+                assert_eq!(
+                    decoded.margin_class(c, &q).to_bits(),
+                    m.margin_class(c, &q).to_bits()
+                );
+            }
+        }
+        // the CRC still guards the legacy layout: flip any byte → reject
+        let pos = g.u64_below(v2.len() as u64) as usize;
+        let mut corrupt = v2.clone();
+        corrupt[pos] ^= 1u8 << g.u64_below(8);
+        assert!(ServableModel::decode(&corrupt).is_err(), "flip at {pos} accepted");
+        // and a v2 image can be re-sharded after decode (full pipeline)
+        let shards = decoded.into_shards(3).unwrap();
+        assert_eq!(shards.len(), 3);
     });
 }
 
