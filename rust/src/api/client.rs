@@ -1,0 +1,302 @@
+//! [`BearClient`] — the one HTTP client for the serving API.
+//!
+//! Everything that used to open its own socket and format its own
+//! request line (the fleet balancer's forwards, the prober's statz
+//! scrapes, the supervisor's admin reloads, the load generator, the
+//! integration tests) now goes through this client:
+//!
+//! - **Addressing.** Constructed from `host:port` (DNS-resolved via
+//!   `ToSocketAddrs`) or a [`SocketAddr`] — never a bare loopback port —
+//!   so multi-host fleets (`bear fleet --join host:port,…`) use the same
+//!   client as loopback ones.
+//! - **Pooling.** With `pool > 0`, completed keep-alive connections
+//!   return to a bounded pool; a pooled connection that fails is
+//!   presumed stale (servers shed idle keep-alives after their read
+//!   timeout) and the exchange is retried once on a fresh connection,
+//!   which is authoritative. With `pool == 0` every exchange runs on a
+//!   fresh `Connection: close` connection — control-plane semantics: a
+//!   health probe must prove the peer accepts NEW connections, not that
+//!   an old one is still warm.
+//! - **Typed results.** Every method returns `Result<_, `[`ApiError`]`>`:
+//!   non-200 statuses come back as the typed variant ([`ApiError::Conflict`]
+//!   means re-pin, [`ApiError::Unavailable`] means back off), transport
+//!   failures as [`ApiError::Transport`], unparseable peers as
+//!   [`ApiError::Malformed`] — callers match variants instead of
+//!   grepping bodies or io error kinds.
+
+use crate::api::types::{
+    ReloadResponse, ShardWeightsRequest, Statz, TopkRequest, TopkResponse,
+};
+use crate::api::{ApiError, Route};
+use crate::serve::http;
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Client tunables.
+#[derive(Clone, Copy, Debug)]
+pub struct ClientConfig {
+    /// Per-connect deadline.
+    pub connect_timeout: Duration,
+    /// Read/write deadline per exchange.
+    pub io_timeout: Duration,
+    /// Idle keep-alive connections retained. `0` ⇒ a fresh
+    /// `Connection: close` connection per exchange (control plane).
+    pub pool: usize,
+}
+
+impl Default for ClientConfig {
+    fn default() -> Self {
+        Self {
+            connect_timeout: Duration::from_millis(500),
+            io_timeout: Duration::from_secs(10),
+            pool: 2,
+        }
+    }
+}
+
+/// One pooled keep-alive connection.
+struct Conn {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+/// A typed client for one serving endpoint (a worker, a balancer).
+/// Cheap to share behind `&` — the pool is internally synchronized.
+pub struct BearClient {
+    /// Every address the endpoint resolved to; [`BearClient::dial`]
+    /// tries them in order (a dual-stack hostname whose server listens
+    /// on one family only must still connect — `TcpStream::connect(&str)`
+    /// did this, so the typed client must too).
+    addrs: Vec<SocketAddr>,
+    cfg: ClientConfig,
+    pool: Mutex<Vec<Conn>>,
+}
+
+impl BearClient {
+    /// Resolve `host:port` to a socket address (first DNS answer).
+    pub fn resolve(addr: &str) -> std::io::Result<SocketAddr> {
+        Ok(Self::resolve_all(addr)?[0])
+    }
+
+    /// Resolve `host:port` to every answer, in resolver order.
+    pub fn resolve_all(addr: &str) -> std::io::Result<Vec<SocketAddr>> {
+        let addrs: Vec<SocketAddr> = addr.to_socket_addrs()?.collect();
+        if addrs.is_empty() {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::AddrNotAvailable,
+                format!("{addr}: resolved to no addresses"),
+            ));
+        }
+        Ok(addrs)
+    }
+
+    /// A default-config client for `host:port`, keeping every resolved
+    /// address as a dial fallback.
+    pub fn connect(addr: &str) -> Result<BearClient, ApiError> {
+        let addrs = BearClient::resolve_all(addr)?;
+        Ok(BearClient { addrs, cfg: ClientConfig::default(), pool: Mutex::new(Vec::new()) })
+    }
+
+    pub fn new(addr: SocketAddr, cfg: ClientConfig) -> BearClient {
+        BearClient { addrs: vec![addr], cfg, pool: Mutex::new(Vec::new()) }
+    }
+
+    /// A client over a pre-resolved address list (what
+    /// [`BearClient::resolve_all`] returns) — callers that resolve once
+    /// and build many clients keep the dial fallback.
+    pub fn with_addrs(addrs: Vec<SocketAddr>, cfg: ClientConfig) -> BearClient {
+        assert!(!addrs.is_empty(), "BearClient needs at least one address");
+        BearClient { addrs, cfg, pool: Mutex::new(Vec::new()) }
+    }
+
+    /// The primary (first-resolved) address.
+    pub fn addr(&self) -> SocketAddr {
+        self.addrs[0]
+    }
+
+    /// Try every resolved address in order; the last error wins.
+    fn dial(&self) -> std::io::Result<Conn> {
+        let mut last_err = None;
+        for addr in &self.addrs {
+            match TcpStream::connect_timeout(addr, self.cfg.connect_timeout) {
+                Ok(stream) => {
+                    stream.set_nodelay(true).ok();
+                    stream.set_read_timeout(Some(self.cfg.io_timeout)).ok();
+                    stream.set_write_timeout(Some(self.cfg.io_timeout)).ok();
+                    let writer = stream.try_clone()?;
+                    return Ok(Conn { reader: BufReader::new(stream), writer });
+                }
+                Err(e) => last_err = Some(e),
+            }
+        }
+        Err(last_err.expect("resolve_all guarantees at least one address"))
+    }
+
+    fn pool_pop(&self) -> Option<Conn> {
+        self.pool.lock().ok()?.pop()
+    }
+
+    fn pool_push(&self, conn: Conn) {
+        if let Ok(mut pool) = self.pool.lock() {
+            if pool.len() < self.cfg.pool {
+                pool.push(conn);
+            }
+        }
+    }
+
+    fn exchange_on(
+        conn: &mut Conn,
+        method: &str,
+        target: &str,
+        body: &[u8],
+        keep: bool,
+    ) -> Result<http::Response, ApiError> {
+        http::write_request(&mut conn.writer, method, target, body, keep)?;
+        match http::read_response(&mut conn.reader) {
+            Ok(Some(resp)) => Ok(resp),
+            Ok(None) => Err(ApiError::Transport(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                "peer closed before status line",
+            ))),
+            Err(http::ReadError::Io(e)) => Err(ApiError::Transport(e)),
+            Err(e) => Err(ApiError::Malformed(e.to_string())),
+        }
+    }
+
+    /// One request/response exchange: pooled keep-alive connection first
+    /// (ANY pooled failure falls through to one fresh-connection retry,
+    /// which is authoritative), surviving keep-alive connections return
+    /// to the pool. The raw [`http::Response`] comes back whatever the
+    /// status — proxies relay non-200s; typed methods layer
+    /// classification on top.
+    pub fn exchange(
+        &self,
+        method: &str,
+        target: &str,
+        body: &[u8],
+    ) -> Result<http::Response, ApiError> {
+        if self.cfg.pool == 0 {
+            let mut conn = self.dial()?;
+            return Self::exchange_on(&mut conn, method, target, body, false);
+        }
+        if let Some(mut conn) = self.pool_pop() {
+            if let Ok(resp) = Self::exchange_on(&mut conn, method, target, body, true) {
+                if resp.keep_alive {
+                    self.pool_push(conn);
+                }
+                return Ok(resp);
+            }
+            // pooled connection was stale (the server sheds idle
+            // keep-alives); the fresh connect below is authoritative
+        }
+        let mut conn = self.dial()?;
+        let resp = Self::exchange_on(&mut conn, method, target, body, true)?;
+        if resp.keep_alive {
+            self.pool_push(conn);
+        }
+        Ok(resp)
+    }
+
+    /// Raw exchange returning `(status, body-as-text)` — the escape
+    /// hatch for tests poking non-API paths.
+    pub fn request(&self, method: &str, target: &str, body: &[u8]) -> Result<(u16, String), ApiError> {
+        let resp = self.exchange(method, target, body)?;
+        Ok((resp.status, String::from_utf8_lossy(&resp.body).into_owned()))
+    }
+
+    fn expect_200(resp: http::Response) -> Result<String, ApiError> {
+        let body = String::from_utf8_lossy(&resp.body).into_owned();
+        if resp.status == 200 {
+            Ok(body)
+        } else {
+            Err(ApiError::from_status(resp.status, body))
+        }
+    }
+
+    fn call(&self, route: Route, query: Option<&str>, body: &[u8]) -> Result<String, ApiError> {
+        let target = route.target(query);
+        Self::expect_200(self.exchange(route.method(), &target, body)?)
+    }
+
+    /// `POST /v1/predict` with a pre-encoded body; the 200 response text.
+    pub fn predict_raw(&self, body: &str) -> Result<String, ApiError> {
+        self.call(Route::Predict, None, body.as_bytes())
+    }
+
+    /// `GET /v1/topk` — raw 200 body (the balancer's K-way merge output
+    /// is compared byte-for-byte in the chaos tests).
+    pub fn topk_raw(&self, req: &TopkRequest) -> Result<String, ApiError> {
+        self.call(Route::Topk, Some(&req.encode_query()), b"")
+    }
+
+    /// `GET /v1/topk`, parsed.
+    pub fn topk(&self, req: &TopkRequest) -> Result<TopkResponse, ApiError> {
+        TopkResponse::parse(&self.topk_raw(req)?)
+    }
+
+    /// `POST /v1/shard/weights` — the 200 body (header line + weight
+    /// tokens), generation-pinned when `req.gen` is set.
+    pub fn shard_weights(
+        &self,
+        req: &ShardWeightsRequest,
+        body: &[u8],
+    ) -> Result<String, ApiError> {
+        self.call(Route::ShardWeights, req.encode_query().as_deref(), body)
+    }
+
+    /// `GET /v1/healthz` — `Ok(())` on 200.
+    pub fn healthz(&self) -> Result<(), ApiError> {
+        self.call(Route::Healthz, None, b"").map(|_| ())
+    }
+
+    /// `GET /v1/statz` — the raw body.
+    pub fn statz_raw(&self) -> Result<String, ApiError> {
+        self.call(Route::Statz, None, b"")
+    }
+
+    /// `GET /v1/statz`, parsed into the typed schema.
+    pub fn statz(&self) -> Result<Statz, ApiError> {
+        Ok(Statz::parse(&self.statz_raw()?))
+    }
+
+    /// `POST /v1/admin/reload`, parsed. [`ApiError::BadRequest`] when
+    /// the server runs without `--watch-manifest`.
+    pub fn admin_reload(&self) -> Result<ReloadResponse, ApiError> {
+        ReloadResponse::parse(&self.call(Route::AdminReload, None, b"")?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resolve_accepts_host_port_and_rejects_garbage() {
+        let a = BearClient::resolve("127.0.0.1:8370").unwrap();
+        assert_eq!(a.port(), 8370);
+        assert!(a.ip().is_loopback());
+        // hostname resolution goes through DNS machinery
+        let l = BearClient::resolve("localhost:9").unwrap();
+        assert_eq!(l.port(), 9);
+        assert!(BearClient::resolve("not a host").is_err());
+    }
+
+    #[test]
+    fn exchange_against_closed_port_is_a_transport_error() {
+        // reserve-and-release: nothing listens here afterwards
+        let addr = {
+            let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap()
+        };
+        let client = BearClient::new(
+            addr,
+            ClientConfig { connect_timeout: Duration::from_millis(200), ..Default::default() },
+        );
+        match client.healthz() {
+            Err(ApiError::Transport(_)) => {}
+            other => panic!("expected Transport, got {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,263 @@
+//! `bear::api` — the single source of truth for the serving protocol.
+//!
+//! Before this module existed the six serving endpoints lived as ~76
+//! hand-rolled path strings and ad-hoc body parsers scattered across the
+//! server, balancer, prober, supervisor, loadgen, and every integration
+//! test — each new scenario (sharding, generation pinning) re-implemented
+//! encode/decode in five places. Now there is exactly one:
+//!
+//! - [`Route`] — the versioned route table. Every endpoint is mounted
+//!   under `/v1/*` (the canonical paths [`BearClient`] speaks) **and**
+//!   under its legacy pre-versioning alias (`/predict`, `/topk`, …),
+//!   served byte-for-byte identically (`tests/prop_api.rs` proves it
+//!   against a live server). New endpoints get only a `/v1` path;
+//!   breaking changes get a `/v2` tree while `/v1` keeps serving.
+//! - [`types`] — typed request/response structs with hand-rolled
+//!   encode/parse (no serde in the offline vendor set): encode→parse is
+//!   bit-exact (floats travel in Rust's shortest-round-trip form or as
+//!   raw bits), so "the balancer speaks the server's wire format" is a
+//!   type-system fact, not a string-matching convention.
+//! - [`ApiError`] — the typed error surface. Server handlers produce it
+//!   (mapping to 400/404/409/413/500/502/503 with the exact legacy
+//!   bodies); [`BearClient`] returns it, so callers match on
+//!   [`ApiError::Conflict`] (re-pin the generation) or
+//!   [`ApiError::Unavailable`] (back off) instead of grepping bodies.
+//! - [`BearClient`] ([`client`]) — the one HTTP client: addressed by
+//!   `host:port` (DNS-resolved, so multi-host fleets work — not bare
+//!   loopback ports), pooled keep-alive with one stale-retry, typed
+//!   methods per route. The fleet balancer, prober, supervisor, load
+//!   generator, and the integration tests all go through it.
+
+pub mod client;
+pub mod types;
+
+pub use client::{BearClient, ClientConfig};
+pub use types::{
+    format_query, parse_gen, parse_query_line, PredictRequest, PredictResponse, PredictShape,
+    ReloadResponse, ShardWeightsRequest, Statz, TopkRequest, TopkResponse, WeightsHeader,
+};
+
+/// The API version prefix all canonical routes live under.
+pub const API_VERSION: &str = "v1";
+
+/// The serving route table: every endpoint the model server and the
+/// fleet balancer expose. One entry per endpoint — method, canonical
+/// `/v1` path, and the legacy alias — so route strings exist in exactly
+/// one place in the codebase.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Route {
+    /// `POST /v1/predict` — score one query per body line.
+    Predict,
+    /// `GET /v1/topk?k=N[&class=C][&gen=G]` — heaviest features.
+    Topk,
+    /// `POST /v1/shard/weights[?gen=G]` — scatter-gather data plane.
+    ShardWeights,
+    /// `GET /v1/healthz` — liveness.
+    Healthz,
+    /// `GET /v1/statz` — counters, latency percentiles, model meta.
+    Statz,
+    /// `POST /v1/admin/reload` — force a manifest check + hot swap.
+    AdminReload,
+}
+
+impl Route {
+    /// Every route, in documentation order.
+    pub const ALL: [Route; 6] = [
+        Route::Predict,
+        Route::Topk,
+        Route::ShardWeights,
+        Route::Healthz,
+        Route::Statz,
+        Route::AdminReload,
+    ];
+
+    /// The HTTP method this route answers.
+    pub fn method(self) -> &'static str {
+        match self {
+            Route::Predict | Route::ShardWeights | Route::AdminReload => "POST",
+            Route::Topk | Route::Healthz | Route::Statz => "GET",
+        }
+    }
+
+    /// Canonical versioned path (what [`BearClient`] sends).
+    pub fn v1_path(self) -> &'static str {
+        match self {
+            Route::Predict => "/v1/predict",
+            Route::Topk => "/v1/topk",
+            Route::ShardWeights => "/v1/shard/weights",
+            Route::Healthz => "/v1/healthz",
+            Route::Statz => "/v1/statz",
+            Route::AdminReload => "/v1/admin/reload",
+        }
+    }
+
+    /// Pre-versioning alias, served byte-for-byte like the `/v1` path.
+    pub fn legacy_path(self) -> &'static str {
+        match self {
+            Route::Predict => "/predict",
+            Route::Topk => "/topk",
+            Route::ShardWeights => "/shard/weights",
+            Route::Healthz => "/healthz",
+            Route::Statz => "/statz",
+            Route::AdminReload => "/admin/reload",
+        }
+    }
+
+    /// Resolve a request line to a route: the method must match and the
+    /// path may be either the `/v1` path or the legacy alias. `None` is
+    /// the server's 404.
+    pub fn resolve(method: &str, path: &str) -> Option<Route> {
+        Route::ALL
+            .iter()
+            .copied()
+            .find(|r| r.method() == method && (path == r.v1_path() || path == r.legacy_path()))
+    }
+
+    /// `path?query` request target on the canonical `/v1` path.
+    pub fn target(self, query: Option<&str>) -> String {
+        match query {
+            Some(q) if !q.is_empty() => format!("{}?{q}", self.v1_path()),
+            _ => self.v1_path().to_string(),
+        }
+    }
+}
+
+/// The typed serving-protocol error. Server handlers build these (each
+/// variant carries the exact wire body, newline included, so legacy
+/// bodies stay byte-identical); [`BearClient`] parses non-200 responses
+/// back into them, so both sides of the wire share one vocabulary.
+#[derive(Debug)]
+pub enum ApiError {
+    /// 400 — malformed request (body parse failure, bad parameter).
+    BadRequest(String),
+    /// 404 — no such route.
+    NotFound(String),
+    /// 409 — a generation-pinned request the server cannot satisfy
+    /// (neither current nor retained-previous snapshot): re-pin.
+    Conflict(String),
+    /// 413 — declared body over [`crate::serve::http::MAX_BODY`].
+    PayloadTooLarge(String),
+    /// 500 — server-side failure (reload error, batcher gone).
+    Internal(String),
+    /// 502 — a proxy could not relay the backend's answer.
+    BadGateway(String),
+    /// 503 — overload shedding / no healthy backend: back off and retry.
+    Unavailable(String),
+    /// Any other status (a non-bear peer, a future version).
+    Status { status: u16, body: String },
+    /// Transport-level failure (connect refused, reset, timeout, EOF):
+    /// the peer is presumed down — eject/retry territory.
+    Transport(std::io::Error),
+    /// The peer answered bytes this client cannot parse (protocol
+    /// violation — NOT retryable sideways, every replica would answer
+    /// the same).
+    Malformed(String),
+}
+
+impl ApiError {
+    /// The HTTP status this error travels as, when it has one
+    /// ([`ApiError::Transport`]/[`ApiError::Malformed`] do not).
+    pub fn status(&self) -> Option<u16> {
+        match self {
+            ApiError::BadRequest(_) => Some(400),
+            ApiError::NotFound(_) => Some(404),
+            ApiError::Conflict(_) => Some(409),
+            ApiError::PayloadTooLarge(_) => Some(413),
+            ApiError::Internal(_) => Some(500),
+            ApiError::BadGateway(_) => Some(502),
+            ApiError::Unavailable(_) => Some(503),
+            ApiError::Status { status, .. } => Some(*status),
+            ApiError::Transport(_) | ApiError::Malformed(_) => None,
+        }
+    }
+
+    /// The exact wire body for statused variants.
+    pub fn body(&self) -> Option<&str> {
+        match self {
+            ApiError::BadRequest(b)
+            | ApiError::NotFound(b)
+            | ApiError::Conflict(b)
+            | ApiError::PayloadTooLarge(b)
+            | ApiError::Internal(b)
+            | ApiError::BadGateway(b)
+            | ApiError::Unavailable(b)
+            | ApiError::Status { body: b, .. } => Some(b),
+            ApiError::Transport(_) | ApiError::Malformed(_) => None,
+        }
+    }
+
+    /// Classify a non-200 response into the typed vocabulary.
+    pub fn from_status(status: u16, body: String) -> ApiError {
+        match status {
+            400 => ApiError::BadRequest(body),
+            404 => ApiError::NotFound(body),
+            409 => ApiError::Conflict(body),
+            413 => ApiError::PayloadTooLarge(body),
+            500 => ApiError::Internal(body),
+            502 => ApiError::BadGateway(body),
+            503 => ApiError::Unavailable(body),
+            other => ApiError::Status { status: other, body },
+        }
+    }
+}
+
+impl std::fmt::Display for ApiError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ApiError::Transport(e) => write!(f, "transport: {e}"),
+            ApiError::Malformed(msg) => write!(f, "malformed response: {msg}"),
+            other => {
+                let status = other.status().unwrap_or(0);
+                let body = other.body().unwrap_or("").trim_end();
+                write!(f, "HTTP {status}: {body}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ApiError {}
+
+impl From<std::io::Error> for ApiError {
+    fn from(e: std::io::Error) -> Self {
+        ApiError::Transport(e)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_route_resolves_on_both_paths_with_its_method_only() {
+        for r in Route::ALL {
+            assert_eq!(Route::resolve(r.method(), r.v1_path()), Some(r));
+            assert_eq!(Route::resolve(r.method(), r.legacy_path()), Some(r));
+            // the wrong method does not resolve (server answers 404)
+            let wrong = if r.method() == "GET" { "POST" } else { "GET" };
+            assert_eq!(Route::resolve(wrong, r.v1_path()), None);
+            assert_eq!(Route::resolve(wrong, r.legacy_path()), None);
+            // v1 path is the legacy path under the version prefix
+            assert_eq!(r.v1_path(), format!("/{API_VERSION}{}", r.legacy_path()));
+        }
+        assert_eq!(Route::resolve("GET", "/nope"), None);
+        assert_eq!(Route::resolve("GET", "/v2/predict"), None);
+    }
+
+    #[test]
+    fn target_appends_query_only_when_present() {
+        assert_eq!(Route::Topk.target(None), "/v1/topk");
+        assert_eq!(Route::Topk.target(Some("")), "/v1/topk");
+        assert_eq!(Route::Topk.target(Some("k=3")), "/v1/topk?k=3");
+    }
+
+    #[test]
+    fn api_error_statuses_roundtrip() {
+        for status in [400u16, 404, 409, 413, 500, 502, 503, 418] {
+            let e = ApiError::from_status(status, "b\n".into());
+            assert_eq!(e.status(), Some(status));
+            assert_eq!(e.body(), Some("b\n"));
+        }
+        let io = std::io::Error::new(std::io::ErrorKind::Other, "x");
+        assert_eq!(ApiError::Transport(io).status(), None);
+    }
+}

@@ -1,0 +1,548 @@
+//! Typed request/response schemas for every serving endpoint, with
+//! hand-rolled encode/parse (no serde in the offline vendor set).
+//!
+//! The encode side produces exactly the bytes the pre-`bear::api` wire
+//! carried (floats in Rust's shortest-round-trip `Display` form, or as
+//! raw bits for the shard-weights tokens), and the parse side reads them
+//! back bit-exactly — `tests/prop_api.rs` round-trips every type on
+//! arbitrary inputs. Error bodies are part of the schema too: parse
+//! failures carry the exact legacy wire body (trailing newline included)
+//! inside [`ApiError`], so moving the parsers here changed zero bytes on
+//! the wire.
+
+use crate::api::{ApiError, Route};
+use crate::serve::http::query_param;
+use crate::serve::snapshot::Prediction;
+use crate::sparse::SparseVec;
+use anyhow::{Context, Result};
+
+// ---------------------------------------------------------------------------
+// query tokenization (shared by /predict and /shard/weights)
+// ---------------------------------------------------------------------------
+
+/// Render one sparse query as a `/predict` body line (`idx:val` pairs,
+/// space-separated, f32 values in shortest-round-trip form).
+pub fn format_query(x: &SparseVec) -> String {
+    let mut line = String::with_capacity(x.nnz() * 12);
+    for (i, (&f, &v)) in x.idx.iter().zip(&x.val).enumerate() {
+        if i > 0 {
+            line.push(' ');
+        }
+        line.push_str(&format!("{f}:{v}"));
+    }
+    line
+}
+
+/// Parse one predict-body line (`idx:val` pairs separated by
+/// whitespace); `Ok(None)` for blank lines. THE query tokenizer: the
+/// model server, the scatter-gather balancer, and the shard-weights
+/// renderer all call this one function, so validation and
+/// duplicate-feature merging are identical on every path.
+pub fn parse_query_line(line: &str, lineno: usize) -> Result<Option<SparseVec>> {
+    let line = line.trim();
+    if line.is_empty() {
+        return Ok(None);
+    }
+    let mut pairs = Vec::new();
+    for tok in line.split_whitespace() {
+        let (i, v) = tok
+            .split_once(':')
+            .with_context(|| format!("line {}: token {tok:?} is not idx:val", lineno + 1))?;
+        let i: u64 = i
+            .parse()
+            .with_context(|| format!("line {}: bad index {i:?}", lineno + 1))?;
+        let v: f32 = v
+            .parse()
+            .with_context(|| format!("line {}: bad value {v:?}", lineno + 1))?;
+        pairs.push((i, v));
+    }
+    Ok(Some(SparseVec::from_pairs(pairs)))
+}
+
+/// Parse an optional `gen` pin from a query string. `Ok(None)` when
+/// absent; the exact legacy 400 body on an unparseable value.
+pub fn parse_gen(query: Option<&str>) -> Result<Option<u64>, ApiError> {
+    match query_param(query, "gen") {
+        None => Ok(None),
+        Some(v) => match v.parse::<u64>() {
+            Ok(g) => Ok(Some(g)),
+            Err(_) => Err(ApiError::BadRequest(format!("bad gen parameter {v:?}\n"))),
+        },
+    }
+}
+
+// ---------------------------------------------------------------------------
+// POST /v1/predict
+// ---------------------------------------------------------------------------
+
+/// `POST /v1/predict` — one query per non-empty body line.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PredictRequest {
+    pub queries: Vec<SparseVec>,
+}
+
+impl PredictRequest {
+    /// One [`format_query`] line per query.
+    pub fn encode_body(&self) -> String {
+        let mut out = String::new();
+        for q in &self.queries {
+            out.push_str(&format_query(q));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Parse a request body; the error carries the exact legacy 400
+    /// body (anyhow context chain + newline).
+    pub fn parse_body(body: &[u8]) -> Result<Self, ApiError> {
+        let inner = || -> Result<Vec<SparseVec>> {
+            let text = std::str::from_utf8(body).context("predict body is not UTF-8")?;
+            let mut out = Vec::new();
+            for (lineno, line) in text.lines().enumerate() {
+                if let Some(q) = parse_query_line(line, lineno)? {
+                    out.push(q);
+                }
+            }
+            Ok(out)
+        };
+        match inner() {
+            Ok(queries) => Ok(PredictRequest { queries }),
+            Err(e) => Err(ApiError::BadRequest(format!("{e:#}\n"))),
+        }
+    }
+}
+
+/// Which line shape a predict response carries — the text format is
+/// ambiguous without the model kind (`"5 0.25"` is a class+margin for a
+/// multi-class model but a margin+probability for a binary one).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PredictShape {
+    /// `margin` — MSE models.
+    Margin,
+    /// `margin probability` — binary logistic models.
+    MarginProbability,
+    /// `class margin` — multi-class snapshots.
+    ClassMargin,
+}
+
+/// `POST /v1/predict` response: one prediction per line, f64s in
+/// shortest-round-trip form (parse back to identical bits).
+#[derive(Clone, Debug, PartialEq)]
+pub struct PredictResponse {
+    pub preds: Vec<Prediction>,
+}
+
+impl PredictResponse {
+    /// The model server's exact response formatting.
+    pub fn encode(&self) -> String {
+        let mut out = String::with_capacity(self.preds.len() * 24);
+        for p in &self.preds {
+            match (p.class, p.probability) {
+                (Some(class), _) => out.push_str(&format!("{class} {}\n", p.margin)),
+                (None, Some(prob)) => out.push_str(&format!("{} {}\n", p.margin, prob)),
+                (None, None) => out.push_str(&format!("{}\n", p.margin)),
+            }
+        }
+        out
+    }
+
+    /// Parse a 200 body back into predictions, given the shape the
+    /// serving model produces.
+    pub fn parse(text: &str, shape: PredictShape) -> Result<Self, ApiError> {
+        let mut preds = Vec::new();
+        for line in text.lines() {
+            let mut cols = line.split_whitespace();
+            let bad = || ApiError::Malformed(format!("bad predict line {line:?}"));
+            let p = match shape {
+                PredictShape::Margin => Prediction {
+                    margin: cols.next().and_then(|t| t.parse().ok()).ok_or_else(bad)?,
+                    probability: None,
+                    class: None,
+                },
+                PredictShape::MarginProbability => Prediction {
+                    margin: cols.next().and_then(|t| t.parse().ok()).ok_or_else(bad)?,
+                    probability: Some(
+                        cols.next().and_then(|t| t.parse().ok()).ok_or_else(bad)?,
+                    ),
+                    class: None,
+                },
+                PredictShape::ClassMargin => {
+                    let class: usize =
+                        cols.next().and_then(|t| t.parse().ok()).ok_or_else(bad)?;
+                    Prediction {
+                        margin: cols.next().and_then(|t| t.parse().ok()).ok_or_else(bad)?,
+                        probability: None,
+                        class: Some(class),
+                    }
+                }
+            };
+            if cols.next().is_some() {
+                return Err(bad());
+            }
+            preds.push(p);
+        }
+        Ok(PredictResponse { preds })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// GET /v1/topk
+// ---------------------------------------------------------------------------
+
+/// `GET /v1/topk?k=N[&class=C][&gen=G]` — the N heaviest features of
+/// one class, optionally pinned to a generation (the fleet's K-way
+/// merge pins every per-shard fetch to one generation).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TopkRequest {
+    pub k: usize,
+    pub class: usize,
+    pub gen: Option<u64>,
+}
+
+impl Default for TopkRequest {
+    fn default() -> Self {
+        Self { k: 10, class: 0, gen: None }
+    }
+}
+
+impl TopkRequest {
+    /// `k=N&class=C[&gen=G]`.
+    pub fn encode_query(&self) -> String {
+        let mut q = format!("k={}&class={}", self.k, self.class);
+        if let Some(g) = self.gen {
+            q.push_str(&format!("&gen={g}"));
+        }
+        q
+    }
+
+    /// Full request target on the canonical path.
+    pub fn target(&self) -> String {
+        Route::Topk.target(Some(&self.encode_query()))
+    }
+
+    /// Legacy server semantics, exactly: a missing or unparseable
+    /// `k`/`class` falls back to the default; a present-but-bad `gen`
+    /// is a 400.
+    pub fn parse_query(query: Option<&str>) -> Result<Self, ApiError> {
+        Ok(TopkRequest { gen: parse_gen(query)?, ..Self::parse_query_unpinned(query) })
+    }
+
+    /// The balancer's view of a client query: `k`/`class` with the same
+    /// lenient defaults, any client-sent `gen` ignored (the scatter
+    /// path pins its own generation per fan-out).
+    pub fn parse_query_unpinned(query: Option<&str>) -> TopkRequest {
+        let d = TopkRequest::default();
+        TopkRequest {
+            k: query_param(query, "k").and_then(|v| v.parse().ok()).unwrap_or(d.k),
+            class: query_param(query, "class").and_then(|v| v.parse().ok()).unwrap_or(d.class),
+            gen: None,
+        }
+    }
+}
+
+/// `GET /v1/topk` response: `id weight` per line, heaviest first.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TopkResponse {
+    pub entries: Vec<(u64, f32)>,
+}
+
+impl TopkResponse {
+    pub fn encode(&self) -> String {
+        let mut out = String::with_capacity(self.entries.len() * 16);
+        for (f, w) in &self.entries {
+            out.push_str(&format!("{f} {w}\n"));
+        }
+        out
+    }
+
+    pub fn parse(text: &str) -> Result<Self, ApiError> {
+        let mut entries = Vec::new();
+        for line in text.lines() {
+            let mut it = line.split_whitespace();
+            let f = it.next().and_then(|t| t.parse::<u64>().ok());
+            let w = it.next().and_then(|t| t.parse::<f32>().ok());
+            match (f, w) {
+                (Some(f), Some(w)) if it.next().is_none() => entries.push((f, w)),
+                _ => return Err(ApiError::Malformed(format!("bad topk line {line:?}"))),
+            }
+        }
+        Ok(TopkResponse { entries })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// POST /v1/shard/weights
+// ---------------------------------------------------------------------------
+
+/// `POST /v1/shard/weights[?gen=G]` — the scatter-gather data plane.
+/// The body is a predict body (the balancer relays it verbatim so the
+/// worker tokenizes with [`parse_query_line`] exactly like `/predict`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ShardWeightsRequest {
+    pub gen: Option<u64>,
+}
+
+impl ShardWeightsRequest {
+    pub fn encode_query(&self) -> Option<String> {
+        self.gen.map(|g| format!("gen={g}"))
+    }
+
+    pub fn target(&self) -> String {
+        Route::ShardWeights.target(self.encode_query().as_deref())
+    }
+
+    pub fn parse_query(query: Option<&str>) -> Result<Self, ApiError> {
+        Ok(ShardWeightsRequest { gen: parse_gen(query)? })
+    }
+}
+
+/// The `/v1/shard/weights` response header: the served generation plus
+/// the model meta the merger needs (class count, exact bias bits, loss
+/// code), pinned together so a merged prediction can never pair one
+/// generation's weights with another's bias/loss.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WeightsHeader {
+    pub generation: u64,
+    pub classes: u64,
+    pub bias_bits: u32,
+    /// [`crate::loss::LossKind`] wire code (see checkpoint v2).
+    pub loss: u32,
+}
+
+impl WeightsHeader {
+    /// `generation G classes C bias_bits B loss L` (no newline).
+    pub fn encode(&self) -> String {
+        format!(
+            "generation {} classes {} bias_bits {} loss {}",
+            self.generation, self.classes, self.bias_bits, self.loss
+        )
+    }
+
+    /// Parse the header line. Out-of-range values fail the parse (the
+    /// balancer answers 502) instead of silently truncating into a
+    /// plausible-looking bias.
+    pub fn parse(line: &str) -> Option<WeightsHeader> {
+        let mut it = line.split_whitespace();
+        let mut field = |name: &str| -> Option<u64> {
+            if it.next()? != name {
+                return None;
+            }
+            it.next()?.parse().ok()
+        };
+        Some(WeightsHeader {
+            generation: field("generation")?,
+            classes: field("classes")?,
+            bias_bits: u32::try_from(field("bias_bits")?).ok()?,
+            loss: u32::try_from(field("loss")?).ok()?,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// POST /v1/admin/reload
+// ---------------------------------------------------------------------------
+
+/// `POST /v1/admin/reload` 200 body, typed. Drift gauges travel in f64
+/// shortest-round-trip form, so encode→parse is bit-exact.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ReloadResponse {
+    /// A newer generation was verified and swapped in.
+    Reloaded { generation: u64, topk_jaccard: f64, coord_norm_delta: f64 },
+    /// Manifest absent or not ahead of the serving generation.
+    UpToDate { generation: u64 },
+}
+
+impl ReloadResponse {
+    /// The reloading server's exact 200 body.
+    pub fn encode(&self) -> String {
+        match self {
+            ReloadResponse::Reloaded { generation, topk_jaccard, coord_norm_delta } => format!(
+                "reloaded generation {generation}\ntopk_jaccard {topk_jaccard}\ncoord_norm_delta {coord_norm_delta}\n"
+            ),
+            ReloadResponse::UpToDate { generation } => {
+                format!("already at generation {generation}\n")
+            }
+        }
+    }
+
+    pub fn parse(text: &str) -> Result<Self, ApiError> {
+        let bad = || ApiError::Malformed(format!("bad reload response {text:?}"));
+        let mut lines = text.lines();
+        let first = lines.next().ok_or_else(bad)?;
+        if let Some(g) = first.strip_prefix("reloaded generation ") {
+            let generation = g.trim().parse().map_err(|_| bad())?;
+            let (mut jaccard, mut delta) = (None, None);
+            for line in lines {
+                if let Some((k, v)) = line.split_once(' ') {
+                    match k {
+                        "topk_jaccard" => jaccard = v.parse().ok(),
+                        "coord_norm_delta" => delta = v.parse().ok(),
+                        _ => {}
+                    }
+                }
+            }
+            match (jaccard, delta) {
+                (Some(topk_jaccard), Some(coord_norm_delta)) => {
+                    Ok(ReloadResponse::Reloaded { generation, topk_jaccard, coord_norm_delta })
+                }
+                _ => Err(bad()),
+            }
+        } else if let Some(g) = first.strip_prefix("already at generation ") {
+            Ok(ReloadResponse::UpToDate { generation: g.trim().parse().map_err(|_| bad())? })
+        } else {
+            Err(bad())
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// GET /v1/statz
+// ---------------------------------------------------------------------------
+
+/// Parsed `GET /v1/statz` body: ordered `key value` pairs with typed
+/// accessors for the load-bearing keys (what the fleet prober caches).
+/// Parsing is tolerant — unknown keys are kept, malformed lines are
+/// skipped — so old clients survive statz schema growth.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Statz {
+    pairs: Vec<(String, String)>,
+}
+
+impl Statz {
+    pub fn parse(body: &str) -> Statz {
+        let mut pairs = Vec::new();
+        for line in body.lines() {
+            if let Some((k, v)) = line.split_once(' ') {
+                pairs.push((k.to_string(), v.to_string()));
+            }
+        }
+        Statz { pairs }
+    }
+
+    /// First value of `key`, verbatim.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.pairs.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+    }
+
+    /// First value of `key` as u64 (0 when absent or unparseable — the
+    /// prober's legacy tolerance for old workers missing a key).
+    pub fn u64(&self, key: &str) -> u64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(0)
+    }
+
+    /// First value of `key` as f64 (0.0 when absent or unparseable).
+    pub fn f64(&self, key: &str) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(0.0)
+    }
+
+    /// Every key, in body order (schema-shape comparisons).
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.pairs.iter().map(|(k, _)| k.as_str())
+    }
+
+    /// Snapshot generation currently being served.
+    pub fn generation(&self) -> u64 {
+        self.u64("generation")
+    }
+
+    pub fn requests_total(&self) -> u64 {
+        self.u64("requests_total")
+    }
+
+    /// Shard identity (0/0 on pre-shard workers whose statz lacks the
+    /// keys — tolerated only by unsharded fleets).
+    pub fn shard_index(&self) -> u64 {
+        self.u64("shard_index")
+    }
+
+    pub fn shard_count(&self) -> u64 {
+        self.u64("shard_count")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn topk_request_roundtrips_and_matches_legacy_defaults() {
+        let req = TopkRequest { k: 7, class: 3, gen: Some(9) };
+        assert_eq!(req.encode_query(), "k=7&class=3&gen=9");
+        assert_eq!(TopkRequest::parse_query(Some(&req.encode_query())).unwrap(), req);
+        assert_eq!(req.target(), "/v1/topk?k=7&class=3&gen=9");
+        // legacy defaults: missing/bad k and class fall back, absent gen is None
+        assert_eq!(TopkRequest::parse_query(None).unwrap(), TopkRequest::default());
+        assert_eq!(
+            TopkRequest::parse_query(Some("k=abc&class=")).unwrap(),
+            TopkRequest::default()
+        );
+        // a present-but-bad gen is a 400 with the legacy body
+        match TopkRequest::parse_query(Some("gen=nope")) {
+            Err(ApiError::BadRequest(body)) => {
+                assert_eq!(body, "bad gen parameter \"nope\"\n");
+            }
+            other => panic!("expected BadRequest, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn predict_body_roundtrips_through_the_one_tokenizer() {
+        let req = PredictRequest {
+            queries: vec![
+                SparseVec::from_pairs(vec![(3, 1.5), (9, -0.25)]),
+                SparseVec::from_pairs(vec![(1, 2.0)]),
+            ],
+        };
+        let parsed = PredictRequest::parse_body(req.encode_body().as_bytes()).unwrap();
+        assert_eq!(parsed, req);
+        match PredictRequest::parse_body(b"not-a-query\n") {
+            Err(ApiError::BadRequest(body)) => assert!(body.contains("idx:val"), "{body}"),
+            other => panic!("expected BadRequest, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn predict_response_parses_each_shape_bit_exactly() {
+        let margin = 0.1 + 0.2; // a value with a non-trivial shortest form
+        let binary = PredictResponse {
+            preds: vec![Prediction { margin, probability: Some(0.3), class: None }],
+        };
+        let back =
+            PredictResponse::parse(&binary.encode(), PredictShape::MarginProbability).unwrap();
+        assert_eq!(back.preds[0].margin.to_bits(), margin.to_bits());
+        let multi = PredictResponse {
+            preds: vec![Prediction { margin: -2.5, probability: None, class: Some(4) }],
+        };
+        let back = PredictResponse::parse(&multi.encode(), PredictShape::ClassMargin).unwrap();
+        assert_eq!(back, multi);
+        // the wrong shape is a parse error, not a silent misread
+        assert!(PredictResponse::parse(&multi.encode(), PredictShape::Margin).is_err());
+    }
+
+    #[test]
+    fn weights_header_and_reload_response_roundtrip() {
+        let h = WeightsHeader { generation: 5, classes: 15, bias_bits: 0x3f80_0000, loss: 1 };
+        assert_eq!(WeightsHeader::parse(&h.encode()), Some(h));
+        assert_eq!(WeightsHeader::parse("generation x"), None);
+        let r = ReloadResponse::Reloaded {
+            generation: 9,
+            topk_jaccard: 0.125,
+            coord_norm_delta: 1.0 / 3.0,
+        };
+        assert_eq!(ReloadResponse::parse(&r.encode()).unwrap(), r);
+        let u = ReloadResponse::UpToDate { generation: 2 };
+        assert_eq!(ReloadResponse::parse(&u.encode()).unwrap(), u);
+        assert!(ReloadResponse::parse("nonsense").is_err());
+    }
+
+    #[test]
+    fn statz_typed_getters_match_legacy_zero_default() {
+        let s = Statz::parse("generation 7\nrequests_total 42\nshard_index 1\nshard_count 3\nmalformed-line\nqps 12.5\n");
+        assert_eq!(s.generation(), 7);
+        assert_eq!(s.requests_total(), 42);
+        assert_eq!((s.shard_index(), s.shard_count()), (1, 3));
+        assert_eq!(s.u64("absent"), 0);
+        assert!((s.f64("qps") - 12.5).abs() < 1e-12);
+        assert!(s.keys().any(|k| k == "generation"));
+    }
+}

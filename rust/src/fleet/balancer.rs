@@ -50,12 +50,13 @@
 //! count: a shard with a single replica being respawned needs the
 //! balancer to wait for re-admission, not to fail fast sideways.
 
+use crate::api::{
+    parse_query_line, ApiError, BearClient, ClientConfig, PredictResponse, Route,
+    ShardWeightsRequest, TopkRequest, TopkResponse, WeightsHeader,
+};
 use crate::fleet::health::BackendState;
 use crate::loss::LossKind;
-use crate::serve::http::{
-    self, query_param, read_request, reason_for, write_response, ReadError, Request,
-};
-use crate::serve::server::{format_predictions, parse_query_line};
+use crate::serve::http::{read_request, reason_for, write_response, ReadError, Request};
 use crate::serve::shard::{merge_topk, parse_weight_token, predict_with};
 use crate::serve::snapshot::Prediction;
 use crate::sparse::SparseVec;
@@ -198,37 +199,12 @@ impl Drop for InFlightGuard<'_> {
     }
 }
 
-/// One pooled keep-alive connection to a backend.
-struct BackendConn {
-    reader: BufReader<TcpStream>,
-    writer: TcpStream,
-}
-
-fn connect_backend(
-    addr: &SocketAddr,
-    connect_timeout: Duration,
-    io_timeout: Duration,
-) -> std::io::Result<BackendConn> {
-    let stream = TcpStream::connect_timeout(addr, connect_timeout)?;
-    stream.set_nodelay(true).ok();
-    stream.set_read_timeout(Some(io_timeout)).ok();
-    stream.set_write_timeout(Some(io_timeout)).ok();
-    let writer = stream.try_clone()?;
-    Ok(BackendConn { reader: BufReader::new(stream), writer })
-}
-
-/// One request/response exchange on an open backend connection.
-fn forward_once(conn: &mut BackendConn, req: &Request) -> std::io::Result<http::Response> {
-    http::write_request(&mut conn.writer, &req.method, &req.target(), &req.body, true)?;
-    match http::read_response(&mut conn.reader) {
-        Ok(Some(resp)) => Ok(resp),
-        Ok(None) => Err(std::io::Error::new(
-            std::io::ErrorKind::UnexpectedEof,
-            "backend closed before status line",
-        )),
-        Err(ReadError::Io(e)) => Err(e),
-        Err(e) => Err(std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string())),
-    }
+/// One typed fan-out call: method and target come from the
+/// [`crate::api`] request builders, never from literal path strings.
+struct ScatterCall {
+    method: &'static str,
+    target: String,
+    body: Vec<u8>,
 }
 
 /// Outcome of one scatter-gather fan-out round.
@@ -252,42 +228,14 @@ enum Gathered {
     Conflict,
 }
 
-/// The `/shard/weights` response header: the served generation plus the
-/// model meta the merger needs, pinned together so a merged prediction
-/// can never pair one generation's weights with another's bias/loss.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-struct WeightsHeader {
-    generation: u64,
-    classes: u64,
-    bias_bits: u32,
-    loss: u32,
-}
-
-/// Parse `generation G classes C bias_bits B loss L`. Out-of-range
-/// values fail the parse (⇒ 502) instead of silently truncating into a
-/// plausible-looking bias.
-fn parse_weights_header(line: &str) -> Option<WeightsHeader> {
-    let mut it = line.split_whitespace();
-    let mut field = |name: &str| -> Option<u64> {
-        if it.next()? != name {
-            return None;
-        }
-        it.next()?.parse().ok()
-    };
-    Some(WeightsHeader {
-        generation: field("generation")?,
-        classes: field("classes")?,
-        bias_bits: u32::try_from(field("bias_bits")?).ok()?,
-        loss: u32::try_from(field("loss")?).ok()?,
-    })
-}
-
 /// The balancer proper: shared by its worker threads and the handle.
 pub struct Balancer {
     cfg: BalancerConfig,
     backends: Arc<Vec<Arc<BackendState>>>,
     picker: Picker,
-    pools: Vec<Mutex<Vec<BackendConn>>>,
+    /// One pooled [`BearClient`] per backend (keep-alive forwards with
+    /// one stale-retry — the client's contract).
+    clients: Vec<BearClient>,
     pub counters: BalancerCounters,
     /// Latest manifest generation the supervisor is rolling toward
     /// (0 without `--watch-manifest`). Reported on `/statz`.
@@ -306,55 +254,23 @@ impl Balancer {
         target_generation: Arc<AtomicU64>,
         shards: usize,
     ) -> Self {
-        let pools = (0..backends.len()).map(|_| Mutex::new(Vec::new())).collect();
+        let client_cfg = ClientConfig {
+            connect_timeout: cfg.connect_timeout,
+            io_timeout: cfg.forward_timeout,
+            pool: cfg.pool_per_backend.max(1),
+        };
+        let clients =
+            backends.iter().map(|b| BearClient::with_addrs(b.addrs.clone(), client_cfg)).collect();
         Self {
             picker: Picker::new(backends.clone()),
             backends,
             cfg,
-            pools,
+            clients,
             counters: BalancerCounters::default(),
             target_generation,
             shards: shards.max(1),
             started: Instant::now(),
         }
-    }
-
-    fn pool_pop(&self, i: usize) -> Option<BackendConn> {
-        self.pools[i].lock().ok()?.pop()
-    }
-
-    fn pool_push(&self, i: usize, conn: BackendConn) {
-        if let Ok(mut pool) = self.pools[i].lock() {
-            if pool.len() < self.cfg.pool_per_backend.max(1) {
-                pool.push(conn);
-            }
-        }
-    }
-
-    /// Forward to backend `i`: pooled connection first (one stale-retry on
-    /// a fresh connection), surviving keep-alive connections return to the
-    /// pool.
-    fn forward_to(&self, i: usize, req: &Request) -> std::io::Result<http::Response> {
-        if let Some(mut conn) = self.pool_pop(i) {
-            if let Ok(resp) = forward_once(&mut conn, req) {
-                if resp.keep_alive {
-                    self.pool_push(i, conn);
-                }
-                return Ok(resp);
-            }
-            // pooled connection was stale (worker sheds idle keep-alives);
-            // fall through to a fresh connect, which is authoritative
-        }
-        let mut conn = connect_backend(
-            &self.backends[i].addr,
-            self.cfg.connect_timeout,
-            self.cfg.forward_timeout,
-        )?;
-        let resp = forward_once(&mut conn, req)?;
-        if resp.keep_alive {
-            self.pool_push(i, conn);
-        }
-        Ok(resp)
     }
 
     /// Route one read request across the fleet with bounded retries.
@@ -381,7 +297,9 @@ impl Balancer {
             };
             let b = &self.backends[i];
             let _guard = InFlightGuard::new(b);
-            match self.forward_to(i, req) {
+            // relay the client's original target (legacy or /v1 — the
+            // workers serve both byte-identically)
+            match self.clients[i].exchange(&req.method, &req.target(), &req.body) {
                 // a worker shedding load (accept-queue overflow 503) is
                 // alive but saturated: don't eject, just try another
                 // backend — these are idempotent reads, and a transient
@@ -397,7 +315,7 @@ impl Balancer {
                 // (oversized/malformed response): it is healthy, and the
                 // same request would fail identically on every backend —
                 // answer 502 without ejecting anyone
-                Err(e) if e.kind() == std::io::ErrorKind::InvalidData => {
+                Err(ApiError::Malformed(_)) => {
                     b.forward_errors.fetch_add(1, Ordering::Relaxed);
                     return (502, b"unrelayable backend response\n".to_vec());
                 }
@@ -434,21 +352,29 @@ impl Balancer {
         Some((chosen, gen))
     }
 
-    /// Fan one request out to each chosen backend in parallel (one scoped
-    /// thread per shard — predict latency is the slowest shard, not the
-    /// sum of all of them). Spawning K short-lived threads per request is
-    /// a deliberate simplicity/latency tradeoff at small K over loopback;
+    /// Fan one typed call out to each chosen backend in parallel (one
+    /// scoped thread per shard — predict latency is the slowest shard,
+    /// not the sum of all of them). Spawning K short-lived threads per
+    /// request is a deliberate simplicity/latency tradeoff at small K;
     /// persistent per-backend forwarder threads (and hedged sends to slow
     /// shards) are the upgrade path if spawn overhead ever shows up in
-    /// the scatter p99.
-    fn fan_out(&self, targets: Vec<(usize, Request)>) -> Vec<std::io::Result<http::Response>> {
+    /// the scatter p99. Each result is the 200 body, or the typed
+    /// [`ApiError`] the round classifier acts on.
+    fn fan_out(&self, targets: Vec<(usize, ScatterCall)>) -> Vec<Result<String, ApiError>> {
         std::thread::scope(|scope| {
             let handles: Vec<_> = targets
                 .into_iter()
-                .map(|(i, req)| {
-                    scope.spawn(move || {
+                .map(|(i, call)| {
+                    scope.spawn(move || -> Result<String, ApiError> {
                         let _guard = InFlightGuard::new(&self.backends[i]);
-                        self.forward_to(i, &req)
+                        let resp =
+                            self.clients[i].exchange(call.method, &call.target, &call.body)?;
+                        let body = String::from_utf8_lossy(&resp.body).into_owned();
+                        if resp.status == 200 {
+                            Ok(body)
+                        } else {
+                            Err(ApiError::from_status(resp.status, body))
+                        }
                     })
                 })
                 .collect();
@@ -457,10 +383,10 @@ impl Balancer {
                 .map(|h| {
                     h.join().unwrap_or_else(|_| {
                         // treated like any transport failure: eject + retry
-                        Err(std::io::Error::new(
+                        Err(ApiError::Transport(std::io::Error::new(
                             std::io::ErrorKind::BrokenPipe,
                             "forward thread panicked",
-                        ))
+                        )))
                     })
                 })
                 .collect()
@@ -468,15 +394,15 @@ impl Balancer {
     }
 
     /// Run one scatter round against `chosen` (one backend per shard) and
-    /// classify the outcome. Transient failures mark the offending
+    /// classify each typed outcome. Transient failures mark the offending
     /// backend in `excluded` so the next round re-picks around it.
     fn scatter_round(
         &self,
         chosen: &[usize],
-        make: impl Fn(usize) -> Request,
+        make: impl Fn(usize) -> ScatterCall,
         excluded: &mut [bool],
     ) -> Round {
-        let targets: Vec<(usize, Request)> =
+        let targets: Vec<(usize, ScatterCall)> =
             chosen.iter().enumerate().map(|(s, &i)| (i, make(s))).collect();
         let results = self.fan_out(targets);
         let mut bodies = Vec::with_capacity(chosen.len());
@@ -485,11 +411,11 @@ impl Balancer {
             let i = chosen[slot];
             let b = &self.backends[i];
             match r {
-                Ok(resp) if resp.status == 200 => {
+                Ok(body) => {
                     b.forwarded.fetch_add(1, Ordering::Relaxed);
-                    bodies.push(String::from_utf8_lossy(&resp.body).into_owned());
+                    bodies.push(body);
                 }
-                Ok(resp) if resp.status == 409 => {
+                Err(ApiError::Conflict(_)) => {
                     // the worker cannot serve the pinned generation (it
                     // rolled past it, or just restarted onto a newer one):
                     // re-pin against fresher scrapes next round
@@ -497,29 +423,32 @@ impl Balancer {
                     excluded[i] = true;
                     retry = true;
                 }
-                Ok(resp) if resp.status == 503 => {
+                Err(ApiError::Unavailable(_)) => {
                     // alive but shedding load: prefer another replica
                     excluded[i] = true;
                     retry = true;
                 }
-                Ok(resp) if resp.status == 400 => {
+                Err(ApiError::BadRequest(body)) => {
                     // every shard sees the same body, so a 400 is
                     // deterministic — relay it, don't burn the budget
-                    return Round::Fatal(400, resp.body);
+                    return Round::Fatal(400, body.into_bytes());
                 }
-                Ok(_) => {
-                    b.forward_errors.fetch_add(1, Ordering::Relaxed);
-                    excluded[i] = true;
-                    retry = true;
-                }
-                Err(e) if e.kind() == std::io::ErrorKind::InvalidData => {
+                Err(ApiError::Malformed(_)) => {
                     b.forward_errors.fetch_add(1, Ordering::Relaxed);
                     return Round::Fatal(502, b"unrelayable backend response\n".to_vec());
                 }
-                Err(_) => {
+                Err(ApiError::Transport(_)) => {
                     // direct down evidence: eject now, probes re-admit
                     b.forward_errors.fetch_add(1, Ordering::Relaxed);
                     b.eject_now();
+                    excluded[i] = true;
+                    retry = true;
+                }
+                Err(_) => {
+                    // any other status (404 from a stale binary, 500):
+                    // the worker answered, so it is not down — exclude it
+                    // for this request and retry elsewhere
+                    b.forward_errors.fetch_add(1, Ordering::Relaxed);
                     excluded[i] = true;
                     retry = true;
                 }
@@ -540,7 +469,7 @@ impl Balancer {
     fn scatter(
         &self,
         rng: &mut Pcg64,
-        make: impl Fn(usize, u64) -> Request,
+        make: impl Fn(usize, u64) -> ScatterCall,
         mut gather: impl FnMut(u64, Vec<String>) -> Gathered,
     ) -> (u16, Vec<u8>) {
         let deadline = Instant::now() + self.cfg.scatter_deadline;
@@ -610,12 +539,10 @@ impl Balancer {
         let n_lines = text.lines().count();
         self.scatter(
             rng,
-            |_s, gen| Request {
-                method: "POST".into(),
-                path: "/shard/weights".into(),
-                query: Some(format!("gen={gen}")),
+            |_s, gen| ScatterCall {
+                method: Route::ShardWeights.method(),
+                target: ShardWeightsRequest { gen: Some(gen) }.target(),
                 body: req.body.clone(),
-                keep_alive: true,
             },
             |gen, bodies| {
                 // gather: per line, feature → per-class weight bits,
@@ -627,7 +554,7 @@ impl Balancer {
                 let mut meta: Option<WeightsHeader> = None;
                 for body in &bodies {
                     let mut lines = body.lines();
-                    let header = match lines.next().and_then(parse_weights_header) {
+                    let header = match lines.next().and_then(WeightsHeader::parse) {
                         Some(h) => h,
                         None => {
                             return Gathered::Respond(
@@ -705,7 +632,7 @@ impl Balancer {
                         })
                     })
                     .collect();
-                Gathered::Respond(200, format_predictions(&preds).into_bytes())
+                Gathered::Respond(200, PredictResponse { preds }.encode().into_bytes())
             },
         )
     }
@@ -715,44 +642,29 @@ impl Balancer {
     /// generation it cannot serve, so complete rounds are consistent).
     fn scatter_topk(&self, rng: &mut Pcg64, req: &Request) -> (u16, Vec<u8>) {
         self.counters.proxied_requests.fetch_add(1, Ordering::Relaxed);
-        let k: usize = query_param(req.query.as_deref(), "k")
-            .and_then(|v| v.parse().ok())
-            .unwrap_or(10);
-        let class: usize = query_param(req.query.as_deref(), "class")
-            .and_then(|v| v.parse().ok())
-            .unwrap_or(0);
+        let treq = TopkRequest::parse_query_unpinned(req.query.as_deref());
         self.scatter(
             rng,
-            |_s, gen| Request {
-                method: "GET".into(),
-                path: "/topk".into(),
-                query: Some(format!("k={k}&class={class}&gen={gen}")),
+            |_s, gen| ScatterCall {
+                method: Route::Topk.method(),
+                target: TopkRequest { gen: Some(gen), ..treq }.target(),
                 body: Vec::new(),
-                keep_alive: true,
             },
             |_gen, bodies| {
                 let mut entries: Vec<(u64, f32)> = Vec::new();
                 for body in &bodies {
-                    for line in body.lines() {
-                        let mut it = line.split_whitespace();
-                        let f = it.next().and_then(|t| t.parse::<u64>().ok());
-                        let w = it.next().and_then(|t| t.parse::<f32>().ok());
-                        match (f, w) {
-                            (Some(f), Some(w)) => entries.push((f, w)),
-                            _ => {
-                                return Gathered::Respond(
-                                    502,
-                                    b"malformed shard topk response\n".to_vec(),
-                                )
-                            }
+                    match TopkResponse::parse(body) {
+                        Ok(shard) => entries.extend(shard.entries),
+                        Err(_) => {
+                            return Gathered::Respond(
+                                502,
+                                b"malformed shard topk response\n".to_vec(),
+                            )
                         }
                     }
                 }
-                let mut out = String::with_capacity(entries.len().min(k) * 16);
-                for (f, w) in merge_topk(entries, k) {
-                    out.push_str(&format!("{f} {w}\n"));
-                }
-                Gathered::Respond(200, out.into_bytes())
+                let merged = TopkResponse { entries: merge_topk(entries, treq.k) };
+                Gathered::Respond(200, merged.encode().into_bytes())
             },
         )
     }
@@ -828,22 +740,26 @@ impl Balancer {
     }
 
     /// Handle one parsed request; returns (status, body, keep_alive).
+    /// Routing goes through the [`Route`] table (`/v1/*` and the legacy
+    /// aliases land in the same arm); the balancer serves only the read
+    /// routes — `/shard/weights` and `/admin/reload` are worker-internal
+    /// and 404 here.
     fn dispatch(&self, rng: &mut Pcg64, req: &Request) -> (u16, Vec<u8>, bool) {
         self.counters.requests_total.fetch_add(1, Ordering::Relaxed);
-        match (req.method.as_str(), req.path.as_str()) {
-            ("POST", "/predict") if self.shards > 1 => {
+        match Route::resolve(&req.method, &req.path) {
+            Some(Route::Predict) if self.shards > 1 => {
                 let (status, body) = self.scatter_predict(rng, req);
                 (status, body, req.keep_alive)
             }
-            ("GET", "/topk") if self.shards > 1 => {
+            Some(Route::Topk) if self.shards > 1 => {
                 let (status, body) = self.scatter_topk(rng, req);
                 (status, body, req.keep_alive)
             }
-            ("POST", "/predict") | ("GET", "/topk") => {
+            Some(Route::Predict) | Some(Route::Topk) => {
                 let (status, body) = self.proxy(rng, req);
                 (status, body, req.keep_alive)
             }
-            ("GET", "/healthz") => {
+            Some(Route::Healthz) => {
                 self.counters.health_requests.fetch_add(1, Ordering::Relaxed);
                 // a sharded fleet is serviceable only when EVERY feature
                 // range has a healthy replica — one covered shard cannot
@@ -856,7 +772,7 @@ impl Balancer {
                     (503, b"no healthy backend\n".to_vec(), req.keep_alive)
                 }
             }
-            ("GET", "/statz") => {
+            Some(Route::Statz) => {
                 self.counters.statz_requests.fetch_add(1, Ordering::Relaxed);
                 (200, self.render_statz().into_bytes(), req.keep_alive)
             }
@@ -1184,8 +1100,8 @@ mod tests {
         let balancer =
             Balancer::new(cfg, backends.clone(), Arc::new(AtomicU64::new(0)), 1);
         let req = Request {
-            method: "POST".into(),
-            path: "/predict".into(),
+            method: Route::Predict.method().into(),
+            path: Route::Predict.v1_path().into(),
             query: None,
             body: b"1:1\n".to_vec(),
             keep_alive: true,

@@ -21,9 +21,8 @@
 //! State flips are guarded by `swap`, so each healthy→down transition
 //! counts exactly one eject no matter how many threads observe it.
 
-use crate::serve::http;
-use std::io::BufReader;
-use std::net::{SocketAddr, TcpStream};
+use crate::api::{BearClient, ClientConfig};
+use std::net::SocketAddr;
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
@@ -36,8 +35,15 @@ pub struct BackendState {
     /// Which feature-range shard this backend serves (0 when the fleet
     /// is unsharded). Replicas of one shard share this value.
     pub shard: usize,
-    /// The worker's listen address.
+    /// The worker's primary listen address (`addrs[0]` — display and
+    /// statz identity).
     pub addr: SocketAddr,
+    /// Every address the worker resolved to. Locally-spawned workers
+    /// have exactly one; a `--join host:port` worker on a dual-stack
+    /// hostname keeps all DNS answers so probes and forwards can fall
+    /// back across address families (same contract as
+    /// [`crate::api::BearClient`]).
+    pub addrs: Vec<SocketAddr>,
     /// In rotation? Starts `false`; the first successful probes admit.
     healthy: AtomicBool,
     /// Has this backend ever been admitted? (first admission is not a
@@ -78,10 +84,18 @@ impl BackendState {
     }
 
     pub fn new_shard(index: usize, addr: SocketAddr, shard: usize) -> Self {
+        Self::new_multi(index, vec![addr], shard)
+    }
+
+    /// A backend with dial-fallback addresses (a `--join` worker whose
+    /// hostname resolved to several). `addrs` must be non-empty.
+    pub fn new_multi(index: usize, addrs: Vec<SocketAddr>, shard: usize) -> Self {
+        assert!(!addrs.is_empty(), "backend needs at least one address");
         Self {
             index,
             shard,
-            addr,
+            addr: addrs[0],
+            addrs,
             healthy: AtomicBool::new(false),
             ever_admitted: AtomicBool::new(false),
             consec_ok: AtomicU32::new(0),
@@ -137,46 +151,21 @@ impl BackendState {
     }
 }
 
-/// One short-deadline HTTP exchange on a fresh connection (probes, admin
-/// reloads, `/statz` scrapes — the fleet's control plane, not its data
-/// plane: proxied traffic uses the balancer's pooled connections).
-pub fn roundtrip(
-    addr: &SocketAddr,
-    timeout: Duration,
-    method: &str,
-    path: &str,
-) -> std::io::Result<http::Response> {
-    let stream = TcpStream::connect_timeout(addr, timeout)?;
-    stream.set_nodelay(true).ok();
-    stream.set_read_timeout(Some(timeout)).ok();
-    stream.set_write_timeout(Some(timeout)).ok();
-    let mut writer = stream.try_clone()?;
-    http::write_request(&mut writer, method, path, b"", false)?;
-    let mut reader = BufReader::new(stream);
-    match http::read_response(&mut reader) {
-        Ok(Some(resp)) => Ok(resp),
-        Ok(None) => Err(std::io::Error::new(
-            std::io::ErrorKind::UnexpectedEof,
-            "closed before status line",
-        )),
-        Err(http::ReadError::Io(e)) => Err(e),
-        Err(e) => Err(std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string())),
-    }
+/// The control plane's client profile: a fresh `Connection: close`
+/// connection per exchange (pool 0) with one short deadline for
+/// connect/read/write — a probe must prove the peer accepts NEW
+/// connections, not that a pooled one is still warm. Also used by the
+/// supervisor's `/v1/admin/reload` calls. Takes the backend's full
+/// address list so dual-stack `--join` workers keep the dial fallback.
+pub fn control_client(addrs: Vec<SocketAddr>, timeout: Duration) -> BearClient {
+    BearClient::with_addrs(
+        addrs,
+        ClientConfig { connect_timeout: timeout, io_timeout: timeout, pool: 0 },
+    )
 }
 
-/// First `key value` line of a statz body parsed as u64 (0 when absent).
-pub fn statz_u64(body: &str, key: &str) -> u64 {
-    for line in body.lines() {
-        if let Some((k, v)) = line.split_once(' ') {
-            if k == key {
-                return v.parse().unwrap_or(0);
-            }
-        }
-    }
-    0
-}
-
-/// Everything one `/statz` probe scrape caches on the [`BackendState`].
+/// Everything one `/v1/statz` probe scrape caches on the
+/// [`BackendState`].
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct ProbeScrape {
     pub generation: u64,
@@ -187,21 +176,17 @@ pub struct ProbeScrape {
     pub shard_count: u64,
 }
 
-/// Probe the worker via `GET /statz`: a 200 doubles as liveness, and the
-/// body yields the cached observability fields. `None` ⇒ down.
-pub fn probe_scrape(addr: &SocketAddr, timeout: Duration) -> Option<ProbeScrape> {
-    match roundtrip(addr, timeout, "GET", "/statz") {
-        Ok(resp) if resp.status == 200 => {
-            let body = String::from_utf8_lossy(&resp.body);
-            Some(ProbeScrape {
-                generation: statz_u64(&body, "generation"),
-                requests_total: statz_u64(&body, "requests_total"),
-                shard_index: statz_u64(&body, "shard_index"),
-                shard_count: statz_u64(&body, "shard_count"),
-            })
-        }
-        _ => None,
-    }
+/// Probe the worker via the typed statz scrape: a 200 doubles as
+/// liveness, and the parsed [`crate::api::Statz`] yields the cached
+/// observability fields. `None` ⇒ down.
+pub fn probe_scrape(addrs: &[SocketAddr], timeout: Duration) -> Option<ProbeScrape> {
+    let statz = control_client(addrs.to_vec(), timeout).statz().ok()?;
+    Some(ProbeScrape {
+        generation: statz.generation(),
+        requests_total: statz.requests_total(),
+        shard_index: statz.shard_index(),
+        shard_count: statz.shard_count(),
+    })
 }
 
 /// Prober thread knobs.
@@ -246,7 +231,7 @@ pub fn prober_loop(
             if shutdown.load(Ordering::Acquire) {
                 return;
             }
-            let scraped = probe_scrape(&b.addr, cfg.timeout);
+            let scraped = probe_scrape(&b.addrs, cfg.timeout);
             let mut ok = false;
             if let Some(s) = scraped {
                 // an unsharded fleet tolerates legacy workers whose statz
@@ -352,6 +337,6 @@ mod tests {
             let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
             l.local_addr().unwrap()
         };
-        assert!(probe_scrape(&addr, Duration::from_millis(200)).is_none());
+        assert!(probe_scrape(&[addr], Duration::from_millis(200)).is_none());
     }
 }

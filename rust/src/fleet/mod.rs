@@ -33,8 +33,12 @@
 //!   (probe-scrapes each worker's `/statz`, verifying shard placement)
 //!   with eject/re-admit hysteresis.
 //!
-//! CLI: `bear fleet --backends N [--shards K] --watch-manifest
-//! DIR/MANIFEST`. With `--shards K` each worker holds only its range's
+//! CLI: `bear fleet --backends N [--join host:port,…] [--shards K]
+//! --watch-manifest DIR/MANIFEST`. `--join` adopts externally-launched
+//! (non-loopback, multi-host) `bear serve` workers into the fleet:
+//! probed, routed to, and rolled through the same
+//! [`crate::api::BearClient`] paths as local workers, just never
+//! spawned or respawned. With `--shards K` each worker holds only its range's
 //! slice of the top-k tables — fleet memory scales horizontally instead
 //! of being replicated N times — and `tests/integration_shard.rs` proves
 //! the scatter-gather path serves predictions **bit-identical** to an
@@ -66,10 +70,21 @@ use std::time::{Duration, Instant};
 pub struct FleetConfig {
     /// Balancer bind address (port 0 ⇒ ephemeral).
     pub addr: String,
-    /// Worker processes to run (total across shards; must be a multiple
-    /// of `shards` — backend `i` serves shard `i % shards`, so each shard
-    /// gets `backends / shards` replicas).
+    /// Worker processes to run locally. Together with the `join`ed
+    /// workers the total must be a multiple of `shards` — backend `i`
+    /// serves shard `i % shards`, so each shard gets `total / shards`
+    /// replicas. May be 0 when `join` is non-empty (a pure frontend over
+    /// externally-launched workers).
     pub backends: usize,
+    /// Externally-launched workers to adopt, as `host:port` strings
+    /// (DNS-resolved; non-loopback is the point — the first multi-host
+    /// slice). Joined workers are probed, routed to, and rolled exactly
+    /// like local ones, but never spawned, killed, or respawned; they
+    /// slot in AFTER the local workers in backend order, so with
+    /// `--shards K` their shard is `(backends + j) % K`. Start them with
+    /// `bear serve --watch-manifest` on a shared manifest so rolling
+    /// reloads reach them.
+    pub join: Vec<String>,
     /// Feature-range shards (1 = every worker holds the whole model;
     /// K > 1 = scatter-gather serving over per-shard snapshots, the
     /// per-node-sublinear-memory mode).
@@ -107,6 +122,7 @@ impl Default for FleetConfig {
         Self {
             addr: "127.0.0.1:8360".to_string(),
             backends: 3,
+            join: Vec::new(),
             shards: 1,
             base_port: 0,
             model: None,
@@ -237,36 +253,55 @@ impl Drop for FleetHandle {
 /// Spawn the workers, start probing, start the balancer, and return the
 /// running fleet.
 pub fn start_fleet(cfg: FleetConfig) -> Result<FleetHandle> {
-    let n = cfg.backends.max(1);
+    // resolve joined (externally-launched, possibly non-loopback)
+    // workers up front — a typo'd hostname should fail the start, not a
+    // probe loop. ALL answers are kept per worker: a dual-stack
+    // hostname whose server listens on one family only must still be
+    // probeable/forwardable (the BearClient dial-fallback contract).
+    let joined: Vec<Vec<SocketAddr>> = cfg
+        .join
+        .iter()
+        .map(|a| {
+            crate::api::BearClient::resolve_all(a)
+                .with_context(|| format!("resolving --join {a}"))
+        })
+        .collect::<Result<_>>()?;
+    let n_local = if joined.is_empty() { cfg.backends.max(1) } else { cfg.backends };
+    let n = n_local + joined.len();
     let shards = cfg.shards.max(1);
     if shards > n {
         bail!("--shards {shards} needs at least one backend per shard (got {n})");
     }
     if n % shards != 0 {
-        bail!("--backends {n} must be a multiple of --shards {shards} (equal replicas per shard)");
+        bail!(
+            "{n} backends (--backends {n_local} + {} joined) must be a multiple of --shards \
+             {shards} (equal replicas per shard)",
+            joined.len()
+        );
     }
     let ports: Vec<u16> = if cfg.base_port == 0 {
-        pick_free_ports(n)?
+        pick_free_ports(n_local)?
     } else {
         // successive ports must all fit in the u16 port space
-        if cfg.base_port as u32 + n as u32 > u16::MAX as u32 + 1 {
+        if cfg.base_port as u32 + n_local as u32 > u16::MAX as u32 + 1 {
             bail!(
                 "--base-port {} + {} backends exceeds port {}",
                 cfg.base_port,
-                n,
+                n_local,
                 u16::MAX
             );
         }
-        (0..n as u16).map(|i| cfg.base_port + i).collect()
+        (0..n_local as u16).map(|i| cfg.base_port + i).collect()
     };
+    // local workers first, joined workers after — backend index (and so
+    // shard slot i % shards) is stable and documented
     let backends: Arc<Vec<Arc<BackendState>>> = Arc::new(
         ports
             .iter()
+            .map(|&p| vec![format!("127.0.0.1:{p}").parse().expect("loopback addr")])
+            .chain(joined.iter().cloned())
             .enumerate()
-            .map(|(i, &p)| {
-                let addr: SocketAddr = format!("127.0.0.1:{p}").parse().expect("loopback addr");
-                Arc::new(BackendState::new_shard(i, addr, i % shards))
-            })
+            .map(|(i, addrs)| Arc::new(BackendState::new_multi(i, addrs, i % shards)))
             .collect(),
     );
     let log_dir = cfg
@@ -294,6 +329,7 @@ pub fn start_fleet(cfg: FleetConfig) -> Result<FleetHandle> {
             admin_timeout: Duration::from_secs(5),
         },
         backends.clone(),
+        n_local,
         target_generation.clone(),
     )?);
     if let Err(e) = supervisor.spawn_all() {
@@ -358,11 +394,13 @@ pub fn start_fleet(cfg: FleetConfig) -> Result<FleetHandle> {
     log(
         Level::Info,
         format_args!(
-            "fleet up: balancer on http://{} over {} backends / {} shard(s) (ports {:?}), logs in {:?}",
+            "fleet up: balancer on http://{} over {} backends ({} local ports {:?}, {} joined) / {} shard(s), logs in {:?}",
             handle.addr(),
             n,
-            shards,
+            n_local,
             ports,
+            joined.len(),
+            shards,
             log_dir
         ),
     );

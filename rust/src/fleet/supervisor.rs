@@ -25,6 +25,7 @@
 //! Worker stdout/stderr land in `log_dir/worker-<i>.log` (appended across
 //! restarts) — the fault-injection CI job uploads these on failure.
 
+use crate::api::ReloadResponse;
 use crate::fleet::health::{self, BackendState};
 use crate::online::publisher::{Manifest, MANIFEST_FILE};
 use crate::serve::shard::shard_sibling_path;
@@ -64,6 +65,10 @@ pub struct WorkerSpec {
 /// One backend's process slot: the live child plus the crash-loop
 /// bookkeeping that paces respawns.
 struct WorkerSlot {
+    /// An externally-launched worker (`bear fleet --join host:port`):
+    /// never spawned, killed, or respawned by this supervisor — only
+    /// probed, routed to, and rolled.
+    external: bool,
     child: Option<Child>,
     /// When the current/last child was spawned.
     spawned_at: Instant,
@@ -200,16 +205,21 @@ pub fn spawn_parent_watchdog(parent_pid: u32) {
 }
 
 impl Supervisor {
+    /// `n_local` of the backends (the first ones) are processes this
+    /// supervisor owns; any beyond that are externally-launched `--join`
+    /// workers — probed and rolled, never spawned or killed.
     pub fn new(
         spec: WorkerSpec,
         backends: Arc<Vec<Arc<BackendState>>>,
+        n_local: usize,
         target_generation: Arc<AtomicU64>,
     ) -> Result<Self> {
         std::fs::create_dir_all(&spec.log_dir)
             .with_context(|| format!("creating fleet log dir {:?}", spec.log_dir))?;
         let now = Instant::now();
         let children: Vec<WorkerSlot> = (0..backends.len())
-            .map(|_| WorkerSlot {
+            .map(|i| WorkerSlot {
+                external: i >= n_local,
                 child: None,
                 spawned_at: now,
                 crash_streak: 0,
@@ -264,10 +274,14 @@ impl Supervisor {
         Ok(child)
     }
 
-    /// Launch the initial fleet.
+    /// Launch the initial fleet (local slots only — `--join` workers are
+    /// already running somewhere else).
     pub fn spawn_all(&self) -> Result<()> {
         let mut children = self.children.lock().expect("supervisor children poisoned");
         for i in 0..self.backends.len() {
+            if children[i].external {
+                continue;
+            }
             let child = self.spawn_worker(i)?;
             children[i].spawned_at = Instant::now();
             children[i].child = Some(child);
@@ -286,6 +300,9 @@ impl Supervisor {
     /// The monitor tick reaps and respawns it.
     pub fn kill_backend(&self, index: usize) -> Result<()> {
         let mut children = self.children.lock().expect("supervisor children poisoned");
+        if children.get(index).map(|s| s.external).unwrap_or(false) {
+            bail!("backend {index} is external (--join); not ours to kill");
+        }
         match children.get_mut(index).and_then(|s| s.child.as_mut()) {
             Some(child) => {
                 child.kill().with_context(|| format!("killing worker {index}"))?;
@@ -305,6 +322,9 @@ impl Supervisor {
         let mut children = self.children.lock().expect("supervisor children poisoned");
         for i in 0..self.backends.len() {
             let slot = &mut children[i];
+            if slot.external {
+                continue;
+            }
             let exited = match &mut slot.child {
                 Some(child) => match child.try_wait() {
                     Ok(Some(status)) => {
@@ -414,40 +434,70 @@ impl Supervisor {
                 }
             }
             let outcome =
-                health::roundtrip(&b.addr, self.spec.admin_timeout, "POST", "/admin/reload");
+                health::control_client(b.addrs.clone(), self.spec.admin_timeout).admin_reload();
             let mut children = self.children.lock().expect("supervisor children poisoned");
             match outcome {
-                Ok(resp) if resp.status == 200 => {
-                    let body = String::from_utf8_lossy(&resp.body);
-                    if body.contains("reloaded generation") {
-                        let line = body.lines().next().unwrap_or("");
-                        log(Level::Info, format_args!("fleet worker {} {line}", b.index));
+                // ack only what the worker actually REPORTS serving: a
+                // 200 "already at generation N" with N < target (a
+                // --join worker watching a stale or different manifest
+                // copy) must keep lagging its ack — and keep warning —
+                // not be silently marked rolled
+                Ok(resp) => {
+                    let reported = match resp {
+                        ReloadResponse::Reloaded { generation: g, .. } => {
+                            log(
+                                Level::Info,
+                                format_args!("fleet worker {} reloaded generation {g}", b.index),
+                            );
+                            g
+                        }
+                        ReloadResponse::UpToDate { generation: g } => g,
+                    };
+                    if reported >= generation {
+                        b.acked_generation.store(generation, Ordering::Relaxed);
+                        children[i].reload_fail_streak = 0;
+                    } else {
+                        children[i].reload_fail_streak += 1;
+                        let streak = children[i].reload_fail_streak;
+                        children[i].reload_retry_at = Instant::now() + crash_backoff(streak);
+                        let level = if streak == 1 { Level::Warn } else { Level::Debug };
+                        log(
+                            level,
+                            format_args!(
+                                "fleet worker {} answers generation {reported}, still behind \
+                                 target {generation} (stale or different manifest?)",
+                                b.index
+                            ),
+                        );
                     }
-                    b.acked_generation.store(generation, Ordering::Relaxed);
-                    children[i].reload_fail_streak = 0;
                 }
-                // non-200 (worker-side reload error) or transport failure:
-                // leave the ack lagging, back off, and make the FIRST
-                // failure of a streak loud so a stuck roll is visible
-                other => {
+                // a typed refusal (400 without --watch-manifest, 500 on a
+                // corrupt snapshot) or a transport failure: leave the ack
+                // lagging, back off, and make the FIRST failure of a
+                // streak loud so a stuck roll is visible
+                Err(e) => {
                     children[i].reload_fail_streak += 1;
                     let streak = children[i].reload_fail_streak;
                     children[i].reload_retry_at = Instant::now() + crash_backoff(streak);
                     let level = if streak == 1 { Level::Warn } else { Level::Debug };
-                    match other {
-                        Ok(resp) => log(
+                    // a worker actively rejecting the roll (HTTP status)
+                    // reads differently from one that is simply down
+                    if e.status().is_some() {
+                        log(
                             level,
                             format_args!(
-                                "fleet worker {} refused reload to generation {generation} (HTTP {}): {}",
-                                b.index,
-                                resp.status,
-                                String::from_utf8_lossy(&resp.body).trim_end(),
+                                "fleet worker {} refused reload to generation {generation}: {e}",
+                                b.index
                             ),
-                        ),
-                        Err(e) => log(
+                        );
+                    } else {
+                        log(
                             level,
-                            format_args!("fleet worker {} reload call failed: {e}", b.index),
-                        ),
+                            format_args!(
+                                "fleet worker {} reload call for generation {generation} failed: {e}",
+                                b.index
+                            ),
+                        );
                     }
                 }
             }

@@ -38,7 +38,14 @@
 //!   serving tier: a supervisor spawning N `bear serve` worker processes
 //!   (respawn on crash, rolling reload one worker at a time) behind a
 //!   power-of-two-choices balancer with health-probe eject/re-admit and
-//!   bounded zero-drop retries (`bear fleet`)
+//!   bounded zero-drop retries (`bear fleet`), joinable by
+//!   externally-launched multi-host workers (`--join host:port,…`)
+//! - protocol: [`api`] — the typed, versioned serving API: one route
+//!   table (`/v1/*` + byte-identical legacy aliases), typed
+//!   request/response schemas with bit-exact encode/parse, the
+//!   [`api::ApiError`] vocabulary, and [`api::BearClient`] — the one
+//!   pooled HTTP client the balancer, prober, supervisor, loadgen, and
+//!   tests all speak through
 //!
 //! ## Quickstart
 //! ```no_run
@@ -54,6 +61,7 @@
 //! ```
 
 pub mod algo;
+pub mod api;
 pub mod bench_util;
 pub mod cli;
 pub mod coordinator;

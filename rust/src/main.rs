@@ -10,7 +10,8 @@
 //!   serve       serve a snapshot over HTTP (predict/topk/healthz/statz),
 //!               hot-reloading publications with --watch-manifest
 //!   fleet       N shared-nothing serve processes behind a balancer
-//!               (power-of-two-choices, health probes, rolling reload)
+//!               (power-of-two-choices, health probes, rolling reload,
+//!               --join for externally-launched multi-host workers)
 //!   loadgen     closed-loop load test against a running server
 //!   help        this text
 //!
@@ -355,8 +356,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
         ),
         None => eprintln!("[bear] hot-reload off (pass --watch-manifest DIR/MANIFEST to enable)"),
     }
+    // the endpoint banner comes from the one route table, so it can
+    // never drift from what the server actually mounts
+    let routes: Vec<String> = bear::api::Route::ALL
+        .iter()
+        .map(|r| format!("{} {}", r.method(), r.v1_path()))
+        .collect();
     eprintln!(
-        "[bear] endpoints: POST /predict · GET /topk?k=N[&class=C] · GET /healthz · GET /statz · POST /admin/reload"
+        "[bear] endpoints: {} (legacy unversioned aliases served byte-identically)",
+        routes.join(" · ")
     );
     handle.join_forever();
     Ok(())
@@ -371,11 +379,26 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     balancer.workers = args.parse_or("balancer-workers", balancer.workers)?;
     balancer.max_attempts = args.parse_or("max-attempts", balancer.max_attempts)?;
     let shards: usize = args.parse_or("shards", defaults.shards)?;
-    // --shards K without --backends runs one worker per shard
-    let default_backends = if shards > 1 { shards } else { defaults.backends };
+    // externally-launched workers to adopt (comma-separated host:port)
+    let join: Vec<String> = match args.get("join") {
+        Some(list) => {
+            list.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect()
+        }
+        None => Vec::new(),
+    };
+    // --shards K without --backends runs one worker per shard; a pure
+    // --join frontend spawns no local workers at all
+    let default_backends = if !join.is_empty() {
+        0
+    } else if shards > 1 {
+        shards
+    } else {
+        defaults.backends
+    };
     let cfg = bear::fleet::FleetConfig {
         addr: args.str_or("addr", &defaults.addr),
         backends: args.parse_or("backends", default_backends)?,
+        join,
         shards,
         base_port: args.parse_or("base-port", defaults.base_port)?,
         model: args.get("model").map(std::path::PathBuf::from),
@@ -387,19 +410,22 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         monitor_interval: std::time::Duration::from_millis(args.parse_or("monitor-ms", 100u64)?),
         balancer,
     };
-    if cfg.model.is_none() && cfg.watch_manifest.is_none() {
-        bail!("bear fleet needs --model SNAPSHOT and/or --watch-manifest DIR/MANIFEST");
+    // a pure --join frontend spawns nothing locally, so it needs no
+    // snapshot of its own; any locally-spawned worker does
+    if cfg.backends > 0 && cfg.model.is_none() && cfg.watch_manifest.is_none() {
+        bail!("bear fleet needs --model SNAPSHOT and/or --watch-manifest DIR/MANIFEST (or --join with --backends 0)");
     }
-    let backends = cfg.backends;
+    let (backends, joined) = (cfg.backends, cfg.join.len());
     let watching = cfg.watch_manifest.clone();
     let handle = bear::fleet::start_fleet(cfg)?;
     eprintln!(
-        "[bear] fleet: balancer on http://{} over {backends} shared-nothing workers / {shards} feature-range shard(s) (ports {}), logs in {}",
+        "[bear] fleet: balancer on http://{} over {} shared-nothing workers ({backends} local, {joined} joined) / {shards} feature-range shard(s) ({}), logs in {}",
         handle.addr(),
+        backends + joined,
         handle
             .backend_addrs()
             .iter()
-            .map(|a| a.port().to_string())
+            .map(|a| a.to_string())
             .collect::<Vec<_>>()
             .join(","),
         handle.log_dir().display(),
@@ -411,9 +437,16 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         ),
         None => eprintln!("[bear] rolling reload off (pass --watch-manifest DIR/MANIFEST)"),
     }
-    eprintln!(
-        "[bear] endpoints: POST /predict · GET /topk?k=N[&class=C] · GET /healthz · GET /statz (aggregated)"
-    );
+    let routes: Vec<String> = [
+        bear::api::Route::Predict,
+        bear::api::Route::Topk,
+        bear::api::Route::Healthz,
+        bear::api::Route::Statz,
+    ]
+    .iter()
+    .map(|r| format!("{} {}", r.method(), r.v1_path()))
+    .collect();
+    eprintln!("[bear] endpoints: {} (statz aggregated; legacy aliases served)", routes.join(" · "));
     handle.join_forever();
     Ok(())
 }
@@ -490,6 +523,11 @@ commands:
               [--parent-pid P]   (exit when process P dies; set by fleet)
   fleet       shared-nothing multi-process serving tier behind a balancer
               --model FILE | --watch-manifest DIR/MANIFEST
+              [--join host:port[,host:port...]]
+                              (adopt externally-launched, possibly
+                               non-loopback workers: probed, routed,
+                               rolled — never spawned or killed; with
+                               --backends 0 the fleet is a pure frontend)
               [--shards K]    (feature-range scatter-gather; workers hold
                                1/K of the tables; predictions stay
                                bit-identical to an unsharded server)

@@ -21,6 +21,7 @@
 //! `Content-Length` body bytes — pipelined bytes after the body are left
 //! untouched for the next [`read_request`] call.
 
+use std::borrow::Cow;
 use std::io::{BufRead, Read, Write};
 
 /// Declared `Content-Length` cap; larger requests are answered `413`.
@@ -284,10 +285,123 @@ pub fn write_request<W: Write>(
     w.flush()
 }
 
-/// First value of `key` in a raw query string.
-pub fn query_param<'a>(query: Option<&'a str>, key: &str) -> Option<&'a str> {
+/// First value of `key` in a raw query string, percent-decoded
+/// (`%2B` ⇒ `+`). Later duplicates of `key` are ignored; `key=` yields
+/// an empty value.
+pub fn query_param<'a>(query: Option<&'a str>, key: &str) -> Option<Cow<'a, str>> {
     query?.split('&').find_map(|kv| {
         let (k, v) = kv.split_once('=')?;
-        (k == key).then_some(v)
+        (k == key).then(|| percent_decode(v))
     })
+}
+
+fn hex_val(b: u8) -> Option<u8> {
+    match b {
+        b'0'..=b'9' => Some(b - b'0'),
+        b'a'..=b'f' => Some(b - b'a' + 10),
+        b'A'..=b'F' => Some(b - b'A' + 10),
+        _ => None,
+    }
+}
+
+/// Decode `%XX` escapes in a query-string component. `+` stays a
+/// literal `+` — the plus-as-space convention belongs to HTML form
+/// encoding, not RFC 3986 query strings, and honoring it would silently
+/// change legacy values like `k=+5` (accepted by Rust's integer
+/// `FromStr`) that pre-decoding servers parsed fine. Malformed escapes
+/// (`%`, `%z9`, truncated `%X`) pass through literally instead of
+/// erroring — query parsing must never reject a request a lenient peer
+/// would accept. Invalid UTF-8 after decoding is replaced lossily.
+pub fn percent_decode(s: &str) -> Cow<'_, str> {
+    if !s.bytes().any(|b| b == b'%') {
+        return Cow::Borrowed(s);
+    }
+    let bytes = s.as_bytes();
+    let mut out = Vec::with_capacity(bytes.len());
+    let mut i = 0;
+    while i < bytes.len() {
+        match bytes[i] {
+            b'%' if i + 2 < bytes.len() => match (hex_val(bytes[i + 1]), hex_val(bytes[i + 2])) {
+                (Some(hi), Some(lo)) => {
+                    out.push((hi << 4) | lo);
+                    i += 3;
+                }
+                _ => {
+                    out.push(b'%');
+                    i += 1;
+                }
+            },
+            b => {
+                out.push(b);
+                i += 1;
+            }
+        }
+    }
+    match String::from_utf8(out) {
+        Ok(v) => Cow::Owned(v),
+        Err(e) => Cow::Owned(String::from_utf8_lossy(e.as_bytes()).into_owned()),
+    }
+}
+
+/// Percent-encode a query-string component so [`percent_decode`] gives
+/// back exactly the input: unreserved characters (`A-Z a-z 0-9 - . _ ~`)
+/// pass through, every other byte of the UTF-8 encoding becomes `%XX`
+/// (space ⇒ `%20`, `+` ⇒ `%2B`) — encode→decode is lossless.
+pub fn percent_encode(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for b in s.bytes() {
+        match b {
+            b'A'..=b'Z' | b'a'..=b'z' | b'0'..=b'9' | b'-' | b'.' | b'_' | b'~' => {
+                out.push(b as char)
+            }
+            _ => out.push_str(&format!("%{b:02X}")),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn query_param_first_value_wins_and_decodes() {
+        let q = Some("k=10&class=a%2Bb&k=99&empty=&plus=+5&space=one%20two");
+        assert_eq!(query_param(q, "k").as_deref(), Some("10"));
+        // %2B decodes to a literal '+' (the bug this fixes: '+' in class
+        // labels must survive the wire)
+        assert_eq!(query_param(q, "class").as_deref(), Some("a+b"));
+        // duplicate keys: the FIRST occurrence wins
+        assert_eq!(query_param(q, "k").as_deref(), Some("10"));
+        // empty value is Some(""), not None
+        assert_eq!(query_param(q, "empty").as_deref(), Some(""));
+        // a bare '+' stays literal (legacy `k=+5` numerics keep parsing)
+        assert_eq!(query_param(q, "plus").as_deref(), Some("+5"));
+        assert_eq!(query_param(q, "space").as_deref(), Some("one two"));
+        assert_eq!(query_param(q, "absent"), None);
+        assert_eq!(query_param(None, "k"), None);
+    }
+
+    #[test]
+    fn percent_decode_handles_malformed_escapes_leniently() {
+        assert_eq!(percent_decode("plain"), "plain");
+        assert_eq!(percent_decode("%41%62"), "Ab");
+        // trailing / malformed escapes pass through literally
+        assert_eq!(percent_decode("100%"), "100%");
+        assert_eq!(percent_decode("%z9x"), "%z9x");
+        assert_eq!(percent_decode("%4"), "%4");
+        // '+' is NOT form-decoded to a space
+        assert_eq!(percent_decode("+5"), "+5");
+        // multi-byte UTF-8 survives
+        assert_eq!(percent_decode("%C3%A9"), "é");
+    }
+
+    #[test]
+    fn percent_encode_roundtrips_through_decode() {
+        for s in ["", "plain", "a+b", "one two", "50%", "k=v&x", "é∂ƒ", "~._-", "+5"] {
+            assert_eq!(percent_decode(&percent_encode(s)), s, "roundtrip of {s:?}");
+        }
+        // '+' is encoded (to %2B), never emitted bare
+        assert!(!percent_encode("a+b ").contains('+'));
+    }
 }

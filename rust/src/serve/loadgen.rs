@@ -1,75 +1,28 @@
-//! Closed-loop load generator for `bear serve`: N client threads, each
-//! with one keep-alive connection, each sending the next request only
-//! after the previous response arrives (closed loop ⇒ measured latency is
-//! true request latency, not queueing-delay-inflated open-loop latency).
+//! Closed-loop load generator for `bear serve` / `bear fleet`: N client
+//! threads, each with one keep-alive [`BearClient`] connection, each
+//! sending the next request only after the previous response arrives
+//! (closed loop ⇒ measured latency is true request latency, not
+//! queueing-delay-inflated open-loop latency).
 //!
 //! Queries are replayed from the synthetic real-data surrogates
 //! (`data/synth.rs`), pre-materialized into request bodies before the
 //! clock starts so generation cost never pollutes the measurement. Each
 //! thread records into its own [`LatencyHistogram`]; the report merges
 //! them with overall wall-clock throughput.
+//!
+//! Requests go through [`crate::api::BearClient`] — the same typed
+//! client the fleet tiers use — so the loadgen exercises the canonical
+//! `/v1` wire format end to end. A failed exchange (non-200, transport)
+//! counts as one error and the client's pool re-dials on the next
+//! request; a hard-down server therefore shows up as an error count, not
+//! a loadgen crash, which is what the chaos harnesses assert on.
 
+use crate::api::{format_query, BearClient, ClientConfig};
 use crate::coordinator::experiments::RealData;
 use crate::data::DataSource;
-use crate::serve::http;
 use crate::serve::metrics::{HistogramSnapshot, LatencyHistogram};
-use crate::sparse::SparseVec;
-use anyhow::{bail, Context, Result};
-use std::io::BufReader;
-use std::net::TcpStream;
+use anyhow::{Context, Result};
 use std::time::{Duration, Instant};
-
-/// A minimal blocking HTTP/1.1 client over one keep-alive connection.
-/// Shared by the load generator, the integration tests, and `bear
-/// loadgen`'s smoke check.
-pub struct HttpClient {
-    reader: BufReader<TcpStream>,
-    writer: TcpStream,
-}
-
-impl HttpClient {
-    pub fn connect(addr: &str) -> Result<Self> {
-        let stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
-        stream.set_nodelay(true).ok();
-        stream.set_read_timeout(Some(Duration::from_secs(30))).ok();
-        let writer = stream.try_clone().context("cloning client stream")?;
-        Ok(Self { reader: BufReader::new(stream), writer })
-    }
-
-    /// Send a request and read the full response. Returns (status, body).
-    fn roundtrip(&mut self, method: &str, path: &str, body: Option<&str>) -> Result<(u16, String)> {
-        let body = body.unwrap_or("");
-        http::write_request(&mut self.writer, method, path, body.as_bytes(), true)
-            .context("writing request")?;
-        match http::read_response(&mut self.reader) {
-            Ok(Some(resp)) => {
-                Ok((resp.status, String::from_utf8(resp.body).context("non-UTF8 response body")?))
-            }
-            Ok(None) => bail!("server closed the connection"),
-            Err(e) => Err(e).context("reading response"),
-        }
-    }
-
-    pub fn get(&mut self, path: &str) -> Result<(u16, String)> {
-        self.roundtrip("GET", path, None)
-    }
-
-    pub fn post(&mut self, path: &str, body: &str) -> Result<(u16, String)> {
-        self.roundtrip("POST", path, Some(body))
-    }
-}
-
-/// Render one sparse query as a `/predict` body line.
-pub fn format_query(x: &SparseVec) -> String {
-    let mut line = String::with_capacity(x.nnz() * 12);
-    for (i, (&f, &v)) in x.idx.iter().zip(&x.val).enumerate() {
-        if i > 0 {
-            line.push(' ');
-        }
-        line.push_str(&format!("{f}:{v}"));
-    }
-    line
-}
 
 /// Load-generation knobs.
 #[derive(Clone, Debug)]
@@ -162,9 +115,25 @@ fn build_bodies(cfg: &LoadgenConfig, thread_id: usize) -> Vec<String> {
     bodies
 }
 
-/// Run a closed-loop load test against `addr` (e.g. `"127.0.0.1:8370"`).
+/// The loadgen's client profile: one pooled keep-alive connection per
+/// thread, generous deadlines (a micro-batched server under full load
+/// answers in well under this).
+fn client_config() -> ClientConfig {
+    ClientConfig {
+        connect_timeout: Duration::from_secs(5),
+        io_timeout: Duration::from_secs(30),
+        pool: 1,
+    }
+}
+
+/// Run a closed-loop load test against `addr` (e.g. `"127.0.0.1:8370"`
+/// or `"worker-3.internal:8370"` — resolved like any [`BearClient`]).
 pub fn run(addr: &str, cfg: &LoadgenConfig) -> Result<LoadReport> {
     let threads = cfg.threads.max(1);
+    // resolve once (all answers — dual-stack hosts keep the dial
+    // fallback), then one client per thread
+    let targets = BearClient::resolve_all(addr)
+        .with_context(|| format!("resolving loadgen target {addr}"))?;
     // materialize all traffic before the clock starts
     let all_bodies: Vec<Vec<String>> = (0..threads).map(|t| build_bodies(cfg, t)).collect();
 
@@ -174,26 +143,23 @@ pub fn run(addr: &str, cfg: &LoadgenConfig) -> Result<LoadReport> {
             let handles: Vec<_> = all_bodies
                 .iter()
                 .map(|bodies| {
+                    let targets = targets.clone();
                     scope.spawn(move || -> Result<(HistogramSnapshot, u64, u64, u64)> {
                         let hist = LatencyHistogram::new();
-                        let mut client = HttpClient::connect(addr)?;
+                        let client = BearClient::with_addrs(targets, client_config());
                         let (mut requests, mut queries, mut errors) = (0u64, 0u64, 0u64);
                         for body in bodies {
                             let nq = body.lines().count() as u64;
                             let t = Instant::now();
-                            match client.post("/predict", body) {
-                                Ok((200, _)) => {
+                            match client.predict_raw(body) {
+                                Ok(_) => {
                                     hist.record(t.elapsed());
                                     requests += 1;
                                     queries += nq;
                                 }
-                                Ok((_, _)) => errors += 1,
-                                Err(_) => {
-                                    // connection shed (503 close / timeout):
-                                    // count and reconnect
-                                    errors += 1;
-                                    client = HttpClient::connect(addr)?;
-                                }
+                                // non-200 or transport failure: one error;
+                                // the pool re-dials on the next request
+                                Err(_) => errors += 1,
                             }
                         }
                         Ok((hist.snapshot(), requests, queries, errors))

@@ -17,13 +17,15 @@
 //!   shard-weights wire tokens used by `POST /shard/weights`.
 //! - [`http`] — the shared HTTP/1.1 wire primitives (bounded request
 //!   parser with typed 400/413 errors, response reader/writer) used by
-//!   the server, the loadgen client, and the fleet balancer
+//!   the server, [`crate::api::BearClient`], and the fleet balancer
 //!   ([`crate::fleet`]).
 //! - [`server`] — a multi-threaded HTTP/1.1 server on std TCP: worker
 //!   pool, bounded accept queue (503 backpressure), micro-batched
-//!   `POST /predict`, plus `/topk`, `/healthz`, `/statz`, and — when a
-//!   publication MANIFEST is watched — zero-drop snapshot hot-reload with
-//!   `POST /admin/reload`.
+//!   `POST /v1/predict`, plus `/v1/topk`, `/v1/healthz`, `/v1/statz`,
+//!   and — when a publication MANIFEST is watched — zero-drop snapshot
+//!   hot-reload with `POST /v1/admin/reload`. Routing goes through the
+//!   [`crate::api::Route`] table: every endpoint also answers on its
+//!   legacy pre-versioning path, byte-for-byte identically.
 //! - [`metrics`] — lock-free per-worker latency histograms (p50/p99/p999)
 //!   merged on scrape, plus atomic f64 gauges for the drift monitor.
 //! - [`loadgen`] — a closed-loop multi-threaded load generator replaying
@@ -45,7 +47,7 @@ pub mod server;
 pub mod shard;
 pub mod snapshot;
 
-pub use loadgen::{HttpClient, LoadReport, LoadgenConfig};
+pub use loadgen::{LoadReport, LoadgenConfig};
 pub use metrics::{AtomicF64, HistogramSnapshot, LatencyHistogram};
 pub use server::{serve, ServerConfig, ServerHandle, StatsSnapshot};
 pub use snapshot::{Prediction, ServableModel};

@@ -22,26 +22,30 @@
 //! - **Metrics**: each worker records into its own lock-free
 //!   [`LatencyHistogram`]; `/statz` merges them on scrape.
 //!
-//! Endpoints:
-//! - `POST /predict` — body: one query per line, each a space-separated
-//!   list of `idx:val` pairs. Response: one line per query, `margin` for
-//!   MSE models, `margin probability` for logistic ones, or
+//! Endpoints (the [`crate::api::Route`] table; every route is mounted
+//! under its canonical `/v1/*` path AND its legacy alias, served
+//! byte-for-byte identically — `tests/prop_api.rs` proves it):
+//! - `POST /v1/predict` — body: one query per line, each a
+//!   space-separated list of `idx:val` pairs
+//!   ([`crate::api::PredictRequest`]). Response: one line per query,
+//!   `margin` for MSE models, `margin probability` for logistic ones, or
 //!   `class margin` for multi-class snapshots, formatted with Rust's
 //!   shortest-round-trip f64 `Display` (parsing the text back yields the
 //!   bit-identical f64).
-//! - `GET /topk?k=N[&class=C][&gen=G]` — the N heaviest features of
+//! - `GET /v1/topk?k=N[&class=C][&gen=G]` — the N heaviest features of
 //!   class C (default 0), `id weight` per line; `gen` pins a generation
 //!   (`409` when unavailable — fleet scatter-gather consistency).
-//! - `POST /shard/weights[?gen=G]` — the scatter-gather data plane: for
-//!   each query line, the exact f32 weight bits of the features this
+//! - `POST /v1/shard/weights[?gen=G]` — the scatter-gather data plane:
+//!   for each query line, the exact f32 weight bits of the features this
 //!   server's shard range owns (the balancer re-runs the canonical margin
 //!   accumulation over the gathered weights; see [`crate::serve::shard`]).
-//! - `GET /healthz` — liveness.
-//! - `GET /statz` — counters + merged latency percentiles + the live
-//!   snapshot generation and drift gauges, `key value` per line.
-//! - `POST /admin/reload` — with `--watch-manifest`: check the manifest
-//!   and swap in a newer generation synchronously (the poller thread does
-//!   the same on a timer).
+//! - `GET /v1/healthz` — liveness.
+//! - `GET /v1/statz` — counters + merged latency percentiles + the live
+//!   snapshot generation and drift gauges, `key value` per line
+//!   ([`crate::api::Statz`]).
+//! - `POST /v1/admin/reload` — with `--watch-manifest`: check the
+//!   manifest and swap in a newer generation synchronously (the poller
+//!   thread does the same on a timer).
 //!
 //! **Hot reload** is zero-drop by construction: every thread resolves the
 //! serving snapshot through a [`CachedModel`] (one relaxed atomic load per
@@ -50,11 +54,12 @@
 //! see the new generation. No request is dropped, blocked, or errored by
 //! a swap.
 
+use crate::api::{
+    ApiError, PredictRequest, PredictResponse, ReloadResponse, Route, TopkRequest, WeightsHeader,
+};
 use crate::coordinator::checkpoint::encode_loss;
 use crate::online::reload::{CachedModel, ModelHolder, ReloadOutcome, ReloadStats, Reloader};
-use crate::serve::http::{
-    query_param, read_request, reason_for, write_response, ReadError, Request,
-};
+use crate::serve::http::{read_request, reason_for, write_response, ReadError, Request};
 use crate::serve::metrics::{merged_snapshot, HistogramSnapshot, LatencyHistogram};
 use crate::serve::snapshot::{Prediction, ServableModel};
 use crate::sparse::SparseVec;
@@ -215,59 +220,8 @@ struct PredictJob {
 }
 
 // ---------------------------------------------------------------------------
-// request parsing
+// request handling
 // ---------------------------------------------------------------------------
-
-/// Parse one predict-body line (`idx:val` pairs separated by
-/// whitespace); `Ok(None)` for blank lines. `pub(crate)` because the
-/// fleet balancer's scatter-gather path must tokenize queries
-/// byte-identically to the model server.
-pub(crate) fn parse_query_line(line: &str, lineno: usize) -> Result<Option<SparseVec>> {
-    let line = line.trim();
-    if line.is_empty() {
-        return Ok(None);
-    }
-    let mut pairs = Vec::new();
-    for tok in line.split_whitespace() {
-        let (i, v) = tok
-            .split_once(':')
-            .with_context(|| format!("line {}: token {tok:?} is not idx:val", lineno + 1))?;
-        let i: u64 = i
-            .parse()
-            .with_context(|| format!("line {}: bad index {i:?}", lineno + 1))?;
-        let v: f32 = v
-            .parse()
-            .with_context(|| format!("line {}: bad value {v:?}", lineno + 1))?;
-        pairs.push((i, v));
-    }
-    Ok(Some(SparseVec::from_pairs(pairs)))
-}
-
-/// Parse a predict body: one query per non-empty line.
-fn parse_queries(body: &[u8]) -> Result<Vec<SparseVec>> {
-    let text = std::str::from_utf8(body).context("predict body is not UTF-8")?;
-    let mut out = Vec::new();
-    for (lineno, line) in text.lines().enumerate() {
-        if let Some(q) = parse_query_line(line, lineno)? {
-            out.push(q);
-        }
-    }
-    Ok(out)
-}
-
-/// `pub(crate)` so the balancer's merged predictions are formatted by the
-/// exact same code path as a single server's.
-pub(crate) fn format_predictions(preds: &[Prediction]) -> String {
-    let mut out = String::with_capacity(preds.len() * 24);
-    for p in preds {
-        match (p.class, p.probability) {
-            (Some(class), _) => out.push_str(&format!("{class} {}\n", p.margin)),
-            (None, Some(prob)) => out.push_str(&format!("{} {}\n", p.margin, prob)),
-            (None, None) => out.push_str(&format!("{}\n", p.margin)),
-        }
-    }
-    out
-}
 
 /// Resolve the snapshot a request should score on. Without a `gen` query
 /// parameter this is the cached current model (the fast path — a borrow
@@ -275,19 +229,12 @@ pub(crate) fn format_predictions(preds: &[Prediction]) -> String {
 /// the fleet balancer pinning a scatter-gather request to one generation
 /// so no merged margin ever blends two — it is the current model if the
 /// generation matches, else the holder's retained previous generation,
-/// else a `409` telling the balancer to re-pin.
+/// else [`ApiError::Conflict`] telling the balancer to re-pin.
 fn resolve_pinned<'a>(
     cache: &'a mut CachedModel,
     holder: &ModelHolder,
-    query: Option<&str>,
-) -> Result<Cow<'a, Arc<ServableModel>>, (u16, String)> {
-    let pinned = match query_param(query, "gen") {
-        None => None,
-        Some(v) => match v.parse::<u64>() {
-            Ok(g) => Some(g),
-            Err(_) => return Err((400, format!("bad gen parameter {v:?}\n"))),
-        },
-    };
+    pinned: Option<u64>,
+) -> Result<Cow<'a, Arc<ServableModel>>, ApiError> {
     let current = cache.get(holder);
     match pinned {
         None => Ok(Cow::Borrowed(current)),
@@ -298,10 +245,10 @@ fn resolve_pinned<'a>(
                     return Ok(Cow::Owned(prev));
                 }
             }
-            Err((
-                409,
-                format!("generation {g} unavailable (serving {})\n", current.generation),
-            ))
+            Err(ApiError::Conflict(format!(
+                "generation {g} unavailable (serving {})\n",
+                current.generation
+            )))
         }
     }
 }
@@ -319,18 +266,19 @@ fn resolve_pinned<'a>(
 fn render_shard_weights(model: &ServableModel, body: &[u8]) -> Result<String> {
     let text = std::str::from_utf8(body).context("shard weights body is not UTF-8")?;
     let mut out = String::with_capacity(64 + body.len());
-    out.push_str(&format!(
-        "generation {} classes {} bias_bits {} loss {}\n",
-        model.generation,
-        model.num_classes(),
-        model.bias.to_bits(),
-        encode_loss(model.loss),
-    ));
+    let header = WeightsHeader {
+        generation: model.generation,
+        classes: model.num_classes() as u64,
+        bias_bits: model.bias.to_bits(),
+        loss: encode_loss(model.loss),
+    };
+    out.push_str(&header.encode());
+    out.push('\n');
     for (lineno, line) in text.lines().enumerate() {
-        // the model server's own tokenizer (parse_query_line) keeps the
+        // the API's one tokenizer (api::parse_query_line) keeps the
         // validation and duplicate-feature merging identical on every
         // path that reads this wire format
-        if let Some(q) = parse_query_line(line, lineno)? {
+        if let Some(q) = crate::api::parse_query_line(line, lineno)? {
             let mut first = true;
             for &f in &q.idx {
                 if !model.owns(f) {
@@ -411,7 +359,16 @@ fn batcher_loop(
     }
 }
 
+/// Render a typed [`ApiError`] as the wire tuple (the variants carry
+/// their exact legacy bodies).
+fn error_response(e: &ApiError, keep: bool) -> (u16, &'static str, String, bool) {
+    let status = e.status().unwrap_or(500);
+    (status, reason_for(status), e.body().unwrap_or("").to_string(), keep)
+}
+
 /// Handle one request; returns (status, reason, body, keep_alive).
+/// Routing goes through [`Route::resolve`], so `/v1/*` and the legacy
+/// aliases land in the same arm — byte-identical by construction.
 /// `cache` is the calling thread's snapshot cache: the request resolves
 /// the serving model once, up front, and uses it throughout — a hot swap
 /// mid-request cannot change what this request sees.
@@ -422,13 +379,25 @@ fn dispatch(
 ) -> (u16, &'static str, String, bool) {
     let counters = &ctx.mon.counters;
     counters.requests_total.fetch_add(1, Ordering::Relaxed);
-    match (req.method.as_str(), req.path.as_str()) {
-        ("POST", "/predict") => {
-            let queries = match parse_queries(&req.body) {
-                Ok(q) => q,
+    let route = match Route::resolve(&req.method, &req.path) {
+        Some(r) => r,
+        None => {
+            counters.not_found.fetch_add(1, Ordering::Relaxed);
+            return (
+                404,
+                "Not Found",
+                format!("no route {} {}\n", req.method, req.path),
+                req.keep_alive,
+            );
+        }
+    };
+    match route {
+        Route::Predict => {
+            let queries = match PredictRequest::parse_body(&req.body) {
+                Ok(pr) => pr.queries,
                 Err(e) => {
                     counters.bad_requests.fetch_add(1, Ordering::Relaxed);
-                    return (400, "Bad Request", format!("{e:#}\n"), req.keep_alive);
+                    return error_response(&e, req.keep_alive);
                 }
             };
             counters.predict_requests.fetch_add(1, Ordering::Relaxed);
@@ -438,21 +407,25 @@ fn dispatch(
                 return (500, "Internal Server Error", "batcher gone\n".into(), false);
             }
             match reply_rx.recv() {
-                Ok(preds) => (200, "OK", format_predictions(&preds), req.keep_alive),
+                Ok(preds) => (200, "OK", PredictResponse { preds }.encode(), req.keep_alive),
                 Err(_) => (500, "Internal Server Error", "batcher gone\n".into(), false),
             }
         }
-        ("POST", "/shard/weights") => {
+        Route::ShardWeights => {
             counters.shard_weight_requests.fetch_add(1, Ordering::Relaxed);
-            let model = match resolve_pinned(cache, &ctx.mon.holder, req.query.as_deref()) {
+            let pinned = match crate::api::ShardWeightsRequest::parse_query(req.query.as_deref())
+            {
+                Ok(r) => r.gen,
+                Err(e) => {
+                    counters.bad_requests.fetch_add(1, Ordering::Relaxed);
+                    return error_response(&e, req.keep_alive);
+                }
+            };
+            let model = match resolve_pinned(cache, &ctx.mon.holder, pinned) {
                 Ok(m) => m,
-                Err((status, msg)) => {
-                    if status == 409 {
-                        counters.gen_conflicts.fetch_add(1, Ordering::Relaxed);
-                    } else {
-                        counters.bad_requests.fetch_add(1, Ordering::Relaxed);
-                    }
-                    return (status, reason_for(status), msg, req.keep_alive);
+                Err(e) => {
+                    counters.gen_conflicts.fetch_add(1, Ordering::Relaxed);
+                    return error_response(&e, req.keep_alive);
                 }
             };
             match render_shard_weights(&model, &req.body) {
@@ -463,52 +436,52 @@ fn dispatch(
                 }
             }
         }
-        ("GET", "/topk") => {
+        Route::Topk => {
             counters.topk_requests.fetch_add(1, Ordering::Relaxed);
-            let model = match resolve_pinned(cache, &ctx.mon.holder, req.query.as_deref()) {
-                Ok(m) => m,
-                Err((status, msg)) => {
-                    if status == 409 {
-                        counters.gen_conflicts.fetch_add(1, Ordering::Relaxed);
-                    } else {
-                        counters.bad_requests.fetch_add(1, Ordering::Relaxed);
-                    }
-                    return (status, reason_for(status), msg, req.keep_alive);
+            let treq = match TopkRequest::parse_query(req.query.as_deref()) {
+                Ok(t) => t,
+                Err(e) => {
+                    counters.bad_requests.fetch_add(1, Ordering::Relaxed);
+                    return error_response(&e, req.keep_alive);
                 }
             };
-            let k = query_param(req.query.as_deref(), "k")
-                .and_then(|v| v.parse::<usize>().ok())
-                .unwrap_or(10);
-            let class = query_param(req.query.as_deref(), "class")
-                .and_then(|v| v.parse::<usize>().ok())
-                .unwrap_or(0);
-            if class >= model.num_classes() {
+            let model = match resolve_pinned(cache, &ctx.mon.holder, treq.gen) {
+                Ok(m) => m,
+                Err(e) => {
+                    counters.gen_conflicts.fetch_add(1, Ordering::Relaxed);
+                    return error_response(&e, req.keep_alive);
+                }
+            };
+            if treq.class >= model.num_classes() {
                 counters.bad_requests.fetch_add(1, Ordering::Relaxed);
                 return (
                     400,
                     "Bad Request",
-                    format!("class {class} out of range (model has {})\n", model.num_classes()),
+                    format!(
+                        "class {} out of range (model has {})\n",
+                        treq.class,
+                        model.num_classes()
+                    ),
                     req.keep_alive,
                 );
             }
-            let mut body = String::new();
-            for (f, w) in model.topk_class(class, k) {
-                body.push_str(&format!("{f} {w}\n"));
-            }
+            let body =
+                crate::api::TopkResponse { entries: model.topk_class(treq.class, treq.k) }
+                    .encode();
             (200, "OK", body, req.keep_alive)
         }
-        ("GET", "/healthz") => {
+        Route::Healthz => {
             counters.health_requests.fetch_add(1, Ordering::Relaxed);
             (200, "OK", "ok\n".into(), req.keep_alive)
         }
-        ("GET", "/statz") => {
+        Route::Statz => {
             counters.statz_requests.fetch_add(1, Ordering::Relaxed);
             let snap = scrape(&ctx.mon);
             let model = cache.get(&ctx.mon.holder).clone();
             let body = render_statz(&snap, &model, ctx.mon.worker_hists.len());
             (200, "OK", body, req.keep_alive)
         }
-        ("POST", "/admin/reload") => {
+        Route::AdminReload => {
             counters.admin_reload_requests.fetch_add(1, Ordering::Relaxed);
             match &ctx.mon.reloader {
                 None => (
@@ -521,16 +494,18 @@ fn dispatch(
                     Ok(ReloadOutcome::Swapped { generation, drift }) => (
                         200,
                         "OK",
-                        format!(
-                            "reloaded generation {generation}\ntopk_jaccard {}\ncoord_norm_delta {}\n",
-                            drift.topk_jaccard, drift.coord_norm_delta
-                        ),
+                        ReloadResponse::Reloaded {
+                            generation,
+                            topk_jaccard: drift.topk_jaccard,
+                            coord_norm_delta: drift.coord_norm_delta,
+                        }
+                        .encode(),
                         req.keep_alive,
                     ),
                     Ok(ReloadOutcome::UpToDate { generation }) => (
                         200,
                         "OK",
-                        format!("already at generation {generation}\n"),
+                        ReloadResponse::UpToDate { generation }.encode(),
                         req.keep_alive,
                     ),
                     Err(e) => {
@@ -538,10 +513,6 @@ fn dispatch(
                     }
                 },
             }
-        }
-        _ => {
-            counters.not_found.fetch_add(1, Ordering::Relaxed);
-            (404, "Not Found", format!("no route {} {}\n", req.method, req.path), req.keep_alive)
         }
     }
 }

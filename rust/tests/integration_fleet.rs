@@ -20,13 +20,14 @@
 
 use bear::algo::bear::{Bear, BearConfig};
 use bear::algo::StepSize;
+use bear::api::{format_query, ApiError, BearClient, Statz, TopkRequest};
 use bear::coordinator::experiments::RealData;
 use bear::data::synth::Rcv1Sim;
 use bear::data::DataSource;
 use bear::fleet::{start_fleet, FleetConfig, ProbeConfig};
 use bear::loss::LossKind;
 use bear::online::Publisher;
-use bear::serve::loadgen::{self, format_query, HttpClient, LoadgenConfig};
+use bear::serve::loadgen::{self, LoadgenConfig};
 use bear::serve::ServableModel;
 use bear::sparse::SparseVec;
 use std::path::PathBuf;
@@ -78,25 +79,22 @@ fn test_queries(n: usize) -> Vec<SparseVec> {
     out
 }
 
+/// One key of a statz body via the canonical [`Statz`] schema parser,
+/// panicking (with the full body) when the key is absent — tests want
+/// loud failures, not Statz's lenient zero-default.
 fn statz_value(body: &str, key: &str) -> f64 {
-    for line in body.lines() {
-        if let Some((k, v)) = line.split_once(' ') {
-            if k == key {
-                return v.parse().unwrap();
-            }
-        }
+    match Statz::parse(body).get(key) {
+        Some(v) => v.parse().unwrap(),
+        None => panic!("statz missing {key}:\n{body}"),
     }
-    panic!("statz missing {key}:\n{body}");
 }
 
 /// One aggregated-`/statz` scrape on a fresh connection (the balancer
 /// sheds idle keep-alives after its read timeout, so a long-lived client
 /// would flake whenever a phase outlasts it).
 fn get_statz(addr: &str) -> String {
-    let mut client = HttpClient::connect(addr).expect("connect for /statz");
-    let (status, body) = client.get("/statz").expect("balancer /statz");
-    assert_eq!(status, 200, "{body}");
-    body
+    let client = BearClient::connect(addr).expect("connect for statz");
+    client.statz_raw().expect("balancer statz")
 }
 
 /// Poll the balancer's aggregated `/statz` until `pred` holds (panics
@@ -181,10 +179,9 @@ fn fleet_is_zero_drop_through_kill_restart_and_rolling_reload() {
     // published snapshot, whichever backend answers
     let queries = test_queries(12);
     let body: String = queries.iter().map(|q| format_query(q) + "\n").collect();
-    let mut client = HttpClient::connect(&addr).unwrap();
+    let client = BearClient::connect(&addr).unwrap();
     for _ in 0..6 {
-        let (status, resp) = client.post("/predict", &body).unwrap();
-        assert_eq!(status, 200, "{resp}");
+        let resp = client.predict_raw(&body).unwrap();
         let lines: Vec<&str> = resp.lines().collect();
         assert_eq!(lines.len(), queries.len());
         for (q, line) in queries.iter().zip(&lines) {
@@ -249,9 +246,8 @@ fn fleet_is_zero_drop_through_kill_restart_and_rolling_reload() {
     // new generation is actually being served: margins now match the
     // latest snapshot bit-for-bit
     let m3 = snapshot(&trainer).with_generation(3);
-    let mut client = HttpClient::connect(&addr).unwrap();
-    let (status, resp) = client.post("/predict", &body).unwrap();
-    assert_eq!(status, 200, "{resp}");
+    let client = BearClient::connect(&addr).unwrap();
+    let resp = client.predict_raw(&body).unwrap();
     for (q, line) in queries.iter().zip(resp.lines()) {
         let margin: f64 = line.split_whitespace().next().unwrap().parse().unwrap();
         assert_eq!(margin.to_bits(), m3.margin(q).to_bits());
@@ -274,6 +270,130 @@ fn fleet_is_zero_drop_through_kill_restart_and_rolling_reload() {
     handle.shutdown();
     std::fs::remove_dir_all(&pub_dir).ok();
     // keep log_dir: CI uploads it on failure, reruns truncate per-pid dirs
+}
+
+/// Kills an externally-launched worker process when the test ends (or
+/// panics) — `--join` workers have no `--parent-pid` guard, so the test
+/// must not leak them.
+struct ChildGuard(std::process::Child);
+
+impl Drop for ChildGuard {
+    fn drop(&mut self) {
+        let _ = self.0.kill();
+        let _ = self.0.wait();
+    }
+}
+
+#[test]
+fn fleet_join_adopts_externally_launched_workers() {
+    let _serial = fleet_lock();
+    let dir = tmp_root("join");
+    let log_dir = tmp_root("join-logs");
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+
+    // a snapshot on disk for the externally-launched workers
+    let mut trainer = new_trainer(0x901);
+    train_some(&mut trainer, 400, 1);
+    let model = snapshot(&trainer);
+    let snap = dir.join("model.bearsnap");
+    model.save(&snap).unwrap();
+
+    // two free loopback ports (reserve-and-release, like start_fleet;
+    // the FLEET_LOCK serialization keeps the race window harmless)
+    let ports: Vec<u16> = {
+        let listeners: Vec<std::net::TcpListener> =
+            (0..2).map(|_| std::net::TcpListener::bind("127.0.0.1:0").unwrap()).collect();
+        listeners.iter().map(|l| l.local_addr().unwrap().port()).collect()
+    };
+
+    // launch the workers BY HAND, exactly as a multi-host operator would
+    // (loopback here, but addressed as host:port strings end to end)
+    let mut externals: Vec<ChildGuard> = ports
+        .iter()
+        .map(|p| {
+            let child = std::process::Command::new(env!("CARGO_BIN_EXE_bear"))
+                .args([
+                    "serve",
+                    "--model",
+                    snap.to_str().unwrap(),
+                    "--addr",
+                    &format!("127.0.0.1:{p}"),
+                    "--workers",
+                    "8",
+                ])
+                .stdin(std::process::Stdio::null())
+                .stdout(std::process::Stdio::null())
+                .stderr(std::process::Stdio::null())
+                .spawn()
+                .expect("spawn external worker");
+            ChildGuard(child)
+        })
+        .collect();
+
+    // a pure frontend: zero local workers, everything joined
+    let cfg = FleetConfig {
+        addr: "127.0.0.1:0".to_string(),
+        backends: 0,
+        join: ports.iter().map(|p| format!("127.0.0.1:{p}")).collect(),
+        model: None,
+        watch_manifest: None,
+        worker_bin: Some(PathBuf::from(env!("CARGO_BIN_EXE_bear"))),
+        log_dir: Some(log_dir),
+        probe: ProbeConfig { interval: Duration::from_millis(50), ..Default::default() },
+        ..Default::default()
+    };
+    let handle = start_fleet(cfg).unwrap();
+    assert!(
+        handle.wait_all_healthy(Duration::from_secs(60)),
+        "joined workers never probed healthy"
+    );
+
+    // predictions through the balancer are bit-identical to the snapshot
+    let queries = test_queries(8);
+    let body: String = queries.iter().map(|q| format_query(q) + "\n").collect();
+    let client = BearClient::connect(&handle.addr().to_string()).unwrap();
+    let resp = client.predict_raw(&body).unwrap();
+    for (q, line) in queries.iter().zip(resp.lines()) {
+        let margin: f64 = line.split_whitespace().next().unwrap().parse().unwrap();
+        assert_eq!(margin.to_bits(), model.margin(q).to_bits());
+    }
+    drop(client);
+
+    // both joined workers are in rotation on the aggregated statz
+    let statz = get_statz(&handle.addr().to_string());
+    assert_eq!(statz_value(&statz, "fleet_backends") as u64, 2, "{statz}");
+    assert_eq!(statz_value(&statz, "fleet_backends_healthy") as u64, 2, "{statz}");
+
+    // joined workers are not the supervisor's to manage
+    assert!(handle.backend_pid(0).is_none(), "external worker must have no supervised pid");
+    assert!(handle.kill_backend(0).is_err(), "killing an external worker must be refused");
+
+    // SIGKILL one external worker OURSELVES: the prober must eject it,
+    // the balancer must keep serving from the survivor, and the
+    // supervisor must NOT try to respawn what it does not own
+    let victim = &mut externals[0].0;
+    victim.kill().unwrap();
+    victim.wait().unwrap();
+    let addr = handle.addr().to_string();
+    wait_statz(&addr, "external worker eject", Duration::from_secs(20), |b| {
+        statz_value(b, "backend.0.healthy") as u64 == 0
+    });
+    let client = BearClient::connect(&addr).unwrap();
+    let resp = client.predict_raw(&body).unwrap();
+    for (q, line) in queries.iter().zip(resp.lines()) {
+        let margin: f64 = line.split_whitespace().next().unwrap().parse().unwrap();
+        assert_eq!(margin.to_bits(), model.margin(q).to_bits());
+    }
+    drop(client);
+    let statz = wait_statz(&addr, "survivor still serving", Duration::from_secs(10), |b| {
+        statz_value(b, "fleet_backends_healthy") as u64 == 1
+    });
+    assert_eq!(statz_value(&statz, "backend.0.restarts") as u64, 0, "{statz}");
+
+    handle.shutdown();
+    drop(externals);
+    std::fs::remove_dir_all(&dir).ok();
 }
 
 #[test]
@@ -300,25 +420,20 @@ fn fleet_serves_healthz_and_routes_topk() {
     };
     let handle = start_fleet(cfg).unwrap();
     assert!(handle.wait_all_healthy(Duration::from_secs(60)));
-    let mut client = HttpClient::connect(&handle.addr().to_string()).unwrap();
+    let client = BearClient::connect(&handle.addr().to_string()).unwrap();
 
-    let (status, body) = client.get("/healthz").unwrap();
-    assert_eq!(status, 200, "{body}");
+    client.healthz().unwrap();
 
     // /topk proxies to a worker and returns the model's heavy hitters
     let expect = snapshot(&trainer).with_generation(1);
-    let (status, body) = client.get("/topk?k=5").unwrap();
-    assert_eq!(status, 200, "{body}");
-    let got: Vec<u64> = body
-        .lines()
-        .map(|l| l.split_whitespace().next().unwrap().parse().unwrap())
-        .collect();
+    let topk = client.topk(&TopkRequest { k: 5, ..Default::default() }).unwrap();
+    let got: Vec<u64> = topk.entries.iter().map(|&(f, _)| f).collect();
     let want: Vec<u64> = expect.topk(5).into_iter().map(|(f, _)| f).collect();
     assert_eq!(got, want);
 
-    // unknown routes 404 at the balancer without touching a worker
-    let (status, _) = client.get("/admin/reload").unwrap();
-    assert_eq!(status, 404);
+    // worker-internal routes 404 at the balancer without touching a
+    // worker — the typed client surfaces that as NotFound
+    assert!(matches!(client.admin_reload(), Err(ApiError::NotFound(_))));
 
     drop(client);
     handle.shutdown();

@@ -10,12 +10,13 @@
 
 use bear::algo::bear::{Bear, BearConfig};
 use bear::algo::StepSize;
+use bear::api::{format_query, ApiError, BearClient, ReloadResponse, Statz};
 use bear::coordinator::experiments::RealData;
 use bear::data::synth::Rcv1Sim;
 use bear::data::DataSource;
 use bear::loss::LossKind;
 use bear::online::{Manifest, Publisher, ReloadOutcome};
-use bear::serve::loadgen::{self, format_query, HttpClient, LoadgenConfig};
+use bear::serve::loadgen::{self, LoadgenConfig};
 use bear::serve::{serve, ServableModel, ServerConfig};
 use bear::sparse::SparseVec;
 use std::path::PathBuf;
@@ -60,23 +61,20 @@ fn test_queries(n: usize) -> Vec<SparseVec> {
     out
 }
 
+/// One key of a statz body via the canonical [`Statz`] schema parser,
+/// panicking (with the full body) when the key is absent — tests want
+/// loud failures, not Statz's lenient zero-default.
 fn statz_value(body: &str, key: &str) -> f64 {
-    for line in body.lines() {
-        if let Some((k, v)) = line.split_once(' ') {
-            if k == key {
-                return v.parse().unwrap();
-            }
-        }
+    match Statz::parse(body).get(key) {
+        Some(v) => v.parse().unwrap(),
+        None => panic!("statz missing {key}:\n{body}"),
     }
-    panic!("statz missing {key}:\n{body}");
 }
 
-/// Served margins must equal the given snapshot's margins bit-for-bit
-/// (one request per query, so each line is a fresh server roundtrip).
-fn assert_serves_model(client: &mut HttpClient, model: &ServableModel, queries: &[SparseVec]) {
+/// Served margins must equal the given snapshot's margins bit-for-bit.
+fn assert_serves_model(client: &BearClient, model: &ServableModel, queries: &[SparseVec]) {
     let body: String = queries.iter().map(|q| format_query(q) + "\n").collect();
-    let (status, resp) = client.post("/predict", &body).unwrap();
-    assert_eq!(status, 200, "{resp}");
+    let resp = client.predict_raw(&body).unwrap();
     let lines: Vec<&str> = resp.lines().collect();
     assert_eq!(lines.len(), queries.len());
     for (q, line) in queries.iter().zip(&lines) {
@@ -114,13 +112,12 @@ fn hot_reload_is_zero_drop_across_generations() {
     .unwrap();
     let addr = handle.addr().to_string();
     let queries = test_queries(20);
-    let mut client = HttpClient::connect(&addr).unwrap();
+    let client = BearClient::connect(&addr).unwrap();
 
     // generation 1 is live and serves m1 bit-for-bit
-    let (status, body) = client.get("/statz").unwrap();
-    assert_eq!(status, 200);
+    let body = client.statz_raw().unwrap();
     assert_eq!(statz_value(&body, "generation") as u64, 1);
-    assert_serves_model(&mut client, &m1, &queries);
+    assert_serves_model(&client, &m1, &queries);
 
     // closed-loop load across the swaps: 4 threads × 400 requests
     let lg_cfg = LoadgenConfig {
@@ -151,7 +148,7 @@ fn hot_reload_is_zero_drop_across_generations() {
             ReloadOutcome::UpToDate { generation } => assert_eq!(generation, expect_gen),
         }
         // new requests see the new snapshot, bit-for-bit
-        assert_serves_model(&mut client, &model, &queries);
+        assert_serves_model(&client, &model, &queries);
         std::thread::sleep(Duration::from_millis(30));
     }
 
@@ -162,14 +159,10 @@ fn hot_reload_is_zero_drop_across_generations() {
     assert_eq!(report.requests, 1600);
     assert_eq!(report.error_rate(), 0.0);
 
-    // the foreground connection may have idled past the keep-alive
-    // timeout while the load ran — use a fresh one for the checks below
-    drop(client);
-    let mut client = HttpClient::connect(&addr).unwrap();
-
+    // a pooled connection that idled past the keep-alive timeout is
+    // re-dialed transparently by the client
     // /statz reports the live generation, reload counters, drift gauges
-    let (status, body) = client.get("/statz").unwrap();
-    assert_eq!(status, 200);
+    let body = client.statz_raw().unwrap();
     assert_eq!(statz_value(&body, "generation") as u64, 3);
     assert_eq!(statz_value(&body, "reloads_total") as u64, 2);
     assert_eq!(statz_value(&body, "reload_failures") as u64, 0);
@@ -183,7 +176,7 @@ fn hot_reload_is_zero_drop_across_generations() {
     assert_eq!(Manifest::read(&publisher.manifest_path()).unwrap().generation, 4);
     let deadline = Instant::now() + Duration::from_secs(10);
     loop {
-        let (_, body) = client.get("/statz").unwrap();
+        let body = client.statz_raw().unwrap();
         if statz_value(&body, "generation") as u64 == 4 {
             break;
         }
@@ -217,20 +210,26 @@ fn admin_reload_endpoint_reports_status() {
         },
     )
     .unwrap();
-    let mut client = HttpClient::connect(&handle.addr().to_string()).unwrap();
+    let client = BearClient::connect(&handle.addr().to_string()).unwrap();
 
-    let (status, body) = client.post("/admin/reload", "").unwrap();
-    assert_eq!(status, 200, "{body}");
-    assert!(body.contains("already at generation 1"), "{body}");
+    // typed reload outcomes instead of body-grepping
+    assert_eq!(
+        client.admin_reload().unwrap(),
+        ReloadResponse::UpToDate { generation: 1 }
+    );
 
     train_some(&mut trainer, 200, 2);
     publisher.publish(&snapshot(&trainer)).unwrap();
-    let (status, body) = client.post("/admin/reload", "").unwrap();
-    assert_eq!(status, 200, "{body}");
-    assert!(body.contains("reloaded generation 2"), "{body}");
-    assert!(body.contains("topk_jaccard"), "{body}");
+    match client.admin_reload().unwrap() {
+        ReloadResponse::Reloaded { generation, topk_jaccard, coord_norm_delta } => {
+            assert_eq!(generation, 2);
+            assert!((0.0..=1.0).contains(&topk_jaccard), "{topk_jaccard}");
+            assert!(coord_norm_delta >= 0.0, "{coord_norm_delta}");
+        }
+        other => panic!("expected a swap to generation 2, got {other:?}"),
+    }
 
-    let (_, statz) = client.get("/statz").unwrap();
+    let statz = client.statz_raw().unwrap();
     assert_eq!(statz_value(&statz, "generation") as u64, 2);
     assert_eq!(statz_value(&statz, "admin_reload_requests") as u64, 2);
 
@@ -248,12 +247,13 @@ fn admin_reload_without_manifest_is_rejected() {
         ServerConfig { workers: 1, ..Default::default() },
     )
     .unwrap();
-    let mut client = HttpClient::connect(&handle.addr().to_string()).unwrap();
-    let (status, body) = client.post("/admin/reload", "").unwrap();
-    assert_eq!(status, 400, "{body}");
-    assert!(body.contains("watch-manifest"), "{body}");
+    let client = BearClient::connect(&handle.addr().to_string()).unwrap();
+    match client.admin_reload() {
+        Err(ApiError::BadRequest(body)) => assert!(body.contains("watch-manifest"), "{body}"),
+        other => panic!("expected a typed 400, got {other:?}"),
+    }
     // generation 0: a one-shot export was never published
-    let (_, statz) = client.get("/statz").unwrap();
+    let statz = client.statz_raw().unwrap();
     assert_eq!(statz_value(&statz, "generation") as u64, 0);
     drop(client);
     handle.shutdown();

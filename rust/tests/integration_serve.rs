@@ -10,11 +10,12 @@
 
 use bear::algo::bear::{Bear, BearConfig};
 use bear::algo::{FeatureSelector, StepSize};
+use bear::api::{format_query, ApiError, BearClient, TopkRequest};
 use bear::coordinator::experiments::{AlgoKind, RealData, RealSpec};
 use bear::data::synth::Rcv1Sim;
 use bear::data::DataSource;
 use bear::loss::LossKind;
-use bear::serve::loadgen::{self, format_query, HttpClient, LoadgenConfig};
+use bear::serve::loadgen::{self, LoadgenConfig};
 use bear::serve::{serve, ServableModel, ServerConfig};
 use bear::sparse::SparseVec;
 use bear::util::math::sigmoid;
@@ -88,7 +89,7 @@ fn export_serve_loadgen_roundtrip_bit_identical() {
             let queries = &queries;
             let expected = &expected;
             scope.spawn(move || {
-                let mut client = HttpClient::connect(&addr).unwrap();
+                let client = BearClient::connect(&addr).unwrap();
                 let lo = t * per_thread;
                 for chunk_start in (lo..lo + per_thread).step_by(PER_REQUEST) {
                     let idxs: Vec<usize> = (chunk_start..chunk_start + PER_REQUEST).collect();
@@ -96,8 +97,7 @@ fn export_serve_loadgen_roundtrip_bit_identical() {
                         .iter()
                         .map(|&i| format_query(&queries[i]) + "\n")
                         .collect();
-                    let (status, resp) = client.post("/predict", &body).unwrap();
-                    assert_eq!(status, 200, "{resp}");
+                    let resp = client.predict_raw(&body).unwrap();
                     let lines: Vec<&str> = resp.lines().collect();
                     assert_eq!(lines.len(), idxs.len());
                     for (&i, line) in idxs.iter().zip(&lines) {
@@ -164,37 +164,32 @@ fn http_endpoints_topk_healthz_statz_and_errors() {
     ));
     let expected_topk = model.topk(3);
     let handle = serve(model, ServerConfig { workers: 2, ..Default::default() }).unwrap();
-    let mut client = HttpClient::connect(&handle.addr().to_string()).unwrap();
+    let client = BearClient::connect(&handle.addr().to_string()).unwrap();
 
-    let (status, body) = client.get("/healthz").unwrap();
-    assert_eq!((status, body.as_str()), (200, "ok\n"));
+    client.healthz().unwrap();
 
-    let (status, body) = client.get("/topk?k=3").unwrap();
-    assert_eq!(status, 200);
-    let got: Vec<(u64, f32)> = body
-        .lines()
-        .map(|l| {
-            let (f, w) = l.split_once(' ').unwrap();
-            (f.parse().unwrap(), w.parse().unwrap())
-        })
-        .collect();
-    assert_eq!(got, expected_topk);
+    let topk = client.topk(&TopkRequest { k: 3, ..Default::default() }).unwrap();
+    assert_eq!(topk.entries, expected_topk);
 
-    let (status, body) = client.get("/statz").unwrap();
-    assert_eq!(status, 200);
-    assert!(body.contains("requests_total "), "{body}");
-    assert!(body.contains("latency_p99_us "), "{body}");
-    assert!(body.contains("model_features "), "{body}");
+    let statz = client.statz().unwrap();
+    assert!(statz.requests_total() > 0);
+    assert!(statz.get("latency_p99_us").is_some());
+    assert!(statz.get("model_features").is_some());
 
-    let (status, _) = client.get("/nope").unwrap();
+    // a non-API path 404s (raw escape hatch: "/nope" is the subject
+    // under test, not an endpoint)
+    let (status, _) = client.request("GET", "/nope", b"").unwrap();
     assert_eq!(status, 404);
 
-    let (status, body) = client.post("/predict", "not-a-query\n").unwrap();
-    assert_eq!(status, 400, "{body}");
+    // a malformed predict body is a typed 400 with the parse context
+    match client.predict_raw("not-a-query\n") {
+        Err(ApiError::BadRequest(body)) => assert!(body.contains("idx:val"), "{body}"),
+        other => panic!("expected a typed 400, got {other:?}"),
+    }
 
-    // a well-formed predict still works on the same connection after a 400
-    let (status, body) = client.post("/predict", "5:1.0 9:2.0\n").unwrap();
-    assert_eq!(status, 200);
+    // a well-formed predict still works on the same pooled connection
+    // after a 400
+    let body = client.predict_raw("5:1.0 9:2.0\n").unwrap();
     assert_eq!(body.lines().count(), 1);
 
     let stats = handle.stats();

@@ -20,12 +20,12 @@
 
 use bear::algo::bear::{Bear, BearConfig};
 use bear::algo::StepSize;
+use bear::api::{format_query, ApiError, BearClient, ClientConfig, Statz, TopkRequest};
 use bear::data::synth::Rcv1Sim;
 use bear::data::DataSource;
 use bear::fleet::{start_fleet, FleetConfig, ProbeConfig};
 use bear::loss::LossKind;
 use bear::online::Publisher;
-use bear::serve::loadgen::{format_query, HttpClient};
 use bear::serve::ServableModel;
 use bear::sparse::SparseVec;
 use std::path::PathBuf;
@@ -92,22 +92,19 @@ fn expected_predict_body(model: &ServableModel, queries: &[SparseVec]) -> String
     out
 }
 
+/// One key of a statz body via the canonical [`Statz`] schema parser,
+/// panicking (with the full body) when the key is absent — tests want
+/// loud failures, not Statz's lenient zero-default.
 fn statz_value(body: &str, key: &str) -> f64 {
-    for line in body.lines() {
-        if let Some((k, v)) = line.split_once(' ') {
-            if k == key {
-                return v.parse().unwrap();
-            }
-        }
+    match Statz::parse(body).get(key) {
+        Some(v) => v.parse().unwrap(),
+        None => panic!("statz missing {key}:\n{body}"),
     }
-    panic!("statz missing {key}:\n{body}");
 }
 
 fn get_statz(addr: &str) -> String {
-    let mut client = HttpClient::connect(addr).expect("connect for /statz");
-    let (status, body) = client.get("/statz").expect("balancer /statz");
-    assert_eq!(status, 200, "{body}");
-    body
+    let client = BearClient::connect(addr).expect("connect for statz");
+    client.statz_raw().expect("balancer statz")
 }
 
 fn wait_statz(
@@ -134,15 +131,24 @@ fn post_loop(addr: String, body: String, n: usize) -> std::thread::JoinHandle<(V
     std::thread::spawn(move || {
         let mut responses = Vec::with_capacity(n);
         let mut errors = 0u64;
-        let mut client = HttpClient::connect(&addr).expect("post_loop connect");
+        // deadlines comfortably above the balancer's scatter_deadline: a
+        // predict legitimately stalls while a shard's only worker
+        // respawns, and the client must wait that out, not time out
+        let cfg = ClientConfig {
+            connect_timeout: Duration::from_secs(5),
+            io_timeout: Duration::from_secs(30),
+            pool: 1,
+        };
+        let client = BearClient::new(
+            BearClient::resolve(&addr).expect("post_loop resolve"),
+            cfg,
+        );
         for _ in 0..n {
-            match client.post("/predict", &body) {
-                Ok((200, resp)) => responses.push(resp),
-                Ok((_, _)) => errors += 1,
-                Err(_) => {
-                    errors += 1;
-                    client = HttpClient::connect(&addr).expect("post_loop reconnect");
-                }
+            // non-200 and transport failures both count one error; the
+            // client's pool re-dials on the next request
+            match client.predict_raw(&body) {
+                Ok(resp) => responses.push(resp),
+                Err(_) => errors += 1,
             }
         }
         (responses, errors)
@@ -204,16 +210,14 @@ fn fleet_sharded_scatter_gather_is_bit_identical_and_zero_drop() {
         bear::serve::ServerConfig { addr: "127.0.0.1:0".into(), workers: 2, ..Default::default() },
     )
     .unwrap();
-    let mut uclient = HttpClient::connect(&unsharded.addr().to_string()).unwrap();
-    let (ustatus, ubody) = uclient.post("/predict", &body).unwrap();
-    assert_eq!(ustatus, 200, "{ubody}");
+    let uclient = BearClient::connect(&unsharded.addr().to_string()).unwrap();
+    let ubody = uclient.predict_raw(&body).unwrap();
     assert_eq!(ubody, expect1, "unsharded server disagrees with in-process predict");
     drop(uclient);
 
-    let mut client = HttpClient::connect(&addr).unwrap();
+    let client = BearClient::connect(&addr).unwrap();
     for _ in 0..6 {
-        let (status, resp) = client.post("/predict", &body).unwrap();
-        assert_eq!(status, 200, "{resp}");
+        let resp = client.predict_raw(&body).unwrap();
         assert_eq!(
             resp, ubody,
             "scatter-gather response is not byte-identical to the unsharded server"
@@ -221,8 +225,7 @@ fn fleet_sharded_scatter_gather_is_bit_identical_and_zero_drop() {
     }
 
     // ── /topk is a K-way merge equal to the global top-k ───────────────
-    let (status, topk_body) = client.get("/topk?k=8").unwrap();
-    assert_eq!(status, 200, "{topk_body}");
+    let topk_body = client.topk_raw(&TopkRequest { k: 8, ..Default::default() }).unwrap();
     let mut expect_topk = String::new();
     for (f, w) in model1.topk(8) {
         expect_topk.push_str(&format!("{f} {w}\n"));
@@ -313,9 +316,8 @@ fn fleet_sharded_scatter_gather_is_bit_identical_and_zero_drop() {
             && statz_value(b, "fleet_backends_healthy") as u64 == 3
     });
     assert_eq!(statz_value(&statz, "rejected_503") as u64, 0, "{statz}");
-    let mut client = HttpClient::connect(&addr).unwrap();
-    let (status, resp) = client.post("/predict", &body).unwrap();
-    assert_eq!(status, 200, "{resp}");
+    let client = BearClient::connect(&addr).unwrap();
+    let resp = client.predict_raw(&body).unwrap();
     assert_eq!(resp, expect3, "fleet did not settle on generation 3's margins");
     drop(client);
 
@@ -361,16 +363,14 @@ fn fleet_sharded_export_files_drive_a_manifestless_fleet() {
     let queries = test_queries(8);
     let body: String = queries.iter().map(|q| format_query(q) + "\n").collect();
     let expect = expected_predict_body(&model, &queries);
-    let mut client = HttpClient::connect(&handle.addr().to_string()).unwrap();
-    let (status, resp) = client.post("/predict", &body).unwrap();
-    assert_eq!(status, 200, "{resp}");
+    let client = BearClient::connect(&handle.addr().to_string()).unwrap();
+    let resp = client.predict_raw(&body).unwrap();
     assert_eq!(resp, expect, "table-only sharded serving must match the unsharded model");
 
-    // healthz reflects the shard set; unknown routes still 404
-    let (status, _) = client.get("/healthz").unwrap();
-    assert_eq!(status, 200);
-    let (status, _) = client.get("/admin/reload").unwrap();
-    assert_eq!(status, 404);
+    // healthz reflects the shard set; worker-internal routes 404 at the
+    // balancer (typed: the client sees NotFound, not a reload outcome)
+    client.healthz().unwrap();
+    assert!(matches!(client.admin_reload(), Err(ApiError::NotFound(_))));
 
     drop(client);
     handle.shutdown();

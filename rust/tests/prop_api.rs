@@ -1,0 +1,305 @@
+//! Property tests for the typed serving API (`bear::api`):
+//!
+//! 1. **Round-trips.** Every typed request/response encodes→parses
+//!    bit-exactly for arbitrary inputs (floats travel in shortest
+//!    round-trip form or as raw bits, so equality is on `to_bits`, not
+//!    approximate).
+//! 2. **Version aliasing.** Against a **live server**, every `/v1/*`
+//!    route answers byte-identically to its legacy unversioned alias —
+//!    same status, same body bytes (statz, whose body carries clocks and
+//!    self-incrementing counters, is compared on its key schema).
+//! 3. **Typed errors.** Generation conflicts and malformed bodies come
+//!    back as the matching [`ApiError`] variants through [`BearClient`].
+
+use bear::api::{
+    ApiError, PredictRequest, PredictResponse, PredictShape, ReloadResponse, Statz, TopkRequest,
+    TopkResponse, WeightsHeader,
+};
+use bear::prop::{run, Gen};
+use bear::serve::http::{percent_decode, percent_encode};
+use bear::serve::snapshot::Prediction;
+use bear::sparse::SparseVec;
+
+#[test]
+fn topk_request_roundtrips_for_arbitrary_params() {
+    run("TopkRequest encode→parse is identity", 128, |g: &mut Gen| {
+        let req = TopkRequest {
+            k: g.u64_below(1 << 32) as usize,
+            class: g.u64_below(1 << 16) as usize,
+            gen: if g.bool() { Some(g.u64_below(u64::MAX)) } else { None },
+        };
+        let back = TopkRequest::parse_query(Some(&req.encode_query())).expect("own encoding");
+        assert_eq!(back, req);
+        // the target embeds the same query after the canonical path
+        assert!(req.target().starts_with("/v1/topk?"));
+    });
+}
+
+#[test]
+fn predict_request_roundtrips_through_the_wire_format() {
+    run("PredictRequest body encode→parse is identity", 128, |g: &mut Gen| {
+        let n = g.usize_in(1, 6);
+        let queries: Vec<SparseVec> = (0..n)
+            .map(|_| {
+                let mut pairs = g.sparse_pairs(1 << 40);
+                if pairs.is_empty() {
+                    // blank lines are skipped by the parser (legacy
+                    // semantics), so the round-trip property holds for
+                    // non-empty queries
+                    pairs.push((g.u64_below(1 << 40), g.f32_in(-10.0, 10.0)));
+                }
+                SparseVec::from_pairs(pairs)
+            })
+            .collect();
+        let req = PredictRequest { queries };
+        let back = PredictRequest::parse_body(req.encode_body().as_bytes()).expect("own body");
+        assert_eq!(back, req);
+    });
+}
+
+#[test]
+fn predict_response_roundtrips_bit_exactly_in_every_shape() {
+    run("PredictResponse encode→parse is bit-exact", 128, |g: &mut Gen| {
+        let n = g.usize_in(1, 8);
+        let (shape, preds): (PredictShape, Vec<Prediction>) = match g.usize_in(0, 3) {
+            0 => (
+                PredictShape::Margin,
+                (0..n)
+                    .map(|_| Prediction {
+                        margin: g.gaussian() * 1e3,
+                        probability: None,
+                        class: None,
+                    })
+                    .collect(),
+            ),
+            1 => (
+                PredictShape::MarginProbability,
+                (0..n)
+                    .map(|_| Prediction {
+                        margin: g.gaussian() * 1e3,
+                        probability: Some(g.f64_in(0.0, 1.0)),
+                        class: None,
+                    })
+                    .collect(),
+            ),
+            _ => (
+                PredictShape::ClassMargin,
+                (0..n)
+                    .map(|_| Prediction {
+                        margin: g.gaussian() * 1e3,
+                        probability: None,
+                        class: Some(g.u64_below(1 << 16) as usize),
+                    })
+                    .collect(),
+            ),
+        };
+        let resp = PredictResponse { preds };
+        let back = PredictResponse::parse(&resp.encode(), shape).expect("own encoding");
+        assert_eq!(back.preds.len(), resp.preds.len());
+        for (a, b) in resp.preds.iter().zip(&back.preds) {
+            assert_eq!(a.margin.to_bits(), b.margin.to_bits());
+            assert_eq!(a.class, b.class);
+            match (a.probability, b.probability) {
+                (None, None) => {}
+                (Some(x), Some(y)) => assert_eq!(x.to_bits(), y.to_bits()),
+                other => panic!("probability mismatch: {other:?}"),
+            }
+        }
+    });
+}
+
+#[test]
+fn topk_response_and_weights_header_roundtrip() {
+    run("TopkResponse / WeightsHeader encode→parse is identity", 128, |g: &mut Gen| {
+        let entries: Vec<(u64, f32)> = (0..g.usize_in(0, 12))
+            .map(|_| {
+                let w = match g.usize_in(0, 5) {
+                    0 => 0.0,
+                    1 => -0.0,
+                    2 => f32::MIN_POSITIVE,
+                    3 => f32::INFINITY,
+                    _ => g.f32_in(-1e30, 1e30),
+                };
+                (g.u64_below(u64::MAX), w)
+            })
+            .collect();
+        let resp = TopkResponse { entries };
+        let back = TopkResponse::parse(&resp.encode()).expect("own encoding");
+        assert_eq!(back.entries.len(), resp.entries.len());
+        for ((fa, wa), (fb, wb)) in resp.entries.iter().zip(&back.entries) {
+            assert_eq!(fa, fb);
+            assert_eq!(wa.to_bits(), wb.to_bits());
+        }
+        let header = WeightsHeader {
+            generation: g.u64_below(u64::MAX),
+            classes: g.u64_below(1 << 20),
+            bias_bits: g.u64_below(1 << 32) as u32,
+            loss: g.u64_below(4) as u32,
+        };
+        assert_eq!(WeightsHeader::parse(&header.encode()), Some(header));
+    });
+}
+
+#[test]
+fn reload_response_roundtrips_bit_exactly() {
+    run("ReloadResponse encode→parse is identity", 128, |g: &mut Gen| {
+        let resp = if g.bool() {
+            ReloadResponse::Reloaded {
+                generation: g.u64_below(u64::MAX),
+                topk_jaccard: g.f64_in(0.0, 1.0),
+                coord_norm_delta: g.gaussian().abs() * 100.0,
+            }
+        } else {
+            ReloadResponse::UpToDate { generation: g.u64_below(u64::MAX) }
+        };
+        assert_eq!(ReloadResponse::parse(&resp.encode()).expect("own encoding"), resp);
+    });
+}
+
+#[test]
+fn query_values_percent_roundtrip_for_arbitrary_strings() {
+    run("percent_decode(percent_encode(s)) == s", 256, |g: &mut Gen| {
+        let n = g.usize_in(0, 24);
+        let s: String = (0..n)
+            .map(|_| match g.usize_in(0, 4) {
+                // plain ASCII
+                0 => char::from(b'a' + g.u64_below(26) as u8),
+                // the characters that make query strings ambiguous
+                1 => ['+', ' ', '%', '&', '=', '?', '/', '#'][g.usize_in(0, 8)],
+                // multi-byte UTF-8
+                2 => ['é', 'δ', '中', '🐻'][g.usize_in(0, 4)],
+                _ => char::from(b'0' + g.u64_below(10) as u8),
+            })
+            .collect();
+        assert_eq!(percent_decode(&percent_encode(&s)), s, "roundtrip of {s:?}");
+    });
+}
+
+// ---------------------------------------------------------------------------
+// live server: /v1/* is byte-identical to the legacy aliases
+// ---------------------------------------------------------------------------
+
+mod live {
+    use super::*;
+    use bear::algo::sketched::SketchedState;
+    use bear::api::{BearClient, Route};
+    use bear::loss::LossKind;
+    use bear::serve::{serve, ServableModel, ServerConfig};
+    use bear::sparse::ActiveSet;
+    use std::sync::Arc;
+
+    fn toy_model() -> ServableModel {
+        let mut st = SketchedState::new(512, 3, 4, 9);
+        st.apply_step(&SparseVec::from_pairs(vec![(7, -1.0), (21, 0.5)]), 1.0);
+        let rows = [
+            SparseVec::from_pairs(vec![(7, 1.0)]),
+            SparseVec::from_pairs(vec![(21, 1.0)]),
+        ];
+        st.refresh_heap(&ActiveSet::from_rows(rows.iter()));
+        ServableModel::from_sketched(&st, LossKind::Logistic, 0.0)
+    }
+
+    /// Send the same request to `path` and to its sibling and return
+    /// both (status, body) pairs.
+    fn both(
+        client: &BearClient,
+        route: Route,
+        query: Option<&str>,
+        body: &[u8],
+    ) -> ((u16, String), (u16, String)) {
+        let with_query = |path: &str| match query {
+            Some(q) => format!("{path}?{q}"),
+            None => path.to_string(),
+        };
+        let legacy = client
+            .request(route.method(), &with_query(route.legacy_path()), body)
+            .expect("legacy path");
+        let v1 = client
+            .request(route.method(), &with_query(route.v1_path()), body)
+            .expect("v1 path");
+        (legacy, v1)
+    }
+
+    #[test]
+    fn v1_routes_answer_byte_identically_to_legacy_aliases() {
+        let model = toy_model();
+        let handle = serve(
+            Arc::new(model),
+            ServerConfig { workers: 2, ..Default::default() },
+        )
+        .unwrap();
+        let client = BearClient::connect(&handle.addr().to_string()).unwrap();
+
+        // deterministic-body routes: full byte equality, 200 and error
+        // paths alike
+        let cases: &[(Route, Option<&str>, &[u8])] = &[
+            (Route::Predict, None, b"7:1.0 21:2.0\n\n21:0.5\n"),
+            (Route::Predict, None, b"not-a-query\n"), // 400 body
+            (Route::Topk, Some("k=2"), b""),
+            (Route::Topk, Some("k=1&class=9"), b""), // 400 class range
+            (Route::Topk, Some("gen=zzz"), b""),     // 400 bad gen
+            (Route::Topk, Some("k=2&gen=999"), b""), // 409 conflict
+            (Route::ShardWeights, Some("gen=0"), b"7:1.0\n21:1.5\n"),
+            (Route::Healthz, None, b""),
+            (Route::AdminReload, None, b""), // 400: no --watch-manifest
+        ];
+        for &(route, query, body) in cases {
+            let (legacy, v1) = both(&client, route, query, body);
+            assert_eq!(
+                legacy, v1,
+                "{route:?} ({query:?}) differs between legacy and /v1"
+            );
+        }
+
+        // statz bodies carry uptime/qps and count their own scrapes, so
+        // byte equality cannot hold between two requests — the SCHEMA
+        // (ordered key list) must be identical instead
+        let (legacy, v1) = both(&client, Route::Statz, None, b"");
+        assert_eq!(legacy.0, 200);
+        assert_eq!(v1.0, 200);
+        let legacy_keys: Vec<String> =
+            Statz::parse(&legacy.1).keys().map(str::to_string).collect();
+        let v1_keys: Vec<String> = Statz::parse(&v1.1).keys().map(str::to_string).collect();
+        assert_eq!(legacy_keys, v1_keys, "statz schema differs between legacy and /v1");
+
+        // unknown paths 404 identically under both prefixes
+        let miss = client.request("GET", "/nope", b"").unwrap();
+        let v1_miss = client.request("GET", "/v1/nope", b"").unwrap();
+        assert_eq!(miss.0, 404);
+        assert_eq!(v1_miss.0, 404);
+
+        drop(client);
+        handle.shutdown();
+    }
+
+    #[test]
+    fn typed_errors_surface_through_the_client() {
+        let handle = serve(
+            Arc::new(toy_model()),
+            ServerConfig { workers: 2, ..Default::default() },
+        )
+        .unwrap();
+        let client = BearClient::connect(&handle.addr().to_string()).unwrap();
+
+        // a pinned generation the server cannot serve is a typed Conflict
+        match client.topk(&TopkRequest { k: 2, class: 0, gen: Some(999) }) {
+            Err(ApiError::Conflict(body)) => {
+                assert!(body.contains("generation 999 unavailable"), "{body}")
+            }
+            other => panic!("expected Conflict, got {other:?}"),
+        }
+        // pinning the generation it IS serving works
+        let pinned = client.topk(&TopkRequest { k: 2, class: 0, gen: Some(0) }).unwrap();
+        let unpinned = client.topk(&TopkRequest { k: 2, ..Default::default() }).unwrap();
+        assert_eq!(pinned, unpinned);
+
+        // malformed body → typed BadRequest carrying the parse context
+        match client.predict_raw("7:not-a-float\n") {
+            Err(ApiError::BadRequest(body)) => assert!(body.contains("bad value"), "{body}"),
+            other => panic!("expected BadRequest, got {other:?}"),
+        }
+
+        drop(client);
+        handle.shutdown();
+    }
+}
