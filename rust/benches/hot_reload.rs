@@ -113,6 +113,7 @@ fn main() {
             queries_per_request,
             dataset: RealData::Rcv1,
             seed: 0x10AD,
+            duration: None,
         };
         let report = loadgen::run(&handle.addr().to_string(), &cfg).expect("loadgen run");
         stop.store(true, Ordering::Release);

@@ -72,6 +72,7 @@ fn main() {
             queries_per_request,
             dataset: RealData::Rcv1,
             seed: 0x10AD,
+            duration: None,
         };
         let report =
             loadgen::run(&handle.addr().to_string(), &cfg).expect("loadgen run");

@@ -1,0 +1,332 @@
+//! The regression gate: classify each probe PASS/WARN/FAIL against a
+//! committed baseline report.
+//!
+//! Rules (the CI contract):
+//! - Regression % is measured in the probe's *bad* direction
+//!   (lower throughput, higher latency); improvements are PASS however
+//!   large.
+//! - Thresholds come from the CURRENT report (the code under test owns
+//!   its noise model): regression ≤ `warn_pct` ⇒ PASS, ≤ `fail_pct` ⇒
+//!   WARN, beyond ⇒ FAIL — except warn-only probes (`gate: false`,
+//!   statistical headlines), which cap at WARN.
+//! - A probe with no baseline entry is NEW ⇒ PASS (new probes must never
+//!   fail the gate, or nobody would add probes).
+//! - A baseline probe missing from the current run is GONE ⇒ WARN (a
+//!   silently dropped probe would fake a clean trajectory).
+//! - A baseline with a different `schema_version` is incomparable: every
+//!   probe reports NEW, exit 0 (the compat policy — a schema bump must
+//!   not retroactively fail CI).
+//!
+//! Only FAIL makes `bear bench --compare` exit non-zero.
+
+use super::report::{Better, BenchReport};
+use crate::coordinator::report::Table;
+
+/// Per-probe gate outcome, ordered by severity.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Verdict {
+    /// No baseline entry (or incomparable schema) — informational.
+    New,
+    Pass,
+    Warn,
+    Fail,
+}
+
+impl Verdict {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Verdict::New => "NEW",
+            Verdict::Pass => "PASS",
+            Verdict::Warn => "WARN",
+            Verdict::Fail => "FAIL",
+        }
+    }
+}
+
+/// One row of the comparison table.
+#[derive(Clone, Debug)]
+pub struct ProbeComparison {
+    pub name: String,
+    pub unit: String,
+    /// None for NEW probes (no baseline) and GONE probes (no current).
+    pub baseline: Option<f64>,
+    pub current: Option<f64>,
+    /// Regression percentage in the bad direction (negative =
+    /// improvement); None when either side is missing.
+    pub regression_pct: Option<f64>,
+    pub verdict: Verdict,
+    pub note: String,
+}
+
+/// A full report-vs-baseline comparison.
+#[derive(Clone, Debug)]
+pub struct Comparison {
+    pub rows: Vec<ProbeComparison>,
+    /// True when the baseline's schema_version differs (nothing gated).
+    pub incomparable_schema: bool,
+}
+
+impl Comparison {
+    pub fn fails(&self) -> usize {
+        self.rows.iter().filter(|r| r.verdict == Verdict::Fail).count()
+    }
+
+    pub fn warns(&self) -> usize {
+        self.rows.iter().filter(|r| r.verdict == Verdict::Warn).count()
+    }
+
+    /// The PASS/WARN/FAIL table (what CI surfaces in the job summary).
+    pub fn render(&self) -> String {
+        let mut t = Table::new(
+            "bench gate: current vs baseline",
+            &["probe", "unit", "baseline", "current", "Δ%", "verdict", "note"],
+        );
+        for r in &self.rows {
+            let fmt = |v: Option<f64>| v.map(|x| format!("{x:.3}")).unwrap_or_else(|| "-".into());
+            t.row(&[
+                r.name.clone(),
+                r.unit.clone(),
+                fmt(r.baseline),
+                fmt(r.current),
+                r.regression_pct
+                    .map(|p| format!("{:+.1}", -p)) // show improvement as +
+                    .unwrap_or_else(|| "-".into()),
+                r.verdict.label().to_string(),
+                r.note.clone(),
+            ]);
+        }
+        t.render()
+    }
+}
+
+/// Regression % of `current` vs `baseline` in the probe's bad direction
+/// (positive = worse). A zero baseline can't be a denominator: any
+/// nonzero regression from zero reports as 100%.
+fn regression_pct(better: Better, baseline: f64, current: f64) -> f64 {
+    let delta = match better {
+        Better::Higher => baseline - current,
+        Better::Lower => current - baseline,
+    };
+    if baseline.abs() < f64::EPSILON {
+        if delta.abs() < f64::EPSILON {
+            0.0
+        } else if delta > 0.0 {
+            100.0
+        } else {
+            -100.0
+        }
+    } else {
+        delta / baseline.abs() * 100.0
+    }
+}
+
+/// Compare `current` against `baseline` under the rules above.
+pub fn compare_reports(current: &BenchReport, baseline: &BenchReport) -> Comparison {
+    if current.schema_version != baseline.schema_version {
+        let rows = current
+            .probes
+            .iter()
+            .map(|p| ProbeComparison {
+                name: p.name.clone(),
+                unit: p.unit.clone(),
+                baseline: None,
+                current: Some(p.value),
+                regression_pct: None,
+                verdict: Verdict::New,
+                note: format!(
+                    "baseline schema v{} ≠ v{}, not gated",
+                    baseline.schema_version, current.schema_version
+                ),
+            })
+            .collect();
+        return Comparison { rows, incomparable_schema: true };
+    }
+
+    let mut rows: Vec<ProbeComparison> = current
+        .probes
+        .iter()
+        .map(|p| match baseline.probe(&p.name) {
+            None => ProbeComparison {
+                name: p.name.clone(),
+                unit: p.unit.clone(),
+                baseline: None,
+                current: Some(p.value),
+                regression_pct: None,
+                verdict: Verdict::New,
+                note: "no baseline entry".into(),
+            },
+            Some(b) => {
+                let pct = regression_pct(p.better, b.value, p.value);
+                let verdict = if pct <= p.warn_pct {
+                    Verdict::Pass
+                } else if pct <= p.fail_pct || !p.gate {
+                    Verdict::Warn
+                } else {
+                    Verdict::Fail
+                };
+                let note = match verdict {
+                    Verdict::Pass if pct < 0.0 => "improved".into(),
+                    Verdict::Pass => "within noise".into(),
+                    Verdict::Warn if !p.gate && pct > p.fail_pct => {
+                        "headline probe (warn-only)".into()
+                    }
+                    Verdict::Warn => format!("> warn {}%", p.warn_pct),
+                    Verdict::Fail => format!("> fail {}%", p.fail_pct),
+                    Verdict::New => unreachable!(),
+                };
+                ProbeComparison {
+                    name: p.name.clone(),
+                    unit: p.unit.clone(),
+                    baseline: Some(b.value),
+                    current: Some(p.value),
+                    regression_pct: Some(pct),
+                    verdict,
+                    note,
+                }
+            }
+        })
+        .collect();
+
+    // baseline probes the current run no longer measures
+    for b in &baseline.probes {
+        if current.probe(&b.name).is_none() {
+            rows.push(ProbeComparison {
+                name: b.name.clone(),
+                unit: b.unit.clone(),
+                baseline: Some(b.value),
+                current: None,
+                regression_pct: None,
+                verdict: Verdict::Warn,
+                note: "probe missing from current run".into(),
+            });
+        }
+    }
+    Comparison { rows, incomparable_schema: false }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_util::SampleStats;
+    use crate::bench::report::{EnvInfo, ProbeResult, SCHEMA_VERSION};
+
+    pub(crate) fn probe(name: &str, better: Better, value: f64) -> ProbeResult {
+        ProbeResult {
+            name: name.into(),
+            unit: "u".into(),
+            better,
+            warn_pct: 10.0,
+            fail_pct: 30.0,
+            gate: true,
+            value,
+            stats: SampleStats::zero(),
+            extra: vec![],
+        }
+    }
+
+    pub(crate) fn report(probes: Vec<ProbeResult>) -> BenchReport {
+        BenchReport {
+            schema_version: SCHEMA_VERSION,
+            pr: 6,
+            quick: true,
+            seed: 1,
+            env: EnvInfo::default(),
+            probes,
+        }
+    }
+
+    fn verdict_of(cmp: &Comparison, name: &str) -> Verdict {
+        cmp.rows.iter().find(|r| r.name == name).expect("row").verdict
+    }
+
+    #[test]
+    fn threshold_boundaries_higher_better() {
+        let base = report(vec![probe("qps", Better::Higher, 1000.0)]);
+        // exactly warn_pct (10%) is still PASS; just past it WARNs;
+        // exactly fail_pct (30%) still WARNs; just past it FAILs
+        for (current, want) in [
+            (1000.0, Verdict::Pass),
+            (1200.0, Verdict::Pass), // improvement, however large
+            (900.0, Verdict::Pass),  // exactly 10%
+            (899.9, Verdict::Warn),
+            (700.0, Verdict::Warn), // exactly 30%
+            (699.9, Verdict::Fail),
+        ] {
+            let cur = report(vec![probe("qps", Better::Higher, current)]);
+            let cmp = compare_reports(&cur, &base);
+            assert_eq!(verdict_of(&cmp, "qps"), want, "current {current}");
+        }
+    }
+
+    #[test]
+    fn threshold_boundaries_lower_better() {
+        let base = report(vec![probe("p99", Better::Lower, 200.0)]);
+        for (current, want) in [
+            (150.0, Verdict::Pass), // improvement
+            (220.0, Verdict::Pass), // exactly 10%
+            (221.0, Verdict::Warn),
+            (260.0, Verdict::Warn), // exactly 30%
+            (261.0, Verdict::Fail),
+        ] {
+            let cur = report(vec![probe("p99", Better::Lower, current)]);
+            let cmp = compare_reports(&cur, &base);
+            assert_eq!(verdict_of(&cmp, "p99"), want, "current {current}");
+        }
+    }
+
+    #[test]
+    fn new_probe_never_fails_missing_probe_warns() {
+        let base = report(vec![probe("old", Better::Higher, 1.0)]);
+        let cur = report(vec![probe("brand_new", Better::Higher, 5.0)]);
+        let cmp = compare_reports(&cur, &base);
+        assert_eq!(verdict_of(&cmp, "brand_new"), Verdict::New);
+        assert_eq!(verdict_of(&cmp, "old"), Verdict::Warn);
+        assert_eq!(cmp.fails(), 0, "a new probe must not fail the gate");
+        assert_eq!(cmp.warns(), 1);
+    }
+
+    #[test]
+    fn warn_only_probes_cap_at_warn() {
+        let mut headline = probe("gap", Better::Lower, 10.0);
+        headline.gate = false;
+        let base = report(vec![headline.clone()]);
+        headline.value = 1000.0; // 9900% regression — far past fail_pct
+        let cur = report(vec![headline]);
+        let cmp = compare_reports(&cur, &base);
+        assert_eq!(verdict_of(&cmp, "gap"), Verdict::Warn);
+        assert_eq!(cmp.fails(), 0);
+    }
+
+    #[test]
+    fn schema_mismatch_is_incomparable_not_failed() {
+        let mut base = report(vec![probe("qps", Better::Higher, 1000.0)]);
+        base.schema_version = SCHEMA_VERSION + 1;
+        let cur = report(vec![probe("qps", Better::Higher, 1.0)]); // huge "regression"
+        let cmp = compare_reports(&cur, &base);
+        assert!(cmp.incomparable_schema);
+        assert_eq!(verdict_of(&cmp, "qps"), Verdict::New);
+        assert_eq!(cmp.fails(), 0);
+    }
+
+    #[test]
+    fn zero_baseline_handled() {
+        let base = report(vec![probe("errs", Better::Lower, 0.0)]);
+        let cur = report(vec![probe("errs", Better::Lower, 5.0)]);
+        let cmp = compare_reports(&cur, &base);
+        // 0 → 5 in the bad direction reports as a 100% regression → FAIL
+        assert_eq!(verdict_of(&cmp, "errs"), Verdict::Fail);
+        let same = compare_reports(&base, &base);
+        assert_eq!(verdict_of(&same, "errs"), Verdict::Pass);
+    }
+
+    #[test]
+    fn render_mentions_every_probe_and_verdict() {
+        let base = report(vec![probe("a", Better::Higher, 100.0)]);
+        let cur = report(vec![probe("a", Better::Higher, 50.0), probe("b", Better::Lower, 1.0)]);
+        let cmp = compare_reports(&cur, &base);
+        let text = cmp.render();
+        assert!(text.contains("FAIL"));
+        assert!(text.contains("NEW"));
+        assert!(text.contains('a') && text.contains('b'));
+    }
+}

@@ -1,0 +1,125 @@
+//! Preflight: environment + reproducibility checks, run before any probe
+//! (the wenyuzhao/harness discipline — a number measured in an
+//! unreproducible environment is worse than no number).
+//!
+//! Collected facts go into the report's `env` block so two
+//! `BENCH_<pr>.json` files can be judged comparable before their numbers
+//! are: the git revision measured, whether `debug_assertions` were
+//! compiled in, the CPU count, OS and arch. The hard check: a non-quick
+//! run refuses to measure a debug-assertions build (quick/smoke runs
+//! warn instead, so CI can smoke-test the harness itself on any
+//! profile).
+
+use super::report::EnvInfo;
+use anyhow::{bail, Result};
+
+/// Collect the environment facts recorded in the report.
+pub fn collect() -> EnvInfo {
+    EnvInfo {
+        git_rev: git_rev().unwrap_or_else(|| "unknown".into()),
+        debug_assertions: cfg!(debug_assertions),
+        cpus: std::thread::available_parallelism().map(|n| n.get() as u64).unwrap_or(0),
+        os: std::env::consts::OS.to_string(),
+        arch: std::env::consts::ARCH.to_string(),
+    }
+}
+
+/// The short git revision of the working tree (best-effort: benches can
+/// run from an exported tarball). A dirty tree is marked `-dirty` so a
+/// committed baseline can't silently come from unreviewed code.
+fn git_rev() -> Option<String> {
+    let rev = run_git(&["rev-parse", "--short", "HEAD"])?;
+    let dirty = run_git(&["status", "--porcelain"]).map(|s| !s.is_empty()).unwrap_or(false);
+    Some(if dirty { format!("{rev}-dirty") } else { rev })
+}
+
+fn run_git(args: &[&str]) -> Option<String> {
+    let out = std::process::Command::new("git").args(args).output().ok()?;
+    if !out.status.success() {
+        return None;
+    }
+    Some(String::from_utf8_lossy(&out.stdout).trim().to_string())
+}
+
+/// Validate the environment before measuring. `quick` downgrades the
+/// debug-assertions refusal to a warning (smoke runs exercise the
+/// harness, not the hardware).
+pub fn preflight(env: &EnvInfo, quick: bool) -> Result<()> {
+    if env.debug_assertions {
+        if quick {
+            eprintln!(
+                "[bench] WARNING: debug_assertions are enabled — numbers are not \
+                 comparable to a release baseline"
+            );
+        } else {
+            bail!(
+                "refusing a full bench run with debug_assertions enabled; \
+                 build with --release (or pass --quick for a smoke run)"
+            );
+        }
+    }
+    if env.cpus == 0 {
+        eprintln!("[bench] WARNING: could not determine CPU count");
+    }
+    eprintln!(
+        "[bench] preflight: rev {} · {}/{} · {} cpus · debug_assertions {}",
+        env.git_rev, env.os, env.arch, env.cpus, env.debug_assertions
+    );
+    Ok(())
+}
+
+/// Peak resident set size of this process in KiB (`VmHWM` from
+/// `/proc/self/status`), 0 where unsupported. Recorded per probe.
+pub fn peak_rss_kb() -> u64 {
+    let Ok(status) = std::fs::read_to_string("/proc/self/status") else {
+        return 0;
+    };
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            return rest.trim().trim_end_matches("kB").trim().parse().unwrap_or(0);
+        }
+    }
+    0
+}
+
+/// Try to reset the kernel's peak-RSS watermark (`/proc/self/clear_refs`,
+/// value 5) so per-probe peaks are not dominated by an earlier probe.
+/// Best-effort: where unsupported, peaks are monotone across probes and
+/// the report still records them (documented in the README).
+pub fn reset_peak_rss() {
+    let _ = std::fs::write("/proc/self/clear_refs", "5");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collect_fills_static_facts() {
+        let env = collect();
+        assert_eq!(env.os, std::env::consts::OS);
+        assert_eq!(env.arch, std::env::consts::ARCH);
+        assert_eq!(env.debug_assertions, cfg!(debug_assertions));
+        assert!(!env.git_rev.is_empty());
+    }
+
+    #[test]
+    fn preflight_gates_debug_builds_only_when_full() {
+        let mut env = collect();
+        env.debug_assertions = true;
+        assert!(preflight(&env, true).is_ok(), "quick runs only warn");
+        assert!(preflight(&env, false).is_err(), "full runs refuse debug builds");
+        env.debug_assertions = false;
+        assert!(preflight(&env, false).is_ok());
+    }
+
+    #[test]
+    fn peak_rss_is_sane_on_linux() {
+        let kb = peak_rss_kb();
+        if cfg!(target_os = "linux") {
+            // any live process has touched at least a few hundred KiB
+            assert!(kb > 100, "VmHWM read as {kb}");
+        }
+        reset_peak_rss(); // must never panic, even where unsupported
+    }
+}

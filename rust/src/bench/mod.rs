@@ -1,0 +1,171 @@
+//! `bear bench` — the performance harness: one command measuring the
+//! whole system (sketch micro-probes → training throughput → serving →
+//! hot reload → 2-shard fleet) against fixed seeds, emitting the
+//! committed `BENCH_<pr>.json` trajectory and gating regressions in CI.
+//!
+//! The phased discipline (preflight → prep → warmup → timed samples →
+//! post) follows the public bench-harness literature: refuse to measure
+//! an unreproducible environment, never time fixture construction, throw
+//! away warmup, report spreads rather than single numbers.
+//!
+//! ```text
+//! bear bench --quick                         # smoke sizes, write BENCH_6.json
+//! bear bench                                 # full sizes (refuses debug builds)
+//! bear bench --quick --compare BENCH_6.json  # gate: PASS/WARN/FAIL, exit≠0 on FAIL
+//! bear bench --probes sketch_update,serving_qps
+//! ```
+//!
+//! Module map: [`json`] (hand-rolled, dependency-free JSON), [`report`]
+//! (the schema-versioned `BENCH_<pr>.json` model), [`env`] (preflight +
+//! RSS), [`runner`] (the phase driver), [`probes`] (the catalog),
+//! [`compare`] (the PASS/WARN/FAIL gate).
+
+pub mod compare;
+pub mod env;
+pub mod json;
+pub mod probes;
+pub mod report;
+pub mod runner;
+
+pub use compare::{compare_reports, Comparison, Verdict};
+pub use report::{default_report_name, BenchReport, Better, EnvInfo, ProbeResult};
+pub use runner::{BenchCtx, Probe, ProbeSpec, Sample};
+
+use crate::coordinator::report::Table;
+use anyhow::{bail, Result};
+use std::path::PathBuf;
+
+/// `bear bench` knobs (parsed in `main.rs`).
+#[derive(Clone, Debug)]
+pub struct BenchConfig {
+    /// Smoke sizes: small fixtures, short windows, fewer samples; also
+    /// downgrades the debug-assertions refusal to a warning.
+    pub quick: bool,
+    /// The single workload seed threaded through every probe (loadgen
+    /// request streams, training data, sketch contents).
+    pub seed: u64,
+    /// Where the fresh report is written.
+    pub out: PathBuf,
+    /// Baseline to gate against (read BEFORE `out` is written, so
+    /// comparing against the file being refreshed works).
+    pub compare: Option<PathBuf>,
+    /// Probe-name filter; empty = the full catalog.
+    pub only: Vec<String>,
+    /// Timed samples per probe (probes may override).
+    pub samples: usize,
+    /// Discarded warmup samples per probe.
+    pub warmup: usize,
+    /// Scratch root for probe fixtures (publication dirs, worker logs).
+    pub scratch: PathBuf,
+}
+
+impl BenchConfig {
+    pub fn new(quick: bool) -> Self {
+        Self {
+            quick,
+            seed: 0xBEA6,
+            out: PathBuf::from(default_report_name()),
+            compare: None,
+            only: Vec::new(),
+            samples: if quick { 3 } else { 5 },
+            warmup: if quick { 1 } else { 2 },
+            scratch: std::env::temp_dir().join(format!("bear-bench-{}", std::process::id())),
+        }
+    }
+}
+
+/// Render the fresh run as a human table (the JSON keeps full precision).
+fn print_results(report: &BenchReport) {
+    let profile = if report.quick { "quick" } else { "full" };
+    let mut t = Table::new(
+        &format!("bear bench (seed {}, {profile})", report.seed),
+        &["probe", "value", "unit", "n", "min", "max", "rss peak"],
+    );
+    for p in &report.probes {
+        let rss = p
+            .extra
+            .iter()
+            .find(|(k, _)| k == "rss_peak_kb")
+            .map(|(_, v)| crate::coordinator::report::human_bytes((*v as usize) * 1024))
+            .unwrap_or_else(|| "-".into());
+        t.row(&[
+            p.name.clone(),
+            format!("{:.3}", p.value),
+            p.unit.clone(),
+            p.stats.n.to_string(),
+            format!("{:.3}", p.stats.min),
+            format!("{:.3}", p.stats.max),
+            rss,
+        ]);
+    }
+    t.print();
+}
+
+/// Run the harness end to end. Returns the process exit code: 0 unless
+/// the compare gate FAILs (probe errors and a missing/corrupt baseline
+/// are hard `Err`s — a broken harness must not read as a clean gate).
+pub fn run_bench(cfg: &BenchConfig) -> Result<i32> {
+    let env_info = env::collect();
+    env::preflight(&env_info, cfg.quick)?;
+
+    // read the baseline before writing anything: `--compare BENCH_6.json
+    // --out BENCH_6.json` (the refresh workflow) must gate against the
+    // committed bytes, not the file we are about to replace
+    let baseline = match &cfg.compare {
+        Some(path) => Some(BenchReport::load(path)?),
+        None => None,
+    };
+
+    let mut selected = probes::all_probes();
+    if !cfg.only.is_empty() {
+        let catalog = probes::probe_names();
+        for name in &cfg.only {
+            if !catalog.contains(&name.as_str()) {
+                bail!("unknown probe {name:?}; catalog: {}", catalog.join(", "));
+            }
+        }
+        selected.retain(|p| cfg.only.iter().any(|n| n == p.spec().name));
+    }
+
+    let ctx = BenchCtx {
+        seed: cfg.seed,
+        quick: cfg.quick,
+        samples: cfg.samples,
+        warmup: cfg.warmup,
+        scratch: cfg.scratch.clone(),
+    };
+    std::fs::create_dir_all(&ctx.scratch)?;
+    let results = runner::run_probes(&mut selected, &ctx)?;
+    // best-effort cleanup: worker logs are kept only on failure above
+    std::fs::remove_dir_all(&ctx.scratch).ok();
+
+    let fresh = BenchReport {
+        schema_version: report::SCHEMA_VERSION,
+        pr: report::CURRENT_PR,
+        quick: cfg.quick,
+        seed: cfg.seed,
+        env: env_info,
+        probes: results,
+    };
+    fresh.save(&cfg.out)?;
+    print_results(&fresh);
+    println!("report written to {}", cfg.out.display());
+
+    let Some(baseline) = baseline else { return Ok(0) };
+    let cmp = compare_reports(&fresh, &baseline);
+    print!("{}", cmp.render());
+    if cmp.incomparable_schema {
+        println!(
+            "baseline schema v{} ≠ current v{}: nothing gated (compat policy)",
+            baseline.schema_version, fresh.schema_version
+        );
+        return Ok(0);
+    }
+    let (fails, warns) = (cmp.fails(), cmp.warns());
+    println!(
+        "gate: {} probe(s), {warns} WARN, {fails} FAIL{}",
+        cmp.rows.len(),
+        if fails > 0 { " — regression gate FAILED" } else { "" }
+    );
+    Ok(if fails > 0 { 1 } else { 0 })
+}

@@ -1,0 +1,371 @@
+//! The machine-readable bench report: the `BENCH_<pr>.json` schema.
+//!
+//! One file per PR, committed at `rust/BENCH_<pr>.json`, records the
+//! repo's performance trajectory: every speed claim ("makes a hot path
+//! measurably faster") becomes a diff between two committed reports, and
+//! the CI gate (`bear bench --compare`) classifies each probe
+//! PASS/WARN/FAIL against the per-probe noise thresholds recorded here.
+//!
+//! ## Schema (version 1)
+//! ```json
+//! {
+//!   "schema_version": 1,
+//!   "pr": 6,
+//!   "quick": true,
+//!   "seed": 48806,
+//!   "env": { "git_rev": "…", "debug_assertions": false, "cpus": 8,
+//!            "os": "linux", "arch": "x86_64" },
+//!   "probes": [
+//!     { "name": "serving_qps", "unit": "req/s", "better": "higher",
+//!       "warn_pct": 10, "fail_pct": 30, "gate": true,
+//!       "value": 12345.6,
+//!       "stats": { "n": 3, "mean": …, "min": …, "p50": …, "p99": …,
+//!                  "p999": …, "max": … },
+//!       "extra": { "p99_us": …, "rss_peak_kb": … } }
+//!   ]
+//! }
+//! ```
+//! Compat policy: `schema_version` bumps only on breaking layout changes;
+//! `--compare` refuses to gate across versions (everything reports as
+//! `new`, exit 0) so a schema bump never fails CI retroactively. New
+//! probes and new `extra` keys are non-breaking.
+
+use super::json::Json;
+use crate::bench_util::SampleStats;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Bump on breaking report-layout changes only (see compat policy above).
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// The PR this tree's committed baseline belongs to — names the default
+/// output file `BENCH_<pr>.json`.
+pub const CURRENT_PR: u64 = 6;
+
+/// Default committed report filename for this tree.
+pub fn default_report_name() -> String {
+    format!("BENCH_{CURRENT_PR}.json")
+}
+
+/// Which direction of change is an improvement for a probe.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Better {
+    Higher,
+    Lower,
+}
+
+impl Better {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Better::Higher => "higher",
+            Better::Lower => "lower",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Better> {
+        match s {
+            "higher" => Some(Better::Higher),
+            "lower" => Some(Better::Lower),
+            _ => None,
+        }
+    }
+}
+
+/// One probe's recorded result.
+#[derive(Clone, Debug)]
+pub struct ProbeResult {
+    pub name: String,
+    pub unit: String,
+    pub better: Better,
+    /// Regression (%) beyond which the compare reports WARN.
+    pub warn_pct: f64,
+    /// Regression (%) beyond which the compare reports FAIL (exit ≠ 0).
+    pub fail_pct: f64,
+    /// `false` ⇒ a statistical headline probe: compare caps it at WARN,
+    /// it can never fail the gate.
+    pub gate: bool,
+    /// The headline value (what the gate compares), in `unit`.
+    pub value: f64,
+    /// Stats over the timed samples that produced `value`.
+    pub stats: SampleStats,
+    /// Per-probe custom stats (latency percentiles in µs, RSS peak, …).
+    pub extra: Vec<(String, f64)>,
+}
+
+impl ProbeResult {
+    fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("name".into(), Json::Str(self.name.clone())),
+            ("unit".into(), Json::Str(self.unit.clone())),
+            ("better".into(), Json::Str(self.better.as_str().into())),
+            ("warn_pct".into(), Json::Num(self.warn_pct)),
+            ("fail_pct".into(), Json::Num(self.fail_pct)),
+            ("gate".into(), Json::Bool(self.gate)),
+            ("value".into(), Json::Num(self.value)),
+            (
+                "stats".into(),
+                Json::Obj(vec![
+                    ("n".into(), Json::Num(self.stats.n as f64)),
+                    ("mean".into(), Json::Num(self.stats.mean)),
+                    ("min".into(), Json::Num(self.stats.min)),
+                    ("p50".into(), Json::Num(self.stats.p50)),
+                    ("p99".into(), Json::Num(self.stats.p99)),
+                    ("p999".into(), Json::Num(self.stats.p999)),
+                    ("max".into(), Json::Num(self.stats.max)),
+                ]),
+            ),
+            (
+                "extra".into(),
+                Json::Obj(
+                    self.extra.iter().map(|(k, v)| (k.clone(), Json::Num(*v))).collect(),
+                ),
+            ),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Result<ProbeResult> {
+        let str_field = |k: &str| -> Result<String> {
+            Ok(v.get(k)
+                .and_then(Json::as_str)
+                .with_context(|| format!("probe missing string field {k:?}"))?
+                .to_string())
+        };
+        let num_field = |k: &str| -> Result<f64> {
+            v.get(k).and_then(Json::as_f64).with_context(|| format!("probe missing {k:?}"))
+        };
+        let stats = v.get("stats").context("probe missing stats")?;
+        let stat = |k: &str| stats.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+        let extra = match v.get("extra") {
+            Some(Json::Obj(members)) => members
+                .iter()
+                .filter_map(|(k, val)| val.as_f64().map(|n| (k.clone(), n)))
+                .collect(),
+            _ => Vec::new(),
+        };
+        let better_str = str_field("better")?;
+        Ok(ProbeResult {
+            name: str_field("name")?,
+            unit: str_field("unit")?,
+            better: Better::parse(&better_str)
+                .with_context(|| format!("bad better {better_str:?}"))?,
+            warn_pct: num_field("warn_pct")?,
+            fail_pct: num_field("fail_pct")?,
+            gate: v.get("gate").and_then(Json::as_bool).unwrap_or(true),
+            value: num_field("value")?,
+            stats: SampleStats {
+                n: stat("n") as usize,
+                mean: stat("mean"),
+                min: stat("min"),
+                p50: stat("p50"),
+                p99: stat("p99"),
+                p999: stat("p999"),
+                max: stat("max"),
+            },
+            extra,
+        })
+    }
+}
+
+/// Host/build facts recorded by the preflight phase.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct EnvInfo {
+    pub git_rev: String,
+    pub debug_assertions: bool,
+    pub cpus: u64,
+    pub os: String,
+    pub arch: String,
+}
+
+impl EnvInfo {
+    fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("git_rev".into(), Json::Str(self.git_rev.clone())),
+            ("debug_assertions".into(), Json::Bool(self.debug_assertions)),
+            ("cpus".into(), Json::Num(self.cpus as f64)),
+            ("os".into(), Json::Str(self.os.clone())),
+            ("arch".into(), Json::Str(self.arch.clone())),
+        ])
+    }
+
+    fn from_json(v: &Json) -> EnvInfo {
+        let s = |k: &str| v.get(k).and_then(Json::as_str).unwrap_or("unknown").to_string();
+        EnvInfo {
+            git_rev: s("git_rev"),
+            debug_assertions: v
+                .get("debug_assertions")
+                .and_then(Json::as_bool)
+                .unwrap_or(false),
+            cpus: v.get("cpus").and_then(Json::as_u64).unwrap_or(0),
+            os: s("os"),
+            arch: s("arch"),
+        }
+    }
+}
+
+/// A complete bench run: what `BENCH_<pr>.json` holds.
+#[derive(Clone, Debug)]
+pub struct BenchReport {
+    pub schema_version: u64,
+    pub pr: u64,
+    pub quick: bool,
+    pub seed: u64,
+    pub env: EnvInfo,
+    pub probes: Vec<ProbeResult>,
+}
+
+impl BenchReport {
+    pub fn probe(&self, name: &str) -> Option<&ProbeResult> {
+        self.probes.iter().find(|p| p.name == name)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("schema_version".into(), Json::Num(self.schema_version as f64)),
+            ("pr".into(), Json::Num(self.pr as f64)),
+            ("quick".into(), Json::Bool(self.quick)),
+            ("seed".into(), Json::Num(self.seed as f64)),
+            ("env".into(), self.env.to_json()),
+            ("probes".into(), Json::Arr(self.probes.iter().map(ProbeResult::to_json).collect())),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<BenchReport> {
+        let probes = v
+            .get("probes")
+            .and_then(Json::as_arr)
+            .context("report missing probes array")?
+            .iter()
+            .map(ProbeResult::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(BenchReport {
+            schema_version: v
+                .get("schema_version")
+                .and_then(Json::as_u64)
+                .context("report missing schema_version")?,
+            pr: v.get("pr").and_then(Json::as_u64).unwrap_or(0),
+            quick: v.get("quick").and_then(Json::as_bool).unwrap_or(false),
+            seed: v.get("seed").and_then(Json::as_u64).unwrap_or(0),
+            env: v.get("env").map(EnvInfo::from_json).unwrap_or_default(),
+            probes,
+        })
+    }
+
+    /// Pretty JSON + trailing newline (the committed-file bytes).
+    pub fn encode(&self) -> String {
+        self.to_json().pretty()
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.encode())
+            .with_context(|| format!("writing bench report {}", path.display()))
+    }
+
+    pub fn load(path: &Path) -> Result<BenchReport> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading bench baseline {}", path.display()))?;
+        Self::from_json(
+            &Json::parse(&text).with_context(|| format!("parsing {}", path.display()))?,
+        )
+        .with_context(|| format!("decoding {}", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub(crate) fn sample_report() -> BenchReport {
+        BenchReport {
+            schema_version: SCHEMA_VERSION,
+            pr: CURRENT_PR,
+            quick: true,
+            seed: 0xBEA6,
+            env: EnvInfo {
+                git_rev: "abc1234".into(),
+                debug_assertions: false,
+                cpus: 8,
+                os: "linux".into(),
+                arch: "x86_64".into(),
+            },
+            probes: vec![
+                ProbeResult {
+                    name: "serving_qps".into(),
+                    unit: "req/s".into(),
+                    better: Better::Higher,
+                    warn_pct: 10.0,
+                    fail_pct: 30.0,
+                    gate: true,
+                    value: 12345.678,
+                    stats: SampleStats {
+                        n: 3,
+                        mean: 12000.0,
+                        min: 11000.0,
+                        p50: 12345.678,
+                        p99: 12600.0,
+                        p999: 12600.0,
+                        max: 12600.0,
+                    },
+                    extra: vec![("p99_us".into(), 850.5), ("rss_peak_kb".into(), 40_960.0)],
+                },
+                ProbeResult {
+                    name: "newton_bear_gap".into(),
+                    unit: "|Δ success|".into(),
+                    better: Better::Lower,
+                    warn_pct: 0.0,
+                    fail_pct: f64::MAX,
+                    gate: false,
+                    value: 0.25,
+                    stats: SampleStats::zero(),
+                    extra: vec![],
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn report_roundtrips_through_json() {
+        let r = sample_report();
+        let back = BenchReport::from_json(&Json::parse(&r.encode()).unwrap()).unwrap();
+        assert_eq!(back.schema_version, r.schema_version);
+        assert_eq!(back.pr, r.pr);
+        assert_eq!(back.quick, r.quick);
+        assert_eq!(back.seed, r.seed);
+        assert_eq!(back.env, r.env);
+        assert_eq!(back.probes.len(), r.probes.len());
+        for (a, b) in back.probes.iter().zip(&r.probes) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.unit, b.unit);
+            assert_eq!(a.better, b.better);
+            assert_eq!(a.gate, b.gate);
+            // bit-exact float round-trip (shortest-round-trip Display)
+            assert_eq!(a.value.to_bits(), b.value.to_bits());
+            assert_eq!(a.stats, b.stats);
+            assert_eq!(a.extra, b.extra);
+        }
+    }
+
+    #[test]
+    fn save_load_file_roundtrip() {
+        let path = std::env::temp_dir()
+            .join(format!("bear-bench-report-{}.json", std::process::id()));
+        let r = sample_report();
+        r.save(&path).unwrap();
+        let back = BenchReport::load(&path).unwrap();
+        assert_eq!(back.probes.len(), 2);
+        assert_eq!(back.probe("serving_qps").unwrap().value.to_bits(), 12345.678f64.to_bits());
+        assert!(back.probe("nonexistent").is_none());
+        std::fs::remove_file(&path).ok();
+        // a missing baseline is a hard error with the path in the message
+        let err = BenchReport::load(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("bear-bench-report"));
+    }
+
+    #[test]
+    fn rejects_malformed_reports() {
+        assert!(BenchReport::from_json(&Json::parse("{}").unwrap()).is_err());
+        assert!(BenchReport::from_json(
+            &Json::parse("{\"schema_version\": 1, \"probes\": [{\"name\": \"x\"}]}").unwrap()
+        )
+        .is_err());
+    }
+}

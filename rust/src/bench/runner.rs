@@ -1,0 +1,296 @@
+//! The phased probe runner: prep → warmup → timed samples → post, in the
+//! style of bmvm's `tooling/benchy`, with per-probe stats and RSS peaks.
+//!
+//! Each probe owns its fixtures (a trained model, a running server, a
+//! mini-fleet) across the phases:
+//!
+//! - **prep** — build fixtures; excluded from every measurement.
+//! - **warmup** — discarded samples (first-touch page faults, branch
+//!   predictors, keep-alive pools).
+//! - **sample** — N timed samples; the probe returns its headline value
+//!   per sample (`iters/sec`, `p99 µs`, …) plus custom key/value stats;
+//!   the report keeps the MEDIAN sample as the headline (robust against
+//!   one noisy neighbor) and the full [`SampleStats`] spread.
+//! - **post** — teardown + final custom stats (error counts, totals).
+//!
+//! The runner adds the probe's peak RSS (best-effort reset before prep)
+//! and wall time to `extra`, so every probe records compute *and* memory.
+
+use super::env;
+use super::report::{Better, ProbeResult};
+use crate::bench_util::{summarize, SampleStats};
+use anyhow::{Context, Result};
+use std::path::PathBuf;
+use std::time::Instant;
+
+/// Shared per-run context handed to every probe phase.
+pub struct BenchCtx {
+    /// The single workload seed (`--seed`): every probe derives its
+    /// RNG/stream seeds from this, so back-to-back runs on one machine
+    /// are workload-identical.
+    pub seed: u64,
+    /// Smoke sizes (CI): smaller fixtures, fewer samples.
+    pub quick: bool,
+    /// Timed samples per probe (probes may override via [`ProbeSpec`]).
+    pub samples: usize,
+    /// Discarded warmup samples per probe.
+    pub warmup: usize,
+    /// Scratch directory (publication dirs, shard files, worker logs);
+    /// wiped per probe.
+    pub scratch: PathBuf,
+}
+
+impl BenchCtx {
+    /// A per-probe seed derived from the run seed — distinct per probe
+    /// name, stable across runs.
+    pub fn probe_seed(&self, name: &str) -> u64 {
+        let (h, _) = crate::hash::murmur3::murmur3_x64_128(name.as_bytes(), self.seed as u32);
+        h ^ self.seed
+    }
+
+    /// A per-probe scratch subdirectory, created empty.
+    pub fn probe_scratch(&self, name: &str) -> Result<PathBuf> {
+        let dir = self.scratch.join(name);
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating bench scratch {}", dir.display()))?;
+        Ok(dir)
+    }
+}
+
+/// Static description of a probe: identity, unit, direction, and the
+/// regression-noise thresholds its compare gate uses.
+#[derive(Clone, Debug)]
+pub struct ProbeSpec {
+    pub name: &'static str,
+    pub unit: &'static str,
+    pub better: Better,
+    /// Regression (%) past which compare reports WARN.
+    pub warn_pct: f64,
+    /// Regression (%) past which compare reports FAIL.
+    pub fail_pct: f64,
+    /// `false` ⇒ statistical headline, capped at WARN in the gate.
+    pub gate: bool,
+    /// Override the runner's sample count (heavyweight probes).
+    pub samples: Option<usize>,
+    /// Override the runner's warmup count.
+    pub warmup: Option<usize>,
+}
+
+/// One timed sample: the headline value plus custom stats (the last
+/// sample's custom stats win — they describe the same steady state).
+pub struct Sample {
+    pub value: f64,
+    pub extra: Vec<(String, f64)>,
+}
+
+impl Sample {
+    pub fn plain(value: f64) -> Sample {
+        Sample { value, extra: Vec::new() }
+    }
+}
+
+/// A benchmark probe, driven through the four phases by [`run_probe`].
+pub trait Probe {
+    fn spec(&self) -> ProbeSpec;
+    /// Build fixtures (trained models, servers, fleets). Untimed.
+    fn prep(&mut self, ctx: &BenchCtx) -> Result<()>;
+    /// One measured sample of the probe's headline value.
+    fn sample(&mut self, ctx: &BenchCtx) -> Result<Sample>;
+    /// Teardown + final custom stats. Untimed.
+    fn post(&mut self, ctx: &BenchCtx) -> Result<Vec<(String, f64)>> {
+        let _ = ctx;
+        Ok(Vec::new())
+    }
+}
+
+/// Drive one probe through prep → warmup → samples → post and fold the
+/// result into a [`ProbeResult`].
+pub fn run_probe(probe: &mut dyn Probe, ctx: &BenchCtx) -> Result<ProbeResult> {
+    let spec = probe.spec();
+    let samples_n = spec.samples.unwrap_or(ctx.samples).max(1);
+    let warmup_n = spec.warmup.unwrap_or(ctx.warmup);
+    eprintln!("[bench] ▶ {} (warmup {warmup_n}, samples {samples_n})", spec.name);
+    env::reset_peak_rss();
+    let t0 = Instant::now();
+    probe.prep(ctx).with_context(|| format!("probe {} prep", spec.name))?;
+    for i in 0..warmup_n {
+        probe.sample(ctx).with_context(|| format!("probe {} warmup {i}", spec.name))?;
+    }
+    let mut values = Vec::with_capacity(samples_n);
+    let mut sample_extra = Vec::new();
+    for i in 0..samples_n {
+        let s = probe.sample(ctx).with_context(|| format!("probe {} sample {i}", spec.name))?;
+        anyhow::ensure!(
+            s.value.is_finite(),
+            "probe {} sample {i} produced a non-finite value",
+            spec.name
+        );
+        values.push(s.value);
+        sample_extra = s.extra;
+    }
+    let mut extra = sample_extra;
+    extra.extend(probe.post(ctx).with_context(|| format!("probe {} post", spec.name))?);
+    extra.push(("rss_peak_kb".into(), env::peak_rss_kb() as f64));
+    extra.push(("probe_wall_s".into(), t0.elapsed().as_secs_f64()));
+
+    let stats = summarize(&values);
+    let result = ProbeResult {
+        name: spec.name.to_string(),
+        unit: spec.unit.to_string(),
+        better: spec.better,
+        warn_pct: spec.warn_pct,
+        fail_pct: spec.fail_pct,
+        gate: spec.gate,
+        // median sample: robust headline under a noisy neighbor
+        value: stats.p50,
+        stats,
+        extra,
+    };
+    eprintln!(
+        "[bench] ✔ {}: {} {} (spread {}..{} over {} samples, {:.1}s)",
+        result.name,
+        trim_num(result.value),
+        result.unit,
+        trim_num(result.stats.min),
+        trim_num(result.stats.max),
+        result.stats.n,
+        t0.elapsed().as_secs_f64(),
+    );
+    Ok(result)
+}
+
+/// Run every probe in order; a probe error aborts the run (a harness that
+/// silently drops probes would record a trajectory with holes).
+pub fn run_probes(probes: &mut [Box<dyn Probe>], ctx: &BenchCtx) -> Result<Vec<ProbeResult>> {
+    probes.iter_mut().map(|p| run_probe(p.as_mut(), ctx)).collect()
+}
+
+/// Humane number formatting for probe logs (full precision stays in the
+/// JSON).
+fn trim_num(v: f64) -> String {
+    if v == 0.0 {
+        "0".into()
+    } else if v.abs() >= 100.0 {
+        format!("{v:.0}")
+    } else if v.abs() >= 1.0 {
+        format!("{v:.2}")
+    } else {
+        format!("{v:.4}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct CountingProbe {
+        preps: usize,
+        calls: usize,
+        posts: usize,
+    }
+
+    impl Probe for CountingProbe {
+        fn spec(&self) -> ProbeSpec {
+            ProbeSpec {
+                name: "counting",
+                unit: "calls",
+                better: Better::Higher,
+                warn_pct: 10.0,
+                fail_pct: 30.0,
+                gate: true,
+                samples: Some(4),
+                warmup: Some(2),
+            }
+        }
+
+        fn prep(&mut self, _ctx: &BenchCtx) -> Result<()> {
+            self.preps += 1;
+            Ok(())
+        }
+
+        fn sample(&mut self, _ctx: &BenchCtx) -> Result<Sample> {
+            self.calls += 1;
+            Ok(Sample {
+                value: self.calls as f64,
+                extra: vec![("last_call".into(), self.calls as f64)],
+            })
+        }
+
+        fn post(&mut self, _ctx: &BenchCtx) -> Result<Vec<(String, f64)>> {
+            self.posts += 1;
+            Ok(vec![("posted".into(), 1.0)])
+        }
+    }
+
+    fn test_ctx() -> BenchCtx {
+        BenchCtx {
+            seed: 7,
+            quick: true,
+            samples: 99, // overridden by the probe's spec
+            warmup: 99,
+            scratch: std::env::temp_dir().join(format!("bear-bench-runner-{}", std::process::id())),
+        }
+    }
+
+    #[test]
+    fn phases_run_in_order_and_warmup_is_discarded() {
+        let ctx = test_ctx();
+        let mut probe = CountingProbe { preps: 0, calls: 0, posts: 0 };
+        let r = run_probe(&mut probe, &ctx).unwrap();
+        assert_eq!(probe.preps, 1);
+        assert_eq!(probe.posts, 1);
+        assert_eq!(probe.calls, 6, "2 warmup + 4 timed");
+        // timed samples are 3,4,5,6 → median (ceil-rank order statistic) 4
+        assert_eq!(r.stats.n, 4);
+        assert_eq!(r.stats.min, 3.0);
+        assert_eq!(r.stats.max, 6.0);
+        assert_eq!(r.value, r.stats.p50);
+        // extra carries the probe's custom stats + the runner's additions
+        let keys: Vec<&str> = r.extra.iter().map(|(k, _)| k.as_str()).collect();
+        assert!(keys.contains(&"last_call"));
+        assert!(keys.contains(&"posted"));
+        assert!(keys.contains(&"rss_peak_kb"));
+        assert!(keys.contains(&"probe_wall_s"));
+    }
+
+    #[test]
+    fn probe_seeds_are_stable_and_distinct() {
+        let ctx = test_ctx();
+        assert_eq!(ctx.probe_seed("a"), ctx.probe_seed("a"));
+        assert_ne!(ctx.probe_seed("a"), ctx.probe_seed("b"));
+        let other = BenchCtx { seed: 8, ..test_ctx() };
+        assert_ne!(ctx.probe_seed("a"), other.probe_seed("a"));
+    }
+
+    struct NanProbe;
+
+    impl Probe for NanProbe {
+        fn spec(&self) -> ProbeSpec {
+            ProbeSpec {
+                name: "nan",
+                unit: "x",
+                better: Better::Lower,
+                warn_pct: 1.0,
+                fail_pct: 2.0,
+                gate: true,
+                samples: Some(1),
+                warmup: Some(0),
+            }
+        }
+
+        fn prep(&mut self, _ctx: &BenchCtx) -> Result<()> {
+            Ok(())
+        }
+
+        fn sample(&mut self, _ctx: &BenchCtx) -> Result<Sample> {
+            Ok(Sample::plain(f64::NAN))
+        }
+    }
+
+    #[test]
+    fn non_finite_samples_are_rejected() {
+        let err = run_probe(&mut NanProbe, &test_ctx()).unwrap_err();
+        assert!(format!("{err:#}").contains("non-finite"));
+    }
+}

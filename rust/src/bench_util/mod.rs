@@ -101,9 +101,84 @@ impl Bench {
     }
 }
 
+/// Summary statistics over a set of f64 samples — the per-probe stat
+/// block `bear bench` records for every probe (and what its regression
+/// gate compares). With a handful of samples the high quantiles collapse
+/// onto the max, which is the conservative (never under-reporting)
+/// behavior the gate wants.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SampleStats {
+    pub n: usize,
+    pub mean: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p99: f64,
+    pub p999: f64,
+    pub max: f64,
+}
+
+impl SampleStats {
+    pub fn zero() -> Self {
+        Self { n: 0, mean: 0.0, min: 0.0, p50: 0.0, p99: 0.0, p999: 0.0, max: 0.0 }
+    }
+}
+
+/// Value at quantile `q` ∈ [0, 1] of an ascending-sorted slice: the
+/// ceil(q·n)-th order statistic (conservative — never interpolates below
+/// an observed value). 0 for an empty slice.
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let rank = (q.clamp(0.0, 1.0) * sorted.len() as f64).ceil() as usize;
+    sorted[rank.max(1).min(sorted.len()) - 1]
+}
+
+/// Summarize raw samples (any order) into [`SampleStats`].
+pub fn summarize(samples: &[f64]) -> SampleStats {
+    if samples.is_empty() {
+        return SampleStats::zero();
+    }
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    SampleStats {
+        n: sorted.len(),
+        mean: sorted.iter().sum::<f64>() / sorted.len() as f64,
+        min: sorted[0],
+        p50: percentile(&sorted, 0.50),
+        p99: percentile(&sorted, 0.99),
+        p999: percentile(&sorted, 0.999),
+        max: sorted[sorted.len() - 1],
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn summarize_orders_and_bounds() {
+        let s = summarize(&[3.0, 1.0, 2.0]);
+        assert_eq!(s.n, 3);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 3.0);
+        assert_eq!(s.p50, 2.0);
+        // with 3 samples the tail quantiles sit on the max
+        assert_eq!(s.p99, 3.0);
+        assert_eq!(s.p999, 3.0);
+        assert!((s.mean - 2.0).abs() < 1e-12);
+        assert_eq!(summarize(&[]), SampleStats::zero());
+    }
+
+    #[test]
+    fn percentile_order_statistics() {
+        let sorted: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&sorted, 0.0), 1.0);
+        assert_eq!(percentile(&sorted, 0.5), 50.0);
+        assert_eq!(percentile(&sorted, 0.99), 99.0);
+        assert_eq!(percentile(&sorted, 1.0), 100.0);
+        assert_eq!(percentile(&[], 0.5), 0.0);
+    }
 
     #[test]
     fn measures_something() {

@@ -46,6 +46,13 @@
 //!   [`api::ApiError`] vocabulary, and [`api::BearClient`] — the one
 //!   pooled HTTP client the balancer, prober, supervisor, loadgen, and
 //!   tests all speak through
+//! - performance: [`bench`] — the `bear bench` harness: a phased
+//!   preflight → prep → warmup → sample → post runner over a probe
+//!   catalog spanning every tier (Count Sketch micro-probes, training
+//!   throughput BEAR vs MISSION, serving QPS/latency, hot-reload swap
+//!   latency, 2-shard fleet scatter-gather p99), emitting the committed
+//!   schema-versioned `BENCH_<pr>.json` trajectory and the
+//!   PASS/WARN/FAIL regression gate (`bear bench --compare`)
 //!
 //! ## Quickstart
 //! ```no_run
@@ -62,6 +69,7 @@
 
 pub mod algo;
 pub mod api;
+pub mod bench;
 pub mod bench_util;
 pub mod cli;
 pub mod coordinator;

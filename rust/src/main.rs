@@ -13,6 +13,8 @@
 //!               (power-of-two-choices, health probes, rolling reload,
 //!               --join for externally-launched multi-host workers)
 //!   loadgen     closed-loop load test against a running server
+//!   bench       performance harness: fixed-seed probes over every tier,
+//!               committed BENCH_<pr>.json trajectory, --compare gate
 //!   help        this text
 //!
 //! Examples:
@@ -454,21 +456,37 @@ fn cmd_fleet(args: &Args) -> Result<()> {
 fn cmd_loadgen(args: &Args) -> Result<()> {
     let addr = args.str_or("addr", "127.0.0.1:8370");
     let defaults = bear::serve::LoadgenConfig::default();
+    // --duration-secs S switches to fixed-time mode: each thread cycles
+    // its pre-materialized body pool until the deadline
+    let duration = match args.get("duration-secs") {
+        Some(s) => Some(std::time::Duration::from_secs_f64(s.parse()?)),
+        None => None,
+    };
     let cfg = bear::serve::LoadgenConfig {
         dataset: parse_dataset(&args.str_or("dataset", "rcv1"))?,
         threads: args.parse_or("threads", defaults.threads)?,
         requests_per_thread: args.parse_or("requests", defaults.requests_per_thread)?,
         queries_per_request: args.parse_or("queries", defaults.queries_per_request)?,
         seed: args.parse_or("seed", defaults.seed)?,
+        duration,
     };
     let max_error_rate: f64 = args.parse_or("max-error-rate", 0.0)?;
     let report = bear::serve::loadgen::run(&addr, &cfg)?;
-    let mut t = Table::new(
-        &format!(
-            "loadgen {} ({} threads × {} reqs × {} queries, closed loop)",
-            addr, report.threads, cfg.requests_per_thread, cfg.queries_per_request
+    let profile = match cfg.duration {
+        Some(d) => format!(
+            "{} threads × {:.1}s × {} queries",
+            report.threads,
+            d.as_secs_f64(),
+            cfg.queries_per_request
         ),
-        &["QPS", "queries/s", "p50", "p99", "p99.9", "mean", "errors", "wall"],
+        None => format!(
+            "{} threads × {} reqs × {} queries",
+            report.threads, cfg.requests_per_thread, cfg.queries_per_request
+        ),
+    };
+    let mut t = Table::new(
+        &format!("loadgen {addr} ({profile}, closed loop)"),
+        &["QPS", "queries/s", "p50", "p99", "p99.9", "max", "mean", "errors", "wall"],
     );
     let us = |v: f64| human_duration(std::time::Duration::from_micros(v as u64));
     t.row(&[
@@ -477,6 +495,7 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         us(report.latency.p50_micros()),
         us(report.latency.p99_micros()),
         us(report.latency.p999_micros()),
+        us(report.latency.max_micros() as f64),
         us(report.latency.mean_micros()),
         report.errors.to_string(),
         human_duration(report.wall),
@@ -492,6 +511,32 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
             report.requests + report.errors,
             max_error_rate
         );
+    }
+    Ok(())
+}
+
+fn cmd_bench(args: &Args) -> Result<()> {
+    let quick = args.flag("quick");
+    let defaults = bear::bench::BenchConfig::new(quick);
+    let only: Vec<String> = match args.get("probes") {
+        Some(list) => {
+            list.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect()
+        }
+        None => Vec::new(),
+    };
+    let cfg = bear::bench::BenchConfig {
+        quick,
+        seed: args.parse_or("seed", defaults.seed)?,
+        out: std::path::PathBuf::from(args.str_or("out", &defaults.out.display().to_string())),
+        compare: args.get("compare").map(std::path::PathBuf::from),
+        only,
+        samples: args.parse_or("samples", defaults.samples)?,
+        warmup: args.parse_or("warmup", defaults.warmup)?,
+        scratch: args.get("scratch").map(std::path::PathBuf::from).unwrap_or(defaults.scratch),
+    };
+    let code = bear::bench::run_bench(&cfg)?;
+    if code != 0 {
+        std::process::exit(code);
     }
     Ok(())
 }
@@ -537,7 +582,15 @@ commands:
               [--log-dir DIR]
   loadgen     closed-loop load test against a running server
               --addr H:P [--dataset D] [--threads N] [--requests N]
-              [--queries Q] [--max-error-rate R]   (exits non-zero above R)
+              [--queries Q] [--duration-secs S]  (fixed-time samples)
+              [--max-error-rate R]   (exits non-zero above R)
+  bench       performance harness: phased probes over every tier, fixed
+              seeds, committed BENCH_<pr>.json trajectory
+              [--quick]       (smoke sizes; full runs refuse debug builds)
+              [--compare BASELINE.json]  (PASS/WARN/FAIL gate; exit 1 on
+                                          FAIL only — new probes never fail)
+              [--out FILE] [--seed S] [--probes a,b,...]
+              [--samples N] [--warmup N] [--scratch DIR]
   help        this text
 
 any command accepts --config FILE with `key = value` defaults.
@@ -556,6 +609,7 @@ fn main() -> Result<()> {
         "serve" => cmd_serve(&args),
         "fleet" => cmd_fleet(&args),
         "loadgen" => cmd_loadgen(&args),
+        "bench" => cmd_bench(&args),
         "" | "help" => {
             print!("{HELP}");
             Ok(())

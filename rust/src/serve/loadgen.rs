@@ -29,13 +29,18 @@ use std::time::{Duration, Instant};
 pub struct LoadgenConfig {
     /// Concurrent closed-loop client threads.
     pub threads: usize,
-    /// Requests each thread sends.
+    /// Requests each thread sends (in duration mode: the size of each
+    /// thread's pre-materialized body pool, replayed in a cycle).
     pub requests_per_thread: usize,
     /// Queries bundled per request body.
     pub queries_per_request: usize,
     /// Which surrogate's query distribution to replay.
     pub dataset: RealData,
     pub seed: u64,
+    /// Fixed-time mode (`--duration-secs`): send for this long instead of
+    /// a fixed request count — what `bear bench` samples, so every timed
+    /// window costs the same wall-clock regardless of machine speed.
+    pub duration: Option<Duration>,
 }
 
 impl Default for LoadgenConfig {
@@ -46,6 +51,7 @@ impl Default for LoadgenConfig {
             queries_per_request: 16,
             dataset: RealData::Rcv1,
             seed: 0x10AD,
+            duration: None,
         }
     }
 }
@@ -138,6 +144,7 @@ pub fn run(addr: &str, cfg: &LoadgenConfig) -> Result<LoadReport> {
     let all_bodies: Vec<Vec<String>> = (0..threads).map(|t| build_bodies(cfg, t)).collect();
 
     let t0 = Instant::now();
+    let deadline = cfg.duration.map(|d| t0 + d);
     let per_thread: Vec<Result<(HistogramSnapshot, u64, u64, u64)>> =
         std::thread::scope(|scope| {
             let handles: Vec<_> = all_bodies
@@ -148,7 +155,17 @@ pub fn run(addr: &str, cfg: &LoadgenConfig) -> Result<LoadReport> {
                         let hist = LatencyHistogram::new();
                         let client = BearClient::with_addrs(targets, client_config());
                         let (mut requests, mut queries, mut errors) = (0u64, 0u64, 0u64);
-                        for body in bodies {
+                        let mut sent = 0usize;
+                        while !bodies.is_empty() {
+                            // count mode: one pass over the pool;
+                            // duration mode: cycle the pool until the deadline
+                            match deadline {
+                                None if sent >= bodies.len() => break,
+                                Some(dl) if Instant::now() >= dl => break,
+                                _ => {}
+                            }
+                            let body = &bodies[sent % bodies.len()];
+                            sent += 1;
                             let nq = body.lines().count() as u64;
                             let t = Instant::now();
                             match client.predict_raw(body) {
@@ -168,7 +185,9 @@ pub fn run(addr: &str, cfg: &LoadgenConfig) -> Result<LoadReport> {
                 .collect();
             handles
                 .into_iter()
-                .map(|h| h.join().unwrap_or_else(|_| Err(anyhow::anyhow!("loadgen thread panicked"))))
+                .map(|h| {
+                    h.join().unwrap_or_else(|_| Err(anyhow::anyhow!("loadgen thread panicked")))
+                })
                 .collect()
         });
     let wall = t0.elapsed();

@@ -1,0 +1,196 @@
+//! Integration coverage for the `bear bench` harness through its public
+//! API: report schema round-trips on disk, the compare gate's
+//! PASS/WARN/FAIL contract (new probes must never fail it), and a real
+//! catalog probe driven through the phased runner.
+
+use bear::bench::{
+    compare_reports, BenchCtx, BenchReport, Better, EnvInfo, Probe, ProbeResult, Verdict,
+};
+use bear::bench::{probes, report, runner};
+use bear::bench_util::SampleStats;
+use std::path::PathBuf;
+
+fn probe_result(name: &str, better: Better, value: f64) -> ProbeResult {
+    ProbeResult {
+        name: name.into(),
+        unit: "u".into(),
+        better,
+        warn_pct: 10.0,
+        fail_pct: 30.0,
+        gate: true,
+        value,
+        stats: SampleStats::zero(),
+        extra: vec![("rss_peak_kb".into(), 1024.0)],
+    }
+}
+
+fn make_report(probes: Vec<ProbeResult>) -> BenchReport {
+    BenchReport {
+        schema_version: report::SCHEMA_VERSION,
+        pr: report::CURRENT_PR,
+        quick: true,
+        seed: 0xBEA6,
+        env: EnvInfo {
+            git_rev: "deadbee".into(),
+            debug_assertions: cfg!(debug_assertions),
+            cpus: 4,
+            os: "linux".into(),
+            arch: "x86_64".into(),
+        },
+        probes,
+    }
+}
+
+fn tmp_path(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("bear-it-bench-{tag}-{}.json", std::process::id()))
+}
+
+#[test]
+fn report_survives_disk_roundtrip_bit_exact() {
+    let path = tmp_path("roundtrip");
+    let r = make_report(vec![
+        probe_result("serving_qps", Better::Higher, 8123.456789012345),
+        probe_result("fleet_scatter_p99", Better::Lower, 950.0625),
+    ]);
+    r.save(&path).unwrap();
+    let back = BenchReport::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(back.schema_version, report::SCHEMA_VERSION);
+    assert_eq!(back.seed, r.seed);
+    assert_eq!(back.env, r.env);
+    assert_eq!(back.probes.len(), 2);
+    for (a, b) in back.probes.iter().zip(&r.probes) {
+        // shortest-round-trip float encoding: committed baselines gate on
+        // the exact measured bits, not a lossy decimal approximation
+        assert_eq!(a.value.to_bits(), b.value.to_bits());
+        assert_eq!(a.extra, b.extra);
+    }
+}
+
+#[test]
+fn missing_baseline_is_a_hard_error() {
+    let path = tmp_path("missing");
+    std::fs::remove_file(&path).ok();
+    let err = BenchReport::load(&path).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("bear-it-bench-missing"), "error should name the path: {msg}");
+}
+
+#[test]
+fn corrupt_baseline_is_a_hard_error() {
+    let path = tmp_path("corrupt");
+    std::fs::write(&path, "not json at all {{{").unwrap();
+    assert!(BenchReport::load(&path).is_err());
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn gate_classifies_warn_vs_fail_boundaries() {
+    let base = make_report(vec![probe_result("qps", Better::Higher, 1000.0)]);
+    for (value, want) in [
+        (1500.0, Verdict::Pass), // improvement, however large
+        (900.0, Verdict::Pass),  // exactly warn_pct
+        (800.0, Verdict::Warn),  // between warn and fail
+        (650.0, Verdict::Fail),  // past fail_pct
+    ] {
+        let cur = make_report(vec![probe_result("qps", Better::Higher, value)]);
+        let cmp = compare_reports(&cur, &base);
+        assert_eq!(cmp.rows[0].verdict, want, "current {value}");
+    }
+}
+
+#[test]
+fn new_probes_never_fail_and_dropped_probes_warn() {
+    let base = make_report(vec![probe_result("retired", Better::Higher, 10.0)]);
+    let cur = make_report(vec![probe_result("unknown_to_baseline", Better::Higher, 1.0)]);
+    let cmp = compare_reports(&cur, &base);
+    assert_eq!(cmp.fails(), 0, "a probe unknown to the baseline must not FAIL the gate");
+    let new_row = cmp.rows.iter().find(|r| r.name == "unknown_to_baseline").unwrap();
+    assert_eq!(new_row.verdict, Verdict::New);
+    let gone_row = cmp.rows.iter().find(|r| r.name == "retired").unwrap();
+    assert_eq!(gone_row.verdict, Verdict::Warn, "silently dropped probes must surface");
+}
+
+#[test]
+fn schema_version_mismatch_gates_nothing() {
+    let mut base = make_report(vec![probe_result("qps", Better::Higher, 1_000_000.0)]);
+    base.schema_version = report::SCHEMA_VERSION + 1;
+    let cur = make_report(vec![probe_result("qps", Better::Higher, 1.0)]);
+    let cmp = compare_reports(&cur, &base);
+    assert!(cmp.incomparable_schema);
+    assert_eq!(cmp.fails(), 0, "a schema bump must never fail CI retroactively");
+    assert!(cmp.rows.iter().all(|r| r.verdict == Verdict::New));
+}
+
+#[test]
+fn warn_only_headline_probes_cap_at_warn() {
+    let mut headline = probe_result("newton_bear_gap", Better::Lower, 0.1);
+    headline.gate = false;
+    let base = make_report(vec![headline.clone()]);
+    headline.value = 100.0; // absurd regression
+    let cur = make_report(vec![headline]);
+    let cmp = compare_reports(&cur, &base);
+    assert_eq!(cmp.fails(), 0);
+    assert_eq!(cmp.rows[0].verdict, Verdict::Warn);
+}
+
+#[test]
+fn catalog_names_are_unique_and_stable() {
+    let names = probes::probe_names();
+    let mut sorted = names.clone();
+    sorted.sort();
+    sorted.dedup();
+    assert_eq!(sorted.len(), names.len(), "duplicate probe names in the catalog");
+    for expected in [
+        "sketch_update",
+        "sketch_query",
+        "train_bear",
+        "train_mission",
+        "serving_qps",
+        "hot_reload_swap",
+        "fleet_scatter_p99",
+        "newton_bear_gap",
+    ] {
+        assert!(names.contains(&expected), "catalog lost probe {expected}");
+    }
+}
+
+#[test]
+fn sketch_probe_runs_through_the_phased_runner() {
+    // Drive one real catalog probe end to end through prep → warmup →
+    // sample → post. The micro-probes are the only ones cheap enough for
+    // the test tier (the serving/fleet probes spawn servers and belong to
+    // `bear bench` itself).
+    let ctx = BenchCtx {
+        seed: 7,
+        quick: true,
+        samples: 2,
+        warmup: 1,
+        scratch: std::env::temp_dir().join(format!("bear-it-bench-scratch-{}", std::process::id())),
+    };
+    let mut probe: Box<dyn Probe> = probes::all_probes()
+        .into_iter()
+        .find(|p| p.spec().name == "sketch_update")
+        .unwrap();
+    let r = runner::run_probe(probe.as_mut(), &ctx).unwrap();
+    assert_eq!(r.name, "sketch_update");
+    assert!(r.value.is_finite() && r.value > 0.0, "updates/s must be positive: {}", r.value);
+    assert!(r.stats.n >= 1);
+    let keys: Vec<&str> = r.extra.iter().map(|(k, _)| k.as_str()).collect();
+    assert!(keys.contains(&"rss_peak_kb"));
+    assert!(keys.contains(&"probe_wall_s"));
+}
+
+#[test]
+fn probe_seeds_derive_stably_from_the_run_seed() {
+    let ctx = BenchCtx {
+        seed: 0xBEA6,
+        quick: true,
+        samples: 1,
+        warmup: 0,
+        scratch: std::env::temp_dir(),
+    };
+    // the single --seed fans out to distinct, reproducible per-probe seeds
+    assert_eq!(ctx.probe_seed("serving_qps"), ctx.probe_seed("serving_qps"));
+    assert_ne!(ctx.probe_seed("serving_qps"), ctx.probe_seed("train_bear"));
+}

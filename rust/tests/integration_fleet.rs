@@ -127,6 +127,7 @@ fn spawn_loadgen(
             queries_per_request: 4,
             dataset: RealData::Rcv1,
             seed: 0xF1EE7,
+            duration: None,
         };
         loadgen::run(&addr, &cfg).expect("loadgen run")
     })

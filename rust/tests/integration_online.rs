@@ -126,6 +126,7 @@ fn hot_reload_is_zero_drop_across_generations() {
         queries_per_request: 8,
         dataset: RealData::Rcv1,
         seed: 77,
+        duration: None,
     };
     let lg_addr = addr.clone();
     let lg = std::thread::spawn(move || loadgen::run(&lg_addr, &lg_cfg).unwrap());

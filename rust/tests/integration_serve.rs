@@ -140,6 +140,7 @@ fn loadgen_reports_throughput_and_latency() {
         queries_per_request: 8,
         dataset: RealData::Rcv1,
         seed: 99,
+        duration: None,
     };
     let report = loadgen::run(&handle.addr().to_string(), &cfg).unwrap();
     assert_eq!(report.errors, 0);
