@@ -5,10 +5,15 @@
 //! - Regression % is measured in the probe's *bad* direction
 //!   (lower throughput, higher latency); improvements are PASS however
 //!   large.
-//! - Thresholds come from the CURRENT report (the code under test owns
-//!   its noise model): regression ≤ `warn_pct` ⇒ PASS, ≤ `fail_pct` ⇒
-//!   WARN, beyond ⇒ FAIL — except warn-only probes (`gate: false`,
-//!   statistical headlines), which cap at WARN.
+//! - Thresholds gate at the STRICTER of baseline and current (and a
+//!   probe is gated if either side says so): regression ≤ `warn_pct` ⇒
+//!   PASS, ≤ `fail_pct` ⇒ WARN, beyond ⇒ FAIL — except warn-only probes
+//!   (`gate: false` on both sides, statistical headlines), which cap at
+//!   WARN. A PR can tighten its noise model immediately, but loosening
+//!   (wider thresholds, or flipping a gated probe warn-only) only takes
+//!   effect once the committed baseline carries the looser values — and
+//!   until then the row is at least WARN with a "thresholds loosened"
+//!   note, so a gate-bypass attempt is always visible in the table.
 //! - A probe with no baseline entry is NEW ⇒ PASS (new probes must never
 //!   fail the gate, or nobody would add probes).
 //! - A baseline probe missing from the current run is GONE ⇒ WARN (a
@@ -101,7 +106,13 @@ impl Comparison {
 
 /// Regression % of `current` vs `baseline` in the probe's bad direction
 /// (positive = worse). A zero baseline can't be a denominator: any
-/// nonzero regression from zero reports as 100%.
+/// nonzero bad-direction delta from zero clamps to a flat 100%
+/// regression (and any improvement to -100%). That means a gated
+/// lower-is-better probe committed at 0.0 FAILs on the smallest nonzero
+/// value while a huge regression also reads as only 100% — acceptable
+/// for the current catalog (every probe has a solidly nonzero
+/// baseline); a counter-style probe (e.g. an error count) should gate
+/// on an absolute delta instead of joining this percentage scheme.
 fn regression_pct(better: Better, baseline: f64, current: f64) -> f64 {
     let delta = match better {
         Better::Higher => baseline - current,
@@ -157,23 +168,43 @@ pub fn compare_reports(current: &BenchReport, baseline: &BenchReport) -> Compari
             },
             Some(b) => {
                 let pct = regression_pct(p.better, b.value, p.value);
-                let verdict = if pct <= p.warn_pct {
+                // gate at the stricter of baseline and current: looser
+                // thresholds in the current report (a one-line gate
+                // bypass otherwise) don't apply until the committed
+                // baseline carries them, and are surfaced below
+                let warn_pct = p.warn_pct.min(b.warn_pct);
+                let fail_pct = p.fail_pct.min(b.fail_pct);
+                let gated = p.gate || b.gate;
+                let loosened =
+                    p.warn_pct > b.warn_pct || p.fail_pct > b.fail_pct || (b.gate && !p.gate);
+                let base_verdict = if pct <= warn_pct {
                     Verdict::Pass
-                } else if pct <= p.fail_pct || !p.gate {
+                } else if pct <= fail_pct || !gated {
                     Verdict::Warn
                 } else {
                     Verdict::Fail
                 };
-                let note = match verdict {
+                let base_note: String = match base_verdict {
                     Verdict::Pass if pct < 0.0 => "improved".into(),
                     Verdict::Pass => "within noise".into(),
-                    Verdict::Warn if !p.gate && pct > p.fail_pct => {
+                    Verdict::Warn if !gated && pct > fail_pct => {
                         "headline probe (warn-only)".into()
                     }
-                    Verdict::Warn => format!("> warn {}%", p.warn_pct),
-                    Verdict::Fail => format!("> fail {}%", p.fail_pct),
+                    Verdict::Warn => format!("> warn {warn_pct}%"),
+                    Verdict::Fail => format!("> fail {fail_pct}%"),
                     Verdict::New => unreachable!(),
                 };
+                let mut verdict = base_verdict;
+                let mut note = base_note;
+                if loosened {
+                    // threshold loosening is never silent: at least WARN
+                    verdict = base_verdict.max(Verdict::Warn);
+                    note = if base_verdict < Verdict::Warn {
+                        "thresholds loosened vs baseline".into()
+                    } else {
+                        format!("{note}; thresholds loosened vs baseline")
+                    };
+                }
                 ProbeComparison {
                     name: p.name.clone(),
                     unit: p.unit.clone(),
@@ -295,6 +326,40 @@ mod tests {
         let cmp = compare_reports(&cur, &base);
         assert_eq!(verdict_of(&cmp, "gap"), Verdict::Warn);
         assert_eq!(cmp.fails(), 0);
+    }
+
+    #[test]
+    fn loosened_thresholds_do_not_bypass_gate() {
+        let base = report(vec![probe("qps", Better::Higher, 1000.0)]);
+        // a PR widens its own thresholds and flips the probe warn-only,
+        // trying to sneak a 50% regression through — the committed
+        // baseline's thresholds (10/30, gated) still apply
+        let mut loose = probe("qps", Better::Higher, 500.0);
+        loose.warn_pct = 60.0;
+        loose.fail_pct = 90.0;
+        loose.gate = false;
+        let cmp = compare_reports(&report(vec![loose]), &base);
+        assert_eq!(verdict_of(&cmp, "qps"), Verdict::Fail);
+    }
+
+    #[test]
+    fn loosened_thresholds_surface_as_warn_even_without_regression() {
+        let base = report(vec![probe("qps", Better::Higher, 1000.0)]);
+        let mut quiet = probe("qps", Better::Higher, 1000.0); // no delta
+        quiet.fail_pct = 90.0; // but thresholds quietly widened
+        let cmp = compare_reports(&report(vec![quiet]), &base);
+        let row = cmp.rows.iter().find(|r| r.name == "qps").expect("row");
+        assert_eq!(row.verdict, Verdict::Warn);
+        assert!(row.note.contains("loosened"), "note: {}", row.note);
+    }
+
+    #[test]
+    fn tightened_thresholds_apply_immediately() {
+        let base = report(vec![probe("qps", Better::Higher, 1000.0)]);
+        let mut strict = probe("qps", Better::Higher, 900.0); // 10% regression
+        strict.warn_pct = 5.0; // tightened in the current report
+        let cmp = compare_reports(&report(vec![strict]), &base);
+        assert_eq!(verdict_of(&cmp, "qps"), Verdict::Warn);
     }
 
     #[test]

@@ -56,6 +56,9 @@ pub struct BenchConfig {
     /// Discarded warmup samples per probe.
     pub warmup: usize,
     /// Scratch root for probe fixtures (publication dirs, worker logs).
+    /// The run works inside a unique `bear-bench-<pid>` subdirectory of
+    /// this root and removes only that subdirectory on success — a
+    /// user-supplied `--scratch DIR` is never itself deleted.
     pub scratch: PathBuf,
 }
 
@@ -69,7 +72,7 @@ impl BenchConfig {
             only: Vec::new(),
             samples: if quick { 3 } else { 5 },
             warmup: if quick { 1 } else { 2 },
-            scratch: std::env::temp_dir().join(format!("bear-bench-{}", std::process::id())),
+            scratch: std::env::temp_dir(),
         }
     }
 }
@@ -127,16 +130,21 @@ pub fn run_bench(cfg: &BenchConfig) -> Result<i32> {
         selected.retain(|p| cfg.only.iter().any(|n| n == p.spec().name));
     }
 
+    // fixtures live in a unique per-run subdir of the scratch root, so
+    // cleanup below can never touch pre-existing contents of a
+    // user-supplied `--scratch DIR`
+    let run_scratch = cfg.scratch.join(format!("bear-bench-{}", std::process::id()));
     let ctx = BenchCtx {
         seed: cfg.seed,
         quick: cfg.quick,
         samples: cfg.samples,
         warmup: cfg.warmup,
-        scratch: cfg.scratch.clone(),
+        scratch: run_scratch,
     };
     std::fs::create_dir_all(&ctx.scratch)?;
     let results = runner::run_probes(&mut selected, &ctx)?;
-    // best-effort cleanup: worker logs are kept only on failure above
+    // best-effort cleanup of the per-run subdir only: worker logs are
+    // kept on failure above
     std::fs::remove_dir_all(&ctx.scratch).ok();
 
     let fresh = BenchReport {

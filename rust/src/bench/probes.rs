@@ -16,8 +16,9 @@
 //! baseline) recorded as a trajectory instead of a one-off print.
 //! `newton_bear_gap` is warn-only (`gate: false`): it carries the
 //! statistical closeness claim the quarantined
-//! `newton_tracks_bear_closely` test used to assert, as a PASS/WARN
-//! headline — seed noise must never fail CI.
+//! `newton_tracks_bear_closely` test used to assert (now the
+//! determinism-only `newton_bear_recipe_is_deterministic`), as a
+//! PASS/WARN headline — seed noise must never fail CI.
 //!
 //! Every fixture seeds from [`BenchCtx::probe_seed`], so one `--seed`
 //! makes back-to-back runs workload-identical.
@@ -483,9 +484,10 @@ impl Probe for FleetScatterProbe {
 // Newton-vs-BEAR closeness headline (warn-only)
 
 /// Probability of exact support recovery over `trials` Fig.-1A-style
-/// simulations — the statistical half of the re-enabled
+/// simulations — the statistical half of the old quarantined
 /// `newton_tracks_bear_closely` test (the deterministic invariants stay
-/// in `tests/integration_algorithms.rs`).
+/// in `tests/integration_algorithms.rs` as
+/// `newton_bear_recipe_is_deterministic`).
 pub fn simulation_success_rate(
     algo: AlgoKind,
     p: usize,

@@ -135,6 +135,22 @@ fn warn_only_headline_probes_cap_at_warn() {
 }
 
 #[test]
+fn loosening_thresholds_in_the_current_report_cannot_bypass_the_gate() {
+    // the gate runs on the stricter of baseline and current thresholds:
+    // a PR that widens its own tolerances (or flips a probe warn-only)
+    // is still judged by the committed baseline's noise model, and the
+    // loosening itself is surfaced in the row note
+    let base = make_report(vec![probe_result("qps", Better::Higher, 1000.0)]);
+    let mut loose = probe_result("qps", Better::Higher, 500.0); // 50% regression
+    loose.warn_pct = 80.0;
+    loose.fail_pct = 95.0;
+    loose.gate = false;
+    let cmp = compare_reports(&make_report(vec![loose]), &base);
+    assert_eq!(cmp.rows[0].verdict, Verdict::Fail, "baseline thresholds must still gate");
+    assert!(cmp.rows[0].note.contains("loosened"), "note: {}", cmp.rows[0].note);
+}
+
+#[test]
 fn catalog_names_are_unique_and_stable() {
     let names = probes::probe_names();
     let mut sorted = names.clone();
