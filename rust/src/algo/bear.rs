@@ -68,6 +68,9 @@ pub struct Bear {
     t: u64,
     last_grad_norm: f64,
     last_loss: f64,
+    last_step_eta: f64,
+    last_step_norm: f64,
+    last_hh_churn: f64,
     // reusable scratch (hot loop: no per-iteration allocation)
     beta_scratch: Vec<f32>,
     beta_scratch2: Vec<f32>,
@@ -91,6 +94,9 @@ impl Bear {
             t: 0,
             last_grad_norm: f64::INFINITY,
             last_loss: f64::INFINITY,
+            last_step_eta: 0.0,
+            last_step_norm: 0.0,
+            last_hh_churn: 0.0,
             beta_scratch: Vec::new(),
             beta_scratch2: Vec::new(),
         }
@@ -128,6 +134,33 @@ impl Bear {
 impl crate::algo::SketchedSelector for Bear {
     fn sketched_state(&self) -> &SketchedState {
         &self.state
+    }
+
+    fn telemetry(&self) -> Option<crate::obs::TelemetrySnapshot> {
+        // Collision mass: a clean sketch holding exactly the top-k
+        // weights has energy ≈ rows · Σ w² (each feature lands in one
+        // counter per row); whatever energy that doesn't explain is
+        // collision/tail noise — MISSION's memory–accuracy failure mode.
+        let energy = self.state.cs.energy();
+        let topk_energy: f64 =
+            self.state.heap.iter().map(|(_, w)| (w as f64) * (w as f64)).sum();
+        let explained = self.state.cs.rows() as f64 * topk_energy;
+        let collision_rate =
+            if energy > 0.0 { (1.0 - explained / energy).clamp(0.0, 1.0) } else { 0.0 };
+        let (curvature_min, curvature_max, pairs) =
+            self.lbfgs.curvature_stats().unwrap_or((0.0, 0.0, 0));
+        Some(crate::obs::TelemetrySnapshot {
+            loss: self.last_loss,
+            grad_norm: self.last_grad_norm,
+            step_eta: self.last_step_eta,
+            step_norm: self.last_step_norm,
+            collision_rate,
+            hh_churn: self.last_hh_churn,
+            curvature_min,
+            curvature_max,
+            curvature_pairs: pairs as u64,
+            iterations: self.t,
+        })
     }
 }
 
@@ -174,6 +207,8 @@ impl FeatureSelector for Bear {
 
         // (6) sketch update β^s ← β^s − η_t ẑ^s
         let eta = self.cfg.step.at(self.t);
+        self.last_step_eta = eta;
+        self.last_step_norm = z_hat.l2_norm();
         self.state.apply_step(&z_hat, eta);
 
         // (7) second query on the same minibatch
@@ -209,8 +244,20 @@ impl FeatureSelector for Bear {
         }
         self.lbfgs.push(s_step, SparseVec::from_pairs(r_pairs));
 
-        // (10) heap refresh on the touched features
+        // (10) heap refresh on the touched features, bracketed by a
+        // support snapshot: heavy-hitter churn = 1 − Jaccard(before,
+        // after), the support-stability telemetry
+        let before: std::collections::HashSet<u64> =
+            self.state.heap.iter().map(|(f, _)| f).collect();
         self.state.refresh_heap(&active);
+        let after: std::collections::HashSet<u64> =
+            self.state.heap.iter().map(|(f, _)| f).collect();
+        let union = before.union(&after).count();
+        self.last_hh_churn = if union == 0 {
+            0.0
+        } else {
+            1.0 - before.intersection(&after).count() as f64 / union as f64
+        };
 
         self.t += 1;
         self.beta_scratch = beta;
@@ -349,6 +396,34 @@ mod tests {
             bear_huge.memory_report().model_bytes
         );
         assert_eq!(bear_huge.memory_report().model_bytes, 512 * 4);
+    }
+
+    #[test]
+    fn telemetry_is_sane_after_training() {
+        use crate::algo::SketchedSelector;
+        let mut gen = GaussianLinear::new(100, 4, 17);
+        let (mut data, _) = gen.dataset(200);
+        let cfg = BearConfig {
+            sketch_cells: 200,
+            sketch_rows: 3,
+            top_k: 4,
+            step: StepSize::Constant(0.05),
+            loss: LossKind::Mse,
+            ..Default::default()
+        };
+        let mut bear = Bear::new(100, cfg);
+        bear.fit_source(&mut data, 16, 3);
+        let t = bear.telemetry().expect("BEAR instruments itself");
+        assert!(t.loss.is_finite() && t.loss >= 0.0, "{t:?}");
+        assert!(t.grad_norm.is_finite() && t.grad_norm >= 0.0, "{t:?}");
+        assert!(t.step_eta > 0.0, "{t:?}");
+        assert!(t.step_norm >= 0.0 && t.step_norm.is_finite(), "{t:?}");
+        assert!((0.0..=1.0).contains(&t.collision_rate), "{t:?}");
+        assert!((0.0..=1.0).contains(&t.hh_churn), "{t:?}");
+        assert!(t.curvature_pairs > 0, "{t:?}");
+        assert!(t.curvature_min > 0.0, "positive curvature guard: {t:?}");
+        assert!(t.curvature_max >= t.curvature_min, "{t:?}");
+        assert_eq!(t.iterations, bear.iterations());
     }
 
     #[test]

@@ -115,6 +115,14 @@ pub trait FeatureSelector {
 pub trait SketchedSelector: FeatureSelector {
     /// The Count Sketch + top-k heap the selector trains.
     fn sketched_state(&self) -> &sketched::SketchedState;
+
+    /// Training-health telemetry published with each generation
+    /// (collision rate, heavy-hitter churn, curvature conditioning).
+    /// `None` for selectors that don't instrument themselves — the
+    /// publisher then writes a MANIFEST without `train_*` keys.
+    fn telemetry(&self) -> Option<crate::obs::TelemetrySnapshot> {
+        None
+    }
 }
 
 /// Restrict a sparse vector to the features of an active set

@@ -28,11 +28,27 @@ use crate::api::types::{
     ReloadResponse, ShardWeightsRequest, Statz, TopkRequest, TopkResponse,
 };
 use crate::api::{ApiError, Route};
+use crate::obs::trace::TraceContext;
 use crate::serve::http;
-use std::io::BufReader;
+use std::io::{BufRead, BufReader};
 use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
 use std::sync::Mutex;
-use std::time::Duration;
+use std::time::{Duration, Instant};
+
+/// Per-stage wall-clock breakdown of one exchange — where a slow
+/// request spent its time (the load generator prints the aggregate).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StageTimings {
+    /// TCP connect. `0` when a pooled keep-alive connection was reused.
+    pub connect_us: u64,
+    /// Writing request line + headers + body (flush included).
+    pub send_us: u64,
+    /// Send-complete → first response byte readable: server think time
+    /// plus one network round trip.
+    pub first_byte_us: u64,
+    /// The whole exchange, connect and body read included.
+    pub total_us: u64,
+}
 
 /// Client tunables.
 #[derive(Clone, Copy, Debug)]
@@ -152,8 +168,48 @@ impl BearClient {
         target: &str,
         body: &[u8],
         keep: bool,
+        trace: Option<&TraceContext>,
     ) -> Result<http::Response, ApiError> {
-        http::write_request(&mut conn.writer, method, target, body, keep)?;
+        http::write_request_traced(&mut conn.writer, method, target, body, keep, trace)?;
+        match http::read_response(&mut conn.reader) {
+            Ok(Some(resp)) => Ok(resp),
+            Ok(None) => Err(ApiError::Transport(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                "peer closed before status line",
+            ))),
+            Err(http::ReadError::Io(e)) => Err(ApiError::Transport(e)),
+            Err(e) => Err(ApiError::Malformed(e.to_string())),
+        }
+    }
+
+    /// [`Self::exchange_on`] with per-stage clocks filled into `t`
+    /// (send, then a `fill_buf` wait for the first response byte —
+    /// `read_response` consumes from the same buffer, so no byte is
+    /// read twice).
+    fn exchange_on_timed(
+        conn: &mut Conn,
+        method: &str,
+        target: &str,
+        body: &[u8],
+        keep: bool,
+        trace: Option<&TraceContext>,
+        t: &mut StageTimings,
+    ) -> Result<http::Response, ApiError> {
+        let send_start = Instant::now();
+        http::write_request_traced(&mut conn.writer, method, target, body, keep, trace)?;
+        t.send_us = send_start.elapsed().as_micros() as u64;
+        let wait_start = Instant::now();
+        match conn.reader.fill_buf() {
+            Ok(buf) if buf.is_empty() => {
+                return Err(ApiError::Transport(std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    "peer closed before status line",
+                )))
+            }
+            Ok(_) => {}
+            Err(e) => return Err(ApiError::Transport(e)),
+        }
+        t.first_byte_us = wait_start.elapsed().as_micros() as u64;
         match http::read_response(&mut conn.reader) {
             Ok(Some(resp)) => Ok(resp),
             Ok(None) => Err(ApiError::Transport(std::io::Error::new(
@@ -177,12 +233,26 @@ impl BearClient {
         target: &str,
         body: &[u8],
     ) -> Result<http::Response, ApiError> {
+        self.exchange_traced(method, target, body, None)
+    }
+
+    /// [`Self::exchange`] carrying a trace context in the
+    /// `x-bear-trace` header (`None` ⇒ byte-identical untraced wire).
+    /// The balancer's scatter fan-out sends each shard call through
+    /// here with a child span of the request's trace.
+    pub fn exchange_traced(
+        &self,
+        method: &str,
+        target: &str,
+        body: &[u8],
+        trace: Option<&TraceContext>,
+    ) -> Result<http::Response, ApiError> {
         if self.cfg.pool == 0 {
             let mut conn = self.dial()?;
-            return Self::exchange_on(&mut conn, method, target, body, false);
+            return Self::exchange_on(&mut conn, method, target, body, false, trace);
         }
         if let Some(mut conn) = self.pool_pop() {
-            if let Ok(resp) = Self::exchange_on(&mut conn, method, target, body, true) {
+            if let Ok(resp) = Self::exchange_on(&mut conn, method, target, body, true, trace) {
                 if resp.keep_alive {
                     self.pool_push(conn);
                 }
@@ -192,11 +262,51 @@ impl BearClient {
             // keep-alives); the fresh connect below is authoritative
         }
         let mut conn = self.dial()?;
-        let resp = Self::exchange_on(&mut conn, method, target, body, true)?;
+        let resp = Self::exchange_on(&mut conn, method, target, body, true, trace)?;
         if resp.keep_alive {
             self.pool_push(conn);
         }
         Ok(resp)
+    }
+
+    /// [`Self::exchange_traced`] with a per-stage wall-clock breakdown —
+    /// the load generator's instrumented path. Pooling behaves exactly
+    /// like [`Self::exchange`]; a reused pooled connection reports
+    /// `connect_us == 0`.
+    pub fn exchange_timed(
+        &self,
+        method: &str,
+        target: &str,
+        body: &[u8],
+        trace: Option<&TraceContext>,
+    ) -> Result<(http::Response, StageTimings), ApiError> {
+        let start = Instant::now();
+        let mut t = StageTimings::default();
+        if self.cfg.pool > 0 {
+            if let Some(mut conn) = self.pool_pop() {
+                if let Ok(resp) =
+                    Self::exchange_on_timed(&mut conn, method, target, body, true, trace, &mut t)
+                {
+                    if resp.keep_alive {
+                        self.pool_push(conn);
+                    }
+                    t.total_us = start.elapsed().as_micros() as u64;
+                    return Ok((resp, t));
+                }
+                // stale pooled connection: reset the clocks, retry fresh
+                t = StageTimings::default();
+            }
+        }
+        let keep = self.cfg.pool > 0;
+        let dial_start = Instant::now();
+        let mut conn = self.dial()?;
+        t.connect_us = dial_start.elapsed().as_micros() as u64;
+        let resp = Self::exchange_on_timed(&mut conn, method, target, body, keep, trace, &mut t)?;
+        if keep && resp.keep_alive {
+            self.pool_push(conn);
+        }
+        t.total_us = start.elapsed().as_micros() as u64;
+        Ok((resp, t))
     }
 
     /// Raw exchange returning `(status, body-as-text)` — the escape
@@ -265,6 +375,29 @@ impl BearClient {
     /// the server runs without `--watch-manifest`.
     pub fn admin_reload(&self) -> Result<ReloadResponse, ApiError> {
         ReloadResponse::parse(&self.call(Route::AdminReload, None, b"")?)
+    }
+
+    /// `POST /v1/predict` carrying an optional trace context, with the
+    /// per-stage timing breakdown — what `bear loadgen` drives.
+    pub fn predict_timed(
+        &self,
+        body: &str,
+        trace: Option<&TraceContext>,
+    ) -> Result<(String, StageTimings), ApiError> {
+        let route = Route::Predict;
+        let (resp, t) =
+            self.exchange_timed(route.method(), route.v1_path(), body.as_bytes(), trace)?;
+        Ok((Self::expect_200(resp)?, t))
+    }
+
+    /// `GET /v1/metricz` — the Prometheus-style text exposition.
+    pub fn metricz_raw(&self) -> Result<String, ApiError> {
+        self.call(Route::Metricz, None, b"")
+    }
+
+    /// `GET /v1/tracez?min_us=N&limit=K` — the flight-recorder dump.
+    pub fn tracez_raw(&self, min_us: u64, limit: usize) -> Result<String, ApiError> {
+        self.call(Route::Tracez, Some(&format!("min_us={min_us}&limit={limit}")), b"")
     }
 }
 

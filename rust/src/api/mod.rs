@@ -31,7 +31,10 @@
 pub mod client;
 pub mod types;
 
-pub use client::{BearClient, ClientConfig};
+pub use client::{BearClient, ClientConfig, StageTimings};
+// The trace context is part of the wire protocol (`x-bear-trace`
+// header), so the API layer re-exports it alongside the schemas.
+pub use crate::obs::trace::{TraceContext, TRACE_HEADER};
 pub use types::{
     format_query, parse_gen, parse_query_line, PredictRequest, PredictResponse, PredictShape,
     ReloadResponse, ShardWeightsRequest, Statz, TopkRequest, TopkResponse, WeightsHeader,
@@ -58,24 +61,33 @@ pub enum Route {
     Statz,
     /// `POST /v1/admin/reload` — force a manifest check + hot swap.
     AdminReload,
+    /// `GET /v1/metricz` — Prometheus-style text exposition of the same
+    /// atomics `/statz` reads (v1-only: post-versioning endpoints get no
+    /// legacy alias).
+    Metricz,
+    /// `GET /v1/tracez?min_us=N&limit=K` — flight-recorder dump of the
+    /// slowest recent request spans (v1-only).
+    Tracez,
 }
 
 impl Route {
     /// Every route, in documentation order.
-    pub const ALL: [Route; 6] = [
+    pub const ALL: [Route; 8] = [
         Route::Predict,
         Route::Topk,
         Route::ShardWeights,
         Route::Healthz,
         Route::Statz,
         Route::AdminReload,
+        Route::Metricz,
+        Route::Tracez,
     ];
 
     /// The HTTP method this route answers.
     pub fn method(self) -> &'static str {
         match self {
             Route::Predict | Route::ShardWeights | Route::AdminReload => "POST",
-            Route::Topk | Route::Healthz | Route::Statz => "GET",
+            Route::Topk | Route::Healthz | Route::Statz | Route::Metricz | Route::Tracez => "GET",
         }
     }
 
@@ -88,18 +100,23 @@ impl Route {
             Route::Healthz => "/v1/healthz",
             Route::Statz => "/v1/statz",
             Route::AdminReload => "/v1/admin/reload",
+            Route::Metricz => "/v1/metricz",
+            Route::Tracez => "/v1/tracez",
         }
     }
 
     /// Pre-versioning alias, served byte-for-byte like the `/v1` path.
-    pub fn legacy_path(self) -> &'static str {
+    /// `None` for endpoints born after versioning (the module policy:
+    /// new endpoints get only a `/v1` path).
+    pub fn legacy_path(self) -> Option<&'static str> {
         match self {
-            Route::Predict => "/predict",
-            Route::Topk => "/topk",
-            Route::ShardWeights => "/shard/weights",
-            Route::Healthz => "/healthz",
-            Route::Statz => "/statz",
-            Route::AdminReload => "/admin/reload",
+            Route::Predict => Some("/predict"),
+            Route::Topk => Some("/topk"),
+            Route::ShardWeights => Some("/shard/weights"),
+            Route::Healthz => Some("/healthz"),
+            Route::Statz => Some("/statz"),
+            Route::AdminReload => Some("/admin/reload"),
+            Route::Metricz | Route::Tracez => None,
         }
     }
 
@@ -110,7 +127,7 @@ impl Route {
         Route::ALL
             .iter()
             .copied()
-            .find(|r| r.method() == method && (path == r.v1_path() || path == r.legacy_path()))
+            .find(|r| r.method() == method && (path == r.v1_path() || r.legacy_path() == Some(path)))
     }
 
     /// `path?query` request target on the canonical `/v1` path.
@@ -231,16 +248,39 @@ mod tests {
     fn every_route_resolves_on_both_paths_with_its_method_only() {
         for r in Route::ALL {
             assert_eq!(Route::resolve(r.method(), r.v1_path()), Some(r));
-            assert_eq!(Route::resolve(r.method(), r.legacy_path()), Some(r));
             // the wrong method does not resolve (server answers 404)
             let wrong = if r.method() == "GET" { "POST" } else { "GET" };
             assert_eq!(Route::resolve(wrong, r.v1_path()), None);
-            assert_eq!(Route::resolve(wrong, r.legacy_path()), None);
-            // v1 path is the legacy path under the version prefix
-            assert_eq!(r.v1_path(), format!("/{API_VERSION}{}", r.legacy_path()));
+            match r.legacy_path() {
+                Some(legacy) => {
+                    assert_eq!(Route::resolve(r.method(), legacy), Some(r));
+                    assert_eq!(Route::resolve(wrong, legacy), None);
+                    // v1 path is the legacy path under the version prefix
+                    assert_eq!(r.v1_path(), format!("/{API_VERSION}{legacy}"));
+                }
+                None => {
+                    // v1-only endpoints must NOT answer on a stripped
+                    // pre-versioning path (the policy: no new legacy
+                    // aliases after versioning)
+                    let stripped = r.v1_path().trim_start_matches("/v1");
+                    assert_eq!(Route::resolve(r.method(), stripped), None, "{r:?}");
+                }
+            }
         }
         assert_eq!(Route::resolve("GET", "/nope"), None);
         assert_eq!(Route::resolve("GET", "/v2/predict"), None);
+    }
+
+    #[test]
+    fn observability_routes_are_get_v1_only() {
+        for r in [Route::Metricz, Route::Tracez] {
+            assert_eq!(r.method(), "GET");
+            assert_eq!(r.legacy_path(), None);
+        }
+        assert_eq!(Route::resolve("GET", "/v1/metricz"), Some(Route::Metricz));
+        assert_eq!(Route::resolve("GET", "/v1/tracez"), Some(Route::Tracez));
+        assert_eq!(Route::resolve("GET", "/metricz"), None);
+        assert_eq!(Route::resolve("GET", "/tracez"), None);
     }
 
     #[test]

@@ -7,18 +7,23 @@
 //! | `train_bear`       | BEAR minibatch training throughput         | ex/s      | higher |
 //! | `train_mission`    | MISSION-style first-order baseline ditto   | ex/s      | higher |
 //! | `serving_qps`      | single server closed-loop loadgen QPS      | req/s     | higher |
+//! | `obs_overhead`     | QPS cost of tracing+metrics vs disabled    | % qps     | lower  |
 //! | `hot_reload_swap`  | publish→verify→swap latency of a reload    | µs        | lower  |
 //! | `fleet_scatter_p99`| 2-shard scatter-gather request p99         | µs        | lower  |
 //! | `newton_bear_gap`  | BEAR-vs-exact-Newton success gap (Fig. 1A) | Δ success | lower  |
+//! | `bear_mission_edge`| BEAR-over-MISSION success edge at CF=2.4   | Δ success | higher |
 //!
 //! `train_bear` vs `train_mission` is the paper's Table 4 runtime claim
 //! (sketched second-order cost per iteration vs the first-order MISSION
 //! baseline) recorded as a trajectory instead of a one-off print.
-//! `newton_bear_gap` is warn-only (`gate: false`): it carries the
-//! statistical closeness claim the quarantined
-//! `newton_tracks_bear_closely` test used to assert (now the
-//! determinism-only `newton_bear_recipe_is_deterministic`), as a
-//! PASS/WARN headline — seed noise must never fail CI.
+//! `newton_bear_gap`, `bear_mission_edge` and `obs_overhead` are
+//! warn-only (`gate: false`): the first two carry the statistical claims
+//! their quarantined tests used to assert (`newton_tracks_bear_closely` →
+//! `newton_bear_recipe_is_deterministic`,
+//! `headline_bear_beats_mission_under_compression` →
+//! `bear_mission_recipe_is_deterministic`) as PASS/WARN headlines — seed
+//! noise must never fail CI — and `obs_overhead` is the relative delta of
+//! two noisy loadgen runs, held to a printed 5% budget the same way.
 //!
 //! Every fixture seeds from [`BenchCtx::probe_seed`], so one `--seed`
 //! makes back-to-back runs workload-identical.
@@ -54,9 +59,11 @@ pub fn all_probes() -> Vec<Box<dyn Probe>> {
         Box::new(TrainProbe::new(AlgoKind::Bear)),
         Box::new(TrainProbe::new(AlgoKind::Mission)),
         Box::new(ServingProbe::default()),
+        Box::new(ObsOverheadProbe::default()),
         Box::new(HotReloadProbe::default()),
         Box::new(FleetScatterProbe::default()),
         Box::new(NewtonGapProbe::default()),
+        Box::new(BearMissionEdgeProbe::default()),
     ]
 }
 
@@ -318,6 +325,89 @@ impl Probe for ServingProbe {
 }
 
 // ---------------------------------------------------------------------------
+// Observability overhead (tracing + metrics on vs compiled-out recorder)
+
+/// Measures what the obs layer costs on the serving hot path: two
+/// identical servers over the same model, one with the default
+/// [`FlightRecorder`](crate::obs::FlightRecorder) capacity (every traced
+/// loadgen request records a span) and one with `trace_capacity: 0` (the
+/// recorder's branch-and-return no-op), loadgen'd back to back. The value
+/// is the relative QPS loss in percent — warn-only, PASS under the 5%
+/// budget; machine noise can push it negative (tracing "faster"), which
+/// is also a PASS.
+#[derive(Default)]
+struct ObsOverheadProbe {
+    traced: Option<ServerHandle>,
+    untraced: Option<ServerHandle>,
+}
+
+impl Probe for ObsOverheadProbe {
+    fn spec(&self) -> ProbeSpec {
+        ProbeSpec {
+            name: "obs_overhead",
+            unit: "% qps",
+            better: Better::Lower,
+            // a relative delta of two noisy loadgen runs: headline-only,
+            // never gates (the 5% budget is the printed PASS/WARN)
+            warn_pct: 0.0,
+            fail_pct: 1e9,
+            gate: false,
+            samples: Some(2),
+            warmup: Some(1),
+        }
+    }
+
+    fn prep(&mut self, ctx: &BenchCtx) -> Result<()> {
+        let trained = train_serving_fixture(ctx.quick, ctx.probe_seed("obs_overhead"));
+        let model =
+            Arc::new(ServableModel::from_sketched(trained.state(), LossKind::Logistic, 0.0));
+        self.traced =
+            Some(serve(model.clone(), ServerConfig { workers: 4, ..Default::default() })?);
+        self.untraced =
+            Some(serve(model, ServerConfig { workers: 4, trace_capacity: 0, ..Default::default() })?);
+        Ok(())
+    }
+
+    fn sample(&mut self, ctx: &BenchCtx) -> Result<Sample> {
+        let window = if ctx.quick { Duration::from_millis(300) } else { Duration::from_secs(1) };
+        let cfg = loadgen_cfg(ctx, "obs_overhead", 4, window);
+        // untraced first, then traced, so cache warm-up bias (if any)
+        // favors finding overhead rather than hiding it
+        let off = loadgen::run(&self.untraced.as_ref().expect("prep ran").addr().to_string(), &cfg)?;
+        let on = loadgen::run(&self.traced.as_ref().expect("prep ran").addr().to_string(), &cfg)?;
+        if off.errors + on.errors > 0 {
+            bail!("obs_overhead saw {} loadgen errors (zero-drop contract)", off.errors + on.errors);
+        }
+        let overhead_pct = (off.qps() - on.qps()) / off.qps().max(1e-9) * 100.0;
+        let pass = overhead_pct < 5.0;
+        eprintln!(
+            "[bench] headline: tracing on {:.0} vs off {:.0} req/s → overhead {overhead_pct:+.1}% → {}",
+            on.qps(),
+            off.qps(),
+            if pass { "PASS (< 5% budget)" } else { "WARN (obs layer too hot?)" }
+        );
+        Ok(Sample {
+            value: overhead_pct,
+            extra: vec![
+                ("qps_traced".into(), on.qps()),
+                ("qps_untraced".into(), off.qps()),
+                ("headline_pass".into(), if pass { 1.0 } else { 0.0 }),
+            ],
+        })
+    }
+
+    fn post(&mut self, _ctx: &BenchCtx) -> Result<Vec<(String, f64)>> {
+        if let Some(h) = self.traced.take() {
+            h.shutdown();
+        }
+        if let Some(h) = self.untraced.take() {
+            h.shutdown();
+        }
+        Ok(Vec::new())
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Hot-reload swap latency (publish → verify → epoch swap)
 
 #[derive(Default)]
@@ -568,6 +658,65 @@ impl Probe for NewtonGapProbe {
             extra: vec![
                 ("bear_success".into(), bear),
                 ("newton_success".into(), newton),
+                ("headline_pass".into(), if pass { 1.0 } else { 0.0 }),
+            ],
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// BEAR-vs-MISSION compression headline (warn-only)
+
+/// The statistical half of the quarantined
+/// `headline_bear_beats_mission_under_compression` test (now the
+/// determinism-only `bear_mission_recipe_is_deterministic` in
+/// `tests/integration_algorithms.rs`): Fig. 1A's second-order advantage
+/// at CF≈2.4, miniature scale. The value is BEAR's success-probability
+/// edge over MISSION — PASS on the old test's dominance criterion, WARN
+/// on seed noise; never a CI failure.
+#[derive(Default)]
+struct BearMissionEdgeProbe;
+
+impl Probe for BearMissionEdgeProbe {
+    fn spec(&self) -> ProbeSpec {
+        ProbeSpec {
+            name: "bear_mission_edge",
+            unit: "dP(success)",
+            better: Better::Higher,
+            warn_pct: 0.0,
+            fail_pct: 1e9,
+            gate: false,
+            samples: Some(1),
+            warmup: Some(0),
+        }
+    }
+
+    fn prep(&mut self, _ctx: &BenchCtx) -> Result<()> {
+        Ok(())
+    }
+
+    fn sample(&mut self, ctx: &BenchCtx) -> Result<Sample> {
+        let seed = ctx.probe_seed("bear_mission_edge") | 1;
+        // the quarantined test's recipe: p=240 at CF=2.4 (miniature scale
+        // shifts the phase transition left of the paper's CF≈3 point)
+        let (p, cells) = (240, 100);
+        let (trials, iters) = if ctx.quick { (4, 1200) } else { (8, 2500) };
+        let bear = simulation_success_rate(AlgoKind::Bear, p, 4, cells, 0.1, trials, iters, seed);
+        let mission =
+            simulation_success_rate(AlgoKind::Mission, p, 4, cells, 0.1, trials, iters, seed);
+        let edge = bear - mission;
+        // the old test's assertion, now a headline: dominate outright or
+        // both saturate near-perfect
+        let pass = bear > mission + 0.2 || (bear == 1.0 && mission >= 0.75);
+        eprintln!(
+            "[bench] headline: BEAR {bear:.2} vs MISSION {mission:.2} success at CF=2.4 → edge {edge:+.2} → {}",
+            if pass { "PASS (paper Fig. 1A: second-order wins)" } else { "WARN (seed/trial noise?)" }
+        );
+        Ok(Sample {
+            value: edge,
+            extra: vec![
+                ("bear_success".into(), bear),
+                ("mission_success".into(), mission),
                 ("headline_pass".into(), if pass { 1.0 } else { 0.0 }),
             ],
         })

@@ -49,6 +49,14 @@
 //! under a wall-clock budget (`scatter_deadline`) instead of an attempt
 //! count: a shard with a single replica being respawned needs the
 //! balancer to wait for re-admission, not to fail fast sideways.
+//!
+//! **Observability.** Every client request runs under a trace context
+//! (accepted from the `x-bear-trace` header or freshly rooted here);
+//! every forward carries a `child(i)` context, so worker spans share the
+//! balancer's trace id. `GET /v1/tracez` dumps the slowest balancer
+//! spans with each healthy backend's matching child spans joined
+//! underneath; `GET /v1/metricz` exposes balancer counters, fleet
+//! gauges, and per-backend labeled series (both v1-only routes).
 
 use crate::api::{
     parse_query_line, ApiError, BearClient, ClientConfig, PredictResponse, Route,
@@ -56,7 +64,10 @@ use crate::api::{
 };
 use crate::fleet::health::BackendState;
 use crate::loss::LossKind;
-use crate::serve::http::{read_request, reason_for, write_response, ReadError, Request};
+use crate::obs::trace::TraceContext;
+use crate::obs::{format_record, FlightRecorder, Registry, SpanRecord, MAX_PHASES, ROUTE_OTHER};
+use crate::serve::http::{query_param, read_request, reason_for, write_response, ReadError, Request};
+use crate::serve::server::{route_index, route_label};
 use crate::serve::shard::{merge_topk, parse_weight_token, predict_with};
 use crate::serve::snapshot::Prediction;
 use crate::sparse::SparseVec;
@@ -97,6 +108,9 @@ pub struct BalancerConfig {
     /// sideways retry — no other backend owns that feature range), so the
     /// budget must comfortably cover a kill → respawn → re-admit cycle.
     pub scatter_deadline: Duration,
+    /// Flight-recorder capacity for balancer request spans (0 disables
+    /// tracing at this tier; trace headers still propagate to workers).
+    pub trace_capacity: usize,
 }
 
 impl Default for BalancerConfig {
@@ -112,8 +126,138 @@ impl Default for BalancerConfig {
             retry_backoff: Duration::from_millis(50),
             pool_per_backend: 4,
             scatter_deadline: Duration::from_secs(15),
+            trace_capacity: 256,
         }
     }
+}
+
+/// Phase names for balancer spans, in `SpanRecord::phase_us` slot order:
+/// `parse` (request read, incl. keep-alive idle), `fanout` (everything
+/// spent talking to backends — picks, forwards, retries, backoff),
+/// `merge` (local gather work: margin re-accumulation / K-way merge),
+/// `handle` (whole dispatch), `write` (response flush).
+pub const BALANCER_PHASES: [&str; MAX_PHASES] = ["parse", "fanout", "merge", "handle", "write"];
+
+/// See `serve::server::clamp_us` — ≥1µs for phases that actually ran.
+fn clamp_us(d: Duration) -> u64 {
+    (d.as_micros() as u64).max(1)
+}
+
+fn unix_micros() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_micros() as u64)
+        .unwrap_or(0)
+}
+
+/// The balancer's `/v1/metricz` registry: balancer-level counters,
+/// fleet gauges, and one labeled series per backend
+/// (`backend="<i>",addr="…",shard="<s>"`) over the shared
+/// [`BackendState`]s — per-backend values are the prober's cached scrape,
+/// so rendering never does a backend roundtrip.
+fn build_registry(
+    counters: &Arc<BalancerCounters>,
+    backends: &Arc<Vec<Arc<BackendState>>>,
+    target_generation: &Arc<AtomicU64>,
+    shards: usize,
+    started: Instant,
+) -> Registry {
+    let reg = Registry::new();
+    {
+        let mut c = |name: &str, help: &str, get: fn(&BalancerCounters) -> &AtomicU64| {
+            let cs = counters.clone();
+            reg.counter(name, &[], help, move || get(&cs).load(Ordering::Relaxed));
+        };
+        c("bear_connections_total", "accepted client connections", |c| &c.connections);
+        c("bear_requests_total", "client requests handled", |c| &c.requests_total);
+        c("bear_proxied_requests_total", "requests forwarded to backends", |c| {
+            &c.proxied_requests
+        });
+        c("bear_proxy_retries_total", "forward retry rounds", |c| &c.proxy_retries);
+        c("bear_rejected_total", "requests answered 503", |c| &c.rejected_503);
+        c("bear_bad_requests_total", "malformed client requests", |c| &c.bad_requests);
+        c("bear_not_found_total", "requests with no route", |c| &c.not_found);
+        c("bear_statz_requests_total", "statz requests", |c| &c.statz_requests);
+        c("bear_health_requests_total", "healthz requests", |c| &c.health_requests);
+        c("bear_scatter_conflicts_total", "generation-pinned fan-outs answered 409", |c| {
+            &c.scatter_conflicts
+        });
+    }
+    {
+        reg.gauge("bear_uptime_seconds", &[], "seconds since startup", move || {
+            started.elapsed().as_secs_f64()
+        });
+        let b = backends.clone();
+        reg.gauge("bear_fleet_backends", &[], "configured backends", move || b.len() as f64);
+        let b = backends.clone();
+        reg.gauge("bear_fleet_backends_healthy", &[], "backends in rotation", move || {
+            b.iter().filter(|b| b.healthy()).count() as f64
+        });
+        reg.gauge("bear_fleet_shards", &[], "feature-range shard count", move || shards as f64);
+        let g = target_generation.clone();
+        reg.gauge(
+            "bear_fleet_generation",
+            &[],
+            "manifest generation the supervisor rolls toward",
+            move || g.load(Ordering::Relaxed) as f64,
+        );
+        let b = backends.clone();
+        reg.gauge(
+            "bear_fleet_consistent_generation",
+            &[],
+            "oldest generation any in-rotation backend serves",
+            move || {
+                b.iter()
+                    .filter(|b| b.healthy())
+                    .map(|b| b.scraped_generation.load(Ordering::Relaxed))
+                    .min()
+                    .unwrap_or(0) as f64
+            },
+        );
+    }
+    for b in backends.iter() {
+        let idx = b.index.to_string();
+        let addr = b.addr.to_string();
+        let shard = b.shard.to_string();
+        let labels: &[(&str, &str)] =
+            &[("backend", idx.as_str()), ("addr", addr.as_str()), ("shard", shard.as_str())];
+        let s = b.clone();
+        reg.gauge("bear_backend_up", labels, "last health probe succeeded", move || {
+            u64::from(s.last_probe_ok.load(Ordering::Relaxed)) as f64
+        });
+        let s = b.clone();
+        reg.gauge("bear_backend_healthy", labels, "backend is in rotation", move || {
+            u64::from(s.healthy()) as f64
+        });
+        let s = b.clone();
+        reg.gauge("bear_backend_in_flight", labels, "requests in flight", move || {
+            s.in_flight.load(Ordering::Relaxed) as f64
+        });
+        let s = b.clone();
+        reg.gauge(
+            "bear_backend_generation",
+            labels,
+            "generation the backend serves (prober scrape)",
+            move || s.scraped_generation.load(Ordering::Relaxed) as f64,
+        );
+        let s = b.clone();
+        reg.counter("bear_backend_forwarded_total", labels, "successful forwards", move || {
+            s.forwarded.load(Ordering::Relaxed)
+        });
+        let s = b.clone();
+        reg.counter("bear_backend_forward_errors_total", labels, "failed forwards", move || {
+            s.forward_errors.load(Ordering::Relaxed)
+        });
+        let s = b.clone();
+        reg.counter("bear_backend_ejects_total", labels, "rotation ejections", move || {
+            s.ejects.load(Ordering::Relaxed)
+        });
+        let s = b.clone();
+        reg.counter("bear_backend_restarts_total", labels, "supervisor respawns", move || {
+            s.restarts.load(Ordering::Relaxed)
+        });
+    }
+    reg
 }
 
 /// Balancer-level monotonic counters.
@@ -205,6 +349,9 @@ struct ScatterCall {
     method: &'static str,
     target: String,
     body: Vec<u8>,
+    /// Trace context allocated for THIS backend request (the balancer
+    /// span's `child(shard)`), carried in `x-bear-trace`.
+    trace: Option<TraceContext>,
 }
 
 /// Outcome of one scatter-gather fan-out round.
@@ -236,7 +383,7 @@ pub struct Balancer {
     /// One pooled [`BearClient`] per backend (keep-alive forwards with
     /// one stale-retry — the client's contract).
     clients: Vec<BearClient>,
-    pub counters: BalancerCounters,
+    pub counters: Arc<BalancerCounters>,
     /// Latest manifest generation the supervisor is rolling toward
     /// (0 without `--watch-manifest`). Reported on `/statz`.
     target_generation: Arc<AtomicU64>,
@@ -245,6 +392,12 @@ pub struct Balancer {
     /// shard).
     shards: usize,
     started: Instant,
+    /// One shared span ring for all balancer workers (the recorder is
+    /// multi-writer safe: contended slots drop the record, never block).
+    recorder: FlightRecorder,
+    /// `/v1/metricz` collectors: balancer counters, fleet gauges, and
+    /// per-backend labeled series over the shared [`BackendState`]s.
+    registry: Registry,
 }
 
 impl Balancer {
@@ -261,22 +414,35 @@ impl Balancer {
         };
         let clients =
             backends.iter().map(|b| BearClient::with_addrs(b.addrs.clone(), client_cfg)).collect();
+        let counters = Arc::new(BalancerCounters::default());
+        let started = Instant::now();
+        let registry = build_registry(
+            &counters,
+            &backends,
+            &target_generation,
+            shards.max(1),
+            started,
+        );
         Self {
             picker: Picker::new(backends.clone()),
             backends,
+            recorder: FlightRecorder::new(cfg.trace_capacity),
             cfg,
             clients,
-            counters: BalancerCounters::default(),
+            counters,
             target_generation,
             shards: shards.max(1),
-            started: Instant::now(),
+            started,
+            registry,
         }
     }
 
     /// Route one read request across the fleet with bounded retries.
     /// Returns the backend's (status, body), or 503 when no backend could
-    /// answer within the attempt budget.
-    fn proxy(&self, rng: &mut Pcg64, req: &Request) -> (u16, Vec<u8>) {
+    /// answer within the attempt budget. Each attempt carries its own
+    /// child trace context (`trace.child(attempt)`) so retried forwards
+    /// are distinguishable in the workers' tracez dumps.
+    fn proxy(&self, rng: &mut Pcg64, req: &Request, trace: &TraceContext) -> (u16, Vec<u8>) {
         self.counters.proxied_requests.fetch_add(1, Ordering::Relaxed);
         let n = self.backends.len();
         let mut excluded = vec![false; n];
@@ -297,9 +463,15 @@ impl Balancer {
             };
             let b = &self.backends[i];
             let _guard = InFlightGuard::new(b);
+            let child = trace.child(attempt as u64);
             // relay the client's original target (legacy or /v1 — the
             // workers serve both byte-identically)
-            match self.clients[i].exchange(&req.method, &req.target(), &req.body) {
+            match self.clients[i].exchange_traced(
+                &req.method,
+                &req.target(),
+                &req.body,
+                Some(&child),
+            ) {
                 // a worker shedding load (accept-queue overflow 503) is
                 // alive but saturated: don't eject, just try another
                 // backend — these are idempotent reads, and a transient
@@ -367,8 +539,12 @@ impl Balancer {
                 .map(|(i, call)| {
                     scope.spawn(move || -> Result<String, ApiError> {
                         let _guard = InFlightGuard::new(&self.backends[i]);
-                        let resp =
-                            self.clients[i].exchange(call.method, &call.target, &call.body)?;
+                        let resp = self.clients[i].exchange_traced(
+                            call.method,
+                            &call.target,
+                            &call.body,
+                            call.trace.as_ref(),
+                        )?;
                         let body = String::from_utf8_lossy(&resp.body).into_owned();
                         if resp.status == 200 {
                             Ok(body)
@@ -466,11 +642,15 @@ impl Balancer {
     /// built by `make(shard, gen)` out, and hand complete rounds to
     /// `gather`. A `Gathered::Conflict` (a response not actually on the
     /// pinned generation) re-pins and retries like a transport failure.
+    /// `phases` accumulates the span's `fanout` (slot 1: every
+    /// scatter round's backend I/O) and `merge` (slot 2: local gather
+    /// work) timings across retries.
     fn scatter(
         &self,
         rng: &mut Pcg64,
         make: impl Fn(usize, u64) -> ScatterCall,
         mut gather: impl FnMut(u64, Vec<String>) -> Gathered,
+        phases: &mut [u64; MAX_PHASES],
     ) -> (u16, Vec<u8>) {
         let deadline = Instant::now() + self.cfg.scatter_deadline;
         let mut excluded = vec![false; self.backends.len()];
@@ -492,14 +672,22 @@ impl Balancer {
                     continue;
                 }
             };
-            match self.scatter_round(&chosen, |s| make(s, gen), &mut excluded) {
-                Round::Done(bodies) => match gather(gen, bodies) {
-                    Gathered::Respond(status, body) => return (status, body),
-                    Gathered::Conflict => {
-                        self.counters.scatter_conflicts.fetch_add(1, Ordering::Relaxed);
-                        std::thread::sleep(self.cfg.retry_backoff);
+            let t_round = Instant::now();
+            let round = self.scatter_round(&chosen, |s| make(s, gen), &mut excluded);
+            phases[1] = phases[1].saturating_add(clamp_us(t_round.elapsed()));
+            match round {
+                Round::Done(bodies) => {
+                    let t_merge = Instant::now();
+                    let gathered = gather(gen, bodies);
+                    phases[2] = phases[2].saturating_add(clamp_us(t_merge.elapsed()));
+                    match gathered {
+                        Gathered::Respond(status, body) => return (status, body),
+                        Gathered::Conflict => {
+                            self.counters.scatter_conflicts.fetch_add(1, Ordering::Relaxed);
+                            std::thread::sleep(self.cfg.retry_backoff);
+                        }
                     }
-                },
+                }
                 Round::Retry => std::thread::sleep(self.cfg.retry_backoff),
                 Round::Fatal(status, body) => return (status, body),
             }
@@ -511,7 +699,13 @@ impl Balancer {
     /// re-run the canonical margin accumulation and format the result
     /// with the model server's own code — bit-identical to an unsharded
     /// server by construction.
-    fn scatter_predict(&self, rng: &mut Pcg64, req: &Request) -> (u16, Vec<u8>) {
+    fn scatter_predict(
+        &self,
+        rng: &mut Pcg64,
+        req: &Request,
+        trace: &TraceContext,
+        phases: &mut [u64; MAX_PHASES],
+    ) -> (u16, Vec<u8>) {
         self.counters.proxied_requests.fetch_add(1, Ordering::Relaxed);
         let text = match std::str::from_utf8(&req.body) {
             Ok(t) => t,
@@ -539,10 +733,11 @@ impl Balancer {
         let n_lines = text.lines().count();
         self.scatter(
             rng,
-            |_s, gen| ScatterCall {
+            |s, gen| ScatterCall {
                 method: Route::ShardWeights.method(),
                 target: ShardWeightsRequest { gen: Some(gen) }.target(),
                 body: req.body.clone(),
+                trace: Some(trace.child(s as u64)),
             },
             |gen, bodies| {
                 // gather: per line, feature → per-class weight bits,
@@ -634,21 +829,29 @@ impl Balancer {
                     .collect();
                 Gathered::Respond(200, PredictResponse { preds }.encode().into_bytes())
             },
+            phases,
         )
     }
 
     /// Sharded `/topk`: K-way merge of the per-shard tables, pinned to
     /// one generation like `/predict` (the worker 409s any request for a
     /// generation it cannot serve, so complete rounds are consistent).
-    fn scatter_topk(&self, rng: &mut Pcg64, req: &Request) -> (u16, Vec<u8>) {
+    fn scatter_topk(
+        &self,
+        rng: &mut Pcg64,
+        req: &Request,
+        trace: &TraceContext,
+        phases: &mut [u64; MAX_PHASES],
+    ) -> (u16, Vec<u8>) {
         self.counters.proxied_requests.fetch_add(1, Ordering::Relaxed);
         let treq = TopkRequest::parse_query_unpinned(req.query.as_deref());
         self.scatter(
             rng,
-            |_s, gen| ScatterCall {
+            |s, gen| ScatterCall {
                 method: Route::Topk.method(),
                 target: TopkRequest { gen: Some(gen), ..treq }.target(),
                 body: Vec::new(),
+                trace: Some(trace.child(s as u64)),
             },
             |_gen, bodies| {
                 let mut entries: Vec<(u64, f32)> = Vec::new();
@@ -666,6 +869,7 @@ impl Balancer {
                 let merged = TopkResponse { entries: merge_topk(entries, treq.k) };
                 Gathered::Respond(200, merged.encode().into_bytes())
             },
+            phases,
         )
     }
 
@@ -739,24 +943,72 @@ impl Balancer {
         out
     }
 
+    /// The balancer's `/v1/tracez`: its own spans (slowest first), each
+    /// followed by the matching child spans scraped from every healthy
+    /// backend's `/v1/tracez` and joined on trace id — one distributed
+    /// trace per block, children indented and prefixed `backend.<i>`.
+    /// This is a diagnostic endpoint: it does one backend roundtrip per
+    /// healthy worker at dump time (the data plane never does).
+    fn render_tracez(&self, min_us: u64, limit: usize) -> String {
+        let mut records = self.recorder.snapshot();
+        records.retain(|r| r.total_us >= min_us);
+        records.sort_by(|a, b| {
+            b.total_us.cmp(&a.total_us).then(b.start_unix_us.cmp(&a.start_unix_us))
+        });
+        records.truncate(limit);
+        // scrape each backend once per dump, not once per record
+        let mut children: Vec<(usize, String)> = Vec::new();
+        for (i, b) in self.backends.iter().enumerate() {
+            if !b.healthy() {
+                continue;
+            }
+            if let Ok(dump) = self.clients[i].tracez_raw(0, 256) {
+                children.extend(dump.lines().map(|l| (i, l.to_string())));
+            }
+        }
+        let mut out = String::new();
+        for r in &records {
+            out.push_str(&format_record(r, &BALANCER_PHASES, route_label));
+            out.push('\n');
+            let needle = format!("trace={:016x} ", r.trace_id);
+            for (i, line) in &children {
+                if line.starts_with(&needle) {
+                    out.push_str(&format!("  backend.{i} {line}\n"));
+                }
+            }
+        }
+        out
+    }
+
     /// Handle one parsed request; returns (status, body, keep_alive).
     /// Routing goes through the [`Route`] table (`/v1/*` and the legacy
     /// aliases land in the same arm); the balancer serves only the read
     /// routes — `/shard/weights` and `/admin/reload` are worker-internal
     /// and 404 here.
-    fn dispatch(&self, rng: &mut Pcg64, req: &Request) -> (u16, Vec<u8>, bool) {
+    /// `trace` is this request's span context (accepted from the client's
+    /// `x-bear-trace` or freshly rooted); forwards carry `trace.child(i)`.
+    /// `phases` is the span's timing slots ([`BALANCER_PHASES`]).
+    fn dispatch(
+        &self,
+        rng: &mut Pcg64,
+        req: &Request,
+        trace: &TraceContext,
+        phases: &mut [u64; MAX_PHASES],
+    ) -> (u16, Vec<u8>, bool) {
         self.counters.requests_total.fetch_add(1, Ordering::Relaxed);
         match Route::resolve(&req.method, &req.path) {
             Some(Route::Predict) if self.shards > 1 => {
-                let (status, body) = self.scatter_predict(rng, req);
+                let (status, body) = self.scatter_predict(rng, req, trace, phases);
                 (status, body, req.keep_alive)
             }
             Some(Route::Topk) if self.shards > 1 => {
-                let (status, body) = self.scatter_topk(rng, req);
+                let (status, body) = self.scatter_topk(rng, req, trace, phases);
                 (status, body, req.keep_alive)
             }
             Some(Route::Predict) | Some(Route::Topk) => {
-                let (status, body) = self.proxy(rng, req);
+                let t = Instant::now();
+                let (status, body) = self.proxy(rng, req, trace);
+                phases[1] = clamp_us(t.elapsed());
                 (status, body, req.keep_alive)
             }
             Some(Route::Healthz) => {
@@ -776,6 +1028,17 @@ impl Balancer {
                 self.counters.statz_requests.fetch_add(1, Ordering::Relaxed);
                 (200, self.render_statz().into_bytes(), req.keep_alive)
             }
+            Some(Route::Metricz) => {
+                (200, self.registry.render().into_bytes(), req.keep_alive)
+            }
+            Some(Route::Tracez) => {
+                let q = req.query.as_deref();
+                let min_us =
+                    query_param(q, "min_us").and_then(|v| v.parse::<u64>().ok()).unwrap_or(0);
+                let limit =
+                    query_param(q, "limit").and_then(|v| v.parse::<usize>().ok()).unwrap_or(64);
+                (200, self.render_tracez(min_us, limit).into_bytes(), req.keep_alive)
+            }
             _ => {
                 self.counters.not_found.fetch_add(1, Ordering::Relaxed);
                 let body = format!("no route {} {}\n", req.method, req.path).into_bytes();
@@ -794,12 +1057,42 @@ impl Balancer {
         };
         let mut reader = BufReader::new(stream);
         loop {
+            let t_parse = Instant::now();
             match read_request(&mut reader) {
                 Ok(Some(req)) => {
-                    let (status, body, keep) = self.dispatch(rng, &req);
+                    let parse_us = clamp_us(t_parse.elapsed());
+                    let start_unix_us =
+                        self.recorder.is_enabled().then(unix_micros).unwrap_or(0);
+                    // the client's context is our span (it allocated it
+                    // for this request); no header ⇒ root a fresh trace —
+                    // either way every forward carries a child of it
+                    let trace = req.trace.unwrap_or_else(TraceContext::fresh);
+                    let t0 = Instant::now();
+                    let mut phases = [0u64; MAX_PHASES];
+                    let (status, body, keep) = self.dispatch(rng, &req, &trace, &mut phases);
+                    phases[0] = parse_us;
+                    phases[3] = clamp_us(t0.elapsed());
+                    let t_write = Instant::now();
                     let ok =
                         write_response(&mut writer, status, reason_for(status), &body, keep)
                             .is_ok();
+                    if self.recorder.is_enabled() {
+                        phases[4] = clamp_us(t_write.elapsed());
+                        let route = Route::resolve(&req.method, &req.path)
+                            .map(route_index)
+                            .unwrap_or(ROUTE_OTHER);
+                        self.recorder.record(&SpanRecord {
+                            trace_id: trace.trace_id,
+                            span_id: trace.span_id,
+                            parent_span_id: 0,
+                            route,
+                            status: u32::from(status),
+                            generation: 0,
+                            start_unix_us,
+                            total_us: phases.iter().sum(),
+                            phase_us: phases,
+                        });
+                    }
                     if !keep || !ok {
                         break;
                     }
@@ -1105,10 +1398,11 @@ mod tests {
             query: None,
             body: b"1:1\n".to_vec(),
             keep_alive: true,
+            trace: None,
         };
         let mut rng = Pcg64::new(5);
         let t0 = Instant::now();
-        let (status, _body) = balancer.proxy(&mut rng, &req);
+        let (status, _body) = balancer.proxy(&mut rng, &req, &TraceContext::fresh());
         assert_eq!(status, 503);
         assert!(t0.elapsed() < Duration::from_secs(5), "503 must be prompt, not a hang");
         assert!(balancer.counters.rejected_503.load(Ordering::Relaxed) >= 1);

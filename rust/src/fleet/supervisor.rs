@@ -561,6 +561,7 @@ mod tests {
             crc32: 0,
             shards: 1,
             shard_crcs: vec![0],
+            telemetry: None,
         }
         .write(&manifest_path)
         .unwrap();
@@ -593,6 +594,7 @@ mod tests {
             crc32: 1,
             shards: 2,
             shard_crcs: vec![1, 2],
+            telemetry: None,
         }
         .write(&manifest_path)
         .unwrap();

@@ -46,6 +46,13 @@
 //!   [`api::ApiError`] vocabulary, and [`api::BearClient`] — the one
 //!   pooled HTTP client the balancer, prober, supervisor, loadgen, and
 //!   tests all speak through
+//! - observability: [`obs`] — distributed request tracing (compact
+//!   `x-bear-trace` context, per-worker lock-free flight recorders,
+//!   `GET /v1/tracez`), the Prometheus-style metrics [`obs::Registry`]
+//!   behind `GET /v1/metricz` (same atomics as `/statz`, second
+//!   exposition format), and per-generation training telemetry
+//!   (collision rate, heavy-hitter churn, curvature conditioning)
+//!   published via the MANIFEST
 //! - performance: [`bench`] — the `bear bench` harness: a phased
 //!   preflight → prep → warmup → sample → post runner over a probe
 //!   catalog spanning every tier (Count Sketch micro-probes, training
@@ -78,6 +85,7 @@ pub mod fleet;
 pub mod hash;
 pub mod loss;
 pub mod metrics;
+pub mod obs;
 pub mod online;
 pub mod optim;
 pub mod prop;

@@ -12,7 +12,9 @@
 //!   fleet       N shared-nothing serve processes behind a balancer
 //!               (power-of-two-choices, health probes, rolling reload,
 //!               --join for externally-launched multi-host workers)
-//!   loadgen     closed-loop load test against a running server
+//!   loadgen     closed-loop load test against a running server (traced
+//!               requests + per-stage client latency breakdown)
+//!   obs         observability helpers (`obs tail` follows /v1/tracez)
 //!   bench       performance harness: fixed-seed probes over every tier,
 //!               committed BENCH_<pr>.json trajectory, --compare gate
 //!   help        this text
@@ -321,6 +323,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         batch_wait: std::time::Duration::from_micros(args.parse_or("batch-wait-us", 0u64)?),
         watch_manifest: args.get("watch-manifest").map(std::path::PathBuf::from),
         poll_interval: std::time::Duration::from_millis(args.parse_or("poll-ms", 250u64)?),
+        trace_capacity: args.parse_or("trace-capacity", defaults.trace_capacity)?,
         ..defaults
     };
     // fleet workers are spawned with --parent-pid: exit if the
@@ -380,6 +383,7 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     let mut balancer = defaults.balancer.clone();
     balancer.workers = args.parse_or("balancer-workers", balancer.workers)?;
     balancer.max_attempts = args.parse_or("max-attempts", balancer.max_attempts)?;
+    balancer.trace_capacity = args.parse_or("trace-capacity", balancer.trace_capacity)?;
     let shards: usize = args.parse_or("shards", defaults.shards)?;
     // externally-launched workers to adopt (comma-separated host:port)
     let join: Vec<String> = match args.get("join") {
@@ -444,11 +448,16 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         bear::api::Route::Topk,
         bear::api::Route::Healthz,
         bear::api::Route::Statz,
+        bear::api::Route::Metricz,
+        bear::api::Route::Tracez,
     ]
     .iter()
     .map(|r| format!("{} {}", r.method(), r.v1_path()))
     .collect();
-    eprintln!("[bear] endpoints: {} (statz aggregated; legacy aliases served)", routes.join(" · "));
+    eprintln!(
+        "[bear] endpoints: {} (statz aggregated; metricz per-backend labels; tracez joins shard spans; legacy aliases served)",
+        routes.join(" · ")
+    );
     handle.join_forever();
     Ok(())
 }
@@ -501,6 +510,27 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         human_duration(report.wall),
     ]);
     t.print();
+    // per-stage breakdown of the same successful requests: where the time
+    // went on the client side (connect is 0 for pooled sends, so its mean
+    // doubles as a re-dial-rate signal)
+    let mut st = Table::new(
+        "per-stage latency (client side)",
+        &["stage", "p50", "p99", "max", "mean"],
+    );
+    for (name, h) in [
+        ("connect", &report.stages.connect),
+        ("send", &report.stages.send),
+        ("first-byte", &report.stages.first_byte),
+    ] {
+        st.row(&[
+            name.into(),
+            us(h.p50_micros()),
+            us(h.p99_micros()),
+            us(h.max_micros() as f64),
+            us(h.mean_micros()),
+        ]);
+    }
+    st.print();
     // CI contract: a hot-reloading server must drop zero requests, so any
     // error rate above the threshold (default 0) fails the process
     if report.error_rate() > max_error_rate {
@@ -513,6 +543,60 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         );
     }
     Ok(())
+}
+
+/// `bear obs tail` — follow a server's (or balancer's) `/v1/tracez`,
+/// printing each slow-trace record once as it appears. The dump is
+/// re-scraped every `--interval-ms`; records are deduped on the full
+/// formatted line (trace + span ids make collisions across distinct
+/// requests effectively impossible), and a balancer's indented
+/// `backend.<i>` child lines ride with their parent record.
+fn cmd_obs(args: &Args) -> Result<()> {
+    let verb = args.positional.first().map(|s| s.as_str()).unwrap_or("tail");
+    if verb != "tail" {
+        bail!("unknown obs subcommand {verb:?}; run `bear obs tail --addr H:P`");
+    }
+    let addr = args.str_or("addr", "127.0.0.1:8370");
+    let min_us: u64 = args.parse_or("min-us", 0u64)?;
+    let limit: usize = args.parse_or("limit", 64usize)?;
+    let interval = std::time::Duration::from_millis(args.parse_or("interval-ms", 1000u64)?);
+    let once = args.flag("once");
+    let client = bear::api::BearClient::connect(&addr)?;
+    eprintln!(
+        "[bear] tailing http://{addr}/v1/tracez?min_us={min_us}&limit={limit} every {}",
+        human_duration(interval)
+    );
+    let mut seen: std::collections::HashSet<String> = std::collections::HashSet::new();
+    loop {
+        match client.tracez_raw(min_us, limit) {
+            Ok(dump) => {
+                let mut lines = dump.lines().peekable();
+                while let Some(line) = lines.next() {
+                    if line.starts_with(' ') {
+                        continue; // orphan child (parent printed earlier)
+                    }
+                    let fresh = seen.insert(line.to_string());
+                    if fresh {
+                        println!("{line}");
+                    }
+                    while lines.peek().map(|l| l.starts_with(' ')).unwrap_or(false) {
+                        let child = lines.next().unwrap();
+                        if fresh {
+                            println!("{child}");
+                        }
+                    }
+                }
+            }
+            Err(e) => eprintln!("[bear] tracez scrape failed: {e}"),
+        }
+        if once {
+            return Ok(());
+        }
+        if seen.len() > 65_536 {
+            seen.clear(); // bounded memory on long-running tails
+        }
+        std::thread::sleep(interval);
+    }
 }
 
 fn cmd_bench(args: &Args) -> Result<()> {
@@ -565,6 +649,7 @@ commands:
               --model FILE [--addr H:P] [--workers N] [--queue-depth N]
               [--max-batch Q] [--batch-wait-us U]
               [--watch-manifest DIR/MANIFEST] [--poll-ms MS]
+              [--trace-capacity N]  (spans kept per worker; 0 disables)
               [--parent-pid P]   (exit when process P dies; set by fleet)
   fleet       shared-nothing multi-process serving tier behind a balancer
               --model FILE | --watch-manifest DIR/MANIFEST
@@ -579,11 +664,17 @@ commands:
               [--backends N] [--addr H:P] [--base-port P]
               [--serve-workers N] [--balancer-workers N]
               [--max-attempts N] [--probe-ms MS] [--monitor-ms MS]
-              [--log-dir DIR]
-  loadgen     closed-loop load test against a running server
+              [--trace-capacity N] [--log-dir DIR]
+  loadgen     closed-loop load test against a running server; every
+              request carries a fresh x-bear-trace and the report adds a
+              per-stage (connect/send/first-byte) latency breakdown
               --addr H:P [--dataset D] [--threads N] [--requests N]
               [--queries Q] [--duration-secs S]  (fixed-time samples)
               [--max-error-rate R]   (exits non-zero above R)
+  obs         observability helpers
+              tail        follow /v1/tracez, printing new slow traces
+                          --addr H:P [--min-us N] [--limit K]
+                          [--interval-ms MS] [--once]
   bench       performance harness: phased probes over every tier, fixed
               seeds, committed BENCH_<pr>.json trajectory
               [--quick]       (smoke sizes; full runs refuse debug builds)
@@ -609,6 +700,7 @@ fn main() -> Result<()> {
         "serve" => cmd_serve(&args),
         "fleet" => cmd_fleet(&args),
         "loadgen" => cmd_loadgen(&args),
+        "obs" => cmd_obs(&args),
         "bench" => cmd_bench(&args),
         "" | "help" => {
             print!("{HELP}");

@@ -1,0 +1,35 @@
+//! `bear::obs` — the observability layer threaded through serve, fleet,
+//! online and the trainer.
+//!
+//! Three legs, one module:
+//!
+//! 1. **Request tracing** ([`trace`]): a 16-byte trace context
+//!    (u64 trace id + span id) carried in the `x-bear-trace` header,
+//!    generated at the edge (balancer / loadgen) or accepted from the
+//!    caller, and propagated through scatter fan-outs so every shard
+//!    request carries the parent trace. Completed requests land in a
+//!    per-worker lock-free [`recorder::FlightRecorder`] with per-phase
+//!    timings, dumpable via `GET /v1/tracez?min_us=N&limit=K`.
+//! 2. **Metrics exposition** ([`registry`]): a [`Registry`] of collector
+//!    closures over the *same* atomics `/statz` reads, rendered as
+//!    Prometheus-style text on `GET /v1/metricz` — workers expose their
+//!    own series; the balancer adds per-backend labeled series.
+//! 3. **Training telemetry** ([`telemetry`]): collision-rate, heavy-
+//!    hitter churn, curvature-pair condition and step/loss gauges
+//!    computed by the trainer, published on the MANIFEST line, and
+//!    surfaced on `/statz` + `/v1/metricz` after each reload.
+//!
+//! Everything here is dependency-free and allocation-light on the hot
+//! path: recording a span is a handful of relaxed atomic stores, and a
+//! disabled recorder (capacity 0) is a branch + return — the compiled-in
+//! no-op that `bear bench`'s `obs_overhead` probe measures against.
+
+pub mod recorder;
+pub mod registry;
+pub mod telemetry;
+pub mod trace;
+
+pub use recorder::{format_record, render_dump, FlightRecorder, SpanRecord, MAX_PHASES, ROUTE_OTHER};
+pub use registry::{validate_exposition, Registry};
+pub use telemetry::{TelemetryGauges, TelemetrySnapshot, TELEMETRY_KEYS};
+pub use trace::{splitmix64, TraceContext, TRACE_HEADER};

@@ -1,0 +1,357 @@
+//! The flight recorder: a fixed-capacity, lock-free ring of recently
+//! completed request spans, one ring per worker thread (mirroring the
+//! per-worker `LatencyHistogram` layout), scraped by `GET /v1/tracez`.
+//!
+//! Each slot is a tiny seqlock: one sequence word plus a fixed number of
+//! `AtomicU64` payload words. A writer claims the slot by CASing the
+//! sequence to odd, stores the payload with relaxed stores, then
+//! releases the sequence back to even. A reader snapshots the payload
+//! between two equal even sequence reads, retrying a couple of times and
+//! otherwise skipping the slot. Writers therefore **never block and
+//! never wait**: if a slot is mid-write (only possible when one ring is
+//! shared and the ring has wrapped within a single in-flight write —
+//! per-worker rings are single-writer), the record is dropped rather
+//! than contended for. Readers can at worst miss a slot, never observe a
+//! torn record.
+//!
+//! All payload words are atomics, so this is safe Rust with no `unsafe`:
+//! the seqlock only guards *logical* consistency of multi-word records,
+//! not memory safety.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Per-phase timing slots in a record. Tiers use a prefix and name the
+/// phases at dump time (`render_dump`); unused phases stay 0.
+pub const MAX_PHASES: usize = 5;
+
+/// Payload words per slot (everything but the sequence word).
+const WORDS: usize = 7 + MAX_PHASES;
+/// Slot stride in the flat cell array: sequence word + payload.
+const STRIDE: usize = 1 + WORDS;
+
+/// `route` value for a request that matched no route table entry.
+pub const ROUTE_OTHER: u32 = u32::MAX;
+
+/// One completed server-side span.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SpanRecord {
+    /// 0 = empty slot (never emitted by `snapshot`).
+    pub trace_id: u64,
+    pub span_id: u64,
+    /// 0 = root span (no parent).
+    pub parent_span_id: u64,
+    /// Index into the serving route table ([`ROUTE_OTHER`] = unmatched).
+    pub route: u32,
+    /// HTTP status the span answered with.
+    pub status: u32,
+    /// Model generation that served the request (0 when not applicable).
+    pub generation: u64,
+    /// Span start, µs since the unix epoch.
+    pub start_unix_us: u64,
+    /// End-to-end span duration in µs.
+    pub total_us: u64,
+    /// Per-phase durations in µs (meaning is per tier; see the dump's
+    /// phase names).
+    pub phase_us: [u64; MAX_PHASES],
+}
+
+impl SpanRecord {
+    fn to_words(self) -> [u64; WORDS] {
+        let mut w = [0u64; WORDS];
+        w[0] = self.trace_id;
+        w[1] = self.span_id;
+        w[2] = self.parent_span_id;
+        w[3] = ((self.route as u64) << 32) | self.status as u64;
+        w[4] = self.generation;
+        w[5] = self.start_unix_us;
+        w[6] = self.total_us;
+        w[7..7 + MAX_PHASES].copy_from_slice(&self.phase_us);
+        w
+    }
+
+    fn from_words(w: &[u64; WORDS]) -> Option<Self> {
+        if w[0] == 0 {
+            return None;
+        }
+        let mut phase_us = [0u64; MAX_PHASES];
+        phase_us.copy_from_slice(&w[7..7 + MAX_PHASES]);
+        Some(Self {
+            trace_id: w[0],
+            span_id: w[1],
+            parent_span_id: w[2],
+            route: (w[3] >> 32) as u32,
+            status: (w[3] & 0xFFFF_FFFF) as u32,
+            generation: w[4],
+            start_unix_us: w[5],
+            total_us: w[6],
+            phase_us,
+        })
+    }
+}
+
+/// A lock-free ring of the most recent [`SpanRecord`]s. Capacity 0 is
+/// the compiled-in no-op used to measure the observability tax
+/// (`bear bench` `obs_overhead`): `record` returns before touching any
+/// atomic.
+pub struct FlightRecorder {
+    cells: Vec<AtomicU64>,
+    capacity: usize,
+    next: AtomicU64,
+}
+
+impl FlightRecorder {
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            cells: (0..capacity * STRIDE).map(|_| AtomicU64::new(0)).collect(),
+            capacity,
+            next: AtomicU64::new(0),
+        }
+    }
+
+    /// The no-op recorder: zero slots, `record` is a branch + return.
+    pub fn disabled() -> Self {
+        Self::new(0)
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.capacity > 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Record one span. Wait-free: claims the next ring slot, and if that
+    /// slot is somehow mid-write (shared-ring wraparound race) the record
+    /// is dropped instead of waiting. Records with `trace_id == 0` are
+    /// ignored (0 marks empty slots).
+    pub fn record(&self, r: &SpanRecord) {
+        if self.capacity == 0 || r.trace_id == 0 {
+            return;
+        }
+        let slot = (self.next.fetch_add(1, Ordering::Relaxed) as usize) % self.capacity;
+        let base = slot * STRIDE;
+        let seq = &self.cells[base];
+        let s = seq.load(Ordering::Relaxed);
+        if s & 1 == 1 {
+            return; // writer in progress: drop, never block
+        }
+        if seq.compare_exchange(s, s + 1, Ordering::Acquire, Ordering::Relaxed).is_err() {
+            return; // lost the claim race: drop
+        }
+        let words = r.to_words();
+        for (i, w) in words.iter().enumerate() {
+            self.cells[base + 1 + i].store(*w, Ordering::Relaxed);
+        }
+        seq.store(s + 2, Ordering::Release);
+    }
+
+    /// Copy out every consistent record currently in the ring (unordered;
+    /// callers sort). Slots mid-write after a few retries are skipped —
+    /// a scrape can under-report under extreme churn, never tear.
+    pub fn snapshot(&self) -> Vec<SpanRecord> {
+        let mut out = Vec::new();
+        self.snapshot_into(&mut out);
+        out
+    }
+
+    /// `snapshot` appending into an existing buffer (merging per-worker
+    /// rings without reallocating).
+    pub fn snapshot_into(&self, out: &mut Vec<SpanRecord>) {
+        for slot in 0..self.capacity {
+            let base = slot * STRIDE;
+            for _attempt in 0..4 {
+                let s0 = self.cells[base].load(Ordering::Acquire);
+                if s0 == 0 {
+                    break; // never written
+                }
+                if s0 & 1 == 1 {
+                    continue; // mid-write, retry
+                }
+                let mut w = [0u64; WORDS];
+                for (i, word) in w.iter_mut().enumerate() {
+                    *word = self.cells[base + 1 + i].load(Ordering::Acquire);
+                }
+                if self.cells[base].load(Ordering::Acquire) != s0 {
+                    continue; // torn by a concurrent writer, retry
+                }
+                if let Some(r) = SpanRecord::from_words(&w) {
+                    out.push(r);
+                }
+                break;
+            }
+        }
+    }
+}
+
+/// Render records as the `/v1/tracez` text dump: slowest first, one
+/// record per line of `key=value` tokens (the same greppable dialect as
+/// `/statz`), filtered to `total_us >= min_us`, at most `limit` lines.
+/// `phases` names the meaningful prefix of `phase_us` for this tier;
+/// `route_name` resolves the route word.
+pub fn render_dump(
+    mut records: Vec<SpanRecord>,
+    phases: &[&str],
+    route_name: impl Fn(u32) -> String,
+    min_us: u64,
+    limit: usize,
+) -> String {
+    records.retain(|r| r.total_us >= min_us);
+    // slowest first; newest first among equals so the dump is stable-ish
+    records.sort_by(|a, b| {
+        b.total_us.cmp(&a.total_us).then(b.start_unix_us.cmp(&a.start_unix_us))
+    });
+    records.truncate(limit);
+    let mut out = String::new();
+    for r in &records {
+        out.push_str(&format_record(r, phases, &route_name));
+        out.push('\n');
+    }
+    out
+}
+
+/// One record as a single `key=value` line (no trailing newline).
+pub fn format_record(
+    r: &SpanRecord,
+    phases: &[&str],
+    route_name: impl Fn(u32) -> String,
+) -> String {
+    let mut line = format!(
+        "trace={:016x} span={:016x} parent={:016x} route={} status={} gen={} start_us={} total_us={}",
+        r.trace_id,
+        r.span_id,
+        r.parent_span_id,
+        route_name(r.route),
+        r.status,
+        r.generation,
+        r.start_unix_us,
+        r.total_us,
+    );
+    for (i, name) in phases.iter().enumerate().take(MAX_PHASES) {
+        line.push_str(&format!(" p.{}={}", name, r.phase_us[i]));
+    }
+    line
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(trace: u64, total: u64) -> SpanRecord {
+        SpanRecord {
+            trace_id: trace,
+            span_id: trace ^ 1,
+            total_us: total,
+            status: 200,
+            phase_us: [1, 2, 3, 0, 0],
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn ring_keeps_most_recent_capacity_records() {
+        let fr = FlightRecorder::new(4);
+        for i in 1..=10u64 {
+            fr.record(&rec(i, i));
+        }
+        let snap = fr.snapshot();
+        assert_eq!(snap.len(), 4);
+        // the last 4 writes survive
+        let mut traces: Vec<u64> = snap.iter().map(|r| r.trace_id).collect();
+        traces.sort_unstable();
+        assert_eq!(traces, vec![7, 8, 9, 10]);
+    }
+
+    #[test]
+    fn disabled_recorder_drops_everything() {
+        let fr = FlightRecorder::disabled();
+        assert!(!fr.is_enabled());
+        fr.record(&rec(1, 1));
+        assert!(fr.snapshot().is_empty());
+    }
+
+    #[test]
+    fn zero_trace_records_are_ignored() {
+        let fr = FlightRecorder::new(4);
+        fr.record(&rec(0, 99));
+        assert!(fr.snapshot().is_empty());
+    }
+
+    #[test]
+    fn roundtrip_preserves_every_field() {
+        let fr = FlightRecorder::new(2);
+        let r = SpanRecord {
+            trace_id: 0xDEAD_BEEF,
+            span_id: 7,
+            parent_span_id: 9,
+            route: 3,
+            status: 409,
+            generation: 42,
+            start_unix_us: 1_000_000,
+            total_us: 777,
+            phase_us: [5, 6, 7, 8, 9],
+        };
+        fr.record(&r);
+        assert_eq!(fr.snapshot(), vec![r]);
+    }
+
+    #[test]
+    fn dump_sorts_slowest_first_and_filters() {
+        let fr = FlightRecorder::new(8);
+        for (t, us) in [(1u64, 10u64), (2, 500), (3, 100)] {
+            fr.record(&rec(t, us));
+        }
+        let dump = render_dump(fr.snapshot(), &["parse", "wait"], |_| "predict".into(), 50, 10);
+        let lines: Vec<&str> = dump.lines().collect();
+        assert_eq!(lines.len(), 2); // 10µs filtered out
+        assert!(lines[0].contains("total_us=500"));
+        assert!(lines[1].contains("total_us=100"));
+        assert!(lines[0].contains("p.parse=1"));
+        assert!(lines[0].contains("p.wait=2"));
+        assert!(lines[0].contains("route=predict"));
+        assert!(!lines[0].contains("p.p2")); // unnamed phases not emitted
+    }
+
+    #[test]
+    fn concurrent_writers_and_readers_never_tear() {
+        // writers stamp every payload word with the same value; any torn
+        // read would surface as a record whose fields disagree
+        let fr = std::sync::Arc::new(FlightRecorder::new(8));
+        let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let writers: Vec<_> = (0..4)
+            .map(|w| {
+                let fr = fr.clone();
+                let stop = stop.clone();
+                std::thread::spawn(move || {
+                    let mut i = 1u64;
+                    while !stop.load(Ordering::Relaxed) {
+                        let v = (w as u64) << 32 | i;
+                        fr.record(&SpanRecord {
+                            trace_id: v,
+                            span_id: v,
+                            parent_span_id: v,
+                            generation: v,
+                            start_unix_us: v,
+                            total_us: v,
+                            phase_us: [v; MAX_PHASES],
+                            route: 0,
+                            status: 0,
+                        });
+                        i += 1;
+                    }
+                })
+            })
+            .collect();
+        for _ in 0..2000 {
+            for r in fr.snapshot() {
+                assert_eq!(r.span_id, r.trace_id, "torn record");
+                assert_eq!(r.total_us, r.trace_id, "torn record");
+                assert_eq!(r.phase_us, [r.trace_id; MAX_PHASES], "torn record");
+            }
+        }
+        stop.store(true, Ordering::Relaxed);
+        for w in writers {
+            w.join().unwrap();
+        }
+    }
+}

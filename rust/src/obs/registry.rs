@@ -1,0 +1,392 @@
+//! The metrics registry behind `GET /v1/metricz`: named counters, gauges
+//! and histograms rendered as Prometheus-style text exposition.
+//!
+//! A metric is a **collector closure** registered once at startup: the
+//! registry stores no values of its own, it reads the same live atomics
+//! (`Counters`, `ReloadStats`, per-worker `LatencyHistogram`s, backend
+//! state) that `/statz` reads. One set of atomics, two exposition
+//! formats — which is how `/statz` stays byte-identical while `/metricz`
+//! is "backed by the registry".
+//!
+//! Naming rules (enforced at registration, property-tested):
+//! - names match `[a-z_][a-z0-9_]*`, are prefixed `bear_`, and counters
+//!   end in `_total`;
+//! - label names match the same grammar; label values are escaped
+//!   (`\` → `\\`, `"` → `\"`, newline → `\n`);
+//! - histograms expose `<name>_bucket{le="…µs"}` (cumulative, plus a
+//!   closing `le="+Inf"`), `<name>_sum` and `<name>_count`, reusing the
+//!   log-scaled µs buckets of [`crate::serve::metrics::LatencyHistogram`].
+//!
+//! Exposition is grouped: all samples of one metric name share a single
+//! `# HELP` / `# TYPE` block (per-backend labeled series on the
+//! balancer), in first-registration order so scrapes are deterministic.
+
+use crate::serve::metrics::HistogramSnapshot;
+use std::sync::Mutex;
+
+/// What a collector yields at scrape time.
+pub enum Collected {
+    Value(f64),
+    Histogram(HistogramSnapshot),
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MetricKind {
+    Counter,
+    Gauge,
+    Histogram,
+}
+
+impl MetricKind {
+    fn exposition(self) -> &'static str {
+        match self {
+            MetricKind::Counter => "counter",
+            MetricKind::Gauge => "gauge",
+            MetricKind::Histogram => "histogram",
+        }
+    }
+}
+
+type Collector = Box<dyn Fn() -> Collected + Send + Sync>;
+
+struct Metric {
+    name: String,
+    /// Pre-rendered `k="v",…` (no braces), empty for unlabeled series.
+    labels: String,
+    help: String,
+    kind: MetricKind,
+    collect: Collector,
+}
+
+/// A registry of collector closures, rendered on demand.
+#[derive(Default)]
+pub struct Registry {
+    metrics: Mutex<Vec<Metric>>,
+}
+
+/// `[a-z_][a-z0-9_]*`
+fn valid_name(s: &str) -> bool {
+    let mut bytes = s.bytes();
+    match bytes.next() {
+        Some(b) if b.is_ascii_lowercase() || b == b'_' => {}
+        _ => return false,
+    }
+    bytes.all(|b| b.is_ascii_lowercase() || b.is_ascii_digit() || b == b'_')
+}
+
+fn escape_label_value(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn render_labels(labels: &[(&str, &str)]) -> String {
+    let mut out = String::new();
+    for (i, (k, v)) in labels.iter().enumerate() {
+        assert!(valid_name(k), "invalid label name {k:?}");
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(k);
+        out.push_str("=\"");
+        out.push_str(&escape_label_value(v));
+        out.push('"');
+    }
+    out
+}
+
+/// Format a sample value the way Prometheus text exposition expects:
+/// `Display` for f64 (shortest round-trip; integral values print without
+/// a fraction).
+fn fmt_value(v: f64) -> String {
+    if v.is_nan() {
+        "NaN".into()
+    } else if v.is_infinite() {
+        (if v > 0.0 { "+Inf" } else { "-Inf" }).into()
+    } else {
+        format!("{v}")
+    }
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn register(
+        &self,
+        name: &str,
+        labels: &[(&str, &str)],
+        help: &str,
+        kind: MetricKind,
+        collect: Collector,
+    ) {
+        assert!(valid_name(name), "invalid metric name {name:?}");
+        assert!(name.starts_with("bear_"), "metric {name:?} must be prefixed bear_");
+        if kind == MetricKind::Counter {
+            assert!(name.ends_with("_total"), "counter {name:?} must end in _total");
+        }
+        let mut metrics = self.metrics.lock().expect("registry poisoned");
+        if let Some(prev) = metrics.iter().find(|m| m.name == name) {
+            assert!(
+                prev.kind == kind,
+                "metric {name:?} registered as {:?} and {kind:?}",
+                prev.kind
+            );
+        }
+        let labels = render_labels(labels);
+        assert!(
+            !metrics.iter().any(|m| m.name == name && m.labels == labels),
+            "duplicate series {name}{{{labels}}}"
+        );
+        metrics.push(Metric { name: name.to_string(), labels, help: help.to_string(), kind, collect });
+    }
+
+    /// Register a monotone counter (name must end in `_total`).
+    pub fn counter(
+        &self,
+        name: &str,
+        labels: &[(&str, &str)],
+        help: &str,
+        f: impl Fn() -> u64 + Send + Sync + 'static,
+    ) {
+        self.register(name, labels, help, MetricKind::Counter, Box::new(move || Collected::Value(f() as f64)));
+    }
+
+    /// Register a gauge (any instantaneous value).
+    pub fn gauge(
+        &self,
+        name: &str,
+        labels: &[(&str, &str)],
+        help: &str,
+        f: impl Fn() -> f64 + Send + Sync + 'static,
+    ) {
+        self.register(name, labels, help, MetricKind::Gauge, Box::new(move || Collected::Value(f())));
+    }
+
+    /// Register a histogram collected as a [`HistogramSnapshot`].
+    pub fn histogram(
+        &self,
+        name: &str,
+        labels: &[(&str, &str)],
+        help: &str,
+        f: impl Fn() -> HistogramSnapshot + Send + Sync + 'static,
+    ) {
+        self.register(name, labels, help, MetricKind::Histogram, Box::new(move || Collected::Histogram(f())));
+    }
+
+    /// Render the full exposition. Groups all series of one name under a
+    /// single HELP/TYPE block, in first-registration order.
+    pub fn render(&self) -> String {
+        let metrics = self.metrics.lock().expect("registry poisoned");
+        let mut out = String::new();
+        let mut done: Vec<&str> = Vec::new();
+        for m in metrics.iter() {
+            if done.contains(&m.name.as_str()) {
+                continue;
+            }
+            done.push(&m.name);
+            out.push_str(&format!("# HELP {} {}\n", m.name, m.help));
+            out.push_str(&format!("# TYPE {} {}\n", m.name, m.kind.exposition()));
+            for s in metrics.iter().filter(|s| s.name == m.name) {
+                match (s.collect)() {
+                    Collected::Value(v) => {
+                        if s.labels.is_empty() {
+                            out.push_str(&format!("{} {}\n", s.name, fmt_value(v)));
+                        } else {
+                            out.push_str(&format!("{}{{{}}} {}\n", s.name, s.labels, fmt_value(v)));
+                        }
+                    }
+                    Collected::Histogram(h) => render_histogram(&mut out, s, &h),
+                }
+            }
+        }
+        out
+    }
+}
+
+fn render_histogram(out: &mut String, m: &Metric, h: &HistogramSnapshot) {
+    let with = |extra: &str| -> String {
+        if m.labels.is_empty() {
+            format!("{{{extra}}}")
+        } else {
+            format!("{{{},{extra}}}", m.labels)
+        }
+    };
+    for (le, cum) in h.cumulative_nonempty() {
+        out.push_str(&format!(
+            "{}_bucket{} {}\n",
+            m.name,
+            with(&format!("le=\"{}\"", fmt_value(le))),
+            cum
+        ));
+    }
+    out.push_str(&format!("{}_bucket{} {}\n", m.name, with("le=\"+Inf\""), h.count()));
+    let plain = if m.labels.is_empty() { String::new() } else { format!("{{{}}}", m.labels) };
+    out.push_str(&format!("{}_sum{} {}\n", m.name, plain, h.sum_micros()));
+    out.push_str(&format!("{}_count{} {}\n", m.name, plain, h.count()));
+}
+
+/// Structural validation of an exposition body — shared by tests and the
+/// CI scrape gate (`cargo test` side): every line is a comment or a
+/// `name{labels} value` sample, every sample's name appeared in a
+/// preceding `# TYPE` block, and values parse as floats. Returns the
+/// offending line on failure.
+pub fn validate_exposition(body: &str) -> Result<usize, String> {
+    let mut typed: Vec<String> = Vec::new();
+    let mut samples = 0usize;
+    for (ln, line) in body.lines().enumerate() {
+        let fail = |msg: &str| Err(format!("line {}: {msg}: {line:?}", ln + 1));
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.split_whitespace();
+            let (Some(name), Some(kind)) = (it.next(), it.next()) else {
+                return fail("malformed TYPE");
+            };
+            if !valid_name(name) || !matches!(kind, "counter" | "gauge" | "histogram") {
+                return fail("malformed TYPE");
+            }
+            typed.push(name.to_string());
+            continue;
+        }
+        if line.starts_with('#') {
+            continue; // HELP / comments
+        }
+        // sample: name[{labels}] value
+        let (series, value) = match line.rsplit_once(' ') {
+            Some(x) => x,
+            None => return fail("no value"),
+        };
+        if value.parse::<f64>().is_err() && !matches!(value, "+Inf" | "-Inf" | "NaN") {
+            return fail("unparseable value");
+        }
+        let name = series.split('{').next().unwrap_or(series);
+        if !valid_name(name) {
+            return fail("invalid metric name");
+        }
+        if series.contains('{') && !series.ends_with('}') {
+            return fail("unclosed label set");
+        }
+        // histogram child series belong to their base name's TYPE block
+        let base = name
+            .strip_suffix("_bucket")
+            .or_else(|| name.strip_suffix("_sum"))
+            .or_else(|| name.strip_suffix("_count"))
+            .filter(|b| typed.iter().any(|t| t.as_str() == *b));
+        let owner = base.unwrap_or(name);
+        if !typed.iter().any(|t| t.as_str() == owner) {
+            return fail("sample without a preceding TYPE");
+        }
+        samples += 1;
+    }
+    Ok(samples)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::metrics::LatencyHistogram;
+    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    #[test]
+    fn counters_and_gauges_read_live_atomics() {
+        let reg = Registry::new();
+        let hits = Arc::new(AtomicU64::new(0));
+        let h = hits.clone();
+        reg.counter("bear_hits_total", &[], "hits", move || h.load(Ordering::Relaxed));
+        reg.gauge("bear_temp", &[], "temperature", || 3.5);
+        hits.store(7, Ordering::Relaxed);
+        let body = reg.render();
+        assert!(body.contains("# TYPE bear_hits_total counter\n"), "{body}");
+        assert!(body.contains("bear_hits_total 7\n"), "{body}");
+        assert!(body.contains("bear_temp 3.5\n"), "{body}");
+        // the registry holds no copies: bumping the atomic changes the scrape
+        hits.store(9, Ordering::Relaxed);
+        assert!(reg.render().contains("bear_hits_total 9\n"));
+        assert!(validate_exposition(&body).is_ok());
+    }
+
+    #[test]
+    fn labeled_series_share_one_type_block() {
+        let reg = Registry::new();
+        for (i, addr) in ["a:1", "b:2"].iter().enumerate() {
+            reg.gauge(
+                "bear_backend_up",
+                &[("backend", &i.to_string()), ("addr", addr)],
+                "backend liveness",
+                move || i as f64,
+            );
+        }
+        let body = reg.render();
+        assert_eq!(body.matches("# TYPE bear_backend_up gauge").count(), 1, "{body}");
+        assert!(body.contains("bear_backend_up{backend=\"0\",addr=\"a:1\"} 0\n"), "{body}");
+        assert!(body.contains("bear_backend_up{backend=\"1\",addr=\"b:2\"} 1\n"), "{body}");
+        assert!(validate_exposition(&body).is_ok());
+    }
+
+    #[test]
+    fn histogram_exposes_cumulative_buckets_sum_count() {
+        let reg = Registry::new();
+        let hist = Arc::new(LatencyHistogram::new());
+        hist.record(Duration::from_micros(100));
+        hist.record(Duration::from_micros(100));
+        hist.record(Duration::from_micros(90_000));
+        let h = hist.clone();
+        reg.histogram("bear_latency_us", &[], "request latency", move || h.snapshot());
+        let body = reg.render();
+        assert!(body.contains("# TYPE bear_latency_us histogram\n"), "{body}");
+        assert!(body.contains("bear_latency_us_bucket{le=\"+Inf\"} 3\n"), "{body}");
+        assert!(body.contains("bear_latency_us_count 3\n"), "{body}");
+        assert!(body.contains(&format!("bear_latency_us_sum {}\n", 100 + 100 + 90_000)), "{body}");
+        // cumulative: the +Inf line equals count, intermediate ≤ count
+        assert!(validate_exposition(&body).is_ok());
+    }
+
+    #[test]
+    fn label_values_are_escaped() {
+        let reg = Registry::new();
+        reg.gauge("bear_weird", &[("path", "a\"b\\c\nd")], "escaping", || 1.0);
+        let body = reg.render();
+        assert!(body.contains("bear_weird{path=\"a\\\"b\\\\c\\nd\"} 1\n"), "{body}");
+    }
+
+    #[test]
+    #[should_panic(expected = "must be prefixed bear_")]
+    fn unprefixed_names_are_rejected() {
+        Registry::new().gauge("latency", &[], "x", || 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "must end in _total")]
+    fn counters_must_end_in_total() {
+        Registry::new().counter("bear_hits", &[], "x", || 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate series")]
+    fn duplicate_series_are_rejected() {
+        let reg = Registry::new();
+        reg.gauge("bear_x", &[], "x", || 0.0);
+        reg.gauge("bear_x", &[], "x", || 1.0);
+    }
+
+    #[test]
+    fn validator_rejects_malformed_lines() {
+        assert!(validate_exposition("garbage line here\n").is_err());
+        assert!(validate_exposition("bear_x 1\n").is_err()); // no TYPE
+        assert!(validate_exposition("# TYPE bear_x gauge\nbear_x notanumber\n").is_err());
+        assert!(validate_exposition("# TYPE bear_x gauge\nbear_x{open 1\n").is_err());
+        assert_eq!(validate_exposition("# TYPE bear_x gauge\nbear_x 1\n"), Ok(1));
+    }
+}

@@ -1,0 +1,215 @@
+//! Training-internals telemetry: the sketch/BFGS health numbers the
+//! paper's analysis says to watch (Count Sketch collision mass, MISSION
+//! arXiv:1806.04310's failure mode; BFGS curvature-pair conditioning,
+//! BEAR arXiv:2010.13829 Sec. 5), published per generation.
+//!
+//! Flow: the trainer fills a [`TelemetrySnapshot`] each publication →
+//! the [`crate::online::Publisher`] writes it as `train_*` keys on the
+//! MANIFEST line (the tolerant `key = value` dialect ignores them on old
+//! readers) → the serving-side reloader parses it into the shared
+//! [`TelemetryGauges`] → `/statz` appends the keys (only once a
+//! telemetry-carrying generation loads, so pre-telemetry `/statz` stays
+//! byte-identical) and `/v1/metricz` exposes them as `bear_train_*`
+//! gauges.
+//!
+//! Values round-trip losslessly: Rust's f64 `Display` is
+//! shortest-round-trip, and `from_kv` reads exactly what `to_kv` wrote.
+
+use crate::serve::metrics::AtomicF64;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+/// One generation's training-health snapshot.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct TelemetrySnapshot {
+    /// Training loss of the last minibatch.
+    pub loss: f64,
+    /// ℓ₂ norm of the last minibatch gradient.
+    pub grad_norm: f64,
+    /// Step size η at the last iteration.
+    pub step_eta: f64,
+    /// ℓ₂ norm of the last (clipped) descent direction.
+    pub step_norm: f64,
+    /// Estimated fraction of sketch energy NOT explained by the top-k
+    /// heavy hitters ∈ [0, 1] — the collision/noise mass that MISSION's
+    /// analysis ties to memory–accuracy degradation.
+    pub collision_rate: f64,
+    /// 1 − Jaccard(top-k before, top-k after) of the last heap refresh
+    /// ∈ [0, 1]: how fast the selected support is churning.
+    pub hh_churn: f64,
+    /// min / max of sᵀr over retained curvature pairs (δ-regularized);
+    /// their ratio is the condition proxy for the two-loop recursion.
+    pub curvature_min: f64,
+    pub curvature_max: f64,
+    /// Retained (s, r) pairs.
+    pub curvature_pairs: u64,
+    /// Trainer iterations at publication time.
+    pub iterations: u64,
+}
+
+/// MANIFEST key order (also the `/statz` append order). Keep stable:
+/// tests assert it and operators grep it.
+pub const TELEMETRY_KEYS: [&str; 10] = [
+    "train_loss",
+    "train_grad_norm",
+    "train_step_eta",
+    "train_step_norm",
+    "train_collision_rate",
+    "train_hh_churn",
+    "train_curvature_min",
+    "train_curvature_max",
+    "train_curvature_pairs",
+    "train_iterations",
+];
+
+impl TelemetrySnapshot {
+    /// `(key, value)` pairs in [`TELEMETRY_KEYS`] order, ready for the
+    /// MANIFEST's `key = value` dialect.
+    pub fn to_kv(&self) -> Vec<(&'static str, String)> {
+        vec![
+            ("train_loss", format!("{}", self.loss)),
+            ("train_grad_norm", format!("{}", self.grad_norm)),
+            ("train_step_eta", format!("{}", self.step_eta)),
+            ("train_step_norm", format!("{}", self.step_norm)),
+            ("train_collision_rate", format!("{}", self.collision_rate)),
+            ("train_hh_churn", format!("{}", self.hh_churn)),
+            ("train_curvature_min", format!("{}", self.curvature_min)),
+            ("train_curvature_max", format!("{}", self.curvature_max)),
+            ("train_curvature_pairs", format!("{}", self.curvature_pairs)),
+            ("train_iterations", format!("{}", self.iterations)),
+        ]
+    }
+
+    /// Rebuild from parsed `key = value` pairs. `None` unless *every*
+    /// key is present and parses — a MANIFEST either carries the full
+    /// telemetry line set or none of it.
+    pub fn from_kv<'a>(mut lookup: impl FnMut(&str) -> Option<&'a str>) -> Option<Self> {
+        let f = |v: &str| v.parse::<f64>().ok();
+        let u = |v: &str| v.parse::<u64>().ok();
+        Some(Self {
+            loss: f(lookup("train_loss")?)?,
+            grad_norm: f(lookup("train_grad_norm")?)?,
+            step_eta: f(lookup("train_step_eta")?)?,
+            step_norm: f(lookup("train_step_norm")?)?,
+            collision_rate: f(lookup("train_collision_rate")?)?,
+            hh_churn: f(lookup("train_hh_churn")?)?,
+            curvature_min: f(lookup("train_curvature_min")?)?,
+            curvature_max: f(lookup("train_curvature_max")?)?,
+            curvature_pairs: u(lookup("train_curvature_pairs")?)?,
+            iterations: u(lookup("train_iterations")?)?,
+        })
+    }
+}
+
+/// The serving-side live copy: set by the reloader when a
+/// telemetry-carrying generation swaps in, read lock-free by `/statz`
+/// and `/v1/metricz` scrapes. `get()` is `None` until the first such
+/// generation — the gate that keeps pre-telemetry `/statz` byte-stable.
+#[derive(Debug, Default)]
+pub struct TelemetryGauges {
+    present: AtomicBool,
+    loss: AtomicF64,
+    grad_norm: AtomicF64,
+    step_eta: AtomicF64,
+    step_norm: AtomicF64,
+    collision_rate: AtomicF64,
+    hh_churn: AtomicF64,
+    curvature_min: AtomicF64,
+    curvature_max: AtomicF64,
+    curvature_pairs: AtomicU64,
+    iterations: AtomicU64,
+}
+
+impl TelemetryGauges {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn publish(&self, s: &TelemetrySnapshot) {
+        self.loss.set(s.loss);
+        self.grad_norm.set(s.grad_norm);
+        self.step_eta.set(s.step_eta);
+        self.step_norm.set(s.step_norm);
+        self.collision_rate.set(s.collision_rate);
+        self.hh_churn.set(s.hh_churn);
+        self.curvature_min.set(s.curvature_min);
+        self.curvature_max.set(s.curvature_max);
+        self.curvature_pairs.store(s.curvature_pairs, Ordering::Relaxed);
+        self.iterations.store(s.iterations, Ordering::Relaxed);
+        self.present.store(true, Ordering::Release);
+    }
+
+    pub fn get(&self) -> Option<TelemetrySnapshot> {
+        if !self.present.load(Ordering::Acquire) {
+            return None;
+        }
+        Some(TelemetrySnapshot {
+            loss: self.loss.get(),
+            grad_norm: self.grad_norm.get(),
+            step_eta: self.step_eta.get(),
+            step_norm: self.step_norm.get(),
+            collision_rate: self.collision_rate.get(),
+            hh_churn: self.hh_churn.get(),
+            curvature_min: self.curvature_min.get(),
+            curvature_max: self.curvature_max.get(),
+            curvature_pairs: self.curvature_pairs.load(Ordering::Relaxed),
+            iterations: self.iterations.load(Ordering::Relaxed),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> TelemetrySnapshot {
+        TelemetrySnapshot {
+            loss: 0.693_147_180_559_945_3,
+            grad_norm: 1e-7,
+            step_eta: 0.05,
+            step_norm: 3.25,
+            collision_rate: 0.125,
+            hh_churn: 0.4,
+            curvature_min: 1e-4,
+            curvature_max: 12.5,
+            curvature_pairs: 5,
+            iterations: 1024,
+        }
+    }
+
+    #[test]
+    fn kv_roundtrip_is_lossless() {
+        let s = sample();
+        let kv = s.to_kv();
+        assert_eq!(kv.len(), TELEMETRY_KEYS.len());
+        for ((k, _), want) in kv.iter().zip(TELEMETRY_KEYS) {
+            assert_eq!(*k, want, "key order drifted");
+        }
+        let back = TelemetrySnapshot::from_kv(|key| {
+            kv.iter().find(|(k, _)| *k == key).map(|(_, v)| v.as_str())
+        })
+        .unwrap();
+        assert_eq!(back, s);
+    }
+
+    #[test]
+    fn partial_kv_yields_none() {
+        let s = sample();
+        let kv = s.to_kv();
+        // drop one key: the whole set is rejected
+        let back = TelemetrySnapshot::from_kv(|key| {
+            if key == "train_hh_churn" {
+                return None;
+            }
+            kv.iter().find(|(k, _)| *k == key).map(|(_, v)| v.as_str())
+        });
+        assert!(back.is_none());
+    }
+
+    #[test]
+    fn gauges_gate_on_first_publish() {
+        let g = TelemetryGauges::new();
+        assert!(g.get().is_none());
+        g.publish(&sample());
+        assert_eq!(g.get(), Some(sample()));
+    }
+}

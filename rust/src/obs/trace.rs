@@ -1,0 +1,162 @@
+//! Compact distributed trace context: a u64 trace id + u64 span id,
+//! carried on the wire in one `x-bear-trace` header.
+//!
+//! The encoding is deliberately tiny and dependency-free — two
+//! zero-padded lowercase hex words joined by `-`
+//! (`0123456789abcdef-fedcba9876543210`) — so the balancer can stamp it
+//! onto every scatter fan-out for ~32 bytes per request, and `loadgen`
+//! can print ids that grep straight into a worker's `/v1/tracez` dump.
+//!
+//! Ids come from splitmix64 over wall-clock nanos ⊕ a process counter:
+//! no RNG state to seed or lock, and a child span id is a pure function
+//! of (parent span, fan-out index), so the same scatter re-derives the
+//! same child ids — handy when joining balancer and worker dumps.
+//!
+//! A zero trace id is the "no trace" sentinel everywhere (flight-recorder
+//! slots, parsers), so generation and parsing both reject 0.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// The one trace header. Lowercase (HTTP header names are
+/// case-insensitive; `serve::http` compares case-insensitively).
+pub const TRACE_HEADER: &str = "x-bear-trace";
+
+/// SplitMix64 — the standard 64-bit finalizer-style mixer. Public
+/// because the recorder and tests reuse it for deterministic id
+/// derivation.
+#[inline]
+pub fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = x;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// A request's position in a distributed trace: which trace it belongs
+/// to and which span within it this hop is.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct TraceContext {
+    /// Shared by every hop of one logical request. Never 0.
+    pub trace_id: u64,
+    /// This hop's span. The balancer's span is the parent of each
+    /// shard-worker span it fans out to.
+    pub span_id: u64,
+}
+
+/// Monotone per-process counter mixed into fresh ids so two roots
+/// generated in the same clock tick still differ.
+static FRESH_COUNTER: AtomicU64 = AtomicU64::new(0);
+
+impl TraceContext {
+    /// A brand-new root trace (balancer edge, loadgen, or a worker hit
+    /// directly without a header).
+    pub fn fresh() -> Self {
+        let nanos = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_nanos() as u64)
+            .unwrap_or(0);
+        let n = FRESH_COUNTER.fetch_add(1, Ordering::Relaxed);
+        let pid = std::process::id() as u64;
+        let mut trace_id = splitmix64(nanos ^ n.wrapping_mul(0x9E37) ^ (pid << 32));
+        if trace_id == 0 {
+            trace_id = 1;
+        }
+        let mut span_id = splitmix64(trace_id);
+        if span_id == 0 {
+            span_id = 1;
+        }
+        Self { trace_id, span_id }
+    }
+
+    /// The child context for fan-out leg `index`: same trace, span id
+    /// derived deterministically from (parent span, index).
+    pub fn child(&self, index: u64) -> Self {
+        let mut span_id = splitmix64(self.span_id ^ splitmix64(index));
+        if span_id == 0 {
+            span_id = 1;
+        }
+        Self { trace_id: self.trace_id, span_id }
+    }
+
+    /// Wire form: `{trace:016x}-{span:016x}`.
+    pub fn encode(&self) -> String {
+        format!("{:016x}-{:016x}", self.trace_id, self.span_id)
+    }
+
+    /// Parse a header value. Tolerant of surrounding whitespace and
+    /// short (unpadded) hex words; `None` on anything else — a malformed
+    /// header downgrades to "no trace", never an error. Must not panic
+    /// on arbitrary bytes (property-tested).
+    pub fn parse(s: &str) -> Option<Self> {
+        let s = s.trim();
+        let (a, b) = s.split_once('-')?;
+        let trace_id = parse_hex_u64(a)?;
+        let span_id = parse_hex_u64(b)?;
+        if trace_id == 0 {
+            return None; // 0 is the no-trace sentinel
+        }
+        Some(Self { trace_id, span_id })
+    }
+}
+
+/// 1..=16 lowercase/uppercase hex chars → u64.
+fn parse_hex_u64(s: &str) -> Option<u64> {
+    if s.is_empty() || s.len() > 16 || !s.bytes().all(|b| b.is_ascii_hexdigit()) {
+        return None;
+    }
+    u64::from_str_radix(s, 16).ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encode_parse_roundtrips() {
+        for seed in 0..200u64 {
+            let t = TraceContext {
+                trace_id: splitmix64(seed).max(1),
+                span_id: splitmix64(seed ^ 0xFFFF),
+            };
+            assert_eq!(TraceContext::parse(&t.encode()), Some(t));
+        }
+    }
+
+    #[test]
+    fn parse_tolerates_whitespace_and_short_hex() {
+        let t = TraceContext::parse("  ab-3  ").unwrap();
+        assert_eq!(t.trace_id, 0xab);
+        assert_eq!(t.span_id, 3);
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        for bad in ["", "-", "abc", "xyz-123", "1-2-3x", "0-5", &"f".repeat(40)] {
+            assert_eq!(TraceContext::parse(bad), None, "{bad:?}");
+        }
+        // 17 hex digits overflow the u64 word width
+        assert_eq!(TraceContext::parse("12345678901234567-1"), None);
+    }
+
+    #[test]
+    fn fresh_ids_are_distinct_and_nonzero() {
+        let a = TraceContext::fresh();
+        let b = TraceContext::fresh();
+        assert_ne!(a.trace_id, 0);
+        assert_ne!(a.span_id, 0);
+        assert_ne!(a.trace_id, b.trace_id);
+    }
+
+    #[test]
+    fn children_share_trace_and_rederive_deterministically() {
+        let root = TraceContext::fresh();
+        let c0 = root.child(0);
+        let c1 = root.child(1);
+        assert_eq!(c0.trace_id, root.trace_id);
+        assert_eq!(c1.trace_id, root.trace_id);
+        assert_ne!(c0.span_id, c1.span_id);
+        assert_ne!(c0.span_id, root.span_id);
+        assert_eq!(root.child(0), c0); // pure function of (parent, index)
+    }
+}

@@ -184,6 +184,9 @@ fn publish_generation(
         model = model.without_sketch();
     }
     let drift = prev.as_ref().map(|p| drift_between(p, &model));
+    // stamp this generation's training-health telemetry onto its manifest
+    // (selectors that don't instrument themselves publish a plain one)
+    publisher.set_telemetry(sel.telemetry());
     let publication = publisher.publish_sharded(&model, cfg.shards.max(1))?;
     let shard_note =
         if cfg.shards > 1 { format!(", {} shards", cfg.shards) } else { String::new() };
@@ -241,6 +244,10 @@ mod tests {
         assert!((0.0..=1.0).contains(&drift.topk_jaccard));
         let man = Manifest::read(&report.manifest).unwrap();
         assert_eq!(man.generation, 4);
+        // BEAR instruments itself ⇒ telemetry rides every manifest
+        let t = man.telemetry.expect("BEAR publishes train_* telemetry");
+        assert_eq!(t.iterations, 14);
+        assert!((0.0..=1.0).contains(&t.collision_rate), "{t:?}");
         let m = ServableModel::load(&man.snapshot_path(&report.manifest)).unwrap();
         assert_eq!(m.generation, 4);
         assert!(m.has_sketch());

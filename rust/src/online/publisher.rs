@@ -25,6 +25,7 @@
 
 use crate::cli::parse_kv;
 use crate::coordinator::checkpoint::{crc32, write_atomic};
+use crate::obs::TelemetrySnapshot;
 use crate::serve::shard::{shard_file_name, MAX_SHARDS};
 use crate::serve::ServableModel;
 use anyhow::{bail, Context, Result};
@@ -37,7 +38,7 @@ pub const MANIFEST_FILE: &str = "MANIFEST";
 /// manifest for the whole shard set (`shards = K`, one CRC per shard):
 /// readers see every shard of a generation appear atomically, because all
 /// shard files are durable before the manifest swings.
-#[derive(Clone, Debug, PartialEq, Eq)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct Manifest {
     /// Latest published generation (monotonically increasing from 1).
     pub generation: u64,
@@ -53,6 +54,11 @@ pub struct Manifest {
     pub shards: usize,
     /// Per-shard whole-file CRCs (`len == shards`; `[crc32]` when 1).
     pub shard_crcs: Vec<u32>,
+    /// Training-health telemetry of the generation (`train_*` keys).
+    /// `None` for manifests written by uninstrumented trainers — the
+    /// `key = value` dialect ignores unknown keys, so old readers skip
+    /// these lines and new readers tolerate their absence.
+    pub telemetry: Option<TelemetrySnapshot>,
 }
 
 impl Manifest {
@@ -80,7 +86,8 @@ impl Manifest {
             let key = format!("crc32_{i}");
             shard_crcs.push(get(&key)?.parse().with_context(|| format!("manifest {key}"))?);
         }
-        Ok(Self { generation, file, crc32: crc, shards, shard_crcs })
+        let telemetry = TelemetrySnapshot::from_kv(|k| kv.get(k).map(String::as_str));
+        Ok(Self { generation, file, crc32: crc, shards, shard_crcs, telemetry })
     }
 
     /// Atomically write this manifest at `path` (tmp + rename).
@@ -93,6 +100,11 @@ impl Manifest {
             body.push_str(&format!("shards = {}\n", self.shards));
             for (i, crc) in self.shard_crcs.iter().enumerate().skip(1) {
                 body.push_str(&format!("crc32_{i} = {crc}\n"));
+            }
+        }
+        if let Some(t) = &self.telemetry {
+            for (k, v) in t.to_kv() {
+                body.push_str(&format!("{k} = {v}\n"));
             }
         }
         write_atomic(body.as_bytes(), path)
@@ -165,6 +177,9 @@ pub struct Publisher {
     /// Generations retained on disk (≥ 1; older snapshots are pruned).
     keep: usize,
     next_generation: u64,
+    /// Telemetry stamped onto the next manifest (set per publication by
+    /// the training loop via [`Publisher::set_telemetry`]).
+    telemetry: Option<TelemetrySnapshot>,
 }
 
 fn generation_file(generation: u64) -> String {
@@ -184,7 +199,15 @@ impl Publisher {
         } else {
             1
         };
-        Ok(Self { dir, keep: keep.max(1), next_generation })
+        Ok(Self { dir, keep: keep.max(1), next_generation, telemetry: None })
+    }
+
+    /// Set the training-health telemetry the next publication's manifest
+    /// will carry (`None` clears it). The training loop refreshes this
+    /// before every publication so the `train_*` keys describe the
+    /// generation they ride with.
+    pub fn set_telemetry(&mut self, telemetry: Option<TelemetrySnapshot>) {
+        self.telemetry = telemetry;
     }
 
     /// The directory's manifest path (what `bear serve --watch-manifest`
@@ -209,8 +232,15 @@ impl Publisher {
         let bytes = model.encode_with_generation(generation);
         let crc = crc32(&bytes);
         write_atomic(&bytes, &path)?;
-        Manifest { generation, file, crc32: crc, shards: 1, shard_crcs: vec![crc] }
-            .write(&self.manifest_path())?;
+        Manifest {
+            generation,
+            file,
+            crc32: crc,
+            shards: 1,
+            shard_crcs: vec![crc],
+            telemetry: self.telemetry,
+        }
+        .write(&self.manifest_path())?;
         self.next_generation += 1;
         self.prune();
         Ok(Publication { generation, path, crc32: crc, bytes: bytes.len() })
@@ -260,6 +290,7 @@ impl Publisher {
             crc32: crcs[0],
             shards,
             shard_crcs: crcs.clone(),
+            telemetry: self.telemetry,
         }
         .write(&self.manifest_path())?;
         self.next_generation += 1;
@@ -409,6 +440,43 @@ mod tests {
         for f in &pb.files {
             assert!(!f.exists(), "{f:?} should have been pruned");
         }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn telemetry_rides_the_manifest_and_old_manifests_read_as_none() {
+        let dir = tmpdir("telemetry");
+        let mut p = Publisher::new(&dir, 4).unwrap();
+        // without telemetry: no train_* keys on the wire
+        p.publish(&toy_model(1.0)).unwrap();
+        let text = std::fs::read_to_string(p.manifest_path()).unwrap();
+        assert!(!text.contains("train_"), "{text}");
+        assert_eq!(Manifest::read(&p.manifest_path()).unwrap().telemetry, None);
+        // with telemetry: every key present, lossless round-trip
+        let snap = crate::obs::TelemetrySnapshot {
+            loss: 0.25,
+            grad_norm: 1.5e-3,
+            step_eta: 0.05,
+            step_norm: 2.0,
+            collision_rate: 0.125,
+            hh_churn: 0.5,
+            curvature_min: 1e-4,
+            curvature_max: 3.5,
+            curvature_pairs: 5,
+            iterations: 77,
+        };
+        p.set_telemetry(Some(snap));
+        p.publish(&toy_model(2.0)).unwrap();
+        let man = Manifest::read(&p.manifest_path()).unwrap();
+        assert_eq!(man.telemetry, Some(snap));
+        let text = std::fs::read_to_string(p.manifest_path()).unwrap();
+        for key in crate::obs::TELEMETRY_KEYS {
+            assert!(text.contains(key), "missing {key} in {text}");
+        }
+        // sharded publications carry it too
+        p.set_telemetry(Some(snap));
+        p.publish_sharded(&toy_model(3.0), 2).unwrap();
+        assert_eq!(Manifest::read(&p.manifest_path()).unwrap().telemetry, Some(snap));
         std::fs::remove_dir_all(&dir).ok();
     }
 

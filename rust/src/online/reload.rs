@@ -25,6 +25,7 @@
 //! across the fleet without ever dropping capacity.
 
 use crate::coordinator::checkpoint::crc32;
+use crate::obs::TelemetryGauges;
 use crate::online::drift::{drift_between, DriftStats};
 use crate::online::publisher::Manifest;
 use crate::serve::metrics::AtomicF64;
@@ -145,6 +146,10 @@ pub struct ReloadStats {
     /// Drift of the latest swap (see [`crate::online::drift`]).
     pub topk_jaccard: AtomicF64,
     pub coord_norm_delta: AtomicF64,
+    /// Training-health telemetry of the serving generation. Empty
+    /// (`get() == None`) until a telemetry-carrying manifest swaps in —
+    /// the gate that keeps pre-telemetry `/statz` bodies byte-stable.
+    pub telemetry: TelemetryGauges,
 }
 
 impl ReloadStats {
@@ -156,6 +161,7 @@ impl ReloadStats {
             failures: AtomicU64::new(0),
             topk_jaccard: AtomicF64::new(d.topk_jaccard),
             coord_norm_delta: AtomicF64::new(d.coord_norm_delta),
+            telemetry: TelemetryGauges::new(),
         }
     }
 }
@@ -264,6 +270,9 @@ impl Reloader {
         self.stats.reloads.fetch_add(1, Ordering::Relaxed);
         self.stats.topk_jaccard.set(drift.topk_jaccard);
         self.stats.coord_norm_delta.set(drift.coord_norm_delta);
+        if let Some(t) = &manifest.telemetry {
+            self.stats.telemetry.publish(t);
+        }
         Ok(ReloadOutcome::Swapped { generation: manifest.generation, drift })
     }
 
@@ -378,6 +387,37 @@ mod tests {
             reloader.try_reload().unwrap(),
             ReloadOutcome::UpToDate { .. }
         ));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn telemetry_gauges_stay_empty_until_a_carrying_generation_swaps() {
+        let dir = tmpdir("telemetry");
+        let mut publisher = Publisher::new(&dir, 4).unwrap();
+        let p1 = publisher.publish(&toy_model(7, 1.0)).unwrap();
+        let holder = Arc::new(ModelHolder::new(Arc::new(
+            ServableModel::load(&p1.path).unwrap(),
+        )));
+        let stats = Arc::new(ReloadStats::new(p1.generation));
+        let reloader = Reloader::new(holder, publisher.manifest_path(), stats.clone());
+
+        // generation 2 without telemetry: gauges stay empty
+        publisher.publish(&toy_model(8, 2.0)).unwrap();
+        reloader.try_reload().unwrap();
+        assert!(stats.telemetry.get().is_none());
+
+        // generation 3 with telemetry: gauges fill on swap
+        let snap = crate::obs::TelemetrySnapshot {
+            loss: 0.5,
+            iterations: 42,
+            ..Default::default()
+        };
+        publisher.set_telemetry(Some(snap));
+        publisher.publish(&toy_model(9, 3.0)).unwrap();
+        reloader.try_reload().unwrap();
+        let got = stats.telemetry.get().expect("telemetry published on swap");
+        assert_eq!(got.iterations, 42);
+        assert_eq!(got.loss, 0.5);
         std::fs::remove_dir_all(&dir).ok();
     }
 }

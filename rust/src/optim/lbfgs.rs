@@ -115,6 +115,22 @@ impl SparseLbfgs {
         self.pairs.iter().map(|p| p.s.memory_bytes() + p.r.memory_bytes()).sum()
     }
 
+    /// `(min sᵀr, max sᵀr, pairs)` over the retained (δ-regularized)
+    /// history — the curvature-conditioning telemetry. The max/min ratio
+    /// proxies the condition number of the implicit H̃; a collapsing min
+    /// means sketch-collision noise is contaminating the secant pairs.
+    /// `None` with an empty history.
+    pub fn curvature_stats(&self) -> Option<(f64, f64, usize)> {
+        let mut it = self.pairs.iter().map(|p| 1.0 / p.rho);
+        let first = it.next()?;
+        let (mut lo, mut hi) = (first, first);
+        for sr in it {
+            lo = lo.min(sr);
+            hi = hi.max(sr);
+        }
+        Some((lo, hi, self.pairs.len()))
+    }
+
     /// Restrict-and-export the history aligned to an active set, for the
     /// PJRT two-loop artifact (dense `[τ × A]` blocks). Returns
     /// (S, R, rho) row-major; rows beyond the history are zero with rho 0.
@@ -321,6 +337,25 @@ mod tests {
         // padding row empty
         assert!(s[8..].iter().all(|&x| x == 0.0));
         assert_eq!(rho[2], 0.0);
+    }
+
+    #[test]
+    fn curvature_stats_track_retained_pairs() {
+        let mut l = SparseLbfgs::new(2);
+        assert_eq!(l.curvature_stats(), None);
+        let d = OLBFGS_DELTA;
+        l.push(sv(&[(0, 1.0)]), sv(&[(0, 2.0)])); // sᵀr̂ = 2 + δ
+        l.push(sv(&[(1, 1.0)]), sv(&[(1, 5.0)])); // sᵀr̂ = 5 + δ
+        let (lo, hi, n) = l.curvature_stats().unwrap();
+        assert_eq!(n, 2);
+        assert!((lo - (2.0 + d)).abs() < 1e-9, "{lo}");
+        assert!((hi - (5.0 + d)).abs() < 1e-9, "{hi}");
+        // ring eviction drops the oldest pair from the stats too
+        l.push(sv(&[(2, 1.0)]), sv(&[(2, 3.0)]));
+        let (lo, hi, n) = l.curvature_stats().unwrap();
+        assert_eq!(n, 2);
+        assert!((lo - (3.0 + d)).abs() < 1e-9, "{lo}");
+        assert!((hi - (5.0 + d)).abs() < 1e-9, "{hi}");
     }
 
     #[test]

@@ -21,6 +21,7 @@
 //! `Content-Length` body bytes — pipelined bytes after the body are left
 //! untouched for the next [`read_request`] call.
 
+use crate::obs::trace::{TraceContext, TRACE_HEADER};
 use std::borrow::Cow;
 use std::io::{BufRead, Read, Write};
 
@@ -39,6 +40,9 @@ pub struct Request {
     pub query: Option<String>,
     pub body: Vec<u8>,
     pub keep_alive: bool,
+    /// Parsed `x-bear-trace` header, if present and well-formed. A
+    /// malformed header reads as `None` (no trace), never an error.
+    pub trace: Option<TraceContext>,
 }
 
 impl Request {
@@ -154,10 +158,15 @@ fn read_line_bounded<R: BufRead>(
     }
 }
 
-/// Read headers: `Content-Length` and `Connection` are interpreted, the
-/// rest are skipped. `keep_alive` is updated in place.
-fn read_headers<R: BufRead>(r: &mut R, keep_alive: &mut bool) -> Result<usize, ReadError> {
+/// Read headers: `Content-Length`, `Connection` and the `x-bear-trace`
+/// trace context are interpreted, the rest are skipped. `keep_alive` is
+/// updated in place; returns `(content_length, trace)`.
+fn read_headers<R: BufRead>(
+    r: &mut R,
+    keep_alive: &mut bool,
+) -> Result<(usize, Option<TraceContext>), ReadError> {
     let mut content_len = 0usize;
+    let mut trace = None;
     let mut n_headers = 0usize;
     loop {
         let mut h = String::new();
@@ -166,7 +175,7 @@ fn read_headers<R: BufRead>(r: &mut R, keep_alive: &mut bool) -> Result<usize, R
         }
         let h = h.trim_end();
         if h.is_empty() {
-            return Ok(content_len);
+            return Ok((content_len, trace));
         }
         n_headers += 1;
         if n_headers > MAX_HEADERS {
@@ -186,6 +195,10 @@ fn read_headers<R: BufRead>(r: &mut R, keep_alive: &mut bool) -> Result<usize, R
                 } else if v.contains("keep-alive") {
                     *keep_alive = true;
                 }
+            } else if k == TRACE_HEADER {
+                // malformed trace values downgrade to "no trace"; a
+                // telemetry header must never 400 a request
+                trace = TraceContext::parse(v);
             }
         }
     }
@@ -212,7 +225,7 @@ pub fn read_request<R: BufRead>(r: &mut R) -> Result<Option<Request>, ReadError>
         .to_string();
     let version = parts.next().unwrap_or("HTTP/1.0");
     let mut keep_alive = version == "HTTP/1.1";
-    let content_len = read_headers(r, &mut keep_alive)?;
+    let (content_len, trace) = read_headers(r, &mut keep_alive)?;
     if content_len > MAX_BODY {
         return Err(ReadError::too_large(format!("body too large ({content_len} bytes)")));
     }
@@ -222,7 +235,7 @@ pub fn read_request<R: BufRead>(r: &mut R) -> Result<Option<Request>, ReadError>
         Some((p, q)) => (p.to_string(), Some(q.to_string())),
         None => (target, None),
     };
-    Ok(Some(Request { method, path, query, body, keep_alive }))
+    Ok(Some(Request { method, path, query, body, keep_alive, trace }))
 }
 
 /// Read one HTTP/1.x response. `Ok(None)` means clean EOF before a status
@@ -240,7 +253,7 @@ pub fn read_response<R: BufRead>(r: &mut R) -> Result<Option<Response>, ReadErro
         .next()
         .and_then(|s| s.parse().ok())
         .ok_or_else(|| ReadError::bad(format!("malformed status line {line:?}")))?;
-    let content_len = read_headers(r, &mut keep_alive)?;
+    let (content_len, _trace) = read_headers(r, &mut keep_alive)?;
     if content_len > MAX_BODY {
         return Err(ReadError::too_large(format!("response body too large ({content_len} bytes)")));
     }
@@ -275,8 +288,26 @@ pub fn write_request<W: Write>(
     body: &[u8],
     keep: bool,
 ) -> std::io::Result<()> {
+    write_request_traced(w, method, target, body, keep, None)
+}
+
+/// [`write_request`] carrying an `x-bear-trace` header. `None` emits the
+/// exact pre-trace wire bytes — untraced requests are byte-identical to
+/// what older clients sent.
+pub fn write_request_traced<W: Write>(
+    w: &mut W,
+    method: &str,
+    target: &str,
+    body: &[u8],
+    keep: bool,
+    trace: Option<&TraceContext>,
+) -> std::io::Result<()> {
+    let trace_line = match trace {
+        Some(t) => format!("{TRACE_HEADER}: {}\r\n", t.encode()),
+        None => String::new(),
+    };
     let head = format!(
-        "{method} {target} HTTP/1.1\r\nHost: bear\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
+        "{method} {target} HTTP/1.1\r\nHost: bear\r\nContent-Length: {}\r\nConnection: {}\r\n{trace_line}\r\n",
         body.len(),
         if keep { "keep-alive" } else { "close" }
     );
@@ -363,6 +394,41 @@ pub fn percent_encode(s: &str) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn trace_header_roundtrips_through_request_wire() {
+        let t = TraceContext { trace_id: 0xABCD, span_id: 0x1234 };
+        let mut wire = Vec::new();
+        write_request_traced(&mut wire, "POST", "/v1/predict", b"1:1\n", true, Some(&t)).unwrap();
+        let req = read_request(&mut Cursor::new(&wire)).unwrap().unwrap();
+        assert_eq!(req.trace, Some(t));
+        assert_eq!(req.body, b"1:1\n");
+        assert!(req.keep_alive);
+    }
+
+    #[test]
+    fn untraced_request_bytes_are_unchanged_and_parse_without_trace() {
+        let mut with_helper = Vec::new();
+        write_request(&mut with_helper, "GET", "/healthz", b"", false).unwrap();
+        let mut explicit_none = Vec::new();
+        write_request_traced(&mut explicit_none, "GET", "/healthz", b"", false, None).unwrap();
+        assert_eq!(with_helper, explicit_none);
+        assert!(!String::from_utf8_lossy(&with_helper).contains(TRACE_HEADER));
+        let req = read_request(&mut Cursor::new(&with_helper)).unwrap().unwrap();
+        assert_eq!(req.trace, None);
+    }
+
+    #[test]
+    fn malformed_trace_header_downgrades_to_none() {
+        let wire = b"GET /healthz HTTP/1.1\r\nx-bear-trace: not-a-trace!!\r\nContent-Length: 0\r\n\r\n";
+        let req = read_request(&mut Cursor::new(&wire[..])).unwrap().unwrap();
+        assert_eq!(req.trace, None);
+        // header-name case-insensitivity
+        let wire = b"GET /healthz HTTP/1.1\r\nX-Bear-Trace: ab-cd\r\nContent-Length: 0\r\n\r\n";
+        let req = read_request(&mut Cursor::new(&wire[..])).unwrap().unwrap();
+        assert_eq!(req.trace, Some(TraceContext { trace_id: 0xab, span_id: 0xcd }));
+    }
 
     #[test]
     fn query_param_first_value_wins_and_decodes() {

@@ -17,7 +17,7 @@
 //! request; a hard-down server therefore shows up as an error count, not
 //! a loadgen crash, which is what the chaos harnesses assert on.
 
-use crate::api::{format_query, BearClient, ClientConfig};
+use crate::api::{format_query, BearClient, ClientConfig, TraceContext};
 use crate::coordinator::experiments::RealData;
 use crate::data::DataSource;
 use crate::serve::metrics::{HistogramSnapshot, LatencyHistogram};
@@ -56,6 +56,36 @@ impl Default for LoadgenConfig {
     }
 }
 
+/// Merged per-stage client-side latency breakdown — where a request's
+/// time actually went, from [`crate::api::StageTimings`]. Connect is 0
+/// for pooled (reused) connections, so its histogram mean is also the
+/// effective re-dial rate signal.
+#[derive(Clone, Debug)]
+pub struct StageBreakdown {
+    /// TCP connect (fresh dials only; pooled sends record 0).
+    pub connect: HistogramSnapshot,
+    /// Request line + headers + body write.
+    pub send: HistogramSnapshot,
+    /// Send-complete → first response byte (server think time + ½ RTT).
+    pub first_byte: HistogramSnapshot,
+}
+
+impl StageBreakdown {
+    fn empty() -> Self {
+        Self {
+            connect: HistogramSnapshot::empty(),
+            send: HistogramSnapshot::empty(),
+            first_byte: HistogramSnapshot::empty(),
+        }
+    }
+
+    fn merge(&mut self, other: &Self) {
+        self.connect.merge(&other.connect);
+        self.send.merge(&other.send);
+        self.first_byte.merge(&other.first_byte);
+    }
+}
+
 /// Aggregated load-test result.
 #[derive(Clone, Debug)]
 pub struct LoadReport {
@@ -65,6 +95,8 @@ pub struct LoadReport {
     pub errors: u64,
     pub wall: Duration,
     pub latency: HistogramSnapshot,
+    /// Per-stage breakdown of the successful requests.
+    pub stages: StageBreakdown,
 }
 
 impl LoadReport {
@@ -145,61 +177,77 @@ pub fn run(addr: &str, cfg: &LoadgenConfig) -> Result<LoadReport> {
 
     let t0 = Instant::now();
     let deadline = cfg.duration.map(|d| t0 + d);
-    let per_thread: Vec<Result<(HistogramSnapshot, u64, u64, u64)>> =
-        std::thread::scope(|scope| {
-            let handles: Vec<_> = all_bodies
-                .iter()
-                .map(|bodies| {
-                    let targets = targets.clone();
-                    scope.spawn(move || -> Result<(HistogramSnapshot, u64, u64, u64)> {
-                        let hist = LatencyHistogram::new();
-                        let client = BearClient::with_addrs(targets, client_config());
-                        let (mut requests, mut queries, mut errors) = (0u64, 0u64, 0u64);
-                        let mut sent = 0usize;
-                        while !bodies.is_empty() {
-                            // count mode: one pass over the pool;
-                            // duration mode: cycle the pool until the deadline
-                            match deadline {
-                                None if sent >= bodies.len() => break,
-                                Some(dl) if Instant::now() >= dl => break,
-                                _ => {}
-                            }
-                            let body = &bodies[sent % bodies.len()];
-                            sent += 1;
-                            let nq = body.lines().count() as u64;
-                            let t = Instant::now();
-                            match client.predict_raw(body) {
-                                Ok(_) => {
-                                    hist.record(t.elapsed());
-                                    requests += 1;
-                                    queries += nq;
-                                }
-                                // non-200 or transport failure: one error;
-                                // the pool re-dials on the next request
-                                Err(_) => errors += 1,
-                            }
+    type ThreadResult = (HistogramSnapshot, StageBreakdown, u64, u64, u64);
+    let per_thread: Vec<Result<ThreadResult>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = all_bodies
+            .iter()
+            .map(|bodies| {
+                let targets = targets.clone();
+                scope.spawn(move || -> Result<ThreadResult> {
+                    let hist = LatencyHistogram::new();
+                    let (connect_h, send_h, first_byte_h) =
+                        (LatencyHistogram::new(), LatencyHistogram::new(), LatencyHistogram::new());
+                    let client = BearClient::with_addrs(targets, client_config());
+                    let (mut requests, mut queries, mut errors) = (0u64, 0u64, 0u64);
+                    let mut sent = 0usize;
+                    while !bodies.is_empty() {
+                        // count mode: one pass over the pool;
+                        // duration mode: cycle the pool until the deadline
+                        match deadline {
+                            None if sent >= bodies.len() => break,
+                            Some(dl) if Instant::now() >= dl => break,
+                            _ => {}
                         }
-                        Ok((hist.snapshot(), requests, queries, errors))
-                    })
+                        let body = &bodies[sent % bodies.len()];
+                        sent += 1;
+                        let nq = body.lines().count() as u64;
+                        // every request roots its own trace: the server
+                        // adopts the span, so a slow loadgen request is
+                        // findable in the server's /v1/tracez by trace id
+                        let trace = TraceContext::fresh();
+                        let t = Instant::now();
+                        match client.predict_timed(body, Some(&trace)) {
+                            Ok((_, stages)) => {
+                                hist.record(t.elapsed());
+                                connect_h.record(Duration::from_micros(stages.connect_us));
+                                send_h.record(Duration::from_micros(stages.send_us));
+                                first_byte_h.record(Duration::from_micros(stages.first_byte_us));
+                                requests += 1;
+                                queries += nq;
+                            }
+                            // non-200 or transport failure: one error;
+                            // the pool re-dials on the next request
+                            Err(_) => errors += 1,
+                        }
+                    }
+                    let stages = StageBreakdown {
+                        connect: connect_h.snapshot(),
+                        send: send_h.snapshot(),
+                        first_byte: first_byte_h.snapshot(),
+                    };
+                    Ok((hist.snapshot(), stages, requests, queries, errors))
                 })
-                .collect();
-            handles
-                .into_iter()
-                .map(|h| {
-                    h.join().unwrap_or_else(|_| Err(anyhow::anyhow!("loadgen thread panicked")))
-                })
-                .collect()
-        });
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| {
+                h.join().unwrap_or_else(|_| Err(anyhow::anyhow!("loadgen thread panicked")))
+            })
+            .collect()
+    });
     let wall = t0.elapsed();
 
     let mut latency = HistogramSnapshot::empty();
+    let mut stages = StageBreakdown::empty();
     let (mut requests, mut queries, mut errors) = (0u64, 0u64, 0u64);
     for r in per_thread {
-        let (h, rq, q, e) = r?;
+        let (h, s, rq, q, e) = r?;
         latency.merge(&h);
+        stages.merge(&s);
         requests += rq;
         queries += q;
         errors += e;
     }
-    Ok(LoadReport { threads, requests, queries, errors, wall, latency })
+    Ok(LoadReport { threads, requests, queries, errors, wall, latency, stages })
 }

@@ -171,6 +171,29 @@ impl HistogramSnapshot {
     pub fn p999_micros(&self) -> f64 {
         self.percentile_micros(0.999)
     }
+
+    /// Total of all recorded observations in µs (the `_sum` series of a
+    /// Prometheus-style histogram exposition).
+    pub fn sum_micros(&self) -> u64 {
+        self.sum_micros
+    }
+
+    /// Cumulative `(le_micros, count_at_or_below)` pairs for exposition:
+    /// one entry per **non-empty** bucket, in increasing bound order.
+    /// Skipping empty buckets loses nothing — a cumulative count only
+    /// changes where a bucket holds mass — and keeps `/metricz` compact
+    /// (≤ observed-spread lines instead of all 160 buckets).
+    pub fn cumulative_nonempty(&self) -> Vec<(f64, u64)> {
+        let mut out = Vec::new();
+        let mut cum = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            if c > 0 {
+                cum += c;
+                out.push((bucket_upper_micros(i), cum));
+            }
+        }
+        out
+    }
 }
 
 /// An f64 gauge shared across threads (bit-cast in an `AtomicU64`) — the
@@ -272,6 +295,28 @@ mod tests {
         assert!(merged.p99_micros() > 4000.0);
         let via_helper = merged_snapshot([&a, &b]);
         assert_eq!(via_helper.count(), 1000);
+    }
+
+    #[test]
+    fn cumulative_nonempty_is_monotone_and_complete() {
+        let h = LatencyHistogram::new();
+        for us in [10u64, 10, 10, 5000, 5000, 1 << 20] {
+            h.record(Duration::from_micros(us));
+        }
+        let s = h.snapshot();
+        let cum = s.cumulative_nonempty();
+        assert!(!cum.is_empty());
+        let mut last_le = 0.0;
+        let mut last_c = 0;
+        for &(le, c) in &cum {
+            assert!(le > last_le, "le bounds not increasing");
+            assert!(c >= last_c, "cumulative counts not monotone");
+            last_le = le;
+            last_c = c;
+        }
+        // the final cumulative count covers every observation
+        assert_eq!(cum.last().unwrap().1, s.count());
+        assert_eq!(s.sum_micros(), 10 * 3 + 5000 * 2 + (1 << 20));
     }
 
     #[test]

@@ -47,7 +47,7 @@ pub mod server;
 pub mod shard;
 pub mod snapshot;
 
-pub use loadgen::{LoadReport, LoadgenConfig};
+pub use loadgen::{LoadReport, LoadgenConfig, StageBreakdown};
 pub use metrics::{AtomicF64, HistogramSnapshot, LatencyHistogram};
 pub use server::{serve, ServerConfig, ServerHandle, StatsSnapshot};
 pub use snapshot::{Prediction, ServableModel};

@@ -46,6 +46,14 @@
 //! - `POST /v1/admin/reload` — with `--watch-manifest`: check the
 //!   manifest and swap in a newer generation synchronously (the poller
 //!   thread does the same on a timer).
+//! - `GET /v1/metricz` — Prometheus-style text exposition from the
+//!   [`crate::obs::Registry`]; every series is a collector closure over
+//!   the same atomics `/statz` reads. v1-only (no legacy alias; routes
+//!   born after API versioning never get one).
+//! - `GET /v1/tracez?min_us=N&limit=K` — the slowest recorded request
+//!   spans (merged across the per-worker
+//!   [`crate::obs::FlightRecorder`]s) with per-phase timings
+//!   ([`SERVER_PHASES`]). v1-only.
 //!
 //! **Hot reload** is zero-drop by construction: every thread resolves the
 //! serving snapshot through a [`CachedModel`] (one relaxed atomic load per
@@ -58,8 +66,12 @@ use crate::api::{
     ApiError, PredictRequest, PredictResponse, ReloadResponse, Route, TopkRequest, WeightsHeader,
 };
 use crate::coordinator::checkpoint::encode_loss;
+use crate::obs::trace::TraceContext;
+use crate::obs::{
+    render_dump, FlightRecorder, Registry, SpanRecord, TelemetrySnapshot, MAX_PHASES, ROUTE_OTHER,
+};
 use crate::online::reload::{CachedModel, ModelHolder, ReloadOutcome, ReloadStats, Reloader};
-use crate::serve::http::{read_request, reason_for, write_response, ReadError, Request};
+use crate::serve::http::{query_param, read_request, reason_for, write_response, ReadError, Request};
 use crate::serve::metrics::{merged_snapshot, HistogramSnapshot, LatencyHistogram};
 use crate::serve::snapshot::{Prediction, ServableModel};
 use crate::sparse::SparseVec;
@@ -101,6 +113,10 @@ pub struct ServerConfig {
     pub watch_manifest: Option<PathBuf>,
     /// How often the poller checks the manifest.
     pub poll_interval: Duration,
+    /// Per-worker flight-recorder capacity (spans). `0` compiles tracing
+    /// down to a branch-and-return no-op — the baseline `bear bench`'s
+    /// `obs_overhead` probe compares against.
+    pub trace_capacity: usize,
 }
 
 impl Default for ServerConfig {
@@ -114,8 +130,49 @@ impl Default for ServerConfig {
             read_timeout: Duration::from_secs(5),
             watch_manifest: None,
             poll_interval: Duration::from_millis(250),
+            trace_capacity: 256,
         }
     }
+}
+
+// ---------------------------------------------------------------------------
+// tracing vocabulary (shared with the balancer's tracez join)
+// ---------------------------------------------------------------------------
+
+/// Phase names for worker spans, in `SpanRecord::phase_us` slot order.
+/// `parse` includes any keep-alive idle wait before the request line
+/// arrived (the read loop cannot tell idling from a slow client);
+/// `wait`/`predict` are filled only by `/predict` (queue wait + scoring
+/// inside the batcher); `handle` is the whole dispatch; `write` is the
+/// response flush.
+pub const SERVER_PHASES: [&str; MAX_PHASES] = ["parse", "wait", "predict", "handle", "write"];
+
+/// Encode a route as its index in [`Route::ALL`] for the fixed-width
+/// [`SpanRecord`] (404s record [`ROUTE_OTHER`]).
+pub(crate) fn route_index(route: Route) -> u32 {
+    Route::ALL.iter().position(|r| *r == route).map(|i| i as u32).unwrap_or(ROUTE_OTHER)
+}
+
+/// Human name for a recorded route index (`tracez` rendering).
+pub(crate) fn route_label(idx: u32) -> String {
+    Route::ALL
+        .get(idx as usize)
+        .map(|r| r.v1_path().to_string())
+        .unwrap_or_else(|| "other".to_string())
+}
+
+/// Clamp an executed phase to ≥1µs so "this phase ran" is always visible
+/// as a nonzero timing (sub-microsecond phases are common on loopback).
+fn clamp_us(d: Duration) -> u64 {
+    (d.as_micros() as u64).max(1)
+}
+
+/// Wall-clock microseconds since the Unix epoch (span start stamps).
+fn unix_micros() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_micros() as u64)
+        .unwrap_or(0)
 }
 
 /// Monotonic counters, updated with relaxed atomics from every thread.
@@ -191,6 +248,11 @@ pub struct StatsSnapshot {
     pub drift_topk_jaccard: f64,
     pub drift_coord_norm_delta: f64,
     pub latency: HistogramSnapshot,
+    /// Training-health gauges from the last manifest that carried them
+    /// (`None` until such a generation swaps in — `/statz` omits the
+    /// `train_*` lines entirely in that case, keeping the pre-telemetry
+    /// output byte-identical).
+    pub telemetry: Option<TelemetrySnapshot>,
 }
 
 /// Observability state shared by workers and the handle. Deliberately
@@ -204,6 +266,11 @@ struct Monitor {
     counters: Arc<Counters>,
     started: Instant,
     worker_hists: Arc<Vec<Arc<LatencyHistogram>>>,
+    /// One flight recorder per worker, mirroring `worker_hists`: writers
+    /// never share a slot ring, `tracez` merges on scrape.
+    recorders: Arc<Vec<Arc<FlightRecorder>>>,
+    /// `/v1/metricz` collectors over the SAME atomics `/statz` scrapes.
+    registry: Arc<Registry>,
 }
 
 /// Everything a worker needs, cloned per thread.
@@ -213,10 +280,14 @@ struct Ctx {
     job_tx: Sender<PredictJob>,
 }
 
-/// A parsed predict request queued to the batcher.
+/// A parsed predict request queued to the batcher. The reply carries the
+/// predictions plus the job's observed `(wait_us, predict_us)` — queue
+/// time until the batcher started scoring it, and its own scoring time —
+/// which the worker files into the request span's phase slots.
 struct PredictJob {
     queries: Vec<SparseVec>,
-    reply: Sender<Vec<Prediction>>,
+    enqueued: Instant,
+    reply: Sender<(Vec<Prediction>, u64, u64)>,
 }
 
 // ---------------------------------------------------------------------------
@@ -352,9 +423,14 @@ fn batcher_loop(
         // tear a response
         let model = cache.get(&holder).clone();
         for job in jobs {
+            // wait covers everything from enqueue to scoring start — queue
+            // time, the linger window, and earlier jobs in this batch
+            let wait_us = clamp_us(job.enqueued.elapsed());
+            let t_pred = Instant::now();
             let preds: Vec<Prediction> = job.queries.iter().map(|q| model.predict(q)).collect();
+            let predict_us = clamp_us(t_pred.elapsed());
             // a worker that gave up on the reply is not an error
-            let _ = job.reply.send(preds);
+            let _ = job.reply.send((preds, wait_us, predict_us));
         }
     }
 }
@@ -372,10 +448,14 @@ fn error_response(e: &ApiError, keep: bool) -> (u16, &'static str, String, bool)
 /// `cache` is the calling thread's snapshot cache: the request resolves
 /// the serving model once, up front, and uses it throughout — a hot swap
 /// mid-request cannot change what this request sees.
+/// `phases` is the request span's timing slots (see [`SERVER_PHASES`]);
+/// dispatch fills `wait`/`predict` for `/predict`, the caller fills the
+/// connection-level slots.
 fn dispatch(
     ctx: &Ctx,
     req: &Request,
     cache: &mut CachedModel,
+    phases: &mut [u64; MAX_PHASES],
 ) -> (u16, &'static str, String, bool) {
     let counters = &ctx.mon.counters;
     counters.requests_total.fetch_add(1, Ordering::Relaxed);
@@ -403,11 +483,16 @@ fn dispatch(
             counters.predict_requests.fetch_add(1, Ordering::Relaxed);
             counters.predict_queries.fetch_add(queries.len() as u64, Ordering::Relaxed);
             let (reply_tx, reply_rx) = channel();
-            if ctx.job_tx.send(PredictJob { queries, reply: reply_tx }).is_err() {
+            let job = PredictJob { queries, enqueued: Instant::now(), reply: reply_tx };
+            if ctx.job_tx.send(job).is_err() {
                 return (500, "Internal Server Error", "batcher gone\n".into(), false);
             }
             match reply_rx.recv() {
-                Ok(preds) => (200, "OK", PredictResponse { preds }.encode(), req.keep_alive),
+                Ok((preds, wait_us, predict_us)) => {
+                    phases[1] = wait_us;
+                    phases[2] = predict_us;
+                    (200, "OK", PredictResponse { preds }.encode(), req.keep_alive)
+                }
                 Err(_) => (500, "Internal Server Error", "batcher gone\n".into(), false),
             }
         }
@@ -514,6 +599,29 @@ fn dispatch(
                 },
             }
         }
+        Route::Metricz => {
+            // scrape-time rendering: every series is a closure over the
+            // live atomics — no sampling thread, no skew vs. /statz
+            (200, "OK", ctx.mon.registry.render(), req.keep_alive)
+        }
+        Route::Tracez => {
+            // unparseable query values fall back to the defaults rather
+            // than 400: a trace dump is a diagnostic endpoint, and a
+            // best-effort answer beats refusing one mid-incident
+            let q = req.query.as_deref();
+            let min_us = query_param(q, "min_us")
+                .and_then(|v| v.parse::<u64>().ok())
+                .unwrap_or(0);
+            let limit = query_param(q, "limit")
+                .and_then(|v| v.parse::<usize>().ok())
+                .unwrap_or(64);
+            let mut records = Vec::new();
+            for rec in ctx.mon.recorders.iter() {
+                rec.snapshot_into(&mut records);
+            }
+            let body = render_dump(records, &SERVER_PHASES, route_label, min_us, limit);
+            (200, "OK", body, req.keep_alive)
+        }
     }
 }
 
@@ -543,6 +651,7 @@ fn scrape(mon: &Monitor) -> StatsSnapshot {
         drift_topk_jaccard: r.topk_jaccard.get(),
         drift_coord_norm_delta: r.coord_norm_delta.get(),
         latency: merged_snapshot(mon.worker_hists.iter().map(|h| h.as_ref())),
+        telemetry: r.telemetry.get(),
     }
 }
 
@@ -590,6 +699,14 @@ fn render_statz(s: &StatsSnapshot, model: &ServableModel, workers: usize) -> Str
     out.push_str(&format!("model_loss {}\n", encode_loss(model.loss)));
     out.push_str(&format!("shard_weight_requests {}\n", s.shard_weight_requests));
     out.push_str(&format!("gen_conflicts {}\n", s.gen_conflicts));
+    // training-health gauges, present ONLY once a telemetry-carrying
+    // generation has swapped in: before that the output above is
+    // byte-identical to the pre-telemetry server
+    if let Some(t) = &s.telemetry {
+        for (k, v) in t.to_kv() {
+            out.push_str(&format!("{k} {v}\n"));
+        }
+    }
     out
 }
 
@@ -597,6 +714,7 @@ fn handle_conn(
     stream: TcpStream,
     ctx: &Ctx,
     hist: &LatencyHistogram,
+    recorder: &FlightRecorder,
     read_timeout: Duration,
     cache: &mut CachedModel,
 ) {
@@ -609,14 +727,44 @@ fn handle_conn(
     };
     let mut reader = BufReader::new(stream);
     loop {
+        let t_parse = Instant::now();
         match read_request(&mut reader) {
             Ok(Some(req)) => {
+                let parse_us = clamp_us(t_parse.elapsed());
+                let start_unix_us = recorder.is_enabled().then(unix_micros).unwrap_or(0);
                 let t0 = Instant::now();
-                let (status, reason, body, keep) = dispatch(ctx, &req, cache);
+                let mut phases = [0u64; MAX_PHASES];
+                let (status, reason, body, keep) = dispatch(ctx, &req, cache, &mut phases);
+                phases[0] = parse_us;
+                phases[3] = clamp_us(t0.elapsed());
                 // record before the response bytes go out: whoever has the
                 // response is guaranteed to find it in the histogram
                 hist.record(t0.elapsed());
+                let t_write = Instant::now();
                 let ok = write_response(&mut writer, status, reason, body.as_bytes(), keep).is_ok();
+                if recorder.is_enabled() {
+                    phases[4] = clamp_us(t_write.elapsed());
+                    // `x-bear-trace` carries the span id the caller
+                    // allocated FOR this request (the balancer derives
+                    // `child(i)` from its root span per shard), so the
+                    // accepted context IS our span; the caller owns the
+                    // parent linkage. No header ⇒ fresh root trace.
+                    let trace = req.trace.unwrap_or_else(TraceContext::fresh);
+                    let route = Route::resolve(&req.method, &req.path)
+                        .map(route_index)
+                        .unwrap_or(ROUTE_OTHER);
+                    recorder.record(&SpanRecord {
+                        trace_id: trace.trace_id,
+                        span_id: trace.span_id,
+                        parent_span_id: 0,
+                        route,
+                        status: u32::from(status),
+                        generation: cache.get(&ctx.mon.holder).generation,
+                        start_unix_us,
+                        total_us: phases.iter().sum(),
+                        phase_us: phases,
+                    });
+                }
                 if !keep || !ok {
                     break;
                 }
@@ -645,6 +793,7 @@ fn worker_loop(
     ctx: Ctx,
     conn_rx: Arc<Mutex<Receiver<TcpStream>>>,
     hist: Arc<LatencyHistogram>,
+    recorder: Arc<FlightRecorder>,
     read_timeout: Duration,
 ) {
     // per-worker snapshot cache: one relaxed atomic load per request
@@ -657,13 +806,144 @@ fn worker_loop(
             Err(_) => break,
         };
         match conn {
-            Ok(stream) => handle_conn(stream, &ctx, &hist, read_timeout, &mut cache),
+            Ok(stream) => handle_conn(stream, &ctx, &hist, &recorder, read_timeout, &mut cache),
             Err(_) => break, // acceptor gone
         }
     }
 }
 
 const RESP_503: &[u8] = b"HTTP/1.1 503 Service Unavailable\r\nContent-Length: 9\r\nContent-Type: text/plain; charset=utf-8\r\nConnection: close\r\n\r\noverload\n";
+
+/// Build the worker's `/v1/metricz` registry: every series is a collector
+/// closure over the same live state `/statz` scrapes (counters, reload
+/// stats, model holder, latency histograms) — registered once at startup,
+/// read at scrape time.
+fn build_registry(
+    counters: &Arc<Counters>,
+    reload_stats: &Arc<ReloadStats>,
+    holder: &Arc<ModelHolder>,
+    worker_hists: &Arc<Vec<Arc<LatencyHistogram>>>,
+    started: Instant,
+) -> Registry {
+    let reg = Registry::new();
+    {
+        let mut c = |name: &str, help: &str, get: fn(&Counters) -> &AtomicU64| {
+            let cs = counters.clone();
+            reg.counter(name, &[], help, move || get(&cs).load(Ordering::Relaxed));
+        };
+        c("bear_connections_total", "accepted TCP connections", |c| &c.connections);
+        c("bear_requests_total", "HTTP requests handled", |c| &c.requests_total);
+        c("bear_predict_requests_total", "predict requests", |c| &c.predict_requests);
+        c("bear_predict_queries_total", "queries inside predict requests", |c| {
+            &c.predict_queries
+        });
+        c("bear_micro_batches_total", "batcher micro-batches scored", |c| &c.micro_batches);
+        c("bear_micro_batch_queries_total", "queries scored inside micro-batches", |c| {
+            &c.micro_batch_queries
+        });
+        c("bear_topk_requests_total", "topk requests", |c| &c.topk_requests);
+        c("bear_health_requests_total", "healthz requests", |c| &c.health_requests);
+        c("bear_statz_requests_total", "statz requests", |c| &c.statz_requests);
+        c("bear_not_found_total", "requests with no route", |c| &c.not_found);
+        c("bear_bad_requests_total", "malformed requests", |c| &c.bad_requests);
+        c("bear_rejected_total", "connections shed with 503", |c| &c.rejected);
+        c("bear_admin_reload_requests_total", "admin reload requests", |c| {
+            &c.admin_reload_requests
+        });
+        c("bear_shard_weight_requests_total", "shard weights requests", |c| {
+            &c.shard_weight_requests
+        });
+        c("bear_gen_conflicts_total", "generation-pinned requests refused with 409", |c| {
+            &c.gen_conflicts
+        });
+    }
+    {
+        let r = reload_stats.clone();
+        reg.counter("bear_reloads_total", &[], "successful hot reloads", move || {
+            r.reloads.load(Ordering::Relaxed)
+        });
+        let r = reload_stats.clone();
+        reg.counter("bear_reload_failures_total", &[], "failed reload attempts", move || {
+            r.failures.load(Ordering::Relaxed)
+        });
+        let r = reload_stats.clone();
+        reg.gauge("bear_generation", &[], "snapshot generation being served", move || {
+            r.generation.load(Ordering::Acquire) as f64
+        });
+        let r = reload_stats.clone();
+        reg.gauge(
+            "bear_drift_topk_jaccard",
+            &[],
+            "top-k support Jaccard of the last swap",
+            move || r.topk_jaccard.get(),
+        );
+        let r = reload_stats.clone();
+        reg.gauge(
+            "bear_drift_coord_norm_delta",
+            &[],
+            "coordinate-norm delta of the last swap",
+            move || r.coord_norm_delta.get(),
+        );
+        reg.gauge("bear_uptime_seconds", &[], "seconds since startup", move || {
+            started.elapsed().as_secs_f64()
+        });
+    }
+    {
+        let h = holder.clone();
+        reg.gauge("bear_model_features", &[], "feature-space dimension of the snapshot", move || {
+            h.load().n_features() as f64
+        });
+        let h = holder.clone();
+        reg.gauge("bear_model_classes", &[], "class count of the snapshot", move || {
+            h.load().num_classes() as f64
+        });
+        let h = holder.clone();
+        reg.gauge("bear_model_bytes", &[], "resident bytes of the snapshot", move || {
+            h.load().memory_bytes() as f64
+        });
+        let hists = worker_hists.clone();
+        reg.histogram(
+            "bear_request_latency_us",
+            &[],
+            "request handling latency, merged across workers",
+            move || merged_snapshot(hists.iter().map(|h| h.as_ref())),
+        );
+    }
+    {
+        // training-health gauges: NaN until a telemetry-carrying
+        // generation swaps in (same presence gate as /statz, but the
+        // exposition format has a spelling for "absent")
+        let mut tg = |name: &str, help: &str, get: fn(&TelemetrySnapshot) -> f64| {
+            let r = reload_stats.clone();
+            reg.gauge(name, &[], help, move || {
+                r.telemetry.get().map(get).unwrap_or(f64::NAN)
+            });
+        };
+        tg("bear_train_loss", "minibatch loss at publication", |t| t.loss);
+        tg("bear_train_grad_norm", "gradient l2 norm at publication", |t| t.grad_norm);
+        tg("bear_train_step_eta", "last accepted step size", |t| t.step_eta);
+        tg("bear_train_step_norm", "last update direction l2 norm", |t| t.step_norm);
+        tg("bear_train_collision_rate", "estimated sketch collision mass", |t| {
+            t.collision_rate
+        });
+        tg("bear_train_hh_churn", "heavy-hitter churn of the last heap refresh", |t| {
+            t.hh_churn
+        });
+        tg("bear_train_curvature_min", "min sᵀy over retained curvature pairs", |t| {
+            t.curvature_min
+        });
+        tg("bear_train_curvature_max", "max sᵀy over retained curvature pairs", |t| {
+            t.curvature_max
+        });
+        tg("bear_train_curvature_pairs", "retained L-BFGS curvature pairs", |t| {
+            t.curvature_pairs as f64
+        });
+        tg("bear_train_iterations", "minibatches trained at publication", |t| {
+            t.iterations as f64
+        });
+    }
+    reg
+}
 
 // ---------------------------------------------------------------------------
 // server lifecycle
@@ -760,14 +1040,25 @@ pub fn serve(model: Arc<ServableModel>, cfg: ServerConfig) -> Result<ServerHandl
         Arc::new(Reloader::new(holder.clone(), manifest.clone(), reload_stats.clone()))
     });
 
+    // one recorder per worker (same sharding as the latency histograms);
+    // capacity 0 compiles each into an is_enabled() branch and nothing else
+    let recorders: Arc<Vec<Arc<FlightRecorder>>> = Arc::new(
+        (0..workers_n).map(|_| Arc::new(FlightRecorder::new(cfg.trace_capacity))).collect(),
+    );
+    let started = Instant::now();
+    let registry =
+        Arc::new(build_registry(&counters, &reload_stats, &holder, &worker_hists, started));
+
     let (job_tx, job_rx) = channel::<PredictJob>();
     let mon = Monitor {
         holder: holder.clone(),
         reload_stats,
         reloader: reloader.clone(),
         counters: counters.clone(),
-        started: Instant::now(),
+        started,
         worker_hists: worker_hists.clone(),
+        recorders: recorders.clone(),
+        registry,
     };
     let ctx = Ctx { mon: mon.clone(), job_tx };
 
@@ -809,11 +1100,12 @@ pub fn serve(model: Arc<ServableModel>, cfg: ServerConfig) -> Result<ServerHandl
         let ctx = ctx.clone();
         let conn_rx = conn_rx.clone();
         let hist = worker_hists[i].clone();
+        let recorder = recorders[i].clone();
         let read_timeout = cfg.read_timeout;
         workers.push(
             std::thread::Builder::new()
                 .name(format!("bear-serve-worker-{i}"))
-                .spawn(move || worker_loop(ctx, conn_rx, hist, read_timeout))
+                .spawn(move || worker_loop(ctx, conn_rx, hist, recorder, read_timeout))
                 .expect("spawn worker thread"),
         );
     }

@@ -20,12 +20,13 @@
 
 use bear::algo::bear::{Bear, BearConfig};
 use bear::algo::StepSize;
-use bear::api::{format_query, ApiError, BearClient, Statz, TopkRequest};
+use bear::api::{format_query, ApiError, BearClient, Statz, TopkRequest, TraceContext};
 use bear::coordinator::experiments::RealData;
 use bear::data::synth::Rcv1Sim;
 use bear::data::DataSource;
 use bear::fleet::{start_fleet, FleetConfig, ProbeConfig};
 use bear::loss::LossKind;
+use bear::obs::validate_exposition;
 use bear::online::Publisher;
 use bear::serve::loadgen::{self, LoadgenConfig};
 use bear::serve::ServableModel;
@@ -395,6 +396,129 @@ fn fleet_join_adopts_externally_launched_workers() {
     handle.shutdown();
     drop(externals);
     std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn fleet_trace_propagates_across_shards_and_metricz_validates() {
+    let _serial = fleet_lock();
+    let pub_dir = tmp_root("obs-pub");
+    let log_dir = tmp_root("obs-logs");
+    std::fs::remove_dir_all(&pub_dir).ok();
+    std::fs::create_dir_all(&log_dir).ok();
+
+    let mut trainer = new_trainer(0x0b5);
+    train_some(&mut trainer, 400, 1);
+    let mut publisher = Publisher::new(&pub_dir, 2).unwrap();
+    publisher.publish_sharded(&snapshot(&trainer), 2).unwrap();
+
+    let cfg = FleetConfig {
+        addr: "127.0.0.1:0".to_string(),
+        backends: 2,
+        shards: 2,
+        watch_manifest: Some(publisher.manifest_path()),
+        worker_bin: Some(PathBuf::from(env!("CARGO_BIN_EXE_bear"))),
+        serve_workers: 8,
+        log_dir: Some(log_dir.clone()),
+        probe: ProbeConfig { interval: Duration::from_millis(50), ..Default::default() },
+        ..Default::default()
+    };
+    let handle = start_fleet(cfg).unwrap();
+    assert!(handle.wait_all_healthy(Duration::from_secs(60)), "sharded fleet never healthy");
+    let addr = handle.addr().to_string();
+    let client = BearClient::connect(&addr).unwrap();
+
+    // one traced scatter-gathered request: the balancer must adopt OUR
+    // trace id and fan it out to every shard worker
+    let trace = TraceContext { trace_id: 0x0B5E_7ACE, span_id: 0xF00D };
+    let queries = test_queries(6);
+    let body: String = queries.iter().map(|q| format_query(q) + "\n").collect();
+    let (resp, _) = client.predict_timed(&body, Some(&trace)).unwrap();
+    assert_eq!(resp.lines().count(), queries.len());
+
+    // the span records land *after* the response is written (balancer and
+    // workers both), so poll; keep the last dump on disk for the CI
+    // artifact upload when this test fails
+    let needle = format!("trace={:016x}", trace.trace_id);
+    let dump_path = log_dir.join("tracez.dump");
+    let deadline = Instant::now() + Duration::from_secs(15);
+    let dump = loop {
+        let dump = client.tracez_raw(0, 256).unwrap();
+        std::fs::write(&dump_path, &dump).ok();
+        let joined = (0..2)
+            .all(|i| dump.contains(&format!("backend.{i} trace={:016x}", trace.trace_id)));
+        if dump.contains(&needle) && joined {
+            break dump;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "trace never joined across both shards; last dump:\n{dump}"
+        );
+        std::thread::sleep(Duration::from_millis(50));
+    };
+
+    // the balancer's own record: our span verbatim, scatter phases timed
+    let line = dump
+        .lines()
+        .find(|l| !l.starts_with(' ') && l.contains(&needle))
+        .unwrap_or_else(|| panic!("no balancer record in:\n{dump}"));
+    assert!(line.contains(&format!("span={:016x}", trace.span_id)), "{line}");
+    assert!(line.contains("route=/v1/predict"), "{line}");
+    assert!(line.contains("status=200"), "{line}");
+    for phase in ["parse", "fanout", "merge", "handle", "write"] {
+        let us: u64 = line
+            .split_whitespace()
+            .find_map(|tok| tok.strip_prefix(&format!("p.{phase}=")))
+            .unwrap_or_else(|| panic!("no p.{phase} in {line}"))
+            .parse()
+            .unwrap();
+        assert!(us > 0, "phase {phase} unmeasured: {line}");
+    }
+    // every shard's child span shares the trace and carries worker phases
+    for i in 0..2 {
+        let child = dump
+            .lines()
+            .find(|l| l.trim_start().starts_with(&format!("backend.{i} ")))
+            .unwrap_or_else(|| panic!("no backend.{i} child in:\n{dump}"));
+        assert!(child.contains(&needle), "{child}");
+        assert!(child.contains("p.predict="), "{child}");
+    }
+
+    // /v1/metricz in the fault-injection context: the balancer exposes a
+    // structurally valid exposition with the per-backend labeled series,
+    // and so does each shard worker (the CI gate for malformed output)
+    let metricz = client.metricz_raw().unwrap();
+    std::fs::write(log_dir.join("balancer-metricz.txt"), &metricz).ok();
+    let n = validate_exposition(&metricz)
+        .unwrap_or_else(|e| panic!("balancer metricz invalid: {e}"));
+    assert!(n > 10, "{metricz}");
+    for required in [
+        "bear_requests_total",
+        "bear_proxied_requests_total",
+        "bear_fleet_backends",
+        "bear_fleet_shards 2",
+        "bear_backend_up{backend=\"0\"",
+        "bear_backend_up{backend=\"1\"",
+        "bear_backend_forwarded_total{backend=\"0\"",
+    ] {
+        assert!(metricz.contains(required), "missing {required:?} in:\n{metricz}");
+    }
+    for (i, worker) in handle.backend_addrs().iter().enumerate() {
+        let wc = BearClient::connect(&worker.to_string()).unwrap();
+        let wm = wc.metricz_raw().unwrap();
+        validate_exposition(&wm)
+            .unwrap_or_else(|e| panic!("worker {i} metricz invalid: {e}\n{wm}"));
+        assert!(wm.contains("bear_requests_total"), "worker {i}:\n{wm}");
+        assert!(wm.contains("bear_model_features"), "worker {i}:\n{wm}");
+    }
+
+    // the obs endpoints must not have disturbed the aggregated statz
+    let statz = get_statz(&addr);
+    assert_eq!(statz_value(&statz, "fleet_backends_healthy") as u64, 2, "{statz}");
+
+    drop(client);
+    handle.shutdown();
+    std::fs::remove_dir_all(&pub_dir).ok();
+    // keep log_dir: CI uploads tracez.dump + metricz on failure
 }
 
 #[test]

@@ -1,0 +1,291 @@
+//! End-to-end observability integration on a single `bear serve` worker:
+//!
+//! 1. a traced `/v1/predict` request (explicit `x-bear-trace`) must land
+//!    in `GET /v1/tracez` with the caller-allocated span id, root parent,
+//!    and every server phase (parse/wait/predict/handle/write) > 0;
+//! 2. `/statz` must be **schema-identical** with tracing on and off, and
+//!    must not grow `train_*` telemetry lines until a telemetry-carrying
+//!    generation hot-swaps in — after which the lines appear in
+//!    [`TELEMETRY_KEYS`] order with lossless values;
+//! 3. `GET /v1/metricz` must pass the shared exposition validator and
+//!    carry the required series, with `bear_train_*` gauges going from
+//!    `NaN` to real values across the same reload.
+//!
+//! (The cross-process trace-propagation test for the sharded fleet lives
+//! in `integration_fleet.rs` — chaos-harness naming and CI timeouts.)
+
+use bear::algo::bear::{Bear, BearConfig};
+use bear::algo::StepSize;
+use bear::api::{format_query, BearClient, TraceContext};
+use bear::data::synth::Rcv1Sim;
+use bear::data::DataSource;
+use bear::loss::LossKind;
+use bear::obs::{validate_exposition, TelemetrySnapshot, TELEMETRY_KEYS};
+use bear::online::Publisher;
+use bear::serve::{serve, ServableModel, ServerConfig};
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn tmp_root(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_TARGET_TMPDIR")).join(format!("obs-{name}-{}", std::process::id()))
+}
+
+fn small_model(seed: u64) -> ServableModel {
+    let cfg = BearConfig {
+        sketch_cells: 4096,
+        sketch_rows: 3,
+        top_k: 50,
+        tau: 5,
+        step: StepSize::Constant(0.01),
+        loss: LossKind::Logistic,
+        seed,
+        ..Default::default()
+    };
+    let mut model = Bear::new(bear::data::synth::RCV1_DIM, cfg);
+    let mut train = Rcv1Sim::new(300, seed);
+    model.fit_source(&mut train, 32, 1);
+    ServableModel::from_sketched(model.state(), LossKind::Logistic, 0.0)
+}
+
+fn predict_body(n: usize) -> String {
+    let mut src = Rcv1Sim::new(n, 0x0b5).with_stream_seed(0x7e57);
+    let mut body = String::new();
+    while let Some(e) = src.next_example() {
+        body.push_str(&format_query(&e.features));
+        body.push('\n');
+    }
+    body
+}
+
+/// `key=value` token from a tracez line, panicking with the line on a
+/// missing key.
+fn trace_field<'a>(line: &'a str, key: &str) -> &'a str {
+    line.split_whitespace()
+        .find_map(|tok| tok.strip_prefix(key).and_then(|t| t.strip_prefix('=')))
+        .unwrap_or_else(|| panic!("no {key}= in tracez line: {line}"))
+}
+
+/// Poll `f` until it yields `Some`, panicking with the last attempt's
+/// context on timeout. The span record lands *after* the response bytes
+/// are written, so the client can outrun the recorder by a few µs.
+fn wait_for<T>(what: &str, timeout: Duration, mut f: impl FnMut() -> Option<T>) -> T {
+    let deadline = Instant::now() + timeout;
+    loop {
+        if let Some(v) = f() {
+            return v;
+        }
+        assert!(Instant::now() < deadline, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+/// The `key` column set of a `/statz` body (the schema, values ignored).
+fn statz_keys(body: &str) -> Vec<String> {
+    body.lines().filter_map(|l| l.split_whitespace().next()).map(str::to_string).collect()
+}
+
+/// First sample line for a metric name (skipping HELP/TYPE), as
+/// `(series, value)`.
+fn metric_sample<'a>(body: &'a str, name: &str) -> (&'a str, &'a str) {
+    body.lines()
+        .filter(|l| !l.starts_with('#'))
+        .find(|l| {
+            let series = l.split_whitespace().next().unwrap_or("");
+            series == name || series.starts_with(&format!("{name}{{"))
+        })
+        .and_then(|l| l.rsplit_once(' '))
+        .unwrap_or_else(|| panic!("no sample for {name} in:\n{body}"))
+}
+
+#[test]
+fn tracez_records_traced_request_with_all_phases() {
+    let handle =
+        serve(Arc::new(small_model(0x0b51)), ServerConfig { workers: 2, ..Default::default() })
+            .unwrap();
+    let client = BearClient::connect(&handle.addr().to_string()).unwrap();
+
+    // a caller-allocated trace: the server must adopt our span verbatim
+    let trace = TraceContext { trace_id: 0xA11CE_BEEF, span_id: 0x5BA2 };
+    let body = predict_body(8);
+    let (resp, timings) = client.predict_timed(&body, Some(&trace)).unwrap();
+    assert_eq!(resp.lines().count(), 8);
+    // client-side stage timings are self-consistent (loopback connect
+    // and send can legitimately round to 0µs, so assert ordering only)
+    assert!(timings.total_us >= timings.first_byte_us, "{timings:?}");
+
+    let needle = format!("trace={:016x}", trace.trace_id);
+    let line = wait_for("traced span in /v1/tracez", Duration::from_secs(5), || {
+        let dump = client.tracez_raw(0, 256).unwrap();
+        dump.lines().find(|l| l.contains(&needle)).map(str::to_string)
+    });
+    assert_eq!(trace_field(&line, "span"), format!("{:016x}", trace.span_id));
+    assert_eq!(trace_field(&line, "parent"), "0000000000000000", "caller owns parentage");
+    assert_eq!(trace_field(&line, "route"), "/v1/predict");
+    assert_eq!(trace_field(&line, "status"), "200");
+    let total: u64 = trace_field(&line, "total_us").parse().unwrap();
+    assert!(total > 0, "{line}");
+    for phase in ["parse", "wait", "predict", "handle", "write"] {
+        let us: u64 = trace_field(&line, &format!("p.{phase}")).parse().unwrap();
+        assert!(us > 0, "phase {phase} unmeasured: {line}");
+    }
+
+    // min_us filtering: an impossible threshold hides the trace
+    let filtered = client.tracez_raw(u64::MAX / 2, 256).unwrap();
+    assert!(!filtered.contains(&needle), "{filtered}");
+
+    drop(client);
+    handle.shutdown();
+}
+
+#[test]
+fn tracez_capacity_zero_disables_recording_not_the_route() {
+    let handle = serve(
+        Arc::new(small_model(0x0b52)),
+        ServerConfig { workers: 2, trace_capacity: 0, ..Default::default() },
+    )
+    .unwrap();
+    let client = BearClient::connect(&handle.addr().to_string()).unwrap();
+    let trace = TraceContext { trace_id: 0xD15AB1ED, span_id: 1 };
+    client.predict_timed(&predict_body(4), Some(&trace)).unwrap();
+    // the endpoint still answers 200 — with nothing recorded
+    let dump = client.tracez_raw(0, 256).unwrap();
+    assert!(dump.is_empty(), "disabled recorder must record nothing:\n{dump}");
+    drop(client);
+    handle.shutdown();
+}
+
+#[test]
+fn statz_schema_is_identical_with_tracing_on_and_off() {
+    let traced =
+        serve(Arc::new(small_model(0x0b53)), ServerConfig { workers: 2, ..Default::default() })
+            .unwrap();
+    let untraced = serve(
+        Arc::new(small_model(0x0b53)),
+        ServerConfig { workers: 2, trace_capacity: 0, ..Default::default() },
+    )
+    .unwrap();
+    let body = predict_body(4);
+    for h in [&traced, &untraced] {
+        let client = BearClient::connect(&h.addr().to_string()).unwrap();
+        client.predict_timed(&body, Some(&TraceContext::fresh())).unwrap();
+        drop(client);
+    }
+    let scrape = |h: &bear::serve::ServerHandle| {
+        BearClient::connect(&h.addr().to_string()).unwrap().statz_raw().unwrap()
+    };
+    let (a, b) = (scrape(&traced), scrape(&untraced));
+    assert_eq!(statz_keys(&a), statz_keys(&b), "obs layer changed the /statz schema:\n{a}\n--\n{b}");
+    // and no telemetry lines before a telemetry-carrying generation
+    assert!(!a.contains("train_"), "pre-telemetry statz must be byte-stable:\n{a}");
+    traced.shutdown();
+    untraced.shutdown();
+}
+
+#[test]
+fn statz_and_metricz_surface_telemetry_after_reload() {
+    let dir = tmp_root("telemetry");
+    std::fs::remove_dir_all(&dir).ok();
+    let mut publisher = Publisher::new(&dir, 4).unwrap();
+
+    // generation 1: no telemetry on the manifest
+    let pub1 = publisher.publish(&small_model(0x0b54)).unwrap();
+    let handle = serve(
+        Arc::new(ServableModel::load(&pub1.path).unwrap()),
+        ServerConfig {
+            workers: 2,
+            watch_manifest: Some(publisher.manifest_path()),
+            // manual reloads only: the poller must not race the test
+            poll_interval: Duration::from_secs(3600),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let client = BearClient::connect(&handle.addr().to_string()).unwrap();
+
+    let statz = client.statz_raw().unwrap();
+    assert!(!statz.contains("train_"), "{statz}");
+    let metricz = client.metricz_raw().unwrap();
+    validate_exposition(&metricz).unwrap_or_else(|e| panic!("invalid metricz: {e}"));
+    assert_eq!(metric_sample(&metricz, "bear_train_loss").1, "NaN", "gauges gate on publish");
+
+    // generation 2 carries the training-health snapshot
+    let snap = TelemetrySnapshot {
+        loss: 0.25,
+        grad_norm: 1e-3,
+        step_eta: 0.05,
+        step_norm: 2.5,
+        collision_rate: 0.125,
+        hh_churn: 0.5,
+        curvature_min: 1e-4,
+        curvature_max: 8.0,
+        curvature_pairs: 5,
+        iterations: 640,
+    };
+    publisher.set_telemetry(Some(snap));
+    publisher.publish(&small_model(0x0b55)).unwrap();
+    handle.reload_now().expect("reloader armed").expect("reload failed");
+
+    // /statz: the train_* lines appear, in TELEMETRY_KEYS order, lossless
+    let statz = client.statz_raw().unwrap();
+    let got: Vec<&str> = statz
+        .lines()
+        .filter_map(|l| l.split_whitespace().next())
+        .filter(|k| k.starts_with("train_"))
+        .collect();
+    assert_eq!(got, TELEMETRY_KEYS.to_vec(), "{statz}");
+    let statz_val = |key: &str| -> String {
+        statz
+            .lines()
+            .find_map(|l| l.strip_prefix(key).map(|rest| rest.trim().to_string()))
+            .unwrap_or_else(|| panic!("no {key} in:\n{statz}"))
+    };
+    assert_eq!(statz_val("train_loss").parse::<f64>().unwrap(), 0.25);
+    assert_eq!(statz_val("train_iterations").parse::<u64>().unwrap(), 640);
+    assert_eq!(statz_val("train_collision_rate").parse::<f64>().unwrap(), 0.125);
+
+    // /metricz: the same numbers as bear_train_* gauges
+    let metricz = client.metricz_raw().unwrap();
+    validate_exposition(&metricz).unwrap_or_else(|e| panic!("invalid metricz: {e}"));
+    assert_eq!(metric_sample(&metricz, "bear_train_loss").1, "0.25", "{metricz}");
+    assert_eq!(metric_sample(&metricz, "bear_train_iterations").1, "640", "{metricz}");
+    assert_eq!(metric_sample(&metricz, "bear_generation").1, "2", "{metricz}");
+
+    drop(client);
+    handle.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn metricz_is_valid_and_carries_required_series() {
+    let handle =
+        serve(Arc::new(small_model(0x0b56)), ServerConfig { workers: 2, ..Default::default() })
+            .unwrap();
+    let client = BearClient::connect(&handle.addr().to_string()).unwrap();
+    client.predict_timed(&predict_body(4), Some(&TraceContext::fresh())).unwrap();
+
+    let body = client.metricz_raw().unwrap();
+    let samples = validate_exposition(&body).unwrap_or_else(|e| panic!("invalid metricz: {e}"));
+    assert!(samples > 10, "suspiciously few samples ({samples}):\n{body}");
+    for required in [
+        "bear_requests_total",
+        "bear_predict_requests_total",
+        "bear_predict_queries_total",
+        "bear_generation",
+        "bear_uptime_seconds",
+        "bear_model_features",
+        "bear_reloads_total",
+        "bear_train_loss",
+    ] {
+        metric_sample(&body, required); // panics when missing
+    }
+    // the registry reads the same live atomics /statz reads
+    let (_, requests) = metric_sample(&body, "bear_requests_total");
+    assert!(requests.parse::<f64>().unwrap() >= 1.0, "{body}");
+    // the latency histogram exposes cumulative buckets + sum + count
+    assert!(body.contains("bear_request_latency_us_bucket{le=\"+Inf\"}"), "{body}");
+    metric_sample(&body, "bear_request_latency_us_count");
+
+    drop(client);
+    handle.shutdown();
+}

@@ -211,8 +211,9 @@ mod live {
             Some(q) => format!("{path}?{q}"),
             None => path.to_string(),
         };
+        let legacy_path = route.legacy_path().expect("both() is for legacy-aliased routes");
         let legacy = client
-            .request(route.method(), &with_query(route.legacy_path()), body)
+            .request(route.method(), &with_query(legacy_path), body)
             .expect("legacy path");
         let v1 = client
             .request(route.method(), &with_query(route.v1_path()), body)

@@ -1,0 +1,186 @@
+//! Property tests for the observability layer (`bear::obs`): the trace
+//! header codec must round-trip and must never panic on arbitrary bytes
+//! (it sits on the request-parsing hot path of every tier), child-span
+//! derivation must be a pure function of (parent, index), the metrics
+//! registry must render structurally valid exposition for arbitrary
+//! metric sets, and a *shared* flight-recorder ring hammered by many
+//! writers must never surface a torn record to a concurrent scraper.
+
+use bear::obs::{
+    splitmix64, validate_exposition, FlightRecorder, Registry, SpanRecord, TraceContext,
+    MAX_PHASES,
+};
+use bear::prop::{run, Gen};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+fn random_bytes(g: &mut Gen, max_len: usize) -> Vec<u8> {
+    let n = g.usize_in(0, max_len + 1);
+    (0..n).map(|_| g.u64_below(256) as u8).collect()
+}
+
+#[test]
+fn prop_trace_header_roundtrips() {
+    run("encode→parse is identity", 256, |g: &mut Gen| {
+        let t = TraceContext {
+            trace_id: g.u64_below(u64::MAX).max(1), // 0 is the no-trace sentinel
+            span_id: g.u64_below(u64::MAX),
+        };
+        assert_eq!(TraceContext::parse(&t.encode()), Some(t));
+        // and the wire form is fixed-width: greppable ids
+        assert_eq!(t.encode().len(), 33);
+    });
+}
+
+#[test]
+fn prop_trace_parse_never_panics_on_arbitrary_bytes() {
+    run("parse survives arbitrary input", 512, |g: &mut Gen| {
+        let bytes = random_bytes(g, 128);
+        let s = String::from_utf8_lossy(&bytes);
+        // any Option is acceptable; what matters is: no panic, and
+        // anything that does parse has a nonzero trace id
+        if let Some(t) = TraceContext::parse(&s) {
+            assert_ne!(t.trace_id, 0);
+        }
+    });
+}
+
+#[test]
+fn prop_trace_parse_never_panics_on_hexish_garbage() {
+    // near-miss inputs: hex words of random widths with random separators
+    run("parse survives hex-shaped garbage", 256, |g: &mut Gen| {
+        let w1 = g.usize_in(0, 40);
+        let w2 = g.usize_in(0, 40);
+        let sep = ["-", "", "--", " - ", ":"][g.usize_in(0, 5)];
+        let hex = |g: &mut Gen, w: usize| -> String {
+            (0..w).map(|_| "0123456789abcdefABCDEF".as_bytes()[g.usize_in(0, 22)] as char).collect()
+        };
+        let s = format!("{}{}{}", hex(g, w1), sep, hex(g, w2));
+        let _ = TraceContext::parse(&s);
+    });
+}
+
+#[test]
+fn prop_child_spans_are_deterministic_and_stay_in_trace() {
+    run("child(i) is pure and trace-preserving", 128, |g: &mut Gen| {
+        let parent = TraceContext {
+            trace_id: g.u64_below(u64::MAX).max(1),
+            span_id: g.u64_below(u64::MAX),
+        };
+        let i = g.u64_below(1 << 20);
+        let j = g.u64_below(1 << 20);
+        let ci = parent.child(i);
+        assert_eq!(ci.trace_id, parent.trace_id);
+        assert_ne!(ci.span_id, 0);
+        assert_eq!(parent.child(i), ci, "child id must re-derive identically");
+        if i != j {
+            assert_ne!(parent.child(j).span_id, ci.span_id, "fan-out legs must differ");
+        }
+    });
+}
+
+#[test]
+fn prop_registry_renders_valid_exposition() {
+    run("render passes the shared validator", 64, |g: &mut Gen| {
+        let reg = Registry::new();
+        let n = g.usize_in(1, 12);
+        let mut expected_samples = 0usize;
+        for i in 0..n {
+            // names drawn from the enforced grammar, unique via the index
+            let kind = g.usize_in(0, 3);
+            match kind {
+                0 => {
+                    let v = g.u64_below(1 << 40);
+                    reg.counter(&format!("bear_p{i}_total"), &[], "prop counter", move || v);
+                    expected_samples += 1;
+                }
+                1 => {
+                    // gauges must survive the full f64 menagerie
+                    let v = [0.0, -1.5, 1e300, f64::NAN, f64::INFINITY, f64::NEG_INFINITY]
+                        [g.usize_in(0, 6)];
+                    let labeled = g.bool();
+                    let lv = format!("v{}\"\\\n{}", i, g.u64_below(100)); // escaping stress
+                    if labeled {
+                        reg.gauge(&format!("bear_p{i}"), &[("k", lv.as_str())], "prop gauge", move || v);
+                    } else {
+                        reg.gauge(&format!("bear_p{i}"), &[], "prop gauge", move || v);
+                    }
+                    expected_samples += 1;
+                }
+                _ => {
+                    let hist = bear::serve::metrics::LatencyHistogram::new();
+                    let records = g.usize_in(0, 8);
+                    for _ in 0..records {
+                        hist.record(std::time::Duration::from_micros(g.u64_below(1 << 24)));
+                    }
+                    reg.histogram(&format!("bear_p{i}_us"), &[], "prop hist", move || {
+                        hist.snapshot()
+                    });
+                    // at least +Inf bucket, _sum and _count
+                    expected_samples += 3;
+                }
+            }
+        }
+        let body = reg.render();
+        let samples = validate_exposition(&body)
+            .unwrap_or_else(|e| panic!("invalid exposition: {e}\n{body}"));
+        assert!(samples >= expected_samples, "{samples} < {expected_samples}:\n{body}");
+    });
+}
+
+#[test]
+fn prop_shared_ring_never_tears_under_contention() {
+    // The server gives each worker its own ring, but the balancer shares
+    // ONE ring across all its workers — this is the smoke test for that
+    // multi-writer mode at test level (the in-module test covers the
+    // seqlock itself): every field of a record derives from trace_id via
+    // splitmix64, so any torn read shows up as a mismatched field.
+    let ring = Arc::new(FlightRecorder::new(16));
+    let stop = Arc::new(AtomicBool::new(false));
+    let writers: Vec<_> = (0..8)
+        .map(|w| {
+            let ring = ring.clone();
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                let mut i = 1u64;
+                let mut written = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    let id = splitmix64((w as u64) << 32 | i).max(1);
+                    ring.record(&SpanRecord {
+                        trace_id: id,
+                        span_id: splitmix64(id),
+                        parent_span_id: splitmix64(id ^ 1),
+                        generation: splitmix64(id ^ 2),
+                        start_unix_us: splitmix64(id ^ 3),
+                        total_us: splitmix64(id ^ 4),
+                        phase_us: [splitmix64(id ^ 5); MAX_PHASES],
+                        route: 0,
+                        status: 200,
+                    });
+                    i += 1;
+                    written += 1;
+                }
+                written
+            })
+        })
+        .collect();
+    let mut buf = Vec::new();
+    let mut seen = 0usize;
+    for _ in 0..3000 {
+        buf.clear();
+        ring.snapshot_into(&mut buf);
+        for r in &buf {
+            assert_eq!(r.span_id, splitmix64(r.trace_id), "torn span_id");
+            assert_eq!(r.parent_span_id, splitmix64(r.trace_id ^ 1), "torn parent");
+            assert_eq!(r.generation, splitmix64(r.trace_id ^ 2), "torn generation");
+            assert_eq!(r.start_unix_us, splitmix64(r.trace_id ^ 3), "torn start");
+            assert_eq!(r.total_us, splitmix64(r.trace_id ^ 4), "torn total");
+            assert_eq!(r.phase_us, [splitmix64(r.trace_id ^ 5); MAX_PHASES], "torn phases");
+        }
+        seen += buf.len();
+    }
+    stop.store(true, Ordering::Relaxed);
+    let written: u64 = writers.into_iter().map(|w| w.join().unwrap()).sum();
+    assert!(written > 0, "writers never ran");
+    assert!(seen > 0, "scrapes never observed a record");
+}
