@@ -48,4 +48,26 @@ fn main() {
     );
     println!("[fig1c] paper shape: MISSION peaks narrowly near its best η and collapses away");
     println!("[fig1c] from it; BEAR is 'fairly agnostic' across orders of magnitude.");
+
+    // the statistical half of the old quarantined
+    // `step_size_robustness_gap` test (tests/integration_algorithms.rs
+    // keeps its deterministic twin `step_size_recipe_is_deterministic`):
+    // at an aggressive η the second-order rescaling keeps BEAR alive
+    // while the raw-gradient update diverges, and a moderate η still
+    // works. PASS/WARN only — seed noise must never fail CI.
+    let b_hot = fig1c_point(&spec, AlgoKind::Bear, 3e-1, cells);
+    let m_hot = fig1c_point(&spec, AlgoKind::Mission, 3e-1, cells);
+    let b_mid = fig1c_point(&spec, AlgoKind::Bear, 3e-2, cells);
+    let pass = b_hot.p_success >= m_hot.p_success && b_mid.p_success >= 0.5;
+    println!(
+        "[fig1c] headline: BEAR {} vs MISSION {} at η=0.3, BEAR {} at η=0.03 → {}",
+        f3(b_hot.p_success),
+        f3(m_hot.p_success),
+        f3(b_mid.p_success),
+        if pass {
+            "PASS (paper Fig. 1C: second-order is step-size robust)"
+        } else {
+            "WARN (seed/trial noise?)"
+        }
+    );
 }

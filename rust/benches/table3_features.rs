@@ -17,11 +17,15 @@ fn main() {
         "Table 3 substitute: precision of selected features vs planted ground truth",
         &["dataset", "CF", "BEAR prec@k", "MISSION prec@k"],
     );
+    let mut dna: Option<(f64, f64)> = None;
     for d in RealData::all() {
         let spec = if quick { RealSpec::quick(d) } else { RealSpec::for_dataset(d) };
         let cf = d.fig3_cf();
         let b = real_point(&spec, d, AlgoKind::Bear, cf, None);
         let m = real_point(&spec, d, AlgoKind::Mission, cf, None);
+        if d == RealData::Dna {
+            dna = Some((b.precision_at_k, m.precision_at_k));
+        }
         t.row(&[
             d.label().into(),
             format!("{cf:.0}"),
@@ -33,4 +37,41 @@ fn main() {
     println!("[table3] paper claim: MISSION's selections are 'less frequent and do not");
     println!("[table3] discriminate between the subject classes' — here that reads as lower");
     println!("[table3] precision against the planted informative features.");
+
+    // statistical halves of two old quarantined tests, as PASS/WARN
+    // headlines (their deterministic twins are
+    // `multiclass_recipe_is_deterministic` in integration_algorithms.rs
+    // and `real_runner_bear_vs_fh_recipe_is_deterministic` in
+    // integration_coordinator.rs). Seed noise must never fail CI.
+    if let Some((bp, mp)) = dna {
+        let pass = bp > 0.0 && bp >= mp;
+        println!(
+            "[table3] headline: DNA class-specific selection — BEAR prec@k {} vs MISSION {} → {}",
+            f3(bp),
+            f3(mp),
+            if pass {
+                "PASS (per-class banks recover their own k-mers)"
+            } else {
+                "WARN (seed/trial noise?)"
+            }
+        );
+    }
+    let spec = if quick {
+        RealSpec::quick(RealData::Webspam)
+    } else {
+        RealSpec::for_dataset(RealData::Webspam)
+    };
+    let b = real_point(&spec, RealData::Webspam, AlgoKind::Bear, 100.0, None);
+    let fh = real_point(&spec, RealData::Webspam, AlgoKind::FeatureHashing, 100.0, None);
+    let pass = b.metric > 0.55 && b.metric >= fh.metric - 0.1;
+    println!(
+        "[table3] headline: webspam BEAR acc {} vs feature-hashing {} → {}",
+        f3(b.metric),
+        f3(fh.metric),
+        if pass {
+            "PASS (BEAR ≥ the identity-destroying baseline)"
+        } else {
+            "WARN (seed/trial noise?)"
+        }
+    );
 }

@@ -6,32 +6,69 @@
 //! Count Sketch is a *linear* projection, so worker sketches merge by
 //! element-wise addition. W workers train on disjoint shards with local
 //! BEAR state over a **shared hash family** (same seed); every
-//! `sync_every` minibatches each worker ships its counter *delta*
-//! (`m` floats — sublinear in p) to the leader, which reduces them and
-//! broadcasts the merged counters back. This is exactly data-parallel
-//! BEAR with an all-reduce over the sketched domain; the communication
-//! per round is `m` floats instead of the `p` floats dense data-parallel
-//! SGD would need.
+//! `sync_every` minibatches each worker ships its *full* counter vector
+//! (`m` floats — sublinear in p, and the same bytes a delta would cost)
+//! to the leader, which reduces them in **fixed worker-id order**
+//! ([`reduce_counters`]) and broadcasts the merged counters back. This is
+//! data-parallel BEAR with an all-reduce over the sketched domain; the
+//! communication per round is `m` floats instead of the `p` floats dense
+//! data-parallel SGD would need.
+//!
+//! Merge rules:
+//! - [`MergeRule::Average`] (default): the merged model is the plain mean
+//!   of the workers' counter vectors — local-SGD / model-averaging
+//!   semantics. The reduction is written so that the W=1 path is the
+//!   bitwise identity, which makes `--workers 1` **bit-identical** to
+//!   single-process BEAR (tests/prop_distributed.rs pins this down).
+//! - [`MergeRule::Sum`]: the leader folds each worker's progress since
+//!   the last broadcast into the running model — gradient-accumulation
+//!   semantics; the effective step grows with W (use a smaller η). Not
+//!   bit-identical at W=1 (the fold is `b + (c − b)`, not `c`).
+//!
+//! Fault tolerance: every worker thread holds a guard that reports
+//! `Done` to the leader even on panic unwind, and the leader re-checks
+//! round completion whenever a worker drops out — a worker killed
+//! mid-round can stall neither the survivors nor the final merge.
+//!
+//! Curvature pairs stay **worker-local**: the L-BFGS two-loop recursion
+//! consumes each worker's own recent secant pairs, which remain valid
+//! against the broadcast counters it just loaded. Only their summary
+//! statistics (min/max sᵀr, pair count) ride the reduction, merged by
+//! [`merge_worker_telemetry`].
 //!
 //! Workers run on std threads; each owns its engine (engines are not
 //! `Send` — see loss/mod.rs), so construction happens inside the thread.
 
 use crate::algo::bear::{Bear, BearConfig};
 use crate::algo::sketched::SketchedState;
-use crate::algo::FeatureSelector;
+use crate::algo::{FeatureSelector, SketchedSelector};
 use crate::data::DataSource;
+use crate::obs::TelemetrySnapshot;
 use crate::sparse::SparseVec;
 use std::sync::mpsc;
 use std::time::Duration;
 
-/// How worker deltas fold into the merged sketch.
+/// How worker counters fold into the merged sketch.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum MergeRule {
-    /// Σ deltas — gradient-accumulation semantics; effective step grows
-    /// with W (use a smaller η).
+    /// Fold Σ (worker − last broadcast) into the running model —
+    /// gradient-accumulation semantics; effective step grows with W
+    /// (use a smaller η).
     Sum,
-    /// (1/W)·Σ deltas — local-SGD / model-averaging semantics (default).
+    /// Mean of the worker counter vectors — local-SGD / model-averaging
+    /// semantics (default). Bitwise identity at W=1.
     Average,
+}
+
+impl MergeRule {
+    /// Parse a CLI spelling.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "sum" => Some(MergeRule::Sum),
+            "average" | "avg" => Some(MergeRule::Average),
+            _ => None,
+        }
+    }
 }
 
 /// Distributed run configuration.
@@ -54,6 +91,12 @@ pub struct DistStats {
     pub bytes_down: u64,
     pub total_iterations: u64,
     pub wall: Duration,
+    /// Cumulative wall time spent inside the fixed-order reductions.
+    pub merge_wall: Duration,
+    /// Per-worker training telemetry merged by [`merge_worker_telemetry`]
+    /// (collision rate recomputed against the merged sketch); `None` if
+    /// no worker reported any.
+    pub telemetry: Option<TelemetrySnapshot>,
 }
 
 impl DistStats {
@@ -64,19 +107,172 @@ impl DistStats {
     }
 }
 
+/// One worker's sync payload: its full counter vector, current heap
+/// candidates, minibatches trained since the last report, and training
+/// telemetry. `final_flush` marks the report a worker sends as it
+/// leaves — the leader folds those into the final model instead of a
+/// broadcast round (a tail round built from one straggler's final would
+/// overwrite the others' last windows under [`MergeRule::Average`]).
+pub struct WorkerReport {
+    pub worker: usize,
+    pub counters: Vec<f32>,
+    pub candidates: Vec<(u64, f32)>,
+    pub iterations: u64,
+    pub telemetry: Option<TelemetrySnapshot>,
+    pub final_flush: bool,
+}
+
 /// Messages from workers to the leader.
 enum Up {
-    /// (worker id, counter delta, heap candidates, iterations this round)
-    Delta(usize, Vec<f32>, Vec<(u64, f32)>, u64),
-    /// worker finished its stream
+    Report(WorkerReport),
+    /// Worker left (stream finished OR panic) — sent by a drop guard.
     Done(usize),
+}
+
+/// Sends `Done` on drop: fires on normal return *and* panic unwind, so a
+/// worker killed mid-round still tells the leader it is gone.
+struct DoneGuard {
+    id: usize,
+    up: mpsc::Sender<Up>,
+}
+
+impl Drop for DoneGuard {
+    fn drop(&mut self) {
+        let _ = self.up.send(Up::Done(self.id));
+    }
+}
+
+/// The fixed-order reduction at the heart of the distributed write path.
+/// Pure and public so the property tests can replay it under arbitrary
+/// arrival permutations: reports are sorted by worker id before any
+/// arithmetic, so the result is independent of arrival order (bit-exact).
+///
+/// `base` is the last broadcast the reporting workers trained from
+/// (all-zeros before the first round). [`MergeRule::Average`] ignores it
+/// and takes the plain mean — built clone-then-add so a single report
+/// reduces to the bitwise identity. [`MergeRule::Sum`] folds each
+/// worker's progress since `base` into `base`.
+pub fn reduce_counters(
+    rule: MergeRule,
+    base: &[f32],
+    mut reports: Vec<(usize, Vec<f32>)>,
+) -> Vec<f32> {
+    assert!(!reports.is_empty(), "reduce_counters needs at least one report");
+    reports.sort_by_key(|&(w, _)| w); // fixed merge order: worker id
+    match rule {
+        MergeRule::Average => {
+            let mut out = reports[0].1.clone();
+            for (_, c) in &reports[1..] {
+                for (acc, v) in out.iter_mut().zip(c) {
+                    *acc += *v;
+                }
+            }
+            if reports.len() > 1 {
+                let scale = 1.0f32 / reports.len() as f32;
+                for v in &mut out {
+                    *v *= scale;
+                }
+            }
+            out
+        }
+        MergeRule::Sum => {
+            let mut out = base.to_vec();
+            for (_, c) in &reports {
+                for ((acc, v), b) in out.iter_mut().zip(c).zip(base) {
+                    *acc += *v - *b;
+                }
+            }
+            out
+        }
+    }
+}
+
+/// Merge per-worker training telemetry in fixed worker-id order:
+/// loss/grad/step-norm/churn/collision are averaged, η is shared (mean),
+/// curvature min/max bracket all workers, pair and iteration counts sum.
+/// The caller recomputes `collision_rate` against the *merged* sketch
+/// when it has one (the per-worker mean is only a placeholder).
+pub fn merge_worker_telemetry(
+    mut snaps: Vec<(usize, TelemetrySnapshot)>,
+) -> Option<TelemetrySnapshot> {
+    if snaps.is_empty() {
+        return None;
+    }
+    snaps.sort_by_key(|&(w, _)| w);
+    let n = snaps.len() as f64;
+    let (mut loss, mut grad, mut eta, mut step, mut coll, mut churn) =
+        (0.0, 0.0, 0.0, 0.0, 0.0, 0.0);
+    let (mut cmin, mut cmax) = (f64::INFINITY, f64::NEG_INFINITY);
+    let (mut pairs, mut iters) = (0u64, 0u64);
+    for (_, s) in &snaps {
+        loss += s.loss;
+        grad += s.grad_norm;
+        eta += s.step_eta;
+        step += s.step_norm;
+        coll += s.collision_rate;
+        churn += s.hh_churn;
+        cmin = cmin.min(s.curvature_min);
+        cmax = cmax.max(s.curvature_max);
+        pairs += s.curvature_pairs;
+        iters += s.iterations;
+    }
+    Some(TelemetrySnapshot {
+        loss: loss / n,
+        grad_norm: grad / n,
+        step_eta: eta / n,
+        step_norm: step / n,
+        collision_rate: coll / n,
+        hh_churn: churn / n,
+        curvature_min: cmin,
+        curvature_max: cmax,
+        curvature_pairs: pairs,
+        iterations: iters,
+    })
+}
+
+/// Collision mass of a merged sketch — same estimator as
+/// `Bear::telemetry()`: the fraction of sketch energy the top-k heavy
+/// hitters do not explain, clamped to [0, 1].
+pub fn collision_rate_of(state: &SketchedState) -> f64 {
+    let energy = state.cs.energy();
+    let topk_energy: f64 = state.heap.iter().map(|(_, w)| (w as f64) * (w as f64)).sum();
+    let explained = state.cs.rows() as f64 * topk_energy;
+    if energy > 0.0 {
+        (1.0 - explained / energy).clamp(0.0, 1.0)
+    } else {
+        0.0
+    }
+}
+
+/// Build the servable merged model: load the reduced counters and rebuild
+/// the top-k heap from every candidate the workers ever promoted,
+/// re-scored against the merged sketch (deterministic: candidates are
+/// sorted + deduped by feature id before the offers).
+pub fn merged_state(cfg: &BearConfig, merged: &[f32], candidates: &mut Vec<(u64, f32)>) -> SketchedState {
+    let mut state = SketchedState::new(cfg.sketch_cells, cfg.sketch_rows, cfg.top_k, cfg.seed);
+    state.cs.load_raw(merged);
+    candidates.sort_by_key(|&(f, _)| f);
+    candidates.dedup_by_key(|&mut (f, _)| f);
+    for &(f, _) in candidates.iter() {
+        let w = state.cs.query(f);
+        state.heap.offer(f, w);
+    }
+    state
 }
 
 /// Train W workers over shards produced by `make_shard(worker_id)`;
 /// returns the merged model state plus communication stats.
 ///
 /// Determinism: worker w trains its own shard with the shared hash seed;
-/// merge order is fixed by worker id, so runs are reproducible.
+/// merge order is fixed by worker id, so runs are bit-reproducible.
+///
+/// Round protocol: a broadcast round fires once every live worker has a
+/// fresh report (re-checked when a worker drops, so a death mid-round
+/// never wedges the survivors). Final flushes — the report a worker
+/// sends just before leaving — are folded **once**, at the end, in
+/// worker order, rather than into broadcast rounds: tail rounds built
+/// from stragglers' finals would otherwise overwrite earlier workers'
+/// last windows under [`MergeRule::Average`].
 pub fn train_distributed(
     cfg: &DistributedConfig,
     make_shard: impl Fn(usize) -> Box<dyn DataSource>,
@@ -104,100 +300,110 @@ pub fn train_distributed(
     }
     drop(up_tx);
 
-    // leader: reduce deltas, broadcast merged counters
-    let mut merged = vec![0.0f32; m];
+    // leader: reduce fresh reports in worker order, broadcast the merge
+    let mut last_broadcast = vec![0.0f32; m];
     let mut heap_candidates: Vec<(u64, f32)> = Vec::new();
+    let mut worker_telemetry: Vec<Option<TelemetrySnapshot>> = vec![None; cfg.workers];
     let mut stats = DistStats::default();
     let mut live = cfg.workers;
+    let mut done = vec![false; cfg.workers];
     let mut pending: Vec<(usize, Vec<f32>)> = Vec::new();
+    let mut finals: Vec<(usize, Vec<f32>)> = Vec::new();
 
     while live > 0 {
-        match up_rx.recv() {
+        let msg = match up_rx.recv() {
             Err(_) => break,
-            Ok(Up::Done(_)) => {
-                live -= 1;
-            }
-            Ok(Up::Delta(w, delta, cands, iters)) => {
-                stats.bytes_up += (delta.len() * 4) as u64;
-                stats.total_iterations += iters;
-                heap_candidates.extend(cands);
-                pending.push((w, delta));
-                // a round completes when every live worker has reported
-                if pending.len() == live {
-                    pending.sort_by_key(|&(w, _)| w); // fixed merge order
-                    let scale = match cfg.merge {
-                        MergeRule::Sum => 1.0f32,
-                        MergeRule::Average => 1.0 / pending.len() as f32,
-                    };
-                    for (_, d) in pending.drain(..) {
-                        for (acc, v) in merged.iter_mut().zip(&d) {
-                            *acc += scale * v;
-                        }
-                    }
-                    stats.rounds += 1;
-                    for tx in &down_txs {
-                        if tx.send(merged.clone()).is_ok() {
-                            stats.bytes_down += (merged.len() * 4) as u64;
-                        }
-                    }
+            Ok(msg) => msg,
+        };
+        match msg {
+            Up::Report(r) => {
+                stats.bytes_up += (r.counters.len() * 4) as u64;
+                stats.total_iterations += r.iterations;
+                heap_candidates.extend(r.candidates);
+                if r.telemetry.is_some() {
+                    worker_telemetry[r.worker] = r.telemetry;
+                }
+                if r.final_flush {
+                    finals.push((r.worker, r.counters));
+                } else {
+                    pending.push((r.worker, r.counters));
                 }
             }
+            Up::Done(w) => {
+                if !done[w] {
+                    done[w] = true;
+                    live -= 1;
+                }
+            }
+        }
+        // a round completes when every live worker has reported —
+        // re-checked after Done too, so a worker killed mid-round never
+        // stalls the survivors
+        if live > 0 && pending.len() >= live {
+            let t0 = std::time::Instant::now();
+            let merged = reduce_counters(cfg.merge, &last_broadcast, std::mem::take(&mut pending));
+            stats.merge_wall += t0.elapsed();
+            stats.rounds += 1;
+            for tx in &down_txs {
+                if tx.send(merged.clone()).is_ok() {
+                    stats.bytes_down += (merged.len() * 4) as u64;
+                }
+            }
+            last_broadcast = merged;
         }
     }
     for h in handles {
         let _ = h.join();
     }
-    stats.wall = start.elapsed();
 
-    // final model: merged counters + heap rebuilt from every candidate the
-    // workers ever promoted, re-scored against the merged sketch
-    let mut state = SketchedState::new(
-        cfg.bear.sketch_cells,
-        cfg.bear.sketch_rows,
-        cfg.bear.top_k,
-        cfg.bear.seed,
+    // final model: every worker's last counters folded once, in fixed
+    // worker order, against the last broadcast
+    let t0 = std::time::Instant::now();
+    let merged = if finals.is_empty() {
+        last_broadcast
+    } else {
+        stats.rounds += 1;
+        reduce_counters(cfg.merge, &last_broadcast, finals)
+    };
+    stats.merge_wall += t0.elapsed();
+
+    let state = merged_state(&cfg.bear, &merged, &mut heap_candidates);
+    let mut telemetry = merge_worker_telemetry(
+        worker_telemetry
+            .iter()
+            .enumerate()
+            .filter_map(|(w, t)| t.map(|t| (w, t)))
+            .collect(),
     );
-    state.cs.load_raw(&merged);
-    heap_candidates.sort_by_key(|&(f, _)| f);
-    heap_candidates.dedup_by_key(|&mut (f, _)| f);
-    for (f, _) in heap_candidates {
-        let w = state.cs.query(f);
-        state.heap.offer(f, w);
+    if let Some(t) = telemetry.as_mut() {
+        t.collision_rate = collision_rate_of(&state);
     }
+    stats.telemetry = telemetry;
+    stats.wall = start.elapsed();
     (state, stats)
 }
 
 fn worker_loop(
-    _id: usize,
+    id: usize,
     cfg: DistributedConfig,
     mut shard: Box<dyn DataSource>,
     up: mpsc::Sender<Up>,
     down: mpsc::Receiver<Vec<f32>>,
 ) {
+    let _done = DoneGuard { id, up: up.clone() };
     // engines are built in-thread (not Send); native engine for workers —
     // the PJRT client is per-process and belongs to single-leader setups
     let mut bear = Bear::new(shard.dim(), cfg.bear.clone());
-    // baseline counters at the last sync (delta = current − baseline)
-    let mut baseline = bear.state().cs.raw().to_vec();
     let mut since_sync = 0usize;
     let mut iters_since = 0u64;
 
-    let mut sync = |bear: &mut Bear, baseline: &mut Vec<f32>, iters: &mut u64| -> bool {
-        let cur = bear.state().cs.raw();
-        let delta: Vec<f32> = cur.iter().zip(baseline.iter()).map(|(c, b)| c - b).collect();
-        let cands = bear.top_features();
-        if up.send(Up::Delta(_id, delta, cands, *iters)).is_err() {
-            return false;
-        }
-        *iters = 0;
-        match down.recv() {
-            Ok(merged) => {
-                bear.state_mut().cs.load_raw(&merged);
-                *baseline = merged;
-                true
-            }
-            Err(_) => false,
-        }
+    let report = |bear: &Bear, iters: u64, final_flush: bool| WorkerReport {
+        worker: id,
+        counters: bear.state().cs.raw().to_vec(),
+        candidates: bear.top_features(),
+        iterations: iters,
+        telemetry: bear.telemetry(),
+        final_flush,
     };
 
     for _ in 0..cfg.epochs {
@@ -208,20 +414,19 @@ fn worker_loop(
             since_sync += 1;
             if since_sync >= cfg.sync_every {
                 since_sync = 0;
-                if !sync(&mut bear, &mut baseline, &mut iters_since) {
-                    let _ = up.send(Up::Done(_id));
+                if up.send(Up::Report(report(&bear, iters_since, false))).is_err() {
                     return;
+                }
+                iters_since = 0;
+                match down.recv() {
+                    Ok(merged) => bear.state_mut().cs.load_raw(&merged),
+                    Err(_) => return,
                 }
             }
         }
     }
-    // final flush
-    let cur = bear.state().cs.raw();
-    let delta: Vec<f32> = cur.iter().zip(baseline.iter()).map(|(c, b)| c - b).collect();
-    let _ = up.send(Up::Delta(_id, delta, bear.top_features(), iters_since));
-    // the leader may or may not broadcast again before seeing Done
-    let _ = down.try_recv();
-    let _ = up.send(Up::Done(_id));
+    // final flush — folded into the final model by the leader
+    let _ = up.send(Up::Report(report(&bear, iters_since, true)));
 }
 
 /// Score with a merged distributed model (mirrors `SketchedState::score`).
@@ -276,13 +481,11 @@ mod tests {
         assert_eq!(stats.total_iterations, 4 * 800 / 16);
 
         // merged model must classify held-out data above chance
-        let mut test = WebspamSim::with_params(p, 80, 40, 400, 99).with_stream_seed(7777);
         let mut correct = 0usize;
         let mut n = 0usize;
         let mut src: Box<dyn DataSource> = Box::new(
             WebspamSim::with_params(p, 80, 40, 400, 99).with_stream_seed(7777),
         );
-        let _ = &mut test;
         while let Some(e) = src.next_example() {
             let pred = (score(&state, &e.features) > 0.0) as i32 as f32;
             correct += (pred == e.label) as usize;
@@ -306,7 +509,8 @@ mod tests {
 
     #[test]
     fn single_worker_matches_local_training_quality() {
-        // W=1 distributed ≈ local BEAR (same hash family, same data)
+        // W=1 distributed ≈ local BEAR (same hash family, same data);
+        // prop_distributed.rs sharpens this to bit-identical counters
         let p = 20_000u64;
         let (state, _) = train_distributed(&cfg(1, 4096), shard_maker(p, 1000));
         let mut local = Bear::new(p, cfg(1, 4096).bear);
@@ -328,5 +532,29 @@ mod tests {
         let (state, _) = train_distributed(&cfg(4, 8192), shard_maker(p, 800));
         let prec = metrics::precision_at_k(&state.top_features(), &planted, 40);
         assert!(prec > 0.3, "distributed selection precision {prec}");
+    }
+
+    #[test]
+    fn merged_telemetry_brackets_workers() {
+        let (state, stats) = train_distributed(&cfg(3, 4096), shard_maker(50_000, 400));
+        let t = stats.telemetry.expect("workers report telemetry");
+        assert!(t.loss.is_finite() && t.loss >= 0.0, "{t:?}");
+        assert_eq!(t.iterations, stats.total_iterations);
+        assert!(t.curvature_max >= t.curvature_min, "{t:?}");
+        assert!((0.0..=1.0).contains(&t.collision_rate), "{t:?}");
+        assert_eq!(t.collision_rate, collision_rate_of(&state));
+    }
+
+    #[test]
+    fn merge_telemetry_reduction_is_order_independent() {
+        let a = TelemetrySnapshot { loss: 1.0, curvature_min: 0.5, iterations: 10, ..Default::default() };
+        let b = TelemetrySnapshot { loss: 3.0, curvature_min: 0.25, iterations: 6, ..Default::default() };
+        let m1 = merge_worker_telemetry(vec![(0, a), (1, b)]).unwrap();
+        let m2 = merge_worker_telemetry(vec![(1, b), (0, a)]).unwrap();
+        assert_eq!(m1, m2);
+        assert_eq!(m1.loss, 2.0);
+        assert_eq!(m1.iterations, 16);
+        assert_eq!(m1.curvature_min, 0.25);
+        assert!(merge_worker_telemetry(vec![]).is_none());
     }
 }

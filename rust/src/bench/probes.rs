@@ -12,6 +12,7 @@
 //! | `fleet_scatter_p99`| 2-shard scatter-gather request p99         | µs        | lower  |
 //! | `newton_bear_gap`  | BEAR-vs-exact-Newton success gap (Fig. 1A) | Δ success | lower  |
 //! | `bear_mission_edge`| BEAR-over-MISSION success edge at CF=2.4   | Δ success | higher |
+//! | `distributed_merge`| 4-worker sketch-merging training throughput| ex/s      | higher |
 //!
 //! `train_bear` vs `train_mission` is the paper's Table 4 runtime claim
 //! (sketched second-order cost per iteration vs the first-order MISSION
@@ -31,6 +32,7 @@
 use super::runner::{BenchCtx, Probe, ProbeSpec, Sample};
 use super::report::Better;
 use crate::algo::bear::{Bear, BearConfig};
+use crate::algo::distributed::{train_distributed, DistributedConfig, MergeRule};
 use crate::algo::mission::{Mission, MissionConfig};
 use crate::algo::newton_sketch::{NewtonSketch, NewtonSketchConfig};
 use crate::algo::{FeatureSelector, SketchedSelector, StepSize};
@@ -38,7 +40,7 @@ use crate::coordinator::experiments::{
     make_sketched_selector, train_setup, AlgoKind, RealData, RealSpec,
 };
 use crate::coordinator::trainer::Trainer;
-use crate::data::synth::GaussianLinear;
+use crate::data::synth::{GaussianLinear, WebspamSim};
 use crate::data::DataSource;
 use crate::fleet::{start_fleet, FleetConfig, FleetHandle, ProbeConfig};
 use crate::loss::LossKind;
@@ -64,6 +66,7 @@ pub fn all_probes() -> Vec<Box<dyn Probe>> {
         Box::new(FleetScatterProbe::default()),
         Box::new(NewtonGapProbe::default()),
         Box::new(BearMissionEdgeProbe::default()),
+        Box::new(DistributedMergeProbe::default()),
     ]
 }
 
@@ -718,6 +721,89 @@ impl Probe for BearMissionEdgeProbe {
                 ("bear_success".into(), bear),
                 ("mission_success".into(), mission),
                 ("headline_pass".into(), if pass { 1.0 } else { 0.0 }),
+            ],
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Distributed sketch-merging training throughput (1-vs-N)
+
+/// The distributed write path's cost model, as a trajectory: 4 workers
+/// all-reducing Count Sketch counters (`train_distributed`, the engine
+/// behind `bear online --workers N`) measured in merged examples/s, with
+/// the 1-worker run of the same shard size as the speedup denominator.
+/// Extras record the round count and upstream counter traffic so a merge
+/// protocol regression (chattier syncs, bigger payloads) shows up even
+/// when raw throughput hides it.
+#[derive(Default)]
+struct DistributedMergeProbe;
+
+impl DistributedMergeProbe {
+    fn cfg(workers: usize, seed: u64) -> DistributedConfig {
+        DistributedConfig {
+            workers,
+            sync_every: 8,
+            batch_size: 16,
+            epochs: 1,
+            merge: MergeRule::Average,
+            bear: BearConfig {
+                sketch_cells: 4096,
+                sketch_rows: 5,
+                top_k: 40,
+                tau: 5,
+                step: StepSize::Constant(0.1),
+                loss: LossKind::Logistic,
+                seed: seed ^ 0xD157,
+                ..Default::default()
+            },
+        }
+    }
+}
+
+impl Probe for DistributedMergeProbe {
+    fn spec(&self) -> ProbeSpec {
+        ProbeSpec {
+            name: "distributed_merge",
+            unit: "examples/s",
+            better: Better::Higher,
+            warn_pct: 20.0,
+            fail_pct: 50.0,
+            gate: true,
+            samples: Some(3),
+            warmup: Some(1),
+        }
+    }
+
+    fn prep(&mut self, _ctx: &BenchCtx) -> Result<()> {
+        Ok(())
+    }
+
+    fn sample(&mut self, ctx: &BenchCtx) -> Result<Sample> {
+        let seed = ctx.probe_seed("distributed_merge");
+        let p = 50_000u64;
+        let n_per = if ctx.quick { 400 } else { 1_600 };
+        let workers = 4usize;
+        let shards = |seed: u64| {
+            move |w: usize| -> Box<dyn DataSource> {
+                // shared teacher, disjoint per-worker streams
+                Box::new(
+                    WebspamSim::with_params(p, 80, 40, n_per, seed)
+                        .with_stream_seed(seed ^ (1000 + w as u64)),
+                )
+            }
+        };
+        let (_, s1) = train_distributed(&Self::cfg(1, seed), shards(seed));
+        let (_, sn) = train_distributed(&Self::cfg(workers, seed), shards(seed));
+        let thr1 = n_per as f64 / s1.wall.as_secs_f64().max(1e-9);
+        let thrn = (workers * n_per) as f64 / sn.wall.as_secs_f64().max(1e-9);
+        Ok(Sample {
+            value: thrn,
+            extra: vec![
+                ("speedup_vs_1worker".into(), thrn / thr1.max(1e-9)),
+                ("rounds".into(), sn.rounds as f64),
+                ("bytes_up_kb".into(), sn.bytes_up as f64 / 1024.0),
+                ("merge_wall_us".into(), sn.merge_wall.as_secs_f64() * 1e6),
             ],
         })
     }

@@ -562,6 +562,7 @@ mod tests {
             shards: 1,
             shard_crcs: vec![0],
             telemetry: None,
+            merge: None,
         }
         .write(&manifest_path)
         .unwrap();
@@ -595,6 +596,7 @@ mod tests {
             shards: 2,
             shard_crcs: vec![1, 2],
             telemetry: None,
+            merge: None,
         }
         .write(&manifest_path)
         .unwrap();

@@ -292,7 +292,21 @@ fn cmd_online(args: &Args) -> Result<()> {
         cfg.dir.display(),
         m = cfg.dir.join(bear::online::MANIFEST_FILE).display(),
     );
-    let report = bear::online::run_online(dataset, algo, cf, &spec, &cfg)?;
+    let workers: usize = args.parse_or("workers", 1)?;
+    let report = if workers > 1 {
+        let merge_arg = args.str_or("merge", "average");
+        let merge = bear::algo::distributed::MergeRule::parse(&merge_arg)
+            .ok_or_else(|| anyhow::anyhow!("--merge must be `sum` or `average`, got {merge_arg}"))?;
+        let dcfg = bear::online::DistOnlineConfig {
+            online: cfg,
+            workers,
+            sync_every: args.parse_or("sync-every", 32usize)?,
+            merge,
+        };
+        bear::online::run_online_distributed(dataset, algo, cf, &spec, &dcfg)?
+    } else {
+        bear::online::run_online(dataset, algo, cf, &spec, &cfg)?
+    };
     let mut t = Table::new(
         &format!("online {} ({} CF={cf:.1})", dataset.label(), algo.label()),
         &["generations", "batches", "topk jaccard", "norm delta", "manifest", "wall"],
@@ -645,6 +659,9 @@ commands:
               [--publish-every N] [--max-batches N] [--keep G]
               [--shards K] [--no-sketch]   (per-shard files, one MANIFEST)
               [--n-train N] [--topk K] [--eta E] [--batch B]
+              [--workers N]   (BEAR only: N trainer threads all-reduce
+                               sketch counters into merged generations)
+              [--sync-every N] [--merge sum|average]
   serve       serve a snapshot over HTTP
               --model FILE [--addr H:P] [--workers N] [--queue-depth N]
               [--max-batch Q] [--batch-wait-us U]

@@ -31,5 +31,8 @@ pub mod trace;
 
 pub use recorder::{format_record, render_dump, FlightRecorder, SpanRecord, MAX_PHASES, ROUTE_OTHER};
 pub use registry::{validate_exposition, Registry};
-pub use telemetry::{TelemetryGauges, TelemetrySnapshot, TELEMETRY_KEYS};
+pub use telemetry::{
+    MergeGauges, MergeTelemetry, TelemetryGauges, TelemetrySnapshot, MERGE_TELEMETRY_KEYS,
+    TELEMETRY_KEYS,
+};
 pub use trace::{splitmix64, TraceContext, TRACE_HEADER};

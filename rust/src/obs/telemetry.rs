@@ -100,6 +100,56 @@ impl TelemetrySnapshot {
     }
 }
 
+/// One generation's distributed-merge health snapshot — only present on
+/// generations published by the multi-trainer coordinator
+/// (`bear online --workers N`). Kept as a *separate* optional key group
+/// from [`TelemetrySnapshot`] because `from_kv` is all-or-nothing per
+/// group: single-process publications keep writing exactly the 10
+/// `train_*` keys and old readers stay byte-compatible.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct MergeTelemetry {
+    /// All-reduce rounds completed so far this run.
+    pub rounds: u64,
+    /// Workers still contributing at publication time.
+    pub workers: u64,
+    /// Total counter bytes shipped worker→coordinator so far.
+    pub delta_bytes: u64,
+    /// Wall time of the last fixed-order reduction, microseconds.
+    pub merge_latency_us: f64,
+}
+
+/// MANIFEST key order for the merge group. Keep stable: tests assert it
+/// and operators grep it.
+pub const MERGE_TELEMETRY_KEYS: [&str; 4] = [
+    "train_merge_rounds",
+    "train_merge_workers",
+    "train_merge_delta_bytes",
+    "train_merge_latency_us",
+];
+
+impl MergeTelemetry {
+    /// `(key, value)` pairs in [`MERGE_TELEMETRY_KEYS`] order.
+    pub fn to_kv(&self) -> Vec<(&'static str, String)> {
+        vec![
+            ("train_merge_rounds", format!("{}", self.rounds)),
+            ("train_merge_workers", format!("{}", self.workers)),
+            ("train_merge_delta_bytes", format!("{}", self.delta_bytes)),
+            ("train_merge_latency_us", format!("{}", self.merge_latency_us)),
+        ]
+    }
+
+    /// Rebuild from parsed `key = value` pairs; `None` unless every key
+    /// is present and parses (all-or-nothing, like the `train_*` group).
+    pub fn from_kv<'a>(mut lookup: impl FnMut(&str) -> Option<&'a str>) -> Option<Self> {
+        Some(Self {
+            rounds: lookup("train_merge_rounds")?.parse().ok()?,
+            workers: lookup("train_merge_workers")?.parse().ok()?,
+            delta_bytes: lookup("train_merge_delta_bytes")?.parse().ok()?,
+            merge_latency_us: lookup("train_merge_latency_us")?.parse().ok()?,
+        })
+    }
+}
+
 /// The serving-side live copy: set by the reloader when a
 /// telemetry-carrying generation swaps in, read lock-free by `/statz`
 /// and `/v1/metricz` scrapes. `get()` is `None` until the first such
@@ -153,6 +203,44 @@ impl TelemetryGauges {
             curvature_max: self.curvature_max.get(),
             curvature_pairs: self.curvature_pairs.load(Ordering::Relaxed),
             iterations: self.iterations.load(Ordering::Relaxed),
+        })
+    }
+}
+
+/// Serving-side gauges for the merge group, gated exactly like
+/// [`TelemetryGauges`]: `None` until the first merge-carrying generation
+/// swaps in, so single-trainer fleets never grow the keys.
+#[derive(Debug, Default)]
+pub struct MergeGauges {
+    present: AtomicBool,
+    rounds: AtomicU64,
+    workers: AtomicU64,
+    delta_bytes: AtomicU64,
+    merge_latency_us: AtomicF64,
+}
+
+impl MergeGauges {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn publish(&self, s: &MergeTelemetry) {
+        self.rounds.store(s.rounds, Ordering::Relaxed);
+        self.workers.store(s.workers, Ordering::Relaxed);
+        self.delta_bytes.store(s.delta_bytes, Ordering::Relaxed);
+        self.merge_latency_us.set(s.merge_latency_us);
+        self.present.store(true, Ordering::Release);
+    }
+
+    pub fn get(&self) -> Option<MergeTelemetry> {
+        if !self.present.load(Ordering::Acquire) {
+            return None;
+        }
+        Some(MergeTelemetry {
+            rounds: self.rounds.load(Ordering::Relaxed),
+            workers: self.workers.load(Ordering::Relaxed),
+            delta_bytes: self.delta_bytes.load(Ordering::Relaxed),
+            merge_latency_us: self.merge_latency_us.get(),
         })
     }
 }
@@ -211,5 +299,50 @@ mod tests {
         assert!(g.get().is_none());
         g.publish(&sample());
         assert_eq!(g.get(), Some(sample()));
+    }
+
+    fn merge_sample() -> MergeTelemetry {
+        MergeTelemetry {
+            rounds: 12,
+            workers: 4,
+            delta_bytes: 786_432,
+            merge_latency_us: 37.5,
+        }
+    }
+
+    #[test]
+    fn merge_kv_roundtrip_is_lossless() {
+        let s = merge_sample();
+        let kv = s.to_kv();
+        assert_eq!(kv.len(), MERGE_TELEMETRY_KEYS.len());
+        for ((k, _), want) in kv.iter().zip(MERGE_TELEMETRY_KEYS) {
+            assert_eq!(*k, want, "merge key order drifted");
+        }
+        let back = MergeTelemetry::from_kv(|key| {
+            kv.iter().find(|(k, _)| *k == key).map(|(_, v)| v.as_str())
+        })
+        .unwrap();
+        assert_eq!(back, s);
+    }
+
+    #[test]
+    fn partial_merge_kv_yields_none() {
+        let s = merge_sample();
+        let kv = s.to_kv();
+        let back = MergeTelemetry::from_kv(|key| {
+            if key == "train_merge_workers" {
+                return None;
+            }
+            kv.iter().find(|(k, _)| *k == key).map(|(_, v)| v.as_str())
+        });
+        assert!(back.is_none());
+    }
+
+    #[test]
+    fn merge_gauges_gate_on_first_publish() {
+        let g = MergeGauges::new();
+        assert!(g.get().is_none());
+        g.publish(&merge_sample());
+        assert_eq!(g.get(), Some(merge_sample()));
     }
 }

@@ -1,0 +1,494 @@
+//! `bear online --workers N` — the distributed write path.
+//!
+//! Promotes the in-process all-reduce seed (`algo::distributed`) into the
+//! continuous-training tier: N trainer threads each consume their own
+//! re-seeded slice of the dataset stream, fold full Count Sketch counter
+//! vectors into the coordinator every `sync_every` minibatches
+//! ([`reduce_counters`], fixed worker-id order ⇒ bit-reproducible), and
+//! the coordinator publishes merged generations through the existing
+//! [`Publisher`] → `MANIFEST` → hot-reload path the single-trainer
+//! `bear online` uses:
+//!
+//! ```text
+//!  shard 0 ─▶ worker 0 ─┐ counters (m floats)
+//!  shard 1 ─▶ worker 1 ─┼▶ coordinator ── reduce (worker-id order)
+//!     ⋮          ⋮      │       │ merged counters broadcast back
+//!  shard N ─▶ worker N ─┘       ▼
+//!                          Publisher ─▶ gen-K.bearsnap + MANIFEST
+//!                                        train_* (merged) + train_merge_*
+//! ```
+//!
+//! Every published manifest carries the workers' merged `train_*`
+//! telemetry (collision rate recomputed against the merged sketch) plus
+//! the `train_merge_*` group: rounds completed, cumulative counter bytes
+//! shipped upstream, live worker count, and the latest reduction latency.
+//! Readers that predate the merge keys ignore them (tolerant dialect).
+//!
+//! Curvature pairs never cross the wire: each worker's L-BFGS history
+//! stays local (it remains valid against the broadcast counters the
+//! worker just loaded); only min/max sᵀr and pair counts are merged into
+//! the published telemetry.
+//!
+//! Fault tolerance matches `algo::distributed`: a drop guard reports a
+//! dead worker even on panic unwind, round completion is re-checked when
+//! a worker leaves, and final flushes fold once at shutdown — so a worker
+//! killed mid-round cannot wedge the coordinator or corrupt the tail
+//! publication (`tests/integration_distributed.rs` kills one and asserts
+//! the fleet still hot-swaps a CRC-clean generation).
+
+use crate::algo::bear::{Bear, BearConfig};
+use crate::algo::distributed::{
+    collision_rate_of, merge_worker_telemetry, merged_state, reduce_counters, MergeRule,
+    WorkerReport,
+};
+use crate::algo::{FeatureSelector, SketchedSelector};
+use crate::coordinator::experiments::{train_setup, AlgoKind, RealData, RealSpec};
+use crate::data::synth::{KddSim, Rcv1Sim, WebspamSim};
+use crate::data::DataSource;
+use crate::loss::LossKind;
+use crate::obs::{MergeTelemetry, TelemetrySnapshot};
+use crate::online::{drift_between, DriftStats, OnlineConfig, OnlineReport, Publisher};
+use crate::serve::ServableModel;
+use crate::util::logger::{log, Level};
+use anyhow::{bail, Result};
+use std::sync::mpsc;
+use std::time::Instant;
+
+/// `bear online --workers N` knobs: the single-trainer [`OnlineConfig`]
+/// plus the distribution degree and merge cadence.
+#[derive(Clone, Debug)]
+pub struct DistOnlineConfig {
+    pub online: OnlineConfig,
+    /// Trainer threads (each owns a re-seeded stream slice).
+    pub workers: usize,
+    /// Minibatches each worker trains between counter syncs.
+    pub sync_every: usize,
+    pub merge: MergeRule,
+}
+
+impl Default for DistOnlineConfig {
+    fn default() -> Self {
+        Self {
+            online: OnlineConfig::default(),
+            workers: 2,
+            sync_every: 32,
+            merge: MergeRule::Average,
+        }
+    }
+}
+
+/// Messages from workers to the coordinator.
+enum Up {
+    Report(WorkerReport),
+    /// Worker left (budget exhausted OR panic) — sent by a drop guard.
+    Done(usize),
+}
+
+/// Sends `Done` on drop: fires on normal return *and* panic unwind.
+struct DoneGuard {
+    id: usize,
+    up: mpsc::Sender<Up>,
+}
+
+impl Drop for DoneGuard {
+    fn drop(&mut self) {
+        let _ = self.up.send(Up::Done(self.id));
+    }
+}
+
+/// Worker `w`'s slice of the dataset stream: worker 0 consumes exactly
+/// the stream single-trainer `bear online` trains (same structural seed,
+/// default stream seed), workers ≥ 1 re-seed the epoch stream while
+/// keeping the planted teacher — disjoint data, shared concept.
+fn worker_stream(dataset: RealData, n: usize, seed: u64, worker: usize) -> Box<dyn DataSource> {
+    if worker == 0 {
+        return dataset.make(n, 1, seed).0;
+    }
+    // distinct from the default stream and from the `seed ^ 0x7e57`
+    // test split that experiments.rs carves out
+    let stream = seed ^ 0xD157_0000 ^ (worker as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    match dataset {
+        RealData::Rcv1 => Box::new(Rcv1Sim::new(n, seed).with_stream_seed(stream)),
+        RealData::Webspam => Box::new(WebspamSim::new(n, seed).with_stream_seed(stream)),
+        RealData::Kdd => Box::new(KddSim::new(n, seed).with_stream_seed(stream)),
+        RealData::Dna => unreachable!("multi-class datasets are refused before spawning"),
+    }
+}
+
+/// Multi-trainer continuous train-and-publish loop: the `--workers N`
+/// counterpart of [`super::run_online`]. BEAR-only — the merge protocol
+/// loads reduced counters back into each worker's sketch, which needs
+/// BEAR's mutable sketched state.
+pub fn run_online_distributed(
+    dataset: RealData,
+    algo: AlgoKind,
+    compression: f64,
+    spec: &RealSpec,
+    cfg: &DistOnlineConfig,
+) -> Result<OnlineReport> {
+    if dataset.num_classes() != 2 {
+        bail!(
+            "{} is multi-class; `bear online` publishes binary sketched models only",
+            dataset.label()
+        );
+    }
+    if algo != AlgoKind::Bear {
+        bail!(
+            "--workers N trains BEAR only ({} has no mergeable sketch write path)",
+            algo.label()
+        );
+    }
+    let setup = train_setup(dataset, spec, compression);
+    log(
+        Level::Info,
+        format_args!(
+            "online {} {} CF={compression:.1}: {} workers, sync every {} batches, publishing to {:?}",
+            dataset.label(),
+            algo.label(),
+            cfg.workers,
+            cfg.sync_every.max(1),
+            cfg.online.dir,
+        ),
+    );
+    let n = spec.n_train;
+    let seed = spec.seed;
+    run_distributed_online_with(setup.cfg, setup.batch, cfg, move |w| {
+        worker_stream(dataset, n, seed, w)
+    })
+}
+
+/// The coordinator loop behind [`run_online_distributed`], generic over
+/// the per-worker stream factory so the chaos test can hand one worker a
+/// poisoned source and watch the survivors keep publishing.
+pub fn run_distributed_online_with(
+    bear_cfg: BearConfig,
+    batch: usize,
+    cfg: &DistOnlineConfig,
+    make_source: impl Fn(usize) -> Box<dyn DataSource>,
+) -> Result<OnlineReport> {
+    assert!(cfg.workers >= 1, "need at least one worker");
+    let t_start = Instant::now();
+    let workers = cfg.workers;
+    let sync_every = cfg.sync_every.max(1);
+    // max_batches counts total minibatches across the fleet, matching
+    // single-trainer semantics; 0 = run until the coordinator is killed
+    let budget_per_worker = if cfg.online.max_batches == 0 {
+        0
+    } else {
+        (cfg.online.max_batches / workers as u64).max(1)
+    };
+
+    let (up_tx, up_rx) = mpsc::channel::<Up>();
+    let mut down_txs: Vec<mpsc::Sender<Vec<f32>>> = Vec::with_capacity(workers);
+    let mut handles = Vec::with_capacity(workers);
+    for w in 0..workers {
+        let (down_tx, down_rx) = mpsc::channel::<Vec<f32>>();
+        down_txs.push(down_tx);
+        let up = up_tx.clone();
+        let src = make_source(w);
+        let bear_cfg = bear_cfg.clone();
+        handles.push(
+            std::thread::Builder::new()
+                .name(format!("bear-online-worker-{w}"))
+                .spawn(move || {
+                    worker_loop(w, bear_cfg, batch, sync_every, budget_per_worker, src, up, down_rx)
+                })
+                .expect("spawn online worker"),
+        );
+    }
+    drop(up_tx);
+
+    let m = bear_cfg.sketch_cells / bear_cfg.sketch_rows * bear_cfg.sketch_rows;
+    let mut publisher = Publisher::new(&cfg.online.dir, cfg.online.keep)?;
+    let publish_every = cfg.online.publish_every.max(1) as u64;
+
+    let mut last_broadcast = vec![0.0f32; m];
+    let mut candidates: Vec<(u64, f32)> = Vec::new();
+    let mut worker_telemetry: Vec<Option<TelemetrySnapshot>> = vec![None; workers];
+    let mut live = workers;
+    let mut done = vec![false; workers];
+    let mut pending: Vec<(usize, Vec<f32>)> = Vec::new();
+    let mut finals: Vec<(usize, Vec<f32>)> = Vec::new();
+
+    let mut batches = 0u64;
+    let mut last_published = 0u64;
+    let mut generations = 0u64;
+    let mut prev: Option<ServableModel> = None;
+    let mut last_drift: Option<DriftStats> = None;
+    let mut rounds = 0u64;
+    let mut delta_bytes = 0u64;
+    let mut last_merge_us = 0.0f64;
+
+    while live > 0 {
+        let msg = match up_rx.recv() {
+            Err(_) => break,
+            Ok(msg) => msg,
+        };
+        match msg {
+            Up::Report(r) => {
+                delta_bytes += (r.counters.len() * 4) as u64;
+                batches += r.iterations;
+                candidates.extend(r.candidates);
+                if r.telemetry.is_some() {
+                    worker_telemetry[r.worker] = r.telemetry;
+                }
+                if r.final_flush {
+                    finals.push((r.worker, r.counters));
+                } else {
+                    pending.push((r.worker, r.counters));
+                }
+            }
+            Up::Done(w) => {
+                if !done[w] {
+                    done[w] = true;
+                    live -= 1;
+                }
+            }
+        }
+        // broadcast round: every live worker has a fresh report
+        // (re-checked after Done so a mid-round death never stalls it)
+        if live > 0 && pending.len() >= live {
+            let t0 = Instant::now();
+            let merged = reduce_counters(cfg.merge, &last_broadcast, std::mem::take(&mut pending));
+            last_merge_us = t0.elapsed().as_secs_f64() * 1e6;
+            rounds += 1;
+            for tx in &down_txs {
+                let _ = tx.send(merged.clone());
+            }
+            last_broadcast = merged;
+            if batches - last_published >= publish_every {
+                let info = MergeTelemetry {
+                    rounds,
+                    workers: live as u64,
+                    delta_bytes,
+                    merge_latency_us: last_merge_us,
+                };
+                last_drift = publish_merged(
+                    &mut publisher,
+                    &bear_cfg,
+                    &last_broadcast,
+                    &mut candidates,
+                    &worker_telemetry,
+                    info,
+                    &mut prev,
+                    batches,
+                    &cfg.online,
+                )?;
+                last_published = batches;
+                generations += 1;
+            }
+        }
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+
+    // fold every worker's final flush once, in fixed worker order
+    if !finals.is_empty() {
+        let t0 = Instant::now();
+        last_broadcast = reduce_counters(cfg.merge, &last_broadcast, std::mem::take(&mut finals));
+        last_merge_us = t0.elapsed().as_secs_f64() * 1e6;
+        rounds += 1;
+    }
+    // trailing publication: a bounded run must not discard trained
+    // batches, and a run shorter than publish_every must still leave a
+    // generation for the serve tier
+    if batches > last_published || generations == 0 {
+        let info = MergeTelemetry {
+            rounds,
+            workers: workers as u64,
+            delta_bytes,
+            merge_latency_us: last_merge_us,
+        };
+        last_drift = publish_merged(
+            &mut publisher,
+            &bear_cfg,
+            &last_broadcast,
+            &mut candidates,
+            &worker_telemetry,
+            info,
+            &mut prev,
+            batches,
+            &cfg.online,
+        )?;
+        generations += 1;
+    }
+    Ok(OnlineReport {
+        generations,
+        batches,
+        wall: t_start.elapsed(),
+        last_drift,
+        manifest: publisher.manifest_path(),
+    })
+}
+
+/// Rebuild the servable state from the merged counters and publish it as
+/// the next generation, stamping merged `train_*` + `train_merge_*` onto
+/// the manifest.
+#[allow(clippy::too_many_arguments)]
+fn publish_merged(
+    publisher: &mut Publisher,
+    bear_cfg: &BearConfig,
+    merged: &[f32],
+    candidates: &mut Vec<(u64, f32)>,
+    worker_telemetry: &[Option<TelemetrySnapshot>],
+    info: MergeTelemetry,
+    prev: &mut Option<ServableModel>,
+    batches: u64,
+    online: &OnlineConfig,
+) -> Result<Option<DriftStats>> {
+    let state = merged_state(bear_cfg, merged, candidates);
+    let mut telemetry = merge_worker_telemetry(
+        worker_telemetry
+            .iter()
+            .enumerate()
+            .filter_map(|(w, t)| t.map(|t| (w, t)))
+            .collect(),
+    );
+    if let Some(t) = telemetry.as_mut() {
+        t.collision_rate = collision_rate_of(&state);
+    }
+    let mut model = ServableModel::from_sketched(&state, LossKind::Logistic, 0.0);
+    if online.strip_sketch {
+        model = model.without_sketch();
+    }
+    let drift = prev.as_ref().map(|p| drift_between(p, &model));
+    publisher.set_telemetry(telemetry);
+    publisher.set_merge_telemetry(Some(info));
+    let publication = publisher.publish_sharded(&model, online.shards.max(1))?;
+    log(
+        Level::Info,
+        format_args!(
+            "published merged generation {} ({} bytes, batch {batches}, round {}, {} workers, merge {:.0}us)",
+            publication.generation,
+            publication.bytes,
+            info.rounds,
+            info.workers,
+            info.merge_latency_us,
+        ),
+    );
+    *prev = Some(model);
+    Ok(drift)
+}
+
+/// One trainer thread: cycle the shard stream endlessly (bounded by the
+/// per-worker budget when the run is bounded), ship full counters every
+/// `sync_every` minibatches, load each broadcast back into the sketch.
+#[allow(clippy::too_many_arguments)]
+fn worker_loop(
+    id: usize,
+    bear_cfg: BearConfig,
+    batch: usize,
+    sync_every: usize,
+    budget: u64,
+    mut src: Box<dyn DataSource>,
+    up: mpsc::Sender<Up>,
+    down: mpsc::Receiver<Vec<f32>>,
+) {
+    let _done = DoneGuard { id, up: up.clone() };
+    let mut bear = Bear::new(src.dim(), bear_cfg);
+    let mut trained = 0u64;
+    let mut iters_since = 0u64;
+    let mut since_sync = 0usize;
+
+    let report = |bear: &Bear, iters: u64, final_flush: bool| WorkerReport {
+        worker: id,
+        counters: bear.state().cs.raw().to_vec(),
+        candidates: bear.top_features(),
+        iterations: iters,
+        telemetry: bear.telemetry(),
+        final_flush,
+    };
+
+    while budget == 0 || trained < budget {
+        let mb = match src.next_minibatch(batch) {
+            Some(mb) => mb,
+            None => {
+                // endless stream: cycle the epoch
+                src.reset();
+                match src.next_minibatch(batch) {
+                    Some(mb) => mb,
+                    None => break,
+                }
+            }
+        };
+        bear.train_minibatch(&mb);
+        trained += 1;
+        iters_since += 1;
+        since_sync += 1;
+        if since_sync >= sync_every {
+            since_sync = 0;
+            if up.send(Up::Report(report(&bear, iters_since, false))).is_err() {
+                return;
+            }
+            iters_since = 0;
+            match down.recv() {
+                Ok(merged) => bear.state_mut().cs.load_raw(&merged),
+                Err(_) => return,
+            }
+        }
+    }
+    // final flush — folded into the tail publication by the coordinator
+    let _ = up.send(Up::Report(report(&bear, iters_since, true)));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::online::Manifest;
+    use crate::obs::MERGE_TELEMETRY_KEYS;
+
+    #[test]
+    fn distributed_online_publishes_merged_generations() {
+        let dir = std::env::temp_dir()
+            .join(format!("bear-online-dist-mod-{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let mut spec = RealSpec::quick(RealData::Rcv1);
+        spec.n_train = 256;
+        spec.batch = Some(8);
+        let cfg = DistOnlineConfig {
+            online: OnlineConfig {
+                dir: dir.clone(),
+                publish_every: 8,
+                // 24 total = 12 per worker: mid-run publications + a
+                // trailing merged window published on exit
+                max_batches: 24,
+                keep: 2,
+                ..Default::default()
+            },
+            workers: 2,
+            sync_every: 4,
+            merge: MergeRule::Average,
+        };
+        let report =
+            run_online_distributed(RealData::Rcv1, AlgoKind::Bear, 100.0, &spec, &cfg).unwrap();
+        assert_eq!(report.batches, 24);
+        assert!(report.generations >= 1, "{report:?}");
+        let man = Manifest::read(&report.manifest).unwrap();
+        assert_eq!(man.generation, report.generations);
+        // merged train_* telemetry covers every minibatch either worker ran
+        let t = man.telemetry.expect("workers publish merged train_* telemetry");
+        assert_eq!(t.iterations, 24);
+        assert!((0.0..=1.0).contains(&t.collision_rate), "{t:?}");
+        // the train_merge_* group rides the same manifest
+        let merge = man.merge.expect("coordinator stamps train_merge_*");
+        assert!(merge.rounds >= 1, "{merge:?}");
+        assert_eq!(merge.workers, 2);
+        assert!(merge.delta_bytes > 0);
+        let text = std::fs::read_to_string(&report.manifest).unwrap();
+        for key in MERGE_TELEMETRY_KEYS {
+            assert!(text.contains(key), "manifest missing {key}:\n{text}");
+        }
+        // the published snapshot is loadable (CRC-clean, servable)
+        let model = ServableModel::load(&man.snapshot_path(&report.manifest)).unwrap();
+        assert_eq!(model.generation, man.generation);
+        // non-BEAR algos and multi-class datasets are refused
+        assert!(
+            run_online_distributed(RealData::Rcv1, AlgoKind::Mission, 100.0, &spec, &cfg).is_err()
+        );
+        assert!(
+            run_online_distributed(RealData::Dna, AlgoKind::Bear, 330.0, &spec, &cfg).is_err()
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -24,16 +24,24 @@
 //! - [`drift`] — per-publication drift signals (top-k support Jaccard,
 //!   coordinate-norm delta) logged by the trainer and exported on
 //!   `/statz`.
+//! - [`distributed`] — the `--workers N` write path: N trainer threads
+//!   all-reduce Count Sketch counters into a coordinator that publishes
+//!   merged generations through the same `Publisher` → `MANIFEST` seam,
+//!   stamping merged `train_*` plus `train_merge_*` telemetry.
 //!
-//! CLI: `bear online --dataset … --dir DIR --publish-every N` on the
-//! write side, `bear serve --model … --watch-manifest DIR/MANIFEST` on
-//! the read side. `tests/integration_online.rs` drives the full loop and
-//! asserts hot reloads drop zero requests.
+//! CLI: `bear online --dataset … --dir DIR --publish-every N
+//! [--workers N]` on the write side, `bear serve --model …
+//! --watch-manifest DIR/MANIFEST` on the read side.
+//! `tests/integration_online.rs` drives the full loop and asserts hot
+//! reloads drop zero requests; `tests/integration_distributed.rs` does
+//! the same with a worker killed mid-round.
 
+pub mod distributed;
 pub mod drift;
 pub mod publisher;
 pub mod reload;
 
+pub use distributed::{run_distributed_online_with, run_online_distributed, DistOnlineConfig};
 pub use drift::{drift_between, topk_jaccard, DriftStats};
 pub use publisher::{Manifest, Publication, Publisher, ShardedPublication, MANIFEST_FILE};
 pub use reload::{peek_generation, CachedModel, ModelHolder, ReloadOutcome, ReloadStats, Reloader};

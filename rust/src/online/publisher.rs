@@ -25,7 +25,7 @@
 
 use crate::cli::parse_kv;
 use crate::coordinator::checkpoint::{crc32, write_atomic};
-use crate::obs::TelemetrySnapshot;
+use crate::obs::{MergeTelemetry, TelemetrySnapshot};
 use crate::serve::shard::{shard_file_name, MAX_SHARDS};
 use crate::serve::ServableModel;
 use anyhow::{bail, Context, Result};
@@ -59,6 +59,11 @@ pub struct Manifest {
     /// `key = value` dialect ignores unknown keys, so old readers skip
     /// these lines and new readers tolerate their absence.
     pub telemetry: Option<TelemetrySnapshot>,
+    /// Distributed-merge telemetry (`train_merge_*` keys) — only present
+    /// on generations published by the multi-trainer coordinator
+    /// (`bear online --workers N`); same tolerant-dialect compatibility
+    /// story as `telemetry`.
+    pub merge: Option<MergeTelemetry>,
 }
 
 impl Manifest {
@@ -87,7 +92,8 @@ impl Manifest {
             shard_crcs.push(get(&key)?.parse().with_context(|| format!("manifest {key}"))?);
         }
         let telemetry = TelemetrySnapshot::from_kv(|k| kv.get(k).map(String::as_str));
-        Ok(Self { generation, file, crc32: crc, shards, shard_crcs, telemetry })
+        let merge = MergeTelemetry::from_kv(|k| kv.get(k).map(String::as_str));
+        Ok(Self { generation, file, crc32: crc, shards, shard_crcs, telemetry, merge })
     }
 
     /// Atomically write this manifest at `path` (tmp + rename).
@@ -104,6 +110,11 @@ impl Manifest {
         }
         if let Some(t) = &self.telemetry {
             for (k, v) in t.to_kv() {
+                body.push_str(&format!("{k} = {v}\n"));
+            }
+        }
+        if let Some(m) = &self.merge {
+            for (k, v) in m.to_kv() {
                 body.push_str(&format!("{k} = {v}\n"));
             }
         }
@@ -180,6 +191,11 @@ pub struct Publisher {
     /// Telemetry stamped onto the next manifest (set per publication by
     /// the training loop via [`Publisher::set_telemetry`]).
     telemetry: Option<TelemetrySnapshot>,
+    /// Distributed-merge telemetry stamped onto the next manifest (set
+    /// by the multi-trainer coordinator via
+    /// [`Publisher::set_merge_telemetry`]; single-trainer loops never
+    /// touch it, keeping their manifests byte-identical to before).
+    merge: Option<MergeTelemetry>,
 }
 
 fn generation_file(generation: u64) -> String {
@@ -199,7 +215,7 @@ impl Publisher {
         } else {
             1
         };
-        Ok(Self { dir, keep: keep.max(1), next_generation, telemetry: None })
+        Ok(Self { dir, keep: keep.max(1), next_generation, telemetry: None, merge: None })
     }
 
     /// Set the training-health telemetry the next publication's manifest
@@ -208,6 +224,12 @@ impl Publisher {
     /// generation they ride with.
     pub fn set_telemetry(&mut self, telemetry: Option<TelemetrySnapshot>) {
         self.telemetry = telemetry;
+    }
+
+    /// Set the distributed-merge telemetry (`train_merge_*` keys) the
+    /// next publication's manifest will carry (`None` clears it).
+    pub fn set_merge_telemetry(&mut self, merge: Option<MergeTelemetry>) {
+        self.merge = merge;
     }
 
     /// The directory's manifest path (what `bear serve --watch-manifest`
@@ -239,6 +261,7 @@ impl Publisher {
             shards: 1,
             shard_crcs: vec![crc],
             telemetry: self.telemetry,
+            merge: self.merge,
         }
         .write(&self.manifest_path())?;
         self.next_generation += 1;
@@ -291,6 +314,7 @@ impl Publisher {
             shards,
             shard_crcs: crcs.clone(),
             telemetry: self.telemetry,
+            merge: self.merge,
         }
         .write(&self.manifest_path())?;
         self.next_generation += 1;
@@ -477,6 +501,27 @@ mod tests {
         p.set_telemetry(Some(snap));
         p.publish_sharded(&toy_model(3.0), 2).unwrap();
         assert_eq!(Manifest::read(&p.manifest_path()).unwrap().telemetry, Some(snap));
+        // single-trainer publications never grow train_merge_* keys …
+        let text = std::fs::read_to_string(p.manifest_path()).unwrap();
+        assert!(!text.contains("train_merge_"), "{text}");
+        assert_eq!(Manifest::read(&p.manifest_path()).unwrap().merge, None);
+        // … and coordinator publications round-trip them losslessly
+        let merge = crate::obs::MergeTelemetry {
+            rounds: 9,
+            workers: 4,
+            delta_bytes: 1 << 20,
+            merge_latency_us: 120.25,
+        };
+        p.set_telemetry(Some(snap));
+        p.set_merge_telemetry(Some(merge));
+        p.publish(&toy_model(4.0)).unwrap();
+        let man = Manifest::read(&p.manifest_path()).unwrap();
+        assert_eq!(man.telemetry, Some(snap));
+        assert_eq!(man.merge, Some(merge));
+        let text = std::fs::read_to_string(p.manifest_path()).unwrap();
+        for key in crate::obs::MERGE_TELEMETRY_KEYS {
+            assert!(text.contains(key), "missing {key} in {text}");
+        }
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -25,7 +25,7 @@
 //! across the fleet without ever dropping capacity.
 
 use crate::coordinator::checkpoint::crc32;
-use crate::obs::TelemetryGauges;
+use crate::obs::{MergeGauges, TelemetryGauges};
 use crate::online::drift::{drift_between, DriftStats};
 use crate::online::publisher::Manifest;
 use crate::serve::metrics::AtomicF64;
@@ -150,6 +150,10 @@ pub struct ReloadStats {
     /// (`get() == None`) until a telemetry-carrying manifest swaps in —
     /// the gate that keeps pre-telemetry `/statz` bodies byte-stable.
     pub telemetry: TelemetryGauges,
+    /// Distributed-merge telemetry (`train_merge_*`) of the serving
+    /// generation; empty until a coordinator-published manifest swaps in,
+    /// so single-trainer fleets never grow the keys.
+    pub merge: MergeGauges,
 }
 
 impl ReloadStats {
@@ -162,6 +166,7 @@ impl ReloadStats {
             topk_jaccard: AtomicF64::new(d.topk_jaccard),
             coord_norm_delta: AtomicF64::new(d.coord_norm_delta),
             telemetry: TelemetryGauges::new(),
+            merge: MergeGauges::new(),
         }
     }
 }
@@ -272,6 +277,9 @@ impl Reloader {
         self.stats.coord_norm_delta.set(drift.coord_norm_delta);
         if let Some(t) = &manifest.telemetry {
             self.stats.telemetry.publish(t);
+        }
+        if let Some(m) = &manifest.merge {
+            self.stats.merge.publish(m);
         }
         Ok(ReloadOutcome::Swapped { generation: manifest.generation, drift })
     }
@@ -418,6 +426,19 @@ mod tests {
         let got = stats.telemetry.get().expect("telemetry published on swap");
         assert_eq!(got.iterations, 42);
         assert_eq!(got.loss, 0.5);
+        // merge gauges stay gated until a coordinator generation swaps in
+        assert!(stats.merge.get().is_none());
+        let merge = crate::obs::MergeTelemetry {
+            rounds: 3,
+            workers: 2,
+            delta_bytes: 4096,
+            merge_latency_us: 55.0,
+        };
+        publisher.set_telemetry(Some(snap));
+        publisher.set_merge_telemetry(Some(merge));
+        publisher.publish(&toy_model(10, 4.0)).unwrap();
+        reloader.try_reload().unwrap();
+        assert_eq!(stats.merge.get(), Some(merge));
         std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -68,7 +68,8 @@ use crate::api::{
 use crate::coordinator::checkpoint::encode_loss;
 use crate::obs::trace::TraceContext;
 use crate::obs::{
-    render_dump, FlightRecorder, Registry, SpanRecord, TelemetrySnapshot, MAX_PHASES, ROUTE_OTHER,
+    render_dump, FlightRecorder, MergeTelemetry, Registry, SpanRecord, TelemetrySnapshot,
+    MAX_PHASES, ROUTE_OTHER,
 };
 use crate::online::reload::{CachedModel, ModelHolder, ReloadOutcome, ReloadStats, Reloader};
 use crate::serve::http::{query_param, read_request, reason_for, write_response, ReadError, Request};
@@ -253,6 +254,10 @@ pub struct StatsSnapshot {
     /// `train_*` lines entirely in that case, keeping the pre-telemetry
     /// output byte-identical).
     pub telemetry: Option<TelemetrySnapshot>,
+    /// Distributed-merge gauges (`train_merge_*`) from the last manifest
+    /// published by a `--workers N` coordinator (`None` on single-trainer
+    /// fleets — those `/statz` outputs stay byte-identical).
+    pub merge: Option<MergeTelemetry>,
 }
 
 /// Observability state shared by workers and the handle. Deliberately
@@ -652,6 +657,7 @@ fn scrape(mon: &Monitor) -> StatsSnapshot {
         drift_coord_norm_delta: r.coord_norm_delta.get(),
         latency: merged_snapshot(mon.worker_hists.iter().map(|h| h.as_ref())),
         telemetry: r.telemetry.get(),
+        merge: r.merge.get(),
     }
 }
 
@@ -704,6 +710,13 @@ fn render_statz(s: &StatsSnapshot, model: &ServableModel, workers: usize) -> Str
     // byte-identical to the pre-telemetry server
     if let Some(t) = &s.telemetry {
         for (k, v) in t.to_kv() {
+            out.push_str(&format!("{k} {v}\n"));
+        }
+    }
+    // distributed-merge gauges, same presence rule: only after a
+    // coordinator-published generation swaps in
+    if let Some(m) = &s.merge {
+        for (k, v) in m.to_kv() {
             out.push_str(&format!("{k} {v}\n"));
         }
     }
@@ -916,7 +929,7 @@ fn build_registry(
         let mut tg = |name: &str, help: &str, get: fn(&TelemetrySnapshot) -> f64| {
             let r = reload_stats.clone();
             reg.gauge(name, &[], help, move || {
-                r.telemetry.get().map(get).unwrap_or(f64::NAN)
+                r.telemetry.get().map(|t| get(&t)).unwrap_or(f64::NAN)
             });
         };
         tg("bear_train_loss", "minibatch loss at publication", |t| t.loss);
@@ -940,6 +953,28 @@ fn build_registry(
         });
         tg("bear_train_iterations", "minibatches trained at publication", |t| {
             t.iterations as f64
+        });
+    }
+    {
+        // distributed-merge gauges: NaN on single-trainer fleets, live
+        // once a `--workers N` coordinator generation swaps in
+        let mut mg = |name: &str, help: &str, get: fn(&MergeTelemetry) -> f64| {
+            let r = reload_stats.clone();
+            reg.gauge(name, &[], help, move || {
+                r.merge.get().map(|m| get(&m)).unwrap_or(f64::NAN)
+            });
+        };
+        mg("bear_train_merge_rounds", "counter all-reduce rounds completed", |m| {
+            m.rounds as f64
+        });
+        mg("bear_train_merge_workers", "trainer threads feeding the coordinator", |m| {
+            m.workers as f64
+        });
+        mg("bear_train_merge_delta_bytes", "cumulative counter bytes shipped upstream", |m| {
+            m.delta_bytes as f64
+        });
+        mg("bear_train_merge_latency_us", "latest fixed-order reduction latency", |m| {
+            m.merge_latency_us
         });
     }
     reg

@@ -1,0 +1,299 @@
+//! Chaos acceptance for the distributed write path (`bear online
+//! --workers N`):
+//!
+//! 1. one trainer thread panics mid-round (its stream is poisoned) and
+//!    the coordinator must still fold the survivors' rounds and publish
+//!    CRC-clean sharded generations whose manifest carries merged
+//!    `train_*` telemetry plus the `train_merge_*` group, and
+//! 2. a serve tier watching the coordinator's MANIFEST must hot-swap
+//!    merged generations under closed-loop load with **zero** dropped
+//!    requests, and expose the merged telemetry on `/statz` after the
+//!    swap.
+//!
+//! Publication dirs land under `CARGO_TARGET_TMPDIR` (`fleet-dist-*`) so
+//! CI uploads them when a test in the chaos step fails.
+//!
+//! NAMING CONVENTION: every test fn in this file starts with `fleet_` —
+//! CI runs this binary in a dedicated hard-timeout step and excludes the
+//! same tests from the plain `cargo test` step via `--skip fleet_`.
+
+use bear::algo::bear::BearConfig;
+use bear::algo::distributed::MergeRule;
+use bear::algo::StepSize;
+use bear::api::{format_query, BearClient, Statz};
+use bear::coordinator::checkpoint::crc32;
+use bear::coordinator::experiments::RealData;
+use bear::data::synth::Rcv1Sim;
+use bear::data::{DataSource, Example};
+use bear::loss::LossKind;
+use bear::online::{
+    run_distributed_online_with, DistOnlineConfig, Manifest, OnlineConfig,
+};
+use bear::obs::MERGE_TELEMETRY_KEYS;
+use bear::serve::loadgen::{self, LoadgenConfig};
+use bear::serve::{serve, ServableModel, ServerConfig};
+use bear::sparse::SparseVec;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn tmp_root(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_TARGET_TMPDIR"))
+        .join(format!("fleet-dist-{name}-{}", std::process::id()))
+}
+
+fn trainer_cfg() -> BearConfig {
+    BearConfig {
+        sketch_cells: 8192,
+        sketch_rows: 3,
+        top_k: 100,
+        tau: 5,
+        step: StepSize::Constant(0.01),
+        loss: LossKind::Logistic,
+        seed: 0xD157,
+        ..Default::default()
+    }
+}
+
+fn test_queries(n: usize) -> Vec<SparseVec> {
+    let mut src = Rcv1Sim::new(n, 0x5eed).with_stream_seed(0xF00D);
+    let mut out = Vec::with_capacity(n);
+    while let Some(e) = src.next_example() {
+        out.push(e.features);
+    }
+    out
+}
+
+/// One key of a statz body via the canonical [`Statz`] schema parser,
+/// panicking (with the full body) when the key is absent — tests want
+/// loud failures, not Statz's lenient zero-default.
+fn statz_value(body: &str, key: &str) -> f64 {
+    match Statz::parse(body).get(key) {
+        Some(v) => v.parse().unwrap(),
+        None => panic!("statz missing {key}:\n{body}"),
+    }
+}
+
+/// Served margins must equal the given snapshot's margins bit-for-bit.
+fn assert_serves_model(client: &BearClient, model: &ServableModel, queries: &[SparseVec]) {
+    let body: String = queries.iter().map(|q| format_query(q) + "\n").collect();
+    let resp = client.predict_raw(&body).unwrap();
+    let lines: Vec<&str> = resp.lines().collect();
+    assert_eq!(lines.len(), queries.len());
+    for (q, line) in queries.iter().zip(&lines) {
+        let margin: f64 = line.split_whitespace().next().unwrap().parse().unwrap();
+        assert_eq!(
+            margin.to_bits(),
+            model.margin(q).to_bits(),
+            "served {margin} vs snapshot {}",
+            model.margin(q)
+        );
+    }
+}
+
+/// A worker stream that panics mid-epoch — the fault injector. The panic
+/// unwinds through the worker thread; the coordinator's drop guard turns
+/// it into a `Done`, and the round protocol must absorb it.
+struct DyingSource {
+    inner: Rcv1Sim,
+    served: usize,
+    die_after: usize,
+}
+
+impl DataSource for DyingSource {
+    fn dim(&self) -> u64 {
+        self.inner.dim()
+    }
+    fn num_classes(&self) -> usize {
+        self.inner.num_classes()
+    }
+    fn len(&self) -> usize {
+        self.inner.len()
+    }
+    fn next_example(&mut self) -> Option<Example> {
+        assert!(
+            self.served < self.die_after,
+            "chaos: worker stream poisoned after {} examples (expected panic)",
+            self.served
+        );
+        self.served += 1;
+        self.inner.next_example()
+    }
+    fn reset(&mut self) {
+        self.inner.reset();
+    }
+}
+
+#[test]
+fn fleet_distributed_coordinator_survives_worker_death() {
+    let dir = tmp_root("chaos");
+    std::fs::remove_dir_all(&dir).ok();
+
+    // 3 workers × (36/3 = 12) minibatches of 8, syncing every 4. Worker 2
+    // completes round 1 (4 batches = 32 examples) and panics on example
+    // 37 — mid-round 2, after its counters are already in the merge.
+    let batch = 8;
+    let cfg = DistOnlineConfig {
+        online: OnlineConfig {
+            dir: dir.clone(),
+            publish_every: 8,
+            max_batches: 36,
+            keep: 8,
+            shards: 2,
+            ..Default::default()
+        },
+        workers: 3,
+        sync_every: 4,
+        merge: MergeRule::Average,
+    };
+    let report = run_distributed_online_with(trainer_cfg(), batch, &cfg, |w| {
+        let inner = Rcv1Sim::new(512, 0x5eed).with_stream_seed(1 + w as u64);
+        if w == 2 {
+            Box::new(DyingSource { inner, served: 0, die_after: 36 })
+        } else {
+            Box::new(inner)
+        }
+    })
+    .expect("coordinator must survive a worker death");
+
+    // the survivors' full budget lands (12 + 12 batches) plus the dead
+    // worker's one synced round (4); its unreported tail is lost
+    assert_eq!(report.batches, 28, "{report:?}");
+    assert!(report.generations >= 2, "{report:?}");
+
+    // every published shard of the final generation is CRC-clean and
+    // loadable — the chaos never corrupts the publication
+    let man = Manifest::read(&report.manifest).unwrap();
+    assert_eq!(man.generation, report.generations);
+    assert_eq!(man.shards, 2);
+    for i in 0..man.shards {
+        let path = man.shard_snapshot_path(&report.manifest, i).unwrap();
+        let data = std::fs::read(&path).unwrap();
+        assert_eq!(crc32(&data), man.shard_crc(i).unwrap(), "shard {i} CRC mismatch");
+        let model = ServableModel::load(&path).unwrap();
+        assert_eq!(model.generation, man.generation);
+    }
+
+    // merged train_* telemetry covers every minibatch any worker synced —
+    // including the dead worker's round-1 window
+    let t = man.telemetry.expect("merged train_* telemetry on the manifest");
+    assert_eq!(t.iterations, 28, "{t:?}");
+    assert!((0.0..=1.0).contains(&t.collision_rate), "{t:?}");
+
+    // the death is visible in the train_merge_* group: the final
+    // generation was merged from the 2 survivors
+    let merge = man.merge.expect("train_merge_* on the manifest");
+    assert!(merge.rounds >= 2, "{merge:?}");
+    assert_eq!(merge.workers, 2, "survivor count after the kill: {merge:?}");
+    assert!(merge.delta_bytes > 0, "{merge:?}");
+    let text = std::fs::read_to_string(&report.manifest).unwrap();
+    for key in MERGE_TELEMETRY_KEYS {
+        assert!(text.contains(key), "manifest missing {key}:\n{text}");
+    }
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn fleet_distributed_hot_swap_is_zero_drop_under_load() {
+    let dir = tmp_root("swap");
+    std::fs::remove_dir_all(&dir).ok();
+
+    // bounded 2-worker runs: 16 total minibatches of 8, syncing every 4,
+    // publishing every 8 → two merged generations per run
+    let batch = 8;
+    let cfg = DistOnlineConfig {
+        online: OnlineConfig {
+            dir: dir.clone(),
+            publish_every: 8,
+            max_batches: 16,
+            keep: 8,
+            ..Default::default()
+        },
+        workers: 2,
+        sync_every: 4,
+        merge: MergeRule::Average,
+    };
+
+    // run 1 seeds the serve tier with its first merged generations
+    let r1 = run_distributed_online_with(trainer_cfg(), batch, &cfg, |w| {
+        Box::new(Rcv1Sim::new(512, 0x5eed).with_stream_seed(100 + w as u64))
+    })
+    .unwrap();
+    let man1 = Manifest::read(&r1.manifest).unwrap();
+    let m1 = ServableModel::load(&man1.snapshot_path(&r1.manifest)).unwrap();
+
+    let handle = serve(
+        Arc::new(m1.clone()),
+        ServerConfig {
+            // 4 closed-loop loadgen connections + the foreground client
+            // all hold a worker; size the pool so none starves
+            workers: 8,
+            watch_manifest: Some(r1.manifest.clone()),
+            poll_interval: Duration::from_millis(25),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let addr = handle.addr().to_string();
+    let client = BearClient::connect(&addr).unwrap();
+    let queries = test_queries(16);
+    let body = client.statz_raw().unwrap();
+    assert_eq!(statz_value(&body, "generation") as u64, man1.generation);
+    assert_serves_model(&client, &m1, &queries);
+
+    // closed-loop load while run 2 publishes more merged generations into
+    // the same dir (the publisher resumes numbering; the poller swaps)
+    let lg_cfg = LoadgenConfig {
+        threads: 4,
+        requests_per_thread: 400,
+        queries_per_request: 8,
+        dataset: RealData::Rcv1,
+        seed: 77,
+        duration: None,
+    };
+    let lg_addr = addr.clone();
+    let lg = std::thread::spawn(move || loadgen::run(&lg_addr, &lg_cfg).unwrap());
+    std::thread::sleep(Duration::from_millis(50));
+
+    let r2 = run_distributed_online_with(trainer_cfg(), batch, &cfg, |w| {
+        Box::new(Rcv1Sim::new(512, 0x5eed).with_stream_seed(200 + w as u64))
+    })
+    .unwrap();
+    let man2 = Manifest::read(&r2.manifest).unwrap();
+    assert_eq!(man2.generation, man1.generation + r2.generations, "numbering must resume");
+
+    // the poller hot-swaps to the newest merged generation…
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let body = client.statz_raw().unwrap();
+        if statz_value(&body, "generation") as u64 == man2.generation {
+            break;
+        }
+        assert!(Instant::now() < deadline, "poller never swapped:\n{body}");
+        std::thread::sleep(Duration::from_millis(25));
+    }
+    // …and serves it bit-for-bit
+    let m2 = ServableModel::load(&man2.snapshot_path(&r2.manifest)).unwrap();
+    assert_serves_model(&client, &m2, &queries);
+
+    // ZERO dropped requests across every merged-generation swap
+    let lg_report = lg.join().unwrap();
+    assert_eq!(lg_report.errors, 0, "requests dropped during merged-generation swaps");
+    assert_eq!(lg_report.requests, 1600);
+    assert_eq!(lg_report.error_rate(), 0.0);
+
+    // the merged telemetry rode the swap onto /statz: train_* (merged
+    // across workers) plus the whole train_merge_* group
+    let body = client.statz_raw().unwrap();
+    assert_eq!(statz_value(&body, "train_iterations") as u64, r2.batches);
+    assert!(statz_value(&body, "train_loss").is_finite());
+    assert!(statz_value(&body, "train_merge_rounds") >= 1.0);
+    assert_eq!(statz_value(&body, "train_merge_workers") as u64, 2);
+    assert!(statz_value(&body, "train_merge_delta_bytes") > 0.0);
+    assert!(statz_value(&body, "train_merge_latency_us") >= 0.0);
+
+    drop(client);
+    handle.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}

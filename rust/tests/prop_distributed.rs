@@ -1,0 +1,184 @@
+//! Property tests for the distributed write path's merge algebra
+//! (`bear::algo::distributed`): Count Sketch linearity makes the
+//! W-worker all-reduce *exactly* — bitwise — equal to sketching the
+//! concatenated stream, the fixed worker-id reduction is invariant under
+//! arrival-order permutations, and `--workers 1` reproduces
+//! single-process BEAR training bit-for-bit.
+
+use bear::algo::bear::{Bear, BearConfig};
+use bear::algo::distributed::{reduce_counters, train_distributed, DistributedConfig, MergeRule};
+use bear::algo::StepSize;
+use bear::data::synth::WebspamSim;
+use bear::loss::LossKind;
+use bear::prop::{run, Gen};
+use bear::sketch::count_sketch::CountSketch;
+
+/// (a) Linearity: element-wise merging of W workers' sketches equals
+/// sketching the concatenated stream, for *arbitrary* partitions of the
+/// stream across workers. Updates are integer-valued, so every f32
+/// addition is exact (≪ 2^24) and order-independent — the equality is
+/// bitwise, not approximate.
+#[test]
+fn prop_merging_worker_sketches_equals_sketching_the_whole_stream() {
+    run("sketch merge linearity", 24, |g: &mut Gen| {
+        let cols = 64 + g.usize_in(0, 192);
+        let rows = 1 + g.usize_in(0, 5); // 1..=5 (query path caps at 8)
+        let seed = g.u64_below(1 << 48);
+        let workers = 1 + g.usize_in(0, 4); // 1..=4
+        let n = 1 + g.usize_in(0, g.size().max(1));
+        let updates: Vec<(u64, f32)> = (0..n)
+            .map(|_| (g.u64_below(1 << 20), g.usize_in(0, 17) as f32 - 8.0))
+            .collect();
+
+        // the concatenated stream, sketched by one process
+        let mut whole = CountSketch::new(cols, rows, seed);
+        for &(f, v) in &updates {
+            whole.add(f, v);
+        }
+
+        // an arbitrary partition of the same stream across W workers
+        // sharing the hash family (same seed)
+        let mut parts: Vec<CountSketch> =
+            (0..workers).map(|_| CountSketch::new(cols, rows, seed)).collect();
+        for &(f, v) in &updates {
+            parts[g.usize_in(0, workers)].add(f, v);
+        }
+
+        // Sum over a zero base is the element-wise counter sum
+        let reports: Vec<(usize, Vec<f32>)> =
+            parts.iter().enumerate().map(|(w, cs)| (w, cs.raw().to_vec())).collect();
+        let zeros = vec![0.0f32; whole.raw().len()];
+        let merged = reduce_counters(MergeRule::Sum, &zeros, reports);
+
+        assert_eq!(merged.len(), whole.raw().len());
+        for (i, (&m, &w)) in merged.iter().zip(whole.raw()).enumerate() {
+            assert_eq!(m.to_bits(), w.to_bits(), "cell {i}: merged {m} != whole-stream {w}");
+        }
+    });
+}
+
+/// (b) The reduction sorts by worker id before any arithmetic, so every
+/// arrival-order permutation of the same reports produces bit-identical
+/// merged counters — under both merge rules, for arbitrary (non-integer)
+/// counter values where float addition order WOULD matter.
+#[test]
+fn prop_merge_order_permutations_are_bit_identical() {
+    run("merge order invariance", 32, |g: &mut Gen| {
+        let m = 16 + g.usize_in(0, 64);
+        let workers = 2 + g.usize_in(0, 5); // 2..=6
+        let rule = if g.bool() { MergeRule::Sum } else { MergeRule::Average };
+        let base: Vec<f32> = (0..m).map(|_| g.f32_in(-4.0, 4.0)).collect();
+        let counters: Vec<Vec<f32>> =
+            (0..workers).map(|_| (0..m).map(|_| g.f32_in(-4.0, 4.0)).collect()).collect();
+
+        let arrival = |order: Vec<usize>| -> Vec<(usize, Vec<f32>)> {
+            order.into_iter().map(|w| (w, counters[w].clone())).collect()
+        };
+        let forward: Vec<usize> = (0..workers).collect();
+        let reversed: Vec<usize> = (0..workers).rev().collect();
+        let rot = 1 + g.usize_in(0, workers - 1);
+        let rotated: Vec<usize> = (0..workers).map(|w| (w + rot) % workers).collect();
+
+        let a = reduce_counters(rule, &base, arrival(forward));
+        let b = reduce_counters(rule, &base, arrival(reversed));
+        let c = reduce_counters(rule, &base, arrival(rotated));
+        for i in 0..m {
+            assert_eq!(a[i].to_bits(), b[i].to_bits(), "cell {i}: forward vs reversed");
+            assert_eq!(a[i].to_bits(), c[i].to_bits(), "cell {i}: forward vs rotated");
+        }
+    });
+}
+
+/// The W=1 [`MergeRule::Average`] reduction is the bitwise identity —
+/// the invariant that makes `--workers 1` match single-process training.
+#[test]
+fn prop_single_report_average_is_the_identity() {
+    run("W=1 average identity", 32, |g: &mut Gen| {
+        let m = 1 + g.usize_in(0, 128);
+        let base: Vec<f32> = (0..m).map(|_| g.f32_in(-100.0, 100.0)).collect();
+        let c: Vec<f32> = (0..m).map(|_| g.f32_in(-100.0, 100.0)).collect();
+        let w = g.usize_in(0, 8);
+        let merged = reduce_counters(MergeRule::Average, &base, vec![(w, c.clone())]);
+        for i in 0..m {
+            assert_eq!(merged[i].to_bits(), c[i].to_bits(), "cell {i} perturbed at W=1");
+        }
+    });
+}
+
+fn w1_cfg(sync_every: usize) -> DistributedConfig {
+    DistributedConfig {
+        workers: 1,
+        sync_every,
+        batch_size: 16,
+        epochs: 1,
+        merge: MergeRule::Average,
+        bear: BearConfig {
+            sketch_cells: 2048,
+            sketch_rows: 3,
+            top_k: 32,
+            tau: 5,
+            step: StepSize::Constant(0.1),
+            loss: LossKind::Logistic,
+            seed: 0xBEA8,
+            ..Default::default()
+        },
+    }
+}
+
+fn w1_source() -> WebspamSim {
+    // shared teacher/stream: the distributed run and the local run must
+    // consume byte-identical data
+    WebspamSim::with_params(20_000, 80, 40, 320, 7).with_stream_seed(1000)
+}
+
+/// (c) `train_distributed` with W=1 matches single-process BEAR exactly:
+/// every mid-round broadcast loads the worker's own bits back (identity
+/// reduction), so the final counters are bit-equal to a local run over
+/// the same stream — across multiple sync rounds.
+#[test]
+fn w1_distributed_counters_match_local_training_bitwise() {
+    let cfg = w1_cfg(4); // 20 minibatches → 5 broadcast rounds
+    let (state, stats) = train_distributed(&cfg, |_| Box::new(w1_source()));
+    assert!(stats.rounds >= 5, "expected mid-run sync rounds, got {}", stats.rounds);
+
+    let mut local = Bear::new(20_000, cfg.bear.clone());
+    local.fit_source(&mut w1_source(), cfg.batch_size, cfg.epochs);
+
+    let (merged, single) = (state.cs.raw(), local.state().cs.raw());
+    assert_eq!(merged.len(), single.len());
+    for (i, (&m, &s)) in merged.iter().zip(single).enumerate() {
+        assert_eq!(m.to_bits(), s.to_bits(), "counter {i}: distributed {m} != local {s}");
+    }
+}
+
+/// (c, continued) With the whole run in one flush (no mid-round syncs),
+/// the merged model's selections are the local model's selections: same
+/// counters bit-for-bit, same top-feature support, and every published
+/// weight is the fresh sketch estimate over those counters.
+#[test]
+fn w1_single_flush_reproduces_local_selections() {
+    let cfg = w1_cfg(1_000); // > total minibatches → final flush only
+    let (state, stats) = train_distributed(&cfg, |_| Box::new(w1_source()));
+    assert_eq!(stats.rounds, 1, "single flush should fold exactly once");
+
+    let mut local = Bear::new(20_000, cfg.bear.clone());
+    local.fit_source(&mut w1_source(), cfg.batch_size, cfg.epochs);
+
+    for (i, (&m, &s)) in state.cs.raw().iter().zip(local.state().cs.raw()).enumerate() {
+        assert_eq!(m.to_bits(), s.to_bits(), "counter {i} diverged");
+    }
+    let mut dist_ids: Vec<u64> = state.top_features().iter().map(|&(f, _)| f).collect();
+    let mut local_ids: Vec<u64> = local.state().top_features().iter().map(|&(f, _)| f).collect();
+    dist_ids.sort_unstable();
+    local_ids.sort_unstable();
+    assert_eq!(dist_ids, local_ids, "top-feature support diverged at W=1");
+    // merged weights are re-scored against the merged counters — i.e.
+    // exactly the local sketch's current estimates
+    for &(f, w) in &state.top_features() {
+        assert_eq!(
+            w.to_bits(),
+            local.state().cs.query(f).to_bits(),
+            "feature {f}: published weight is not the sketch estimate"
+        );
+    }
+}
