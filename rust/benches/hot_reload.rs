@@ -71,7 +71,7 @@ fn main() {
     for reloading in [false, true] {
         let mut publisher = Publisher::new(&dir, 4).expect("publication dir");
         let pub1 = publisher.publish(&snapshot).expect("publish gen 1");
-        let served = Arc::new(ServableModel::load(&pub1.path).expect("load gen 1"));
+        let served = Arc::new(ServableModel::open(&pub1.path).expect("open gen 1"));
         let handle = serve(
             served,
             ServerConfig {

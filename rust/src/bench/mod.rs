@@ -9,9 +9,9 @@
 //! away warmup, report spreads rather than single numbers.
 //!
 //! ```text
-//! bear bench --quick                         # smoke sizes, write BENCH_8.json
+//! bear bench --quick                         # smoke sizes, write BENCH_9.json
 //! bear bench                                 # full sizes (refuses debug builds)
-//! bear bench --quick --compare BENCH_8.json  # gate: PASS/WARN/FAIL, exit≠0 on FAIL
+//! bear bench --quick --compare BENCH_9.json  # gate: PASS/WARN/FAIL, exit≠0 on FAIL
 //! bear bench --probes sketch_update,serving_qps
 //! ```
 //!

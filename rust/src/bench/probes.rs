@@ -441,7 +441,7 @@ impl Probe for HotReloadProbe {
         let snapshot = ServableModel::from_sketched(trained.state(), LossKind::Logistic, 0.0);
         let mut publisher = Publisher::new(&dir, 4)?;
         let pub1 = publisher.publish(&snapshot)?;
-        let served = Arc::new(ServableModel::load(&pub1.path)?);
+        let served = Arc::new(ServableModel::open(&pub1.path)?);
         // the poller must not race the measured manual reloads: park it
         // on an hour-long interval (POST /admin/reload shares the same
         // serialized Reloader, so the measurement is the real path)
@@ -469,21 +469,26 @@ impl Probe for HotReloadProbe {
             .context("server lost its reloader")?
             .context("reload failed")?;
         let us = t.elapsed().as_secs_f64() * 1e6;
-        match outcome {
-            crate::online::ReloadOutcome::Swapped { generation, .. } => {
+        let mapped = match outcome {
+            crate::online::ReloadOutcome::Swapped { generation, mapped, .. } => {
                 anyhow::ensure!(
                     generation == publication.generation,
                     "swapped generation {generation} ≠ published {}",
                     publication.generation
                 );
+                mapped
             }
             crate::online::ReloadOutcome::UpToDate { .. } => {
                 bail!("reload saw no new generation (publication raced?)")
             }
-        }
+        };
         Ok(Sample {
             value: us,
-            extra: vec![("snapshot_bytes".into(), publication.bytes as f64)],
+            extra: vec![
+                ("snapshot_bytes".into(), publication.bytes as f64),
+                // which read path served the swap (1 = zero-copy mmap)
+                ("mmap_swap".into(), if mapped { 1.0 } else { 0.0 }),
+            ],
         })
     }
 

@@ -32,8 +32,14 @@ const VERSION: u32 = 2;
 
 /// CRC-32 (IEEE) — small table-less implementation, good enough for
 /// corruption detection on checkpoint files.
-pub fn crc32(data: &[u8]) -> u32 {
-    let mut crc = 0xFFFF_FFFFu32;
+///
+/// Also exposed as a streaming triple (`CRC32_INIT` / [`crc32_update`] /
+/// [`crc32_finish`]) so the mmap snapshot loader can compute the body CRC
+/// and the whole-file CRC in a single pass over the mapping.
+pub const CRC32_INIT: u32 = 0xFFFF_FFFF;
+
+/// Fold `data` into a running CRC state (start from [`CRC32_INIT`]).
+pub fn crc32_update(mut crc: u32, data: &[u8]) -> u32 {
     for &b in data {
         crc ^= b as u32;
         for _ in 0..8 {
@@ -41,7 +47,16 @@ pub fn crc32(data: &[u8]) -> u32 {
             crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
         }
     }
+    crc
+}
+
+/// Finalize a running CRC state into the checksum value.
+pub fn crc32_finish(crc: u32) -> u32 {
     !crc
+}
+
+pub fn crc32(data: &[u8]) -> u32 {
+    crc32_finish(crc32_update(CRC32_INIT, data))
 }
 
 pub(crate) fn put_u32(buf: &mut Vec<u8>, v: u32) {
@@ -97,6 +112,11 @@ impl<'a> Reader<'a> {
     /// length-driven allocation.
     pub(crate) fn remaining(&self) -> usize {
         self.data.len().saturating_sub(self.pos)
+    }
+    /// Absolute byte offset of the cursor — the mmap loader records this
+    /// to borrow sections from the backing file in place.
+    pub(crate) fn position(&self) -> usize {
+        self.pos
     }
     pub(crate) fn take(&mut self, n: usize) -> Result<&'a [u8]> {
         if self.pos + n > self.data.len() {

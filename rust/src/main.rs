@@ -236,7 +236,7 @@ fn cmd_export(args: &Args) -> Result<()> {
             human_duration(t0.elapsed()),
         ]);
     } else {
-        // one BEARSNAP-v3 shard file per contiguous feature range, built
+        // one sharded BEARSNAP file per contiguous feature range, built
         // and written one at a time (peak memory: one shard replica); the
         // -s{i}of{K} layout is exactly what `bear fleet --shards K
         // --model OUT` resolves
@@ -327,7 +327,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let path = std::path::PathBuf::from(
         args.get("model").ok_or_else(|| anyhow::anyhow!("--model SNAPSHOT required"))?,
     );
-    let model = std::sync::Arc::new(bear::serve::ServableModel::load(&path)?);
+    let model = std::sync::Arc::new(bear::serve::ServableModel::open(&path)?);
     let defaults = bear::serve::ServerConfig::default();
     let cfg = bear::serve::ServerConfig {
         addr: args.str_or("addr", "127.0.0.1:8370"),

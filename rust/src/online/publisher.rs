@@ -247,6 +247,13 @@ impl Publisher {
     /// (tmp+rename) with the generation stamped into its header, then
     /// swing the manifest at it (tmp+rename), then prune snapshots older
     /// than the `keep` window.
+    ///
+    /// Published files are BEARSNAP v4: every array section sits at an
+    /// 8-byte-aligned offset, so readers on supporting platforms serve
+    /// them zero-copy via `mmap` ([`crate::serve::MappedModel`]). The
+    /// never-rewrite-in-place discipline here (tmp+rename only) is what
+    /// makes that safe — a mapped reader can never observe a published
+    /// file's bytes change under it.
     pub fn publish(&mut self, model: &ServableModel) -> Result<Publication> {
         let generation = self.next_generation;
         let file = generation_file(generation);
@@ -325,7 +332,11 @@ impl Publisher {
     /// Remove generation files outside the retention window (shard
     /// siblings included). Best-effort: a reader mid-load of the newest
     /// generations is never affected because only generations ≤
-    /// current − keep are removed.
+    /// current − keep are removed. Pruning a snapshot a server still
+    /// serves zero-copy is also safe: POSIX unlink only removes the
+    /// directory entry, the mapped pages stay valid (and the disk blocks
+    /// allocated) until the last mapping drops — so retention policy and
+    /// mmap lifetime need no coordination.
     fn prune(&self) {
         let newest = self.next_generation - 1;
         let floor = newest.saturating_sub(self.keep as u64 - 1);

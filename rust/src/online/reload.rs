@@ -11,11 +11,17 @@
 //! old model is freed when its last in-flight reader drops it — the
 //! classic RCU shape with `Arc` as the reclamation scheme.
 //!
-//! [`Reloader`] drives the swap: it reads the `MANIFEST`, verifies the
-//! whole-file CRC recorded there, decodes the snapshot (second, internal
-//! CRC), computes drift vs. the serving model, and only then swaps. A
+//! [`Reloader`] drives the swap: it reads the `MANIFEST`, opens the
+//! snapshot through [`ServableModel::open_verified`] — zero-copy `mmap`
+//! on supporting platforms, heap decode otherwise — which validates both
+//! the manifest's whole-file CRC and the snapshot's internal CRC in one
+//! pass, computes drift vs. the serving model, and only then swaps. A
 //! failed reload leaves the serving model untouched and counts a failure
 //! — a half-written or corrupt publication can never take down the tier.
+//! A mapped swap costs one CRC pass over the file plus lazy page-in
+//! instead of two heap copies; publications are immutable (tmp+rename)
+//! and POSIX keeps mapped pages valid after unlink, so the publisher's
+//! generation pruning never invalidates a mapped serving model.
 //!
 //! The swap is driven three ways, all funneling through the same gate:
 //! the in-process poller thread (`bear serve --watch-manifest`), a manual
@@ -24,7 +30,6 @@
 //! calls the admin endpoint worker-by-worker so a publication rolls
 //! across the fleet without ever dropping capacity.
 
-use crate::coordinator::checkpoint::crc32;
 use crate::obs::{MergeGauges, TelemetryGauges};
 use crate::online::drift::{drift_between, DriftStats};
 use crate::online::publisher::Manifest;
@@ -176,8 +181,11 @@ impl ReloadStats {
 pub enum ReloadOutcome {
     /// Manifest absent or not ahead of the serving generation.
     UpToDate { generation: u64 },
-    /// A newer generation was verified and swapped in.
-    Swapped { generation: u64, drift: DriftStats },
+    /// A newer generation was verified and swapped in. `mapped` says
+    /// whether the new model serves zero-copy from an `mmap` of the
+    /// snapshot file (vs a heap decode — legacy format version,
+    /// unsupported platform, or `BEAR_NO_MMAP=1`).
+    Swapped { generation: u64, drift: DriftStats, mapped: bool },
 }
 
 /// Watches a publication `MANIFEST` and swaps verified snapshots into a
@@ -242,16 +250,8 @@ impl Reloader {
         }
         let snap_path = manifest.shard_snapshot_path(&self.manifest_path, shard_index as usize)?;
         let want_crc = manifest.shard_crc(shard_index as usize)?;
-        let bytes = std::fs::read(&snap_path)
-            .with_context(|| format!("reading published snapshot {snap_path:?}"))?;
-        let got = crc32(&bytes);
-        if got != want_crc {
-            bail!(
-                "snapshot {snap_path:?} CRC {got:#010x} does not match manifest {want_crc:#010x}"
-            );
-        }
-        let model = ServableModel::decode(&bytes)
-            .with_context(|| format!("decoding published snapshot {snap_path:?}"))?;
+        let (model, mapped) = ServableModel::open_verified(&snap_path, Some(want_crc))
+            .with_context(|| format!("loading published snapshot {snap_path:?}"))?;
         if model.generation != manifest.generation {
             bail!(
                 "snapshot header generation {} disagrees with manifest {}",
@@ -281,18 +281,19 @@ impl Reloader {
         if let Some(m) = &manifest.merge {
             self.stats.merge.publish(m);
         }
-        Ok(ReloadOutcome::Swapped { generation: manifest.generation, drift })
+        Ok(ReloadOutcome::Swapped { generation: manifest.generation, drift, mapped })
     }
 
     /// Poller-thread entry point: attempt a reload, log the outcome, never
     /// propagate errors (the next poll retries).
     pub fn poll(&self) {
         match self.try_reload() {
-            Ok(ReloadOutcome::Swapped { generation, drift }) => {
+            Ok(ReloadOutcome::Swapped { generation, drift, mapped }) => {
                 crate::util::logger::log(
                     crate::util::logger::Level::Info,
                     format_args!(
-                        "hot-reloaded generation {generation} (topk_jaccard {:.3}, coord_norm_delta {:.4})",
+                        "hot-reloaded generation {generation} ({} topk_jaccard {:.3}, coord_norm_delta {:.4})",
+                        if mapped { "mmap," } else { "heap," },
                         drift.topk_jaccard, drift.coord_norm_delta
                     ),
                 );
@@ -367,9 +368,17 @@ mod tests {
         // publish generation 2 → swap, drift recorded
         publisher.publish(&toy_model(9, 3.0)).unwrap();
         match reloader.try_reload().unwrap() {
-            ReloadOutcome::Swapped { generation, drift } => {
+            ReloadOutcome::Swapped { generation, drift, mapped } => {
                 assert_eq!(generation, 2);
                 assert!(drift.topk_jaccard < 1.0); // support moved 7 → 9
+                // when the platform supports zero-copy (and BEAR_NO_MMAP
+                // isn't forcing the heap path), swaps serve from the mmap
+                let forced_heap = std::env::var_os("BEAR_NO_MMAP")
+                    .is_some_and(|v| !v.is_empty() && v != "0");
+                assert_eq!(
+                    mapped,
+                    crate::serve::mapped::ZERO_COPY_SUPPORTED && !forced_heap
+                );
             }
             other => panic!("expected swap, got {other:?}"),
         }

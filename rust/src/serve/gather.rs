@@ -1,0 +1,239 @@
+//! Chunked, auto-vectorization-friendly hot loops for the serving read
+//! path: top-k table binary-search gather and Count Sketch estimator
+//! queries, processed `CHUNK` features at a time.
+//!
+//! Why this shape instead of `std::simd`: the build is stable-toolchain
+//! and dependency-free, so we hand the optimizer straight-line lockstep
+//! loops it can vectorize — a *branchless* binary search whose trip count
+//! depends only on the table length (every lane takes the identical
+//! number of steps, so eight searches advance in lockstep), and a
+//! two-phase sketch query (hash all lanes first for instruction-level
+//! parallelism, then gather + reduce per lane).
+//!
+//! **Bit-identity policy.** Per-feature work (hash, signed gather,
+//! median/mean reduction, table lookup) is freely reorderable *across*
+//! features because each feature's value is computed independently with
+//! exactly the same operation sequence as the scalar kernels
+//! (`sketch::query_kernel`, `ClassTable::lookup`). The margin
+//! *accumulation* over features is NOT reordered — `shard::merge_margin`
+//! keeps its canonical in-order f64 sum, consuming the gathered values in
+//! input order. That split is what keeps the prop_shard / prop_snapshot
+//! bit-identity contracts holding structurally rather than by luck.
+
+use crate::hash::HashFamily;
+use crate::sketch::{query_kernel, QueryMode};
+use crate::util::math::median_small;
+
+/// Lane count per chunk. Eight u64 ids / f32 weights fill one or two
+/// vector registers on every target we care about.
+pub(crate) const CHUNK: usize = 8;
+
+/// Branchless lower bound: index of the first element `>= key` in the
+/// sorted slice — identical result to `ids.partition_point(|&x| x < key)`
+/// but with a data-independent trip count (`⌈log₂ n⌉` steps always), so
+/// several searches can run in lockstep.
+#[inline]
+pub(crate) fn lower_bound(ids: &[u64], key: u64) -> usize {
+    if ids.is_empty() {
+        return 0;
+    }
+    let mut base = 0usize;
+    let mut len = ids.len();
+    while len > 1 {
+        let half = len / 2;
+        base += usize::from(ids[base + half - 1] < key) * half;
+        len -= half;
+    }
+    base + usize::from(ids[base] < key)
+}
+
+/// Gather table weights for `keys`: for each key found in the sorted
+/// `ids`, write its weight to `out` and mark `hit`; misses leave
+/// `out = 0.0`, `hit = false` (callers pre-clear). Lanes are searched
+/// `CHUNK` at a time in lockstep.
+pub(crate) fn gather_table(
+    ids: &[u64],
+    weights: &[f32],
+    keys: &[u64],
+    out: &mut [f32],
+    hit: &mut [bool],
+) {
+    debug_assert_eq!(ids.len(), weights.len());
+    debug_assert_eq!(keys.len(), out.len());
+    debug_assert_eq!(keys.len(), hit.len());
+    let n = ids.len();
+    if n == 0 {
+        return;
+    }
+    let mut i = 0;
+    while i + CHUNK <= keys.len() {
+        let mut base = [0usize; CHUNK];
+        let mut len = n;
+        // all lanes share the same ⌈log₂ n⌉ trip count — pure lockstep
+        while len > 1 {
+            let half = len / 2;
+            for l in 0..CHUNK {
+                base[l] += usize::from(ids[base[l] + half - 1] < keys[i + l]) * half;
+            }
+            len -= half;
+        }
+        for l in 0..CHUNK {
+            let pos = base[l] + usize::from(ids[base[l]] < keys[i + l]);
+            let found = pos < n && ids[pos] == keys[i + l];
+            hit[i + l] = found;
+            out[i + l] = if found { weights[pos] } else { 0.0 };
+        }
+        i += CHUNK;
+    }
+    for l in i..keys.len() {
+        let pos = lower_bound(ids, keys[l]);
+        let found = pos < n && ids[pos] == keys[l];
+        hit[l] = found;
+        out[l] = if found { weights[pos] } else { 0.0 };
+    }
+}
+
+/// Borrowed view of a Count Sketch's geometry + counters — lets the
+/// chunked query run over either an owned `CountSketch` or a section
+/// mapped straight from a snapshot file.
+pub(crate) struct SketchRef<'a> {
+    pub counters: &'a [f32],
+    pub rows: usize,
+    pub cols: usize,
+    pub family: &'a HashFamily,
+    pub mode: QueryMode,
+}
+
+/// For every lane not already satisfied by the table (`!hit[l]`), fill
+/// `out[l]` with the sketch estimate. Two phases per chunk: hash all
+/// lanes (independent, pipelines well), then gather + reduce each lane
+/// with exactly the operation sequence of [`query_kernel`] — per-lane
+/// values are bit-identical to scalar queries by construction.
+pub(crate) fn sketch_fill_misses(sk: &SketchRef<'_>, keys: &[u64], out: &mut [f32], hit: &[bool]) {
+    debug_assert_eq!(keys.len(), out.len());
+    debug_assert_eq!(keys.len(), hit.len());
+    let rows = sk.rows;
+    let cols = sk.cols;
+    let mut i = 0;
+    while i + CHUNK <= keys.len() {
+        let mut hs = [[(0u32, 0f32); 8]; CHUNK];
+        for l in 0..CHUNK {
+            if !hit[i + l] {
+                sk.family.hash_all(keys[i + l], &mut hs[l][..rows]);
+            }
+        }
+        for l in 0..CHUNK {
+            if hit[i + l] {
+                continue;
+            }
+            out[i + l] = match sk.mode {
+                QueryMode::Median => {
+                    let mut buf = [0f32; 8];
+                    for (j, &(b, s)) in hs[l][..rows].iter().enumerate() {
+                        buf[j] = s * sk.counters[j * cols + b as usize];
+                    }
+                    median_small(&mut buf[..rows])
+                }
+                QueryMode::Mean => {
+                    let mut acc = 0.0f32;
+                    for (j, &(b, s)) in hs[l][..rows].iter().enumerate() {
+                        acc += s * sk.counters[j * cols + b as usize];
+                    }
+                    acc / rows as f32
+                }
+            };
+        }
+        i += CHUNK;
+    }
+    for l in i..keys.len() {
+        if !hit[l] {
+            out[l] = query_kernel(sk.counters, rows, cols, sk.family, sk.mode, keys[l]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sketch::CountSketch;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn lower_bound_matches_partition_point() {
+        let mut rng = Pcg64::new(11);
+        for trial in 0..200 {
+            let n = (trial % 17) as usize; // includes 0 and 1
+            let mut ids: Vec<u64> = (0..n).map(|_| rng.below(50)).collect();
+            ids.sort_unstable();
+            ids.dedup();
+            for key in 0..52u64 {
+                assert_eq!(
+                    lower_bound(&ids, key),
+                    ids.partition_point(|&x| x < key),
+                    "ids {ids:?} key {key}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn gather_matches_binary_search_scalar() {
+        let mut rng = Pcg64::new(12);
+        for trial in 0..50 {
+            let n = (trial % 13) as usize;
+            let mut ids: Vec<u64> = (0..n).map(|_| rng.below(1000)).collect();
+            ids.sort_unstable();
+            ids.dedup();
+            let weights: Vec<f32> = ids.iter().map(|_| rng.next_f32() - 0.5).collect();
+            // odd key count exercises the scalar tail
+            let keys: Vec<u64> = (0..21).map(|_| rng.below(1000)).collect();
+            let mut out = vec![0.0f32; keys.len()];
+            let mut hit = vec![false; keys.len()];
+            gather_table(&ids, &weights, &keys, &mut out, &mut hit);
+            for (l, &k) in keys.iter().enumerate() {
+                match ids.binary_search(&k) {
+                    Ok(p) => {
+                        assert!(hit[l]);
+                        assert_eq!(out[l].to_bits(), weights[p].to_bits());
+                    }
+                    Err(_) => {
+                        assert!(!hit[l]);
+                        assert_eq!(out[l], 0.0);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sketch_fill_matches_scalar_query_bitwise() {
+        for mode in [QueryMode::Median, QueryMode::Mean] {
+            let mut cs = CountSketch::new(64, 5, 21);
+            cs.set_query_mode(mode);
+            let mut rng = Pcg64::new(22);
+            for _ in 0..500 {
+                cs.add(rng.below(1 << 20), rng.next_f32() - 0.5);
+            }
+            let keys: Vec<u64> = (0..19).map(|_| rng.below(1 << 20)).collect();
+            let mut hit = vec![false; keys.len()];
+            hit[3] = true; // table-satisfied lane must be left alone
+            let mut out = vec![0.0f32; keys.len()];
+            out[3] = 7.25;
+            let sk = SketchRef {
+                counters: cs.raw(),
+                rows: cs.rows(),
+                cols: cs.cols(),
+                family: cs.family(),
+                mode,
+            };
+            sketch_fill_misses(&sk, &keys, &mut out, &hit);
+            for (l, &k) in keys.iter().enumerate() {
+                if l == 3 {
+                    assert_eq!(out[l], 7.25);
+                } else {
+                    assert_eq!(out[l].to_bits(), cs.query(k).to_bits(), "lane {l}");
+                }
+            }
+        }
+    }
+}

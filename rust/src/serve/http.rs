@@ -20,6 +20,14 @@
 //! the server should answer before closing. The parser reads **exactly**
 //! `Content-Length` body bytes — pipelined bytes after the body are left
 //! untouched for the next [`read_request`] call.
+//!
+//! Framing is `Content-Length`-only, enforced: any `Transfer-Encoding`
+//! header and any conflicting duplicate `Content-Length` are rejected
+//! with `400` (and the connection closed) so a disagreeing peer or proxy
+//! can never desynchronize a keep-alive stream. A stream that ends
+//! mid-line is a truncated message ([`ReadError::Io`]), never a request;
+//! and line text is UTF-8-decoded once per assembled line, so multi-byte
+//! characters split across buffer refills survive intact.
 
 use crate::obs::trace::{TraceContext, TRACE_HEADER};
 use std::borrow::Cow;
@@ -122,11 +130,17 @@ pub fn reason_for(status: u16) -> &'static str {
 
 /// `read_line` with a hard cap: a newline-free byte stream must not grow
 /// the buffer unboundedly (it would bypass [`MAX_BODY`] and OOM the
-/// server). Returns bytes consumed (0 ⇒ EOF); errors when the cap is
-/// exceeded.
+/// server). Accumulates **raw bytes** — UTF-8 decoding happens once per
+/// completed line in [`read_text_line`], never per `fill_buf` chunk,
+/// because a multi-byte sequence straddling two refills would otherwise
+/// be lossily mangled into U+FFFD on both sides of the seam. Returns
+/// bytes consumed (0 ⇒ clean EOF before any byte); EOF *mid-line* (bytes
+/// read but the stream ended before `\n`) is a truncated message and
+/// errors as [`ReadError::Io`] — a half-received request line must never
+/// parse as a served request.
 fn read_line_bounded<R: BufRead>(
     r: &mut R,
-    out: &mut String,
+    out: &mut Vec<u8>,
     max: usize,
 ) -> Result<usize, ReadError> {
     let mut total = 0usize;
@@ -134,15 +148,18 @@ fn read_line_bounded<R: BufRead>(
         let (done, used) = {
             let available = r.fill_buf()?;
             if available.is_empty() {
-                return Ok(total); // EOF
+                if total > 0 {
+                    return Err(ReadError::eof("connection closed mid-line"));
+                }
+                return Ok(0); // clean EOF
             }
             match available.iter().position(|&b| b == b'\n') {
                 Some(i) => {
-                    out.push_str(&String::from_utf8_lossy(&available[..=i]));
+                    out.extend_from_slice(&available[..=i]);
                     (true, i + 1)
                 }
                 None => {
-                    out.push_str(&String::from_utf8_lossy(available));
+                    out.extend_from_slice(available);
                     (false, available.len())
                 }
             }
@@ -158,24 +175,48 @@ fn read_line_bounded<R: BufRead>(
     }
 }
 
+/// One protocol line as text: assemble the raw bytes, then decode once
+/// (lossily — header values are ASCII in practice, and a stray invalid
+/// byte must not kill the connection). `Ok(None)` means clean EOF before
+/// any byte.
+fn read_text_line<R: BufRead>(r: &mut R, max: usize) -> Result<Option<String>, ReadError> {
+    let mut raw = Vec::new();
+    if read_line_bounded(r, &mut raw, max)? == 0 {
+        return Ok(None);
+    }
+    Ok(Some(String::from_utf8_lossy(&raw).into_owned()))
+}
+
 /// Read headers: `Content-Length`, `Connection` and the `x-bear-trace`
 /// trace context are interpreted, the rest are skipped. `keep_alive` is
 /// updated in place; returns `(content_length, trace)`.
+///
+/// Message-framing headers are policed per RFC 7230 §3.3.3 — this parser
+/// frames bodies by `Content-Length` only, and a peer (or an interposed
+/// proxy) that could be framing differently would desynchronize the
+/// keep-alive stream, turning attacker-controlled body bytes into the
+/// "next request". So:
+/// - any `Transfer-Encoding` header (chunked or otherwise) ⇒ `400`, and
+///   the server closes the connection rather than guessing where the
+///   message ends;
+/// - duplicate `Content-Length` headers with *conflicting* values ⇒
+///   `400` + close (identical duplicates are tolerated, as the RFC
+///   permits).
 fn read_headers<R: BufRead>(
     r: &mut R,
     keep_alive: &mut bool,
 ) -> Result<(usize, Option<TraceContext>), ReadError> {
-    let mut content_len = 0usize;
+    let mut content_len: Option<usize> = None;
     let mut trace = None;
     let mut n_headers = 0usize;
     loop {
-        let mut h = String::new();
-        if read_line_bounded(r, &mut h, MAX_LINE)? == 0 {
-            return Err(ReadError::eof("connection closed mid-headers"));
-        }
+        let h = match read_text_line(r, MAX_LINE)? {
+            Some(line) => line,
+            None => return Err(ReadError::eof("connection closed mid-headers")),
+        };
         let h = h.trim_end();
         if h.is_empty() {
-            return Ok((content_len, trace));
+            return Ok((content_len.unwrap_or(0), trace));
         }
         n_headers += 1;
         if n_headers > MAX_HEADERS {
@@ -185,9 +226,20 @@ fn read_headers<R: BufRead>(
             let k = k.trim().to_ascii_lowercase();
             let v = v.trim();
             if k == "content-length" {
-                content_len = v
+                let n: usize = v
                     .parse()
                     .map_err(|_| ReadError::bad(format!("bad content-length {v:?}")))?;
+                if content_len.is_some_and(|prev| prev != n) {
+                    return Err(ReadError::bad(format!(
+                        "conflicting content-length headers ({} vs {n})",
+                        content_len.unwrap()
+                    )));
+                }
+                content_len = Some(n);
+            } else if k == "transfer-encoding" {
+                return Err(ReadError::bad(format!(
+                    "transfer-encoding {v:?} is not supported (content-length framing only)"
+                )));
             } else if k == "connection" {
                 let v = v.to_ascii_lowercase();
                 if v.contains("close") {
@@ -208,10 +260,10 @@ fn read_headers<R: BufRead>(
 /// line (the client closed a keep-alive connection). Reads exactly
 /// `Content-Length` body bytes — never past them.
 pub fn read_request<R: BufRead>(r: &mut R) -> Result<Option<Request>, ReadError> {
-    let mut line = String::new();
-    if read_line_bounded(r, &mut line, MAX_LINE)? == 0 {
-        return Ok(None);
-    }
+    let line = match read_text_line(r, MAX_LINE)? {
+        Some(l) => l,
+        None => return Ok(None),
+    };
     let trimmed = line.trim_end();
     let mut parts = trimmed.split_whitespace();
     let method = parts
@@ -242,10 +294,10 @@ pub fn read_request<R: BufRead>(r: &mut R) -> Result<Option<Request>, ReadError>
 /// line (a keep-alive peer closed between exchanges — for a pooled proxy
 /// connection that is "stale, reconnect", not an error).
 pub fn read_response<R: BufRead>(r: &mut R) -> Result<Option<Response>, ReadError> {
-    let mut line = String::new();
-    if read_line_bounded(r, &mut line, MAX_LINE)? == 0 {
-        return Ok(None);
-    }
+    let line = match read_text_line(r, MAX_LINE)? {
+        Some(l) => l,
+        None => return Ok(None),
+    };
     let mut parts = line.split_whitespace();
     let version = parts.next().unwrap_or("HTTP/1.0");
     let mut keep_alive = version == "HTTP/1.1";

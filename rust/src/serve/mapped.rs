@@ -1,0 +1,327 @@
+//! Zero-copy snapshot backing: a read-only file mapping ([`Mmap`]) and a
+//! slice that can borrow from it ([`Section`]).
+//!
+//! BEAR's whole point is sublinear *memory*; the serve tier must not pay
+//! 2× a snapshot's size in transient heap just to reload it. A BEARSNAP
+//! v4 file pads every array section to an 8-byte file offset, so once the
+//! file is mapped (page-aligned base ⇒ 8-aligned offsets are 8-aligned
+//! addresses) the top-k id/weight tables and the sketch counters can be
+//! reinterpreted in place — reloads cost one CRC pass over the mapping
+//! plus lazy page-in, never a copy.
+//!
+//! **Immutability.** The mapping is `PROT_READ` + `MAP_PRIVATE`. Published
+//! generations are never modified in place (`write_atomic` is
+//! tmp+rename), so the pages behind a mapping are stable for its whole
+//! lifetime; even after the publisher prunes (unlinks) the generation,
+//! POSIX keeps the mapped pages valid until the last mapping goes away.
+//!
+//! **Portability.** Zero-copy needs a 64-bit little-endian unix target
+//! (the wire format is little-endian, and the raw `mmap` ABI here assumes
+//! LP64 `off_t`). Anywhere else — and for pre-v4 files — callers fall
+//! back to the heap decoder; [`MapError`] tells them which case they hit.
+
+use anyhow::anyhow;
+use std::ops::Deref;
+use std::path::Path;
+use std::sync::Arc;
+
+/// Is the zero-copy path available on this target at all?
+pub(crate) const ZERO_COPY_SUPPORTED: bool =
+    cfg!(all(unix, target_endian = "little", target_pointer_width = "64"));
+
+/// Why a zero-copy open did not produce a mapping.
+#[derive(Debug)]
+pub enum MapError {
+    /// Zero-copy is impossible here (legacy file version, platform,
+    /// misalignment) but the file may be fine — heap decode should work.
+    Unsupported(String),
+    /// The file is bad regardless of load path (CRC mismatch, truncation,
+    /// structural violation): do not mask this by re-reading.
+    Invalid(anyhow::Error),
+}
+
+impl std::fmt::Display for MapError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MapError::Unsupported(why) => write!(f, "zero-copy unsupported: {why}"),
+            MapError::Invalid(e) => write!(f, "{e:#}"),
+        }
+    }
+}
+
+impl std::error::Error for MapError {}
+
+impl From<MapError> for anyhow::Error {
+    fn from(e: MapError) -> Self {
+        match e {
+            MapError::Unsupported(why) => anyhow!("zero-copy unsupported: {why}"),
+            MapError::Invalid(err) => err,
+        }
+    }
+}
+
+#[cfg(all(unix, target_endian = "little", target_pointer_width = "64"))]
+mod sys {
+    use std::ffi::c_void;
+    pub const PROT_READ: i32 = 0x1;
+    pub const MAP_PRIVATE: i32 = 0x2;
+    // resolved against the platform libc that std already links — no
+    // extra dependency
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> i32;
+    }
+}
+
+/// A read-only, private file mapping. `Send + Sync` because the pages are
+/// never written through this mapping and the publication protocol never
+/// rewrites a published file in place.
+pub struct Mmap {
+    #[cfg_attr(
+        not(all(unix, target_endian = "little", target_pointer_width = "64")),
+        allow(dead_code)
+    )]
+    ptr: *const u8,
+    len: usize,
+}
+
+unsafe impl Send for Mmap {}
+unsafe impl Sync for Mmap {}
+
+impl Mmap {
+    /// Map `path` read-only. [`MapError::Unsupported`] when the platform
+    /// or the `mmap` syscall can't do it (heap read works instead);
+    /// [`MapError::Invalid`] when the file itself is unusable.
+    #[cfg(all(unix, target_endian = "little", target_pointer_width = "64"))]
+    pub fn map(path: &Path) -> Result<Self, MapError> {
+        use std::os::fd::AsRawFd;
+        let file = std::fs::File::open(path)
+            .map_err(|e| MapError::Invalid(anyhow!("opening snapshot {path:?}: {e}")))?;
+        let len = file
+            .metadata()
+            .map_err(|e| MapError::Invalid(anyhow!("stat {path:?}: {e}")))?
+            .len() as usize;
+        if len == 0 {
+            return Err(MapError::Invalid(anyhow!("snapshot {path:?} is empty")));
+        }
+        let ptr = unsafe {
+            sys::mmap(
+                std::ptr::null_mut(),
+                len,
+                sys::PROT_READ,
+                sys::MAP_PRIVATE,
+                file.as_raw_fd(),
+                0,
+            )
+        };
+        if ptr as usize == usize::MAX {
+            // e.g. a pseudo-filesystem that refuses mappings — read works
+            return Err(MapError::Unsupported(format!(
+                "mmap({path:?}) failed: {}",
+                std::io::Error::last_os_error()
+            )));
+        }
+        Ok(Self { ptr: ptr as *const u8, len })
+    }
+
+    #[cfg(not(all(unix, target_endian = "little", target_pointer_width = "64")))]
+    pub fn map(_path: &Path) -> Result<Self, MapError> {
+        Err(MapError::Unsupported(
+            "zero-copy mapping requires a 64-bit little-endian unix target".into(),
+        ))
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[cfg(all(unix, target_endian = "little", target_pointer_width = "64"))]
+    pub fn as_slice(&self) -> &[u8] {
+        // SAFETY: ptr/len describe a live PROT_READ mapping owned by self;
+        // the pages outlive self (munmap runs in Drop).
+        unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+    }
+
+    #[cfg(not(all(unix, target_endian = "little", target_pointer_width = "64")))]
+    pub fn as_slice(&self) -> &[u8] {
+        &[]
+    }
+}
+
+impl Drop for Mmap {
+    fn drop(&mut self) {
+        #[cfg(all(unix, target_endian = "little", target_pointer_width = "64"))]
+        unsafe {
+            sys::munmap(self.ptr as *mut std::ffi::c_void, self.len);
+        }
+    }
+}
+
+impl std::fmt::Debug for Mmap {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Mmap({} bytes)", self.len)
+    }
+}
+
+/// An array of plain-old-data values, either owned or borrowed from a
+/// shared mapping. Derefs to `&[T]` so the serving code is agnostic to
+/// the backing; cloning a mapped section clones an `Arc`, not the data.
+///
+/// Only instantiated with `u64`/`f32`/`u32` — types where every bit
+/// pattern is a valid value, so reinterpreting mapped bytes is safe once
+/// bounds and alignment are checked at construction.
+#[derive(Clone)]
+pub(crate) enum Section<T: Copy> {
+    Owned(Vec<T>),
+    Mapped { map: Arc<Mmap>, off: usize, len: usize },
+}
+
+impl<T: Copy> Section<T> {
+    pub(crate) fn owned(v: Vec<T>) -> Self {
+        Section::Owned(v)
+    }
+
+    /// Borrow `len` elements of `T` at byte offset `off` of the mapping.
+    /// Out-of-bounds is [`MapError::Invalid`] (a lying header); a
+    /// misaligned offset is [`MapError::Unsupported`] (the heap decoder
+    /// handles the same bytes fine, it just copies).
+    pub(crate) fn mapped(map: Arc<Mmap>, off: usize, len: usize) -> Result<Self, MapError> {
+        let size = std::mem::size_of::<T>();
+        match len.checked_mul(size).and_then(|b| b.checked_add(off)) {
+            Some(end) if end <= map.len() => {}
+            _ => {
+                return Err(MapError::Invalid(anyhow!(
+                    "mapped section at byte {off} ({len}×{size} bytes) exceeds file size {}",
+                    map.len()
+                )))
+            }
+        }
+        let addr = map.as_slice().as_ptr() as usize + off;
+        let align = std::mem::align_of::<T>();
+        if addr % align != 0 {
+            return Err(MapError::Unsupported(format!(
+                "section at byte {off} is not {align}-aligned"
+            )));
+        }
+        Ok(Section::Mapped { map, off, len })
+    }
+
+    pub(crate) fn as_slice(&self) -> &[T] {
+        match self {
+            Section::Owned(v) => v,
+            Section::Mapped { map, off, len } => {
+                // SAFETY: bounds and alignment were validated by
+                // Section::mapped against this exact map/off/len; T is
+                // POD, and the Arc keeps the mapping alive for &self.
+                unsafe {
+                    std::slice::from_raw_parts(
+                        map.as_slice().as_ptr().add(*off) as *const T,
+                        *len,
+                    )
+                }
+            }
+        }
+    }
+
+    /// Does this section borrow from a mapping (vs own its storage)?
+    pub(crate) fn is_mapped(&self) -> bool {
+        matches!(self, Section::Mapped { .. })
+    }
+}
+
+impl<T: Copy> Deref for Section<T> {
+    type Target = [T];
+    fn deref(&self) -> &[T] {
+        self.as_slice()
+    }
+}
+
+impl<T: Copy + std::fmt::Debug> std::fmt::Debug for Section<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Section::Owned(v) => write!(f, "Section::Owned(len {})", v.len()),
+            Section::Mapped { off, len, .. } => {
+                write!(f, "Section::Mapped(off {off}, len {len})")
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpfile(name: &str, bytes: &[u8]) -> std::path::PathBuf {
+        let p = std::env::temp_dir().join(format!("bear-mmap-{}-{name}", std::process::id()));
+        std::fs::write(&p, bytes).unwrap();
+        p
+    }
+
+    #[test]
+    #[cfg(all(unix, target_endian = "little", target_pointer_width = "64"))]
+    fn mapping_reads_file_bytes_and_survives_unlink() {
+        let bytes: Vec<u8> = (0..64u8).collect();
+        let p = tmpfile("basic", &bytes);
+        let m = Mmap::map(&p).unwrap();
+        assert_eq!(m.len(), 64);
+        assert_eq!(m.as_slice(), &bytes[..]);
+        // POSIX: unlinking the file does not invalidate live mappings —
+        // exactly what lets the publisher prune a generation a reader
+        // still serves
+        std::fs::remove_file(&p).unwrap();
+        assert_eq!(m.as_slice()[10], 10);
+    }
+
+    #[test]
+    #[cfg(all(unix, target_endian = "little", target_pointer_width = "64"))]
+    fn section_validates_alignment_and_bounds() {
+        let bytes = vec![0u8; 64];
+        let p = tmpfile("align", &bytes);
+        let map = Arc::new(Mmap::map(&p).unwrap());
+        // aligned u64 section reads in place
+        let s = Section::<u64>::mapped(map.clone(), 8, 3).unwrap();
+        assert!(s.is_mapped());
+        assert_eq!(s.len(), 3);
+        assert_eq!(s[0], 0);
+        // a misaligned offset is Unsupported (fallback), not Invalid
+        match Section::<u64>::mapped(map.clone(), 4, 2) {
+            Err(MapError::Unsupported(_)) => {}
+            other => panic!("expected Unsupported, got {other:?}"),
+        }
+        // out of bounds is Invalid (a lying header)
+        match Section::<u64>::mapped(map.clone(), 8, 100) {
+            Err(MapError::Invalid(_)) => {}
+            other => panic!("expected Invalid, got {other:?}"),
+        }
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    #[cfg(all(unix, target_endian = "little", target_pointer_width = "64"))]
+    fn empty_file_is_invalid() {
+        let p = tmpfile("empty", b"");
+        match Mmap::map(&p) {
+            Err(MapError::Invalid(_)) => {}
+            other => panic!("expected Invalid, got {other:?}"),
+        }
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn owned_section_derefs() {
+        let s = Section::owned(vec![1u64, 2, 3]);
+        assert!(!s.is_mapped());
+        assert_eq!(&s[..], &[1, 2, 3]);
+    }
+}

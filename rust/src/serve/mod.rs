@@ -8,9 +8,17 @@
 //! - [`snapshot`] — [`snapshot::ServableModel`]: an immutable snapshot
 //!   exported from any trained selector (dense top-k weight tables — one
 //!   per class for multi-class models — + optional full Count Sketch
-//!   fallback), serialized in the "BEARSNAP" v3 format (a self-describing
-//!   sibling of checkpoint v2, with publication `generation` and shard
-//!   headers; v1/v2 files read as unsharded).
+//!   fallback), serialized in the "BEARSNAP" v4 format (a self-describing
+//!   sibling of checkpoint v2, with publication `generation`, shard
+//!   headers, and 8-byte-aligned array sections; v1–v3 files stay
+//!   readable). [`snapshot::MappedModel`] is the zero-copy read path:
+//!   CRC-validate an `mmap` of the file once, serve straight from the
+//!   page cache.
+//! - [`mapped`] — the `mmap(2)` wrapper and the owned-or-borrowed
+//!   [`mapped::Section`] storage behind zero-copy loading.
+//! - [`gather`] — chunked auto-vectorizable kernels for the query hot
+//!   loop (lockstep branchless table search, two-phase sketch estimate)
+//!   with a strict bit-identity policy versus the scalar kernels.
 //! - [`shard`] — feature-range sharding: quantile range cuts, the
 //!   canonical margin accumulation shared by local and scatter-gather
 //!   serving (the bit-identity contract), the K-way top-k merge, and the
@@ -40,17 +48,20 @@
 //! are bit-identical to in-process `FeatureSelector::score`;
 //! `tests/integration_online.rs` asserts hot reloads drop zero requests.
 
+pub mod gather;
 pub mod http;
 pub mod loadgen;
+pub mod mapped;
 pub mod metrics;
 pub mod server;
 pub mod shard;
 pub mod snapshot;
 
 pub use loadgen::{LoadReport, LoadgenConfig, StageBreakdown};
+pub use mapped::MapError;
 pub use metrics::{AtomicF64, HistogramSnapshot, LatencyHistogram};
 pub use server::{serve, ServerConfig, ServerHandle, StatsSnapshot};
-pub use snapshot::{Prediction, ServableModel};
+pub use snapshot::{MappedModel, Prediction, ServableModel};
 
 use crate::algo::mission::{Mission, MissionConfig};
 use crate::algo::{Bear, MultiClass, SketchedSelector};

@@ -581,7 +581,7 @@ fn dispatch(
                     req.keep_alive,
                 ),
                 Some(r) => match r.try_reload() {
-                    Ok(ReloadOutcome::Swapped { generation, drift }) => (
+                    Ok(ReloadOutcome::Swapped { generation, drift, .. }) => (
                         200,
                         "OK",
                         ReloadResponse::Reloaded {

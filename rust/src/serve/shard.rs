@@ -6,7 +6,7 @@
 //! are cut at quantiles of the model's selected-id distribution (so each
 //! shard holds ~`k/K` table entries, not an even slice of the mostly-empty
 //! u64 id space), tile `[0, u64::MAX]` exactly, and are stamped into each
-//! shard's BEARSNAP-v3 header — a shard file is fully self-describing.
+//! shard's BEARSNAP header (v3+) — a shard file is fully self-describing.
 //!
 //! **Bit-identical merging.** The serving margin is defined as one f64
 //! accumulation in feature-index order ([`merge_margin`] — the single
@@ -68,6 +68,34 @@ pub fn merge_margin(bias: f32, x: &SparseVec, mut weight_of: impl FnMut(u64) -> 
     acc
 }
 
+/// Score one query from per-class margins — the single argmax/sigmoid
+/// tail shared by [`ServableModel::predict`] (which feeds it gathered
+/// margins) and [`predict_with`] (which feeds it merged-weight margins),
+/// so every prediction path runs byte-identical float ops after the
+/// margin.
+pub fn predict_from_margins(
+    classes: usize,
+    loss: LossKind,
+    mut margin_of: impl FnMut(usize) -> f64,
+) -> Prediction {
+    if classes > 1 {
+        let mut best = (0usize, f64::NEG_INFINITY);
+        for c in 0..classes {
+            let m = margin_of(c);
+            if m > best.1 {
+                best = (c, m);
+            }
+        }
+        return Prediction { margin: best.1, probability: None, class: Some(best.0) };
+    }
+    let margin = margin_of(0);
+    let probability = match loss {
+        LossKind::Logistic => Some(sigmoid(margin)),
+        LossKind::Mse => None,
+    };
+    Prediction { margin, probability, class: None }
+}
+
 /// Score one query from a weight function — the shape of
 /// [`ServableModel::predict`], reused by the scatter-gather balancer so
 /// a merged prediction goes through byte-identical float ops.
@@ -78,22 +106,7 @@ pub fn predict_with(
     x: &SparseVec,
     weight_of: impl Fn(usize, u64) -> f32,
 ) -> Prediction {
-    if classes > 1 {
-        let mut best = (0usize, f64::NEG_INFINITY);
-        for c in 0..classes {
-            let m = merge_margin(bias, x, |f| weight_of(c, f));
-            if m > best.1 {
-                best = (c, m);
-            }
-        }
-        return Prediction { margin: best.1, probability: None, class: Some(best.0) };
-    }
-    let margin = merge_margin(bias, x, |f| weight_of(0, f));
-    let probability = match loss {
-        LossKind::Logistic => Some(sigmoid(margin)),
-        LossKind::Mse => None,
-    };
-    Prediction { margin, probability, class: None }
+    predict_from_margins(classes, loss, |c| merge_margin(bias, x, |f| weight_of(c, f)))
 }
 
 /// Weight of feature `f` in class `c` across a shard set: answered by the

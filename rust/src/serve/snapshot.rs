@@ -14,6 +14,26 @@
 //! same index-ordered f64 accumulation. The integration test asserts
 //! this across the HTTP wire (f64 `Display` is shortest-round-trip).
 //!
+//! **Zero-copy loading.** v4 stores each class table as
+//! structure-of-arrays (all ids, then all weights) with every array
+//! starting at an 8-byte-aligned file offset, so [`MappedModel`] can
+//! `mmap` a snapshot, CRC-validate it once, and borrow the tables and
+//! sketch counters straight out of the page cache — a reload costs one
+//! checksum pass plus lazy page-in instead of two heap copies of the
+//! file. [`ServableModel::open_verified`] prefers the mapped path and
+//! falls back to heap decode for legacy versions / unsupported platforms
+//! (`BEAR_NO_MMAP=1` forces the fallback). Mapped and heap models are
+//! bit-identical in every query (`tests/prop_mmap.rs`).
+//!
+//! **SIMD queries.** `margin_class` gathers all per-feature weights
+//! through chunked, auto-vectorizable kernels ([`crate::serve::gather`]):
+//! a lockstep branchless binary search over the table and a two-phase
+//! Count Sketch estimator. Per-feature values are bit-identical to the
+//! scalar kernels by construction, and the margin accumulation itself
+//! still runs through the single canonical in-order f64 sum
+//! ([`crate::serve::shard::merge_margin`]) — see the bit-identity policy
+//! note in the gather module.
+//!
 //! **Multi-class.** The paper's Sec. 7 extension trains one sketch per
 //! class (one-vs-rest); [`ServableModel::from_multiclass`] exports one
 //! top-k table per class (no sketch fallback — the per-class hash
@@ -27,44 +47,56 @@
 //! split one model into K shard snapshots, each owning a contiguous
 //! feature-id range ([`ServableModel::into_shards`]; the range math and
 //! the bit-identical merge contract live in [`crate::serve::shard`]). The
-//! shard identity is part of the v3 header, so a shard file is fully
+//! shard identity is part of the v3+ header, so a shard file is fully
 //! self-describing; v1/v2 files read as shard `0` of `1` over the full
 //! id space.
 //!
-//! Wire format "BEARSNAP" v3 — a sibling of checkpoint v2 (same
+//! Wire format "BEARSNAP" v4 — a sibling of checkpoint v2 (same
 //! primitives: little-endian, CRC-32 trailer, self-describing header).
-//! v1 (no generation, single implicit class) and v2 (no shard header)
-//! files remain readable:
+//! v1 (no generation, single implicit class), v2 (no shard header), and
+//! v3 (interleaved (id, weight) pairs, no alignment padding) files remain
+//! readable through the heap decoder:
 //! ```text
-//! magic "BEARSNAP" | u32 version (=3)
+//! magic "BEARSNAP" | u32 version (=4)
 //! | u64 generation
-//! | u32 shard_index | u32 shard_count            (v3+; v1/v2 ⇒ 0 of 1)
+//! | u32 shard_index | u32 shard_count
 //! | u64 range_start | u64 range_end              (inclusive feature range)
 //! | u64 hash_seed | u32 query_mode | u32 loss (0=mse, 1=logistic) | f32 bias
 //! | u32 n_classes
-//! | n_classes × ( u32 k_len | (u64 id, f32 weight) × k_len )   (ids strictly increasing)
+//! | n_classes × ( u32 k_len | zero-pad to an 8-aligned offset
+//!                 | u64 id × k_len | f32 weight × k_len )   (ids strictly increasing)
 //! | u32 has_sketch (0/1; 1 requires n_classes == 1)
-//! | if 1: u32 rows | u32 cols | f32 × rows·cols  (sketch counters)
+//! | if 1: u32 rows | u32 cols | zero-pad to an 8-aligned offset
+//!         | f32 × rows·cols                       (sketch counters)
 //! | u32 crc32 of everything above
 //! ```
+//! Pad bytes must be zero (the decoder rejects anything else, so padding
+//! can't smuggle undetected state past the canonical-bytes contract).
 
 use crate::algo::sketched::SketchedState;
 use crate::algo::FeatureSelector;
 use crate::coordinator::checkpoint::{
-    checked_body, crc32, decode_loss, decode_query_mode, encode_loss, encode_query_mode,
-    put_f32, put_u32, put_u64, write_atomic, Reader,
+    checked_body, crc32, crc32_finish, crc32_update, decode_loss, decode_query_mode, encode_loss,
+    encode_query_mode, put_f32, put_u32, put_u64, write_atomic, Reader, CRC32_INIT,
 };
+use crate::hash::HashFamily;
 use crate::loss::LossKind;
+use crate::serve::gather::{gather_table, sketch_fill_misses, SketchRef};
+use crate::serve::mapped::{MapError, Mmap, Section, ZERO_COPY_SUPPORTED};
 use crate::serve::shard::{shard_starts, MAX_SHARDS};
-use crate::sketch::{CountSketch, QueryMode, SketchMemory};
+use crate::sketch::{query_kernel, CountSketch, QueryMode};
 use crate::sparse::SparseVec;
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 use std::path::Path;
+use std::sync::Arc;
 
 const MAGIC: &[u8; 8] = b"BEARSNAP";
-const VERSION: u32 = 3;
+const VERSION: u32 = 4;
 /// Sanity cap on the class count of an untrusted header (DNA is 15).
 const MAX_CLASSES: usize = 4096;
+/// Query widths up to this gather weights into stack scratch; wider rows
+/// spill to a heap buffer.
+const GATHER_STACK: usize = 128;
 
 /// One scored query.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -81,10 +113,13 @@ pub struct Prediction {
 
 /// One class's dense top-k table: selected ids (strictly increasing for
 /// binary-search lookup), their weights, and a |weight|-descending order.
+/// The id/weight arrays are [`Section`]s — owned after a heap decode,
+/// borrowed from the file mapping after a zero-copy open; `by_weight` is
+/// derived and always heap-resident (it is k small indices).
 #[derive(Clone, Debug)]
 struct ClassTable {
-    ids: Vec<u64>,
-    weights: Vec<f32>,
+    ids: Section<u64>,
+    weights: Section<f32>,
     /// Table slots ordered by decreasing |weight| (serves `/topk` without
     /// re-sorting per request).
     by_weight: Vec<u32>,
@@ -109,7 +144,24 @@ impl ClassTable {
         let ids: Vec<u64> = pairs.iter().map(|&(i, _)| i).collect();
         let weights: Vec<f32> = pairs.iter().map(|&(_, w)| w).collect();
         let by_weight = build_by_weight(&ids, &weights);
-        Self { ids, weights, by_weight }
+        Self { ids: Section::owned(ids), weights: Section::owned(weights), by_weight }
+    }
+
+    /// Build from already-sorted id/weight arrays (the v4 decode paths).
+    /// Unlike [`Self::from_pairs`] this does NOT repair the input: a v4
+    /// writer always emits strictly-increasing ids, so anything else in a
+    /// CRC-valid file is a forgery and must fail loudly — especially on
+    /// the mapped path, where we never copy the data into a repairable
+    /// buffer.
+    fn from_sorted(ids: Section<u64>, weights: Section<f32>) -> Result<Self> {
+        if ids.len() != weights.len() {
+            bail!("snapshot table id/weight length mismatch");
+        }
+        if ids.windows(2).any(|w| w[0] >= w[1]) {
+            bail!("snapshot table ids are not strictly increasing");
+        }
+        let by_weight = build_by_weight(&ids, &weights);
+        Ok(Self { ids, weights, by_weight })
     }
 
     fn lookup(&self, f: u64) -> Option<f32> {
@@ -125,6 +177,73 @@ impl ClassTable {
     }
 }
 
+/// The serving-side Count Sketch fallback: geometry + hash family +
+/// counters, where the counters are a [`Section`] (owned or mapped).
+/// Queries go through the exact same [`query_kernel`] as the training
+/// sketch, so the two are bit-identical structurally.
+#[derive(Clone, Debug)]
+struct ServingSketch {
+    counters: Section<f32>,
+    rows: usize,
+    cols: usize,
+    family: HashFamily,
+    mode: QueryMode,
+    seed: u64,
+}
+
+impl ServingSketch {
+    fn from_count_sketch(cs: &CountSketch) -> Self {
+        Self {
+            counters: Section::owned(cs.raw().to_vec()),
+            rows: cs.rows(),
+            cols: cs.cols(),
+            family: cs.family().clone(),
+            mode: cs.query_mode(),
+            seed: cs.seed(),
+        }
+    }
+
+    /// Rebuild from decoded geometry — the hash family is deterministic
+    /// in (rows, cols, seed), so this reproduces the training sketch's
+    /// bucket/sign functions exactly.
+    fn from_parts(
+        counters: Section<f32>,
+        rows: usize,
+        cols: usize,
+        seed: u64,
+        mode: QueryMode,
+    ) -> Self {
+        Self { counters, rows, cols, family: HashFamily::new(rows, cols, seed), mode, seed }
+    }
+
+    #[inline]
+    fn query(&self, f: u64) -> f32 {
+        query_kernel(&self.counters, self.rows, self.cols, &self.family, self.mode, f)
+    }
+
+    fn sketch_ref(&self) -> SketchRef<'_> {
+        SketchRef {
+            counters: &self.counters,
+            rows: self.rows,
+            cols: self.cols,
+            family: &self.family,
+            mode: self.mode,
+        }
+    }
+
+    fn cells(&self) -> usize {
+        self.counters.len()
+    }
+
+    fn counter_bytes(&self) -> usize {
+        self.counters.len() * std::mem::size_of::<f32>()
+    }
+
+    fn energy(&self) -> f64 {
+        self.counters.iter().map(|&x| (x as f64) * (x as f64)).sum()
+    }
+}
+
 /// An immutable, self-describing inference model.
 #[derive(Clone, Debug)]
 pub struct ServableModel {
@@ -133,7 +252,7 @@ pub struct ServableModel {
     tables: Vec<ClassTable>,
     /// Full Count Sketch fallback for features outside the table
     /// (single-class models only — per-class hash families differ).
-    sketch: Option<CountSketch>,
+    sketch: Option<ServingSketch>,
     /// Loss the model was trained on (decides probability output).
     pub loss: LossKind,
     /// Additive bias applied to every margin.
@@ -164,19 +283,247 @@ fn build_by_weight(ids: &[u64], weights: &[f32]) -> Vec<u32> {
     order
 }
 
+/// Append zero bytes until the buffer length is 8-aligned (v4 writer).
+fn pad_to_8(buf: &mut Vec<u8>) {
+    while buf.len() % 8 != 0 {
+        buf.push(0);
+    }
+}
+
+/// Skip the zero padding the v4 writer emitted at this position. Nonzero
+/// pad bytes mean the file was not produced by our writer — reject.
+fn skip_pad8(r: &mut Reader) -> Result<()> {
+    let pad = (8 - r.position() % 8) % 8;
+    if pad > 0 {
+        let bytes = r.take(pad)?;
+        if bytes.iter().any(|&b| b != 0) {
+            bail!("nonzero alignment padding in snapshot");
+        }
+    }
+    Ok(())
+}
+
+/// Every validated header field, shared by the heap and mmap decoders.
+struct Header {
+    version: u32,
+    generation: u64,
+    shard_index: u32,
+    shard_count: u32,
+    range_start: u64,
+    range_end: u64,
+    hash_seed: u64,
+    query_mode: QueryMode,
+    loss: LossKind,
+    bias: f32,
+    n_classes: usize,
+}
+
+fn parse_header(r: &mut Reader) -> Result<Header> {
+    if r.take(8)? != MAGIC {
+        bail!("not a BEAR snapshot (bad magic)");
+    }
+    let version = r.u32()?;
+    if version == 0 || version > VERSION {
+        bail!("unsupported snapshot version {version}");
+    }
+    let generation = if version >= 2 { r.u64()? } else { 0 };
+    // v1/v2 predate sharding: they read as shard 0 of 1 over the full
+    // feature space
+    let (shard_index, shard_count, range_start, range_end) = if version >= 3 {
+        (r.u32()?, r.u32()?, r.u64()?, r.u64()?)
+    } else {
+        (0, 1, 0, u64::MAX)
+    };
+    if shard_count == 0 || shard_count as usize > MAX_SHARDS {
+        bail!("implausible snapshot shard count {shard_count}");
+    }
+    if shard_index >= shard_count {
+        bail!("snapshot shard index {shard_index} out of range (count {shard_count})");
+    }
+    if range_start > range_end {
+        bail!("snapshot shard range {range_start}..{range_end} is inverted");
+    }
+    if shard_count == 1 && (range_start != 0 || range_end != u64::MAX) {
+        bail!("unsharded snapshot must own the full feature range");
+    }
+    let hash_seed = r.u64()?;
+    let query_mode = decode_query_mode(r.u32()?)?;
+    let loss = decode_loss(r.u32()?)?;
+    let bias = r.f32()?;
+    let n_classes = if version >= 2 { r.u32()? as usize } else { 1 };
+    if n_classes == 0 || n_classes > MAX_CLASSES {
+        bail!("implausible snapshot class count {n_classes}");
+    }
+    Ok(Header {
+        version,
+        generation,
+        shard_index,
+        shard_count,
+        range_start,
+        range_end,
+        hash_seed,
+        query_mode,
+        loss,
+        bias,
+        n_classes,
+    })
+}
+
+/// Byte offsets of a v4 body's array sections, discovered by one
+/// bounds-validated walk — the heap decoder copies from them, the mmap
+/// loader borrows at them.
+struct V4Layout {
+    /// (ids byte offset, k) per class; the weights array starts at
+    /// `ids_off + 8·k` (SoA, no gap — both are naturally aligned there).
+    tables: Vec<(usize, usize)>,
+    /// (counters byte offset, rows, cols) when the sketch rides along.
+    sketch: Option<(usize, usize, usize)>,
+}
+
+fn walk_v4(r: &mut Reader, n_classes: usize) -> Result<V4Layout> {
+    let mut tables = Vec::with_capacity(n_classes);
+    for _ in 0..n_classes {
+        let k_len = r.u32()? as usize;
+        skip_pad8(r)?;
+        // validate untrusted lengths against the bytes actually present
+        // before any length-driven allocation (a crafted header with a
+        // valid CRC must fail with an error, not an OOM abort)
+        if k_len.saturating_mul(12) > r.remaining() {
+            bail!("snapshot table length {k_len} exceeds file size");
+        }
+        let off = r.position();
+        r.take(k_len * 12)?;
+        tables.push((off, k_len));
+    }
+    let sketch = if r.u32()? == 1 {
+        if n_classes != 1 {
+            bail!("sketch fallback is only valid on single-class snapshots");
+        }
+        let rows = r.u32()? as usize;
+        let cols = r.u32()? as usize;
+        if rows == 0 || cols == 0 || rows > 8 {
+            bail!("implausible sketch geometry {rows}×{cols}");
+        }
+        let cells = rows.checked_mul(cols).context("sketch geometry overflow")?;
+        skip_pad8(r)?;
+        if cells.saturating_mul(4) > r.remaining() {
+            bail!("snapshot sketch {rows}×{cols} exceeds file size");
+        }
+        let off = r.position();
+        r.take(cells * 4)?;
+        Some((off, rows, cols))
+    } else {
+        None
+    };
+    Ok(V4Layout { tables, sketch })
+}
+
+/// A [`ServableModel`] whose tables and sketch counters are borrowed
+/// straight from a CRC-validated `mmap` of the snapshot file — the
+/// zero-copy read path. Derefs to the model; the mapping lives as long
+/// as any clone of the model's sections (they hold `Arc<Mmap>`), so
+/// handing the model to the RCU holder and dropping this wrapper is fine,
+/// as is the publisher unlinking the file (POSIX keeps mapped pages
+/// valid).
+#[derive(Debug)]
+pub struct MappedModel {
+    model: ServableModel,
+    file_crc: u32,
+    mapped_bytes: usize,
+}
+
+impl MappedModel {
+    /// Map and validate a v4 snapshot. [`MapError::Unsupported`] (legacy
+    /// version, platform, misalignment) means heap decode will work;
+    /// [`MapError::Invalid`] (CRC mismatch, structural forgery) means the
+    /// file is bad on any path — callers must NOT mask it by falling
+    /// back.
+    pub fn open(path: &Path) -> Result<Self, MapError> {
+        let map = Arc::new(Mmap::map(path)?);
+        let data = map.as_slice();
+        if data.len() < MAGIC.len() + 8 {
+            return Err(MapError::Invalid(anyhow!(
+                "snapshot {path:?} too short ({} bytes)",
+                data.len()
+            )));
+        }
+        let (body, trailer) = data.split_at(data.len() - 4);
+        let want = u32::from_le_bytes(trailer.try_into().unwrap());
+        // one pass over the mapping: body CRC for the trailer check, then
+        // continued over the trailer bytes for the whole-file CRC that
+        // the publication MANIFEST signs
+        let state = crc32_update(CRC32_INIT, body);
+        let got = crc32_finish(state);
+        if got != want {
+            return Err(MapError::Invalid(anyhow!(
+                "snapshot CRC mismatch: file {want:#010x} vs computed {got:#010x}"
+            )));
+        }
+        let file_crc = crc32_finish(crc32_update(state, trailer));
+        let mut r = Reader::new(body);
+        let h = parse_header(&mut r).map_err(MapError::Invalid)?;
+        if h.version < 4 {
+            return Err(MapError::Unsupported(format!(
+                "snapshot version {} predates 8-byte alignment padding",
+                h.version
+            )));
+        }
+        let layout = walk_v4(&mut r, h.n_classes).map_err(MapError::Invalid)?;
+        let mut tables = Vec::with_capacity(layout.tables.len());
+        for &(off, k) in &layout.tables {
+            let ids = Section::mapped(map.clone(), off, k)?;
+            let weights = Section::mapped(map.clone(), off + 8 * k, k)?;
+            tables.push(ClassTable::from_sorted(ids, weights).map_err(MapError::Invalid)?);
+        }
+        let sketch = match layout.sketch {
+            Some((off, rows, cols)) => {
+                let counters = Section::mapped(map.clone(), off, rows * cols)?;
+                Some(ServingSketch::from_parts(counters, rows, cols, h.hash_seed, h.query_mode))
+            }
+            None => None,
+        };
+        let model = ServableModel::finish(h, tables, sketch).map_err(MapError::Invalid)?;
+        Ok(Self { model, file_crc, mapped_bytes: map.len() })
+    }
+
+    /// CRC-32 of the whole file (body + trailer) — the value the
+    /// publication MANIFEST records, computed during validation so
+    /// verified opens need no second pass.
+    pub fn file_crc(&self) -> u32 {
+        self.file_crc
+    }
+
+    /// Size of the backing mapping in bytes.
+    pub fn mapped_bytes(&self) -> usize {
+        self.mapped_bytes
+    }
+
+    /// Unwrap into the model (the sections keep the mapping alive).
+    pub fn into_model(self) -> ServableModel {
+        self.model
+    }
+}
+
+impl std::ops::Deref for MappedModel {
+    type Target = ServableModel;
+    fn deref(&self) -> &ServableModel {
+        &self.model
+    }
+}
+
 impl ServableModel {
     /// Build from per-class sorted-by-id (id, weight) pair lists and an
     /// optional (single-class) sketch.
     fn assemble(
         class_pairs: Vec<Vec<(u64, f32)>>,
-        sketch: Option<CountSketch>,
+        sketch: Option<ServingSketch>,
         loss: LossKind,
         bias: f32,
     ) -> Self {
         debug_assert!(!class_pairs.is_empty());
         debug_assert!(sketch.is_none() || class_pairs.len() == 1);
         let tables: Vec<ClassTable> = class_pairs.into_iter().map(ClassTable::from_pairs).collect();
-        let hash_seed = sketch.as_ref().map(|cs| cs.seed()).unwrap_or(0);
+        let hash_seed = sketch.as_ref().map(|s| s.seed).unwrap_or(0);
         Self {
             tables,
             sketch,
@@ -189,6 +536,30 @@ impl ServableModel {
             range_start: 0,
             range_end: u64::MAX,
         }
+    }
+
+    /// Shared decode tail: range-check the tables against the shard
+    /// header and stitch the model together.
+    fn finish(h: Header, tables: Vec<ClassTable>, sketch: Option<ServingSketch>) -> Result<Self> {
+        // a shard's table may only hold features it owns
+        if tables.iter().any(|t| {
+            t.ids.first().is_some_and(|&f| f < h.range_start)
+                || t.ids.last().is_some_and(|&f| f > h.range_end)
+        }) {
+            bail!("snapshot table contains features outside its shard range");
+        }
+        Ok(Self {
+            tables,
+            sketch,
+            loss: h.loss,
+            bias: h.bias,
+            hash_seed: h.hash_seed,
+            generation: h.generation,
+            shard_index: h.shard_index,
+            shard_count: h.shard_count,
+            range_start: h.range_start,
+            range_end: h.range_end,
+        })
     }
 
     /// Export from any selector: dense top-k table only (no out-of-support
@@ -204,7 +575,12 @@ impl ServableModel {
     pub fn from_sketched(state: &SketchedState, loss: LossKind, bias: f32) -> Self {
         let pairs: Vec<(u64, f32)> =
             state.heap.iter().map(|(f, _)| (f, state.cs.query(f))).collect();
-        Self::assemble(vec![pairs], Some(state.cs.clone()), loss, bias)
+        Self::assemble(
+            vec![pairs],
+            Some(ServingSketch::from_count_sketch(&state.cs)),
+            loss,
+            bias,
+        )
     }
 
     /// Export a one-vs-rest ensemble (the DNA multi-class task): one
@@ -258,6 +634,14 @@ impl ServableModel {
         self.tables.iter().any(|t| t.lookup(f).is_some())
     }
 
+    /// Does any table/sketch array borrow from a file mapping (vs owned
+    /// heap storage)? True exactly when the model came through the
+    /// zero-copy path.
+    pub fn is_mapped(&self) -> bool {
+        self.tables.iter().any(|t| t.ids.is_mapped())
+            || self.sketch.as_ref().is_some_and(|s| s.counters.is_mapped())
+    }
+
     /// All per-class weights of `f` in one pass over the class tables —
     /// exactly [`Self::weight_class`] per class — or `None` when the
     /// feature contributes nothing (no table hit anywhere and no sketch
@@ -273,7 +657,7 @@ impl ServableModel {
                     out.push(w);
                 }
                 None => out.push(match &self.sketch {
-                    Some(cs) => cs.query(f),
+                    Some(s) => s.query(f),
                     None => 0.0,
                 }),
             }
@@ -354,13 +738,15 @@ impl ServableModel {
 
     /// Sketch cells carried by the fallback (0 without one).
     pub fn sketch_cells(&self) -> usize {
-        self.sketch.as_ref().map(|cs| cs.cells()).unwrap_or(0)
+        self.sketch.as_ref().map(|s| s.cells()).unwrap_or(0)
     }
 
-    /// Serialized + resident footprint estimate in bytes.
+    /// Serialized + resident footprint estimate in bytes. A mapped model
+    /// still reports its full table+counter size — the pages are resident
+    /// once touched; they are just shared with the page cache.
     pub fn memory_bytes(&self) -> usize {
         self.n_features() * (std::mem::size_of::<u64>() + std::mem::size_of::<f32>())
-            + self.sketch.as_ref().map(|cs| cs.counter_bytes()).unwrap_or(0)
+            + self.sketch.as_ref().map(|s| s.counter_bytes()).unwrap_or(0)
     }
 
     /// Union of all selected feature ids across classes, sorted
@@ -377,7 +763,7 @@ impl ServableModel {
     /// table weights. Drift-monitor input.
     pub fn coord_norm(&self) -> f64 {
         match &self.sketch {
-            Some(cs) => cs.energy().sqrt(),
+            Some(s) => s.energy().sqrt(),
             None => self
                 .tables
                 .iter()
@@ -393,7 +779,7 @@ impl ServableModel {
     #[inline]
     pub fn weight_class(&self, c: usize, f: u64) -> f32 {
         self.tables[c].lookup(f).unwrap_or_else(|| match &self.sketch {
-            Some(cs) => cs.query(f),
+            Some(s) => s.query(f),
             None => 0.0,
         })
     }
@@ -407,12 +793,39 @@ impl ServableModel {
     /// Margin of a sparse query against class `c`: `bias + Σ w(f)·x_f`,
     /// accumulated in f64 in index order (bit-compatible with
     /// `SketchedState::score` when `bias == 0` and the sketch fallback is
-    /// attached). Delegates to the single canonical accumulation
+    /// attached).
+    ///
+    /// The per-feature weights are gathered through the chunked
+    /// vectorizable kernels ([`crate::serve::gather`]) — each weight is
+    /// bit-identical to [`Self::weight_class`] — and then fed, in input
+    /// order, to the single canonical accumulation
     /// ([`crate::serve::shard::merge_margin`]) shared with the
     /// scatter-gather merge, so sharded serving is bit-identical by
     /// construction.
     pub fn margin_class(&self, c: usize, x: &SparseVec) -> f64 {
-        crate::serve::shard::merge_margin(self.bias, x, |f| self.weight_class(c, f))
+        let n = x.idx.len();
+        let mut wbuf = [0f32; GATHER_STACK];
+        let mut hbuf = [false; GATHER_STACK];
+        let mut wvec: Vec<f32>;
+        let mut hvec: Vec<bool>;
+        let (out, hit): (&mut [f32], &mut [bool]) = if n <= GATHER_STACK {
+            (&mut wbuf[..n], &mut hbuf[..n])
+        } else {
+            wvec = vec![0.0; n];
+            hvec = vec![false; n];
+            (&mut wvec, &mut hvec)
+        };
+        let t = &self.tables[c];
+        gather_table(&t.ids, &t.weights, &x.idx, out, hit);
+        if let Some(s) = &self.sketch {
+            sketch_fill_misses(&s.sketch_ref(), &x.idx, out, hit);
+        }
+        let mut i = 0;
+        crate::serve::shard::merge_margin(self.bias, x, |_| {
+            let w = out[i];
+            i += 1;
+            w
+        })
     }
 
     /// Margin of a sparse query (class 0).
@@ -459,10 +872,13 @@ impl ServableModel {
     /// Score one query: binary/regression models report margin (+
     /// probability for logistic); multi-class models report the argmax
     /// class and its margin. Shares its float-op sequence with the
-    /// scatter-gather merge via [`crate::serve::shard::predict_with`].
+    /// scatter-gather merge via
+    /// [`crate::serve::shard::predict_from_margins`] — the per-class
+    /// margins come from the gathered [`Self::margin_class`], which is
+    /// bit-identical to the scalar path.
     pub fn predict(&self, x: &SparseVec) -> Prediction {
-        crate::serve::shard::predict_with(self.num_classes(), self.loss, self.bias, x, |c, f| {
-            self.weight_class(c, f)
+        crate::serve::shard::predict_from_margins(self.num_classes(), self.loss, |c| {
+            self.margin_class(c, x)
         })
     }
 
@@ -476,7 +892,7 @@ impl ServableModel {
         self.topk_class(0, k)
     }
 
-    /// Serialize to the full BEARSNAP v2 byte image (CRC trailer
+    /// Serialize to the full BEARSNAP v4 byte image (CRC trailer
     /// included) — exactly the bytes [`Self::save`] writes to disk.
     pub fn encode(&self) -> Vec<u8> {
         self.encode_with_generation(self.generation)
@@ -487,8 +903,8 @@ impl ServableModel {
     /// whole model (sketch counters included) just to set a number.
     pub fn encode_with_generation(&self, generation: u64) -> Vec<u8> {
         let mut buf = Vec::with_capacity(
-            64 + self.n_features() * 12
-                + self.sketch.as_ref().map(|cs| cs.raw().len() * 4).unwrap_or(0),
+            96 + self.n_features() * 12
+                + self.sketch.as_ref().map(|s| s.counters.len() * 4).unwrap_or(0),
         );
         buf.extend_from_slice(MAGIC);
         put_u32(&mut buf, VERSION);
@@ -498,24 +914,28 @@ impl ServableModel {
         put_u64(&mut buf, self.range_start);
         put_u64(&mut buf, self.range_end);
         put_u64(&mut buf, self.hash_seed);
-        let mode = self.sketch.as_ref().map(|cs| cs.query_mode()).unwrap_or(QueryMode::Median);
+        let mode = self.sketch.as_ref().map(|s| s.mode).unwrap_or(QueryMode::Median);
         put_u32(&mut buf, encode_query_mode(mode));
         put_u32(&mut buf, encode_loss(self.loss));
         put_f32(&mut buf, self.bias);
         put_u32(&mut buf, self.tables.len() as u32);
         for t in &self.tables {
             put_u32(&mut buf, t.ids.len() as u32);
-            for (&f, &w) in t.ids.iter().zip(&t.weights) {
+            pad_to_8(&mut buf);
+            for &f in t.ids.iter() {
                 put_u64(&mut buf, f);
+            }
+            for &w in t.weights.iter() {
                 put_f32(&mut buf, w);
             }
         }
         match &self.sketch {
-            Some(cs) => {
+            Some(s) => {
                 put_u32(&mut buf, 1);
-                put_u32(&mut buf, cs.rows() as u32);
-                put_u32(&mut buf, cs.cols() as u32);
-                for &c in cs.raw() {
+                put_u32(&mut buf, s.rows as u32);
+                put_u32(&mut buf, s.cols as u32);
+                pad_to_8(&mut buf);
+                for &c in s.counters.iter() {
                     put_f32(&mut buf, c);
                 }
             }
@@ -526,114 +946,156 @@ impl ServableModel {
         buf
     }
 
-    /// Serialize (BEARSNAP v2, CRC-checked, atomic tmp+rename).
+    /// Serialize (BEARSNAP v4, CRC-checked, atomic tmp+rename).
     pub fn save(&self, path: &Path) -> Result<()> {
         write_atomic(&self.encode(), path)
     }
 
-    /// Decode a snapshot byte image (v2, or legacy v1). Fully
-    /// self-describing: the sketch (when present) is rebuilt from the
-    /// stored geometry + hash seed + query mode.
+    /// Decode a snapshot byte image onto the heap (v4 or legacy v1–v3).
+    /// Fully self-describing: the sketch (when present) is rebuilt from
+    /// the stored geometry + hash seed + query mode.
     pub fn decode(data: &[u8]) -> Result<Self> {
         let body = checked_body(data, MAGIC.len() + 4)?;
         let mut r = Reader::new(body);
-        if r.take(8)? != MAGIC {
-            bail!("not a BEAR snapshot (bad magic)");
-        }
-        let version = r.u32()?;
-        if version == 0 || version > VERSION {
-            bail!("unsupported snapshot version {version}");
-        }
-        let generation = if version >= 2 { r.u64()? } else { 0 };
-        // v1/v2 predate sharding: they read as shard 0 of 1 over the full
-        // feature space
-        let (shard_index, shard_count, range_start, range_end) = if version >= 3 {
-            (r.u32()?, r.u32()?, r.u64()?, r.u64()?)
+        let h = parse_header(&mut r)?;
+        let (tables, sketch) = if h.version >= 4 {
+            let layout = walk_v4(&mut r, h.n_classes)?;
+            let mut tables = Vec::with_capacity(layout.tables.len());
+            for &(off, k) in &layout.tables {
+                let (id_bytes, w_bytes) = body[off..off + 12 * k].split_at(8 * k);
+                let mut ids = Vec::with_capacity(k);
+                for c in id_bytes.chunks_exact(8) {
+                    ids.push(u64::from_le_bytes(c.try_into().unwrap()));
+                }
+                let mut weights = Vec::with_capacity(k);
+                for c in w_bytes.chunks_exact(4) {
+                    weights.push(f32::from_le_bytes(c.try_into().unwrap()));
+                }
+                tables
+                    .push(ClassTable::from_sorted(Section::owned(ids), Section::owned(weights))?);
+            }
+            let sketch = match layout.sketch {
+                Some((off, rows, cols)) => {
+                    let cells = rows * cols;
+                    let mut counters = Vec::with_capacity(cells);
+                    for c in body[off..off + 4 * cells].chunks_exact(4) {
+                        counters.push(f32::from_le_bytes(c.try_into().unwrap()));
+                    }
+                    Some(ServingSketch::from_parts(
+                        Section::owned(counters),
+                        rows,
+                        cols,
+                        h.hash_seed,
+                        h.query_mode,
+                    ))
+                }
+                None => None,
+            };
+            (tables, sketch)
         } else {
-            (0, 1, 0, u64::MAX)
+            // legacy v1–v3: interleaved (u64 id, f32 weight) pairs, no
+            // padding; tolerant parse (sort + dedup) as it always was
+            let mut tables = Vec::with_capacity(h.n_classes);
+            for _ in 0..h.n_classes {
+                let k_len = r.u32()? as usize;
+                if k_len.saturating_mul(12) > r.remaining() {
+                    bail!("snapshot table length {k_len} exceeds file size");
+                }
+                let mut pairs = Vec::with_capacity(k_len);
+                for _ in 0..k_len {
+                    let f = r.u64()?;
+                    let w = r.f32()?;
+                    pairs.push((f, w));
+                }
+                tables.push(ClassTable::from_pairs(pairs));
+            }
+            let sketch = if r.u32()? == 1 {
+                if h.n_classes != 1 {
+                    bail!("sketch fallback is only valid on single-class snapshots");
+                }
+                let rows = r.u32()? as usize;
+                let cols = r.u32()? as usize;
+                if rows == 0 || cols == 0 || rows > 8 {
+                    bail!("implausible sketch geometry {rows}×{cols}");
+                }
+                let cells = rows.checked_mul(cols).context("sketch geometry overflow")?;
+                if cells.saturating_mul(4) > r.remaining() {
+                    bail!("snapshot sketch {rows}×{cols} exceeds file size");
+                }
+                let mut counters = Vec::with_capacity(cells);
+                for _ in 0..cells {
+                    counters.push(r.f32()?);
+                }
+                Some(ServingSketch::from_parts(
+                    Section::owned(counters),
+                    rows,
+                    cols,
+                    h.hash_seed,
+                    h.query_mode,
+                ))
+            } else {
+                None
+            };
+            (tables, sketch)
         };
-        if shard_count == 0 || shard_count as usize > MAX_SHARDS {
-            bail!("implausible snapshot shard count {shard_count}");
-        }
-        if shard_index >= shard_count {
-            bail!("snapshot shard index {shard_index} out of range (count {shard_count})");
-        }
-        if range_start > range_end {
-            bail!("snapshot shard range {range_start}..{range_end} is inverted");
-        }
-        if shard_count == 1 && (range_start != 0 || range_end != u64::MAX) {
-            bail!("unsharded snapshot must own the full feature range");
-        }
-        let hash_seed = r.u64()?;
-        let query_mode = decode_query_mode(r.u32()?)?;
-        let loss = decode_loss(r.u32()?)?;
-        let bias = r.f32()?;
-        let n_classes = if version >= 2 { r.u32()? as usize } else { 1 };
-        if n_classes == 0 || n_classes > MAX_CLASSES {
-            bail!("implausible snapshot class count {n_classes}");
-        }
-        let mut class_pairs = Vec::with_capacity(n_classes);
-        for _ in 0..n_classes {
-            let k_len = r.u32()? as usize;
-            // validate untrusted lengths against the bytes actually present
-            // before any length-driven allocation (a crafted header with a
-            // valid CRC must fail with an error, not an OOM abort)
-            if k_len.saturating_mul(12) > r.remaining() {
-                bail!("snapshot table length {k_len} exceeds file size");
-            }
-            let mut pairs = Vec::with_capacity(k_len);
-            for _ in 0..k_len {
-                let f = r.u64()?;
-                let w = r.f32()?;
-                pairs.push((f, w));
-            }
-            class_pairs.push(pairs);
-        }
-        let sketch = if r.u32()? == 1 {
-            if n_classes != 1 {
-                bail!("sketch fallback is only valid on single-class snapshots");
-            }
-            let rows = r.u32()? as usize;
-            let cols = r.u32()? as usize;
-            if rows == 0 || cols == 0 || rows > 8 {
-                bail!("implausible sketch geometry {rows}×{cols}");
-            }
-            let cells = rows.checked_mul(cols).context("sketch geometry overflow")?;
-            if cells.saturating_mul(4) > r.remaining() {
-                bail!("snapshot sketch {rows}×{cols} exceeds file size");
-            }
-            let mut counters = Vec::with_capacity(cells);
-            for _ in 0..cells {
-                counters.push(r.f32()?);
-            }
-            let mut cs = CountSketch::new(cols, rows, hash_seed);
-            cs.set_query_mode(query_mode);
-            cs.load_raw(&counters);
-            Some(cs)
-        } else {
-            None
-        };
-        let mut model = Self::assemble(class_pairs, sketch, loss, bias);
-        model.hash_seed = hash_seed; // preserve even for sketch-free files
-        model.generation = generation;
-        model.shard_index = shard_index;
-        model.shard_count = shard_count;
-        model.range_start = range_start;
-        model.range_end = range_end;
-        // a shard's table may only hold features it owns
-        if model.tables.iter().any(|t| {
-            t.ids.first().is_some_and(|&f| f < range_start)
-                || t.ids.last().is_some_and(|&f| f > range_end)
-        }) {
-            bail!("snapshot table contains features outside its shard range");
-        }
-        Ok(model)
+        Self::finish(h, tables, sketch)
     }
 
-    /// Load a snapshot file (v2 or legacy v1).
+    /// Load a snapshot file via plain heap decode (any version). The
+    /// serving entry points prefer [`Self::open`] / [`Self::open_verified`]
+    /// which go zero-copy when the file and platform allow.
     pub fn load(path: &Path) -> Result<Self> {
         let data = std::fs::read(path).with_context(|| format!("opening snapshot {path:?}"))?;
         Self::decode(&data).with_context(|| format!("decoding snapshot {path:?}"))
+    }
+
+    /// Open a snapshot with the zero-copy path preferred and the heap
+    /// decoder as fallback, optionally enforcing the whole-file CRC a
+    /// publication MANIFEST recorded. Returns `(model, mapped)` where
+    /// `mapped` says which path served the load.
+    ///
+    /// Fallback happens ONLY for [`MapError::Unsupported`] (legacy
+    /// version, non-unix platform, mmap refusal, `BEAR_NO_MMAP=1`);
+    /// an invalid file (CRC/structure) errors out on both paths rather
+    /// than being re-read and masked.
+    pub fn open_verified(path: &Path, want_crc: Option<u32>) -> Result<(Self, bool)> {
+        let no_mmap =
+            std::env::var_os("BEAR_NO_MMAP").is_some_and(|v| !v.is_empty() && v != "0");
+        if ZERO_COPY_SUPPORTED && !no_mmap {
+            match MappedModel::open(path) {
+                Ok(mm) => {
+                    if let Some(want) = want_crc {
+                        if mm.file_crc() != want {
+                            bail!(
+                                "snapshot {path:?} CRC {:#010x} does not match manifest {want:#010x}",
+                                mm.file_crc()
+                            );
+                        }
+                    }
+                    return Ok((mm.into_model(), true));
+                }
+                Err(MapError::Unsupported(_)) => {} // heap decode below
+                Err(MapError::Invalid(e)) => {
+                    return Err(e.context(format!("mapping snapshot {path:?}")));
+                }
+            }
+        }
+        let bytes = std::fs::read(path).with_context(|| format!("opening snapshot {path:?}"))?;
+        if let Some(want) = want_crc {
+            let got = crc32(&bytes);
+            if got != want {
+                bail!("snapshot {path:?} CRC {got:#010x} does not match manifest {want:#010x}");
+            }
+        }
+        let model =
+            Self::decode(&bytes).with_context(|| format!("decoding snapshot {path:?}"))?;
+        Ok((model, false))
+    }
+
+    /// [`Self::open_verified`] without a manifest CRC: zero-copy when
+    /// possible, heap decode otherwise.
+    pub fn open(path: &Path) -> Result<Self> {
+        Ok(Self::open_verified(path, None)?.0)
     }
 }
 
@@ -723,6 +1185,19 @@ mod tests {
         assert!(mse.predict(&q).probability.is_none());
     }
 
+    /// Margins wider than the stack scratch must spill to the heap buffer
+    /// and stay bit-identical to the scalar weight function.
+    #[test]
+    fn wide_queries_spill_past_stack_scratch() {
+        let st = trained_state();
+        let m = ServableModel::from_sketched(&st, LossKind::Logistic, 0.125);
+        let wide: Vec<(u64, f32)> =
+            (0..(GATHER_STACK as u64 * 2 + 7)).map(|f| (f * 3, (f % 11) as f32 - 5.0)).collect();
+        let q = sv(&wide);
+        let scalar = crate::serve::shard::merge_margin(m.bias, &q, |f| m.weight_class(0, f));
+        assert_eq!(m.margin(&q).to_bits(), scalar.to_bits());
+    }
+
     #[test]
     fn save_load_roundtrip_preserves_margins() {
         let st = trained_state();
@@ -742,6 +1217,95 @@ mod tests {
             assert_eq!(m.margin(&q).to_bits(), m2.margin(&q).to_bits(), "{q:?}");
         }
         std::fs::remove_file(&path).ok();
+    }
+
+    /// The tentpole contract: a zero-copy mapped open is bit-identical to
+    /// heap decode in every query, and its whole-file CRC matches what
+    /// the MANIFEST would sign.
+    #[test]
+    fn mapped_model_is_bit_identical_to_heap_decode() {
+        let st = trained_state();
+        let m = ServableModel::from_sketched(&st, LossKind::Logistic, 0.25).with_generation(3);
+        let path =
+            std::env::temp_dir().join(format!("bear-snap-mapped-{}", std::process::id()));
+        m.save(&path).unwrap();
+        let heap = ServableModel::load(&path).unwrap();
+        assert!(!heap.is_mapped());
+        match MappedModel::open(&path) {
+            Ok(mm) => {
+                assert!(mm.is_mapped());
+                assert_eq!(mm.file_crc(), crc32(&std::fs::read(&path).unwrap()));
+                assert!(mm.mapped_bytes() > 0);
+                for q in
+                    [sv(&[(3, 1.0), (9, 2.0)]), sv(&[(777, 1.0)]), sv(&[(1 << 40, -1.5)]), sv(&[])]
+                {
+                    assert_eq!(mm.margin(&q).to_bits(), heap.margin(&q).to_bits(), "{q:?}");
+                }
+                assert_eq!(mm.topk(4), heap.topk(4));
+                assert_eq!(mm.weight_class(0, 12345).to_bits(), heap.weight_class(0, 12345).to_bits());
+            }
+            // non-zero-copy targets: the fallback IS the contract there
+            Err(MapError::Unsupported(why)) => {
+                assert!(!ZERO_COPY_SUPPORTED, "unexpected Unsupported: {why}");
+            }
+            Err(MapError::Invalid(e)) => panic!("{e:#}"),
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn open_verified_enforces_manifest_crc() {
+        let st = trained_state();
+        let m = ServableModel::from_sketched(&st, LossKind::Logistic, 0.0);
+        let path =
+            std::env::temp_dir().join(format!("bear-snap-openv-{}", std::process::id()));
+        m.save(&path).unwrap();
+        let file_crc = crc32(&std::fs::read(&path).unwrap());
+        let (loaded, mapped) = ServableModel::open_verified(&path, Some(file_crc)).unwrap();
+        assert_eq!(loaded.is_mapped(), mapped);
+        assert_eq!(loaded.n_features(), m.n_features());
+        // a wrong manifest CRC must fail on whichever path served it
+        assert!(ServableModel::open_verified(&path, Some(file_crc ^ 1)).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    /// Pad bytes are part of the canonical image: a CRC-valid file with
+    /// nonzero padding is a forgery, not a tolerable variant.
+    #[test]
+    fn nonzero_alignment_padding_rejected() {
+        let st = trained_state();
+        let m = ServableModel::from_sketched(&st, LossKind::Logistic, 0.0);
+        assert_eq!(m.n_features(), 4);
+        let mut data = m.encode();
+        // for a 4-feature single-class model the sketch-section pad sits at
+        // 132..136: header 68 | k_len 4 (no pad at 72) | ids 32 | weights 16
+        // | has_sketch 4 | rows 4 | cols 4 → 132, pad 4 to reach 136
+        assert_eq!(&data[132..136], &[0u8; 4]);
+        data[133] = 7;
+        let n = data.len();
+        let crc = crc32(&data[..n - 4]);
+        data[n - 4..].copy_from_slice(&crc.to_le_bytes());
+        let err = ServableModel::decode(&data).unwrap_err();
+        assert!(format!("{err}").contains("padding"), "{err}");
+    }
+
+    /// v4 refuses unsorted table ids instead of silently re-sorting —
+    /// the mapped path serves the bytes as-is, so it must not trust them.
+    #[test]
+    fn v4_unsorted_table_ids_rejected() {
+        let st = trained_state();
+        let m = ServableModel::from_sketched(&st, LossKind::Logistic, 0.0);
+        let mut data = m.encode();
+        // swap the first two table ids (bytes 72..80 and 80..88)
+        let (a, b) = (72usize, 80usize);
+        for i in 0..8 {
+            data.swap(a + i, b + i);
+        }
+        let n = data.len();
+        let crc = crc32(&data[..n - 4]);
+        data[n - 4..].copy_from_slice(&crc.to_le_bytes());
+        let err = ServableModel::decode(&data).unwrap_err();
+        assert!(format!("{err}").contains("strictly increasing"), "{err}");
     }
 
     #[test]
@@ -824,15 +1388,15 @@ mod tests {
         put_f32(&mut buf, m.bias);
         let t = &m.tables[0];
         put_u32(&mut buf, t.ids.len() as u32);
-        for (&f, &w) in t.ids.iter().zip(&t.weights) {
+        for (&f, &w) in t.ids.iter().zip(t.weights.iter()) {
             put_u64(&mut buf, f);
             put_f32(&mut buf, w);
         }
         let cs = m.sketch.as_ref().unwrap();
         put_u32(&mut buf, 1);
-        put_u32(&mut buf, cs.rows() as u32);
-        put_u32(&mut buf, cs.cols() as u32);
-        for &c in cs.raw() {
+        put_u32(&mut buf, cs.rows as u32);
+        put_u32(&mut buf, cs.cols as u32);
+        for &c in cs.counters.iter() {
             put_f32(&mut buf, c);
         }
         let crc = crc32(&buf);
@@ -864,15 +1428,15 @@ mod tests {
         put_u32(&mut buf, 1); // n_classes
         let t = &m.tables[0];
         put_u32(&mut buf, t.ids.len() as u32);
-        for (&f, &w) in t.ids.iter().zip(&t.weights) {
+        for (&f, &w) in t.ids.iter().zip(t.weights.iter()) {
             put_u64(&mut buf, f);
             put_f32(&mut buf, w);
         }
         let cs = m.sketch.as_ref().unwrap();
         put_u32(&mut buf, 1);
-        put_u32(&mut buf, cs.rows() as u32);
-        put_u32(&mut buf, cs.cols() as u32);
-        for &c in cs.raw() {
+        put_u32(&mut buf, cs.rows as u32);
+        put_u32(&mut buf, cs.cols as u32);
+        for &c in cs.counters.iter() {
             put_f32(&mut buf, c);
         }
         let crc = crc32(&buf);
@@ -885,6 +1449,62 @@ mod tests {
         assert!(m2.has_sketch());
         let q = sv(&[(3, 1.0), (9, 2.0), (54321, 1.0)]);
         assert_eq!(m2.margin(&q).to_bits(), m.margin(&q).to_bits());
+    }
+
+    /// Hand-write the v3 layout (shard header, interleaved unpadded
+    /// pairs) — the writer emits v4 now, so cover the v3 read path
+    /// explicitly; it must also route open_verified to the heap decoder.
+    #[test]
+    fn v3_files_still_load_and_fall_back_from_mmap() {
+        let st = trained_state();
+        let m = ServableModel::from_sketched(&st, LossKind::Logistic, 0.25).with_generation(6);
+        let mut buf = Vec::new();
+        buf.extend_from_slice(MAGIC);
+        put_u32(&mut buf, 3); // version 3
+        put_u64(&mut buf, m.generation);
+        put_u32(&mut buf, 0); // shard_index
+        put_u32(&mut buf, 1); // shard_count
+        put_u64(&mut buf, 0);
+        put_u64(&mut buf, u64::MAX);
+        put_u64(&mut buf, m.hash_seed);
+        put_u32(&mut buf, encode_query_mode(QueryMode::Median));
+        put_u32(&mut buf, encode_loss(m.loss));
+        put_f32(&mut buf, m.bias);
+        put_u32(&mut buf, 1); // n_classes
+        let t = &m.tables[0];
+        put_u32(&mut buf, t.ids.len() as u32);
+        for (&f, &w) in t.ids.iter().zip(t.weights.iter()) {
+            put_u64(&mut buf, f);
+            put_f32(&mut buf, w);
+        }
+        let cs = m.sketch.as_ref().unwrap();
+        put_u32(&mut buf, 1);
+        put_u32(&mut buf, cs.rows as u32);
+        put_u32(&mut buf, cs.cols as u32);
+        for &c in cs.counters.iter() {
+            put_f32(&mut buf, c);
+        }
+        let crc = crc32(&buf);
+        put_u32(&mut buf, crc);
+        let m2 = ServableModel::decode(&buf).unwrap();
+        assert_eq!(m2.generation, 6);
+        let q = sv(&[(3, 1.0), (9, 2.0), (54321, 1.0)]);
+        assert_eq!(m2.margin(&q).to_bits(), m.margin(&q).to_bits());
+        // through a file: mmap must decline (Unsupported) and
+        // open_verified must transparently serve it from the heap
+        let path = std::env::temp_dir().join(format!("bear-snap-v3-{}", std::process::id()));
+        std::fs::write(&path, &buf).unwrap();
+        if ZERO_COPY_SUPPORTED {
+            match MappedModel::open(&path) {
+                Err(MapError::Unsupported(_)) => {}
+                other => panic!("expected Unsupported for v3, got {other:?}"),
+            }
+        }
+        let (m3, mapped) = ServableModel::open_verified(&path, Some(crc32(&buf))).unwrap();
+        assert!(!mapped);
+        assert!(!m3.is_mapped());
+        assert_eq!(m3.margin(&q).to_bits(), m.margin(&q).to_bits());
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]
@@ -912,6 +1532,22 @@ mod tests {
         data[mid] ^= 0x55;
         let err = ServableModel::decode(&data).unwrap_err();
         assert!(format!("{err}").contains("CRC"), "{err}");
+        // the mapped open rejects the same corruption as Invalid, with the
+        // same CRC language — never Unsupported (which would mask it by
+        // falling back to a heap decode of the same bad bytes)
+        let path =
+            std::env::temp_dir().join(format!("bear-snap-corrupt-{}", std::process::id()));
+        std::fs::write(&path, &data).unwrap();
+        if ZERO_COPY_SUPPORTED {
+            match MappedModel::open(&path) {
+                Err(MapError::Invalid(e)) => {
+                    assert!(format!("{e}").contains("CRC"), "{e}");
+                }
+                other => panic!("expected Invalid for corrupt file, got {other:?}"),
+            }
+        }
+        assert!(ServableModel::open_verified(&path, None).is_err());
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

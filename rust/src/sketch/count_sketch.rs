@@ -20,6 +20,39 @@ pub enum QueryMode {
     Mean,
 }
 
+/// The one QUERY estimator implementation, shared by [`CountSketch`] and
+/// the serving tier's mapped sketch view (`serve::snapshot`), so the two
+/// paths are bit-identical *structurally* — same hashes, same signed
+/// gathers, same `median_small` / mean reduction, in the same order.
+#[inline]
+pub fn query_kernel(
+    counters: &[f32],
+    rows: usize,
+    cols: usize,
+    family: &HashFamily,
+    mode: QueryMode,
+    i: u64,
+) -> f32 {
+    let mut hs = [(0u32, 0f32); 8];
+    family.hash_all(i, &mut hs[..rows]);
+    match mode {
+        QueryMode::Median => {
+            let mut buf = [0f32; 8];
+            for (j, &(b, s)) in hs[..rows].iter().enumerate() {
+                buf[j] = s * counters[j * cols + b as usize];
+            }
+            median_small(&mut buf[..rows])
+        }
+        QueryMode::Mean => {
+            let mut acc = 0.0f32;
+            for (j, &(b, s)) in hs[..rows].iter().enumerate() {
+                acc += s * counters[j * cols + b as usize];
+            }
+            acc / rows as f32
+        }
+    }
+}
+
 /// Count Sketch with `d` rows (hash functions) and `c` buckets per row.
 #[derive(Clone, Debug)]
 pub struct CountSketch {
@@ -92,24 +125,13 @@ impl CountSketch {
     /// QUERY(item i): estimate of the i-th coordinate.
     #[inline]
     pub fn query(&self, i: u64) -> f32 {
-        let mut hs = [(0u32, 0f32); 8];
-        self.family.hash_all(i, &mut hs[..self.rows]);
-        match self.mode {
-            QueryMode::Median => {
-                let mut buf = [0f32; 8];
-                for (j, &(b, s)) in hs[..self.rows].iter().enumerate() {
-                    buf[j] = s * self.data[j * self.cols + b as usize];
-                }
-                median_small(&mut buf[..self.rows])
-            }
-            QueryMode::Mean => {
-                let mut acc = 0.0f32;
-                for (j, &(b, s)) in hs[..self.rows].iter().enumerate() {
-                    acc += s * self.data[j * self.cols + b as usize];
-                }
-                acc / self.rows as f32
-            }
-        }
+        query_kernel(&self.data, self.rows, self.cols, &self.family, self.mode, i)
+    }
+
+    /// The hash family backing this sketch (serving snapshots rebuild an
+    /// identical family from the stored seed; tests compare the two).
+    pub fn family(&self) -> &HashFamily {
+        &self.family
     }
 
     /// Batched ADD over a sparse update (the Alg. 2 step-6 hot path:

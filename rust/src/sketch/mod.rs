@@ -6,7 +6,7 @@ pub mod count_min;
 pub mod count_sketch;
 
 pub use count_min::CountMinSketch;
-pub use count_sketch::{CountSketch, QueryMode};
+pub use count_sketch::{query_kernel, CountSketch, QueryMode};
 
 /// Common reporting interface so Table 1 / EXPERIMENTS.md can account the
 /// memory of every sketch uniformly.

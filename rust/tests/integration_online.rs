@@ -140,7 +140,7 @@ fn hot_reload_is_zero_drop_across_generations() {
         let model = snapshot(&trainer);
         publisher.publish(&model).unwrap();
         match handle.reload_now().expect("watch-manifest configured").unwrap() {
-            ReloadOutcome::Swapped { generation, drift } => {
+            ReloadOutcome::Swapped { generation, drift, .. } => {
                 assert_eq!(generation, expect_gen);
                 assert!((0.0..=1.0).contains(&drift.topk_jaccard));
             }

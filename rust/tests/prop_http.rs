@@ -11,7 +11,7 @@
 
 use bear::prop::{run, Gen};
 use bear::serve::http::{read_request, ReadError, MAX_BODY, MAX_LINE};
-use std::io::{Cursor, Read};
+use std::io::{BufReader, Cursor, Read};
 
 fn random_bytes(g: &mut Gen, max_len: usize) -> Vec<u8> {
     let n = g.usize_in(0, max_len + 1);
@@ -119,6 +119,87 @@ fn truncated_requests_fail_cleanly_not_partially() {
             ),
         }
     });
+}
+
+#[test]
+fn multibyte_utf8_survives_tiny_buffer_refills() {
+    run("UTF-8 straddling fill_buf seams stays intact", 64, |g: &mut Gen| {
+        const CHARS: [char; 6] = ['é', 'ß', '∂', 'π', '日', '🦀'];
+        let n = g.usize_in(1, 9);
+        let path: String = std::iter::once('/')
+            .chain((0..n).map(|_| CHARS[g.usize_in(0, CHARS.len())]))
+            .collect();
+        let bytes =
+            format!("GET {path} HTTP/1.1\r\nHost: x\r\nContent-Length: 0\r\n\r\n").into_bytes();
+        // a tiny BufReader capacity forces fill_buf to deliver 1–3 bytes
+        // at a time, so every multi-byte character straddles at least one
+        // refill seam — the regression this guards: per-chunk lossy UTF-8
+        // conversion turned each straddled char into U+FFFD pairs
+        let cap = g.usize_in(1, 4);
+        let mut r = BufReader::with_capacity(cap, Cursor::new(bytes));
+        let req = read_request(&mut r).expect("valid request").expect("not EOF");
+        assert_eq!(req.path, path, "UTF-8 mangled at buffer seams (capacity {cap})");
+    });
+}
+
+#[test]
+fn framing_headers_are_policed_against_desync() {
+    // any Transfer-Encoding ⇒ 400: this parser frames by Content-Length
+    // only, and a peer (or interposed proxy) framing by chunked encoding
+    // would treat body bytes as the next request on the keep-alive
+    // stream — classic request smuggling
+    for te in ["chunked", "identity", "gzip, chunked"] {
+        let wire = format!(
+            "POST /predict HTTP/1.1\r\nTransfer-Encoding: {te}\r\nContent-Length: 5\r\n\r\nhello"
+        );
+        match read_request(&mut Cursor::new(wire.into_bytes())) {
+            Err(ReadError::Bad { status, .. }) => assert_eq!(status, 400, "TE {te:?}"),
+            other => panic!(
+                "Transfer-Encoding {te:?} accepted: {:?}",
+                other.map(|_| "request").map_err(|e| e.to_string())
+            ),
+        }
+    }
+    // conflicting duplicate Content-Length ⇒ 400 (whichever value the
+    // parser picked, a peer believing the other is desynced)
+    run("conflicting duplicate Content-Length ⇒ 400", 64, |g: &mut Gen| {
+        let a = g.usize_in(0, 512);
+        let b = (a + 1 + g.usize_in(0, 512)) % 1024;
+        let wire = format!(
+            "POST /p HTTP/1.1\r\nContent-Length: {a}\r\nContent-Length: {b}\r\n\r\n"
+        );
+        match read_request(&mut Cursor::new(wire.into_bytes())) {
+            Err(ReadError::Bad { status, .. }) => assert_eq!(status, 400),
+            other => panic!(
+                "conflicting Content-Length {a}/{b} accepted: {:?}",
+                other.map(|_| "request").map_err(|e| e.to_string())
+            ),
+        }
+    });
+    // identical duplicates are tolerated per RFC 7230 §3.3.3 — the
+    // framing is unambiguous
+    let wire = b"POST /p HTTP/1.1\r\nContent-Length: 5\r\nContent-Length: 5\r\n\r\nhello";
+    let req = read_request(&mut Cursor::new(wire.to_vec())).unwrap().unwrap();
+    assert_eq!(req.body, b"hello");
+}
+
+#[test]
+fn eof_mid_line_is_a_transport_error_not_a_request() {
+    // clean EOF before any byte: a keep-alive peer closed — Ok(None)
+    assert!(matches!(read_request(&mut Cursor::new(Vec::new())), Ok(None)));
+    // EOF with bytes read but no line terminator: a truncated message.
+    // It must surface as a transport error (close silently) — the old
+    // parser served `"GET /x HTTP/1.1"` as a complete request line
+    for wire in [&b"G"[..], b"GET /x HTTP/1.1", b"GET /x HTTP/1.1\r\nHost: x"] {
+        match read_request(&mut Cursor::new(wire.to_vec())) {
+            Err(ReadError::Io(_)) => {}
+            other => panic!(
+                "EOF mid-line on {:?} gave {:?}",
+                String::from_utf8_lossy(wire),
+                other.map(|_| "request").map_err(|e| e.to_string())
+            ),
+        }
+    }
 }
 
 #[test]

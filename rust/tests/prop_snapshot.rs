@@ -5,9 +5,9 @@
 //! - round-trip encode → decode with identical predictions and header
 //!   fields,
 //! - be **rejected** when any single byte of the image is flipped — the
-//!   CRC-32 trailer covers the entire file (v3's shard header included),
-//!   so a corrupt publication can never be swapped into a serving
-//!   process, and
+//!   CRC-32 trailer covers the entire file (shard header and v4
+//!   alignment padding included), so a corrupt publication can never be
+//!   swapped into a serving process, and
 //! - stay readable across format history: a hand-written **v2** image
 //!   (no shard header) must load as shard 0 of 1 over the full feature
 //!   range with bit-identical predictions.
