@@ -114,6 +114,7 @@ fn main() {
             dataset: RealData::Rcv1,
             seed: 0x10AD,
             duration: None,
+            tenant: None,
         };
         let report = loadgen::run(&handle.addr().to_string(), &cfg).expect("loadgen run");
         stop.store(true, Ordering::Release);

@@ -88,6 +88,11 @@ pub struct BearClient {
     addrs: Vec<SocketAddr>,
     cfg: ClientConfig,
     pool: Mutex<Vec<Conn>>,
+    /// Model namespace for tenant-scoped calls (predict/topk/statz):
+    /// `Some(name)` sends `/v1/m/{name}/…` targets, `None` (the default)
+    /// sends the classic `/v1/*` paths — byte-identical to the
+    /// pre-tenant client.
+    tenant: Option<String>,
 }
 
 impl BearClient {
@@ -112,11 +117,11 @@ impl BearClient {
     /// address as a dial fallback.
     pub fn connect(addr: &str) -> Result<BearClient, ApiError> {
         let addrs = BearClient::resolve_all(addr)?;
-        Ok(BearClient { addrs, cfg: ClientConfig::default(), pool: Mutex::new(Vec::new()) })
+        Ok(BearClient { addrs, cfg: ClientConfig::default(), pool: Mutex::new(Vec::new()), tenant: None })
     }
 
     pub fn new(addr: SocketAddr, cfg: ClientConfig) -> BearClient {
-        BearClient { addrs: vec![addr], cfg, pool: Mutex::new(Vec::new()) }
+        BearClient { addrs: vec![addr], cfg, pool: Mutex::new(Vec::new()), tenant: None }
     }
 
     /// A client over a pre-resolved address list (what
@@ -124,7 +129,31 @@ impl BearClient {
     /// and build many clients keep the dial fallback.
     pub fn with_addrs(addrs: Vec<SocketAddr>, cfg: ClientConfig) -> BearClient {
         assert!(!addrs.is_empty(), "BearClient needs at least one address");
-        BearClient { addrs, cfg, pool: Mutex::new(Vec::new()) }
+        BearClient { addrs, cfg, pool: Mutex::new(Vec::new()), tenant: None }
+    }
+
+    /// Scope this client to one model of a multi-tenant server:
+    /// tenant-scoped calls (predict/topk/statz) go to `/v1/m/{name}/…`.
+    /// Non-scoped routes (healthz, admin, metricz, …) are server-global
+    /// and keep their plain paths. `None` restores default-tenant paths.
+    pub fn with_tenant(mut self, name: Option<String>) -> BearClient {
+        self.tenant = name;
+        self
+    }
+
+    /// The model namespace this client is scoped to, if any.
+    pub fn tenant(&self) -> Option<&str> {
+        self.tenant.as_deref()
+    }
+
+    /// The request target `route` travels on for this client — the
+    /// namespaced path when a tenant is set and the route is
+    /// tenant-scoped, the canonical `/v1` path otherwise.
+    pub fn target_for(&self, route: Route, query: Option<&str>) -> String {
+        match &self.tenant {
+            Some(name) if route.tenant_scoped() => route.tenant_target(name, query),
+            _ => route.target(query),
+        }
     }
 
     /// The primary (first-resolved) address.
@@ -326,7 +355,7 @@ impl BearClient {
     }
 
     fn call(&self, route: Route, query: Option<&str>, body: &[u8]) -> Result<String, ApiError> {
-        let target = route.target(query);
+        let target = self.target_for(route, query);
         Self::expect_200(self.exchange(route.method(), &target, body)?)
     }
 
@@ -385,8 +414,8 @@ impl BearClient {
         trace: Option<&TraceContext>,
     ) -> Result<(String, StageTimings), ApiError> {
         let route = Route::Predict;
-        let (resp, t) =
-            self.exchange_timed(route.method(), route.v1_path(), body.as_bytes(), trace)?;
+        let target = self.target_for(route, None);
+        let (resp, t) = self.exchange_timed(route.method(), &target, body.as_bytes(), trace)?;
         Ok((Self::expect_200(resp)?, t))
     }
 
@@ -414,6 +443,21 @@ mod tests {
         let l = BearClient::resolve("localhost:9").unwrap();
         assert_eq!(l.port(), 9);
         assert!(BearClient::resolve("not a host").is_err());
+    }
+
+    #[test]
+    fn tenant_scoped_clients_rewrite_read_side_targets_only() {
+        let addr: SocketAddr = "127.0.0.1:1".parse().unwrap();
+        let c = BearClient::new(addr, ClientConfig::default()).with_tenant(Some("dna".into()));
+        assert_eq!(c.tenant(), Some("dna"));
+        assert_eq!(c.target_for(Route::Predict, None), "/v1/m/dna/predict");
+        assert_eq!(c.target_for(Route::Topk, Some("k=3")), "/v1/m/dna/topk?k=3");
+        assert_eq!(c.target_for(Route::Statz, None), "/v1/m/dna/statz");
+        // server-global routes are never namespaced
+        assert_eq!(c.target_for(Route::Healthz, None), "/v1/healthz");
+        assert_eq!(c.target_for(Route::AdminReload, None), "/v1/admin/reload");
+        let c = c.with_tenant(None);
+        assert_eq!(c.target_for(Route::Predict, None), "/v1/predict");
     }
 
     #[test]

@@ -43,6 +43,22 @@ pub use types::{
 /// The API version prefix all canonical routes live under.
 pub const API_VERSION: &str = "v1";
 
+/// The multi-tenant namespace prefix: `/v1/m/{model}/predict|topk|statz`
+/// address one model of a multi-model server by name. Non-namespaced
+/// `/v1/*` paths and the legacy aliases keep resolving exactly as before
+/// (they address the *default* tenant), so the namespace layer is purely
+/// additive on the wire.
+pub const TENANT_PREFIX: &str = "/v1/m/";
+
+/// Model/tenant names valid in a `/v1/m/{model}/…` path segment and a
+/// `--tenants name=DIR` spec: 1–64 ASCII alphanumerics, `-`, `_`.
+/// (No `.` — keeps names trivially safe as path and label components.)
+pub fn valid_tenant_name(s: &str) -> bool {
+    !s.is_empty()
+        && s.len() <= 64
+        && s.bytes().all(|b| b.is_ascii_alphanumeric() || b == b'-' || b == b'_')
+}
+
 /// The serving route table: every endpoint the model server and the
 /// fleet balancer expose. One entry per endpoint — method, canonical
 /// `/v1` path, and the legacy alias — so route strings exist in exactly
@@ -136,6 +152,51 @@ impl Route {
             Some(q) if !q.is_empty() => format!("{}?{q}", self.v1_path()),
             _ => self.v1_path().to_string(),
         }
+    }
+
+    /// Whether this route answers under a `/v1/m/{model}/…` namespace.
+    /// The per-model surface is deliberately the read-side three —
+    /// predict, topk, statz; admin/control/fleet-internal routes stay
+    /// server-global.
+    pub fn tenant_scoped(self) -> bool {
+        matches!(self, Route::Predict | Route::Topk | Route::Statz)
+    }
+
+    /// Namespaced path addressing `model`: `/v1/m/{model}/predict` etc.
+    /// Only meaningful for [`Route::tenant_scoped`] routes.
+    pub fn tenant_path(self, model: &str) -> String {
+        let suffix = self.v1_path().strip_prefix("/v1").expect("v1 paths start with /v1");
+        format!("{TENANT_PREFIX}{model}{suffix}")
+    }
+
+    /// `path?query` request target on the namespaced path.
+    pub fn tenant_target(self, model: &str, query: Option<&str>) -> String {
+        match query {
+            Some(q) if !q.is_empty() => format!("{}?{q}", self.tenant_path(model)),
+            _ => self.tenant_path(model),
+        }
+    }
+
+    /// [`Route::resolve`] grown a tenant segment: a `/v1/m/{model}/…`
+    /// path yields `(route, Some(model))` for tenant-scoped routes; every
+    /// other path resolves exactly as [`Route::resolve`] always has and
+    /// yields `(route, None)` — the default tenant. The default path
+    /// allocates nothing and compares the same strings as before, which
+    /// is what keeps pre-tenant traffic byte-identical.
+    pub fn resolve_scoped<'p>(method: &str, path: &'p str) -> Option<(Route, Option<&'p str>)> {
+        if let Some(rest) = path.strip_prefix(TENANT_PREFIX) {
+            let (model, tail) = rest.split_once('/')?;
+            if !valid_tenant_name(model) {
+                return None;
+            }
+            let route = Route::ALL.iter().copied().find(|r| {
+                r.tenant_scoped()
+                    && r.method() == method
+                    && r.v1_path().strip_prefix("/v1/") == Some(tail)
+            })?;
+            return Some((route, Some(model)));
+        }
+        Route::resolve(method, path).map(|r| (r, None))
     }
 }
 
@@ -281,6 +342,53 @@ mod tests {
         assert_eq!(Route::resolve("GET", "/v1/tracez"), Some(Route::Tracez));
         assert_eq!(Route::resolve("GET", "/metricz"), None);
         assert_eq!(Route::resolve("GET", "/tracez"), None);
+    }
+
+    #[test]
+    fn scoped_resolution_is_additive_over_plain_resolution() {
+        // every pre-tenant request line resolves identically, to the
+        // default tenant
+        for r in Route::ALL {
+            assert_eq!(Route::resolve_scoped(r.method(), r.v1_path()), Some((r, None)));
+            if let Some(legacy) = r.legacy_path() {
+                assert_eq!(Route::resolve_scoped(r.method(), legacy), Some((r, None)));
+            }
+        }
+        assert_eq!(Route::resolve_scoped("GET", "/nope"), None);
+        // the namespaced surface is exactly predict|topk|statz
+        for r in Route::ALL {
+            let got = Route::resolve_scoped(r.method(), &r.tenant_path("alpha"));
+            if r.tenant_scoped() {
+                assert_eq!(got, Some((r, Some("alpha"))), "{r:?}");
+            } else {
+                assert_eq!(got, None, "{r:?} must not answer namespaced");
+            }
+        }
+        // wrong method, bad names, empty segments: 404
+        assert_eq!(Route::resolve_scoped("GET", "/v1/m/alpha/predict"), None);
+        assert_eq!(Route::resolve_scoped("POST", "/v1/m/alpha/topk"), None);
+        assert_eq!(Route::resolve_scoped("GET", "/v1/m//statz"), None);
+        assert_eq!(Route::resolve_scoped("GET", "/v1/m/a b/statz"), None);
+        assert_eq!(Route::resolve_scoped("GET", "/v1/m/../statz"), None);
+        assert_eq!(Route::resolve_scoped("GET", "/v1/m/alpha"), None);
+        assert_eq!(Route::resolve_scoped("POST", "/v1/m/alpha/admin/reload"), None);
+    }
+
+    #[test]
+    fn tenant_targets_round_trip_through_scoped_resolution() {
+        assert_eq!(Route::Predict.tenant_path("ctr"), "/v1/m/ctr/predict");
+        assert_eq!(Route::Topk.tenant_target("dna", Some("k=3")), "/v1/m/dna/topk?k=3");
+        assert_eq!(Route::Statz.tenant_target("dna", None), "/v1/m/dna/statz");
+        for r in [Route::Predict, Route::Topk, Route::Statz] {
+            let path = r.tenant_path("model-7_x");
+            assert_eq!(Route::resolve_scoped(r.method(), &path), Some((r, Some("model-7_x"))));
+        }
+        assert!(valid_tenant_name("a"));
+        assert!(valid_tenant_name("ctr-model_2"));
+        assert!(!valid_tenant_name(""));
+        assert!(!valid_tenant_name("a/b"));
+        assert!(!valid_tenant_name("a.b"));
+        assert!(!valid_tenant_name(&"x".repeat(65)));
     }
 
     #[test]

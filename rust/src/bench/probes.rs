@@ -13,6 +13,8 @@
 //! | `newton_bear_gap`  | BEAR-vs-exact-Newton success gap (Fig. 1A) | Δ success | lower  |
 //! | `bear_mission_edge`| BEAR-over-MISSION success edge at CF=2.4   | Δ success | higher |
 //! | `distributed_merge`| 4-worker sketch-merging training throughput| ex/s      | higher |
+//! | `rollout_gate`     | publish→eval-gate→promote latency; extras  | µs        | lower  |
+//! |                    | record per-tenant QPS on a 2-tenant server |           |        |
 //!
 //! `train_bear` vs `train_mission` is the paper's Table 4 runtime claim
 //! (sketched second-order cost per iteration vs the first-order MISSION
@@ -67,6 +69,7 @@ pub fn all_probes() -> Vec<Box<dyn Probe>> {
         Box::new(NewtonGapProbe::default()),
         Box::new(BearMissionEdgeProbe::default()),
         Box::new(DistributedMergeProbe::default()),
+        Box::new(RolloutGateProbe::default()),
     ]
 }
 
@@ -107,6 +110,7 @@ fn loadgen_cfg(ctx: &BenchCtx, probe: &str, threads: usize, window: Duration) ->
         dataset: RealData::Rcv1,
         seed: ctx.probe_seed(probe),
         duration: Some(window),
+        tenant: None,
     }
 }
 
@@ -811,5 +815,130 @@ impl Probe for DistributedMergeProbe {
                 ("merge_wall_us".into(), sn.merge_wall.as_secs_f64() * 1e6),
             ],
         })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Rollout gate latency + per-tenant serving QPS
+
+/// The registry write path's cost model: each sample publishes a fresh
+/// generation into a staging dir and times the controller's full verdict
+/// path — manifest read, snapshot CRC verify, paired held-out eval of
+/// candidate AND promoted baseline, and the atomic promote into the live
+/// dir. Extras record per-tenant QPS against a 2-tenant server (the
+/// namespace layer's cost on the read path) so tenant-dispatch
+/// regressions ride the same trajectory.
+#[derive(Default)]
+struct RolloutGateProbe {
+    handle: Option<ServerHandle>,
+    publisher: Option<Publisher>,
+    snapshot: Option<ServableModel>,
+    controller: Option<crate::rollout::RolloutController>,
+}
+
+impl Probe for RolloutGateProbe {
+    fn spec(&self) -> ProbeSpec {
+        ProbeSpec {
+            name: "rollout_gate",
+            unit: "us",
+            better: Better::Lower,
+            // dominated by the paired held-out eval (fixed example count)
+            // plus one snapshot read+CRC: same noise class as hot_reload
+            warn_pct: 30.0,
+            fail_pct: 100.0,
+            gate: true,
+            samples: Some(5),
+            warmup: Some(1),
+        }
+    }
+
+    fn prep(&mut self, ctx: &BenchCtx) -> Result<()> {
+        let dir = ctx.probe_scratch("rollout_gate")?;
+        let seed = ctx.probe_seed("rollout_gate");
+        let trained = train_serving_fixture(ctx.quick, seed);
+        let snapshot = ServableModel::from_sketched(trained.state(), LossKind::Logistic, 0.0);
+        let publisher = Publisher::new(&dir.join("staging"), 4)?;
+        let examples = if ctx.quick { 200 } else { 1_000 };
+        let rcfg = crate::rollout::RolloutConfig {
+            staging_manifest: publisher.manifest_path(),
+            live_dir: dir.join("live"),
+            eval: crate::rollout::EvalConfig { examples, tolerance: 0.05 },
+            keep: 4,
+            ..Default::default()
+        };
+        let stream = RealData::Rcv1.make(1, examples, seed ^ 0xE7A1).1;
+        self.controller = Some(crate::rollout::RolloutController::new(
+            rcfg,
+            crate::rollout::RolloutStats::new(),
+            stream,
+        ));
+        // a 2-tenant server over the same snapshot: the per-tenant QPS
+        // extras price the namespace dispatch layer, nothing else
+        let model = Arc::new(snapshot.clone());
+        let tenants = ["alpha", "beta"]
+            .iter()
+            .map(|n| crate::serve::TenantConfig {
+                name: n.to_string(),
+                model: model.clone(),
+                watch_manifest: None,
+            })
+            .collect();
+        self.handle =
+            Some(serve(model, ServerConfig { workers: 4, tenants, ..Default::default() })?);
+        self.publisher = Some(publisher);
+        self.snapshot = Some(snapshot);
+        Ok(())
+    }
+
+    fn sample(&mut self, ctx: &BenchCtx) -> Result<Sample> {
+        let publisher = self.publisher.as_mut().expect("prep ran");
+        let controller = self.controller.as_mut().expect("prep ran");
+        let publication = publisher.publish(self.snapshot.as_ref().expect("prep ran"))?;
+        let t = Instant::now();
+        let outcome = controller.poll()?;
+        let us = t.elapsed().as_secs_f64() * 1e6;
+        match outcome {
+            crate::rollout::RolloutOutcome::Promoted { generation }
+                if generation == publication.generation => {}
+            other => bail!(
+                "expected generation {} promoted, got {other:?}",
+                publication.generation
+            ),
+        }
+        // per-tenant read-path throughput on the 2-tenant server
+        let addr = self.handle.as_ref().expect("prep ran").addr().to_string();
+        let window = if ctx.quick { Duration::from_millis(200) } else { Duration::from_millis(500) };
+        let mut extra = vec![("snapshot_bytes".into(), publication.bytes as f64)];
+        for tenant in ["alpha", "beta"] {
+            let mut cfg = loadgen_cfg(ctx, "rollout_gate", 2, window);
+            cfg.tenant = Some(tenant.to_string());
+            let report = loadgen::run(&addr, &cfg)?;
+            if report.errors > 0 {
+                bail!("tenant {tenant} loadgen saw {} errors (zero-drop contract)", report.errors);
+            }
+            extra.push((format!("qps_tenant_{tenant}"), report.qps()));
+        }
+        Ok(Sample { value: us, extra })
+    }
+
+    fn post(&mut self, _ctx: &BenchCtx) -> Result<Vec<(String, f64)>> {
+        let mut extra = Vec::new();
+        if let Some(c) = self.controller.take() {
+            let stats = c.stats();
+            extra.push((
+                "evals".into(),
+                stats.evals.load(std::sync::atomic::Ordering::Relaxed) as f64,
+            ));
+            extra.push((
+                "gate_failures".into(),
+                stats.gate_failures.load(std::sync::atomic::Ordering::Relaxed) as f64,
+            ));
+        }
+        if let Some(h) = self.handle.take() {
+            h.shutdown();
+        }
+        self.publisher = None;
+        self.snapshot = None;
+        Ok(extra)
     }
 }

@@ -40,7 +40,7 @@ pub const SCHEMA_VERSION: u64 = 1;
 
 /// The PR this tree's committed baseline belongs to — names the default
 /// output file `BENCH_<pr>.json`.
-pub const CURRENT_PR: u64 = 9;
+pub const CURRENT_PR: u64 = 10;
 
 /// Default committed report filename for this tree.
 pub fn default_report_name() -> String {

@@ -159,6 +159,7 @@ fn build_registry(
     counters: &Arc<BalancerCounters>,
     backends: &Arc<Vec<Arc<BackendState>>>,
     target_generation: &Arc<AtomicU64>,
+    rollout: &Arc<crate::rollout::RolloutStats>,
     shards: usize,
     started: Instant,
 ) -> Registry {
@@ -213,6 +214,43 @@ fn build_registry(
                     .min()
                     .unwrap_or(0) as f64
             },
+        );
+    }
+    {
+        // rollout signals: the gate-failure counter is the alerting
+        // series; the canary gauges read 0 whenever no canary is active
+        let r = rollout.clone();
+        reg.counter(
+            "bear_rollout_gate_failures_total",
+            &[],
+            "candidate generations rejected by the rollout gate",
+            move || r.gate_failures.load(Ordering::Relaxed),
+        );
+        let r = rollout.clone();
+        reg.counter("bear_rollout_promotions_total", &[], "generations promoted", move || {
+            r.promotions.load(Ordering::Relaxed)
+        });
+        let r = rollout.clone();
+        reg.counter("bear_rollout_rollbacks_total", &[], "canaries rolled back", move || {
+            r.rollbacks.load(Ordering::Relaxed)
+        });
+        let r = rollout.clone();
+        reg.counter("bear_rollout_evals_total", &[], "held-out eval runs", move || {
+            r.evals.load(Ordering::Relaxed)
+        });
+        let r = rollout.clone();
+        reg.gauge(
+            "bear_rollout_canary_generation",
+            &[],
+            "generation in canary (0 = none)",
+            move || r.canary_generation_raw() as f64,
+        );
+        let r = rollout.clone();
+        reg.gauge(
+            "bear_rollout_canary_traffic_bp",
+            &[],
+            "canary traffic share in basis points of 10000",
+            move || r.canary_pct_bp_raw() as f64,
         );
     }
     for b in backends.iter() {
@@ -387,6 +425,10 @@ pub struct Balancer {
     /// Latest manifest generation the supervisor is rolling toward
     /// (0 without `--watch-manifest`). Reported on `/statz`.
     target_generation: Arc<AtomicU64>,
+    /// Rollout state written by the canary controller: routing split +
+    /// gate/promotion counters. All-zeros (the default) on fleets
+    /// without a rollout controller — routing is then unchanged.
+    rollout: Arc<crate::rollout::RolloutStats>,
     /// Feature-range shard count (1 ⇒ plain replica proxying; >1 ⇒
     /// `/predict` and `/topk` scatter-gather across one replica of every
     /// shard).
@@ -405,6 +447,7 @@ impl Balancer {
         cfg: BalancerConfig,
         backends: Arc<Vec<Arc<BackendState>>>,
         target_generation: Arc<AtomicU64>,
+        rollout: Arc<crate::rollout::RolloutStats>,
         shards: usize,
     ) -> Self {
         let client_cfg = ClientConfig {
@@ -420,6 +463,7 @@ impl Balancer {
             &counters,
             &backends,
             &target_generation,
+            &rollout,
             shards.max(1),
             started,
         );
@@ -431,6 +475,7 @@ impl Balancer {
             clients,
             counters,
             target_generation,
+            rollout,
             shards: shards.max(1),
             started,
             registry,
@@ -446,11 +491,16 @@ impl Balancer {
         self.counters.proxied_requests.fetch_add(1, Ordering::Relaxed);
         let n = self.backends.len();
         let mut excluded = vec![false; n];
+        // deterministic canary split: while a canary generation is live,
+        // the trace-id bucket decides which side of the split this
+        // request belongs to — the same trace always lands on the same
+        // side, so a client's retries and a test's assertions are stable
+        let canary = (self.shards == 1).then(|| self.rollout.canary()).flatten();
         for attempt in 0..self.cfg.max_attempts.max(1) {
             if attempt > 0 {
                 self.counters.proxy_retries.fetch_add(1, Ordering::Relaxed);
             }
-            let i = match self.picker.pick(rng, &excluded) {
+            let i = match self.pick_routed(rng, &excluded, canary, trace.trace_id) {
                 Some(i) => i,
                 None => {
                     // nothing pickable: forget this request's failures,
@@ -502,6 +552,33 @@ impl Balancer {
         }
         self.counters.rejected_503.fetch_add(1, Ordering::Relaxed);
         (503, b"no healthy backend\n".to_vec())
+    }
+
+    /// Choose a backend for one proxied request. With a canary active,
+    /// the request's trace-id bucket decides its side of the split; with
+    /// no backend available on the preferred side, availability beats
+    /// the split and any healthy backend answers.
+    fn pick_routed(
+        &self,
+        rng: &mut Pcg64,
+        excluded: &[bool],
+        canary: Option<(u64, u64)>,
+        trace_id: u64,
+    ) -> Option<usize> {
+        match canary {
+            Some((cgen, pct_bp)) => {
+                let on_canary =
+                    |b: &BackendState| b.scraped_generation.load(Ordering::Relaxed) >= cgen;
+                let wants_canary = trace_id % crate::rollout::CANARY_BP_SCALE < pct_bp;
+                let preferred = if wants_canary {
+                    self.picker.pick_where(rng, excluded, on_canary)
+                } else {
+                    self.picker.pick_where(rng, excluded, |b| !on_canary(b))
+                };
+                preferred.or_else(|| self.picker.pick(rng, excluded))
+            }
+            None => self.picker.pick(rng, excluded),
+        }
     }
 
     /// One replica of every shard plus the generation the fan-out is
@@ -905,6 +982,12 @@ impl Balancer {
             .min()
             .unwrap_or(0);
         kv(&mut out, "fleet_consistent_generation", consistent);
+        kv(&mut out, "rollout_gate_failures", self.rollout.gate_failures.load(Ordering::Relaxed));
+        kv(&mut out, "rollout_promotions", self.rollout.promotions.load(Ordering::Relaxed));
+        kv(&mut out, "rollout_rollbacks", self.rollout.rollbacks.load(Ordering::Relaxed));
+        kv(&mut out, "rollout_evals", self.rollout.evals.load(Ordering::Relaxed));
+        kv(&mut out, "rollout_canary_generation", self.rollout.canary_generation_raw());
+        kv(&mut out, "rollout_canary_pct_bp", self.rollout.canary_pct_bp_raw());
         kv(&mut out, "scatter_conflicts", c.scatter_conflicts.load(Ordering::Relaxed));
         kv(&mut out, "connections", c.connections.load(Ordering::Relaxed));
         kv(&mut out, "requests_total", c.requests_total.load(Ordering::Relaxed));
@@ -996,22 +1079,40 @@ impl Balancer {
         phases: &mut [u64; MAX_PHASES],
     ) -> (u16, Vec<u8>, bool) {
         self.counters.requests_total.fetch_add(1, Ordering::Relaxed);
-        match Route::resolve(&req.method, &req.path) {
-            Some(Route::Predict) if self.shards > 1 => {
+        let (route, tenant) = match Route::resolve_scoped(&req.method, &req.path) {
+            Some(rt) => rt,
+            None => {
+                self.counters.not_found.fetch_add(1, Ordering::Relaxed);
+                let body = format!("no route {} {}\n", req.method, req.path).into_bytes();
+                return (404, body, req.keep_alive);
+            }
+        };
+        if tenant.is_some() {
+            // tenant-scoped reads (/v1/m/{model}/predict|topk|statz)
+            // relay the client's original target: the workers resolve
+            // the namespace themselves. Tenant models are unsharded, so
+            // there is no scatter path here.
+            let t = Instant::now();
+            let (status, body) = self.proxy(rng, req, trace);
+            phases[1] = clamp_us(t.elapsed());
+            return (status, body, req.keep_alive);
+        }
+        match route {
+            Route::Predict if self.shards > 1 => {
                 let (status, body) = self.scatter_predict(rng, req, trace, phases);
                 (status, body, req.keep_alive)
             }
-            Some(Route::Topk) if self.shards > 1 => {
+            Route::Topk if self.shards > 1 => {
                 let (status, body) = self.scatter_topk(rng, req, trace, phases);
                 (status, body, req.keep_alive)
             }
-            Some(Route::Predict) | Some(Route::Topk) => {
+            Route::Predict | Route::Topk => {
                 let t = Instant::now();
                 let (status, body) = self.proxy(rng, req, trace);
                 phases[1] = clamp_us(t.elapsed());
                 (status, body, req.keep_alive)
             }
-            Some(Route::Healthz) => {
+            Route::Healthz => {
                 self.counters.health_requests.fetch_add(1, Ordering::Relaxed);
                 // a sharded fleet is serviceable only when EVERY feature
                 // range has a healthy replica — one covered shard cannot
@@ -1024,14 +1125,14 @@ impl Balancer {
                     (503, b"no healthy backend\n".to_vec(), req.keep_alive)
                 }
             }
-            Some(Route::Statz) => {
+            Route::Statz => {
                 self.counters.statz_requests.fetch_add(1, Ordering::Relaxed);
                 (200, self.render_statz().into_bytes(), req.keep_alive)
             }
-            Some(Route::Metricz) => {
+            Route::Metricz => {
                 (200, self.registry.render().into_bytes(), req.keep_alive)
             }
-            Some(Route::Tracez) => {
+            Route::Tracez => {
                 let q = req.query.as_deref();
                 let min_us =
                     query_param(q, "min_us").and_then(|v| v.parse::<u64>().ok()).unwrap_or(0);
@@ -1040,6 +1141,7 @@ impl Balancer {
                 (200, self.render_tracez(min_us, limit).into_bytes(), req.keep_alive)
             }
             _ => {
+                // /shard/weights and /admin/reload are worker-internal
                 self.counters.not_found.fetch_add(1, Ordering::Relaxed);
                 let body = format!("no route {} {}\n", req.method, req.path).into_bytes();
                 (404, body, req.keep_alive)
@@ -1078,8 +1180,8 @@ impl Balancer {
                             .is_ok();
                     if self.recorder.is_enabled() {
                         phases[4] = clamp_us(t_write.elapsed());
-                        let route = Route::resolve(&req.method, &req.path)
-                            .map(route_index)
+                        let route = Route::resolve_scoped(&req.method, &req.path)
+                            .map(|(r, _)| route_index(r))
                             .unwrap_or(ROUTE_OTHER);
                         self.recorder.record(&SpanRecord {
                             trace_id: trace.trace_id,
@@ -1390,8 +1492,13 @@ mod tests {
             connect_timeout: Duration::from_millis(100),
             ..Default::default()
         };
-        let balancer =
-            Balancer::new(cfg, backends.clone(), Arc::new(AtomicU64::new(0)), 1);
+        let balancer = Balancer::new(
+            cfg,
+            backends.clone(),
+            Arc::new(AtomicU64::new(0)),
+            crate::rollout::RolloutStats::new(),
+            1,
+        );
         let req = Request {
             method: Route::Predict.method().into(),
             path: Route::Predict.v1_path().into(),
@@ -1408,5 +1515,56 @@ mod tests {
         assert!(balancer.counters.rejected_503.load(Ordering::Relaxed) >= 1);
         // the dead backends were ejected by the failed forwards
         assert!(backends.iter().all(|b| !b.healthy()));
+    }
+
+    #[test]
+    fn canary_routing_splits_by_trace_id_bucket() {
+        let backends = mk_backends(3);
+        for b in backends.iter() {
+            admit(b);
+        }
+        // backend 2 is the canary: the prober has scraped it at gen 5
+        backends[2].scraped_generation.store(5, Ordering::Relaxed);
+        backends[0].scraped_generation.store(4, Ordering::Relaxed);
+        backends[1].scraped_generation.store(4, Ordering::Relaxed);
+        let rollout = crate::rollout::RolloutStats::new();
+        let balancer = Balancer::new(
+            BalancerConfig::default(),
+            backends.clone(),
+            Arc::new(AtomicU64::new(0)),
+            rollout.clone(),
+            1,
+        );
+        let mut rng = Pcg64::new(17);
+        let excluded = vec![false; 3];
+
+        // no canary announced: every backend gets sampled
+        let mut seen = [false; 3];
+        for t in 0..600u64 {
+            let i = balancer.pick_routed(&mut rng, &excluded, None, t).unwrap();
+            seen[i] = true;
+        }
+        assert_eq!(seen, [true; 3]);
+
+        // 30% canary at gen 5: low buckets pin to backend 2, high buckets
+        // never touch it — and the same trace id always lands on the same
+        // side (deterministic split)
+        let canary = Some((5u64, 3000u64));
+        for t in 0..600u64 {
+            let i = balancer.pick_routed(&mut rng, &excluded, canary, t).unwrap();
+            if t % crate::rollout::CANARY_BP_SCALE < 3000 {
+                assert_eq!(i, 2, "canary-bucket trace {t} missed the canary");
+            } else {
+                assert_ne!(i, 2, "stable-bucket trace {t} hit the canary");
+            }
+        }
+
+        // availability beats the split: with the canary ejected, canary
+        // buckets still get an answer from the stable side
+        backends[2].eject_now();
+        for t in 0..100u64 {
+            let i = balancer.pick_routed(&mut rng, &excluded, canary, t).unwrap();
+            assert_ne!(i, 2);
+        }
     }
 }

@@ -115,6 +115,11 @@ pub struct FleetConfig {
     pub monitor_interval: Duration,
     /// Balancer tunables (its `addr` is overridden by `addr` above).
     pub balancer: BalancerConfig,
+    /// Extra tenant namespaces (`--tenants a=DIR_A,b=DIR_B`) passed
+    /// through to every worker; the supervisor watches each tenant's
+    /// manifest and re-walks the rolling reload when any of them
+    /// publishes. Tenant models must be unsharded.
+    pub tenants: Vec<crate::rollout::TenantSpec>,
 }
 
 impl Default for FleetConfig {
@@ -135,6 +140,7 @@ impl Default for FleetConfig {
             probe: ProbeConfig::default(),
             monitor_interval: Duration::from_millis(100),
             balancer: BalancerConfig::default(),
+            tenants: Vec::new(),
         }
     }
 }
@@ -160,6 +166,7 @@ pub struct FleetHandle {
     balancer: Option<BalancerHandle>,
     supervisor: Arc<Supervisor>,
     backends: Arc<Vec<Arc<BackendState>>>,
+    rollout: Arc<crate::rollout::RolloutStats>,
     shutdown: Arc<AtomicBool>,
     prober: Option<JoinHandle<()>>,
     monitor: Option<JoinHandle<()>>,
@@ -197,6 +204,25 @@ impl FleetHandle {
     /// injection for the chaos tests.
     pub fn kill_backend(&self, index: usize) -> Result<()> {
         self.supervisor.kill_backend(index)
+    }
+
+    /// The shared rollout state the balancer exports on `/statz` and
+    /// `/v1/metricz` and reads for canary routing.
+    pub fn rollout_stats(&self) -> Arc<crate::rollout::RolloutStats> {
+        self.rollout.clone()
+    }
+
+    /// Hooks a [`crate::rollout::RolloutController`] needs to drive a
+    /// canary through this fleet: the supervisor's roll clamp, the
+    /// backend states, and process-replacement rollback.
+    pub fn canary_hooks(&self) -> crate::rollout::CanaryHooks {
+        let sup = self.supervisor.clone();
+        crate::rollout::CanaryHooks {
+            roll_limit: self.supervisor.roll_limit(),
+            backends: self.backends.clone(),
+            admin_timeout: Duration::from_secs(5),
+            kill_backend: Arc::new(move |i| sup.kill_backend(i)),
+        }
     }
 
     /// Block until every backend is healthy (readiness gate). Returns
@@ -327,6 +353,7 @@ pub fn start_fleet(cfg: FleetConfig) -> Result<FleetHandle> {
             serve_workers,
             log_dir: log_dir.clone(),
             admin_timeout: Duration::from_secs(5),
+            tenants: cfg.tenants.clone(),
         },
         backends.clone(),
         n_local,
@@ -376,8 +403,14 @@ pub fn start_fleet(cfg: FleetConfig) -> Result<FleetHandle> {
 
     let mut bal_cfg = cfg.balancer.clone();
     bal_cfg.addr = cfg.addr.clone();
-    let balancer =
-        Arc::new(Balancer::new(bal_cfg, backends.clone(), target_generation, shards));
+    let rollout = crate::rollout::RolloutStats::new();
+    let balancer = Arc::new(Balancer::new(
+        bal_cfg,
+        backends.clone(),
+        target_generation,
+        rollout.clone(),
+        shards,
+    ));
     let handle = match balancer::start_balancer(balancer, shutdown.clone()) {
         Ok(h) => h,
         Err(e) => {
@@ -409,6 +442,7 @@ pub fn start_fleet(cfg: FleetConfig) -> Result<FleetHandle> {
         balancer: Some(handle),
         supervisor,
         backends,
+        rollout,
         shutdown,
         prober: Some(prober),
         monitor: Some(monitor),

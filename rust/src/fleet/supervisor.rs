@@ -60,6 +60,12 @@ pub struct WorkerSpec {
     pub log_dir: PathBuf,
     /// Deadline for control-plane calls (`/admin/reload`).
     pub admin_timeout: Duration,
+    /// Extra tenant namespaces, passed through to every worker as
+    /// `--tenants name=PATH,…`. The supervisor watches each tenant's
+    /// manifest too: a tenant publication advancing re-arms the same
+    /// sequential rolling-reload walk (one worker's `/admin/reload`
+    /// reloads every namespace it hosts).
+    pub tenants: Vec<crate::rollout::TenantSpec>,
 }
 
 /// One backend's process slot: the live child plus the crash-loop
@@ -104,6 +110,14 @@ pub struct Supervisor {
     children: Mutex<Vec<WorkerSlot>>,
     /// Latest manifest generation the fleet is rolling toward.
     target_generation: Arc<AtomicU64>,
+    /// Rolling-reload clamp: how many backends one pass may bring to the
+    /// target generation (`u64::MAX` = unlimited). The rollout
+    /// controller's canary phase clamps this to 1 so a fresh generation
+    /// reaches exactly one worker until the canary gate passes.
+    roll_limit: Arc<AtomicU64>,
+    /// Sum of tenant-manifest generations seen by the last rolling pass
+    /// (the tenant-publication roll trigger).
+    tenant_stamp: AtomicU64,
 }
 
 /// Resolve the snapshot a (re)spawned worker for `shard` should load:
@@ -228,7 +242,20 @@ impl Supervisor {
                 reload_retry_at: now,
             })
             .collect();
-        Ok(Self { spec, backends, children: Mutex::new(children), target_generation })
+        Ok(Self {
+            spec,
+            backends,
+            children: Mutex::new(children),
+            target_generation,
+            roll_limit: Arc::new(AtomicU64::new(u64::MAX)),
+            tenant_stamp: AtomicU64::new(0),
+        })
+    }
+
+    /// The rolling-reload clamp, shared with the rollout controller's
+    /// canary phase ([`crate::rollout::CanaryHooks`]).
+    pub fn roll_limit(&self) -> Arc<AtomicU64> {
+        self.roll_limit.clone()
     }
 
     /// Spawn one worker process on its backend's port, serving its
@@ -254,6 +281,16 @@ impl Supervisor {
             // reload machinery on, own poller parked: the supervisor
             // sequences generation rolls via POST /admin/reload
             cmd.arg("--watch-manifest").arg(m).arg("--poll-ms").arg("3600000");
+        }
+        if !self.spec.tenants.is_empty() {
+            let arg = self
+                .spec
+                .tenants
+                .iter()
+                .map(|t| format!("{}={}", t.name, t.path.display()))
+                .collect::<Vec<_>>()
+                .join(",");
+            cmd.arg("--tenants").arg(arg);
         }
         cmd.stdin(Stdio::null()).stdout(Stdio::from(out)).stderr(Stdio::from(err));
         let child = cmd
@@ -410,6 +447,28 @@ impl Supervisor {
             // nothing published yet (or mid-write); the next pass retries
             None => return,
         };
+        // tenant publications ride the same sequential walk: one
+        // /admin/reload kick reloads EVERY namespace a worker hosts, so
+        // when any tenant manifest advances, clear the acks and re-walk
+        // the fleet one worker at a time
+        if !self.spec.tenants.is_empty() {
+            let stamp: u64 = self
+                .spec
+                .tenants
+                .iter()
+                .filter_map(|t| t.watch_manifest())
+                .filter_map(|m| crate::online::peek_generation(&m))
+                .sum();
+            if stamp != self.tenant_stamp.swap(stamp, Ordering::Relaxed) {
+                log(
+                    Level::Info,
+                    format_args!("fleet rolling tenant publications (stamp {stamp})"),
+                );
+                for b in self.backends.iter() {
+                    b.acked_generation.store(0, Ordering::Relaxed);
+                }
+            }
+        }
         let previous = self.target_generation.swap(generation, Ordering::Relaxed);
         if generation > previous {
             log(
@@ -419,7 +478,18 @@ impl Supervisor {
                 ),
             );
         }
+        // the canary clamp: count backends already confirmed at the
+        // target and stop kicking new ones once the limit is reached
+        let limit = self.roll_limit.load(Ordering::Relaxed);
+        let mut at_target = self
+            .backends
+            .iter()
+            .filter(|b| b.acked_generation.load(Ordering::Relaxed) >= generation)
+            .count() as u64;
         for (i, b) in self.backends.iter().enumerate() {
+            if at_target >= limit {
+                break;
+            }
             if !b.healthy() || b.acked_generation.load(Ordering::Relaxed) >= generation {
                 continue;
             }
@@ -456,6 +526,7 @@ impl Supervisor {
                     if reported >= generation {
                         b.acked_generation.store(generation, Ordering::Relaxed);
                         children[i].reload_fail_streak = 0;
+                        at_target += 1;
                     } else {
                         children[i].reload_fail_streak += 1;
                         let streak = children[i].reload_fail_streak;
@@ -546,6 +617,7 @@ mod tests {
             serve_workers: 1,
             log_dir: dir.clone(),
             admin_timeout: Duration::from_millis(100),
+            tenants: Vec::new(),
         };
 
         // no manifest on disk → fallback model
@@ -610,6 +682,7 @@ mod tests {
             serve_workers: 1,
             log_dir: dir.clone(),
             admin_timeout: Duration::from_millis(100),
+            tenants: Vec::new(),
         };
         // shard 1's publication exists → resolved from the manifest
         assert_eq!(resolve_model(&spec, 1).unwrap(), shard1);

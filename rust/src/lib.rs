@@ -53,6 +53,13 @@
 //!   exposition format), and per-generation training telemetry
 //!   (collision rate, heavy-hitter churn, curvature conditioning)
 //!   published via the MANIFEST
+//! - rollouts: [`rollout`] — the multi-tenant model registry and
+//!   eval-gated rollout controller: tenant namespaces (`/v1/m/{model}/…`)
+//!   backed by per-tenant publication roots, an online-eval sidecar
+//!   scoring each new generation against the promoted baseline on a
+//!   held-out stream slice, and a canary state machine (eval → canary →
+//!   promote | rollback) driven through the fleet's rolling-reload path
+//!   (`bear rollout` / `bear fleet --rollout-staging`)
 //! - performance: [`bench`] — the `bear bench` harness: a phased
 //!   preflight → prep → warmup → sample → post runner over a probe
 //!   catalog spanning every tier (Count Sketch micro-probes, training
@@ -89,6 +96,7 @@ pub mod obs;
 pub mod online;
 pub mod optim;
 pub mod prop;
+pub mod rollout;
 pub mod runtime;
 pub mod serve;
 pub mod sketch;

@@ -11,7 +11,11 @@
 //!               hot-reloading publications with --watch-manifest
 //!   fleet       N shared-nothing serve processes behind a balancer
 //!               (power-of-two-choices, health probes, rolling reload,
-//!               --join for externally-launched multi-host workers)
+//!               --join for externally-launched multi-host workers,
+//!               --tenants for extra model namespaces,
+//!               --rollout-staging for eval-gated canary rollouts)
+//!   rollout     standalone eval-gated registry promotion: staging
+//!               MANIFEST -> held-out eval gate -> live dir
 //!   loadgen     closed-loop load test against a running server (traced
 //!               requests + per-stage client latency breakdown)
 //!   obs         observability helpers (`obs tail` follows /v1/tracez)
@@ -338,6 +342,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
         watch_manifest: args.get("watch-manifest").map(std::path::PathBuf::from),
         poll_interval: std::time::Duration::from_millis(args.parse_or("poll-ms", 250u64)?),
         trace_capacity: args.parse_or("trace-capacity", defaults.trace_capacity)?,
+        tenants: match args.get("tenants") {
+            Some(list) => bear::rollout::parse_tenant_specs(list)?
+                .iter()
+                .map(|s| s.to_tenant_config())
+                .collect::<Result<Vec<_>>>()?,
+            None => Vec::new(),
+        },
         ..defaults
     };
     // fleet workers are spawned with --parent-pid: exit if the
@@ -347,6 +358,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     let workers = cfg.workers;
     let watching = cfg.watch_manifest.clone();
+    let tenant_names: Vec<String> = cfg.tenants.iter().map(|t| t.name.clone()).collect();
     let handle = bear::serve::serve(model.clone(), cfg)?;
     if model.shard_count() > 1 {
         let (lo, hi) = model.shard_range();
@@ -374,6 +386,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
             m.display()
         ),
         None => eprintln!("[bear] hot-reload off (pass --watch-manifest DIR/MANIFEST to enable)"),
+    }
+    if !tenant_names.is_empty() {
+        eprintln!(
+            "[bear] tenants: {} (each on /v1/m/{{name}}/predict|topk|statz; default model stays on /v1/*)",
+            tenant_names.join(", ")
+        );
     }
     // the endpoint banner comes from the one route table, so it can
     // never drift from what the server actually mounts
@@ -429,6 +447,10 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         probe,
         monitor_interval: std::time::Duration::from_millis(args.parse_or("monitor-ms", 100u64)?),
         balancer,
+        tenants: match args.get("tenants") {
+            Some(list) => bear::rollout::parse_tenant_specs(list)?,
+            None => Vec::new(),
+        },
     };
     // a pure --join frontend spawns nothing locally, so it needs no
     // snapshot of its own; any locally-spawned worker does
@@ -437,6 +459,7 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     }
     let (backends, joined) = (cfg.backends, cfg.join.len());
     let watching = cfg.watch_manifest.clone();
+    let tenant_names: Vec<String> = cfg.tenants.iter().map(|t| t.name.clone()).collect();
     let handle = bear::fleet::start_fleet(cfg)?;
     eprintln!(
         "[bear] fleet: balancer on http://{} over {} shared-nothing workers ({backends} local, {joined} joined) / {shards} feature-range shard(s) ({}), logs in {}",
@@ -450,12 +473,73 @@ fn cmd_fleet(args: &Args) -> Result<()> {
             .join(","),
         handle.log_dir().display(),
     );
-    match watching {
+    match &watching {
         Some(m) => eprintln!(
             "[bear] rolling reload armed: watching {} (one worker at a time)",
             m.display()
         ),
         None => eprintln!("[bear] rolling reload off (pass --watch-manifest DIR/MANIFEST)"),
+    }
+    if !tenant_names.is_empty() {
+        eprintln!(
+            "[bear] tenants: {} (namespaced /v1/m/{{name}}/* proxied to workers; tenant manifests re-arm the roll)",
+            tenant_names.join(", ")
+        );
+    }
+    // --rollout-staging arms the eval-gated canary controller inside this
+    // process: the trainer publishes into STAGING, the controller gates
+    // each generation and promotes survivors into the watched live dir
+    if let Some(staging) = args.get("rollout-staging") {
+        let live = match &watching {
+            Some(m) => m
+                .parent()
+                .map(|p| p.to_path_buf())
+                .ok_or_else(|| anyhow::anyhow!("--watch-manifest has no parent directory"))?,
+            None => bail!("--rollout-staging needs --watch-manifest DIR/MANIFEST (the live dir the fleet watches)"),
+        };
+        let staging = std::path::PathBuf::from(staging);
+        let staging_manifest = if staging.is_dir() {
+            staging.join(bear::online::MANIFEST_FILE)
+        } else {
+            staging
+        };
+        let defaults = bear::rollout::RolloutConfig::default();
+        let rcfg = bear::rollout::RolloutConfig {
+            staging_manifest,
+            live_dir: live,
+            eval: bear::rollout::EvalConfig {
+                examples: args.parse_or("eval-n", defaults.eval.examples)?,
+                tolerance: args.parse_or("tolerance", defaults.eval.tolerance)?,
+            },
+            canary_pct_bp: (args.parse_or("canary-pct", 10.0f64)? * 100.0) as u64,
+            ..defaults
+        };
+        let eval_dataset = parse_dataset(&args.str_or("dataset", "rcv1"))?;
+        let seed: u64 = args.parse_or("seed", 0xE7A1u64)?;
+        let stream = eval_dataset.make(1, rcfg.eval.examples.max(1), seed).1;
+        let poll = std::time::Duration::from_millis(args.parse_or("rollout-poll-ms", 500u64)?);
+        eprintln!(
+            "[bear] rollout controller armed: staging {} -> live {} (eval {} examples, tol {}, canary {} bp)",
+            rcfg.staging_manifest.display(),
+            rcfg.live_dir.display(),
+            rcfg.eval.examples,
+            rcfg.eval.tolerance,
+            rcfg.canary_pct_bp,
+        );
+        let mut ctl = bear::rollout::RolloutController::new(
+            rcfg,
+            handle.rollout_stats(),
+            stream,
+        )
+        .with_canary(handle.canary_hooks());
+        std::thread::Builder::new()
+            .name("bear-rollout".into())
+            .spawn(move || {
+                // runs for the life of the fleet process
+                let shutdown = std::sync::atomic::AtomicBool::new(false);
+                ctl.run_loop(poll, &shutdown);
+            })
+            .expect("spawn rollout controller thread");
     }
     let routes: Vec<String> = [
         bear::api::Route::Predict,
@@ -476,6 +560,64 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `bear rollout` — the standalone (fleet-less) registry controller:
+/// watch a staging publication, eval-gate each new generation against the
+/// promoted baseline on a held-out stream slice, and promote survivors
+/// into the live registry directory that `bear serve --watch-manifest` /
+/// `bear fleet` consume. Without a fleet there is no canary phase —
+/// promotion is gate-then-swing.
+fn cmd_rollout(args: &Args) -> Result<()> {
+    let staging = std::path::PathBuf::from(
+        args.get("staging")
+            .ok_or_else(|| anyhow::anyhow!("--staging DIR (or DIR/MANIFEST) required"))?,
+    );
+    let live = std::path::PathBuf::from(
+        args.get("live").ok_or_else(|| anyhow::anyhow!("--live DIR required"))?,
+    );
+    let staging_manifest = if staging.is_dir() {
+        staging.join(bear::online::MANIFEST_FILE)
+    } else {
+        staging
+    };
+    let defaults = bear::rollout::RolloutConfig::default();
+    let cfg = bear::rollout::RolloutConfig {
+        staging_manifest,
+        live_dir: live,
+        eval: bear::rollout::EvalConfig {
+            examples: args.parse_or("eval-n", defaults.eval.examples)?,
+            tolerance: args.parse_or("tolerance", defaults.eval.tolerance)?,
+        },
+        keep: args.parse_or("keep", defaults.keep)?,
+        ..defaults
+    };
+    let dataset = parse_dataset(&args.str_or("dataset", "rcv1"))?;
+    let seed: u64 = args.parse_or("seed", 0xE7A1u64)?;
+    let stream = dataset.make(1, cfg.eval.examples.max(1), seed).1;
+    let poll = std::time::Duration::from_millis(args.parse_or("poll-ms", 500u64)?);
+    let stats = bear::rollout::RolloutStats::new();
+    eprintln!(
+        "[bear] rollout controller: staging {} -> live {} (held-out {} x{}, tolerance {})",
+        cfg.staging_manifest.display(),
+        cfg.live_dir.display(),
+        dataset.label(),
+        cfg.eval.examples,
+        cfg.eval.tolerance,
+    );
+    let mut ctl = bear::rollout::RolloutController::new(cfg, stats.clone(), stream);
+    if args.flag("once") {
+        let outcome = ctl.poll()?;
+        println!("{outcome:?}");
+        let failures = stats.gate_failures.load(std::sync::atomic::Ordering::Relaxed);
+        if failures > 0 {
+            std::process::exit(1);
+        }
+        return Ok(());
+    }
+    let shutdown = std::sync::atomic::AtomicBool::new(false);
+    ctl.run_loop(poll, &shutdown);
+    Ok(())
+}
+
 fn cmd_loadgen(args: &Args) -> Result<()> {
     let addr = args.str_or("addr", "127.0.0.1:8370");
     let defaults = bear::serve::LoadgenConfig::default();
@@ -492,6 +634,7 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         queries_per_request: args.parse_or("queries", defaults.queries_per_request)?,
         seed: args.parse_or("seed", defaults.seed)?,
         duration,
+        tenant: args.get("tenant").map(String::from),
     };
     let max_error_rate: f64 = args.parse_or("max-error-rate", 0.0)?;
     let report = bear::serve::loadgen::run(&addr, &cfg)?;
@@ -666,6 +809,11 @@ commands:
               --model FILE [--addr H:P] [--workers N] [--queue-depth N]
               [--max-batch Q] [--batch-wait-us U]
               [--watch-manifest DIR/MANIFEST] [--poll-ms MS]
+              [--tenants a=DIR_A,b=DIR_B]
+                              (extra model namespaces on
+                               /v1/m/{name}/predict|topk|statz, each with
+                               its own hot-reload watch; /v1/* stays the
+                               default model, byte-identical)
               [--trace-capacity N]  (spans kept per worker; 0 disables)
               [--parent-pid P]   (exit when process P dies; set by fleet)
   fleet       shared-nothing multi-process serving tier behind a balancer
@@ -682,11 +830,30 @@ commands:
               [--serve-workers N] [--balancer-workers N]
               [--max-attempts N] [--probe-ms MS] [--monitor-ms MS]
               [--trace-capacity N] [--log-dir DIR]
+              [--tenants a=DIR_A,b=DIR_B]
+                              (extra namespaces, passed to every worker;
+                               tenant publications roll the fleet one
+                               worker at a time like the default model)
+              [--rollout-staging DIR]
+                              (arm the eval-gated canary controller:
+                               gate each staged generation, canary it to
+                               --canary-pct % of traffic on one worker,
+                               then promote into the --watch-manifest
+                               dir or roll back; see `bear rollout`)
+              [--canary-pct PCT] [--eval-n N] [--tolerance T]
+              [--rollout-poll-ms MS] [--dataset D] [--seed S]
+  rollout     standalone eval-gated registry promotion (no fleet): watch
+              a staging publication, score each new generation vs the
+              promoted baseline on a held-out slice, promote survivors
+              --staging DIR --live DIR [--dataset D] [--eval-n N]
+              [--tolerance T] [--keep G] [--poll-ms MS] [--seed S]
+              [--once]    (single gate pass; exit 1 on a gate failure)
   loadgen     closed-loop load test against a running server; every
               request carries a fresh x-bear-trace and the report adds a
               per-stage (connect/send/first-byte) latency breakdown
               --addr H:P [--dataset D] [--threads N] [--requests N]
               [--queries Q] [--duration-secs S]  (fixed-time samples)
+              [--tenant NAME]   (drive /v1/m/NAME/predict instead)
               [--max-error-rate R]   (exits non-zero above R)
   obs         observability helpers
               tail        follow /v1/tracez, printing new slow traces
@@ -716,6 +883,7 @@ fn main() -> Result<()> {
         "online" => cmd_online(&args),
         "serve" => cmd_serve(&args),
         "fleet" => cmd_fleet(&args),
+        "rollout" => cmd_rollout(&args),
         "loadgen" => cmd_loadgen(&args),
         "obs" => cmd_obs(&args),
         "bench" => cmd_bench(&args),

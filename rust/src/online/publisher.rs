@@ -196,6 +196,16 @@ pub struct Publisher {
     /// [`Publisher::set_merge_telemetry`]; single-trainer loops never
     /// touch it, keeping their manifests byte-identical to before).
     merge: Option<MergeTelemetry>,
+    /// File names this instance wrote, per generation. Pruning removes
+    /// exactly these — never a name it did not publish — so two
+    /// publishers sharing one directory (two tenants, or an unsharded
+    /// trainer next to a sharded one) cannot delete each other's live
+    /// generations.
+    published: std::collections::BTreeMap<u64, Vec<String>>,
+    /// Shard layout of the most recent publication (seeded from the
+    /// resumed manifest): pre-restart generations of *this* stream are
+    /// recognized by reconstructing their exact names under this layout.
+    last_shards: usize,
 }
 
 fn generation_file(generation: u64) -> String {
@@ -210,12 +220,21 @@ impl Publisher {
         std::fs::create_dir_all(&dir)
             .with_context(|| format!("creating publication dir {dir:?}"))?;
         let manifest = dir.join(MANIFEST_FILE);
-        let next_generation = if manifest.exists() {
-            Manifest::read(&manifest)?.generation + 1
+        let (next_generation, last_shards) = if manifest.exists() {
+            let man = Manifest::read(&manifest)?;
+            (man.generation + 1, man.shards)
         } else {
-            1
+            (1, 1)
         };
-        Ok(Self { dir, keep: keep.max(1), next_generation, telemetry: None, merge: None })
+        Ok(Self {
+            dir,
+            keep: keep.max(1),
+            next_generation,
+            telemetry: None,
+            merge: None,
+            published: std::collections::BTreeMap::new(),
+            last_shards,
+        })
     }
 
     /// Set the training-health telemetry the next publication's manifest
@@ -263,7 +282,7 @@ impl Publisher {
         write_atomic(&bytes, &path)?;
         Manifest {
             generation,
-            file,
+            file: file.clone(),
             crc32: crc,
             shards: 1,
             shard_crcs: vec![crc],
@@ -271,6 +290,8 @@ impl Publisher {
             merge: self.merge,
         }
         .write(&self.manifest_path())?;
+        self.published.insert(generation, vec![file]);
+        self.last_shards = 1;
         self.next_generation += 1;
         self.prune();
         Ok(Publication { generation, path, crc32: crc, bytes: bytes.len() })
@@ -302,16 +323,19 @@ impl Publisher {
         // into each shard)
         let starts = model.shard_starts_for(shards)?;
         let mut files = Vec::with_capacity(shards);
+        let mut names = Vec::with_capacity(shards);
         let mut crcs = Vec::with_capacity(shards);
         let mut total = 0usize;
         for i in 0..shards {
             let sm = model.shard_at(&starts, i);
-            let path = self.dir.join(shard_file_name(&base, i, shards));
+            let name = shard_file_name(&base, i, shards);
+            let path = self.dir.join(&name);
             let bytes = sm.encode_with_generation(generation);
             let crc = crc32(&bytes);
             write_atomic(&bytes, &path)?;
             total += bytes.len();
             files.push(path);
+            names.push(name);
             crcs.push(crc);
         }
         Manifest {
@@ -324,6 +348,8 @@ impl Publisher {
             merge: self.merge,
         }
         .write(&self.manifest_path())?;
+        self.published.insert(generation, names);
+        self.last_shards = shards;
         self.next_generation += 1;
         self.prune();
         Ok(ShardedPublication { generation, files, crcs, bytes: total })
@@ -337,9 +363,26 @@ impl Publisher {
     /// directory entry, the mapped pages stay valid (and the disk blocks
     /// allocated) until the last mapping drops — so retention policy and
     /// mmap lifetime need no coordination.
-    fn prune(&self) {
+    ///
+    /// Scope: only files *this publisher* owns are candidates — the
+    /// recorded names it wrote this run, plus directory entries whose
+    /// name reconstructs exactly under its own unsharded/shard-sibling
+    /// pattern (the resumed stream's pre-restart generations). It used
+    /// to remove any `gen-*.bearsnap` below its floor, which let two
+    /// publishers sharing a directory prune each other's live files.
+    fn prune(&mut self) {
         let newest = self.next_generation - 1;
         let floor = newest.saturating_sub(self.keep as u64 - 1);
+        let stale: Vec<u64> = self.published.range(..floor).map(|(g, _)| *g).collect();
+        for g in stale {
+            if let Some(names) = self.published.remove(&g) {
+                for name in names {
+                    let _ = std::fs::remove_file(self.dir.join(name));
+                }
+            }
+        }
+        // pre-restart generations of this stream: same dir, same layout,
+        // exact canonical names — anything else belongs to someone else
         let entries = match std::fs::read_dir(&self.dir) {
             Ok(e) => e,
             Err(_) => return,
@@ -347,7 +390,7 @@ impl Publisher {
         for entry in entries.flatten() {
             let name = entry.file_name();
             let name = name.to_string_lossy();
-            if let Some(g) = parse_generation_file(&name) {
+            if let Some(g) = layout_generation(&name, self.last_shards) {
                 if g < floor {
                     let _ = std::fs::remove_file(entry.path());
                 }
@@ -356,18 +399,23 @@ impl Publisher {
     }
 }
 
-/// The generation number of a `gen-XXXXXXXX*.bearsnap` file name
-/// (unsharded or shard sibling); `None` for anything else.
-fn parse_generation_file(name: &str) -> Option<u64> {
+/// The generation number of `name` **iff** it is exactly a file this
+/// publisher's `shards` layout would produce: `gen-XXXXXXXX.bearsnap`
+/// when unsharded, `gen-XXXXXXXX-sIofK.bearsnap` with `K == shards` when
+/// sharded. Reconstruct-and-compare, so a near-miss (extra zero padding,
+/// foreign shard count, a different publisher's suffix) never matches.
+fn layout_generation(name: &str, shards: usize) -> Option<u64> {
     let rest = name.strip_prefix("gen-")?;
-    if !name.ends_with(".bearsnap") {
-        return None;
-    }
     let digits: String = rest.chars().take_while(|c| c.is_ascii_digit()).collect();
-    if digits.is_empty() {
-        return None;
+    let g: u64 = digits.parse().ok()?;
+    if shards <= 1 {
+        return (name == generation_file(g)).then_some(g);
     }
-    digits.parse().ok()
+    let stem = name.strip_suffix(".bearsnap")?;
+    let tail = stem.strip_prefix(&format!("gen-{digits}-s"))?;
+    let (i, k) = tail.split_once("of")?;
+    let (i, k): (usize, usize) = (i.parse().ok()?, k.parse().ok()?);
+    (k == shards && i < k && name == shard_file_name(&generation_file(g), i, k)).then_some(g)
 }
 
 #[cfg(test)]
@@ -475,6 +523,64 @@ mod tests {
         for f in &pb.files {
             assert!(!f.exists(), "{f:?} should have been pruned");
         }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn prune_never_touches_another_publishers_files() {
+        let dir = tmpdir("two-pubs");
+        // publisher A: sharded layout, 5 generations, keep 2 ⇒ its own
+        // gens 1–3 pruned, 4–5 live
+        let mut a = Publisher::new(&dir, 2).unwrap();
+        for i in 0..5 {
+            a.publish_sharded(&toy_model(i as f32 + 1.0), 2).unwrap();
+        }
+        let a_live: Vec<PathBuf> = (0..2)
+            .flat_map(|g| {
+                (0..2).map(move |s| shard_file_name(&generation_file(4 + g), s, 2))
+            })
+            .map(|n| dir.join(n))
+            .collect();
+        for f in &a_live {
+            assert!(f.exists(), "{f:?} must be live before B appears");
+        }
+        // publisher B opens the same dir (resumes numbering after A's
+        // manifest) but publishes unsharded — a different naming pattern.
+        // Its retention pruning must only ever remove its own files.
+        let mut b = Publisher::new(&dir, 2).unwrap();
+        assert_eq!(b.next_generation(), 6);
+        for i in 0..3 {
+            b.publish(&toy_model(10.0 + i as f32)).unwrap();
+        }
+        // B pruned its own gen 6 (keep 2 of 6..=8) …
+        assert!(!dir.join(generation_file(6)).exists());
+        assert!(dir.join(generation_file(7)).exists());
+        assert!(dir.join(generation_file(8)).exists());
+        // … and A's live shard sets survived, even though their
+        // generation numbers sit far below B's retention floor
+        for f in &a_live {
+            assert!(f.exists(), "B's prune deleted A's live file {f:?}");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn resumed_publisher_still_prunes_its_own_pre_restart_generations() {
+        let dir = tmpdir("resume-prune");
+        {
+            let mut p = Publisher::new(&dir, 10).unwrap();
+            for i in 0..3 {
+                p.publish(&toy_model(i as f32 + 1.0)).unwrap();
+            }
+        }
+        // a fresh instance has no in-memory record of gens 1–3, but they
+        // reconstruct exactly under its own layout, so retention applies
+        let mut p2 = Publisher::new(&dir, 1).unwrap();
+        p2.publish(&toy_model(4.0)).unwrap();
+        for g in 1..=3u64 {
+            assert!(!dir.join(generation_file(g)).exists(), "gen {g} leaked");
+        }
+        assert!(dir.join(generation_file(4)).exists());
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -1,0 +1,512 @@
+//! The rollout state machine: staging publication → eval gate → canary →
+//! promote | rollback.
+//!
+//! The controller owns two locations:
+//!
+//! - **staging** — the publication `MANIFEST` the trainer writes
+//!   (`bear online`'s output directory). Nothing serves from here.
+//! - **live** — the registry directory the serving tier watches
+//!   (`bear serve --watch-manifest LIVE/MANIFEST`, or a fleet's
+//!   supervisor). Only the controller writes here, and only for
+//!   generations that passed the eval gate.
+//!
+//! Promotion is the same atomic discipline as publication: copy the
+//! snapshot bytes into the live directory (tmp+rename), then swing the
+//! live `MANIFEST` (tmp+rename). A watching server can never observe a
+//! gated-but-torn publication.
+//!
+//! With [`CanaryHooks`] attached (fleet mode) a passing generation is
+//! first released to **one** worker: the supervisor's rolling reload is
+//! clamped to a single backend via `roll_limit`, the balancer routes a
+//! deterministic trace-id bucket of traffic to that backend, and the
+//! controller watches the canary's live gauges. Only a canary that stays
+//! healthy opens the roll fleet-wide; a failing one is rolled back by
+//! swinging the live manifest back and respawning the canary worker —
+//! the in-process reloader is forward-only, so down-grades go through
+//! process replacement, which re-resolves the (restored) manifest.
+
+use super::eval::{evaluate, gate, EvalConfig};
+use super::RolloutStats;
+use crate::data::DataSource;
+use crate::fleet::health::BackendState;
+use crate::online::publisher::{Manifest, MANIFEST_FILE};
+use crate::serve::ServableModel;
+use crate::util::logger::{log, Level};
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Controller knobs.
+#[derive(Clone, Debug)]
+pub struct RolloutConfig {
+    /// The trainer's publication `MANIFEST` (staging side).
+    pub staging_manifest: PathBuf,
+    /// The registry directory the serving tier watches (live side).
+    pub live_dir: PathBuf,
+    /// Eval-gate knobs (held-out examples, loss tolerance).
+    pub eval: EvalConfig,
+    /// Canary traffic share in basis points of
+    /// [`super::CANARY_BP_SCALE`] (1000 = 10%). Fleet mode only.
+    pub canary_pct_bp: u64,
+    /// How long to wait for one backend to come up on the canary
+    /// generation before rolling back.
+    pub canary_deadline: Duration,
+    /// How long the canary takes traffic before its live gauges are
+    /// judged.
+    pub canary_soak: Duration,
+    /// Reject a canary whose reported top-k drift Jaccard falls below
+    /// this floor (0.0 disables the drift gate).
+    pub min_topk_jaccard: f64,
+    /// Promoted generations retained in the live directory.
+    pub keep: usize,
+}
+
+impl Default for RolloutConfig {
+    fn default() -> Self {
+        Self {
+            staging_manifest: PathBuf::new(),
+            live_dir: PathBuf::new(),
+            eval: EvalConfig::default(),
+            canary_pct_bp: 1000,
+            canary_deadline: Duration::from_secs(10),
+            canary_soak: Duration::from_millis(300),
+            min_topk_jaccard: 0.0,
+            keep: 2,
+        }
+    }
+}
+
+/// Fleet integration points for the canary phase. Everything here is
+/// owned by [`crate::fleet::FleetHandle`]; the controller only borrows
+/// the levers.
+#[derive(Clone)]
+pub struct CanaryHooks {
+    /// The supervisor's rolling-reload clamp: how many backends it may
+    /// bring to the target generation (`u64::MAX` = unlimited).
+    pub roll_limit: Arc<AtomicU64>,
+    /// Fleet backend table (canary discovery + live-gauge checks).
+    pub backends: Arc<Vec<Arc<BackendState>>>,
+    /// Control-plane scrape deadline.
+    pub admin_timeout: Duration,
+    /// Kill one backend worker by index; the supervisor respawns it
+    /// against the (restored) live manifest. The rollback lever.
+    pub kill_backend: Arc<dyn Fn(usize) -> Result<()> + Send + Sync>,
+}
+
+impl std::fmt::Debug for CanaryHooks {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("CanaryHooks").field("backends", &self.backends.len()).finish()
+    }
+}
+
+/// What one controller poll did.
+#[derive(Clone, Debug, PartialEq)]
+pub enum RolloutOutcome {
+    /// No new staging generation.
+    Idle,
+    /// The generation passed every gate and is (rolling) live.
+    Promoted { generation: u64 },
+    /// The eval gate rejected the generation; the live registry was
+    /// never touched.
+    Rejected { generation: u64, reason: String },
+    /// The canary phase failed after the generation reached one worker;
+    /// the live registry was restored and the canary respawned.
+    RolledBack { generation: u64, reason: String },
+}
+
+/// The registry controller. Single-threaded: one instance owns a live
+/// directory; [`RolloutController::poll`] is the whole state machine.
+pub struct RolloutController {
+    cfg: RolloutConfig,
+    stats: Arc<RolloutStats>,
+    hooks: Option<CanaryHooks>,
+    /// Held-out slice both candidate and baseline replay (paired eval).
+    eval_stream: Box<dyn DataSource>,
+    /// Highest staging generation already gated (pass OR fail) — each
+    /// generation gets exactly one verdict.
+    last_processed: u64,
+    /// Snapshot names this controller promoted, for live-dir pruning.
+    promoted_files: std::collections::BTreeMap<u64, String>,
+}
+
+impl RolloutController {
+    /// A standalone (no-fleet) controller: passing generations promote
+    /// directly. Seeds the processed watermark from the live manifest so
+    /// a restart does not re-gate the already-promoted generation.
+    pub fn new(
+        cfg: RolloutConfig,
+        stats: Arc<RolloutStats>,
+        eval_stream: Box<dyn DataSource>,
+    ) -> Self {
+        let last_processed =
+            crate::online::peek_generation(&cfg.live_dir.join(MANIFEST_FILE)).unwrap_or(0);
+        Self { cfg, stats, hooks: None, eval_stream, last_processed, promoted_files: Default::default() }
+    }
+
+    /// Attach fleet canary hooks: passing generations go through the
+    /// one-worker canary phase before the roll opens fleet-wide.
+    pub fn with_canary(mut self, hooks: CanaryHooks) -> Self {
+        self.hooks = Some(hooks);
+        self
+    }
+
+    pub fn stats(&self) -> Arc<RolloutStats> {
+        self.stats.clone()
+    }
+
+    /// The live registry's manifest path (what the serving tier watches).
+    pub fn live_manifest_path(&self) -> PathBuf {
+        self.cfg.live_dir.join(MANIFEST_FILE)
+    }
+
+    /// One controller step: gate at most one new staging generation.
+    pub fn poll(&mut self) -> Result<RolloutOutcome> {
+        // absent or mid-write manifests read as "nothing new"
+        let man = match Manifest::read(&self.cfg.staging_manifest) {
+            Ok(m) => m,
+            Err(_) => return Ok(RolloutOutcome::Idle),
+        };
+        if man.generation <= self.last_processed {
+            return Ok(RolloutOutcome::Idle);
+        }
+        let generation = man.generation;
+        self.last_processed = generation;
+        if man.shards != 1 {
+            return Ok(self.reject(generation, "sharded publications cannot be rollout-gated"));
+        }
+        let snap = man.snapshot_path(&self.cfg.staging_manifest);
+        let candidate = match ServableModel::open_verified(&snap, Some(man.crc32)) {
+            Ok((m, _)) => m,
+            Err(e) => {
+                return Ok(self.reject(generation, &format!("candidate failed verification: {e:#}")))
+            }
+        };
+        // the baseline is whatever the live registry currently points at;
+        // an empty or unreadable registry gates the candidate alone
+        let live_manifest = self.live_manifest_path();
+        let baseline = Manifest::read(&live_manifest).ok().and_then(|lm| {
+            ServableModel::open_verified(&lm.snapshot_path(&live_manifest), Some(lm.crc32))
+                .ok()
+                .map(|(m, _)| m)
+        });
+        let n = self.cfg.eval.examples;
+        let c_report = evaluate(&candidate, self.eval_stream.as_mut(), n);
+        self.stats.evals.fetch_add(1, Ordering::Relaxed);
+        let b_report = baseline.as_ref().map(|m| {
+            self.stats.evals.fetch_add(1, Ordering::Relaxed);
+            evaluate(m, self.eval_stream.as_mut(), n)
+        });
+        let decision = gate(c_report, b_report, self.cfg.eval.tolerance);
+        log(
+            Level::Info,
+            format_args!("rollout: generation {generation} eval — {}", decision.describe()),
+        );
+        if !decision.pass {
+            return Ok(self.reject(generation, &decision.describe()));
+        }
+        if self.hooks.is_some() {
+            self.canary_then_promote(&man, &snap)
+        } else {
+            self.promote_files(&man, &snap)?;
+            self.stats.promotions.fetch_add(1, Ordering::Relaxed);
+            log(Level::Info, format_args!("rollout: generation {generation} promoted"));
+            Ok(RolloutOutcome::Promoted { generation })
+        }
+    }
+
+    /// Poll on an interval until `shutdown` (the `bear rollout` loop and
+    /// the fleet's embedded controller thread).
+    pub fn run_loop(&mut self, poll_interval: Duration, shutdown: &AtomicBool) {
+        let slice = poll_interval.min(Duration::from_millis(25)).max(Duration::from_millis(1));
+        while !shutdown.load(Ordering::Acquire) {
+            if let Err(e) = self.poll() {
+                log(Level::Warn, format_args!("rollout: poll failed: {e:#}"));
+            }
+            let mut slept = Duration::ZERO;
+            while slept < poll_interval {
+                if shutdown.load(Ordering::Acquire) {
+                    return;
+                }
+                std::thread::sleep(slice);
+                slept += slice;
+            }
+        }
+    }
+
+    fn reject(&self, generation: u64, reason: &str) -> RolloutOutcome {
+        self.stats.gate_failures.fetch_add(1, Ordering::Relaxed);
+        log(
+            Level::Warn,
+            format_args!("rollout: generation {generation} REJECTED — {reason}"),
+        );
+        RolloutOutcome::Rejected { generation, reason: reason.to_string() }
+    }
+
+    /// Copy the gated snapshot into the live directory and swing the live
+    /// manifest at it (both tmp+rename), then prune old promotions.
+    fn promote_files(&mut self, man: &Manifest, snap: &Path) -> Result<()> {
+        std::fs::create_dir_all(&self.cfg.live_dir)
+            .with_context(|| format!("creating live registry dir {:?}", self.cfg.live_dir))?;
+        let bytes = std::fs::read(snap)
+            .with_context(|| format!("reading gated snapshot {snap:?}"))?;
+        crate::coordinator::checkpoint::write_atomic(&bytes, &self.cfg.live_dir.join(&man.file))?;
+        man.write(&self.live_manifest_path())?;
+        self.promoted_files.insert(man.generation, man.file.clone());
+        // prune: drop promoted snapshots below the keep window — only
+        // names this controller wrote, same ownership discipline as
+        // Publisher::prune
+        while self.promoted_files.len() > self.cfg.keep.max(1) {
+            let (&g, _) = self.promoted_files.iter().next().expect("non-empty");
+            if let Some(name) = self.promoted_files.remove(&g) {
+                std::fs::remove_file(self.cfg.live_dir.join(name)).ok();
+            }
+        }
+        Ok(())
+    }
+
+    /// Fleet path: release to one worker, judge it live, then open the
+    /// roll or restore the registry.
+    fn canary_then_promote(&mut self, man: &Manifest, snap: &Path) -> Result<RolloutOutcome> {
+        let h = self.hooks.clone().expect("canary hooks attached");
+        let generation = man.generation;
+        let live_manifest = self.live_manifest_path();
+        let prev = Manifest::read(&live_manifest).ok();
+        // clamp the supervisor to one backend and announce the traffic
+        // split BEFORE the live manifest swings — no window where the
+        // fleet could roll everything
+        h.roll_limit.store(1, Ordering::Relaxed);
+        self.stats.set_canary(generation, self.cfg.canary_pct_bp);
+        if let Err(e) = self.promote_files(man, snap) {
+            h.roll_limit.store(u64::MAX, Ordering::Relaxed);
+            self.stats.clear_canary();
+            return Err(e);
+        }
+        // wait for exactly one backend to reach G (the supervisor's
+        // clamped roll, or a respawn that resolved the new manifest)
+        let deadline = Instant::now() + self.cfg.canary_deadline;
+        let canary = loop {
+            let hit = h
+                .backends
+                .iter()
+                .find(|b| b.scraped_generation.load(Ordering::Relaxed) >= generation);
+            if let Some(b) = hit {
+                break Some(b.clone());
+            }
+            if Instant::now() >= deadline {
+                break None;
+            }
+            std::thread::sleep(Duration::from_millis(20));
+        };
+        let verdict = match &canary {
+            None => Err("no backend reached the canary generation before the deadline".to_string()),
+            Some(b) => {
+                std::thread::sleep(self.cfg.canary_soak);
+                self.judge_canary(&h, b, generation)
+            }
+        };
+        match verdict {
+            Ok(()) => {
+                h.roll_limit.store(u64::MAX, Ordering::Relaxed);
+                self.stats.clear_canary();
+                self.stats.promotions.fetch_add(1, Ordering::Relaxed);
+                log(
+                    Level::Info,
+                    format_args!("rollout: generation {generation} passed canary, rolling fleet-wide"),
+                );
+                Ok(RolloutOutcome::Promoted { generation })
+            }
+            Err(reason) => {
+                // restore the registry FIRST, then replace the canary
+                // worker: its respawn re-resolves the live manifest, which
+                // must already point back at the previous generation
+                match &prev {
+                    Some(pm) => pm.write(&live_manifest)?,
+                    None => {
+                        std::fs::remove_file(&live_manifest).ok();
+                    }
+                }
+                self.promoted_files.remove(&generation);
+                std::fs::remove_file(self.cfg.live_dir.join(&man.file)).ok();
+                if let Some(b) = &canary {
+                    if let Err(e) = (h.kill_backend)(b.index) {
+                        log(
+                            Level::Warn,
+                            format_args!("rollout: respawning canary backend {} failed: {e:#}", b.index),
+                        );
+                    }
+                }
+                h.roll_limit.store(u64::MAX, Ordering::Relaxed);
+                self.stats.clear_canary();
+                self.stats.gate_failures.fetch_add(1, Ordering::Relaxed);
+                self.stats.rollbacks.fetch_add(1, Ordering::Relaxed);
+                log(
+                    Level::Warn,
+                    format_args!("rollout: generation {generation} ROLLED BACK — {reason}"),
+                );
+                Ok(RolloutOutcome::RolledBack { generation, reason })
+            }
+        }
+    }
+
+    /// Judge the canary on its live signals: still in rotation, still on
+    /// the generation, drift gauge above the floor.
+    fn judge_canary(&self, h: &CanaryHooks, b: &BackendState, generation: u64) -> Result<(), String> {
+        if !b.healthy() {
+            return Err(format!("canary backend {} ejected from rotation", b.index));
+        }
+        let statz = crate::fleet::health::control_client(b.addrs.clone(), h.admin_timeout)
+            .statz()
+            .map_err(|e| format!("canary backend {} statz scrape failed: {e}", b.index))?;
+        if statz.generation() < generation {
+            return Err(format!(
+                "canary backend {} slid back to generation {} (want {generation})",
+                b.index,
+                statz.generation()
+            ));
+        }
+        let jaccard = statz.f64("drift_topk_jaccard");
+        if jaccard < self.cfg.min_topk_jaccard {
+            return Err(format!(
+                "canary drift collapsed: topk jaccard {jaccard:.4} below floor {:.4}",
+                self.cfg.min_topk_jaccard
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::sketched::SketchedState;
+    use crate::data::{Example, InMemory};
+    use crate::loss::LossKind;
+    use crate::online::Publisher;
+    use crate::sparse::SparseVec;
+
+    fn planted_model(w: f32) -> ServableModel {
+        let mut st = SketchedState::new(64, 4, 8, 42);
+        st.apply_step(&SparseVec::from_pairs(vec![(7, -w)]), 1.0);
+        let row = SparseVec::from_pairs(vec![(7, 1.0)]);
+        st.refresh_heap(&crate::sparse::ActiveSet::from_rows([&row]));
+        ServableModel::from_sketched(&st, LossKind::Logistic, 0.0)
+    }
+
+    fn planted_stream() -> Box<dyn DataSource> {
+        let examples = (0..32)
+            .map(|_| Example { features: SparseVec::from_pairs(vec![(7, 1.0)]), label: 1.0 })
+            .collect();
+        Box::new(InMemory::new(examples, 64, 2))
+    }
+
+    fn tmp_root(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("bear-rollout-{tag}-{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn standalone_gate_promotes_good_and_rejects_regressed() {
+        let root = tmp_root("gate");
+        let staging = root.join("staging");
+        let live = root.join("live");
+        let mut publisher = Publisher::new(&staging, 4).unwrap();
+        let stats = RolloutStats::new();
+        let cfg = RolloutConfig {
+            staging_manifest: staging.join(MANIFEST_FILE),
+            live_dir: live.clone(),
+            eval: EvalConfig { examples: 32, tolerance: 0.05 },
+            ..RolloutConfig::default()
+        };
+        let mut ctl = RolloutController::new(cfg, stats.clone(), planted_stream());
+
+        // empty staging: idle
+        assert_eq!(ctl.poll().unwrap(), RolloutOutcome::Idle);
+
+        // gen 1 (good, no baseline): promotes
+        publisher.publish(&planted_model(1.0)).unwrap();
+        assert_eq!(ctl.poll().unwrap(), RolloutOutcome::Promoted { generation: 1 });
+        let live_man = Manifest::read(&live.join(MANIFEST_FILE)).unwrap();
+        assert_eq!(live_man.generation, 1);
+        assert!(live.join(&live_man.file).exists());
+        // the promoted copy is byte-verified loadable
+        ServableModel::open_verified(&live.join(&live_man.file), Some(live_man.crc32)).unwrap();
+
+        // gen 2 (sign-flipped, confidently wrong): rejected, live untouched
+        publisher.publish(&planted_model(-1.0)).unwrap();
+        match ctl.poll().unwrap() {
+            RolloutOutcome::Rejected { generation: 2, .. } => {}
+            other => panic!("expected rejection, got {other:?}"),
+        }
+        assert_eq!(Manifest::read(&live.join(MANIFEST_FILE)).unwrap().generation, 1);
+        assert_eq!(stats.gate_failures.load(Ordering::Relaxed), 1);
+
+        // a rejected generation gets ONE verdict, not one per poll
+        assert_eq!(ctl.poll().unwrap(), RolloutOutcome::Idle);
+        assert_eq!(stats.gate_failures.load(Ordering::Relaxed), 1);
+
+        // gen 3 (good again): promotes over the gen-1 baseline
+        publisher.publish(&planted_model(1.2)).unwrap();
+        assert_eq!(ctl.poll().unwrap(), RolloutOutcome::Promoted { generation: 3 });
+        assert_eq!(Manifest::read(&live.join(MANIFEST_FILE)).unwrap().generation, 3);
+        assert_eq!(stats.promotions.load(Ordering::Relaxed), 2);
+        assert_eq!(stats.evals.load(Ordering::Relaxed), 5); // 1 + 2 + 2
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn controller_restart_does_not_regate_promoted_generation() {
+        let root = tmp_root("restart");
+        let staging = root.join("staging");
+        let live = root.join("live");
+        let mut publisher = Publisher::new(&staging, 4).unwrap();
+        let cfg = RolloutConfig {
+            staging_manifest: staging.join(MANIFEST_FILE),
+            live_dir: live.clone(),
+            eval: EvalConfig { examples: 32, tolerance: 0.05 },
+            ..RolloutConfig::default()
+        };
+        publisher.publish(&planted_model(1.0)).unwrap();
+        let mut ctl =
+            RolloutController::new(cfg.clone(), RolloutStats::new(), planted_stream());
+        assert_eq!(ctl.poll().unwrap(), RolloutOutcome::Promoted { generation: 1 });
+        // a fresh controller over the same dirs seeds its watermark from
+        // the live manifest: the already-promoted generation stays idle
+        let stats = RolloutStats::new();
+        let mut ctl2 = RolloutController::new(cfg, stats.clone(), planted_stream());
+        assert_eq!(ctl2.poll().unwrap(), RolloutOutcome::Idle);
+        assert_eq!(stats.evals.load(Ordering::Relaxed), 0);
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn live_dir_prunes_to_keep_window() {
+        let root = tmp_root("prune");
+        let staging = root.join("staging");
+        let live = root.join("live");
+        let mut publisher = Publisher::new(&staging, 8).unwrap();
+        let cfg = RolloutConfig {
+            staging_manifest: staging.join(MANIFEST_FILE),
+            live_dir: live.clone(),
+            eval: EvalConfig { examples: 32, tolerance: 10.0 },
+            keep: 2,
+            ..RolloutConfig::default()
+        };
+        let mut ctl = RolloutController::new(cfg, RolloutStats::new(), planted_stream());
+        for _ in 0..4 {
+            publisher.publish(&planted_model(1.0)).unwrap();
+            ctl.poll().unwrap();
+        }
+        let snaps: Vec<_> = std::fs::read_dir(&live)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().ends_with(".bearsnap"))
+            .collect();
+        assert_eq!(snaps.len(), 2, "live dir keeps the last 2 promotions");
+        assert_eq!(Manifest::read(&live.join(MANIFEST_FILE)).unwrap().generation, 4);
+        std::fs::remove_dir_all(&root).ok();
+    }
+}

@@ -1,0 +1,193 @@
+//! The online-eval sidecar: score a candidate snapshot on a held-out
+//! stream slice before any traffic sees it.
+//!
+//! The gate is *relative*: a candidate generation passes only if its
+//! held-out mean loss is no worse than the currently-promoted baseline's
+//! plus a tolerance, measured on the **same** replayed examples. Absolute
+//! thresholds rot as the data distribution drifts; a paired comparison on
+//! one stream slice does not. When there is no promoted baseline yet
+//! (first generation into an empty registry), the candidate passes by
+//! definition — there is nothing to regress against.
+
+use crate::data::DataSource;
+use crate::serve::ServableModel;
+
+/// Eval-gate knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct EvalConfig {
+    /// Held-out examples scored per model.
+    pub examples: usize,
+    /// Mean-loss slack the candidate is allowed over the baseline.
+    pub tolerance: f64,
+}
+
+impl Default for EvalConfig {
+    fn default() -> Self {
+        Self { examples: 2000, tolerance: 0.02 }
+    }
+}
+
+/// One model's held-out score.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct EvalReport {
+    /// Examples actually scored (the stream may run dry early).
+    pub examples: usize,
+    /// Mean per-example loss: clamped log-loss for binary logistic
+    /// models, 0/1 loss for multi-class, squared error for regression.
+    pub mean_loss: f64,
+    /// Fraction of examples whose hard decision matched the label
+    /// (0.0 for regression models, which have no hard decision).
+    pub accuracy: f64,
+}
+
+/// Score `model` on up to `examples` examples drawn from `stream`
+/// (rewound first, so two models replay the identical slice).
+pub fn evaluate(model: &ServableModel, stream: &mut dyn DataSource, examples: usize) -> EvalReport {
+    stream.reset();
+    let mut n = 0usize;
+    let mut loss = 0.0f64;
+    let mut correct = 0usize;
+    while n < examples {
+        let ex = match stream.next_example() {
+            Some(ex) => ex,
+            None => break,
+        };
+        let pred = model.predict(&ex.features);
+        let y = ex.label as f64;
+        let (l, hit) = match (pred.probability, pred.class) {
+            // binary logistic: log-loss on σ(margin), clamped so one
+            // confidently-wrong example cannot send the mean to infinity
+            (Some(p), _) => {
+                let p = p.clamp(1e-9, 1.0 - 1e-9);
+                let l = -(y * p.ln() + (1.0 - y) * (1.0 - p).ln());
+                (l, (p >= 0.5) == (y >= 0.5))
+            }
+            // multi-class: 0/1 loss on the argmax class
+            (None, Some(c)) => {
+                let hit = c == y as usize;
+                (if hit { 0.0 } else { 1.0 }, hit)
+            }
+            // regression: squared error on the raw margin
+            (None, None) => {
+                let d = pred.margin - y;
+                (d * d, false)
+            }
+        };
+        loss += l;
+        correct += hit as usize;
+        n += 1;
+    }
+    EvalReport {
+        examples: n,
+        mean_loss: if n > 0 { loss / n as f64 } else { 0.0 },
+        accuracy: if n > 0 { correct as f64 / n as f64 } else { 0.0 },
+    }
+}
+
+/// The gate verdict, with both scores attached for logging and `/statz`.
+#[derive(Clone, Copy, Debug)]
+pub struct GateDecision {
+    pub pass: bool,
+    pub candidate: EvalReport,
+    /// `None` when there was no promoted baseline to compare against.
+    pub baseline: Option<EvalReport>,
+    pub tolerance: f64,
+}
+
+impl GateDecision {
+    /// One-line human summary for the rollout log.
+    pub fn describe(&self) -> String {
+        match &self.baseline {
+            Some(b) => format!(
+                "candidate loss {:.6} vs baseline {:.6} (tolerance {:+.6}) over {} examples: {}",
+                self.candidate.mean_loss,
+                b.mean_loss,
+                self.tolerance,
+                self.candidate.examples,
+                if self.pass { "PASS" } else { "FAIL" },
+            ),
+            None => format!(
+                "candidate loss {:.6} over {} examples, no baseline: PASS",
+                self.candidate.mean_loss, self.candidate.examples
+            ),
+        }
+    }
+}
+
+/// Apply the relative gate: pass iff the candidate's mean loss is within
+/// `tolerance` of the baseline's (or there is no baseline).
+pub fn gate(candidate: EvalReport, baseline: Option<EvalReport>, tolerance: f64) -> GateDecision {
+    let pass = match &baseline {
+        Some(b) => candidate.mean_loss <= b.mean_loss + tolerance,
+        None => true,
+    };
+    GateDecision { pass, candidate, baseline, tolerance }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::sketched::SketchedState;
+    use crate::data::InMemory;
+    use crate::loss::LossKind;
+    use crate::sparse::SparseVec;
+
+    /// A one-feature logistic model with weight `w` on feature 7.
+    fn planted_model(w: f32) -> ServableModel {
+        let mut st = SketchedState::new(64, 4, 8, 42);
+        st.apply_step(&SparseVec::from_pairs(vec![(7, -w)]), 1.0);
+        let row = SparseVec::from_pairs(vec![(7, 1.0)]);
+        st.refresh_heap(&crate::sparse::ActiveSet::from_rows([&row]));
+        ServableModel::from_sketched(&st, LossKind::Logistic, 0.0)
+    }
+
+    /// Positive-label examples firing feature 7: a positive weight is
+    /// right, a negative weight is confidently wrong.
+    fn planted_stream() -> InMemory {
+        let examples = (0..32)
+            .map(|_| crate::data::Example {
+                features: SparseVec::from_pairs(vec![(7, 1.0)]),
+                label: 1.0,
+            })
+            .collect();
+        InMemory::new(examples, 64, 2)
+    }
+
+    #[test]
+    fn good_model_beats_flipped_model() {
+        let good = planted_model(1.0);
+        let bad = planted_model(-1.0);
+        let mut stream = planted_stream();
+        let g = evaluate(&good, &mut stream, 32);
+        let b = evaluate(&bad, &mut stream, 32);
+        assert_eq!(g.examples, 32);
+        assert_eq!(b.examples, 32);
+        assert!(g.mean_loss < b.mean_loss, "good {} bad {}", g.mean_loss, b.mean_loss);
+        assert!(g.accuracy > 0.99);
+        assert!(b.accuracy < 0.01);
+    }
+
+    #[test]
+    fn reset_makes_the_replay_paired() {
+        // both models must see the identical slice even though the
+        // stream was consumed in between
+        let m = planted_model(1.0);
+        let mut stream = planted_stream();
+        let a = evaluate(&m, &mut stream, 32);
+        let b = evaluate(&m, &mut stream, 32);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn gate_is_relative_with_tolerance() {
+        let good = EvalReport { examples: 100, mean_loss: 0.30, accuracy: 0.9 };
+        let worse = EvalReport { examples: 100, mean_loss: 0.33, accuracy: 0.8 };
+        let awful = EvalReport { examples: 100, mean_loss: 1.30, accuracy: 0.1 };
+        // within tolerance passes, a regression beyond it fails
+        assert!(gate(worse, Some(good), 0.05).pass);
+        assert!(!gate(awful, Some(good), 0.05).pass);
+        // improvement always passes; no baseline always passes
+        assert!(gate(good, Some(worse), 0.0).pass);
+        assert!(gate(awful, None, 0.0).pass);
+    }
+}

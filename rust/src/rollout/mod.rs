@@ -1,0 +1,251 @@
+//! `bear::rollout` — the model registry and eval-gated rollout
+//! controller.
+//!
+//! Training publishes generations; serving consumes them. Everything in
+//! between — *should* this generation take traffic, and *how much*,
+//! before the whole fleet swings to it — is this subsystem:
+//!
+//! - [`eval`] — the online-eval sidecar: score a candidate snapshot on a
+//!   held-out stream slice against the currently-promoted baseline
+//!   (paired replay, relative gate with tolerance).
+//! - [`controller`] — the rollout state machine. Watches a **staging**
+//!   publication `MANIFEST` (where the trainer publishes) and drives
+//!   each new generation through `eval → canary → promote | rollback`
+//!   into a **live** registry directory (what the serving tier watches).
+//!   A generation that fails the eval gate never reaches the live
+//!   directory; a canary that regresses live gauges is rolled back by
+//!   swinging the live manifest back and respawning the canary worker
+//!   (the in-process [`crate::online::Reloader`] is forward-only by
+//!   design, so down-grades go through process replacement).
+//! - [`RolloutStats`] — shared atomics the fleet balancer exports on
+//!   `/statz` and `/v1/metricz` (`rollout_gate_failures_total` is the
+//!   alerting signal) and reads for canary routing: while a canary is
+//!   active, a deterministic `trace_id % 10_000 < canary_pct_bp` bucket
+//!   of traffic prefers backends already serving the canary generation.
+//! - [`TenantSpec`] — `name=PATH` mappings behind `--tenants` on
+//!   `bear serve` and `bear fleet`: each namespace gets its own model
+//!   root (publication dir, `MANIFEST`, or bare `.bearsnap`), served
+//!   under `/v1/m/{name}/…` with per-model labeled series on metricz.
+//!
+//! CLI: `bear rollout --staging DIR --live DIR` runs the standalone
+//! controller (registry promotion without a fleet); `bear fleet
+//! --rollout-staging DIR` runs it canary-gated inside the fleet
+//! supervisor process.
+
+pub mod controller;
+pub mod eval;
+
+pub use controller::{CanaryHooks, RolloutConfig, RolloutController, RolloutOutcome};
+pub use eval::{evaluate, gate, EvalConfig, EvalReport, GateDecision};
+
+use anyhow::{bail, ensure, Context, Result};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Canary traffic shares are expressed in basis points of this scale
+/// (10_000 bp = 100%), so sub-percent canaries stay integral.
+pub const CANARY_BP_SCALE: u64 = 10_000;
+
+/// Live rollout state: written by the controller, read by the balancer
+/// (canary routing + `/statz` + `/v1/metricz` export). One instance per
+/// fleet; the default state (all zeros) means "no rollout configured"
+/// and routes exactly like a rollout-free fleet.
+#[derive(Debug, Default)]
+pub struct RolloutStats {
+    /// Candidate generations rejected by the eval gate or rolled back by
+    /// the canary gate — the alerting counter.
+    pub gate_failures: AtomicU64,
+    /// Generations promoted fleet-wide.
+    pub promotions: AtomicU64,
+    /// Canaries rolled back after reaching a live worker.
+    pub rollbacks: AtomicU64,
+    /// Held-out eval runs completed (two per gated generation once a
+    /// baseline exists: candidate + baseline).
+    pub evals: AtomicU64,
+    /// Generation currently in canary (0 = no canary active).
+    canary_generation: AtomicU64,
+    /// Share of traffic routed to the canary, in basis points of
+    /// [`CANARY_BP_SCALE`].
+    canary_pct_bp: AtomicU64,
+}
+
+impl RolloutStats {
+    pub fn new() -> Arc<Self> {
+        Arc::new(Self::default())
+    }
+
+    /// Announce a canary: `pct_bp` of traffic (by trace-id bucket) should
+    /// prefer backends serving `generation`.
+    pub fn set_canary(&self, generation: u64, pct_bp: u64) {
+        self.canary_pct_bp.store(pct_bp.min(CANARY_BP_SCALE), Ordering::Relaxed);
+        self.canary_generation.store(generation, Ordering::Release);
+    }
+
+    /// End the canary phase (after promote or rollback).
+    pub fn clear_canary(&self) {
+        self.canary_generation.store(0, Ordering::Release);
+        self.canary_pct_bp.store(0, Ordering::Relaxed);
+    }
+
+    /// The active canary `(generation, pct_bp)`, if any.
+    pub fn canary(&self) -> Option<(u64, u64)> {
+        let g = self.canary_generation.load(Ordering::Acquire);
+        if g == 0 {
+            return None;
+        }
+        Some((g, self.canary_pct_bp.load(Ordering::Relaxed)))
+    }
+
+    /// The canary generation gauge, raw (0 = none) — metricz export.
+    pub fn canary_generation_raw(&self) -> u64 {
+        self.canary_generation.load(Ordering::Acquire)
+    }
+
+    /// The canary traffic-share gauge, raw basis points — metricz export.
+    pub fn canary_pct_bp_raw(&self) -> u64 {
+        self.canary_pct_bp.load(Ordering::Relaxed)
+    }
+}
+
+/// One `name=PATH` tenant mapping from `--tenants`. `PATH` names the
+/// tenant's model root: a publication directory (watched via its
+/// `MANIFEST`), a manifest file itself, or a bare `.bearsnap` (static
+/// model, no watch).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TenantSpec {
+    pub name: String,
+    pub path: PathBuf,
+}
+
+impl TenantSpec {
+    /// The manifest this tenant should watch for hot reloads, or `None`
+    /// for a static snapshot path.
+    pub fn watch_manifest(&self) -> Option<PathBuf> {
+        if self.path.is_dir() {
+            return Some(self.path.join(crate::online::MANIFEST_FILE));
+        }
+        if self.path.file_name().and_then(|n| n.to_str())
+            == Some(crate::online::MANIFEST_FILE)
+        {
+            return Some(self.path.clone());
+        }
+        None
+    }
+
+    /// Resolve and verify the tenant's initial model.
+    pub fn load_model(&self) -> Result<Arc<crate::serve::ServableModel>> {
+        use crate::online::publisher::Manifest;
+        let snap = match self.watch_manifest() {
+            Some(manifest_path) => {
+                let man = Manifest::read(&manifest_path).with_context(|| {
+                    format!("tenant {:?}: no readable publication at {:?}", self.name, self.path)
+                })?;
+                ensure!(
+                    man.shards == 1,
+                    "tenant {:?}: sharded publications cannot back a tenant namespace",
+                    self.name
+                );
+                let path = man.snapshot_path(&manifest_path);
+                let (model, _mapped) =
+                    crate::serve::ServableModel::open_verified(&path, Some(man.crc32))?;
+                return Ok(Arc::new(model));
+            }
+            None => self.path.clone(),
+        };
+        let (model, _mapped) = crate::serve::ServableModel::open_verified(&snap, None)
+            .with_context(|| format!("tenant {:?}: loading snapshot {snap:?}", self.name))?;
+        Ok(Arc::new(model))
+    }
+
+    /// Resolve into the serving-layer config (initial model + watch).
+    pub fn to_tenant_config(&self) -> Result<crate::serve::TenantConfig> {
+        Ok(crate::serve::TenantConfig {
+            name: self.name.clone(),
+            model: self.load_model()?,
+            watch_manifest: self.watch_manifest(),
+        })
+    }
+}
+
+/// Parse `--tenants a=DIR_A,b=DIR_B` into validated specs. Names must be
+/// route-safe ([`crate::api::valid_tenant_name`]), unique, and must not
+/// shadow the implicit default tenant.
+pub fn parse_tenant_specs(arg: &str) -> Result<Vec<TenantSpec>> {
+    let mut specs: Vec<TenantSpec> = Vec::new();
+    for part in arg.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let (name, path) = part
+            .split_once('=')
+            .with_context(|| format!("tenant spec {part:?} is not name=PATH"))?;
+        let (name, path) = (name.trim(), path.trim());
+        if !crate::api::valid_tenant_name(name) {
+            bail!("invalid tenant name {name:?} (1-64 ASCII alphanumerics, '-', '_')");
+        }
+        if name == crate::serve::DEFAULT_TENANT {
+            bail!("tenant name {name:?} is reserved (the un-namespaced routes serve it)");
+        }
+        if path.is_empty() {
+            bail!("tenant {name:?} has an empty path");
+        }
+        if specs.iter().any(|s| s.name == name) {
+            bail!("duplicate tenant name {name:?}");
+        }
+        specs.push(TenantSpec { name: name.to_string(), path: Path::new(path).to_path_buf() });
+    }
+    if specs.is_empty() {
+        bail!("--tenants needs at least one name=PATH mapping");
+    }
+    Ok(specs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tenant_specs_parse_and_validate() {
+        let specs = parse_tenant_specs("alpha=/tmp/a, beta=/tmp/b").unwrap();
+        assert_eq!(specs.len(), 2);
+        assert_eq!(specs[0], TenantSpec { name: "alpha".into(), path: "/tmp/a".into() });
+        assert_eq!(specs[1].name, "beta");
+        // rejected shapes: bad name, reserved name, duplicate, no '='
+        assert!(parse_tenant_specs("bad/name=/tmp/x").is_err());
+        assert!(parse_tenant_specs("default=/tmp/x").is_err());
+        assert!(parse_tenant_specs("a=/tmp/x,a=/tmp/y").is_err());
+        assert!(parse_tenant_specs("justapath").is_err());
+        assert!(parse_tenant_specs("").is_err());
+    }
+
+    #[test]
+    fn watch_manifest_resolution() {
+        let dir = std::env::temp_dir().join(format!("bear-rollout-spec-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        // a directory watches its MANIFEST; a manifest file watches itself
+        let spec = TenantSpec { name: "a".into(), path: dir.clone() };
+        assert_eq!(spec.watch_manifest(), Some(dir.join("MANIFEST")));
+        let spec = TenantSpec { name: "a".into(), path: dir.join("MANIFEST") };
+        assert_eq!(spec.watch_manifest(), Some(dir.join("MANIFEST")));
+        // a bare snapshot path is static
+        let spec = TenantSpec { name: "a".into(), path: dir.join("model.bearsnap") };
+        assert_eq!(spec.watch_manifest(), None);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn canary_state_roundtrips() {
+        let stats = RolloutStats::new();
+        assert_eq!(stats.canary(), None);
+        stats.set_canary(7, 1500);
+        assert_eq!(stats.canary(), Some((7, 1500)));
+        // shares clamp to 100%
+        stats.set_canary(8, 99_999);
+        assert_eq!(stats.canary(), Some((8, CANARY_BP_SCALE)));
+        stats.clear_canary();
+        assert_eq!(stats.canary(), None);
+        assert_eq!(stats.canary_generation_raw(), 0);
+    }
+}

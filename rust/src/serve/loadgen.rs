@@ -41,6 +41,10 @@ pub struct LoadgenConfig {
     /// a fixed request count — what `bear bench` samples, so every timed
     /// window costs the same wall-clock regardless of machine speed.
     pub duration: Option<Duration>,
+    /// Model namespace to load (`--tenant`): requests go to
+    /// `/v1/m/{name}/predict` instead of the default tenant's
+    /// `/v1/predict`.
+    pub tenant: Option<String>,
 }
 
 impl Default for LoadgenConfig {
@@ -52,6 +56,7 @@ impl Default for LoadgenConfig {
             dataset: RealData::Rcv1,
             seed: 0x10AD,
             duration: None,
+            tenant: None,
         }
     }
 }
@@ -183,11 +188,13 @@ pub fn run(addr: &str, cfg: &LoadgenConfig) -> Result<LoadReport> {
             .iter()
             .map(|bodies| {
                 let targets = targets.clone();
+                let tenant = cfg.tenant.clone();
                 scope.spawn(move || -> Result<ThreadResult> {
                     let hist = LatencyHistogram::new();
                     let (connect_h, send_h, first_byte_h) =
                         (LatencyHistogram::new(), LatencyHistogram::new(), LatencyHistogram::new());
-                    let client = BearClient::with_addrs(targets, client_config());
+                    let client =
+                        BearClient::with_addrs(targets, client_config()).with_tenant(tenant);
                     let (mut requests, mut queries, mut errors) = (0u64, 0u64, 0u64);
                     let mut sent = 0usize;
                     while !bodies.is_empty() {

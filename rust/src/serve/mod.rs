@@ -60,7 +60,7 @@ pub mod snapshot;
 pub use loadgen::{LoadReport, LoadgenConfig, StageBreakdown};
 pub use mapped::MapError;
 pub use metrics::{AtomicF64, HistogramSnapshot, LatencyHistogram};
-pub use server::{serve, ServerConfig, ServerHandle, StatsSnapshot};
+pub use server::{serve, ServerConfig, ServerHandle, StatsSnapshot, TenantConfig, DEFAULT_TENANT};
 pub use snapshot::{MappedModel, Prediction, ServableModel};
 
 use crate::algo::mission::{Mission, MissionConfig};

@@ -118,7 +118,33 @@ pub struct ServerConfig {
     /// down to a branch-and-return no-op — the baseline `bear bench`'s
     /// `obs_overhead` probe compares against.
     pub trace_capacity: usize,
+    /// Extra model namespaces this server serves besides the default
+    /// tenant (`serve`'s `model` argument): each answers on
+    /// `/v1/m/{name}/predict|topk|statz` with its own [`ModelHolder`],
+    /// reload stats, and (optionally) its own watched MANIFEST. Empty ⇒
+    /// the classic single-model server, byte-identical on the wire.
+    pub tenants: Vec<TenantConfig>,
 }
+
+/// One extra tenant of a multi-model server.
+#[derive(Clone, Debug)]
+pub struct TenantConfig {
+    /// Namespace name (`/v1/m/{name}/…`); must satisfy
+    /// [`crate::api::valid_tenant_name`] and not collide with
+    /// [`DEFAULT_TENANT`] or another tenant.
+    pub name: String,
+    /// Initial snapshot this tenant serves.
+    pub model: Arc<ServableModel>,
+    /// Publication MANIFEST watched for this tenant's new generations
+    /// (polled by the same poller thread; also reloaded on
+    /// `POST /v1/admin/reload`).
+    pub watch_manifest: Option<PathBuf>,
+}
+
+/// Name the non-namespaced (and legacy) routes serve under — and a valid
+/// explicit namespace: `/v1/m/default/statz` answers the server-global
+/// `/v1/statz` body.
+pub const DEFAULT_TENANT: &str = "default";
 
 impl Default for ServerConfig {
     fn default() -> Self {
@@ -132,6 +158,7 @@ impl Default for ServerConfig {
             watch_manifest: None,
             poll_interval: Duration::from_millis(250),
             trace_capacity: 256,
+            tenants: Vec::new(),
         }
     }
 }
@@ -260,6 +287,17 @@ pub struct StatsSnapshot {
     pub merge: Option<MergeTelemetry>,
 }
 
+/// One served model namespace. Index 0 in [`Monitor::tenants`] is always
+/// the default tenant — the SAME holder/stats/reloader `Arc`s the classic
+/// single-model fields of [`Monitor`] point at — so every pre-tenancy
+/// code path resolves through the same state it always did.
+struct Tenant {
+    name: String,
+    holder: Arc<ModelHolder>,
+    reload_stats: Arc<ReloadStats>,
+    reloader: Option<Arc<Reloader>>,
+}
+
 /// Observability state shared by workers and the handle. Deliberately
 /// does NOT hold a predict-job sender: the batcher exits when the last
 /// worker drops its sender, so only workers may own one.
@@ -268,6 +306,9 @@ struct Monitor {
     holder: Arc<ModelHolder>,
     reload_stats: Arc<ReloadStats>,
     reloader: Option<Arc<Reloader>>,
+    /// Every namespace this server answers for; `tenants[0]` is the
+    /// default tenant (aliases the three fields above).
+    tenants: Arc<Vec<Tenant>>,
     counters: Arc<Counters>,
     started: Instant,
     worker_hists: Arc<Vec<Arc<LatencyHistogram>>>,
@@ -290,6 +331,10 @@ struct Ctx {
 /// time until the batcher started scoring it, and its own scoring time —
 /// which the worker files into the request span's phase slots.
 struct PredictJob {
+    /// Index into [`Monitor::tenants`] — which model scores this job
+    /// (0 = the default tenant; jobs for different tenants share one
+    /// batcher and may coalesce into one micro-batch).
+    tenant: usize,
     queries: Vec<SparseVec>,
     enqueued: Instant,
     reply: Sender<(Vec<Prediction>, u64, u64)>,
@@ -384,13 +429,14 @@ fn render_shard_weights(model: &ServableModel, body: &[u8]) -> Result<String> {
 // ---------------------------------------------------------------------------
 
 fn batcher_loop(
-    holder: Arc<ModelHolder>,
+    tenants: Arc<Vec<Tenant>>,
     rx: Receiver<PredictJob>,
     counters: Arc<Counters>,
     max_batch: usize,
     wait: Duration,
 ) {
-    let mut cache = CachedModel::new(&holder);
+    let mut caches: Vec<CachedModel> =
+        tenants.iter().map(|t| CachedModel::new(&t.holder)).collect();
     while let Ok(first) = rx.recv() {
         let mut jobs = vec![first];
         let mut total: usize = jobs[0].queries.len();
@@ -423,14 +469,14 @@ fn batcher_loop(
         }
         counters.micro_batches.fetch_add(1, Ordering::Relaxed);
         counters.micro_batch_queries.fetch_add(total as u64, Ordering::Relaxed);
-        // resolve the snapshot once per micro-batch: every query in the
-        // batch scores on one generation, and a hot swap mid-batch cannot
-        // tear a response
-        let model = cache.get(&holder).clone();
         for job in jobs {
             // wait covers everything from enqueue to scoring start — queue
             // time, the linger window, and earlier jobs in this batch
             let wait_us = clamp_us(job.enqueued.elapsed());
+            // resolve the snapshot once per job (a micro-batch may mix
+            // tenants): every query in a request scores on one
+            // generation, so a hot swap mid-batch cannot tear a response
+            let model = caches[job.tenant].get(&tenants[job.tenant].holder);
             let t_pred = Instant::now();
             let preds: Vec<Prediction> = job.queries.iter().map(|q| model.predict(q)).collect();
             let predict_us = clamp_us(t_pred.elapsed());
@@ -448,24 +494,27 @@ fn error_response(e: &ApiError, keep: bool) -> (u16, &'static str, String, bool)
 }
 
 /// Handle one request; returns (status, reason, body, keep_alive).
-/// Routing goes through [`Route::resolve`], so `/v1/*` and the legacy
-/// aliases land in the same arm — byte-identical by construction.
-/// `cache` is the calling thread's snapshot cache: the request resolves
-/// the serving model once, up front, and uses it throughout — a hot swap
-/// mid-request cannot change what this request sees.
+/// Routing goes through [`Route::resolve_scoped`], so `/v1/*` and the
+/// legacy aliases land in the same arm with tenant index 0 —
+/// byte-identical to the pre-tenancy server by construction — while
+/// `/v1/m/{model}/…` paths land in the SAME arms against that tenant's
+/// holder. `caches` is the calling thread's per-tenant snapshot caches
+/// (slot 0 = default): the request resolves its serving model once, up
+/// front, and uses it throughout — a hot swap mid-request cannot change
+/// what this request sees.
 /// `phases` is the request span's timing slots (see [`SERVER_PHASES`]);
 /// dispatch fills `wait`/`predict` for `/predict`, the caller fills the
 /// connection-level slots.
 fn dispatch(
     ctx: &Ctx,
     req: &Request,
-    cache: &mut CachedModel,
+    caches: &mut [CachedModel],
     phases: &mut [u64; MAX_PHASES],
 ) -> (u16, &'static str, String, bool) {
     let counters = &ctx.mon.counters;
     counters.requests_total.fetch_add(1, Ordering::Relaxed);
-    let route = match Route::resolve(&req.method, &req.path) {
-        Some(r) => r,
+    let (route, tenant) = match Route::resolve_scoped(&req.method, &req.path) {
+        Some(rt) => rt,
         None => {
             counters.not_found.fetch_add(1, Ordering::Relaxed);
             return (
@@ -475,6 +524,16 @@ fn dispatch(
                 req.keep_alive,
             );
         }
+    };
+    let ti = match tenant {
+        None => 0,
+        Some(name) => match ctx.mon.tenants.iter().position(|t| t.name == name) {
+            Some(i) => i,
+            None => {
+                counters.not_found.fetch_add(1, Ordering::Relaxed);
+                return (404, "Not Found", format!("no model {name}\n"), req.keep_alive);
+            }
+        },
     };
     match route {
         Route::Predict => {
@@ -488,7 +547,8 @@ fn dispatch(
             counters.predict_requests.fetch_add(1, Ordering::Relaxed);
             counters.predict_queries.fetch_add(queries.len() as u64, Ordering::Relaxed);
             let (reply_tx, reply_rx) = channel();
-            let job = PredictJob { queries, enqueued: Instant::now(), reply: reply_tx };
+            let job =
+                PredictJob { tenant: ti, queries, enqueued: Instant::now(), reply: reply_tx };
             if ctx.job_tx.send(job).is_err() {
                 return (500, "Internal Server Error", "batcher gone\n".into(), false);
             }
@@ -511,7 +571,9 @@ fn dispatch(
                     return error_response(&e, req.keep_alive);
                 }
             };
-            let model = match resolve_pinned(cache, &ctx.mon.holder, pinned) {
+            // /shard/weights is never tenant-scoped: scatter-gather
+            // shards are a single-model fleet topology
+            let model = match resolve_pinned(&mut caches[0], &ctx.mon.holder, pinned) {
                 Ok(m) => m,
                 Err(e) => {
                     counters.gen_conflicts.fetch_add(1, Ordering::Relaxed);
@@ -535,13 +597,14 @@ fn dispatch(
                     return error_response(&e, req.keep_alive);
                 }
             };
-            let model = match resolve_pinned(cache, &ctx.mon.holder, treq.gen) {
-                Ok(m) => m,
-                Err(e) => {
-                    counters.gen_conflicts.fetch_add(1, Ordering::Relaxed);
-                    return error_response(&e, req.keep_alive);
-                }
-            };
+            let model =
+                match resolve_pinned(&mut caches[ti], &ctx.mon.tenants[ti].holder, treq.gen) {
+                    Ok(m) => m,
+                    Err(e) => {
+                        counters.gen_conflicts.fetch_add(1, Ordering::Relaxed);
+                        return error_response(&e, req.keep_alive);
+                    }
+                };
             if treq.class >= model.num_classes() {
                 counters.bad_requests.fetch_add(1, Ordering::Relaxed);
                 return (
@@ -566,13 +629,30 @@ fn dispatch(
         }
         Route::Statz => {
             counters.statz_requests.fetch_add(1, Ordering::Relaxed);
-            let snap = scrape(&ctx.mon);
-            let model = cache.get(&ctx.mon.holder).clone();
-            let body = render_statz(&snap, &model, ctx.mon.worker_hists.len());
-            (200, "OK", body, req.keep_alive)
+            if ti == 0 {
+                // server-global statz — also what /v1/m/default/statz
+                // answers, since the default namespace IS the server
+                let snap = scrape(&ctx.mon);
+                let model = caches[0].get(&ctx.mon.holder).clone();
+                let body = render_statz(&snap, &model, ctx.mon.worker_hists.len());
+                (200, "OK", body, req.keep_alive)
+            } else {
+                let t = &ctx.mon.tenants[ti];
+                let model = caches[ti].get(&t.holder).clone();
+                (200, "OK", render_tenant_statz(t, &model), req.keep_alive)
+            }
         }
         Route::AdminReload => {
             counters.admin_reload_requests.fetch_add(1, Ordering::Relaxed);
+            // one admin kick reloads every namespace; the response body
+            // reports the default tenant (wire-compatible — extra
+            // tenants surface through their labeled metricz series and
+            // per-tenant statz)
+            for t in ctx.mon.tenants.iter().skip(1) {
+                if let Some(r) = &t.reloader {
+                    let _ = r.try_reload();
+                }
+            }
             match &ctx.mon.reloader {
                 None => (
                     400,
@@ -723,13 +803,36 @@ fn render_statz(s: &StatsSnapshot, model: &ServableModel, workers: usize) -> Str
     out
 }
 
+/// Render a non-default tenant's `/v1/m/{name}/statz`: the model +
+/// reload subset of the global statz keys, same `key value` dialect and
+/// same spellings where keys overlap ([`crate::api::Statz`] parses both).
+/// Traffic counters and latency are server-wide and stay on `/v1/statz`;
+/// the per-model time series live on `/v1/metricz` under a `model` label.
+fn render_tenant_statz(t: &Tenant, model: &ServableModel) -> String {
+    let r = &t.reload_stats;
+    let mut out = String::with_capacity(256);
+    out.push_str(&format!("model {}\n", t.name));
+    out.push_str(&format!("generation {}\n", r.generation.load(Ordering::Acquire)));
+    out.push_str(&format!("reloads_total {}\n", r.reloads.load(Ordering::Relaxed)));
+    out.push_str(&format!("reload_failures {}\n", r.failures.load(Ordering::Relaxed)));
+    out.push_str(&format!("drift_topk_jaccard {:.6}\n", r.topk_jaccard.get()));
+    out.push_str(&format!("drift_coord_norm_delta {:.6}\n", r.coord_norm_delta.get()));
+    out.push_str(&format!("model_features {}\n", model.n_features()));
+    out.push_str(&format!("model_classes {}\n", model.num_classes()));
+    out.push_str(&format!("model_sketch_cells {}\n", model.sketch_cells()));
+    out.push_str(&format!("model_bytes {}\n", model.memory_bytes()));
+    out.push_str(&format!("model_bias_bits {}\n", model.bias.to_bits()));
+    out.push_str(&format!("model_loss {}\n", encode_loss(model.loss)));
+    out
+}
+
 fn handle_conn(
     stream: TcpStream,
     ctx: &Ctx,
     hist: &LatencyHistogram,
     recorder: &FlightRecorder,
     read_timeout: Duration,
-    cache: &mut CachedModel,
+    caches: &mut [CachedModel],
 ) {
     ctx.mon.counters.connections.fetch_add(1, Ordering::Relaxed);
     stream.set_nodelay(true).ok();
@@ -747,7 +850,7 @@ fn handle_conn(
                 let start_unix_us = recorder.is_enabled().then(unix_micros).unwrap_or(0);
                 let t0 = Instant::now();
                 let mut phases = [0u64; MAX_PHASES];
-                let (status, reason, body, keep) = dispatch(ctx, &req, cache, &mut phases);
+                let (status, reason, body, keep) = dispatch(ctx, &req, caches, &mut phases);
                 phases[0] = parse_us;
                 phases[3] = clamp_us(t0.elapsed());
                 // record before the response bytes go out: whoever has the
@@ -763,8 +866,8 @@ fn handle_conn(
                     // accepted context IS our span; the caller owns the
                     // parent linkage. No header ⇒ fresh root trace.
                     let trace = req.trace.unwrap_or_else(TraceContext::fresh);
-                    let route = Route::resolve(&req.method, &req.path)
-                        .map(route_index)
+                    let route = Route::resolve_scoped(&req.method, &req.path)
+                        .map(|(r, _)| route_index(r))
                         .unwrap_or(ROUTE_OTHER);
                     recorder.record(&SpanRecord {
                         trace_id: trace.trace_id,
@@ -772,7 +875,7 @@ fn handle_conn(
                         parent_span_id: 0,
                         route,
                         status: u32::from(status),
-                        generation: cache.get(&ctx.mon.holder).generation,
+                        generation: caches[0].get(&ctx.mon.holder).generation,
                         start_unix_us,
                         total_us: phases.iter().sum(),
                         phase_us: phases,
@@ -809,8 +912,10 @@ fn worker_loop(
     recorder: Arc<FlightRecorder>,
     read_timeout: Duration,
 ) {
-    // per-worker snapshot cache: one relaxed atomic load per request
-    let mut cache = CachedModel::new(&ctx.mon.holder);
+    // per-worker, per-tenant snapshot caches (slot 0 = default tenant):
+    // one relaxed atomic load per request against the tenant it touches
+    let mut caches: Vec<CachedModel> =
+        ctx.mon.tenants.iter().map(|t| CachedModel::new(&t.holder)).collect();
     loop {
         // hold the lock only to dequeue; block in recv while holding it is
         // fine — exactly one idle worker waits, the rest park on the mutex
@@ -819,7 +924,7 @@ fn worker_loop(
             Err(_) => break,
         };
         match conn {
-            Ok(stream) => handle_conn(stream, &ctx, &hist, &recorder, read_timeout, &mut cache),
+            Ok(stream) => handle_conn(stream, &ctx, &hist, &recorder, read_timeout, &mut caches),
             Err(_) => break, // acceptor gone
         }
     }
@@ -837,6 +942,7 @@ fn build_registry(
     holder: &Arc<ModelHolder>,
     worker_hists: &Arc<Vec<Arc<LatencyHistogram>>>,
     started: Instant,
+    tenants: &Arc<Vec<Tenant>>,
 ) -> Registry {
     let reg = Registry::new();
     {
@@ -977,6 +1083,59 @@ fn build_registry(
             m.merge_latency_us
         });
     }
+    {
+        // per-model labeled series: EVERY tenant (index 0 = "default")
+        // exposes its generation/reload/model gauges under a `model`
+        // label. The unlabeled default-tenant series above are untouched,
+        // so single-tenant scrapers keep reading what they always read;
+        // multi-tenant dashboards group by the label.
+        for t in tenants.iter() {
+            let labels = [("model", t.name.as_str())];
+            let r = t.reload_stats.clone();
+            reg.gauge(
+                "bear_model_generation",
+                &labels,
+                "snapshot generation served, per model",
+                move || r.generation.load(Ordering::Acquire) as f64,
+            );
+            let r = t.reload_stats.clone();
+            reg.counter(
+                "bear_model_reloads_total",
+                &labels,
+                "successful hot reloads, per model",
+                move || r.reloads.load(Ordering::Relaxed),
+            );
+            let r = t.reload_stats.clone();
+            reg.counter(
+                "bear_model_reload_failures_total",
+                &labels,
+                "failed reload attempts, per model",
+                move || r.failures.load(Ordering::Relaxed),
+            );
+            let r = t.reload_stats.clone();
+            reg.gauge(
+                "bear_model_drift_topk_jaccard",
+                &labels,
+                "top-k support Jaccard of the model's last swap",
+                move || r.topk_jaccard.get(),
+            );
+            let h = t.holder.clone();
+            reg.gauge(
+                "bear_model_features",
+                &labels,
+                "feature-space dimension of the snapshot",
+                move || h.load().n_features() as f64,
+            );
+            let h = t.holder.clone();
+            reg.gauge("bear_model_classes", &labels, "class count of the snapshot", move || {
+                h.load().num_classes() as f64
+            });
+            let h = t.holder.clone();
+            reg.gauge("bear_model_bytes", &labels, "resident bytes of the snapshot", move || {
+                h.load().memory_bytes() as f64
+            });
+        }
+    }
     reg
 }
 
@@ -1010,6 +1169,17 @@ impl ServerHandle {
     /// The currently served snapshot (readers hold it across swaps).
     pub fn model(&self) -> Arc<ServableModel> {
         self.mon.holder.load()
+    }
+
+    /// The snapshot a named tenant serves right now ([`DEFAULT_TENANT`]
+    /// is always present); `None` for unknown names.
+    pub fn tenant_model(&self, name: &str) -> Option<Arc<ServableModel>> {
+        self.mon.tenants.iter().find(|t| t.name == name).map(|t| t.holder.load())
+    }
+
+    /// Every namespace this server answers for, default tenant first.
+    pub fn tenant_names(&self) -> Vec<String> {
+        self.mon.tenants.iter().map(|t| t.name.clone()).collect()
     }
 
     /// Force a manifest check right now (what `POST /admin/reload` does).
@@ -1075,20 +1245,61 @@ pub fn serve(model: Arc<ServableModel>, cfg: ServerConfig) -> Result<ServerHandl
         Arc::new(Reloader::new(holder.clone(), manifest.clone(), reload_stats.clone()))
     });
 
+    // the tenant table: slot 0 is the default tenant over the SAME Arcs
+    // as the classic fields, extra slots get their own holder/stats/
+    // reloader triple each
+    let mut tenants = vec![Tenant {
+        name: DEFAULT_TENANT.to_string(),
+        holder: holder.clone(),
+        reload_stats: reload_stats.clone(),
+        reloader: reloader.clone(),
+    }];
+    for tc in &cfg.tenants {
+        anyhow::ensure!(
+            crate::api::valid_tenant_name(&tc.name),
+            "invalid tenant name {:?} (1-64 ASCII alphanumerics, '-', '_')",
+            tc.name
+        );
+        anyhow::ensure!(
+            tenants.iter().all(|t| t.name != tc.name),
+            "duplicate tenant name {:?}",
+            tc.name
+        );
+        let t_holder = Arc::new(ModelHolder::new(tc.model.clone()));
+        let t_stats = Arc::new(ReloadStats::new(tc.model.generation));
+        let t_reloader = tc.watch_manifest.as_ref().map(|manifest| {
+            Arc::new(Reloader::new(t_holder.clone(), manifest.clone(), t_stats.clone()))
+        });
+        tenants.push(Tenant {
+            name: tc.name.clone(),
+            holder: t_holder,
+            reload_stats: t_stats,
+            reloader: t_reloader,
+        });
+    }
+    let tenants = Arc::new(tenants);
+
     // one recorder per worker (same sharding as the latency histograms);
     // capacity 0 compiles each into an is_enabled() branch and nothing else
     let recorders: Arc<Vec<Arc<FlightRecorder>>> = Arc::new(
         (0..workers_n).map(|_| Arc::new(FlightRecorder::new(cfg.trace_capacity))).collect(),
     );
     let started = Instant::now();
-    let registry =
-        Arc::new(build_registry(&counters, &reload_stats, &holder, &worker_hists, started));
+    let registry = Arc::new(build_registry(
+        &counters,
+        &reload_stats,
+        &holder,
+        &worker_hists,
+        started,
+        &tenants,
+    ));
 
     let (job_tx, job_rx) = channel::<PredictJob>();
     let mon = Monitor {
         holder: holder.clone(),
         reload_stats,
-        reloader: reloader.clone(),
+        reloader,
+        tenants: tenants.clone(),
         counters: counters.clone(),
         started,
         worker_hists: worker_hists.clone(),
@@ -1098,16 +1309,19 @@ pub fn serve(model: Arc<ServableModel>, cfg: ServerConfig) -> Result<ServerHandl
     let ctx = Ctx { mon: mon.clone(), job_tx };
 
     let batcher = {
-        let holder = holder.clone();
+        let tenants = tenants.clone();
         let counters = counters.clone();
         let (max_batch, wait) = (cfg.max_batch.max(1), cfg.batch_wait);
         std::thread::Builder::new()
             .name("bear-serve-batcher".into())
-            .spawn(move || batcher_loop(holder, job_rx, counters, max_batch, wait))
+            .spawn(move || batcher_loop(tenants, job_rx, counters, max_batch, wait))
             .expect("spawn batcher thread")
     };
 
-    let poller = reloader.map(|r| {
+    // one poller sweeps every watched manifest (default + tenants)
+    let pollable: Vec<Arc<Reloader>> =
+        tenants.iter().filter_map(|t| t.reloader.clone()).collect();
+    let poller = (!pollable.is_empty()).then(|| {
         let shutdown = shutdown.clone();
         let interval = cfg.poll_interval.max(Duration::from_millis(10));
         std::thread::Builder::new()
@@ -1120,7 +1334,9 @@ pub fn serve(model: Arc<ServableModel>, cfg: ServerConfig) -> Result<ServerHandl
                 while !shutdown.load(Ordering::Acquire) {
                     std::thread::sleep(slice);
                     if Instant::now() >= next_poll {
-                        r.poll();
+                        for r in &pollable {
+                            r.poll();
+                        }
                         next_poll = Instant::now() + interval;
                     }
                 }

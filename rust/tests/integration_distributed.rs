@@ -251,6 +251,7 @@ fn fleet_distributed_hot_swap_is_zero_drop_under_load() {
         dataset: RealData::Rcv1,
         seed: 77,
         duration: None,
+        tenant: None,
     };
     let lg_addr = addr.clone();
     let lg = std::thread::spawn(move || loadgen::run(&lg_addr, &lg_cfg).unwrap());

@@ -129,6 +129,7 @@ fn spawn_loadgen(
             dataset: RealData::Rcv1,
             seed: 0xF1EE7,
             duration: None,
+            tenant: None,
         };
         loadgen::run(&addr, &cfg).expect("loadgen run")
     })

@@ -127,6 +127,7 @@ fn hot_reload_is_zero_drop_across_generations() {
         dataset: RealData::Rcv1,
         seed: 77,
         duration: None,
+        tenant: None,
     };
     let lg_addr = addr.clone();
     let lg = std::thread::spawn(move || loadgen::run(&lg_addr, &lg_cfg).unwrap());

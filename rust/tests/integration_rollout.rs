@@ -1,0 +1,247 @@
+//! Rollout-gate chaos test: a fleet serving from a controller-owned live
+//! registry must, under closed-loop load,
+//!
+//! 1. **never promote** a deliberately-bad staging generation — the eval
+//!    gate rejects it, the gate-failure counter fires on the balancer's
+//!    aggregated `/statz`, the live registry is untouched, and
+//! 2. still promote a **subsequent good generation** through the full
+//!    canary path (one-worker clamped roll → live-gauge judgement →
+//!    fleet-wide roll),
+//!
+//! with **zero** client-visible errors across the whole sequence.
+//!
+//! The models are planted one-feature logistic models (weight ±w on
+//! feature 7) so the eval verdict is deterministic: the sign-flipped
+//! candidate is confidently wrong on every held-out example and loses to
+//! the live baseline by far more than the tolerance. The serving side
+//! doesn't care — out-of-table query features simply miss — so the
+//! loadgen replays the usual RCV1 traffic against them.
+//!
+//! NAMING CONVENTION: every test fn in this file starts with `fleet_` —
+//! CI runs this binary in a dedicated hard-timeout step and excludes the
+//! same tests from the plain `cargo test` step via `--skip fleet_`.
+
+use bear::algo::sketched::SketchedState;
+use bear::api::{BearClient, Statz};
+use bear::coordinator::experiments::RealData;
+use bear::data::{DataSource, Example, InMemory};
+use bear::fleet::{start_fleet, FleetConfig, ProbeConfig};
+use bear::loss::LossKind;
+use bear::online::{Manifest, Publisher, MANIFEST_FILE};
+use bear::rollout::{EvalConfig, RolloutConfig, RolloutController, RolloutOutcome, RolloutStats};
+use bear::serve::loadgen::{self, LoadgenConfig};
+use bear::serve::ServableModel;
+use bear::sparse::SparseVec;
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+/// Serializes the fleets in this binary (same reserve-and-release port
+/// race as `integration_fleet.rs`).
+static FLEET_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+fn tmp_root(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_TARGET_TMPDIR"))
+        .join(format!("fleet-rollout-{name}-{}", std::process::id()))
+}
+
+/// A one-feature logistic model with weight `w` on feature 7 (the loss
+/// gradient is `-label·x`, so a negative step plants a positive weight).
+fn planted_model(w: f32) -> ServableModel {
+    let mut st = SketchedState::new(64, 4, 8, 42);
+    st.apply_step(&SparseVec::from_pairs(vec![(7, -w)]), 1.0);
+    let row = SparseVec::from_pairs(vec![(7, 1.0)]);
+    st.refresh_heap(&bear::sparse::ActiveSet::from_rows([&row]));
+    ServableModel::from_sketched(&st, LossKind::Logistic, 0.0)
+}
+
+/// Positive-label examples firing feature 7: a positive weight is right,
+/// a sign-flipped one is confidently wrong on every example.
+fn planted_stream() -> Box<dyn DataSource> {
+    let examples = (0..64)
+        .map(|_| Example { features: SparseVec::from_pairs(vec![(7, 1.0)]), label: 1.0 })
+        .collect();
+    Box::new(InMemory::new(examples, 64, 2))
+}
+
+fn statz_value(body: &str, key: &str) -> f64 {
+    match Statz::parse(body).get(key) {
+        Some(v) => v.parse().unwrap(),
+        None => panic!("statz missing {key}:\n{body}"),
+    }
+}
+
+/// One aggregated-`/statz` scrape on a fresh connection.
+fn get_statz(addr: &str) -> String {
+    let client = BearClient::connect(addr).expect("connect for statz");
+    client.statz_raw().expect("balancer statz")
+}
+
+/// Poll the balancer's aggregated `/statz` until `pred` holds (panics
+/// with the last body on timeout).
+fn wait_statz(
+    addr: &str,
+    what: &str,
+    timeout: Duration,
+    mut pred: impl FnMut(&str) -> bool,
+) -> String {
+    let deadline = Instant::now() + timeout;
+    loop {
+        let body = get_statz(addr);
+        if pred(&body) {
+            return body;
+        }
+        assert!(Instant::now() < deadline, "timed out waiting for {what}; last statz:\n{body}");
+        std::thread::sleep(Duration::from_millis(100));
+    }
+}
+
+/// Duration-mode loadgen: keeps closed-loop traffic flowing for the whole
+/// gate→reject→canary→promote sequence regardless of how fast it runs.
+fn spawn_loadgen(addr: String, secs: u64) -> std::thread::JoinHandle<loadgen::LoadReport> {
+    std::thread::spawn(move || {
+        let cfg = LoadgenConfig {
+            threads: 4,
+            requests_per_thread: 300,
+            queries_per_request: 4,
+            dataset: RealData::Rcv1,
+            seed: 0x90110,
+            duration: Some(Duration::from_secs(secs)),
+            tenant: None,
+        };
+        loadgen::run(&addr, &cfg).expect("loadgen run")
+    })
+}
+
+#[test]
+fn fleet_rollout_gate_blocks_bad_generation_under_load_then_promotes_good() {
+    let _serial = FLEET_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let root = tmp_root("gate");
+    let log_dir = tmp_root("gate-logs");
+    std::fs::remove_dir_all(&root).ok();
+    std::fs::remove_dir_all(&log_dir).ok();
+    let staging = root.join("staging");
+    let live = root.join("live");
+
+    let mut publisher = Publisher::new(&staging, 8).unwrap();
+    let rcfg = RolloutConfig {
+        staging_manifest: staging.join(MANIFEST_FILE),
+        live_dir: live.clone(),
+        eval: EvalConfig { examples: 64, tolerance: 0.05 },
+        canary_pct_bp: 2000,
+        canary_deadline: Duration::from_secs(30),
+        canary_soak: Duration::from_millis(200),
+        ..RolloutConfig::default()
+    };
+
+    // generation 1 gated into the live registry BEFORE the fleet boots
+    // (a standalone controller — no fleet to canary on yet)
+    publisher.publish(&planted_model(1.0)).unwrap();
+    let mut bootstrap =
+        RolloutController::new(rcfg.clone(), RolloutStats::new(), planted_stream());
+    assert_eq!(bootstrap.poll().unwrap(), RolloutOutcome::Promoted { generation: 1 });
+    drop(bootstrap);
+
+    // the fleet serves from the LIVE registry — staging publications can
+    // only reach it through the controller's gate
+    let cfg = FleetConfig {
+        addr: "127.0.0.1:0".to_string(),
+        backends: 3,
+        watch_manifest: Some(live.join(MANIFEST_FILE)),
+        worker_bin: Some(PathBuf::from(env!("CARGO_BIN_EXE_bear"))),
+        serve_workers: 12,
+        log_dir: Some(log_dir.clone()),
+        probe: ProbeConfig {
+            interval: Duration::from_millis(50),
+            timeout: Duration::from_millis(500),
+            eject_after: 2,
+            admit_after: 2,
+        },
+        monitor_interval: Duration::from_millis(100),
+        ..Default::default()
+    };
+    let handle = start_fleet(cfg).unwrap();
+    assert!(
+        handle.wait_all_healthy(Duration::from_secs(60)),
+        "fleet never became healthy; see logs in {log_dir:?}"
+    );
+    let addr = handle.addr().to_string();
+    wait_statz(&addr, "fleet on generation 1", Duration::from_secs(20), |b| {
+        statz_value(b, "fleet_generation") as u64 == 1
+            && statz_value(b, "fleet_backends_healthy") as u64 == 3
+    });
+
+    // the fleet-attached controller: shares the balancer's RolloutStats
+    // (so /statz counters are the controller's own) and canaries through
+    // the supervisor's roll clamp. Its watermark seeds from the live
+    // manifest: generation 1 is not re-gated.
+    let mut ctl = RolloutController::new(rcfg, handle.rollout_stats(), planted_stream())
+        .with_canary(handle.canary_hooks());
+    assert_eq!(ctl.poll().unwrap(), RolloutOutcome::Idle);
+
+    // ── closed-loop load for the whole fault sequence ─────────────────
+    let lg = spawn_loadgen(addr.clone(), 8);
+    std::thread::sleep(Duration::from_millis(200));
+
+    // ── chaos: a confidently-wrong generation lands in staging ────────
+    publisher.publish(&planted_model(-1.0)).unwrap();
+    match ctl.poll().unwrap() {
+        RolloutOutcome::Rejected { generation: 2, .. } => {}
+        other => panic!("bad generation must be rejected at the eval gate, got {other:?}"),
+    }
+    // the alert counter fires on the balancer's aggregated statz, and
+    // the live registry was never touched — the fleet stays on gen 1
+    let statz = get_statz(&addr);
+    assert_eq!(statz_value(&statz, "rollout_gate_failures") as u64, 1, "{statz}");
+    assert_eq!(statz_value(&statz, "rollout_promotions") as u64, 0, "{statz}");
+    assert_eq!(statz_value(&statz, "fleet_generation") as u64, 1, "{statz}");
+    assert_eq!(Manifest::read(&live.join(MANIFEST_FILE)).unwrap().generation, 1);
+
+    // a rejected generation gets exactly one verdict
+    assert_eq!(ctl.poll().unwrap(), RolloutOutcome::Idle);
+    let statz = get_statz(&addr);
+    assert_eq!(statz_value(&statz, "rollout_gate_failures") as u64, 1, "{statz}");
+
+    // ── recovery: the next good generation promotes through the canary ─
+    publisher.publish(&planted_model(1.2)).unwrap();
+    assert_eq!(ctl.poll().unwrap(), RolloutOutcome::Promoted { generation: 3 });
+    assert_eq!(Manifest::read(&live.join(MANIFEST_FILE)).unwrap().generation, 3);
+
+    // the roll opens fleet-wide after the canary passes: every backend
+    // converges on generation 3 while the loadgen is still running
+    wait_statz(&addr, "fleet-wide roll to generation 3", Duration::from_secs(30), |b| {
+        (0..3).all(|i| statz_value(b, &format!("backend.{i}.generation")) as u64 == 3)
+    });
+
+    // ZERO client-visible errors across reject + canary + promote
+    let report = lg.join().unwrap();
+    assert!(report.requests > 0, "loadgen sent nothing");
+    assert_eq!(report.errors, 0, "requests dropped during the rollout sequence");
+    assert_eq!(report.error_rate(), 0.0);
+
+    // final statz tells the whole story: one gate failure, one promotion,
+    // no rollback, canary cleared, nothing shed
+    let statz = wait_statz(&addr, "final healthy fleet", Duration::from_secs(10), |b| {
+        statz_value(b, "fleet_backends_healthy") as u64 == 3
+    });
+    assert_eq!(statz_value(&statz, "rollout_gate_failures") as u64, 1, "{statz}");
+    assert_eq!(statz_value(&statz, "rollout_promotions") as u64, 1, "{statz}");
+    assert_eq!(statz_value(&statz, "rollout_rollbacks") as u64, 0, "{statz}");
+    assert!(statz_value(&statz, "rollout_evals") as u64 >= 4, "{statz}");
+    assert_eq!(statz_value(&statz, "rollout_canary_generation") as u64, 0, "{statz}");
+    assert_eq!(statz_value(&statz, "rollout_canary_pct_bp") as u64, 0, "{statz}");
+    assert_eq!(statz_value(&statz, "rejected_503") as u64, 0, "{statz}");
+
+    // the promoted model is actually being served: a feature-7 query now
+    // answers with generation 3's (stronger) planted weight
+    let m3 = planted_model(1.2).with_generation(3);
+    let q = SparseVec::from_pairs(vec![(7, 1.0)]);
+    let client = BearClient::connect(&addr).unwrap();
+    let resp = client.predict_raw("7:1.0\n").unwrap();
+    let margin: f64 = resp.split_whitespace().next().unwrap().parse().unwrap();
+    assert_eq!(margin.to_bits(), m3.margin(&q).to_bits());
+    drop(client);
+
+    handle.shutdown();
+    std::fs::remove_dir_all(&root).ok();
+    // keep log_dir: CI uploads it on failure
+}

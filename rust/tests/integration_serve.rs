@@ -141,6 +141,7 @@ fn loadgen_reports_throughput_and_latency() {
         dataset: RealData::Rcv1,
         seed: 99,
         duration: None,
+        tenant: None,
     };
     let report = loadgen::run(&handle.addr().to_string(), &cfg).unwrap();
     assert_eq!(report.errors, 0);

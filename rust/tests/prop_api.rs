@@ -221,16 +221,19 @@ mod live {
         (legacy, v1)
     }
 
-    #[test]
-    fn v1_routes_answer_byte_identically_to_legacy_aliases() {
-        let model = toy_model();
-        let handle = serve(
-            Arc::new(model),
-            ServerConfig { workers: 2, ..Default::default() },
-        )
-        .unwrap();
-        let client = BearClient::connect(&handle.addr().to_string()).unwrap();
+    /// A second model whose top-k table is disjoint from [`toy_model`]'s
+    /// — tenant routing mistakes show up as the wrong feature ids.
+    fn alt_model() -> ServableModel {
+        let mut st = SketchedState::new(512, 3, 4, 11);
+        st.apply_step(&SparseVec::from_pairs(vec![(9, -2.0)]), 1.0);
+        let rows = [SparseVec::from_pairs(vec![(9, 1.0)])];
+        st.refresh_heap(&ActiveSet::from_rows(rows.iter()));
+        ServableModel::from_sketched(&st, LossKind::Logistic, 0.0)
+    }
 
+    /// The legacy-vs-`/v1` byte-identity contract, asserted against
+    /// whatever server `client` points at.
+    fn assert_legacy_v1_identical(client: &BearClient) {
         // deterministic-body routes: full byte equality, 200 and error
         // paths alike
         let cases: &[(Route, Option<&str>, &[u8])] = &[
@@ -245,7 +248,7 @@ mod live {
             (Route::AdminReload, None, b""), // 400: no --watch-manifest
         ];
         for &(route, query, body) in cases {
-            let (legacy, v1) = both(&client, route, query, body);
+            let (legacy, v1) = both(client, route, query, body);
             assert_eq!(
                 legacy, v1,
                 "{route:?} ({query:?}) differs between legacy and /v1"
@@ -255,7 +258,7 @@ mod live {
         // statz bodies carry uptime/qps and count their own scrapes, so
         // byte equality cannot hold between two requests — the SCHEMA
         // (ordered key list) must be identical instead
-        let (legacy, v1) = both(&client, Route::Statz, None, b"");
+        let (legacy, v1) = both(client, Route::Statz, None, b"");
         assert_eq!(legacy.0, 200);
         assert_eq!(v1.0, 200);
         let legacy_keys: Vec<String> =
@@ -268,8 +271,122 @@ mod live {
         let v1_miss = client.request("GET", "/v1/nope", b"").unwrap();
         assert_eq!(miss.0, 404);
         assert_eq!(v1_miss.0, 404);
+    }
 
+    #[test]
+    fn v1_routes_answer_byte_identically_to_legacy_aliases() {
+        let handle = serve(
+            Arc::new(toy_model()),
+            ServerConfig { workers: 2, ..Default::default() },
+        )
+        .unwrap();
+        let client = BearClient::connect(&handle.addr().to_string()).unwrap();
+        assert_legacy_v1_identical(&client);
         drop(client);
+        handle.shutdown();
+    }
+
+    #[test]
+    fn tenant_layer_keeps_single_tenant_wire_byte_identical() {
+        // the SAME contract, against a server with the namespace layer
+        // active: configuring extra tenants must not move a single byte
+        // of the default model's legacy or /v1 surface
+        let cfg = ServerConfig {
+            workers: 2,
+            tenants: vec![bear::serve::TenantConfig {
+                name: "alt".into(),
+                model: Arc::new(alt_model()),
+                watch_manifest: None,
+            }],
+            ..Default::default()
+        };
+        let handle = serve(Arc::new(toy_model()), cfg).unwrap();
+        let client = BearClient::connect(&handle.addr().to_string()).unwrap();
+        assert_legacy_v1_identical(&client);
+        drop(client);
+        handle.shutdown();
+    }
+
+    #[test]
+    fn namespaced_targets_roundtrip_through_route_resolution() {
+        run("tenant_target resolves back to (route, tenant)", 256, |g: &mut Gen| {
+            // arbitrary valid tenant name
+            let n = g.usize_in(1, 16);
+            let name: String = (0..n)
+                .map(|_| match g.usize_in(0, 4) {
+                    0 => char::from(b'a' + g.u64_below(26) as u8),
+                    1 => char::from(b'A' + g.u64_below(26) as u8),
+                    2 => char::from(b'0' + g.u64_below(10) as u8),
+                    _ => ['-', '_'][g.usize_in(0, 2)],
+                })
+                .collect();
+            assert!(bear::api::valid_tenant_name(&name), "generator broke: {name:?}");
+            for route in [Route::Predict, Route::Topk, Route::Statz] {
+                let path = route.tenant_path(&name);
+                let resolved = Route::resolve_scoped(route.method(), &path);
+                assert_eq!(resolved, Some((route, Some(name.as_str()))), "path {path:?}");
+                // the query rides after the namespaced path, same as target()
+                let target = route.tenant_target(&name, Some("k=3"));
+                assert_eq!(target, format!("{path}?k=3"));
+                // the wrong method does not resolve
+                assert_eq!(Route::resolve_scoped("PUT", &path), None);
+            }
+            // names the validator rejects never resolve
+            let bad = format!("{name}.");
+            assert_eq!(
+                Route::resolve_scoped("POST", &Route::Predict.tenant_path(&bad)),
+                None,
+                "dot-containing tenant name resolved"
+            );
+        });
+    }
+
+    #[test]
+    fn tenant_scoped_client_reaches_the_named_model() {
+        let cfg = ServerConfig {
+            workers: 2,
+            tenants: vec![bear::serve::TenantConfig {
+                name: "alt".into(),
+                model: Arc::new(alt_model()),
+                watch_manifest: None,
+            }],
+            ..Default::default()
+        };
+        let handle = serve(Arc::new(toy_model()), cfg).unwrap();
+        let addr = handle.addr().to_string();
+        let default_client = BearClient::connect(&addr).unwrap();
+        let alt_client = BearClient::connect(&addr).unwrap().with_tenant(Some("alt".into()));
+
+        // the same typed topk call lands on different models purely by
+        // the client's tenant scope: disjoint top-k tables prove it
+        let k = TopkRequest { k: 4, ..Default::default() };
+        let default_features: Vec<u64> =
+            default_client.topk(&k).unwrap().entries.iter().map(|(f, _)| *f).collect();
+        let alt_features: Vec<u64> =
+            alt_client.topk(&k).unwrap().entries.iter().map(|(f, _)| *f).collect();
+        assert!(default_features.contains(&7), "{default_features:?}");
+        assert!(alt_features.contains(&9), "{alt_features:?}");
+        assert!(!alt_features.contains(&7), "{alt_features:?}");
+
+        // predict through the namespace scores with the alt model: its
+        // planted weight is on feature 9, so query 9 moves the margin
+        let flat = alt_client.predict_raw("7:1.0\n").unwrap();
+        let hot = alt_client.predict_raw("9:1.0\n").unwrap();
+        assert_ne!(flat, hot, "alt model ignored its planted feature");
+
+        // `/v1/m/default/statz` answers the server-global statz schema
+        let (status, body) =
+            default_client.request("GET", "/v1/m/default/statz", b"").unwrap();
+        assert_eq!(status, 200);
+        assert!(Statz::parse(&body).get("generation").is_some());
+
+        // an unknown namespace is a 404, not a fallback to the default
+        let (status, _) =
+            default_client.request("POST", "/v1/m/nosuch/predict", b"7:1\n").unwrap();
+        assert_eq!(status, 404);
+
+        drop(default_client);
+        drop(alt_client);
         handle.shutdown();
     }
 
